@@ -1,0 +1,75 @@
+//! Figure 2 at example scale: ORACLE (exact full-dataset gradient
+//! diversity every epoch) vs DIVEBATCH (the paper's within-epoch
+//! estimate).  Shows the estimate quality and how closely the two batch
+//! schedules track — the paper's validation of Definition 2.
+//!
+//! ```bash
+//! cargo run --release --example oracle_compare [-- --nonconvex]
+//! ```
+
+use divebatch::config::presets::{fig1_convex, fig1_nonconvex, Scale};
+use divebatch::runtime::Runtime;
+use divebatch::util::args::ArgSpec;
+use divebatch::util::plot::{render, Series};
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgSpec::new("oracle_compare", "Figure 2: Oracle vs DiveBatch")
+        .opt("epochs", Some("20"), "epochs per run")
+        .opt("n", Some("3000"), "synthetic dataset size")
+        .flag("nonconvex", "use the MLP (Figure 2 bottom) instead of logreg")
+        .parse_or_exit();
+
+    let scale = Scale {
+        epochs: args.usize("epochs"),
+        trials: 1,
+        n_synth: args.usize("n"),
+        per_class: 0,
+        ..Scale::quick()
+    };
+    // Arms 2.. of fig1 presets with oracle appended = DiveBatch + Oracle.
+    let exp = if args.flag("nonconvex") {
+        fig1_nonconvex(scale, true)
+    } else {
+        fig1_convex(scale, true)
+    };
+    let arms = &exp.runs[2..]; // [DiveBatch, Oracle]
+    println!("== Figure 2: Oracle vs DiveBatch ({}) ==\n", if args.flag("nonconvex") { "nonconvex" } else { "convex" });
+
+    let rt = Runtime::load_default()?;
+    let mut batch_series = Vec::new();
+    let mut loss_series = Vec::new();
+    let mut div_series = Vec::new();
+    for run in arms {
+        let rec = run.run(&rt)?.into_iter().next().unwrap();
+        eprintln!("done: {}", rec.label);
+        batch_series.push(Series::new(&rec.label, rec.batch_size_curve()));
+        loss_series.push(Series::new(&rec.label, rec.val_loss_curve()));
+        let curve = if rec.policy_kind == "oracle" {
+            rec.exact_delta_curve()
+        } else {
+            rec.delta_hat_curve()
+        };
+        let label = if rec.policy_kind == "oracle" {
+            "exact Delta (Oracle)"
+        } else {
+            "estimated Delta (DiveBatch)"
+        };
+        div_series.push(Series::new(label, curve));
+    }
+    println!("{}", render("validation loss", "epoch", &loss_series, 72, 12));
+    println!(
+        "{}",
+        render("batch size progression", "epoch", &batch_series, 72, 12)
+    );
+    println!(
+        "{}",
+        render(
+            "gradient diversity (estimated vs exact)",
+            "epoch",
+            &div_series,
+            72,
+            12
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Figure 1 (top row) at example scale: convex synthetic experiment
+//! comparing small-batch SGD, large-batch SGD, and DiveBatch on logistic
+//! regression — the workload the paper's section 5.1 uses to show that
+//! diversity-driven batch growth matches small-batch accuracy at
+//! large-batch epoch cost.
+//!
+//! ```bash
+//! cargo run --release --example synthetic_convex [-- --epochs 40 --n 20000]
+//! ```
+
+use divebatch::config::presets::{fig1_convex, Scale};
+use divebatch::runtime::Runtime;
+use divebatch::util::args::ArgSpec;
+use divebatch::util::plot::{render, Series};
+use divebatch::util::stats;
+use divebatch::util::table::{pm, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = ArgSpec::new("synthetic_convex", "Figure 1 convex at example scale")
+        .opt("epochs", Some("24"), "epochs per run")
+        .opt("n", Some("4000"), "synthetic dataset size")
+        .opt("trials", Some("1"), "trials per arm")
+        .parse_or_exit();
+
+    let scale = Scale {
+        epochs: args.usize("epochs"),
+        trials: args.usize("trials"),
+        n_synth: args.usize("n"),
+        per_class: 0,
+        ..Scale::quick()
+    };
+    let exp = fig1_convex(scale, false);
+    println!("== {} ==\n", exp.title);
+
+    let rt = Runtime::load_default()?;
+    let mut loss_series = Vec::new();
+    let mut acc_series = Vec::new();
+    let mut table = Table::new(
+        "validation accuracy at fraction of training",
+        &["arm", "25%", "50%", "100%", "end m"],
+    );
+    for run in &exp.runs {
+        let records = run.run(&rt)?;
+        let label = records[0].label.clone();
+        eprintln!("done: {label}");
+        let losses: Vec<Vec<f64>> = records.iter().map(|r| r.val_loss_curve()).collect();
+        let accs: Vec<Vec<f64>> = records.iter().map(|r| r.val_acc_curve()).collect();
+        loss_series.push(Series::new(&label, stats::mean_curve(&losses)));
+        acc_series.push(Series::new(&label, stats::mean_curve(&accs)));
+        let at = |f: f64| -> Vec<f64> { records.iter().map(|r| r.val_acc_at_frac(f)).collect() };
+        table.row(vec![
+            label,
+            pm(stats::mean(&at(0.25)), stats::stderr(&at(0.25))),
+            pm(stats::mean(&at(0.5)), stats::stderr(&at(0.5))),
+            pm(stats::mean(&at(1.0)), stats::stderr(&at(1.0))),
+            format!("{}", records[0].end_batch_size()),
+        ]);
+    }
+    println!("{}", render("validation loss", "epoch", &loss_series, 72, 14));
+    println!("{}", render("validation accuracy", "epoch", &acc_series, 72, 14));
+    println!("{}", table.render());
+    Ok(())
+}

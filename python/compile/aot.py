@@ -1,0 +1,203 @@
+"""AOT pipeline: lower every (model, entry, micro-batch) to HLO text.
+
+Run once at build time (``make artifacts``); Python is never on the
+training path.  For each registry model this emits::
+
+    artifacts/<model>/<entry>_b<m>.hlo.txt   # train_div / train_plain / eval
+    artifacts/<model>/update.hlo.txt         # fused on-device SGD update
+    artifacts/<model>/init_s<seed>.bin       # raw little-endian f32 params
+    artifacts/manifest.json                  # shapes, dtypes, ladders
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts [--models a,b] [--tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as step_builders
+from compile.models import REGISTRY, ModelEntry
+from compile.models.common import Model
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple root)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(x) -> str:
+    return {"float32": "f32", "int32": "s32"}[str(jnp.dtype(x))]
+
+
+def _io_spec(avals) -> list[dict]:
+    return [
+        {"name": name, "dtype": _dt(a.dtype), "shape": [int(s) for s in a.shape]}
+        for name, a in avals
+    ]
+
+
+def lower_entry(fn, args, in_names: list[str], out_names: list[str], path: Path) -> dict:
+    """Lower ``fn`` at ``args``, write HLO text, return its manifest record."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    out_avals = jax.eval_shape(fn, *args)
+    if not isinstance(out_avals, tuple):
+        out_avals = (out_avals,)
+    return {
+        "file": str(path.relative_to(path.parents[1])),
+        "inputs": _io_spec(list(zip(in_names, args))),
+        "outputs": _io_spec(list(zip(out_names, out_avals))),
+        "hlo_bytes": len(text),
+    }
+
+
+TRAIN_OUTS = ["loss_sum", "correct", "grad_sum", "sqnorm_sum"]
+EVAL_OUTS = ["loss_sum", "correct"]
+BATCH_INS = ["params", "x", "y", "w"]
+
+
+def build_model_artifacts(name: str, entry: ModelEntry, out_dir: Path, force: bool) -> dict:
+    """Emit all artifacts for one model; returns its manifest section."""
+    model: Model = entry.factory()
+    mdir = out_dir / name
+    mdir.mkdir(parents=True, exist_ok=True)
+
+    entries: dict[str, dict] = {}
+    t0 = time.time()
+    for m in entry.ladder:
+        args = step_builders.example_batch(model, m)
+        for variant, fn in (
+            ("train_div", step_builders.make_train_div(model, entry.chunk)),
+            ("train_plain", step_builders.make_train_plain(model)),
+        ):
+            key = f"{variant}_b{m}"
+            path = mdir / f"{key}.hlo.txt"
+            if force or not path.exists():
+                entries[key] = lower_entry(fn, args, BATCH_INS, TRAIN_OUTS, path)
+            else:
+                entries[key] = _manifest_stub(fn, args, BATCH_INS, TRAIN_OUTS, path)
+        key = f"eval_b{m}"
+        path = mdir / f"{key}.hlo.txt"
+        fn = step_builders.make_eval(model)
+        if force or not path.exists():
+            entries[key] = lower_entry(fn, args, BATCH_INS, EVAL_OUTS, path)
+        else:
+            entries[key] = _manifest_stub(fn, args, BATCH_INS, EVAL_OUTS, path)
+
+    # Fused on-device update (one per model; batch-size independent).
+    p = model.param_count
+    upd_args = (
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    )
+    upd_ins = ["params", "velocity", "grad_sum", "scalars"]
+    upd_outs = ["params_out", "velocity_out"]
+    upd_fn = step_builders.make_update(model)
+    upd_path = mdir / "update.hlo.txt"
+    if force or not upd_path.exists():
+        entries["update"] = lower_entry(upd_fn, upd_args, upd_ins, upd_outs, upd_path)
+    else:
+        entries["update"] = _manifest_stub(upd_fn, upd_args, upd_ins, upd_outs, upd_path)
+
+    # Seeded initial parameter vectors (one per trial seed).
+    init_files = []
+    for seed in range(entry.n_init_seeds):
+        f = mdir / f"init_s{seed}.bin"
+        if force or not f.exists():
+            flat = np.asarray(model.init(jax.random.PRNGKey(seed)), dtype="<f4")
+            assert flat.shape == (model.param_count,)
+            f.write_bytes(flat.tobytes())
+        init_files.append(f"{name}/init_s{seed}.bin")
+
+    print(f"  [{name}] {len(entries)} entries, P={model.param_count}, {time.time() - t0:.1f}s")
+    return {
+        "param_count": model.param_count,
+        "input_shape": list(model.input_shape),
+        "label_dtype": model.label_dtype,
+        "num_classes": model.num_classes,
+        "ladder": list(entry.ladder),
+        "chunk": entry.chunk,
+        "tags": list(entry.tags),
+        "param_specs": [{"name": s.name, "shape": list(s.shape)} for s in model.specs],
+        "init_params": init_files,
+        "entries": entries,
+    }
+
+
+def _manifest_stub(fn, args, in_names, out_names, path: Path) -> dict:
+    """Manifest record for an entry whose HLO file is already up to date."""
+    out_avals = jax.eval_shape(fn, *args)
+    if not isinstance(out_avals, tuple):
+        out_avals = (out_avals,)
+    return {
+        "file": str(path.relative_to(path.parents[1])),
+        "inputs": _io_spec(list(zip(in_names, args))),
+        "outputs": _io_spec(list(zip(out_names, out_avals))),
+        "hlo_bytes": path.stat().st_size,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact root")
+    ap.add_argument("--models", default="", help="comma-separated subset (default: all)")
+    ap.add_argument("--tiny", action="store_true", help="only the tiny test models")
+    ap.add_argument("--force", action="store_true", help="regenerate even if files exist")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.models:
+        names = [n.strip() for n in args.models.split(",") if n.strip()]
+    elif args.tiny:
+        names = [n for n, e in REGISTRY.items() if "tiny" in e.tags]
+    else:
+        names = list(REGISTRY)
+    for n in names:
+        if n not in REGISTRY:
+            raise SystemExit(f"unknown model {n!r}; known: {sorted(REGISTRY)}")
+
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("version") == MANIFEST_VERSION:
+                manifest["models"].update(old.get("models", {}))
+        except json.JSONDecodeError:
+            pass
+
+    t0 = time.time()
+    for name in names:
+        manifest["models"][name] = build_model_artifacts(name, REGISTRY[name], out_dir, args.force)
+    manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    print(f"wrote {manifest_path} ({len(names)} models, {time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT modules)."""
+
+from compile.kernels.persample import (  # noqa: F401
+    dense_sqnorm,
+    diversity_reduce,
+    row_sqnorm,
+    sgd_fused,
+)

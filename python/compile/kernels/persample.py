@@ -1,0 +1,317 @@
+"""Layer-1 Pallas kernels for DiveBatch's per-sample gradient statistics.
+
+These kernels implement the hot spot of the paper: accumulating, for every
+mini-batch, the sum of per-sample squared gradient norms and the sum of
+gradients (Definition 2).  The paper used BackPACK-for-PyTorch on A100s and
+materialized per-sample gradients in HBM; on a TPU-shaped substrate we
+avoid materializing per-sample weight gradients wherever a closed form
+exists:
+
+  For a dense layer ``y = x W + b`` with per-sample activation ``a_i`` and
+  per-sample output-gradient ``d_i``::
+
+      ||grad_W l_i||^2 = ||a_i||^2 * ||d_i||^2
+      ||grad_b l_i||^2 = ||d_i||^2
+
+  so the per-sample squared gradient norm of the layer is
+  ``(||a_i||^2 + has_bias) * ||d_i||^2`` -- computed by streaming the
+  activation and output-grad matrices through VMEM in (block_m, block_f)
+  tiles.  This is O(m * (p + q)) memory traffic instead of the O(m * p * q)
+  of materialized per-sample gradients.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin used
+by the Rust runtime cannot execute Mosaic custom-calls, and interpret mode
+lowers the kernels to plain HLO.  Block shapes still express the HBM<->VMEM
+schedule that a real TPU lowering would use; see DESIGN.md section 6 and
+EXPERIMENTS.md section Perf for the VMEM/roofline accounting.
+
+Correctness oracles live in :mod:`compile.kernels.ref` and are enforced by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  block_m rides the sublane dimension, block_f the
+# lane dimension; (128, 512) f32 tiles are 256 KiB -- small enough to
+# double-buffer in a 16 MiB VMEM alongside the model's matmul tiles.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_F = 512
+# Feature widths up to this bound use the single-pass fused dense kernel;
+# wider layers fall back to the two-pass row_sqnorm composition.
+FUSED_FEATURE_LIMIT = 2048
+# Parameter-vector tile for the fused SGD update kernel.
+DEFAULT_BLOCK_P = 8192
+
+_INTERPRET = True  # CPU PJRT; see module docstring.
+
+
+def _pad_to_multiple(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``multiple``.
+
+    Zero rows/columns are exact no-ops for every kernel in this module
+    (all reductions are sums of products), so padding preserves results.
+    """
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# row_sqnorm: out[i] = sum_j x[i, j]^2
+# ---------------------------------------------------------------------------
+
+
+def _row_sqnorm_kernel(x_ref, o_ref):
+    """Accumulate squared row norms over feature blocks.
+
+    Grid is (m_blocks, f_blocks) with the feature axis innermost; the
+    output block for row-block ``i`` is revisited across ``j`` and
+    accumulated in place (initialised at j == 0).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    blk = x_ref[...]
+    o_ref[...] += jnp.sum(blk * blk, axis=1)
+
+
+def row_sqnorm(
+    x: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_f: int = DEFAULT_BLOCK_F,
+) -> jax.Array:
+    """Per-row squared L2 norm of a 2-D array, tiled for VMEM.
+
+    Args:
+      x: ``(m, f)`` float array.
+      block_m / block_f: VMEM tile shape.
+
+    Returns:
+      ``(m,)`` array with ``out[i] = ||x[i, :]||^2``.
+    """
+    m, f = x.shape
+    bm = min(block_m, m)
+    bf = min(block_f, f)
+    xp = _pad_to_multiple(_pad_to_multiple(x, bm, 0), bf, 1)
+    mp, fp = xp.shape
+    out = pl.pallas_call(
+        _row_sqnorm_kernel,
+        grid=(mp // bm, fp // bf),
+        in_specs=[pl.BlockSpec((bm, bf), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=_INTERPRET,
+    )(xp)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# dense_sqnorm: per-sample grad sq-norm of a dense layer (fused single pass)
+# ---------------------------------------------------------------------------
+
+
+def _dense_sqnorm_kernel(a_ref, d_ref, o_ref, *, bias: float):
+    a = a_ref[...]
+    d = d_ref[...]
+    a_nrm = jnp.sum(a * a, axis=1) + bias
+    d_nrm = jnp.sum(d * d, axis=1)
+    o_ref[...] = a_nrm * d_nrm
+
+
+def dense_sqnorm(
+    a: jax.Array,
+    d: jax.Array,
+    *,
+    has_bias: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+) -> jax.Array:
+    """Per-sample squared gradient norm of a dense layer ``y = a W (+ b)``.
+
+    Args:
+      a: ``(m, p)`` layer-input activations.
+      d: ``(m, q)`` gradients of the per-sample losses w.r.t. the layer
+        outputs (NOT scaled by any batch weighting).
+      has_bias: include the bias-gradient term ``||d_i||^2``.
+
+    Returns:
+      ``(m,)`` array: ``(||a_i||^2 + has_bias) * ||d_i||^2``.
+
+    When either feature width exceeds ``FUSED_FEATURE_LIMIT`` the fused
+    kernel's full-row tile would pressure VMEM, so we compose two
+    feature-tiled :func:`row_sqnorm` passes instead (same numerics; see
+    the P3 ablation bench for the crossover).
+    """
+    m, p = a.shape
+    m2, q = d.shape
+    assert m == m2, f"row mismatch {m} vs {m2}"
+    bias = 1.0 if has_bias else 0.0
+    if p > FUSED_FEATURE_LIMIT or q > FUSED_FEATURE_LIMIT:
+        return (row_sqnorm(a) + bias) * row_sqnorm(d)
+    bm = min(block_m, m)
+    ap = _pad_to_multiple(a, bm, 0)
+    dp = _pad_to_multiple(d, bm, 0)
+    mp = ap.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_dense_sqnorm_kernel, bias=bias),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, p), lambda i: (i, 0)),
+            pl.BlockSpec((bm, q), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=_INTERPRET,
+    )(ap, dp)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# diversity_reduce: (G, w) -> (sum_i w_i ||g_i||^2, sum_i w_i g_i)
+# ---------------------------------------------------------------------------
+
+
+def _diversity_reduce_kernel(g_ref, w_ref, sq_ref, gsum_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    g = g_ref[...]  # (bm, bp)
+    w = w_ref[...]  # (bm,)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init_sq():
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    @pl.when(i == 0)
+    def _init_gsum():
+        gsum_ref[...] = jnp.zeros_like(gsum_ref)
+
+    sq_ref[...] += jnp.sum(w * jnp.sum(g * g, axis=1))[None]
+    gsum_ref[...] += jnp.sum(w[:, None] * g, axis=0)
+
+
+def diversity_reduce(
+    g: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_f: int = DEFAULT_BLOCK_F,
+) -> tuple[jax.Array, jax.Array]:
+    """One-pass Definition-2 reductions over a per-sample gradient matrix.
+
+    Args:
+      g: ``(m, P)`` per-sample (flat) gradients.
+      w: ``(m,)`` per-sample weights (0 masks padding rows).
+
+    Returns:
+      ``(sqnorm_sum, grad_sum)`` where ``sqnorm_sum`` is the scalar
+      ``sum_i w_i ||g_i||^2`` and ``grad_sum`` the ``(P,)`` vector
+      ``sum_i w_i g_i``.  Both feed the epoch-level gradient-diversity
+      accumulators on the Rust side.
+    """
+    m, p = g.shape
+    bm = min(block_m, m)
+    bp = min(block_f, p)
+    gp = _pad_to_multiple(_pad_to_multiple(g, bm, 0), bp, 1)
+    wp = _pad_to_multiple(w, bm, 0)
+    mp, pp = gp.shape
+    sq, gsum = pl.pallas_call(
+        _diversity_reduce_kernel,
+        grid=(mp // bm, pp // bp),
+        in_specs=[
+            pl.BlockSpec((bm, bp), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bp,), lambda i, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((pp,), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(gp, wp)
+    return sq[0], gsum[:p]
+
+
+# ---------------------------------------------------------------------------
+# sgd_fused: fused SGD(+momentum, +weight-decay) parameter update
+# ---------------------------------------------------------------------------
+
+
+def _sgd_fused_kernel(p_ref, v_ref, g_ref, s_ref, po_ref, vo_ref):
+    lr = s_ref[0]
+    mu = s_ref[1]
+    wd = s_ref[2]
+    inv_m = s_ref[3]
+    p = p_ref[...]
+    eff_g = g_ref[...] * inv_m + wd * p
+    v = mu * v_ref[...] + eff_g
+    po_ref[...] = p - lr * v
+    vo_ref[...] = v
+
+
+def sgd_fused(
+    params: jax.Array,
+    velocity: jax.Array,
+    grad_sum: jax.Array,
+    scalars: jax.Array,
+    *,
+    block_p: int = DEFAULT_BLOCK_P,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused SGD update over the flat parameter vector.
+
+    Args:
+      params / velocity / grad_sum: ``(P,)`` flat vectors.  ``grad_sum``
+        is the SAMPLE-SUM gradient returned by the train-step executables.
+      scalars: ``(4,)`` = ``[lr, momentum, weight_decay, 1/batch_size]``.
+
+    Returns:
+      ``(new_params, new_velocity)``.
+
+    Update rule (matches ``coordinator/optimizer.rs`` on the Rust side,
+    which is the reference implementation and the ablation baseline)::
+
+        g   = grad_sum / m + wd * p
+        v'  = mu * v + g
+        p'  = p - lr * v'
+    """
+    (p,) = params.shape
+    bp = min(block_p, p)
+    pp_params = _pad_to_multiple(params, bp, 0)
+    pp_vel = _pad_to_multiple(velocity, bp, 0)
+    pp_grad = _pad_to_multiple(grad_sum, bp, 0)
+    n = pp_params.shape[0]
+    new_p, new_v = pl.pallas_call(
+        _sgd_fused_kernel,
+        grid=(n // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(pp_params, pp_vel, pp_grad, scalars)
+    return new_p[:p], new_v[:p]

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels in :mod:`compile.kernels.persample`.
+
+Every kernel has a reference implementation here with identical semantics;
+``python/tests/test_kernels.py`` asserts allclose between the two across
+hypothesis-generated shapes.  These are also the fallbacks used by the
+kernel micro-benchmarks (P3 ablation) as the "naive" baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_sqnorm_ref(x: jax.Array) -> jax.Array:
+    """``out[i] = ||x[i, :]||^2``."""
+    return jnp.sum(x * x, axis=1)
+
+
+def dense_sqnorm_ref(a: jax.Array, d: jax.Array, *, has_bias: bool = True) -> jax.Array:
+    """Per-sample dense-layer grad sq-norm: ``(||a_i||^2 + bias) * ||d_i||^2``."""
+    bias = 1.0 if has_bias else 0.0
+    return (jnp.sum(a * a, axis=1) + bias) * jnp.sum(d * d, axis=1)
+
+
+def diversity_reduce_ref(g: jax.Array, w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``(sum_i w_i ||g_i||^2, sum_i w_i g_i)`` over per-sample grads."""
+    sq = jnp.sum(w * jnp.sum(g * g, axis=1))
+    gsum = jnp.sum(w[:, None] * g, axis=0)
+    return sq, gsum
+
+
+def sgd_fused_ref(
+    params: jax.Array,
+    velocity: jax.Array,
+    grad_sum: jax.Array,
+    scalars: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Reference for the fused SGD(+momentum, +wd) update."""
+    lr, mu, wd, inv_m = scalars[0], scalars[1], scalars[2], scalars[3]
+    eff_g = grad_sum * inv_m + wd * params
+    v = mu * velocity + eff_g
+    return params - lr * v, v
+
+
+def gradient_diversity_ref(g: jax.Array) -> jax.Array:
+    """Definition 1: ``Delta_S = sum_i ||g_i||^2 / ||sum_i g_i||^2``.
+
+    Used by model-level tests to sanity-check the quantities that the Rust
+    coordinator assembles from the executable outputs.
+    """
+    num = jnp.sum(jnp.sum(g * g, axis=1))
+    den = jnp.sum(jnp.sum(g, axis=0) ** 2)
+    return num / den
+
+
+def persample_grad_sqnorm_oracle(loss_fn, params: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Brute-force per-sample grad sq-norms via ``vmap(grad)``.
+
+    ``loss_fn(params, xi, yi)`` must return the scalar per-sample loss.
+    This is the ground truth the closed-form dense-trick kernels are
+    validated against in the model tests.
+    """
+
+    def single(p, xi, yi):
+        return loss_fn(p, xi, yi)
+
+    grads = jax.vmap(jax.grad(single), in_axes=(None, 0, 0))(params, x, y)
+    return jnp.sum(grads * grads, axis=1)

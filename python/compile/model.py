@@ -1,0 +1,141 @@
+"""Layer-2 step builders: the functions that get AOT-lowered to HLO.
+
+Every executable shares one interface over flat f32 tensors (DESIGN.md
+section 2) so the Rust runtime can marshal uniformly:
+
+    train_{div|plain}(params[P], x[m,...], y[m], w[m])
+        -> (loss_sum[], correct[], grad_sum[P], sqnorm_sum[])
+    eval(params[P], x[m,...], y[m], w[m]) -> (loss_sum[], correct[])
+    update(params[P], velocity[P], grad_sum[P], scalars[4])
+        -> (params'[P], velocity'[P])
+
+Outputs are SAMPLE SUMS (not means): micro-batch accumulation on the Rust
+side is plain addition, the optimizer divides by the logical batch size,
+and Definition 2's epoch accumulators (sum of per-sample grad sq-norms;
+sum of gradients) fall out of `sqnorm_sum` / `grad_sum` directly.
+
+``w`` is a per-sample weight: 1 for real samples, 0 for the padding rows
+the accumulation planner appends to fill the last micro-batch.  Every
+output is weighted, so padded rows are exact no-ops.
+
+The `div` (diversity-instrumented) variant computes per-sample gradient
+squared norms:
+  * models with a closed form (logreg / MLP dense-trick) call the L1
+    ``dense_sqnorm`` Pallas kernel on top of the ordinary batched backward;
+  * generic models (the CNN) use a `lax.map`-chunked ``vmap(grad)`` that
+    produces grad_sum AND sqnorm_sum in one pass through the L1
+    ``diversity_reduce`` kernel, with peak memory bounded by
+    ``chunk * P`` (the knob behind the paper's Table 2 trade-off).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import diversity_reduce, sgd_fused
+from compile.models.common import Model
+
+StepFn = Callable[..., tuple]
+
+
+def _loss_and_grad(model: Model, flat, x, y, w):
+    """Weighted-sum loss, correct count and batched gradient."""
+
+    def loss_fn(p):
+        logits = model.apply(p, x)
+        return jnp.sum(w * model.per_sample_loss(logits, y)), logits
+
+    (loss, logits), grad = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+    corr = jnp.sum(w * model.correct(logits, y))
+    return loss, corr, grad
+
+
+def make_train_plain(model: Model) -> StepFn:
+    """Uninstrumented train step (fixed-batch SGD / AdaBatch baselines).
+
+    Returns sqnorm_sum = 0 to keep the output arity uniform with `div`.
+    """
+
+    def step(flat, x, y, w):
+        loss, corr, grad = _loss_and_grad(model, flat, x, y, w)
+        return loss, corr, grad, jnp.zeros((), jnp.float32)
+
+    return step
+
+
+def make_train_div(model: Model, chunk: int) -> StepFn:
+    """Diversity-instrumented train step."""
+    if model.persample_sqnorm is not None:
+        # Closed-form path: ordinary batched backward + dense-trick kernel.
+        def step(flat, x, y, w):
+            loss, corr, grad = _loss_and_grad(model, flat, x, y, w)
+            sq = model.persample_sqnorm(flat, x, y)  # (m,), unweighted
+            return loss, corr, grad, jnp.sum(w * sq)
+
+        return step
+
+    # Generic path: chunked per-sample gradients.  The weighted sum of
+    # per-sample grads IS the batched gradient, so one chunked pass yields
+    # both outputs; no second backward.
+    def step(flat, x, y, w):
+        logits = model.apply(flat, x)
+        loss = jnp.sum(w * model.per_sample_loss(logits, y))
+        corr = jnp.sum(w * model.correct(logits, y))
+        m = x.shape[0]
+        c = min(chunk, m)
+        assert m % c == 0, f"batch {m} not a multiple of chunk {c}"
+        xs = x.reshape(m // c, c, *x.shape[1:])
+        ys = y.reshape(m // c, c)
+        ws = w.reshape(m // c, c)
+
+        grad_single = jax.grad(model.single_loss)
+        grad_chunk = jax.vmap(grad_single, in_axes=(None, 0, 0))
+
+        def one_chunk(args):
+            xc, yc, wc = args
+            g = grad_chunk(flat, xc, yc)  # (c, P) materialized per chunk only
+            return diversity_reduce(g, wc)  # L1 kernel: (scalar, (P,))
+
+        sqs, gsums = jax.lax.map(one_chunk, (xs, ys, ws))
+        return loss, corr, jnp.sum(gsums, axis=0), jnp.sum(sqs)
+
+    return step
+
+
+def make_eval(model: Model) -> StepFn:
+    """Validation step: weighted loss sum + correct count."""
+
+    def step(flat, x, y, w):
+        logits = model.apply(flat, x)
+        loss = jnp.sum(w * model.per_sample_loss(logits, y))
+        corr = jnp.sum(w * model.correct(logits, y))
+        return loss, corr
+
+    return step
+
+
+def make_update(model: Model) -> StepFn:  # noqa: ARG001 (uniform signature)
+    """Fused on-device SGD update (L1 ``sgd_fused`` kernel).
+
+    scalars = [lr, momentum, weight_decay, 1/batch_size].  The Rust-side
+    scalar optimizer in coordinator/optimizer.rs is the reference; this
+    executable is the ablation alternative (P2 bench).
+    """
+
+    def step(params, velocity, grad_sum, scalars):
+        return sgd_fused(params, velocity, grad_sum, scalars)
+
+    return step
+
+
+def example_batch(model: Model, m: int) -> tuple[jax.ShapeDtypeStruct, ...]:
+    """ShapeDtypeStructs for lowering a batch-``m`` train/eval entry."""
+    p = jax.ShapeDtypeStruct((model.param_count,), jnp.float32)
+    x = jax.ShapeDtypeStruct((m, *model.input_shape), jnp.float32)
+    ydt = jnp.int32 if model.label_dtype == "s32" else jnp.float32
+    y = jax.ShapeDtypeStruct((m,), ydt)
+    w = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return p, x, y, w

@@ -1,0 +1,59 @@
+"""Layer-2 model zoo.
+
+``REGISTRY`` maps artifact model names to factory thunks plus their AOT
+configuration (micro-batch ladder + chunk size for the generic per-sample
+path).  The ladders define which static batch sizes get a compiled
+executable; the Rust coordinator's accumulation planner composes arbitrary
+logical batch sizes out of these micro-batches (rust/src/coordinator/plan.rs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from compile.models.common import Model, ParamSpec, flat_size, flatten, unflatten  # noqa: F401
+from compile.models.logreg import make_logreg
+from compile.models.mlp import make_mlp
+from compile.models.resnet_tiny import make_resnet_tiny
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelEntry:
+    """AOT configuration for one registry model."""
+
+    factory: Callable[[], Model]
+    ladder: tuple[int, ...]  # compiled micro-batch sizes (ascending)
+    chunk: int  # vmap(grad) chunk for the generic per-sample path
+    n_init_seeds: int = 5  # how many seeded init_params files to emit
+    tags: tuple[str, ...] = ()  # e.g. ("tiny",) for the test-only artifacts
+
+
+REGISTRY: dict[str, ModelEntry] = {
+    # Synthetic experiments (Figures 1-2): d=512 per the paper.
+    "logreg512": ModelEntry(lambda: make_logreg(512, "logreg512"), (128, 512, 2048, 4096), 64),
+    "mlp512": ModelEntry(lambda: make_mlp(512, 64, "mlp512"), (128, 512, 2048, 8192), 64),
+    # CIFAR-like runs (Figures 3-6, Tables 1-2, 5): one model per class count.
+    "resnet10": ModelEntry(lambda: make_resnet_tiny(10, name="resnet10"), (64, 256, 1024), 32),
+    "resnet100": ModelEntry(lambda: make_resnet_tiny(100, name="resnet100"), (64, 256, 1024), 32),
+    "resnet200": ModelEntry(lambda: make_resnet_tiny(200, name="resnet200"), (64, 256, 1024), 32),
+    # Tiny artifacts: fast to lower + compile; used by cargo integration
+    # tests and CI so `cargo test` exercises the real PJRT path.
+    "tinylogreg8": ModelEntry(
+        lambda: make_logreg(8, "tinylogreg8"), (4, 8), 4, n_init_seeds=3, tags=("tiny",)
+    ),
+    "tinymlp8": ModelEntry(
+        lambda: make_mlp(8, 4, "tinymlp8"), (4, 8), 4, n_init_seeds=3, tags=("tiny",)
+    ),
+    "tinyresnet4": ModelEntry(
+        lambda: make_resnet_tiny(4, image_size=8, channels=(4,), blocks_per_stage=1, name="tinyresnet4"),
+        (4, 8),
+        4,
+        n_init_seeds=3,
+        tags=("tiny",),
+    ),
+}
+
+
+def get_model(name: str) -> Model:
+    return REGISTRY[name].factory()

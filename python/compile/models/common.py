@@ -1,0 +1,120 @@
+"""Shared Layer-2 model machinery: flat parameter vectors, losses, inits.
+
+Every model in the zoo exposes the same protocol (see :class:`Model`):
+parameters live in a single flat ``f32[P]`` vector so the Rust coordinator
+can treat optimizer state uniformly (one contiguous buffer per model, no
+pytree marshaling across the FFI boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor inside the flat vector."""
+
+    name: str
+    shape: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def flat_size(specs: Sequence[ParamSpec]) -> int:
+    return sum(s.size for s in specs)
+
+
+def unflatten(flat: jax.Array, specs: Sequence[ParamSpec]) -> dict[str, jax.Array]:
+    """Slice the flat vector into named tensors (static offsets, jit-safe)."""
+    out = {}
+    off = 0
+    for s in specs:
+        out[s.name] = flat[off : off + s.size].reshape(s.shape)
+        off += s.size
+    assert off == flat.shape[0], f"flat vector size {flat.shape[0]} != specs total {off}"
+    return out
+
+
+def flatten(params: dict[str, jax.Array], specs: Sequence[ParamSpec]) -> jax.Array:
+    return jnp.concatenate([params[s.name].reshape(-1) for s in specs])
+
+
+def bce_with_logits(z: jax.Array, y: jax.Array) -> jax.Array:
+    """Numerically-stable per-sample binary cross-entropy.
+
+    ``z``: logits ``(m,)``; ``y``: float labels in {0, 1} ``(m,)``.
+
+    Uses ``logaddexp(z, 0) - z*y`` rather than the max/log1p form: it is
+    equally stable but *smooth*, so autodiff yields exactly
+    ``sigmoid(z) - y`` everywhere — which the closed-form dense-trick
+    kernels assume (the max-based form has a subgradient mismatch at z=0).
+    """
+    return jnp.logaddexp(z, 0.0) - z * y
+
+
+def softmax_ce(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-sample softmax cross-entropy with integer labels.
+
+    ``logits``: ``(m, k)``; ``y``: int32 labels ``(m,)``.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - picked
+
+
+def glorot_uniform(key: jax.Array, shape: tuple[int, ...], fan_in: int, fan_out: int) -> jax.Array:
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def he_normal(key: jax.Array, shape: tuple[int, ...], fan_in: int) -> jax.Array:
+    std = math.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, shape, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Uniform model protocol consumed by the step builders in model.py.
+
+    Attributes:
+      name: registry key; artifact paths are ``artifacts/<name>/...``.
+      input_shape: per-sample feature shape (e.g. ``(512,)`` or ``(16,16,3)``).
+      label_dtype: ``"f32"`` (binary {0,1} targets) or ``"s32"`` (class ids).
+      num_classes: 2 for binary models (label still a single float).
+      specs: parameter layout of the flat vector.
+      init: ``key -> f32[P]`` flat parameter initialiser.
+      apply: ``(flat, x_batch) -> logits`` (``(m,)`` binary / ``(m,k)`` CE).
+      per_sample_loss: ``(logits, y) -> (m,)`` UNWEIGHTED per-sample losses.
+      correct: ``(logits, y) -> (m,)`` 0/1 prediction-correct indicators.
+      persample_sqnorm: optional closed-form ``(flat, x, y) -> (m,)`` exact
+        per-sample gradient squared norms (dense-trick Pallas kernels).
+        ``None`` selects the generic chunked ``vmap(grad)`` path.
+    """
+
+    name: str
+    input_shape: tuple[int, ...]
+    label_dtype: str
+    num_classes: int
+    specs: tuple[ParamSpec, ...]
+    init: Callable[[jax.Array], jax.Array]
+    apply: Callable[[jax.Array, jax.Array], jax.Array]
+    per_sample_loss: Callable[[jax.Array, jax.Array], jax.Array]
+    correct: Callable[[jax.Array, jax.Array], jax.Array]
+    persample_sqnorm: Callable[[jax.Array, jax.Array, jax.Array], jax.Array] | None = None
+
+    @property
+    def param_count(self) -> int:
+        return flat_size(self.specs)
+
+    def single_loss(self, flat: jax.Array, xi: jax.Array, yi: jax.Array) -> jax.Array:
+        """Scalar loss of one sample — used by vmap oracles and tests."""
+        logits = self.apply(flat, xi[None])
+        return self.per_sample_loss(logits, yi[None])[0]

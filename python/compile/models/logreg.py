@@ -1,0 +1,52 @@
+"""Logistic regression — the paper's convex synthetic model (section 5.1).
+
+Per-sample gradient squared norms have the closed form
+
+    g_i = (sigmoid(z_i) - y_i) * [x_i, 1]
+    ||g_i||^2 = r_i^2 * (||x_i||^2 + 1)
+
+which is exactly the dense-trick Pallas kernel with activations ``x`` and
+output-grads ``r[:, None]`` — no per-sample gradient materialization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dense_sqnorm
+from compile.models.common import Model, ParamSpec, bce_with_logits, glorot_uniform, unflatten
+
+
+def make_logreg(d: int, name: str | None = None) -> Model:
+    """Binary logistic regression over ``d`` input features (d+1 params)."""
+    specs = (ParamSpec("w", (d,)), ParamSpec("b", (1,)))
+
+    def init(key: jax.Array) -> jax.Array:
+        w = glorot_uniform(key, (d,), d, 1)
+        return jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+
+    def apply(flat: jax.Array, x: jax.Array) -> jax.Array:
+        p = unflatten(flat, specs)
+        return x @ p["w"] + p["b"][0]
+
+    def correct(logits: jax.Array, y: jax.Array) -> jax.Array:
+        return ((logits > 0).astype(jnp.float32) == y).astype(jnp.float32)
+
+    def persample_sqnorm(flat: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+        z = apply(flat, x)
+        r = jax.nn.sigmoid(z) - y  # d(loss)/d(z), shape (m,)
+        return dense_sqnorm(x, r[:, None], has_bias=True)
+
+    return Model(
+        name=name or f"logreg{d}",
+        input_shape=(d,),
+        label_dtype="f32",
+        num_classes=2,
+        specs=specs,
+        init=init,
+        apply=apply,
+        per_sample_loss=bce_with_logits,
+        correct=correct,
+        persample_sqnorm=persample_sqnorm,
+    )

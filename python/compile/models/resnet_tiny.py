@@ -1,0 +1,106 @@
+"""ResNet-tiny — the image-classification model for the CIFAR-like runs.
+
+A residual CNN in the ResNet-20 family (He et al. 2016), sized for the
+1-core CPU-PJRT testbed (DESIGN.md section 3): 16x16x3 inputs, a 3x3 stem,
+two residual stages with stride-2 transitions, global average pooling and
+a dense head.  Batch normalisation is intentionally omitted: its batch-
+statistics couple the loss to the batch size, which would confound an
+adaptive-batch-size study (and break per-sample gradient semantics); He
+initialisation plus residual scaling keeps training stable at this depth.
+
+Per-sample gradient sq-norms have no cheap closed form for conv layers, so
+``persample_sqnorm`` is None and the step builder uses the memory-bounded
+chunked ``vmap(grad)`` path with the L1 ``diversity_reduce`` kernel — the
+exact quantity BackPACK computed for the paper, at bounded memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import Model, ParamSpec, he_normal, softmax_ce, unflatten
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=_DN
+    )
+
+
+def make_resnet_tiny(
+    num_classes: int,
+    image_size: int = 16,
+    channels: tuple[int, ...] = (16, 32),
+    blocks_per_stage: int = 2,
+    name: str | None = None,
+) -> Model:
+    """Build a ResNet-tiny for ``num_classes`` over NHWC images."""
+    c_in = 3
+    specs: list[ParamSpec] = [
+        ParamSpec("stem_w", (3, 3, c_in, channels[0])),
+        ParamSpec("stem_b", (channels[0],)),
+    ]
+    for s, c in enumerate(channels):
+        if s > 0:
+            specs.append(ParamSpec(f"trans{s}_w", (3, 3, channels[s - 1], c)))
+            specs.append(ParamSpec(f"trans{s}_b", (c,)))
+        for b in range(blocks_per_stage):
+            specs.append(ParamSpec(f"s{s}b{b}_w1", (3, 3, c, c)))
+            specs.append(ParamSpec(f"s{s}b{b}_b1", (c,)))
+            specs.append(ParamSpec(f"s{s}b{b}_w2", (3, 3, c, c)))
+            specs.append(ParamSpec(f"s{s}b{b}_b2", (c,)))
+    specs.append(ParamSpec("head_w", (channels[-1], num_classes)))
+    specs.append(ParamSpec("head_b", (num_classes,)))
+    specs = tuple(specs)
+
+    def init(key: jax.Array) -> jax.Array:
+        parts = []
+        for spec in specs:
+            key, sub = jax.random.split(key)
+            if len(spec.shape) == 1:  # all rank-1 params are biases
+                parts.append(jnp.zeros(spec.shape, jnp.float32).reshape(-1))
+            elif spec.name == "head_w":
+                fan_in = spec.shape[0]
+                parts.append(he_normal(sub, spec.shape, fan_in).reshape(-1))
+            else:  # conv weights HWIO
+                fan_in = spec.shape[0] * spec.shape[1] * spec.shape[2]
+                parts.append(he_normal(sub, spec.shape, fan_in).reshape(-1))
+        return jnp.concatenate(parts)
+
+    inv_sqrt2 = 1.0 / jnp.sqrt(2.0)
+
+    def apply(flat: jax.Array, x: jax.Array) -> jax.Array:
+        p = unflatten(flat, specs)
+        h = jax.nn.relu(_conv(x, p["stem_w"]) + p["stem_b"])
+        for s in range(len(channels)):
+            if s > 0:
+                h = jax.nn.relu(_conv(h, p[f"trans{s}_w"], stride=2) + p[f"trans{s}_b"])
+            for b in range(blocks_per_stage):
+                r = jax.nn.relu(_conv(h, p[f"s{s}b{b}_w1"]) + p[f"s{s}b{b}_b1"])
+                r = _conv(r, p[f"s{s}b{b}_w2"]) + p[f"s{s}b{b}_b2"]
+                # 1/sqrt(2) residual scaling keeps activation variance flat
+                # without batch statistics (BN-free; see module docstring).
+                h = jax.nn.relu((h + r) * inv_sqrt2)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool -> (m, c_last)
+        return h @ p["head_w"] + p["head_b"]
+
+    def correct(logits: jax.Array, y: jax.Array) -> jax.Array:
+        return (jnp.argmax(logits, axis=-1).astype(jnp.int32) == y.astype(jnp.int32)).astype(
+            jnp.float32
+        )
+
+    return Model(
+        name=name or f"resnet{num_classes}",
+        input_shape=(image_size, image_size, 3),
+        label_dtype="s32",
+        num_classes=num_classes,
+        specs=specs,
+        init=init,
+        apply=apply,
+        per_sample_loss=softmax_ce,
+        correct=correct,
+        persample_sqnorm=None,
+    )

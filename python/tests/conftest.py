@@ -1,0 +1,22 @@
+"""Shared pytest fixtures and hypothesis configuration."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Kernel sweeps lower pallas_call per example; keep example counts modest
+# and disable the deadline (interpret-mode tracing is slow but not flaky).
+settings.register_profile(
+    "kernels",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

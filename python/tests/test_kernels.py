@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+This is the core correctness signal for the kernel layer: every kernel is
+swept over shapes (including shapes that do not divide the block sizes,
+exercising the zero-padding path), block-shape choices, and adversarial
+values (zeros, single rows, masked weights).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import persample as k
+from compile.kernels import ref
+
+
+def _randn(seed: int, shape) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def _mask(seed: int, m: int) -> jax.Array:
+    return (jax.random.uniform(jax.random.PRNGKey(seed), (m,)) > 0.3).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------- row_sqnorm
+
+
+@given(
+    m=st.integers(1, 200),
+    f=st.integers(1, 300),
+    bm=st.sampled_from([8, 32, 128]),
+    bf=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_sqnorm_matches_ref(m, f, bm, bf, seed):
+    x = _randn(seed, (m, f))
+    got = k.row_sqnorm(x, block_m=bm, block_f=bf)
+    np.testing.assert_allclose(got, ref.row_sqnorm_ref(x), rtol=2e-5, atol=1e-6)
+
+
+def test_row_sqnorm_zeros():
+    x = jnp.zeros((17, 33))
+    np.testing.assert_array_equal(k.row_sqnorm(x, block_m=8, block_f=8), jnp.zeros(17))
+
+
+def test_row_sqnorm_single_row():
+    x = jnp.arange(5.0)[None, :]
+    np.testing.assert_allclose(k.row_sqnorm(x), jnp.array([30.0]))
+
+
+def test_row_sqnorm_jit_lowerable():
+    """The kernel must lower under jit (the AOT path)."""
+    f = jax.jit(lambda x: k.row_sqnorm(x, block_m=8, block_f=8))
+    x = _randn(3, (20, 24))
+    np.testing.assert_allclose(f(x), ref.row_sqnorm_ref(x), rtol=2e-5)
+
+
+# ---------------------------------------------------------------------- dense_sqnorm
+
+
+@given(
+    m=st.integers(1, 150),
+    p=st.integers(1, 128),
+    q=st.integers(1, 16),
+    has_bias=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_sqnorm_matches_ref(m, p, q, has_bias, seed):
+    a = _randn(seed, (m, p))
+    d = _randn(seed + 1, (m, q))
+    got = k.dense_sqnorm(a, d, has_bias=has_bias, block_m=32)
+    want = ref.dense_sqnorm_ref(a, d, has_bias=has_bias)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+def test_dense_sqnorm_wide_features_uses_two_pass():
+    """Widths beyond FUSED_FEATURE_LIMIT take the composed row_sqnorm path."""
+    a = _randn(0, (8, k.FUSED_FEATURE_LIMIT + 64))
+    d = _randn(1, (8, 4))
+    got = k.dense_sqnorm(a, d)
+    np.testing.assert_allclose(got, ref.dense_sqnorm_ref(a, d), rtol=2e-5)
+
+
+def test_dense_sqnorm_zero_outgrads_zero():
+    a = _randn(0, (9, 7))
+    d = jnp.zeros((9, 3))
+    np.testing.assert_array_equal(k.dense_sqnorm(a, d), jnp.zeros(9))
+
+
+def test_dense_sqnorm_row_mismatch_raises():
+    with pytest.raises(AssertionError):
+        k.dense_sqnorm(_randn(0, (4, 3)), _randn(1, (5, 3)))
+
+
+# ------------------------------------------------------------------ diversity_reduce
+
+
+@given(
+    m=st.integers(1, 100),
+    p=st.integers(1, 200),
+    bm=st.sampled_from([8, 32, 128]),
+    bp=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diversity_reduce_matches_ref(m, p, bm, bp, seed):
+    g = _randn(seed, (m, p))
+    w = _mask(seed + 1, m)
+    sq, gsum = k.diversity_reduce(g, w, block_m=bm, block_f=bp)
+    sq_r, gsum_r = ref.diversity_reduce_ref(g, w)
+    np.testing.assert_allclose(sq, sq_r, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(gsum, gsum_r, rtol=2e-5, atol=1e-5)
+
+
+def test_diversity_reduce_all_masked():
+    g = _randn(0, (12, 5))
+    sq, gsum = k.diversity_reduce(g, jnp.zeros(12))
+    assert float(sq) == 0.0
+    np.testing.assert_array_equal(gsum, jnp.zeros(5))
+
+
+def test_diversity_reduce_weights_scale_linearly():
+    g = _randn(0, (6, 4))
+    w = jnp.ones(6)
+    sq1, gs1 = k.diversity_reduce(g, w)
+    sq2, gs2 = k.diversity_reduce(g, 2.0 * w)
+    np.testing.assert_allclose(sq2, 2.0 * sq1, rtol=1e-6)
+    np.testing.assert_allclose(gs2, 2.0 * gs1, rtol=1e-6)
+
+
+def test_diversity_definition_consistency():
+    """n * Delta computed from kernel outputs matches Definition 1."""
+    g = _randn(7, (40, 9))
+    w = jnp.ones(40)
+    sq, gsum = k.diversity_reduce(g, w)
+    delta = sq / jnp.sum(gsum**2)
+    np.testing.assert_allclose(delta, ref.gradient_diversity_ref(g), rtol=2e-5)
+
+
+# ---------------------------------------------------------------------- sgd_fused
+
+
+@given(
+    p=st.integers(1, 3000),
+    bp=st.sampled_from([64, 1024, 8192]),
+    lr=st.floats(1e-4, 10.0),
+    mu=st.sampled_from([0.0, 0.5, 0.9]),
+    wd=st.sampled_from([0.0, 5e-4]),
+    m=st.sampled_from([1, 128, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_fused_matches_ref(p, bp, lr, mu, wd, m, seed):
+    params = _randn(seed, (p,))
+    vel = _randn(seed + 1, (p,)) * 0.1
+    grad = _randn(seed + 2, (p,))
+    s = jnp.array([lr, mu, wd, 1.0 / m], jnp.float32)
+    got_p, got_v = k.sgd_fused(params, vel, grad, s, block_p=bp)
+    want_p, want_v = ref.sgd_fused_ref(params, vel, grad, s)
+    np.testing.assert_allclose(got_p, want_p, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, want_v, rtol=2e-5, atol=1e-6)
+
+
+def test_sgd_fused_zero_lr_is_identity_on_params():
+    params = _randn(0, (100,))
+    vel = jnp.zeros(100)
+    grad = _randn(1, (100,))
+    s = jnp.array([0.0, 0.9, 0.0, 1.0], jnp.float32)
+    got_p, _ = k.sgd_fused(params, vel, grad, s)
+    np.testing.assert_array_equal(got_p, params)
+
+
+def test_sgd_fused_plain_sgd_step():
+    """mu=0, wd=0 reduces to theta - lr/m * grad_sum (Algorithm 1 line 8)."""
+    params = _randn(0, (64,))
+    grad = _randn(1, (64,))
+    s = jnp.array([0.5, 0.0, 0.0, 1.0 / 32.0], jnp.float32)
+    got_p, _ = k.sgd_fused(params, jnp.zeros(64), grad, s)
+    np.testing.assert_allclose(got_p, params - 0.5 * grad / 32.0, rtol=1e-6)

@@ -1,0 +1,228 @@
+"""L2 model correctness: flatten/unflatten, losses, grads, closed forms."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.models import REGISTRY, get_model
+from compile.models.common import bce_with_logits, flat_size, flatten, softmax_ce, unflatten
+from compile.models.logreg import make_logreg
+from compile.models.mlp import make_mlp
+from compile.models.resnet_tiny import make_resnet_tiny
+
+
+def _batch(model, m, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, *model.input_shape), jnp.float32)
+    if model.label_dtype == "s32":
+        y = jax.random.randint(ky, (m,), 0, model.num_classes)
+    else:
+        y = (jax.random.uniform(ky, (m,)) > 0.5).astype(jnp.float32)
+    return x, y
+
+
+# ------------------------------------------------------------------ flat params
+
+
+@pytest.mark.parametrize("name", ["tinylogreg8", "tinymlp8", "tinyresnet4"])
+def test_flatten_roundtrip(name):
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(1))
+    assert flat.shape == (model.param_count,)
+    tree = unflatten(flat, model.specs)
+    back = flatten(tree, model.specs)
+    np.testing.assert_array_equal(flat, back)
+
+
+def test_flat_size_matches_specs():
+    model = get_model("tinymlp8")
+    assert flat_size(model.specs) == 8 * 4 + 4 + 4 * 1 + 1
+
+
+def test_init_deterministic_per_seed():
+    model = get_model("tinyresnet4")
+    a = model.init(jax.random.PRNGKey(3))
+    b = model.init(jax.random.PRNGKey(3))
+    c = model.init(jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(a, b)
+    assert not np.allclose(a, c)
+
+
+# ------------------------------------------------------------------ losses
+
+
+@given(z=st.floats(-30, 30), y=st.sampled_from([0.0, 1.0]))
+@settings(max_examples=50)
+def test_bce_matches_naive(z, y):
+    """Stable BCE == -y log p - (1-y) log(1-p), float64 reference.
+
+    (The naive f32 formula itself loses precision for |z| > ~9, which is
+    exactly why the stable form exists — so the oracle runs in float64.)
+    """
+    import math
+
+    p = 1.0 / (1.0 + math.exp(-z))
+    naive = -(y * math.log(p) + (1 - y) * math.log1p(-p)) if 0.0 < p < 1.0 else None
+    got = float(bce_with_logits(jnp.array([z], jnp.float32), jnp.array([y], jnp.float32))[0])
+    assert np.isfinite(got)
+    if naive is not None and np.isfinite(naive):
+        np.testing.assert_allclose(got, naive, rtol=1e-4, atol=1e-5)
+
+
+def test_bce_gradient_is_sigmoid_minus_y():
+    """The dense-trick kernels assume d(bce)/dz == sigmoid(z) - y exactly,
+    including at z == 0 (the kink that broke the max-based formulation)."""
+    for z in [-5.0, 0.0, 3.0]:
+        for y in [0.0, 1.0]:
+            g = jax.grad(lambda zz: bce_with_logits(zz[None], jnp.array([y]))[0])(jnp.array(z))
+            np.testing.assert_allclose(g, jax.nn.sigmoid(z) - y, rtol=1e-6, atol=1e-7)
+
+
+def test_softmax_ce_matches_naive():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (16, 7))
+    y = jax.random.randint(jax.random.PRNGKey(1), (16,), 0, 7)
+    probs = jax.nn.softmax(logits, axis=-1)
+    naive = -jnp.log(probs[jnp.arange(16), y])
+    np.testing.assert_allclose(softmax_ce(logits, y), naive, rtol=1e-5)
+
+
+def test_softmax_ce_shift_invariant():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 5))
+    y = jnp.array([0, 1, 2, 3])
+    shifted = logits + 1000.0
+    np.testing.assert_allclose(softmax_ce(logits, y), softmax_ce(shifted, y), rtol=1e-4)
+
+
+# ------------------------------------------------------------------ logreg
+
+
+def test_logreg_grad_matches_closed_form():
+    """grad of sum-loss == X^T (sigmoid(z) - y), bias = sum(r)."""
+    model = make_logreg(6)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, 12)
+
+    def loss(p):
+        return jnp.sum(model.per_sample_loss(model.apply(p, x), y))
+
+    g = jax.grad(loss)(flat)
+    r = jax.nn.sigmoid(model.apply(flat, x)) - y
+    expect_w = x.T @ r
+    expect_b = jnp.sum(r)
+    np.testing.assert_allclose(g[:6], expect_w, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g[6], expect_b, rtol=1e-5, atol=1e-6)
+
+
+def test_logreg_grad_matches_finite_differences():
+    model = make_logreg(4)
+    flat = model.init(jax.random.PRNGKey(1))
+    x, y = _batch(model, 5, seed=2)
+
+    def loss(p):
+        return float(jnp.sum(model.per_sample_loss(model.apply(p, x), y)))
+
+    g = jax.grad(lambda p: jnp.sum(model.per_sample_loss(model.apply(p, x), y)))(flat)
+    eps = 1e-3
+    for i in range(5):
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        fd = (loss(flat + e) - loss(flat - e)) / (2 * eps)
+        np.testing.assert_allclose(g[i], fd, rtol=2e-2, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,m", [(8, 16), (32, 7), (512, 64)])
+def test_logreg_persample_sqnorm_vs_oracle(d, m):
+    model = make_logreg(d)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, m, seed=d)
+    got = model.persample_sqnorm(flat, x, y)
+    want = ref.persample_grad_sqnorm_oracle(model.single_loss, flat, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------------------ mlp
+
+
+@pytest.mark.parametrize("d,h,m", [(8, 4, 16), (16, 8, 9), (64, 32, 32)])
+def test_mlp_persample_sqnorm_vs_oracle(d, h, m):
+    model = make_mlp(d, h)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, m, seed=d + h)
+    got = model.persample_sqnorm(flat, x, y)
+    want = ref.persample_grad_sqnorm_oracle(model.single_loss, flat, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_mlp_nonzero_hidden_grads():
+    """MLP must be genuinely nonconvex: hidden-layer grads nonzero."""
+    model = make_mlp(8, 4)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, 32)
+
+    def loss(p):
+        return jnp.sum(model.per_sample_loss(model.apply(p, x), y))
+
+    g = jax.grad(loss)(flat)
+    w1 = g[: 8 * 4]
+    assert float(jnp.sum(w1 * w1)) > 0
+
+
+# ------------------------------------------------------------------ resnet
+
+
+def test_resnet_output_shape_and_finite():
+    model = make_resnet_tiny(10)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, 4)
+    logits = model.apply(flat, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_resnet_activation_variance_stable():
+    """BN-free residual scaling keeps logits O(1) at init."""
+    model = make_resnet_tiny(10)
+    flat = model.init(jax.random.PRNGKey(5))
+    x, _ = _batch(model, 32, seed=6)
+    logits = model.apply(flat, x)
+    assert float(jnp.std(logits)) < 50.0
+
+
+def test_resnet_correct_counts_argmax():
+    model = make_resnet_tiny(4, image_size=8, channels=(4,), blocks_per_stage=1)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, 10)
+    logits = model.apply(flat, x)
+    pred = jnp.argmax(logits, axis=-1)
+    np.testing.assert_array_equal(model.correct(logits, y), (pred == y).astype(jnp.float32))
+
+
+def test_resnet_param_count_in_manifest_range():
+    """resnet variants stay in the tens-of-k range (ResNet-20 analogue)."""
+    for nc in (10, 100, 200):
+        model = make_resnet_tiny(nc)
+        assert 40_000 < model.param_count < 100_000
+
+
+# ------------------------------------------------------------------ registry
+
+
+def test_registry_ladders_sorted_and_positive():
+    for name, entry in REGISTRY.items():
+        ladder = entry.ladder
+        assert all(b > 0 for b in ladder), name
+        assert list(ladder) == sorted(ladder), name
+        assert all(b % entry.chunk == 0 or b <= entry.chunk for b in ladder), name
+
+
+def test_registry_models_instantiate():
+    for name in REGISTRY:
+        model = get_model(name)
+        assert model.param_count > 0
+        assert model.name == name

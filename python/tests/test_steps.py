@@ -1,0 +1,152 @@
+"""Step-builder semantics: the contract the Rust coordinator relies on.
+
+These tests pin down the executable interface invariants (DESIGN.md
+section 2): sample-sum outputs, weight masking, div == plain on shared
+outputs, chunked-vmap == batched gradients, and SGD trainability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as sb
+from compile.kernels import ref
+from compile.models import get_model
+
+MODELS = ["tinylogreg8", "tinymlp8", "tinyresnet4"]
+
+
+def _batch(model, m, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, *model.input_shape), jnp.float32)
+    if model.label_dtype == "s32":
+        y = jax.random.randint(ky, (m,), 0, model.num_classes)
+    else:
+        y = (jax.random.uniform(ky, (m,)) > 0.5).astype(jnp.float32)
+    return x, y
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_div_and_plain_agree_on_shared_outputs(name):
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(0))
+    x, y = _batch(model, 8)
+    w = jnp.ones(8)
+    l1, c1, g1, _ = sb.make_train_div(model, 4)(flat, x, y, w)
+    l2, c2, g2, s2 = sb.make_train_plain(model)(flat, x, y, w)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(c1, c2)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+    assert float(s2) == 0.0  # plain reports no diversity signal
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_sqnorm_matches_vmap_oracle(name):
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(1))
+    x, y = _batch(model, 8, seed=1)
+    w = jnp.ones(8).at[-3:].set(0.0)
+    _, _, _, sq = sb.make_train_div(model, 4)(flat, x, y, w)
+    oracle = ref.persample_grad_sqnorm_oracle(model.single_loss, flat, x, y)
+    np.testing.assert_allclose(sq, jnp.sum(w * oracle), rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_padding_rows_are_noops(name):
+    """w=0 rows must not influence ANY output (the planner pads with them)."""
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(2))
+    x, y = _batch(model, 8, seed=2)
+    w = jnp.ones(8).at[6:].set(0.0)
+    step = sb.make_train_div(model, 4)
+    base = step(flat, x, y, w)
+    x_garbage = x.at[6:].set(1e4)
+    poked = step(flat, x_garbage, y, w)
+    for b, p in zip(base, poked):
+        np.testing.assert_allclose(b, p, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_sample_sum_additivity(name):
+    """step(batch) == step(half1) + step(half2): the accumulation law."""
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(3))
+    x, y = _batch(model, 8, seed=3)
+    w = jnp.ones(8)
+    step = sb.make_train_div(model, 4)
+    full = step(flat, x, y, w)
+    h1 = step(flat, x[:4], y[:4], w[:4])
+    h2 = step(flat, x[4:], y[4:], w[4:])
+    for f, a, b in zip(full, h1, h2):
+        np.testing.assert_allclose(f, a + b, rtol=1e-4, atol=1e-5)
+
+
+def test_chunk_size_invariance():
+    """The generic per-sample path must not depend on the chunk size."""
+    model = get_model("tinyresnet4")
+    flat = model.init(jax.random.PRNGKey(4))
+    x, y = _batch(model, 8, seed=4)
+    w = jnp.ones(8)
+    r2 = sb.make_train_div(model, 2)(flat, x, y, w)
+    r4 = sb.make_train_div(model, 4)(flat, x, y, w)
+    r8 = sb.make_train_div(model, 8)(flat, x, y, w)
+    for a, b, c in zip(r2, r4, r8):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_eval_matches_train_forward(name):
+    model = get_model(name)
+    flat = model.init(jax.random.PRNGKey(5))
+    x, y = _batch(model, 8, seed=5)
+    w = jnp.ones(8)
+    le, ce = sb.make_eval(model)(flat, x, y, w)
+    lt, ct, _, _ = sb.make_train_plain(model)(flat, x, y, w)
+    np.testing.assert_allclose(le, lt, rtol=1e-5)
+    np.testing.assert_allclose(ce, ct)
+
+
+def test_update_step_matches_rust_reference_semantics():
+    """update executable implements g/m + wd*p; v' = mu v + g; p' = p - lr v'."""
+    model = get_model("tinymlp8")
+    upd = sb.make_update(model)
+    p = jax.random.normal(jax.random.PRNGKey(6), (model.param_count,))
+    v = jax.random.normal(jax.random.PRNGKey(7), (model.param_count,)) * 0.01
+    g = jax.random.normal(jax.random.PRNGKey(8), (model.param_count,))
+    s = jnp.array([0.1, 0.9, 5e-4, 1.0 / 64], jnp.float32)
+    got_p, got_v = upd(p, v, g, s)
+    want_p, want_v = ref.sgd_fused_ref(p, v, g, s)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-5, atol=1e-7)
+
+
+def test_sgd_reduces_loss_on_separable_data():
+    """End-to-end sanity: a few Algorithm-1 steps reduce logreg loss."""
+    model = get_model("tinylogreg8")
+    flat = model.init(jax.random.PRNGKey(9))
+    key = jax.random.PRNGKey(10)
+    x = jax.random.normal(key, (64, 8))
+    w_true = jax.random.normal(jax.random.PRNGKey(11), (8,))
+    y = (x @ w_true > 0).astype(jnp.float32)
+    ones = jnp.ones(64)
+    step = jax.jit(sb.make_train_plain(model))
+    losses = []
+    for _ in range(30):
+        loss, _, grad, _ = step(flat, x, y, ones)
+        losses.append(float(loss))
+        flat = flat - 0.5 / 64.0 * grad  # Algorithm 1 line 8 (eta/m * sum-grad)
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+def test_example_batch_shapes():
+    model = get_model("tinyresnet4")
+    p, x, y, w = sb.example_batch(model, 16)
+    assert p.shape == (model.param_count,)
+    assert x.shape == (16, 8, 8, 3)
+    assert y.dtype == jnp.int32
+    assert w.shape == (16,)

@@ -1,0 +1,49 @@
+//! Bench: **Figure 1** — synthetic convex (logreg) and nonconvex (MLP)
+//! validation loss/accuracy curves for SGD(small), SGD(large), DiveBatch.
+//!
+//! Scale via env: DIVEBATCH_SCALE=quick|bench|paper (default bench).
+//! Run: `cargo bench --bench fig1_synthetic`
+
+use divebatch::bench::{bench_header, run_experiment};
+use divebatch::config::presets::{fig1_convex, fig1_nonconvex, Scale};
+use divebatch::runtime::Runtime;
+
+fn scale_from_env() -> Scale {
+    match std::env::var("DIVEBATCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::bench(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "fig1_synthetic",
+        "Figure 1: synthetic convex + nonconvex — SGD small/large vs DiveBatch \
+         (val loss & accuracy curves; paper section 5.1)",
+    );
+    let scale = scale_from_env();
+    println!(
+        "scale: epochs={} trials={} n={}\n",
+        scale.epochs, scale.trials, scale.n_synth
+    );
+    let rt = Runtime::load_default()?;
+
+    for exp in [fig1_convex(scale, false), fig1_nonconvex(scale, false)] {
+        println!("--- {} ---", exp.title);
+        let res = run_experiment(&rt, &exp, false)?;
+        println!("{}", res.loss_figure(76, 14));
+        println!("{}", res.acc_figure(76, 14));
+        println!("{}", res.table1().render());
+        // Paper shape checks, printed for EXPERIMENTS.md:
+        if let (Some(dive), Some(small)) = (res.arm("DiveBatch"), res.arm("SGD")) {
+            let d_final = divebatch::util::stats::mean(&dive.acc_at(1.0));
+            let s_final = divebatch::util::stats::mean(&small.acc_at(1.0));
+            println!(
+                "shape check: DiveBatch final {:.2}% vs SGD(small) final {:.2}% (paper: comparable, gap < ~2%)\n",
+                d_final, s_final
+            );
+        }
+    }
+    Ok(())
+}

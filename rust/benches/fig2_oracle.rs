@@ -1,0 +1,76 @@
+//! Bench: **Figure 2** — ORACLE (exact gradient diversity per epoch) vs
+//! DIVEBATCH (within-epoch estimate): validation loss, batch-size
+//! progression, and the diversity curves themselves.
+//!
+//! Run: `cargo bench --bench fig2_oracle` (DIVEBATCH_SCALE=quick|bench|paper)
+
+use divebatch::bench::{bench_header, run_experiment};
+use divebatch::config::presets::{preset, Scale};
+use divebatch::runtime::Runtime;
+use divebatch::util::plot::{render, Series};
+
+fn scale_from_env() -> Scale {
+    match std::env::var("DIVEBATCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::bench(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "fig2_oracle",
+        "Figure 2: Oracle vs DiveBatch — estimate quality of Definition 2 \
+         (val loss, batch-size schedule, diversity curves)",
+    );
+    let scale = scale_from_env();
+    let rt = Runtime::load_default()?;
+
+    for id in ["fig2-convex", "fig2-nonconvex"] {
+        let exp = preset(id, scale).unwrap();
+        println!("--- {} ---", exp.title);
+        let res = run_experiment(&rt, &exp, false)?;
+        println!("{}", res.loss_figure(76, 12));
+        println!("{}", res.batch_figure(76, 12));
+
+        // Diversity curves: estimated (DiveBatch) vs exact (Oracle).
+        let mut series = Vec::new();
+        if let Some(dive) = res.arm("DiveBatch") {
+            series.push(Series::new(
+                "estimated Delta (DiveBatch)",
+                dive.records[0].delta_hat_curve(),
+            ));
+        }
+        if let Some(oracle) = res.arm("Oracle") {
+            series.push(Series::new(
+                "exact Delta (Oracle)",
+                oracle.records[0].exact_delta_curve(),
+            ));
+        }
+        println!(
+            "{}",
+            render("gradient diversity: estimate vs exact", "epoch", &series, 76, 12)
+        );
+
+        // Estimate-quality summary for EXPERIMENTS.md.
+        if let (Some(d), Some(o)) = (res.arm("DiveBatch"), res.arm("Oracle")) {
+            let dh = d.records[0].delta_hat_curve();
+            let ex = o.records[0].exact_delta_curve();
+            let ratios: Vec<f64> = dh
+                .iter()
+                .zip(&ex)
+                .filter(|(a, b)| a.is_finite() && b.is_finite() && **b > 0.0)
+                .map(|(a, b)| a / b)
+                .collect();
+            if !ratios.is_empty() {
+                println!(
+                    "estimate/exact ratio: mean {:.3}, min {:.3}, max {:.3} (paper: close in convex, drifts in nonconvex)\n",
+                    divebatch::util::stats::mean(&ratios),
+                    ratios.iter().cloned().fold(f64::INFINITY, f64::min),
+                    ratios.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                );
+            }
+        }
+    }
+    Ok(())
+}

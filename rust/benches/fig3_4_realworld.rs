@@ -1,0 +1,50 @@
+//! Bench: **Figures 3 & 4** — validation accuracy and loss curves on the
+//! three CIFAR-like image datasets for SGD(small), SGD(large), AdaBatch,
+//! DiveBatch (main-text variant: no lr rescaling).
+//!
+//! Run: `cargo bench --bench fig3_4_realworld`
+//! Env: DIVEBATCH_SCALE=quick|bench|paper, DIVEBATCH_DATASETS=cifar10,...
+
+use divebatch::bench::{bench_header, run_experiment};
+use divebatch::config::presets::{realworld, Scale};
+use divebatch::runtime::Runtime;
+
+fn scale_from_env() -> Scale {
+    match std::env::var("DIVEBATCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::bench(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "fig3_4_realworld",
+        "Figures 3/4: CIFAR-like image runs — val accuracy + loss curves for \
+         SGD small/large, AdaBatch, DiveBatch (no lr rescaling; section 5.2)",
+    );
+    let scale = scale_from_env();
+    let datasets = std::env::var("DIVEBATCH_DATASETS")
+        .unwrap_or_else(|_| "cifar10,cifar100,tin".into());
+    let rt = Runtime::load_default()?;
+
+    for ds in datasets.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let exp = realworld(ds, scale, false).expect("dataset id");
+        println!("--- {} ---", exp.title);
+        let res = run_experiment(&rt, &exp, false)?;
+        println!("{}", res.acc_figure(76, 16)); // Figure 3 panel
+        println!("{}", res.loss_figure(76, 16)); // Figure 4 panel
+        println!("{}", res.table1().render());
+
+        // Paper-shape summary: DiveBatch leads at 25%, SGD-small best final.
+        if let (Some(dive), Some(ada)) = (res.arm("DiveBatch"), res.arm("AdaBatch")) {
+            let d25 = divebatch::util::stats::mean(&dive.acc_at(0.25));
+            let a25 = divebatch::util::stats::mean(&ada.acc_at(0.25));
+            println!(
+                "shape check @25%: DiveBatch {:.2}% vs AdaBatch {:.2}% (paper: DiveBatch highest early)\n",
+                d25, a25
+            );
+        }
+    }
+    Ok(())
+}

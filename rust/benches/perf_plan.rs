@@ -1,0 +1,165 @@
+//! Bench: **P2 (§Perf)** — planner & policy ablations:
+//!
+//!  * greedy largest-rung plan vs smallest-rung-only accumulation
+//!    (end-to-end epoch time at several logical batch sizes);
+//!  * ladder granularity: how much padding waste a coarser ladder costs;
+//!  * host optimizer vs fused on-device update, end to end;
+//!  * delta sweep: DiveBatch's batch trajectory vs delta.
+//!
+//! Run: `cargo bench --bench perf_plan`
+
+use divebatch::bench::{bench_header, Bencher};
+use divebatch::cluster::ClusterModel;
+use divebatch::coordinator::{LrSchedule, MicroPlan, Policy, TrainConfig, Trainer};
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::runtime::Runtime;
+use divebatch::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "perf_plan",
+        "P2: accumulation-plan + policy ablations (logreg512)",
+    );
+    let rt = Runtime::load_default()?;
+    let info = rt.model("logreg512")?.clone();
+    let ds = synthetic::generate(&SyntheticSpec {
+        n: 8192,
+        d: 512,
+        noise: 0.1,
+        seed: 0,
+    });
+    let params = rt.manifest.load_init_params("logreg512", 0)?;
+    let b = Bencher::quick();
+
+    // ---- greedy vs smallest-only accumulation for one logical batch ----
+    println!("logical-batch execution: greedy ladder plan vs smallest-rung only");
+    let mut t = Table::new(
+        "plan ablation (one logical batch, train_div)",
+        &["m", "plan", "dispatches", "padded rows", "mean time"],
+    );
+    for &m in &[512usize, 2048, 4096] {
+        for (name, plan) in [
+            ("greedy", MicroPlan::build(m, &info.ladder, None)),
+            ("smallest-only", MicroPlan::build_smallest_only(m, &info.ladder)),
+        ] {
+            let idx: Vec<u32> = (0..m as u32).collect();
+            // Pre-gather all blocks once (isolate execution cost).
+            let mut batches = Vec::new();
+            let mut off = 0;
+            for blk in &plan.blocks {
+                batches.push((blk.micro, ds.gather(&idx[off..off + blk.take], blk.micro)));
+                off += blk.take;
+            }
+            let execs: Vec<_> = plan
+                .blocks
+                .iter()
+                .map(|blk| rt.train_exec("logreg512", true, blk.micro).unwrap())
+                .collect();
+            let r = b.run(&format!("{name}_m{m}"), Some(m as f64), || {
+                for (e, (_, batch)) in execs.iter().zip(&batches) {
+                    e.run_train(&params, batch).unwrap();
+                }
+            });
+            t.row(vec![
+                format!("{m}"),
+                name.into(),
+                format!("{}", plan.dispatches()),
+                format!("{}", plan.padded()),
+                divebatch::bench::fmt_time(r.mean_s),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- ladder granularity: padding waste --------------------------
+    let mut t = Table::new(
+        "ladder granularity (padding waste at odd batch sizes)",
+        &["ladder", "m=700", "m=3000", "m=5028"],
+    );
+    for ladder in [vec![128usize, 512, 2048, 4096], vec![128, 4096], vec![4096]] {
+        let waste = |m: usize| {
+            let p = MicroPlan::build(m, &ladder, None);
+            format!("{:.1}% ({} disp)", 100.0 * p.waste(), p.dispatches())
+        };
+        t.row(vec![
+            format!("{ladder:?}"),
+            waste(700),
+            waste(3000),
+            waste(5028),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- host vs device update: full short run ----------------------
+    println!("host vs device optimizer (6-epoch run, n=2048, DiveBatch):");
+    let (train, val) = ds.slice(0, 2560).split(0.8);
+    for device in [false, true] {
+        let mut cfg = TrainConfig::new(
+            "logreg512",
+            Policy::DiveBatch {
+                m0: 128,
+                delta: 1.0,
+                m_max: 4096,
+            },
+            LrSchedule::step_075_20(16.0, true),
+            6,
+        );
+        cfg.device_update = device;
+        let trainer = Trainer::new(
+            &rt,
+            cfg,
+            train.clone(),
+            val.clone(),
+            ClusterModel::a100x4(info.param_count, 3e3),
+        )?;
+        let timer = divebatch::util::timer::Timer::start();
+        let out = trainer.run()?;
+        println!(
+            "  device_update={device}: {:.3}s wall, final acc {:.2}%",
+            timer.seconds(),
+            out.record.final_val_acc()
+        );
+    }
+    println!();
+
+    // ---- delta sweep (batch trajectory) ------------------------------
+    println!("DiveBatch delta sweep (n=2048): end batch size + epochs to m_max");
+    let mut t = Table::new(
+        "delta ablation",
+        &["delta", "end m", "epochs to max", "final acc %"],
+    );
+    for delta in [0.001, 0.01, 0.1, 1.0] {
+        let cfg = TrainConfig::new(
+            "logreg512",
+            Policy::DiveBatch {
+                m0: 128,
+                delta,
+                m_max: 4096,
+            },
+            LrSchedule::step_075_20(16.0, true),
+            10,
+        );
+        let trainer = Trainer::new(
+            &rt,
+            cfg,
+            train.clone(),
+            val.clone(),
+            ClusterModel::a100x4(info.param_count, 3e3),
+        )?;
+        let rec = trainer.run()?.record;
+        let end = rec.end_batch_size();
+        let to_max = rec
+            .epochs
+            .iter()
+            .position(|e| e.batch_size == end)
+            .unwrap_or(0);
+        t.row(vec![
+            format!("{delta}"),
+            format!("{end}"),
+            format!("{to_max}"),
+            format!("{:.2}", rec.final_val_acc()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Bench: **P1 (§Perf)** — runtime hot-path microbenchmarks: executable
+//! dispatch cost vs micro-batch size, literal marshaling overhead,
+//! gather cost, optimizer update cost, end-to-end step breakdown.
+//!
+//! This quantifies the fixed per-dispatch overhead that makes the greedy
+//! largest-rung planner (and large batches generally) win — the
+//! mechanism behind the paper's efficiency claims on this substrate.
+//!
+//! Run: `cargo bench --bench perf_runtime`
+
+use divebatch::bench::{bench_header, Bencher};
+use divebatch::coordinator::SgdOptimizer;
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "perf_runtime",
+        "P1: dispatch/marshal/update costs across the ladder (logreg512 + resnet10)",
+    );
+    let rt = Runtime::load_default()?;
+    let b = Bencher::default();
+
+    // ---------------- logreg512: dispatch cost per ladder rung ----------
+    let info = rt.model("logreg512")?.clone();
+    let ds = synthetic::generate(&SyntheticSpec {
+        n: 8192,
+        d: 512,
+        noise: 0.1,
+        seed: 0,
+    });
+    let params = rt.manifest.load_init_params("logreg512", 0)?;
+    println!("logreg512 train_div dispatch (includes upload+execute+fetch):");
+    for &m in &info.ladder {
+        let idx: Vec<u32> = (0..m as u32).collect();
+        let batch = ds.gather(&idx, m);
+        let exec = rt.train_exec("logreg512", true, m)?;
+        let r = b.run(&format!("train_div_b{m}"), Some(m as f64), || {
+            exec.run_train(&params, &batch).unwrap();
+        });
+        println!("  {}", r.line());
+    }
+    println!();
+
+    // Plain vs instrumented at one size (the diversity surcharge).
+    for (label, div) in [("plain", false), ("div", true)] {
+        let m = 2048;
+        let idx: Vec<u32> = (0..m as u32).collect();
+        let batch = ds.gather(&idx, m);
+        let exec = rt.train_exec("logreg512", div, m)?;
+        let r = b.run(&format!("logreg512 {label}_b{m}"), Some(m as f64), || {
+            exec.run_train(&params, &batch).unwrap();
+        });
+        println!("  {}", r.line());
+    }
+    println!();
+
+    // ---------------- gather (host-side data marshaling) ----------------
+    println!("host-side costs:");
+    {
+        let idx: Vec<u32> = (0..2048u32).collect();
+        let mut buf = divebatch::Batch::empty();
+        let r = b.run("gather_into 2048x512", Some(2048.0), || {
+            ds.gather_into(&idx, 2048, &mut buf);
+        });
+        println!("  {}", r.line());
+    }
+
+    // ---------------- optimizer step (rust) vs device update ------------
+    {
+        let p_count = info.param_count;
+        let mut params2 = params.clone();
+        let grad: Vec<f32> = (0..p_count).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut opt = SgdOptimizer::new(p_count, 0.9, 5e-4);
+        let r = b.run("rust sgd step (P=513)", None, || {
+            opt.step(&mut params2, &grad, 0.1, 128);
+        });
+        println!("  {}", r.line());
+
+        let upd = rt.update_exec("logreg512")?;
+        let vel = vec![0.0f32; p_count];
+        let r = b.run("device sgd update (P=513)", None, || {
+            upd.run_update(&params, &vel, &grad, 0.1, 0.9, 5e-4, 1.0 / 128.0)
+                .unwrap();
+        });
+        println!("  {}", r.line());
+    }
+    println!();
+
+    // ---------------- resnet10: the heavy model ------------------------
+    let quick = Bencher::quick();
+    let info = rt.model("resnet10")?.clone();
+    let img = divebatch::data::images::generate(&divebatch::ImageSpec::cifar10_like(40, 0));
+    let params = rt.manifest.load_init_params("resnet10", 0)?;
+    println!("resnet10 (P={}):", info.param_count);
+    for &m in &info.ladder {
+        let idx: Vec<u32> = (0..m.min(img.n()) as u32).collect();
+        let batch = img.gather(&idx, m);
+        for (label, div) in [("plain", false), ("div", true)] {
+            let exec = rt.train_exec("resnet10", div, m)?;
+            let r = quick.run(
+                &format!("resnet10 {label}_b{m}"),
+                Some(m as f64),
+                || {
+                    exec.run_train(&params, &batch).unwrap();
+                },
+            );
+            println!("  {}", r.line());
+        }
+    }
+    println!();
+    println!(
+        "compile cache: {} executables, {:.2}s total compile time",
+        rt.cached_executables(),
+        rt.stats().compile_seconds
+    );
+    Ok(())
+}

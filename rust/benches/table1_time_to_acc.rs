@@ -1,0 +1,43 @@
+//! Bench: **Table 1** — validation accuracy at 25/50/75/100% of training
+//! plus time to within ±1% of final accuracy, per dataset x algorithm,
+//! including the headline "DiveBatch is 1.06-5x faster" speedup factors.
+//!
+//! Run: `cargo bench --bench table1_time_to_acc`
+//! Env: DIVEBATCH_SCALE, DIVEBATCH_DATASETS (default all three).
+
+use divebatch::bench::{bench_header, run_experiment};
+use divebatch::config::presets::{realworld, Scale};
+use divebatch::runtime::Runtime;
+
+fn scale_from_env() -> Scale {
+    match std::env::var("DIVEBATCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::bench(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "table1_time_to_acc",
+        "Table 1: accuracy milestones + time to ±1% of final accuracy \
+         (simulated 4-worker cluster seconds AND real wall-clock)",
+    );
+    let scale = scale_from_env();
+    let datasets =
+        std::env::var("DIVEBATCH_DATASETS").unwrap_or_else(|_| "cifar10,cifar100,tin".into());
+    let rt = Runtime::load_default()?;
+
+    for ds in datasets.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let exp = realworld(ds, scale, false).expect("dataset id");
+        println!("--- {} ---", exp.title);
+        let res = run_experiment(&rt, &exp, false)?;
+        println!("{}", res.table1().render());
+        println!("{}", res.speedup_rows().render());
+    }
+    println!(
+        "paper headline: DiveBatch reaches ±1% of final acc 1.06-5x faster than \
+         small-batch SGD and AdaBatch (2x AdaBatch / 5x SGD on CIFAR-10)."
+    );
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! In-tree micro-benchmark harness (criterion is not vendored).
+//!
+//! Provides warmup + timed iterations with mean/stddev/min and throughput
+//! reporting for the `perf_*` benches, plus a tiny runner for "experiment
+//! benches" (the figure/table reproductions) that mostly care about
+//! printing paper-style outputs rather than ns-level timing.
+
+pub mod report;
+
+pub use report::{run_experiment, ArmResult, ExperimentResult};
+
+use crate::util::stats::Running;
+use crate::util::timer::Timer;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n / self.mean_s)
+    }
+
+    pub fn line(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  ({t:.0} items/s)"))
+            .unwrap_or_default();
+        format!(
+            "{:<40} {:>12}  ± {:>10}  min {:>10}  x{}{}",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// Human time formatting (s / ms / us / ns).
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    /// Target measured time (seconds) before stopping.
+    pub target_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_s: 2.0,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 100,
+            target_s: 0.5,
+        }
+    }
+
+    /// Time `f` repeatedly; `items` is the per-iteration workload size
+    /// for throughput reporting (e.g. samples processed).
+    pub fn run<F: FnMut()>(&self, name: &str, items: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut stats = Running::new();
+        let total = Timer::start();
+        let mut iters = 0u64;
+        while iters < self.min_iters
+            || (total.seconds() < self.target_s && iters < self.max_iters)
+        {
+            let t = Timer::start();
+            f();
+            stats.push(t.seconds());
+            iters += 1;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: stats.mean(),
+            std_s: stats.std(),
+            min_s: stats.min(),
+            items,
+        }
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(bench: &str, description: &str) {
+    println!("=== divebatch bench: {bench} ===");
+    println!("{description}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_minimum_iterations() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target_s: 0.0,
+        };
+        let mut count = 0;
+        let r = b.run("noop", None, || count += 1);
+        assert!(r.iters >= 5);
+        assert_eq!(count as u64, r.iters + 1); // + warmup
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 7,
+            target_s: 100.0,
+        };
+        let r = b.run("noop", None, || {});
+        assert!(r.iters <= 7);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bencher::quick();
+        let r = b.run("sleepy", Some(1000.0), || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1000.0 / 50e-6);
+        assert!(r.line().contains("items/s"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(3e-3), "3.000 ms");
+        assert_eq!(fmt_time(4e-6), "4.000 us");
+        assert!(fmt_time(5e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,283 @@
+//! Shared experiment-report machinery for the figure/table benches:
+//! runs an [`Experiment`]'s arms, aggregates trials, and prints the
+//! paper-style outputs (accuracy/loss figures, Table 1 rows, speedup
+//! factors).  Keeping it in the library lets every bench and the CLI
+//! share one implementation (and lets unit tests cover the aggregation).
+
+use anyhow::Result;
+
+use crate::config::presets::Experiment;
+use crate::metrics::RunRecord;
+use crate::runtime::Runtime;
+use crate::util::plot::{render, Series};
+use crate::util::stats;
+use crate::util::table::{pm, Table};
+
+/// One experiment arm's trials.
+pub struct ArmResult {
+    pub label: String,
+    pub records: Vec<RunRecord>,
+}
+
+impl ArmResult {
+    pub fn acc_at(&self, frac: f64) -> Vec<f64> {
+        self.records.iter().map(|r| r.val_acc_at_frac(frac)).collect()
+    }
+
+    pub fn mean_acc_curve(&self) -> Vec<f64> {
+        stats::mean_curve(&self.records.iter().map(|r| r.val_acc_curve()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_loss_curve(&self) -> Vec<f64> {
+        stats::mean_curve(&self.records.iter().map(|r| r.val_loss_curve()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_batch_curve(&self) -> Vec<f64> {
+        stats::mean_curve(
+            &self
+                .records
+                .iter()
+                .map(|r| r.batch_size_curve())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean time to within ±tol of final acc (simulated or wall).
+    pub fn mean_time_within(&self, tol_pct: f64, simulated: bool) -> Option<f64> {
+        let ts: Vec<f64> = self
+            .records
+            .iter()
+            .filter_map(|r| r.time_within_final(tol_pct, simulated))
+            .collect();
+        if ts.is_empty() {
+            None
+        } else {
+            Some(stats::mean(&ts))
+        }
+    }
+}
+
+/// All arms of one experiment.
+pub struct ExperimentResult {
+    pub title: String,
+    pub arms: Vec<ArmResult>,
+}
+
+/// Run every arm (all trials) of `exp`; prints progress to stderr.
+///
+/// Results are memoized under `DIVEBATCH_RESULTS` (default
+/// `results/cache`) so benches that share arms — Figures 3/4 and
+/// Table 1 run the *same* experiments — reuse completed runs.  Set
+/// `DIVEBATCH_NO_CACHE=1` to force recomputation.
+pub fn run_experiment(rt: &Runtime, exp: &Experiment, verbose: bool) -> Result<ExperimentResult> {
+    let cache_dir = std::path::PathBuf::from(
+        std::env::var("DIVEBATCH_RESULTS").unwrap_or_else(|_| "results/cache".into()),
+    );
+    let use_cache = std::env::var("DIVEBATCH_NO_CACHE").is_err();
+    let mut arms = Vec::new();
+    for run in &exp.runs {
+        let mut r = run.clone();
+        r.cfg.verbose = verbose;
+        let t = crate::util::timer::Timer::start();
+        let records = if use_cache {
+            r.run_cached(rt, &cache_dir)?
+        } else {
+            r.run(rt)?
+        };
+        eprintln!(
+            "  arm done: {:<26} ({} trials, {:.1}s)",
+            records[0].label,
+            records.len(),
+            t.seconds()
+        );
+        arms.push(ArmResult {
+            label: records[0].label.clone(),
+            records,
+        });
+    }
+    Ok(ExperimentResult {
+        title: exp.title.clone(),
+        arms,
+    })
+}
+
+impl ExperimentResult {
+    /// Figure-style accuracy plot (mean over trials).
+    pub fn acc_figure(&self, width: usize, height: usize) -> String {
+        let series: Vec<Series> = self
+            .arms
+            .iter()
+            .map(|a| Series::new(&a.label, a.mean_acc_curve()))
+            .collect();
+        render(
+            &format!("{} — validation accuracy", self.title),
+            "epoch",
+            &series,
+            width,
+            height,
+        )
+    }
+
+    /// Figure-style loss plot (mean over trials).
+    pub fn loss_figure(&self, width: usize, height: usize) -> String {
+        let series: Vec<Series> = self
+            .arms
+            .iter()
+            .map(|a| Series::new(&a.label, a.mean_loss_curve()))
+            .collect();
+        render(
+            &format!("{} — validation loss", self.title),
+            "epoch",
+            &series,
+            width,
+            height,
+        )
+    }
+
+    /// Batch-size progression plot (Figure 2 middle panels).
+    pub fn batch_figure(&self, width: usize, height: usize) -> String {
+        let series: Vec<Series> = self
+            .arms
+            .iter()
+            .map(|a| Series::new(&a.label, a.mean_batch_curve()))
+            .collect();
+        render(
+            &format!("{} — batch size", self.title),
+            "epoch",
+            &series,
+            width,
+            height,
+        )
+    }
+
+    /// Paper Table-1 rows: accuracy at 25/50/75/100% + time to ±1%.
+    pub fn table1(&self) -> Table {
+        let mut t = Table::new(
+            &format!("{} — Table 1 format", self.title),
+            &[
+                "Algorithm",
+                "25%",
+                "50%",
+                "75%",
+                "100% (Final)",
+                "t±1% sim(s)",
+                "t±1% wall(s)",
+            ],
+        );
+        for a in &self.arms {
+            let col = |f: f64| {
+                let xs = a.acc_at(f);
+                pm(stats::mean(&xs), stats::stderr(&xs))
+            };
+            t.row(vec![
+                a.label.clone(),
+                col(0.25),
+                col(0.5),
+                col(0.75),
+                col(1.0),
+                a.mean_time_within(1.0, true)
+                    .map(|x| format!("{x:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+                a.mean_time_within(1.0, false)
+                    .map(|x| format!("{x:.2}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Headline speedups: each arm's time-to-±1% relative to DiveBatch
+    /// (the paper's "1.06-5x faster" claim).
+    pub fn speedup_rows(&self) -> Table {
+        let mut t = Table::new(
+            "time-to-±1%-of-final speedup vs DiveBatch (simulated cluster)",
+            &["Algorithm", "t±1% (s)", "DiveBatch speedup"],
+        );
+        let dive = self
+            .arms
+            .iter()
+            .find(|a| a.label.starts_with("DiveBatch"))
+            .and_then(|a| a.mean_time_within(1.0, true));
+        for a in &self.arms {
+            let time = a.mean_time_within(1.0, true);
+            let speed = match (dive, time) {
+                (Some(d), Some(t)) if d > 0.0 => format!("{:.2}x", t / d),
+                _ => "-".into(),
+            };
+            t.row(vec![
+                a.label.clone(),
+                time.map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into()),
+                speed,
+            ]);
+        }
+        t
+    }
+
+    pub fn arm(&self, prefix: &str) -> Option<&ArmResult> {
+        self.arms.iter().find(|a| a.label.starts_with(prefix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochRecord;
+
+    fn fake_arm(label: &str, accs: &[f64], sim_per_epoch: f64) -> ArmResult {
+        let mut rec = RunRecord::new(label, "m", "x", "d", 0);
+        for (i, &a) in accs.iter().enumerate() {
+            rec.epochs.push(EpochRecord {
+                epoch: i,
+                batch_size: 8,
+                lr: 0.1,
+                steps: 1,
+                train_loss: 1.0,
+                train_acc: 0.0,
+                val_loss: 1.0 / (i + 1) as f64,
+                val_acc: a,
+                delta_hat: None,
+                n_delta: None,
+                exact_delta: None,
+                wall_s: 1.0,
+                sim_s: sim_per_epoch,
+                cum_wall_s: (i + 1) as f64,
+                cum_sim_s: sim_per_epoch * (i + 1) as f64,
+                mem_mb: 1.0,
+            });
+        }
+        ArmResult {
+            label: label.into(),
+            records: vec![rec],
+        }
+    }
+
+    #[test]
+    fn table_and_speedups_render() {
+        let res = ExperimentResult {
+            title: "demo".into(),
+            arms: vec![
+                fake_arm("SGD (8)", &[10.0, 50.0, 88.0, 89.5, 90.0], 2.0),
+                fake_arm("DiveBatch (4 - 8)", &[60.0, 88.5, 89.0, 89.0, 89.0], 1.0),
+            ],
+        };
+        let t1 = res.table1().render();
+        assert!(t1.contains("SGD (8)"));
+        assert!(t1.contains("100% (Final)"));
+        let sp = res.speedup_rows().render();
+        // SGD hits ±1% at epoch 3 (cum 8s? -> acc 89.5 within 0.5 of 90 at
+        // epoch 3, stays) vs DiveBatch at epoch 1 (cum 2s): speedup 4x.
+        assert!(sp.contains("x"), "{sp}");
+        assert!(res.arm("DiveBatch").is_some());
+        assert!(res.arm("nope").is_none());
+        assert!(res.acc_figure(40, 8).contains("validation accuracy"));
+        assert!(res.loss_figure(40, 8).contains("loss"));
+        assert!(res.batch_figure(40, 8).contains("batch size"));
+    }
+
+    #[test]
+    fn time_within_uses_simulated_column() {
+        let arm = fake_arm("A", &[10.0, 89.5, 90.0], 3.0);
+        assert_eq!(arm.mean_time_within(1.0, true), Some(6.0));
+        assert_eq!(arm.mean_time_within(1.0, false), Some(2.0));
+    }
+}

@@ -1,0 +1,187 @@
+//! Simulated data-parallel cluster timing model.
+//!
+//! The paper's Table 1 "time to ±1% final accuracy" was measured on
+//! 4 x A100; this testbed is one CPU core (DESIGN.md §3), so alongside
+//! real wall-clock we report *simulated cluster seconds* from a standard
+//! synchronous data-parallel cost model:
+//!
+//! ```text
+//! t_step(m)  = t_launch                              (kernel launch + sync)
+//!            + ceil(m / workers) * t_sample          (compute, sharded)
+//!            + t_allreduce(P)                        (ring allreduce)
+//!            + [instrumented? ceil(m/workers) * t_sample * div_overhead]
+//! t_allreduce(P) = t_comm_base + 2 * (workers-1)/workers * P * t_per_param
+//! t_epoch(n, m)  = ceil(n/m) * t_step(m)
+//! ```
+//!
+//! This reproduces exactly the mechanism behind the paper's speedups:
+//! larger batches amortize the per-step fixed costs (launch + allreduce)
+//! over more samples, so fewer, bigger steps make epochs cheaper — while
+//! diversity instrumentation adds a per-sample surcharge (BackPACK's
+//! overhead in the paper; the dense-trick/chunked-vmap overhead here).
+//! Constants default to A100-class magnitudes and can be calibrated from
+//! measured CPU per-sample costs via [`ClusterModel::calibrated`].
+
+/// Synchronous data-parallel step-time model.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    /// Number of data-parallel workers (paper: 4).
+    pub workers: usize,
+    /// Fixed per-step launch/sync overhead (seconds).
+    pub t_launch: f64,
+    /// Per-sample fwd+bwd compute time on one worker (seconds).
+    pub t_sample: f64,
+    /// Fixed allreduce latency per step (seconds).
+    pub t_comm_base: f64,
+    /// Per-parameter allreduce transfer time (seconds / param).
+    pub t_per_param: f64,
+    /// Model parameter count (for the allreduce volume).
+    pub param_count: usize,
+    /// Multiplicative per-sample surcharge when the step is
+    /// diversity-instrumented (paper: BackPACK roughly doubles cost).
+    pub div_overhead: f64,
+}
+
+impl ClusterModel {
+    /// A100x4-class constants for a model with `param_count` parameters
+    /// and `flops_per_sample` fwd+bwd FLOPs.
+    ///
+    /// * 60 us launch+sync per step (CUDA graph-less PyTorch-like)
+    /// * 120 TFLOP/s sustained per worker at large batch
+    /// * 25 us allreduce latency + NVLink-class 150 GB/s effective ring
+    ///   bandwidth on f32 gradients
+    /// * instrumented steps cost ~1.9x per sample (Table 2's regime)
+    pub fn a100x4(param_count: usize, flops_per_sample: f64) -> ClusterModel {
+        ClusterModel {
+            workers: 4,
+            t_launch: 60e-6,
+            t_sample: flops_per_sample / 120e12,
+            t_comm_base: 25e-6,
+            t_per_param: 4.0 / 150e9, // bytes / (bytes/sec)
+            param_count,
+            div_overhead: 0.9,
+        }
+    }
+
+    /// Calibrate from a measured per-sample cost on this testbed, keeping
+    /// the fixed-cost structure (used when reporting "simulated seconds"
+    /// consistently with local measurements).
+    pub fn calibrated(
+        workers: usize,
+        measured_per_sample_s: f64,
+        param_count: usize,
+    ) -> ClusterModel {
+        ClusterModel {
+            workers,
+            t_launch: 60e-6,
+            t_sample: measured_per_sample_s,
+            t_comm_base: 25e-6,
+            t_per_param: 4.0 / 150e9,
+            param_count,
+            div_overhead: 0.9,
+        }
+    }
+
+    /// Time of one optimizer step at logical batch `m`.
+    pub fn step_time(&self, m: usize, instrumented: bool) -> f64 {
+        assert!(m > 0);
+        let shard = m.div_ceil(self.workers);
+        let mut compute = shard as f64 * self.t_sample;
+        if instrumented {
+            compute *= 1.0 + self.div_overhead;
+        }
+        let allreduce = self.t_comm_base
+            + 2.0 * (self.workers - 1) as f64 / self.workers as f64
+                * self.param_count as f64
+                * self.t_per_param;
+        self.t_launch + compute + allreduce
+    }
+
+    /// Time of one epoch (`ceil(n/m)` steps, last one partial).
+    pub fn epoch_time(&self, n: usize, m: usize, instrumented: bool) -> f64 {
+        assert!(n > 0 && m > 0);
+        let full_steps = n / m;
+        let tail = n % m;
+        let mut t = full_steps as f64 * self.step_time(m, instrumented);
+        if tail > 0 {
+            t += self.step_time(tail, instrumented);
+        }
+        t
+    }
+
+    /// Throughput (samples/sec) at batch `m` — the parallel-efficiency
+    /// curve the paper's section 2.1 describes.
+    pub fn throughput(&self, m: usize, instrumented: bool) -> f64 {
+        m as f64 / self.step_time(m, instrumented)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ClusterModel {
+        ClusterModel::a100x4(272_000, 250e6) // ResNet-20-ish
+    }
+
+    #[test]
+    fn larger_batches_amortize_fixed_costs() {
+        let m = model();
+        // Epoch time strictly decreases from m=128 to m=2048 (same n).
+        let t128 = m.epoch_time(50_000, 128, false);
+        let t2048 = m.epoch_time(50_000, 2048, false);
+        assert!(
+            t2048 < t128,
+            "large batch should be faster per epoch: {t2048} vs {t128}"
+        );
+        // And the ratio is meaningful (paper: SGD(2048) ~2x faster/epoch).
+        assert!(t128 / t2048 > 1.5, "{}", t128 / t2048);
+    }
+
+    #[test]
+    fn throughput_saturates() {
+        let m = model();
+        let t1 = m.throughput(64, false);
+        let t2 = m.throughput(1024, false);
+        let t3 = m.throughput(8192, false);
+        assert!(t2 > t1);
+        // Diminishing returns: relative gain 1024->8192 smaller than 64->1024.
+        assert!((t3 / t2) < (t2 / t1));
+    }
+
+    #[test]
+    fn instrumentation_costs_extra() {
+        let m = model();
+        let plain = m.step_time(256, false);
+        let inst = m.step_time(256, true);
+        assert!(inst > 1.5 * plain);
+    }
+
+    #[test]
+    fn epoch_time_counts_partial_step() {
+        let m = model();
+        let exact = m.epoch_time(1024, 256, false);
+        let with_tail = m.epoch_time(1025, 256, false);
+        assert!(with_tail > exact);
+        // Exactly one extra (1-sample) step.
+        let delta = with_tail - exact;
+        assert!((delta - m.step_time(1, false)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_sharding_divides_compute() {
+        let mut m = model();
+        let t4 = m.step_time(1024, false);
+        m.workers = 1;
+        let t1 = m.step_time(1024, false);
+        assert!(t1 > 3.0 * t4, "expected near-4x: {t1} vs {t4}");
+    }
+
+    #[test]
+    fn calibrated_uses_measured_cost() {
+        let m = ClusterModel::calibrated(4, 1e-3, 1000);
+        // Dominated by compute: 256/4 * 1ms = 64 ms.
+        let t = m.step_time(256, false);
+        assert!((0.06..0.08).contains(&t), "{t}");
+    }
+}

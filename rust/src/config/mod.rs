@@ -1,0 +1,264 @@
+//! Experiment configuration: dataset specs, run specs, and the presets
+//! that map every paper table/figure to concrete configurations
+//! (DESIGN.md §5).
+
+pub mod presets;
+
+use anyhow::Result;
+
+use crate::cluster::ClusterModel;
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::data::{images, synthetic, Dataset, ImageSpec, SyntheticSpec};
+use crate::metrics::RunRecord;
+use crate::runtime::Runtime;
+use crate::util::timer::Profiler;
+
+/// Which dataset family a run uses.
+#[derive(Clone, Debug)]
+pub enum DatasetSpec {
+    /// Eq. 3 synthetic (paper section 5.1); 80/20 train/val split.
+    Synthetic(SyntheticSpec),
+    /// Procedural images (CIFAR-like substitutes); 80/20 split.
+    Images(ImageSpec),
+}
+
+impl DatasetSpec {
+    /// Materialize (train, val).  `trial_seed` offsets the generator seed
+    /// so each trial sees an independent draw, matching the paper's
+    /// multi-trial averaging.
+    pub fn build(&self, trial_seed: u64) -> (Dataset, Dataset) {
+        let full = match self {
+            DatasetSpec::Synthetic(s) => synthetic::generate(&SyntheticSpec {
+                seed: s.seed + trial_seed,
+                ..s.clone()
+            }),
+            DatasetSpec::Images(s) => images::generate(&ImageSpec {
+                seed: s.seed + trial_seed,
+                ..s.clone()
+            }),
+        };
+        full.split(0.8)
+    }
+
+    pub fn n_total(&self) -> usize {
+        match self {
+            DatasetSpec::Synthetic(s) => s.n,
+            DatasetSpec::Images(s) => s.n(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DatasetSpec::Synthetic(s) => format!("synthetic-d{}", s.d),
+            DatasetSpec::Images(s) => match s.num_classes {
+                10 => "cifar10-like".to_string(),
+                100 => "cifar100-like".to_string(),
+                200 => "tiny-imagenet-like".to_string(),
+                c => format!("images-{c}c"),
+            },
+        }
+    }
+}
+
+/// One experiment arm: a training configuration over a dataset, repeated
+/// for `trials` seeds.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub cfg: TrainConfig,
+    pub dataset: DatasetSpec,
+    pub trials: usize,
+    /// fwd+bwd FLOPs per sample — feeds the simulated cluster model.
+    pub flops_per_sample: f64,
+}
+
+impl RunSpec {
+    /// Execute all trials; returns one [`RunRecord`] per trial.
+    pub fn run(&self, rt: &Runtime) -> Result<Vec<RunRecord>> {
+        let mut records = Vec::with_capacity(self.trials);
+        for trial in 0..self.trials {
+            let (rec, _) = self.run_trial(rt, trial as u64)?;
+            records.push(rec);
+        }
+        Ok(records)
+    }
+
+    /// A stable fingerprint of everything that determines the run's
+    /// outcome — the results-cache key.
+    pub fn fingerprint(&self) -> String {
+        let c = &self.cfg;
+        let s = &c.schedule;
+        let ds = match &self.dataset {
+            DatasetSpec::Synthetic(sp) => {
+                format!("syn-n{}-d{}-no{}-s{}", sp.n, sp.d, sp.noise, sp.seed)
+            }
+            DatasetSpec::Images(sp) => format!(
+                "img-c{}-pc{}-sz{}-no{}-sh{}-s{}",
+                sp.num_classes, sp.per_class, sp.size, sp.noise, sp.max_shift, sp.seed
+            ),
+        };
+        // Extension knobs only contribute when non-default, so enabling
+        // them never invalidates the cache of standard runs.
+        let ext = if c.use_adam || c.sgld.enabled() {
+            format!("|adam{}|sgld{}", c.use_adam, c.sgld.sigma)
+        } else {
+            String::new()
+        };
+        let raw = format!(
+            "v2|{}|{:?}|lr{}-d{}-e{}-r{}|ep{}|mu{}|wd{}|cl{:?}|mm{:?}|du{}|{}|t{}{ext}",
+            c.model,
+            c.policy,
+            s.base,
+            s.decay,
+            s.every,
+            s.rescale_with_batch,
+            c.epochs,
+            c.momentum,
+            c.weight_decay,
+            c.clip_norm,
+            c.max_micro,
+            c.device_update,
+            ds,
+            self.trials,
+        );
+        // FNV-1a over the description, rendered hex (filename-safe).
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in raw.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        format!("{}-{}-{h:016x}", c.model, c.policy.kind(), h = h)
+    }
+
+    /// Like [`run`], but memoized on disk: results land in
+    /// `<cache_dir>/<fingerprint>.json` and later invocations (e.g. the
+    /// Table 1 bench reusing Figure 3's runs) load instead of retraining.
+    pub fn run_cached(&self, rt: &Runtime, cache_dir: &std::path::Path) -> Result<Vec<RunRecord>> {
+        let path = cache_dir.join(format!("{}.json", self.fingerprint()));
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(json) = crate::util::json::parse(&text) {
+                if let Some(arr) = json.as_arr() {
+                    let recs: Result<Vec<RunRecord>> =
+                        arr.iter().map(RunRecord::from_json).collect();
+                    if let Ok(recs) = recs {
+                        if recs.len() == self.trials {
+                            eprintln!("  (cache hit: {})", path.display());
+                            return Ok(recs);
+                        }
+                    }
+                }
+            }
+        }
+        let records = self.run(rt)?;
+        std::fs::create_dir_all(cache_dir)?;
+        let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
+        std::fs::write(&path, json.to_string())?;
+        Ok(records)
+    }
+
+    /// Execute one trial; returns the record and the stage profile.
+    pub fn run_trial(&self, rt: &Runtime, trial: u64) -> Result<(RunRecord, Profiler)> {
+        let (train, val) = self.dataset.build(trial);
+        let info = rt.model(&self.cfg.model)?;
+        let cluster = ClusterModel::a100x4(info.param_count, self.flops_per_sample);
+        let mut cfg = self.cfg.clone();
+        cfg.seed = trial;
+        let trainer = Trainer::new(rt, cfg, train, val, cluster)?;
+        let out = trainer.run()?;
+        Ok((out.record, out.profile))
+    }
+}
+
+/// Rough fwd+bwd FLOPs per sample per model family (ratios are what
+/// matter for the simulated timing; see cluster/mod.rs).
+pub fn flops_per_sample(model: &str) -> f64 {
+    if model.starts_with("logreg") {
+        3e3
+    } else if model.starts_with("mlp") {
+        4e5
+    } else if model.starts_with("resnet") {
+        3e7
+    } else if model.starts_with("tiny") {
+        1e3
+    } else {
+        1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_spec_builds_split() {
+        let spec = DatasetSpec::Synthetic(SyntheticSpec {
+            n: 100,
+            d: 8,
+            noise: 0.1,
+            seed: 0,
+        });
+        let (tr, va) = spec.build(0);
+        assert_eq!(tr.n(), 80);
+        assert_eq!(va.n(), 20);
+        assert_eq!(spec.n_total(), 100);
+        assert_eq!(spec.label(), "synthetic-d8");
+    }
+
+    #[test]
+    fn trials_use_different_data() {
+        let spec = DatasetSpec::Synthetic(SyntheticSpec {
+            n: 50,
+            d: 4,
+            noise: 0.1,
+            seed: 0,
+        });
+        let (a, _) = spec.build(0);
+        let (b, _) = spec.build(1);
+        assert_ne!(a.x, b.x);
+    }
+
+    #[test]
+    fn image_labels() {
+        let spec = DatasetSpec::Images(ImageSpec::cifar100_like(4, 0));
+        assert_eq!(spec.label(), "cifar100-like");
+        assert_eq!(spec.n_total(), 400);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_configs() {
+        use crate::coordinator::{LrSchedule, Policy, TrainConfig};
+        let base = RunSpec {
+            cfg: TrainConfig::new(
+                "m",
+                Policy::Fixed { m: 8 },
+                LrSchedule::constant(0.1, false),
+                4,
+            ),
+            dataset: DatasetSpec::Synthetic(SyntheticSpec {
+                n: 10,
+                d: 4,
+                noise: 0.1,
+                seed: 0,
+            }),
+            trials: 2,
+            flops_per_sample: 1.0,
+        };
+        let a = base.fingerprint();
+        assert_eq!(a, base.fingerprint()); // stable
+        let mut other = base.clone();
+        other.cfg.epochs = 5;
+        assert_ne!(a, other.fingerprint());
+        let mut other = base.clone();
+        other.trials = 3;
+        assert_ne!(a, other.fingerprint());
+        let mut other = base.clone();
+        other.cfg.policy = Policy::Fixed { m: 16 };
+        assert_ne!(a, other.fingerprint());
+        assert!(a.starts_with("m-sgd-"));
+    }
+
+    #[test]
+    fn flops_table() {
+        assert!(flops_per_sample("resnet10") > flops_per_sample("mlp512"));
+        assert!(flops_per_sample("mlp512") > flops_per_sample("logreg512"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Epoch-level gradient-diversity accumulation (Definition 2).
+//!
+//! During an instrumented epoch the trainer pushes every micro-batch's
+//! `(grad_sum, sqnorm_sum)` here; at the epoch boundary `stats()` yields
+//! the Definition-2 numerator (`sum_i ||g_i||^2`) and denominator
+//! (`||sum_i g_i||^2`) from which the policy computes `Delta_hat`.
+//! Gradient accumulation is carried in f64 — across an epoch of 20k
+//! samples the f32 executables' sums would otherwise lose precision in
+//! the denominator's cancellation-heavy norm.
+
+use super::policy::DiversityStats;
+
+/// Accumulator for one epoch's diversity statistics.
+#[derive(Clone, Debug)]
+pub struct DiversityAccum {
+    grad_sum: Vec<f64>,
+    sqnorm_sum: f64,
+    samples: usize,
+}
+
+impl DiversityAccum {
+    pub fn new(param_count: usize) -> DiversityAccum {
+        DiversityAccum {
+            grad_sum: vec![0.0; param_count],
+            sqnorm_sum: 0.0,
+            samples: 0,
+        }
+    }
+
+    /// Add one micro-batch's outputs (sample-sum gradient + sq-norm sum).
+    pub fn push(&mut self, grad_sum: &[f32], sqnorm_sum: f64, real_samples: usize) {
+        assert_eq!(grad_sum.len(), self.grad_sum.len());
+        for (acc, &g) in self.grad_sum.iter_mut().zip(grad_sum) {
+            *acc += g as f64;
+        }
+        self.sqnorm_sum += sqnorm_sum;
+        self.samples += real_samples;
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Definition-2 statistics for the epoch so far.
+    pub fn stats(&self) -> DiversityStats {
+        let grad_norm2: f64 = self.grad_sum.iter().map(|g| g * g).sum();
+        DiversityStats {
+            sqnorm_sum: self.sqnorm_sum,
+            grad_norm2,
+        }
+    }
+
+    /// `n * Delta_hat` — the quantity Algorithm 1 line 11 scales by delta.
+    /// (Exposed for the Figure 2 diversity curves.)
+    pub fn n_delta(&self) -> f64 {
+        self.samples as f64 * self.stats().delta_hat()
+    }
+
+    pub fn reset(&mut self) {
+        self.grad_sum.iter_mut().for_each(|g| *g = 0.0);
+        self.sqnorm_sum = 0.0;
+        self.samples = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_hand_computation() {
+        // Three "samples" pushed as two micro-batches of per-sample grads:
+        // g1=(1,0), g2=(0,1), g3=(1,1).
+        // sum g = (2,2) -> ||.||^2 = 8; sum ||g_i||^2 = 1 + 1 + 2 = 4.
+        // Delta = 4/8 = 0.5.
+        let mut acc = DiversityAccum::new(2);
+        acc.push(&[1.0, 1.0], 2.0, 2); // micro 1: g1+g2, ||g1||²+||g2||²
+        acc.push(&[1.0, 1.0], 2.0, 1); // micro 2: g3
+        let s = acc.stats();
+        assert!((s.sqnorm_sum - 4.0).abs() < 1e-12);
+        assert!((s.grad_norm2 - 8.0).abs() < 1e-12);
+        assert!((s.delta_hat() - 0.5).abs() < 1e-12);
+        assert_eq!(acc.samples(), 3);
+        assert!((acc.n_delta() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_gradients_maximize_diversity() {
+        // n orthonormal per-sample grads: Delta = n / n = 1... relative to
+        // ||sum||^2 = n, sum ||g||^2 = n -> Delta = 1; n*Delta = n (the
+        // "maximally diverse" regime where batch can scale to n).
+        let n = 8;
+        let mut acc = DiversityAccum::new(n);
+        for i in 0..n {
+            let mut g = vec![0.0f32; n];
+            g[i] = 1.0;
+            acc.push(&g, 1.0, 1);
+        }
+        assert!((acc.stats().delta_hat() - 1.0).abs() < 1e-12);
+        assert!((acc.n_delta() - n as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_gradients_minimize_diversity() {
+        // n identical grads: sum ||g||^2 = n, ||sum||^2 = n^2 -> Delta=1/n.
+        let n = 16;
+        let mut acc = DiversityAccum::new(4);
+        for _ in 0..n {
+            acc.push(&[1.0, 2.0, 3.0, 4.0], 30.0, 1);
+        }
+        let d = acc.stats().delta_hat();
+        assert!((d - 1.0 / n as f64).abs() < 1e-9, "{d}");
+        // n * Delta = 1: gradient diversity says batch size 1 suffices.
+        assert!((acc.n_delta() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_zeroes_everything() {
+        let mut acc = DiversityAccum::new(2);
+        acc.push(&[1.0, 1.0], 2.0, 1);
+        acc.reset();
+        assert_eq!(acc.samples(), 0);
+        assert_eq!(acc.stats().sqnorm_sum, 0.0);
+        assert!(acc.stats().delta_hat().is_infinite());
+    }
+
+    #[test]
+    fn f64_accumulation_avoids_f32_cancellation() {
+        // Alternating large +/- f32 grads whose true sum is tiny: f32
+        // accumulation would drift; f64 keeps the denominator meaningful.
+        let mut acc = DiversityAccum::new(1);
+        for i in 0..10_000 {
+            let g = if i % 2 == 0 { 1e5f32 } else { -1e5f32 + 0.25 };
+            acc.push(&[g], (g as f64) * (g as f64), 1);
+        }
+        // True sum = 5000 * 0.25 = 1250.
+        let s = acc.stats();
+        assert!((s.grad_norm2.sqrt() - 1250.0).abs() < 1.0, "{}", s.grad_norm2.sqrt());
+    }
+}

@@ -1,0 +1,26 @@
+//! The L3 coordinator — the paper's system contribution (DESIGN.md §4).
+//!
+//! * [`policy`]    — batch-size policies: Fixed SGD, AdaBatch, DiveBatch
+//!   (Algorithm 1), Oracle (exact-diversity ablation)
+//! * [`plan`]      — accumulation planner over the compiled micro-batch
+//!   ladder (static-shape PJRT executables <-> dynamic batch sizes)
+//! * [`schedule`]  — LR step decay + Goyal linear batch rescaling
+//! * [`optimizer`] — reference SGD(+momentum,+wd) on the flat params
+//! * [`diversity`] — Definition-2 epoch accumulators (f64)
+//! * [`trainer`]   — the epoch event loop tying it all together
+
+pub mod diversity;
+pub mod optimizer;
+pub mod plan;
+pub mod policy;
+pub mod schedule;
+pub mod sgld;
+pub mod trainer;
+
+pub use diversity::DiversityAccum;
+pub use optimizer::{AdamOptimizer, Optim, SgdOptimizer};
+pub use plan::{MicroBlock, MicroPlan};
+pub use policy::{DiversityNeed, DiversityStats, Policy};
+pub use schedule::LrSchedule;
+pub use sgld::SgldConfig;
+pub use trainer::{TrainConfig, TrainOutcome, Trainer};

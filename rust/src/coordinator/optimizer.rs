@@ -1,0 +1,325 @@
+//! Reference SGD optimizer over the flat parameter vector.
+//!
+//! The executables return SAMPLE-SUM gradients; the optimizer divides by
+//! the logical batch size (Algorithm 1 line 8: `theta -= eta/m * sum_grad`)
+//! and optionally applies momentum and decoupled-from-nothing classic L2
+//! weight decay (the ResNet reference codebases' setting).
+//!
+//! The fused on-device `update` executable (L1 `sgd_fused` Pallas kernel)
+//! implements the identical rule; `rust/tests/integration_runtime.rs`
+//! asserts both paths agree bit-closely, and the P2 bench compares their
+//! cost.
+
+/// SGD with optional momentum, L2 weight decay and global-norm clipping.
+#[derive(Clone, Debug)]
+pub struct SgdOptimizer {
+    pub momentum: f64,
+    pub weight_decay: f64,
+    /// Global-norm gradient clipping threshold (on the mean gradient).
+    /// The paper's ResNet-20 runs rely on BatchNorm for stability; our
+    /// BN-free substitute (DESIGN.md §3) uses clipping instead.  `None`
+    /// disables (the synthetic experiments).
+    pub clip_norm: Option<f64>,
+    velocity: Vec<f32>,
+    steps: u64,
+}
+
+impl SgdOptimizer {
+    pub fn new(param_count: usize, momentum: f64, weight_decay: f64) -> SgdOptimizer {
+        SgdOptimizer {
+            momentum,
+            weight_decay,
+            clip_norm: None,
+            velocity: vec![0.0; param_count],
+            steps: 0,
+        }
+    }
+
+    /// Plain SGD (no momentum / weight decay) — the synthetic experiments.
+    pub fn plain(param_count: usize) -> SgdOptimizer {
+        Self::new(param_count, 0.0, 0.0)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Reset momentum state (e.g. between trials).
+    pub fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+        self.steps = 0;
+    }
+
+    /// One update: `params -= lr * v'` with
+    /// `g = grad_sum/m + wd * p` and `v' = mu * v + g`.
+    ///
+    /// Matches `sgd_fused` in python/compile/kernels/persample.py exactly
+    /// (same operation order, f32 arithmetic).
+    pub fn step(&mut self, params: &mut [f32], grad_sum: &[f32], lr: f64, batch_size: usize) {
+        assert_eq!(params.len(), grad_sum.len(), "grad length mismatch");
+        assert_eq!(params.len(), self.velocity.len(), "velocity length mismatch");
+        assert!(batch_size > 0);
+        let inv_m = self.effective_inv_m(grad_sum, batch_size);
+        let lr = lr as f32;
+        let mu = self.momentum as f32;
+        let wd = self.weight_decay as f32;
+        if mu == 0.0 && wd == 0.0 {
+            // Hot path for the synthetic runs: theta -= lr/m * grad_sum.
+            let scale = lr * inv_m;
+            for (p, g) in params.iter_mut().zip(grad_sum) {
+                *p -= scale * g;
+            }
+        } else {
+            for ((p, v), g) in params.iter_mut().zip(self.velocity.iter_mut()).zip(grad_sum) {
+                let eff = g * inv_m + wd * *p;
+                *v = mu * *v + eff;
+                *p -= lr * *v;
+            }
+        }
+        self.steps += 1;
+    }
+
+    /// The scale applied to `grad_sum` before the update: `1/m`, shrunk
+    /// further when global-norm clipping engages.  The fused on-device
+    /// update executable takes this as its `inv_m` scalar input, so both
+    /// update paths share identical clipping semantics.
+    pub fn effective_inv_m(&self, grad_sum: &[f32], batch_size: usize) -> f32 {
+        let inv_m = 1.0f32 / batch_size as f32;
+        if let Some(clip) = self.clip_norm {
+            let norm2: f64 = grad_sum
+                .iter()
+                .map(|&g| {
+                    let v = g as f64 * inv_m as f64;
+                    v * v
+                })
+                .sum();
+            let norm = norm2.sqrt();
+            if norm > clip {
+                return inv_m * (clip / norm) as f32;
+            }
+        }
+        inv_m
+    }
+
+    /// Adopt externally-computed state (from the on-device update path).
+    pub fn set_velocity(&mut self, v: Vec<f32>) {
+        assert_eq!(v.len(), self.velocity.len());
+        self.velocity = v;
+        self.steps += 1;
+    }
+}
+
+/// Adam (Kingma & Ba) on the flat parameter vector — the paper's §6
+/// "DiveBatch could complement these optimizers" direction.  Consumes the
+/// same sample-sum gradients; weight decay is classic L2 (added to the
+/// gradient before the moment updates), matching the SGD path's
+/// convention rather than AdamW's decoupled form.
+#[derive(Clone, Debug)]
+pub struct AdamOptimizer {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    steps: u64,
+}
+
+impl AdamOptimizer {
+    pub fn new(param_count: usize, weight_decay: f64) -> AdamOptimizer {
+        AdamOptimizer {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            m: vec![0.0; param_count],
+            v: vec![0.0; param_count],
+            steps: 0,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// One bias-corrected Adam update from a SUM gradient.
+    pub fn step(&mut self, params: &mut [f32], grad_sum: &[f32], lr: f64, batch_size: usize) {
+        assert_eq!(params.len(), grad_sum.len());
+        assert!(batch_size > 0);
+        self.steps += 1;
+        let inv_m = 1.0 / batch_size as f64;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bc1 = 1.0 - b1.powi(self.steps as i32);
+        let bc2 = 1.0 - b2.powi(self.steps as i32);
+        let wd = self.weight_decay;
+        for i in 0..params.len() {
+            let g = grad_sum[i] as f64 * inv_m + wd * params[i] as f64;
+            let m = b1 * self.m[i] as f64 + (1.0 - b1) * g;
+            let v = b2 * self.v[i] as f64 + (1.0 - b2) * g * g;
+            self.m[i] = m as f32;
+            self.v[i] = v as f32;
+            let update = lr * (m / bc1) / ((v / bc2).sqrt() + self.eps);
+            params[i] -= update as f32;
+        }
+    }
+}
+
+/// Unified optimizer the trainer drives (selected by `TrainConfig`).
+#[derive(Clone, Debug)]
+pub enum Optim {
+    Sgd(SgdOptimizer),
+    Adam(AdamOptimizer),
+}
+
+impl Optim {
+    pub fn step(&mut self, params: &mut [f32], grad_sum: &[f32], lr: f64, batch_size: usize) {
+        match self {
+            Optim::Sgd(o) => o.step(params, grad_sum, lr, batch_size),
+            Optim::Adam(o) => o.step(params, grad_sum, lr, batch_size),
+        }
+    }
+
+    /// SGD-only state accessors (the fused device-update path).
+    pub fn as_sgd_mut(&mut self) -> Option<&mut SgdOptimizer> {
+        match self {
+            Optim::Sgd(o) => Some(o),
+            Optim::Adam(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_matches_algorithm1_line8() {
+        let mut opt = SgdOptimizer::plain(3);
+        let mut p = vec![1.0f32, 2.0, 3.0];
+        let grad_sum = vec![10.0f32, -20.0, 0.0];
+        opt.step(&mut p, &grad_sum, 0.5, 10);
+        // p -= 0.5/10 * grad_sum
+        assert_eq!(p, vec![0.5, 3.0, 3.0]);
+        assert_eq!(opt.steps(), 1);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdOptimizer::new(1, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        let g = vec![1.0f32];
+        opt.step(&mut p, &g, 1.0, 1); // v=1, p=-1
+        assert!((p[0] + 1.0).abs() < 1e-6);
+        opt.step(&mut p, &g, 1.0, 1); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6);
+        assert!((opt.velocity()[0] - 1.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_towards_zero() {
+        let mut opt = SgdOptimizer::new(1, 0.0, 0.1);
+        let mut p = vec![10.0f32];
+        opt.step(&mut p, &[0.0], 1.0, 1);
+        // g = 0 + 0.1*10 = 1; p = 10 - 1 = 9.
+        assert!((p[0] - 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_size_divides_gradient() {
+        let mut a = SgdOptimizer::plain(1);
+        let mut b = SgdOptimizer::plain(1);
+        let mut pa = vec![0.0f32];
+        let mut pb = vec![0.0f32];
+        a.step(&mut pa, &[100.0], 1.0, 100);
+        b.step(&mut pb, &[1.0], 1.0, 1);
+        assert!((pa[0] - pb[0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut opt = SgdOptimizer::new(2, 0.9, 0.0);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[1.0, 1.0], 0.1, 1);
+        opt.reset();
+        assert_eq!(opt.velocity(), &[0.0, 0.0]);
+        assert_eq!(opt.steps(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "grad length mismatch")]
+    fn rejects_mismatched_grad() {
+        let mut opt = SgdOptimizer::plain(2);
+        let mut p = vec![0.0f32; 2];
+        opt.step(&mut p, &[1.0], 0.1, 1);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With zero moments, step 1 moves each param by ~lr*sign(g)
+        // (bias correction makes m_hat = g, v_hat = g^2).
+        let mut opt = AdamOptimizer::new(3, 0.0);
+        let mut p = vec![0.0f32; 3];
+        opt.step(&mut p, &[4.0, -2.0, 0.0], 0.01, 2);
+        assert!((p[0] + 0.01).abs() < 1e-4, "{p:?}");
+        assert!((p[1] - 0.01).abs() < 1e-4, "{p:?}");
+        assert_eq!(p[2], 0.0);
+        assert_eq!(opt.steps(), 1);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // Minimize ||p - t||^2 (grad = 2(p - t)); Adam should get close.
+        let t = [3.0f32, -1.0, 0.5, 2.0];
+        let mut opt = AdamOptimizer::new(4, 0.0);
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..800 {
+            let g: Vec<f32> = p.iter().zip(&t).map(|(a, b)| 2.0 * (a - b)).collect();
+            opt.step(&mut p, &g, 0.05, 1);
+        }
+        for (a, b) in p.iter().zip(&t) {
+            assert!((a - b).abs() < 0.05, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn adam_batch_size_divides_gradient() {
+        let mut a = AdamOptimizer::new(1, 0.0);
+        let mut b = AdamOptimizer::new(1, 0.0);
+        let mut pa = vec![1.0f32];
+        let mut pb = vec![1.0f32];
+        a.step(&mut pa, &[64.0], 0.01, 64);
+        b.step(&mut pb, &[1.0], 0.01, 1);
+        assert!((pa[0] - pb[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn optim_dispatch() {
+        let mut o = Optim::Sgd(SgdOptimizer::plain(2));
+        assert!(o.as_sgd_mut().is_some());
+        let mut p = vec![0.0f32; 2];
+        o.step(&mut p, &[1.0, 1.0], 1.0, 1);
+        assert!(p[0] < 0.0);
+        let mut o = Optim::Adam(AdamOptimizer::new(2, 0.0));
+        assert!(o.as_sgd_mut().is_none());
+        o.step(&mut p, &[1.0, 1.0], 0.1, 1);
+    }
+
+    #[test]
+    fn momentum_path_equals_plain_path_when_disabled() {
+        // The mu==0,wd==0 fast path must match the general path.
+        let mut fast = SgdOptimizer::plain(4);
+        let mut slow = SgdOptimizer::new(4, 0.0, 1e-30); // forces general path
+        let mut pf = vec![1.0f32, -2.0, 3.0, 0.5];
+        let mut ps = pf.clone();
+        let g = vec![0.3f32, 0.1, -0.7, 2.0];
+        fast.step(&mut pf, &g, 0.05, 7);
+        slow.step(&mut ps, &g, 0.05, 7);
+        for (a, b) in pf.iter().zip(&ps) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Accumulation planner: decompose a logical batch into compiled
+//! micro-batches.
+//!
+//! PJRT executables are static-shaped, so the AOT pipeline compiles each
+//! model at a small ladder of micro-batch sizes (manifest `ladder`).  A
+//! logical batch of size `m` (whatever the policy chose) is executed as a
+//! sequence of micro-batch blocks whose sample-sum outputs are accumulated
+//! — mathematically identical to one big batch (the executables return
+//! sample sums; see python/tests/test_steps.py::test_sample_sum_additivity).
+//!
+//! The planner is greedy largest-rung-first, which minimizes the number of
+//! dispatches (the dominant fixed cost — see the P2 ablation bench); the
+//! tail that fits no full rung is padded up to the smallest viable rung
+//! with `w = 0` rows.
+
+/// One executable invocation: `take` real samples padded to `micro` rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MicroBlock {
+    /// Compiled micro-batch size (a ladder rung).
+    pub micro: usize,
+    /// Real samples consumed from the batch (`0 < take <= micro`).
+    pub take: usize,
+}
+
+/// A full decomposition of one logical batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MicroPlan {
+    pub blocks: Vec<MicroBlock>,
+}
+
+impl MicroPlan {
+    /// Build a plan for a logical batch of `m` samples over `ladder`
+    /// (strictly ascending rung sizes).  `cap` optionally limits the
+    /// largest rung used (e.g. to bound instrumented-step memory).
+    pub fn build(m: usize, ladder: &[usize], cap: Option<usize>) -> MicroPlan {
+        assert!(m > 0, "empty batch");
+        assert!(!ladder.is_empty(), "empty ladder");
+        let usable: Vec<usize> = ladder
+            .iter()
+            .copied()
+            .filter(|&r| cap.map(|c| r <= c).unwrap_or(true))
+            .collect();
+        // If the cap excludes every rung, fall back to the smallest rung
+        // (still correct, just more padding than the caller hoped).
+        let usable = if usable.is_empty() {
+            vec![ladder[0]]
+        } else {
+            usable
+        };
+        let mut blocks = Vec::new();
+        let mut remaining = m;
+        for &rung in usable.iter().rev() {
+            while remaining >= rung {
+                blocks.push(MicroBlock {
+                    micro: rung,
+                    take: rung,
+                });
+                remaining -= rung;
+            }
+        }
+        if remaining > 0 {
+            // Smallest rung that can hold the tail (the first, since
+            // remaining < usable[0] would have been consumed otherwise —
+            // but guard for safety when usable[0] > remaining is false).
+            let rung = *usable
+                .iter()
+                .find(|&&r| r >= remaining)
+                .unwrap_or(usable.last().unwrap());
+            // A rung smaller than the tail can only happen if the cap
+            // clipped the ladder below the tail; split greedily then.
+            if rung >= remaining {
+                blocks.push(MicroBlock {
+                    micro: rung,
+                    take: remaining,
+                });
+            } else {
+                while remaining >= rung {
+                    blocks.push(MicroBlock {
+                        micro: rung,
+                        take: rung,
+                    });
+                    remaining -= rung;
+                }
+                if remaining > 0 {
+                    blocks.push(MicroBlock {
+                        micro: rung,
+                        take: remaining,
+                    });
+                }
+            }
+        }
+        MicroPlan { blocks }
+    }
+
+    /// Real samples covered (must equal the logical batch size).
+    pub fn covered(&self) -> usize {
+        self.blocks.iter().map(|b| b.take).sum()
+    }
+
+    /// Total executed rows including padding.
+    pub fn padded(&self) -> usize {
+        self.blocks.iter().map(|b| b.micro).sum()
+    }
+
+    /// Number of executable dispatches.
+    pub fn dispatches(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Fraction of executed rows that are padding (0 = perfect).
+    pub fn waste(&self) -> f64 {
+        let padded = self.padded();
+        if padded == 0 {
+            0.0
+        } else {
+            1.0 - self.covered() as f64 / padded as f64
+        }
+    }
+
+    /// Naive single-rung alternative (all blocks at the smallest rung) —
+    /// kept for the P2 ablation bench.
+    pub fn build_smallest_only(m: usize, ladder: &[usize]) -> MicroPlan {
+        Self::build(m, &ladder[..1], None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    const LADDER: &[usize] = &[64, 256, 1024];
+
+    #[test]
+    fn exact_fit_uses_one_block() {
+        let p = MicroPlan::build(1024, LADDER, None);
+        assert_eq!(
+            p.blocks,
+            vec![MicroBlock {
+                micro: 1024,
+                take: 1024
+            }]
+        );
+        assert_eq!(p.waste(), 0.0);
+    }
+
+    #[test]
+    fn paper_batch_5028_decomposes_greedily() {
+        // DiveBatch's nonconvex average max batch from the paper.
+        let p = MicroPlan::build(5028, &[128, 512, 2048, 8192], None);
+        assert_eq!(p.covered(), 5028);
+        // 2 x 2048 + 1 x 512 + 3 x 128 + tail 4 padded into 128.
+        assert_eq!(p.blocks[0].micro, 2048);
+        assert_eq!(p.blocks[1].micro, 2048);
+        assert_eq!(p.blocks[2].micro, 512);
+        // 5028 = 2*2048 + 512 + 3*128 + 36 -> tail block of 36 padded to 128.
+        let tail = p.blocks.last().unwrap();
+        assert_eq!(tail.micro, 128);
+        assert_eq!(tail.take, 36);
+        assert_eq!(p.dispatches(), 7);
+    }
+
+    #[test]
+    fn tail_padding_is_minimal_rung() {
+        let p = MicroPlan::build(70, LADDER, None);
+        // 1 x 64 full + tail 6 in a padded 64 block.
+        assert_eq!(p.blocks.len(), 2);
+        assert_eq!(p.blocks[1], MicroBlock { micro: 64, take: 6 });
+        assert!(p.waste() > 0.0);
+    }
+
+    #[test]
+    fn batch_below_smallest_rung() {
+        let p = MicroPlan::build(5, LADDER, None);
+        assert_eq!(p.blocks, vec![MicroBlock { micro: 64, take: 5 }]);
+    }
+
+    #[test]
+    fn cap_limits_rungs() {
+        let p = MicroPlan::build(1024, LADDER, Some(256));
+        assert!(p.blocks.iter().all(|b| b.micro <= 256));
+        assert_eq!(p.covered(), 1024);
+        assert_eq!(p.dispatches(), 4);
+    }
+
+    #[test]
+    fn cap_below_all_rungs_falls_back_to_smallest() {
+        let p = MicroPlan::build(100, LADDER, Some(8));
+        assert!(p.blocks.iter().all(|b| b.micro == 64));
+        assert_eq!(p.covered(), 100);
+    }
+
+    #[test]
+    fn smallest_only_matches_dispatch_count() {
+        let p = MicroPlan::build_smallest_only(300, LADDER);
+        assert_eq!(p.dispatches(), 300usize.div_ceil(64));
+        assert_eq!(p.covered(), 300);
+    }
+
+    #[test]
+    fn property_covers_exactly_m() {
+        forall(
+            300,
+            |r: &mut Rng| {
+                let m = r.below(10_000) as usize + 1;
+                // Random ascending ladder of 1-4 rungs from a pool.
+                let pool = [4usize, 8, 16, 64, 128, 256, 1024, 2048];
+                let k = r.below(4) as usize + 1;
+                let mut ladder: Vec<usize> = (0..k)
+                    .map(|_| pool[r.below(pool.len() as u64) as usize])
+                    .collect();
+                ladder.sort_unstable();
+                ladder.dedup();
+                (m, ladder)
+            },
+            |(m, ladder)| {
+                let p = MicroPlan::build(*m, ladder, None);
+                let covered_ok = p.covered() == *m;
+                let block_ok = p
+                    .blocks
+                    .iter()
+                    .all(|b| b.take > 0 && b.take <= b.micro && ladder.contains(&b.micro));
+                // Padding never exceeds one smallest rung's worth.
+                let waste_ok = p.padded() - p.covered() < ladder[0];
+                covered_ok && block_ok && waste_ok
+            },
+        );
+    }
+
+    #[test]
+    fn property_greedy_no_worse_dispatches_than_smallest_only() {
+        forall(
+            200,
+            |r: &mut Rng| r.below(8192) as usize + 1,
+            |&m| {
+                let greedy = MicroPlan::build(m, LADDER, None);
+                let naive = MicroPlan::build_smallest_only(m, LADDER);
+                greedy.dispatches() <= naive.dispatches()
+            },
+        );
+    }
+}

@@ -1,0 +1,400 @@
+//! Batch-size policies: Fixed, AdaBatch, DiveBatch (Algorithm 1), Oracle.
+//!
+//! The trainer calls [`Policy::next`] at every epoch boundary with the
+//! diversity statistics observed during (DiveBatch) or recomputed after
+//! (Oracle) the epoch; the policy returns the next epoch's logical batch
+//! size.  Policies also declare which gradient-diversity instrumentation
+//! they need so the trainer can pick the `train_div` vs `train_plain`
+//! executable variant (the `plain` variant skips the per-sample pass
+//! entirely — that is the paper's SGD/AdaBatch cost model).
+
+use std::fmt;
+
+/// Gradient-diversity statistics accumulated over an epoch
+/// (Definition 2 numerator and denominator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DiversityStats {
+    /// `sum_i ||grad_i||^2` accumulated over every sample of the epoch.
+    pub sqnorm_sum: f64,
+    /// `|| sum_i grad_i ||^2` of the epoch-accumulated gradient vector.
+    pub grad_norm2: f64,
+}
+
+impl DiversityStats {
+    /// Estimated gradient diversity `Delta_hat` (Definition 2).
+    pub fn delta_hat(&self) -> f64 {
+        if self.grad_norm2 <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.sqnorm_sum / self.grad_norm2
+        }
+    }
+}
+
+/// Which diversity signal a policy consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiversityNeed {
+    /// No instrumentation (`train_plain`).
+    None,
+    /// Accumulate Definition-2 stats during the epoch (`train_div`).
+    Estimated,
+    /// Recompute the exact diversity on the full dataset at epoch end
+    /// (extra instrumented pass, no parameter updates).
+    Exact,
+}
+
+/// A batch-size adaptation policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Fixed-batch mini-batch SGD (the paper's SGD baselines).
+    Fixed { m: usize },
+    /// AdaBatch (Devarakonda et al. 2018): multiply the batch size by
+    /// `factor` every `every` epochs, capped at `m_max`.
+    AdaBatch {
+        m0: usize,
+        factor: usize,
+        every: usize,
+        m_max: usize,
+    },
+    /// DiveBatch (Algorithm 1): `m_{k+1} = min(m_max, delta * n * Delta_hat)`.
+    DiveBatch { m0: usize, delta: f64, m_max: usize },
+    /// Oracle: DiveBatch's update rule driven by the *exact* gradient
+    /// diversity of the full dataset (section 5.1 ablation).
+    Oracle { m0: usize, delta: f64, m_max: usize },
+}
+
+impl Policy {
+    /// Batch size for epoch 0.
+    pub fn initial(&self) -> usize {
+        match *self {
+            Policy::Fixed { m } => m,
+            Policy::AdaBatch { m0, .. } => m0,
+            Policy::DiveBatch { m0, .. } => m0,
+            Policy::Oracle { m0, .. } => m0,
+        }
+    }
+
+    pub fn diversity_need(&self) -> DiversityNeed {
+        match self {
+            Policy::Fixed { .. } | Policy::AdaBatch { .. } => DiversityNeed::None,
+            Policy::DiveBatch { .. } => DiversityNeed::Estimated,
+            Policy::Oracle { .. } => DiversityNeed::Exact,
+        }
+    }
+
+    /// Batch size for epoch `epoch + 1`, given the size used during
+    /// `epoch`, the dataset size `n`, and (for diversity policies) the
+    /// epoch's diversity statistics.
+    ///
+    /// For `DiveBatch`, `stats` must be the Definition-2 estimate
+    /// accumulated over the epoch; for `Oracle`, the exact full-dataset
+    /// diversity at the post-epoch parameters.
+    pub fn next(
+        &self,
+        epoch: usize,
+        current: usize,
+        n: usize,
+        stats: Option<DiversityStats>,
+    ) -> usize {
+        match *self {
+            Policy::Fixed { m } => m,
+            Policy::AdaBatch {
+                factor,
+                every,
+                m_max,
+                ..
+            } => {
+                if every > 0 && (epoch + 1) % every == 0 {
+                    (current * factor.max(1)).min(m_max)
+                } else {
+                    current
+                }
+            }
+            Policy::DiveBatch { m0, delta, m_max } | Policy::Oracle { m0, delta, m_max } => {
+                let stats = stats.expect("diversity policy requires stats");
+                let delta_hat = stats.delta_hat();
+                if !delta_hat.is_finite() {
+                    // Degenerate epoch (zero accumulated gradient):
+                    // keep the current batch size rather than jumping.
+                    return current.clamp(m0.min(m_max), m_max);
+                }
+                // Algorithm 1, line 11.
+                let target = delta * n as f64 * delta_hat;
+                let target = target.round().max(1.0) as usize;
+                // Never shrink below the initial batch size (the paper
+                // only ever grows the batch; m0 is the floor) and never
+                // exceed n or m_max.
+                target.clamp(m0, m_max.min(n.max(m0)))
+            }
+        }
+    }
+
+    /// Human-readable label matching the paper's table rows, e.g.
+    /// `SGD (128)`, `AdaBatch (128 - 2048)`, `DiveBatch (128 - 2048)`.
+    pub fn label(&self) -> String {
+        match *self {
+            Policy::Fixed { m } => format!("SGD ({m})"),
+            Policy::AdaBatch { m0, m_max, .. } => format!("AdaBatch ({m0} - {m_max})"),
+            Policy::DiveBatch { m0, m_max, .. } => format!("DiveBatch ({m0} - {m_max})"),
+            Policy::Oracle { m0, m_max, .. } => format!("Oracle ({m0} - {m_max})"),
+        }
+    }
+
+    /// Short machine name for file paths / CLI.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Policy::Fixed { .. } => "sgd",
+            Policy::AdaBatch { .. } => "adabatch",
+            Policy::DiveBatch { .. } => "divebatch",
+            Policy::Oracle { .. } => "oracle",
+        }
+    }
+
+    /// Parse a CLI policy spec, e.g.:
+    /// `sgd:m=128` | `adabatch:m0=128,factor=2,every=20,mmax=2048` |
+    /// `divebatch:m0=128,delta=0.1,mmax=2048` | `oracle:m0=512,delta=0.1,mmax=8192`
+    pub fn parse(spec: &str) -> Result<Policy, String> {
+        let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut kv = std::collections::BTreeMap::new();
+        for pair in rest.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("bad policy param {pair:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get_usize = |k: &str, d: Option<usize>| -> Result<usize, String> {
+            match kv.get(k) {
+                Some(v) => v.parse().map_err(|_| format!("bad {k}={v}")),
+                None => d.ok_or_else(|| format!("policy {kind} needs {k}=")),
+            }
+        };
+        let get_f64 = |k: &str, d: Option<f64>| -> Result<f64, String> {
+            match kv.get(k) {
+                Some(v) => v.parse().map_err(|_| format!("bad {k}={v}")),
+                None => d.ok_or_else(|| format!("policy {kind} needs {k}=")),
+            }
+        };
+        match kind {
+            "sgd" | "fixed" => Ok(Policy::Fixed {
+                m: get_usize("m", None)?,
+            }),
+            "adabatch" => Ok(Policy::AdaBatch {
+                m0: get_usize("m0", None)?,
+                factor: get_usize("factor", Some(2))?,
+                every: get_usize("every", Some(20))?,
+                m_max: get_usize("mmax", None)?,
+            }),
+            "divebatch" => Ok(Policy::DiveBatch {
+                m0: get_usize("m0", None)?,
+                delta: get_f64("delta", Some(0.1))?,
+                m_max: get_usize("mmax", None)?,
+            }),
+            "oracle" => Ok(Policy::Oracle {
+                m0: get_usize("m0", None)?,
+                delta: get_f64("delta", Some(0.1))?,
+                m_max: get_usize("mmax", None)?,
+            }),
+            other => Err(format!(
+                "unknown policy {other:?} (sgd|adabatch|divebatch|oracle)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn stats(sq: f64, g2: f64) -> Option<DiversityStats> {
+        Some(DiversityStats {
+            sqnorm_sum: sq,
+            grad_norm2: g2,
+        })
+    }
+
+    #[test]
+    fn fixed_never_changes() {
+        let p = Policy::Fixed { m: 128 };
+        for e in 0..100 {
+            assert_eq!(p.next(e, 128, 20_000, None), 128);
+        }
+        assert_eq!(p.diversity_need(), DiversityNeed::None);
+    }
+
+    #[test]
+    fn adabatch_doubles_every_20() {
+        let p = Policy::AdaBatch {
+            m0: 128,
+            factor: 2,
+            every: 20,
+            m_max: 2048,
+        };
+        let mut m = p.initial();
+        let mut sizes = vec![m];
+        for e in 0..100 {
+            m = p.next(e, m, 50_000, None);
+            sizes.push(m);
+        }
+        // Doubles at epochs 19->20, 39->40, ... capped at 2048.
+        assert_eq!(sizes[19], 128);
+        assert_eq!(sizes[20], 256);
+        assert_eq!(sizes[40], 512);
+        assert_eq!(sizes[60], 1024);
+        assert_eq!(sizes[80], 2048);
+        assert_eq!(sizes[100], 2048); // capped
+    }
+
+    #[test]
+    fn divebatch_follows_algorithm1_line11() {
+        let p = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        // delta_hat = 50 / 25 = 2; target = 0.1 * 10_000 * 2 = 2000.
+        assert_eq!(p.next(0, 128, 10_000, stats(50.0, 25.0)), 2000);
+        // Cap at m_max.
+        assert_eq!(p.next(0, 128, 10_000, stats(500.0, 25.0)), 2048);
+        // Floor at m0.
+        assert_eq!(p.next(0, 128, 10_000, stats(0.001, 25.0)), 128);
+    }
+
+    #[test]
+    fn divebatch_degenerate_gradient_keeps_current() {
+        let p = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        assert_eq!(p.next(3, 512, 10_000, stats(5.0, 0.0)), 512);
+    }
+
+    #[test]
+    fn oracle_shares_update_rule() {
+        let d = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let o = Policy::Oracle {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let s = stats(30.0, 10.0);
+        assert_eq!(d.next(1, 128, 8_000, s), o.next(1, 128, 8_000, s));
+        assert_eq!(o.diversity_need(), DiversityNeed::Exact);
+        assert_eq!(d.diversity_need(), DiversityNeed::Estimated);
+    }
+
+    #[test]
+    fn delta_hat_definition() {
+        let s = DiversityStats {
+            sqnorm_sum: 12.0,
+            grad_norm2: 3.0,
+        };
+        assert!((s.delta_hat() - 4.0).abs() < 1e-12);
+        assert!(DiversityStats::default().delta_hat().is_infinite());
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        assert_eq!(Policy::Fixed { m: 2048 }.label(), "SGD (2048)");
+        assert_eq!(
+            Policy::AdaBatch {
+                m0: 128,
+                factor: 2,
+                every: 20,
+                m_max: 2048
+            }
+            .label(),
+            "AdaBatch (128 - 2048)"
+        );
+        assert_eq!(
+            Policy::DiveBatch {
+                m0: 256,
+                delta: 0.01,
+                m_max: 2048
+            }
+            .label(),
+            "DiveBatch (256 - 2048)"
+        );
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Policy::parse("sgd:m=128").unwrap(), Policy::Fixed { m: 128 });
+        assert_eq!(
+            Policy::parse("adabatch:m0=128,mmax=2048").unwrap(),
+            Policy::AdaBatch {
+                m0: 128,
+                factor: 2,
+                every: 20,
+                m_max: 2048
+            }
+        );
+        assert_eq!(
+            Policy::parse("divebatch:m0=256,delta=0.01,mmax=2048").unwrap(),
+            Policy::DiveBatch {
+                m0: 256,
+                delta: 0.01,
+                m_max: 2048
+            }
+        );
+        assert!(Policy::parse("bogus").is_err());
+        assert!(Policy::parse("sgd").is_err()); // missing m
+        assert!(Policy::parse("sgd:m=abc").is_err());
+    }
+
+    #[test]
+    fn property_divebatch_always_within_bounds() {
+        let p = Policy::DiveBatch {
+            m0: 64,
+            delta: 0.1,
+            m_max: 4096,
+        };
+        forall(
+            300,
+            |r: &mut Rng| {
+                (
+                    r.below(1_000_000) as usize + 1, // n... reused as sqnorm scale too
+                    (r.next_f64() * 1e6, r.next_f64() * 1e6),
+                )
+            },
+            |&(n, (sq, g2))| {
+                let m = p.next(
+                    0,
+                    64,
+                    n,
+                    stats(sq, g2),
+                );
+                (64..=4096).contains(&m)
+            },
+        );
+    }
+
+    #[test]
+    fn property_adabatch_monotone_nondecreasing() {
+        let p = Policy::AdaBatch {
+            m0: 32,
+            factor: 2,
+            every: 5,
+            m_max: 1024,
+        };
+        let mut m = p.initial();
+        for e in 0..200 {
+            let next = p.next(e, m, 10_000, None);
+            assert!(next >= m);
+            m = next;
+        }
+        assert_eq!(m, 1024);
+    }
+}

@@ -1,0 +1,113 @@
+//! Learning-rate schedules + the Goyal batch-size rescaling rule.
+//!
+//! The paper composes two multiplicative factors on top of the base lr:
+//!
+//! * **step decay**: x`decay` every `every` epochs (synthetic: 0.75/20,
+//!   matching Devarakonda et al.'s schedule);
+//! * **linear batch rescaling** (Goyal et al. 2017): when the batch grows
+//!   from `m0` to `m_k`, scale lr by `m_k / m0` so the *effective* lr
+//!   (eta/m) stays constant.  The paper runs each adaptive method with and
+//!   without this rescaling (main text = without; appendix E = with).
+
+/// Learning-rate schedule configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LrSchedule {
+    /// Base learning rate (the small-batch-tuned eta^sgd).
+    pub base: f64,
+    /// Multiplicative step decay factor (1.0 disables).
+    pub decay: f64,
+    /// Epoch period of the step decay (0 disables).
+    pub every: usize,
+    /// Goyal linear rescaling with batch size on/off.
+    pub rescale_with_batch: bool,
+}
+
+impl LrSchedule {
+    /// Paper synthetic-experiment schedule: decay 0.75 every 20 epochs.
+    pub fn step_075_20(base: f64, rescale: bool) -> LrSchedule {
+        LrSchedule {
+            base,
+            decay: 0.75,
+            every: 20,
+            rescale_with_batch: rescale,
+        }
+    }
+
+    /// Constant lr (optionally rescaled with batch).
+    pub fn constant(base: f64, rescale: bool) -> LrSchedule {
+        LrSchedule {
+            base,
+            decay: 1.0,
+            every: 0,
+            rescale_with_batch: rescale,
+        }
+    }
+
+    /// Learning rate for `epoch` at batch size `m` (initial batch `m0`).
+    pub fn lr(&self, epoch: usize, m: usize, m0: usize) -> f64 {
+        let mut lr = self.base;
+        if self.every > 0 && self.decay != 1.0 {
+            lr *= self.decay.powi((epoch / self.every) as i32);
+        }
+        if self.rescale_with_batch {
+            lr *= m as f64 / m0 as f64;
+        }
+        lr
+    }
+
+    /// The effective learning rate eta/m that Goyal scaling holds fixed.
+    pub fn effective_lr(&self, epoch: usize, m: usize, m0: usize) -> f64 {
+        self.lr(epoch, m, m0) / m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_applies_at_boundaries() {
+        let s = LrSchedule::step_075_20(16.0, false);
+        assert_eq!(s.lr(0, 128, 128), 16.0);
+        assert_eq!(s.lr(19, 128, 128), 16.0);
+        assert!((s.lr(20, 128, 128) - 12.0).abs() < 1e-12);
+        assert!((s.lr(40, 128, 128) - 9.0).abs() < 1e-12);
+        assert!((s.lr(60, 128, 128) - 6.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescaling_preserves_effective_lr() {
+        let s = LrSchedule::step_075_20(16.0, true);
+        // Same epoch, batch grows 128 -> 4096: eta/m constant.
+        let e0 = s.effective_lr(5, 128, 128);
+        let e1 = s.effective_lr(5, 4096, 128);
+        assert!((e0 - e1).abs() < 1e-15);
+        // Paper appendix C convex: lr 16 at m 128 -> lr 512 at m 4096.
+        assert!((s.lr(0, 4096, 128) - 512.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_rescaling_keeps_lr_constant_in_m() {
+        let s = LrSchedule::step_075_20(0.1, false);
+        assert_eq!(s.lr(0, 128, 128), s.lr(0, 2048, 128));
+        // Effective lr then shrinks as m grows (the main-text variant).
+        assert!(s.effective_lr(0, 2048, 128) < s.effective_lr(0, 128, 128));
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::constant(1.0, false);
+        assert_eq!(s.lr(999, 64, 64), 1.0);
+    }
+
+    #[test]
+    fn decay_disabled_when_every_zero() {
+        let s = LrSchedule {
+            base: 2.0,
+            decay: 0.5,
+            every: 0,
+            rescale_with_batch: false,
+        };
+        assert_eq!(s.lr(100, 32, 32), 2.0);
+    }
+}

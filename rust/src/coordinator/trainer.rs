@@ -1,0 +1,411 @@
+//! The training coordinator: DiveBatch's Algorithm 1 as a Rust event loop
+//! over AOT-compiled PJRT executables.
+//!
+//! Per epoch `k` (batch size `m_k` from the policy):
+//!
+//! 1. shuffle the training set; iterate `ceil(n/m_k)` logical batches;
+//! 2. decompose each logical batch into compiled micro-batches
+//!    ([`MicroPlan`]), execute the train entry (diversity-instrumented iff
+//!    the policy needs it), and accumulate the sample-sum outputs;
+//! 3. apply one optimizer update per logical batch
+//!    (`theta -= eta_k/m_k * sum_grad`, + momentum/wd for image runs);
+//! 4. push `(grad_sum, sqnorm_sum)` into the epoch's [`DiversityAccum`];
+//! 5. at the epoch boundary: evaluate on the validation set, optionally
+//!    recompute the exact diversity (Oracle), ask the policy for
+//!    `m_{k+1}`, and apply the LR schedule (incl. Goyal rescaling).
+//!
+//! Python never runs here: every numeric kernel is a compiled artifact.
+
+use anyhow::{bail, Result};
+
+use super::diversity::DiversityAccum;
+use super::optimizer::{AdamOptimizer, Optim, SgdOptimizer};
+use super::plan::MicroPlan;
+use super::policy::{DiversityNeed, DiversityStats, Policy};
+use super::schedule::LrSchedule;
+use super::sgld::SgldConfig;
+use crate::cluster::ClusterModel;
+use crate::data::{Batch, Dataset, EpochBatches};
+use crate::metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::timer::{Profiler, Timer};
+
+/// Full configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest model name (e.g. "logreg512").
+    pub model: String,
+    pub policy: Policy,
+    pub schedule: LrSchedule,
+    pub epochs: usize,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    /// Global-norm gradient clipping (image runs; see optimizer.rs).
+    pub clip_norm: Option<f64>,
+    /// Trial seed: selects init params file and the shuffling stream.
+    pub seed: u64,
+    /// Cap on instrumented micro-batch size (None = whole ladder).
+    pub max_micro: Option<usize>,
+    /// Use the fused on-device `update` executable instead of the Rust
+    /// optimizer (P2 ablation; semantics are identical).  SGD only.
+    pub device_update: bool,
+    /// Use Adam instead of SGD (paper §6: "DiveBatch could complement
+    /// these optimizers").  lr/schedule semantics unchanged.
+    pub use_adam: bool,
+    /// SGLD-style diversity boosting (paper §6 + Yin et al. §5): inject
+    /// per-sample gradient noise of std sigma into the updates and apply
+    /// the closed-form diversity adjustment (see coordinator/sgld.rs).
+    pub sgld: SgldConfig,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn new(model: &str, policy: Policy, schedule: LrSchedule, epochs: usize) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            policy,
+            schedule,
+            epochs,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            clip_norm: None,
+            seed: 0,
+            max_micro: None,
+            device_update: false,
+            use_adam: false,
+            sgld: SgldConfig::disabled(),
+            verbose: false,
+        }
+    }
+}
+
+/// Outcome of a run: the record plus profiling counters.
+pub struct TrainOutcome {
+    pub record: RunRecord,
+    pub profile: Profiler,
+    /// Final parameters (for checkpoint-style chaining).
+    pub params: Vec<f32>,
+}
+
+/// Orchestrates one training run over a [`Runtime`].
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    cfg: TrainConfig,
+    cluster: ClusterModel,
+    train: Dataset,
+    val: Dataset,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: TrainConfig,
+        train: Dataset,
+        val: Dataset,
+        cluster: ClusterModel,
+    ) -> Result<Trainer<'rt>> {
+        let info = rt.model(&cfg.model)?;
+        if train.feat_len() != info.feat_len() {
+            bail!(
+                "dataset feature length {} != model {} ({})",
+                train.feat_len(),
+                cfg.model,
+                info.feat_len()
+            );
+        }
+        if train.y.dtype() != if info.label_dtype == crate::runtime::Dtype::S32 { "s32" } else { "f32" } {
+            bail!(
+                "dataset label dtype {} incompatible with model {}",
+                train.y.dtype(),
+                cfg.model
+            );
+        }
+        Ok(Trainer {
+            rt,
+            cfg,
+            cluster,
+            train,
+            val,
+        })
+    }
+
+    /// Execute the run.
+    pub fn run(&self) -> Result<TrainOutcome> {
+        let cfg = &self.cfg;
+        let info = self.rt.model(&cfg.model)?.clone();
+        let n = self.train.n();
+        let need = cfg.policy.diversity_need();
+        // Only DiveBatch instruments its actual training steps; Oracle
+        // trains plain and pays a separate exact pass at the boundary.
+        let instrumented = need == DiversityNeed::Estimated;
+
+        if cfg.device_update && cfg.use_adam {
+            bail!("device_update supports the SGD path only");
+        }
+        let mut params = self.rt.manifest.load_init_params(&cfg.model, cfg.seed as usize)?;
+        let mut opt = if cfg.use_adam {
+            Optim::Adam(AdamOptimizer::new(info.param_count, cfg.weight_decay))
+        } else {
+            let mut sgd = SgdOptimizer::new(info.param_count, cfg.momentum, cfg.weight_decay);
+            sgd.clip_norm = cfg.clip_norm;
+            Optim::Sgd(sgd)
+        };
+        let mut shuffle_rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xD117E);
+        let mut sgld_rng = shuffle_rng.fork(0x56_1D);
+
+        let mem_model = MemoryModel::for_model(
+            info.param_count,
+            info.feat_len(),
+            info.input_shape.len(),
+            info.chunk,
+        );
+        let mem_mode = if instrumented {
+            MemMode::DivChunked
+        } else {
+            MemMode::Plain
+        };
+
+        let mut record = RunRecord::new(
+            &cfg.policy.label(),
+            &cfg.model,
+            cfg.policy.kind(),
+            &self.train.name,
+            cfg.seed,
+        );
+        let mut profile = Profiler::new();
+
+        let m0 = cfg.policy.initial();
+        let mut m_k = m0;
+        let mut cum_wall = 0.0;
+        let mut cum_sim = 0.0;
+
+        // Reusable buffers (no allocation inside the epoch loop — §Perf).
+        let mut batch_buf = Batch::empty();
+        let mut grad_accum = vec![0.0f32; info.param_count];
+        // Per-run executable handles: the runtime cache is keyed by a
+        // formatted string (alloc + hash per lookup); the ladder has <= 4
+        // rungs, so a linear-scan Vec of Rc handles makes the per-block
+        // lookup free (§Perf L3 iteration 1).
+        let mut exec_handles: Vec<(usize, std::rc::Rc<crate::runtime::Executable>)> = Vec::new();
+
+        for epoch in 0..cfg.epochs {
+            let epoch_timer = Timer::start();
+            let lr = cfg.schedule.lr(epoch, m_k, m0);
+            let mut diversity = DiversityAccum::new(info.param_count);
+            let mut train_loss_sum = 0.0;
+            let mut train_correct = 0.0;
+            let mut steps = 0usize;
+
+            let batches = EpochBatches::new(n, m_k, &mut shuffle_rng);
+            for indices in batches {
+                let logical = indices.len();
+                let plan = MicroPlan::build(logical, &info.ladder, cfg.max_micro);
+                grad_accum.iter_mut().for_each(|g| *g = 0.0);
+                let mut offset = 0usize;
+                for block in &plan.blocks {
+                    let idx = &indices[offset..offset + block.take];
+                    offset += block.take;
+                    {
+                        let _g = profile.section("gather");
+                        self.train.gather_into(idx, block.micro, &mut batch_buf);
+                    }
+                    let exec = match exec_handles.iter().find(|(m, _)| *m == block.micro) {
+                        Some((_, e)) => e.clone(),
+                        None => {
+                            let _g = profile.section("compile");
+                            let e = self.rt.train_exec(&cfg.model, instrumented, block.micro)?;
+                            exec_handles.push((block.micro, e.clone()));
+                            e
+                        }
+                    };
+                    let out = {
+                        let _g = profile.section("execute");
+                        exec.run_train(&params, &batch_buf)?
+                    };
+                    {
+                        let _g = profile.section("accumulate");
+                        for (a, g) in grad_accum.iter_mut().zip(&out.grad_sum) {
+                            *a += g;
+                        }
+                        train_loss_sum += out.loss_sum;
+                        train_correct += out.correct;
+                        if need == DiversityNeed::Estimated {
+                            diversity.push(&out.grad_sum, out.sqnorm_sum, block.take);
+                        }
+                    }
+                }
+                debug_assert_eq!(offset, logical);
+                // SGLD: inject per-sample-equivalent noise into the sum
+                // gradient (diversity stats are adjusted analytically at
+                // the epoch boundary; see coordinator/sgld.rs).
+                if cfg.sgld.enabled() {
+                    cfg.sgld.perturb_grad_sum(&mut grad_accum, logical, &mut sgld_rng);
+                }
+                // Optimizer update: theta <- theta - lr/m * sum_grad (+mu/wd).
+                {
+                    let _g = profile.section("update");
+                    if cfg.device_update {
+                        let sgd = opt.as_sgd_mut().expect("checked above");
+                        let upd = self.rt.update_exec(&cfg.model)?;
+                        // Clipping folds into the inv_m scalar, so the
+                        // device path shares exact semantics with step().
+                        let inv_m = sgd.effective_inv_m(&grad_accum, logical);
+                        let (new_p, new_v) = upd.run_update(
+                            &params,
+                            sgd.velocity(),
+                            &grad_accum,
+                            lr as f32,
+                            cfg.momentum as f32,
+                            cfg.weight_decay as f32,
+                            inv_m,
+                        )?;
+                        params = new_p;
+                        sgd.set_velocity(new_v);
+                    } else {
+                        opt.step(&mut params, &grad_accum, lr, logical);
+                    }
+                }
+                steps += 1;
+                cum_sim += self.cluster.step_time(logical, instrumented);
+            }
+
+            // Epoch boundary: diversity statistics for the policy.
+            let (stats, delta_hat, n_delta, exact_delta) = match need {
+                DiversityNeed::None => (None, None, None, None),
+                DiversityNeed::Estimated => {
+                    let s = cfg
+                        .sgld
+                        .adjust_stats(diversity.stats(), diversity.samples(), info.param_count);
+                    (
+                        Some(s),
+                        Some(s.delta_hat()),
+                        Some(diversity.samples() as f64 * s.delta_hat()),
+                        None,
+                    )
+                }
+                DiversityNeed::Exact => {
+                    let _g = profile.section("oracle");
+                    let s = self.exact_diversity(&params, &info, &mut batch_buf)?;
+                    // Oracle pays a full instrumented pass over the data.
+                    cum_sim += self.cluster.epoch_time(n, info.max_micro(), true);
+                    (
+                        Some(s),
+                        None,
+                        None,
+                        Some(s.delta_hat()),
+                    )
+                }
+            };
+
+            // Validation.
+            let (val_loss, val_acc) = {
+                let _g = profile.section("eval");
+                self.evaluate(&params, &info, &mut batch_buf)?
+            };
+
+            let wall = epoch_timer.seconds();
+            cum_wall += wall;
+            let sim_epoch = self.cluster.epoch_time(n, m_k, instrumented);
+            record.epochs.push(EpochRecord {
+                epoch,
+                batch_size: m_k,
+                lr,
+                steps,
+                train_loss: train_loss_sum / n as f64,
+                train_acc: 100.0 * train_correct / n as f64,
+                val_loss,
+                val_acc,
+                delta_hat,
+                n_delta,
+                exact_delta,
+                wall_s: wall,
+                sim_s: sim_epoch,
+                cum_wall_s: cum_wall,
+                cum_sim_s: cum_sim,
+                mem_mb: mem_model.step_mb(m_k, mem_mode),
+            });
+            if cfg.verbose {
+                eprintln!(
+                    "[{}] epoch {epoch:>3}  m={m_k:<5} lr={lr:<8.4} train_loss={:.4} val_acc={val_acc:.2}%{}",
+                    cfg.policy.kind(),
+                    train_loss_sum / n as f64,
+                    delta_hat
+                        .or(exact_delta)
+                        .map(|d| format!(" delta={d:.3e}"))
+                        .unwrap_or_default(),
+                );
+            }
+
+            // Next epoch's batch size (Algorithm 1 line 11 for DiveBatch).
+            m_k = cfg.policy.next(epoch, m_k, n, stats);
+        }
+
+        Ok(TrainOutcome {
+            record,
+            profile,
+            params,
+        })
+    }
+
+    /// Mean val loss + accuracy % over the validation set.
+    fn evaluate(
+        &self,
+        params: &[f32],
+        info: &crate::runtime::ModelInfo,
+        buf: &mut Batch,
+    ) -> Result<(f64, f64)> {
+        let n = self.val.n();
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        for indices in EpochBatches::sequential(n, info.max_micro()) {
+            let plan = MicroPlan::build(indices.len(), &info.ladder, None);
+            let mut offset = 0;
+            for block in &plan.blocks {
+                let idx = &indices[offset..offset + block.take];
+                offset += block.take;
+                self.val.gather_into(idx, block.micro, buf);
+                let exec = self.rt.eval_exec(&self.cfg.model, block.micro)?;
+                let out = exec.run_eval(params, buf)?;
+                loss += out.loss_sum;
+                correct += out.correct;
+            }
+        }
+        Ok((loss / n as f64, 100.0 * correct / n as f64))
+    }
+
+    /// Exact Definition-1 gradient diversity over the FULL training set at
+    /// fixed `params` (Oracle policy) — streams instrumented micro-batches
+    /// without applying updates.
+    fn exact_diversity(
+        &self,
+        params: &[f32],
+        info: &crate::runtime::ModelInfo,
+        buf: &mut Batch,
+    ) -> Result<DiversityStats> {
+        let n = self.train.n();
+        let mut acc = DiversityAccum::new(info.param_count);
+        for indices in EpochBatches::sequential(n, info.max_micro()) {
+            let plan = MicroPlan::build(indices.len(), &info.ladder, self.cfg.max_micro);
+            let mut offset = 0;
+            for block in &plan.blocks {
+                let idx = &indices[offset..offset + block.take];
+                offset += block.take;
+                self.train.gather_into(idx, block.micro, buf);
+                let exec = self.rt.train_exec(&self.cfg.model, true, block.micro)?;
+                let out = exec.run_train(params, buf)?;
+                acc.push(&out.grad_sum, out.sqnorm_sum, block.take);
+            }
+        }
+        Ok(acc.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer requires a Runtime with compiled artifacts; end-to-end
+    // behaviour (loss decreases, policies adapt, oracle matches estimate
+    // on quadratic-like problems) is covered by
+    // rust/tests/integration_trainer.rs over the tiny artifacts.
+}

@@ -1,0 +1,343 @@
+//! In-memory dataset container + seeded epoch batching.
+//!
+//! All experiment datasets (synthetic Eq. 3 and the procedural image sets)
+//! are materialized up front as contiguous row-major f32 feature buffers;
+//! the trainer consumes shuffled index batches per epoch and gathers them
+//! into padded micro-batch buffers (`w = 0` padding rows — the executables
+//! treat them as exact no-ops, see python/compile/model.py).
+
+use crate::util::rng::Rng;
+
+/// Labels are either float {0,1} (binary models) or int class ids.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Labels {
+    Float(Vec<f32>),
+    Int(Vec<i32>),
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Float(v) => v.len(),
+            Labels::Int(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Labels::Float(_) => "f32",
+            Labels::Int(_) => "s32",
+        }
+    }
+}
+
+/// A gathered, padded micro-batch ready for upload.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Row-major features, `pad_to * feat_len` elements.
+    pub x: Vec<f32>,
+    /// Labels in each dtype view (only the matching one is populated).
+    pub y_f32: Vec<f32>,
+    pub y_i32: Vec<i32>,
+    /// Per-sample weights: 1.0 for real rows, 0.0 for padding.
+    pub w: Vec<f32>,
+    /// Number of REAL samples (<= pad_to).
+    pub real: usize,
+    /// Padded row count (the executable's static batch dimension).
+    pub pad_to: usize,
+}
+
+/// An in-memory supervised dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `[n, feat...]`.
+    pub x: Vec<f32>,
+    pub y: Labels,
+    /// Per-sample feature shape (e.g. `[512]` or `[16, 16, 3]`).
+    pub feat_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.feat_shape.iter().product()
+    }
+
+    /// Split into (train, val) with the given train fraction, preserving
+    /// order (callers shuffle first if needed; generators emit i.i.d. rows).
+    pub fn split(&self, train_frac: f64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let n_train = ((self.n() as f64) * train_frac).round() as usize;
+        (self.slice(0, n_train), self.slice(n_train, self.n()))
+    }
+
+    /// Rows `[lo, hi)` as a new dataset.
+    pub fn slice(&self, lo: usize, hi: usize) -> Dataset {
+        assert!(lo <= hi && hi <= self.n());
+        let f = self.feat_len();
+        let y = match &self.y {
+            Labels::Float(v) => Labels::Float(v[lo..hi].to_vec()),
+            Labels::Int(v) => Labels::Int(v[lo..hi].to_vec()),
+        };
+        Dataset {
+            x: self.x[lo * f..hi * f].to_vec(),
+            y,
+            feat_shape: self.feat_shape.clone(),
+            num_classes: self.num_classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Gather `indices` into a batch padded to `pad_to` rows.
+    ///
+    /// Padding rows repeat row 0's features (arbitrary — masked by w=0)
+    /// and carry label 0; only `w` distinguishes them.
+    pub fn gather(&self, indices: &[u32], pad_to: usize) -> Batch {
+        assert!(indices.len() <= pad_to, "{} > {}", indices.len(), pad_to);
+        let f = self.feat_len();
+        let mut x = Vec::with_capacity(pad_to * f);
+        let mut y_f32 = Vec::new();
+        let mut y_i32 = Vec::new();
+        let mut w = Vec::with_capacity(pad_to);
+        for &i in indices {
+            let i = i as usize;
+            x.extend_from_slice(&self.x[i * f..(i + 1) * f]);
+            w.push(1.0);
+        }
+        for _ in indices.len()..pad_to {
+            x.extend_from_slice(&self.x[0..f]);
+            w.push(0.0);
+        }
+        match &self.y {
+            Labels::Float(v) => {
+                y_f32.reserve(pad_to);
+                for &i in indices {
+                    y_f32.push(v[i as usize]);
+                }
+                y_f32.resize(pad_to, 0.0);
+            }
+            Labels::Int(v) => {
+                y_i32.reserve(pad_to);
+                for &i in indices {
+                    y_i32.push(v[i as usize]);
+                }
+                y_i32.resize(pad_to, 0);
+            }
+        }
+        Batch {
+            x,
+            y_f32,
+            y_i32,
+            w,
+            real: indices.len(),
+            pad_to,
+        }
+    }
+
+    /// Gather into caller-provided buffers (zero-allocation hot path;
+    /// see §Perf).  Buffers are resized to the padded extent.
+    pub fn gather_into(&self, indices: &[u32], pad_to: usize, out: &mut Batch) {
+        assert!(indices.len() <= pad_to);
+        let f = self.feat_len();
+        out.x.clear();
+        out.x.reserve(pad_to * f);
+        out.w.clear();
+        out.w.reserve(pad_to);
+        out.y_f32.clear();
+        out.y_i32.clear();
+        for &i in indices {
+            let i = i as usize;
+            out.x.extend_from_slice(&self.x[i * f..(i + 1) * f]);
+            out.w.push(1.0);
+        }
+        for _ in indices.len()..pad_to {
+            out.x.extend_from_slice(&self.x[0..f]);
+            out.w.push(0.0);
+        }
+        match &self.y {
+            Labels::Float(v) => {
+                for &i in indices {
+                    out.y_f32.push(v[i as usize]);
+                }
+                out.y_f32.resize(pad_to, 0.0);
+            }
+            Labels::Int(v) => {
+                for &i in indices {
+                    out.y_i32.push(v[i as usize]);
+                }
+                out.y_i32.resize(pad_to, 0);
+            }
+        }
+        out.real = indices.len();
+        out.pad_to = pad_to;
+    }
+}
+
+impl Batch {
+    pub fn empty() -> Batch {
+        Batch {
+            x: Vec::new(),
+            y_f32: Vec::new(),
+            y_i32: Vec::new(),
+            w: Vec::new(),
+            real: 0,
+            pad_to: 0,
+        }
+    }
+}
+
+/// One epoch's shuffled batching: yields index slices of size `m`
+/// (last batch partial — `ceil(n/m)` batches, matching the paper's
+/// epoch definition in section 2.1).
+pub struct EpochBatches {
+    perm: Vec<u32>,
+    m: usize,
+    pos: usize,
+}
+
+impl EpochBatches {
+    pub fn new(n: usize, m: usize, rng: &mut Rng) -> Self {
+        assert!(m > 0 && n > 0);
+        EpochBatches {
+            perm: rng.permutation(n),
+            m,
+            pos: 0,
+        }
+    }
+
+    /// Sequential (unshuffled) pass — used by Oracle full-dataset scans
+    /// and validation.
+    pub fn sequential(n: usize, m: usize) -> Self {
+        assert!(m > 0 && n > 0);
+        EpochBatches {
+            perm: (0..n as u32).collect(),
+            m,
+            pos: 0,
+        }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.perm.len().div_ceil(self.m)
+    }
+}
+
+impl Iterator for EpochBatches {
+    type Item = Vec<u32>;
+
+    fn next(&mut self) -> Option<Vec<u32>> {
+        if self.pos >= self.perm.len() {
+            return None;
+        }
+        let end = (self.pos + self.m).min(self.perm.len());
+        let out = self.perm[self.pos..end].to_vec();
+        self.pos = end;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        Dataset {
+            x: (0..n * 3).map(|i| i as f32).collect(),
+            y: Labels::Float((0..n).map(|i| (i % 2) as f32).collect()),
+            feat_shape: vec![3],
+            num_classes: 2,
+            name: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let d = toy(10);
+        let (tr, va) = d.split(0.8);
+        assert_eq!(tr.n(), 8);
+        assert_eq!(va.n(), 2);
+        assert_eq!(va.x[0], 24.0); // row 8 starts at 8*3
+        assert_eq!(tr.feat_len(), 3);
+    }
+
+    #[test]
+    fn gather_pads_with_zero_weights() {
+        let d = toy(5);
+        let b = d.gather(&[4, 1], 4);
+        assert_eq!(b.real, 2);
+        assert_eq!(b.pad_to, 4);
+        assert_eq!(b.w, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&b.x[0..3], &[12.0, 13.0, 14.0]); // row 4
+        assert_eq!(&b.x[3..6], &[3.0, 4.0, 5.0]); // row 1
+        assert_eq!(b.y_f32, vec![0.0, 1.0, 0.0, 0.0]);
+        assert!(b.y_i32.is_empty());
+    }
+
+    #[test]
+    fn gather_into_matches_gather() {
+        let d = toy(6);
+        let idx = [0u32, 5, 3];
+        let a = d.gather(&idx, 4);
+        let mut b = Batch::empty();
+        d.gather_into(&idx, 4, &mut b);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.y_f32, b.y_f32);
+        assert_eq!(a.real, b.real);
+    }
+
+    #[test]
+    fn int_labels_gather() {
+        let d = Dataset {
+            x: vec![0.0; 12],
+            y: Labels::Int(vec![7, 8, 9, 10]),
+            feat_shape: vec![3],
+            num_classes: 11,
+            name: "i".into(),
+        };
+        let b = d.gather(&[2], 2);
+        assert_eq!(b.y_i32, vec![9, 0]);
+        assert!(b.y_f32.is_empty());
+        assert_eq!(d.y.dtype(), "s32");
+    }
+
+    #[test]
+    fn epoch_batches_cover_everything_once() {
+        let mut rng = Rng::new(0);
+        let batches: Vec<_> = EpochBatches::new(103, 16, &mut rng).collect();
+        assert_eq!(batches.len(), 7); // ceil(103/16)
+        assert_eq!(batches.last().unwrap().len(), 103 - 6 * 16);
+        let mut seen = vec![false; 103];
+        for b in &batches {
+            for &i in b {
+                assert!(!seen[i as usize], "duplicate {i}");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn epoch_batches_shuffled_differs_from_sequential() {
+        let mut rng = Rng::new(1);
+        let shuffled: Vec<u32> = EpochBatches::new(50, 50, &mut rng).next().unwrap();
+        let seq: Vec<u32> = EpochBatches::sequential(50, 50).next().unwrap();
+        assert_ne!(shuffled, seq);
+        assert_eq!(seq, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn num_batches_matches_ceil() {
+        let mut rng = Rng::new(2);
+        assert_eq!(EpochBatches::new(100, 32, &mut rng).num_batches(), 4);
+        assert_eq!(EpochBatches::new(96, 32, &mut rng).num_batches(), 3);
+    }
+}

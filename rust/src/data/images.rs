@@ -1,0 +1,308 @@
+//! Procedural class-conditional image datasets (CIFAR-like substitutes).
+//!
+//! The paper evaluates on CIFAR-10 / CIFAR-100 / Tiny-ImageNet, which are
+//! not downloadable in this environment (DESIGN.md §3).  This generator
+//! produces deterministic image datasets that exercise the identical code
+//! path (NHWC image tensors -> residual CNN -> softmax CE -> per-sample
+//! gradient statistics) with the structural properties that matter for
+//! gradient-diversity dynamics:
+//!
+//! * each class has a distinct **template** (low-frequency random field +
+//!   class-coded sinusoid), so inter-class gradients are diverse;
+//! * each sample is a randomly shifted, jittered, noised variant of its
+//!   class template, so intra-class gradients correlate but do not
+//!   collapse — accuracy is learnable-but-not-trivial, like the originals;
+//! * class-count / samples-per-class ratios mirror the real datasets
+//!   (10 x many, 100 x fewer, 200 x fewest) via the presets below.
+
+use super::dataset::{Dataset, Labels};
+use crate::util::rng::Rng;
+
+/// Configuration for the procedural image generator.
+#[derive(Clone, Debug)]
+pub struct ImageSpec {
+    pub num_classes: usize,
+    /// Samples per class (train + val are drawn together; split later).
+    pub per_class: usize,
+    /// Square image side (matches the resnet_tiny input).
+    pub size: usize,
+    /// Pixel noise std-dev added per sample.
+    pub noise: f64,
+    /// Max circular shift (pixels) applied per sample.
+    pub max_shift: usize,
+    pub seed: u64,
+}
+
+impl ImageSpec {
+    /// CIFAR-10 analogue: few classes, many samples each.
+    pub fn cifar10_like(per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            num_classes: 10,
+            per_class,
+            size: 16,
+            noise: 0.45,
+            max_shift: 2,
+            seed,
+        }
+    }
+
+    /// CIFAR-100 analogue: 10x the classes, ~1/10 the samples per class.
+    pub fn cifar100_like(per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            num_classes: 100,
+            per_class,
+            size: 16,
+            noise: 0.45,
+            max_shift: 2,
+            seed,
+        }
+    }
+
+    /// Tiny-ImageNet analogue: 200 classes.
+    pub fn tiny_imagenet_like(per_class: usize, seed: u64) -> Self {
+        ImageSpec {
+            num_classes: 200,
+            per_class,
+            size: 16,
+            noise: 0.45,
+            max_shift: 2,
+            seed,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.num_classes * self.per_class
+    }
+}
+
+const CHANNELS: usize = 3;
+const COARSE: usize = 4;
+
+/// Build one class template: bilinear-upsampled coarse noise field plus a
+/// class-coded sinusoid (distinct frequency/phase per class).
+fn class_template(spec: &ImageSpec, class: usize, rng: &mut Rng) -> Vec<f32> {
+    let s = spec.size;
+    let mut coarse = [[[0.0f64; COARSE]; COARSE]; CHANNELS];
+    for ch in coarse.iter_mut() {
+        for row in ch.iter_mut() {
+            for v in row.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+    }
+    // Class-coded sinusoid parameters.
+    let fx = 1.0 + rng.uniform(0.0, 3.0);
+    let fy = 1.0 + rng.uniform(0.0, 3.0);
+    let phase = rng.uniform(0.0, std::f64::consts::TAU);
+    let amp = 0.8;
+    let _ = class;
+
+    let mut out = vec![0.0f32; s * s * CHANNELS];
+    let scale = (COARSE - 1) as f64 / (s - 1).max(1) as f64;
+    for i in 0..s {
+        for j in 0..s {
+            // Bilinear sample of the coarse grid.
+            let fi = i as f64 * scale;
+            let fj = j as f64 * scale;
+            let (i0, j0) = (fi.floor() as usize, fj.floor() as usize);
+            let (i1, j1) = ((i0 + 1).min(COARSE - 1), (j0 + 1).min(COARSE - 1));
+            let (di, dj) = (fi - i0 as f64, fj - j0 as f64);
+            let wave = amp
+                * ((std::f64::consts::TAU * (fx * i as f64 + fy * j as f64) / s as f64) + phase)
+                    .sin();
+            for c in 0..CHANNELS {
+                let g = &coarse[c];
+                let v = g[i0][j0] * (1.0 - di) * (1.0 - dj)
+                    + g[i1][j0] * di * (1.0 - dj)
+                    + g[i0][j1] * (1.0 - di) * dj
+                    + g[i1][j1] * di * dj;
+                out[(i * s + j) * CHANNELS + c] = (v + wave) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Generate the dataset.  Classes are interleaved (sample k has label
+/// `k % num_classes`) so any contiguous split is class-balanced.
+pub fn generate(spec: &ImageSpec) -> Dataset {
+    assert!(spec.size >= 4, "image too small");
+    let mut root = Rng::new(spec.seed);
+    let templates: Vec<Vec<f32>> = (0..spec.num_classes)
+        .map(|c| {
+            let mut trng = root.fork(1000 + c as u64);
+            class_template(spec, c, &mut trng)
+        })
+        .collect();
+
+    let s = spec.size;
+    let pix = s * s * CHANNELS;
+    let n = spec.n();
+    let mut x = vec![0.0f32; n * pix];
+    let mut y = vec![0i32; n];
+    let mut srng = root.fork(2);
+    for k in 0..n {
+        let class = k % spec.num_classes;
+        y[k] = class as i32;
+        let t = &templates[class];
+        // Per-sample circular shift + contrast jitter + pixel noise.
+        let shift = spec.max_shift as i64;
+        let (di, dj) = if shift > 0 {
+            (
+                srng.range(-shift, shift + 1),
+                srng.range(-shift, shift + 1),
+            )
+        } else {
+            (0, 0)
+        };
+        let contrast = srng.normal_ms(1.0, 0.1);
+        let out = &mut x[k * pix..(k + 1) * pix];
+        for i in 0..s {
+            for j in 0..s {
+                let si = (i as i64 + di).rem_euclid(s as i64) as usize;
+                let sj = (j as i64 + dj).rem_euclid(s as i64) as usize;
+                for c in 0..CHANNELS {
+                    let v = t[(si * s + sj) * CHANNELS + c] as f64 * contrast
+                        + srng.normal_ms(0.0, spec.noise);
+                    out[(i * s + j) * CHANNELS + c] = v as f32;
+                }
+            }
+        }
+    }
+    Dataset {
+        x,
+        y: Labels::Int(y),
+        feat_shape: vec![s, s, CHANNELS],
+        num_classes: spec.num_classes,
+        name: format!(
+            "images-c{}-pc{}-s{}-seed{}",
+            spec.num_classes, spec.per_class, s, spec.seed
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> ImageSpec {
+        ImageSpec {
+            num_classes: 4,
+            per_class: 8,
+            size: 8,
+            noise: 0.3,
+            max_shift: 1,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let d = generate(&small_spec());
+        assert_eq!(d.n(), 32);
+        assert_eq!(d.feat_shape, vec![8, 8, 3]);
+        assert_eq!(d.feat_len(), 192);
+        match &d.y {
+            Labels::Int(y) => {
+                assert!(y.iter().all(|&v| (0..4).contains(&v)));
+                // Interleaved: first 4 labels are 0, 1, 2, 3.
+                assert_eq!(&y[0..4], &[0, 1, 2, 3]);
+            }
+            _ => panic!("expected int labels"),
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&small_spec());
+        let b = generate(&small_spec());
+        assert_eq!(a.x, b.x);
+        let c = generate(&ImageSpec {
+            seed: 1,
+            ..small_spec()
+        });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        // Same-class samples must be closer (L2) than cross-class ones on
+        // average — the learnability property.
+        let spec = ImageSpec {
+            num_classes: 3,
+            per_class: 10,
+            size: 8,
+            noise: 0.3,
+            max_shift: 0,
+            seed: 2,
+        };
+        let d = generate(&spec);
+        let f = d.feat_len();
+        let ys = match &d.y {
+            Labels::Int(y) => y.clone(),
+            _ => unreachable!(),
+        };
+        let dist = |a: usize, b: usize| -> f64 {
+            d.x[a * f..(a + 1) * f]
+                .iter()
+                .zip(&d.x[b * f..(b + 1) * f])
+                .map(|(p, q)| ((p - q) * (p - q)) as f64)
+                .sum()
+        };
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0, 0, 0.0, 0);
+        for a in 0..d.n() {
+            for b in (a + 1)..d.n() {
+                if ys[a] == ys[b] {
+                    same += dist(a, b);
+                    same_n += 1;
+                } else {
+                    diff += dist(a, b);
+                    diff_n += 1;
+                }
+            }
+        }
+        let (same, diff) = (same / same_n as f64, diff / diff_n as f64);
+        assert!(
+            diff > 1.3 * same,
+            "classes not separated: same {same}, diff {diff}"
+        );
+    }
+
+    #[test]
+    fn pixel_stats_are_normalized_scale() {
+        let d = generate(&small_spec());
+        let mean: f64 = d.x.iter().map(|&v| v as f64).sum::<f64>() / d.x.len() as f64;
+        let var: f64 =
+            d.x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / d.x.len() as f64;
+        assert!(mean.abs() < 0.5, "mean {mean}");
+        assert!((0.2..6.0).contains(&var), "var {var}");
+    }
+
+    #[test]
+    fn presets_have_paper_class_counts() {
+        assert_eq!(ImageSpec::cifar10_like(10, 0).num_classes, 10);
+        assert_eq!(ImageSpec::cifar100_like(10, 0).num_classes, 100);
+        assert_eq!(ImageSpec::tiny_imagenet_like(10, 0).num_classes, 200);
+    }
+
+    #[test]
+    fn zero_shift_samples_differ_only_by_noise() {
+        let spec = ImageSpec {
+            max_shift: 0,
+            noise: 0.01,
+            ..small_spec()
+        };
+        let d = generate(&spec);
+        let f = d.feat_len();
+        // Two samples of class 0 (rows 0 and num_classes) nearly equal.
+        let a = &d.x[0..f];
+        let b = &d.x[4 * f..5 * f];
+        let dist: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(p, q)| ((p - q) * (p - q)) as f64)
+            .sum::<f64>()
+            / f as f64;
+        assert!(dist < 0.2, "dist {dist}");
+    }
+}

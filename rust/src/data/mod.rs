@@ -1,0 +1,10 @@
+//! Data pipeline: dataset containers, seeded batching, and the two
+//! experiment dataset families (synthetic Eq. 3 + procedural images).
+
+pub mod dataset;
+pub mod images;
+pub mod synthetic;
+
+pub use dataset::{Batch, Dataset, EpochBatches, Labels};
+pub use images::ImageSpec;
+pub use synthetic::SyntheticSpec;

@@ -1,0 +1,48 @@
+//! # DiveBatch — gradient-diversity aware batch-size adaptation
+//!
+//! Production-shaped reproduction of *"DiveBatch: Accelerating Model
+//! Training Through Gradient-Diversity Aware Batch Size Adaptation"*
+//! (Chen, Wang & Sundaram, 2025) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: batch-size policies
+//!   (Fixed / AdaBatch / DiveBatch / Oracle), accumulation planning over a
+//!   compiled micro-batch ladder, optimizer, LR schedules, diversity
+//!   accumulation, data pipeline, simulated-cluster timing, metrics and
+//!   benches.  Owns the event loop; Python never runs here.
+//! * **L2 (python/compile, build time)** — JAX model fwd/bwd step
+//!   functions lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
+//!   per-sample gradient-statistics hot spot, lowered into the same
+//!   modules.
+//!
+//! Quickstart:
+//!
+//! ```bash
+//! make artifacts                     # AOT: python runs once, never again
+//! cargo run --release --example quickstart
+//! cargo run --release -- train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096
+//! cargo bench --bench fig1_synthetic
+//! ```
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use cluster::ClusterModel;
+pub use config::{presets, DatasetSpec, RunSpec};
+pub use coordinator::{
+    DiversityAccum, DiversityNeed, DiversityStats, LrSchedule, MicroPlan, Policy, SgdOptimizer,
+    TrainConfig, Trainer,
+};
+pub use data::{Batch, Dataset, EpochBatches, ImageSpec, Labels, SyntheticSpec};
+pub use metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};
+pub use runtime::{Manifest, ModelInfo, Runtime};

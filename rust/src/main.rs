@@ -1,0 +1,249 @@
+//! `divebatch` — the training launcher (L3 entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `list`                      — show manifest models + experiment presets
+//! * `train <model> [opts]`      — one training run with an explicit policy
+//! * `preset <id> [opts]`        — run a DESIGN.md §5 experiment preset
+//!
+//! Examples:
+//!
+//! ```bash
+//! divebatch list
+//! divebatch train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096 \
+//!     --dataset synthetic --epochs 40 --lr 16 --rescale-lr
+//! divebatch preset fig1-convex --scale quick --out runs/fig1
+//! ```
+
+use anyhow::{bail, Result};
+
+use divebatch::config::presets::{preset, preset_ids, Scale};
+use divebatch::config::{flops_per_sample, DatasetSpec, RunSpec};
+use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::data::{ImageSpec, SyntheticSpec};
+use divebatch::util::args::ArgSpec;
+use divebatch::util::plot::{render, Series};
+use divebatch::util::stats;
+use divebatch::util::table::{pm, Table};
+use divebatch::Runtime;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("list") => cmd_list(),
+        Some("train") => cmd_train(&args[1..]),
+        Some("preset") => cmd_preset(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!("{}", usage());
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "divebatch — gradient-diversity aware batch-size adaptation (paper repro)\n\n\
+     usage: divebatch <list|train|preset> [options]\n\n\
+     subcommands:\n  \
+     list                 show manifest models and experiment presets\n  \
+     train <model>        run one training configuration (see train --help)\n  \
+     preset <id>          run a paper experiment preset (see preset --help)\n"
+        .to_string()
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("platform: {}", rt.platform());
+    println!("\nmodels (artifacts/manifest.json):");
+    for (name, info) in &rt.manifest.models {
+        println!(
+            "  {name:<14} P={:<7} ladder={:?} labels={:?} classes={}",
+            info.param_count, info.ladder, info.label_dtype, info.num_classes
+        );
+    }
+    println!("\nexperiment presets (DESIGN.md §5):");
+    for id in preset_ids() {
+        let e = preset(id, Scale::quick()).unwrap();
+        println!("  {id:<16} {} ({} arms)", e.title, e.runs.len());
+    }
+    Ok(())
+}
+
+fn train_spec() -> ArgSpec {
+    ArgSpec::new("divebatch train", "run one training configuration")
+        .pos("model", "manifest model name (e.g. logreg512)")
+        .opt("policy", None, "sgd:m=.. | adabatch:m0=..,mmax=.. | divebatch:m0=..,delta=..,mmax=.. | oracle:..")
+        .opt("dataset", Some("synthetic"), "synthetic | cifar10 | cifar100 | tin")
+        .opt("n", Some("20000"), "synthetic dataset size")
+        .opt("per-class", Some("100"), "images per class (image datasets)")
+        .opt("epochs", Some("40"), "training epochs")
+        .opt("lr", Some("0.1"), "base learning rate")
+        .opt("decay", Some("0.75"), "lr step-decay factor")
+        .opt("decay-every", Some("20"), "lr step-decay period (epochs)")
+        .opt("momentum", Some("0"), "SGD momentum")
+        .opt("weight-decay", Some("0"), "L2 weight decay")
+        .opt("clip", Some("0"), "global-norm grad clipping (0 = off)")
+        .opt("max-micro", Some("0"), "cap planner micro-batch rung (0 = whole ladder)")
+        .opt("trials", Some("1"), "number of seeded trials")
+        .opt("out", Some(""), "write per-trial CSVs under this directory")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("sgld-sigma", Some("0"), "SGLD per-sample grad-noise std (0 = off; boosts diversity)")
+        .flag("adam", "use Adam instead of SGD (paper §6 extension)")
+        .flag("rescale-lr", "Goyal linear lr<->batch rescaling")
+        .flag("device-update", "use the fused on-device update executable")
+        .flag("quiet", "suppress per-epoch progress")
+}
+
+fn cmd_train(tokens: &[String]) -> Result<()> {
+    let a = match train_spec().parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let model = a.positional(0).to_string();
+    let policy = Policy::parse(a.str("policy")).map_err(|e| anyhow::anyhow!(e))?;
+    let schedule = LrSchedule {
+        base: a.f64("lr"),
+        decay: a.f64("decay"),
+        every: a.usize("decay-every"),
+        rescale_with_batch: a.flag("rescale-lr"),
+    };
+    let dataset = match a.str("dataset") {
+        "synthetic" => DatasetSpec::Synthetic(SyntheticSpec {
+            n: a.usize("n"),
+            d: 512,
+            noise: 0.1,
+            seed: 1000,
+        }),
+        "cifar10" => DatasetSpec::Images(ImageSpec::cifar10_like(a.usize("per-class"), 2000)),
+        "cifar100" => DatasetSpec::Images(ImageSpec::cifar100_like(a.usize("per-class"), 3000)),
+        "tin" => DatasetSpec::Images(ImageSpec::tiny_imagenet_like(a.usize("per-class"), 4000)),
+        other => bail!("unknown dataset {other:?}"),
+    };
+    let mut cfg = TrainConfig::new(&model, policy, schedule, a.usize("epochs"));
+    cfg.momentum = a.f64("momentum");
+    cfg.weight_decay = a.f64("weight-decay");
+    let clip = a.f64("clip");
+    cfg.clip_norm = if clip > 0.0 { Some(clip) } else { None };
+    let max_micro = a.usize("max-micro");
+    cfg.max_micro = if max_micro > 0 { Some(max_micro) } else { None };
+    cfg.use_adam = a.flag("adam");
+    cfg.sgld = divebatch::coordinator::SgldConfig {
+        sigma: a.f64("sgld-sigma"),
+    };
+    cfg.device_update = a.flag("device-update");
+    cfg.verbose = !a.flag("quiet");
+    let run = RunSpec {
+        flops_per_sample: flops_per_sample(&model),
+        cfg,
+        dataset,
+        trials: a.usize("trials"),
+    };
+
+    let rt = Runtime::load(a.str("artifacts"))?;
+    let records = run.run(&rt)?;
+    print_run_summary(&records);
+    let out = a.str("out");
+    if !out.is_empty() {
+        for (i, r) in records.iter().enumerate() {
+            let path = format!("{out}/{}_trial{i}.csv", r.policy_kind);
+            r.write_csv(&path)?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn preset_spec() -> ArgSpec {
+    ArgSpec::new("divebatch preset", "run a paper experiment preset")
+        .pos("id", "preset id (divebatch list)")
+        .opt("scale", Some("quick"), "quick | bench | paper")
+        .opt("out", Some(""), "write per-trial CSVs under this directory")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .flag("quiet", "suppress per-epoch progress")
+}
+
+fn cmd_preset(tokens: &[String]) -> Result<()> {
+    let a = match preset_spec().parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let scale = match a.str("scale") {
+        "quick" => Scale::quick(),
+        "bench" => Scale::bench(),
+        "paper" => Scale::paper(),
+        other => bail!("unknown scale {other:?}"),
+    };
+    let id = a.positional(0);
+    let Some(exp) = preset(id, scale) else {
+        bail!("unknown preset {id:?}; see `divebatch list`");
+    };
+    println!("== {} ==", exp.title);
+    let rt = Runtime::load(a.str("artifacts"))?;
+    let mut acc_series = Vec::new();
+    let mut all_records = Vec::new();
+    for mut run in exp.runs {
+        run.cfg.verbose = !a.flag("quiet");
+        let records = run.run(&rt)?;
+        let curve = stats::mean_curve(
+            &records.iter().map(|r| r.val_acc_curve()).collect::<Vec<_>>(),
+        );
+        acc_series.push(Series::new(&records[0].label, curve));
+        all_records.push(records);
+    }
+    for records in &all_records {
+        print_run_summary(records);
+        let out = a.str("out");
+        if !out.is_empty() {
+            for (i, r) in records.iter().enumerate() {
+                r.write_csv(format!("{out}/{}/{}_trial{i}.csv", exp.id, r.policy_kind))?;
+            }
+        }
+    }
+    println!(
+        "{}",
+        render("validation accuracy (mean over trials)", "epoch", &acc_series, 72, 16)
+    );
+    Ok(())
+}
+
+fn print_run_summary(records: &[divebatch::RunRecord]) {
+    if records.is_empty() {
+        return;
+    }
+    let mut t = Table::new(
+        &records[0].label,
+        &["metric", "25%", "50%", "75%", "100%", "time-to-±1% (sim s)", "end m"],
+    );
+    let at = |f: f64| -> Vec<f64> { records.iter().map(|r| r.val_acc_at_frac(f)).collect() };
+    let times: Vec<f64> = records
+        .iter()
+        .filter_map(|r| r.time_within_final(1.0, true))
+        .collect();
+    t.row(vec![
+        "val acc".into(),
+        pm(stats::mean(&at(0.25)), stats::stderr(&at(0.25))),
+        pm(stats::mean(&at(0.5)), stats::stderr(&at(0.5))),
+        pm(stats::mean(&at(0.75)), stats::stderr(&at(0.75))),
+        pm(stats::mean(&at(1.0)), stats::stderr(&at(1.0))),
+        if times.is_empty() {
+            "-".into()
+        } else {
+            format!("{:.2}", stats::mean(&times))
+        },
+        format!("{}", records[0].end_batch_size()),
+    ]);
+    println!("{}", t.render());
+}

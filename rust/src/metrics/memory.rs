@@ -1,0 +1,183 @@
+//! Analytic training-memory model (Table 2) + process RSS measurement.
+//!
+//! The paper's Table 2 compares peak GPU memory: per-sample gradient
+//! extraction (BackPACK) makes DiveBatch the most memory-hungry method.
+//! We model peak training memory analytically from the manifest's
+//! parameter layout and the model's activation profile, in three modes:
+//!
+//! * `Plain`        — fwd/bwd activations + params + grads + optimizer
+//! * `DivNaive`     — plus `m x P` materialized per-sample gradients
+//!                    (what BackPACK/the paper did — Table 2's regime)
+//! * `DivChunked`   — plus only `chunk x P` (this repo's L2 design)
+//!
+//! RSS deltas of the actual process are reported alongside (the CPU
+//! allocator and XLA arena make them noisier, but the ordering holds).
+
+/// Peak-memory estimation modes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemMode {
+    Plain,
+    DivNaive,
+    DivChunked,
+}
+
+/// Per-model activation/memory profile.
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    pub param_count: usize,
+    /// Input features per sample.
+    pub feat_len: usize,
+    /// Forward activation floats stored per sample for backward
+    /// (estimated from the architecture; see `for_model`).
+    pub act_per_sample: usize,
+    /// Chunk size of the chunked per-sample path.
+    pub chunk: usize,
+}
+
+impl MemoryModel {
+    /// Build from manifest facts.  Activation profile heuristics:
+    /// dense nets store roughly `feat + hidden` floats per sample (~2x
+    /// feat); conv nets store every feature map — for resnet_tiny that is
+    /// stem + 2 convs/block * blocks + transitions ~ 10 maps of up to
+    /// 16x16x16..32 = about 40 x feat_len.
+    pub fn for_model(
+        param_count: usize,
+        feat_len: usize,
+        input_rank: usize,
+        chunk: usize,
+    ) -> MemoryModel {
+        let act_per_sample = if input_rank >= 3 {
+            40 * feat_len // conv pyramid
+        } else {
+            2 * feat_len + 64 // dense: input + hidden
+        };
+        MemoryModel {
+            param_count,
+            feat_len,
+            act_per_sample,
+            chunk,
+        }
+    }
+
+    /// Peak bytes for one training step at logical batch `m`.
+    pub fn step_bytes(&self, m: usize, mode: MemMode) -> f64 {
+        let f = 4.0; // f32
+        let p = self.param_count as f64;
+        // params + grad accum + optimizer velocity + update scratch.
+        let fixed = 4.0 * p * f;
+        // batch tensors + stored activations for backward.
+        let batch = m as f64 * (self.feat_len as f64 + self.act_per_sample as f64) * f;
+        let persample = match mode {
+            MemMode::Plain => 0.0,
+            MemMode::DivNaive => m as f64 * p * f,
+            MemMode::DivChunked => self.chunk.min(m) as f64 * p * f,
+        };
+        fixed + batch + persample
+    }
+
+    pub fn step_mb(&self, m: usize, mode: MemMode) -> f64 {
+        self.step_bytes(m, mode) / (1024.0 * 1024.0)
+    }
+}
+
+/// Current process resident-set size in MB (Linux /proc/self/status).
+pub fn rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .ok()?;
+            return Some(kb / 1024.0);
+        }
+    }
+    None
+}
+
+/// Peak process RSS in MB (VmHWM).
+pub fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .ok()?;
+            return Some(kb / 1024.0);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet20_like() -> MemoryModel {
+        // ResNet-20 on CIFAR-10: 272k params, 32*32*3 input.
+        MemoryModel::for_model(272_000, 3072, 3, 32)
+    }
+
+    #[test]
+    fn ordering_matches_paper_table2() {
+        // Paper: SGD(128) < AdaBatch(avg) < SGD(2048) < DiveBatch(naive).
+        let mm = resnet20_like();
+        let sgd128 = mm.step_bytes(128, MemMode::Plain);
+        let sgd2048 = mm.step_bytes(2048, MemMode::Plain);
+        let dive2048 = mm.step_bytes(2048, MemMode::DivNaive);
+        assert!(sgd128 < sgd2048);
+        assert!(sgd2048 < dive2048);
+        // DiveBatch naive at max batch dominates everything by a wide
+        // margin (paper: 13.2 GB vs 9.5 GB).
+        assert!(dive2048 / sgd2048 > 1.3);
+    }
+
+    #[test]
+    fn chunking_removes_batch_dependence_of_persample_term() {
+        let mm = resnet20_like();
+        let plain = mm.step_bytes(2048, MemMode::Plain);
+        let naive = mm.step_bytes(2048, MemMode::DivNaive);
+        let chunked = mm.step_bytes(2048, MemMode::DivChunked);
+        // The per-sample-gradient term shrinks by m/chunk = 64x.
+        assert!(
+            (chunked - plain) < (naive - plain) / 10.0,
+            "{chunked} vs {naive}"
+        );
+        // Chunked at 2048 ~ chunked at 4096 for the per-sample part.
+        let c1 = mm.step_bytes(2048, MemMode::DivChunked) - mm.step_bytes(2048, MemMode::Plain);
+        let c2 = mm.step_bytes(4096, MemMode::DivChunked) - mm.step_bytes(4096, MemMode::Plain);
+        assert!((c1 - c2).abs() < 1.0);
+    }
+
+    #[test]
+    fn dense_profile_is_lighter_than_conv() {
+        let dense = MemoryModel::for_model(513, 512, 1, 64);
+        let conv = MemoryModel::for_model(513, 512, 3, 64);
+        assert!(dense.step_bytes(128, MemMode::Plain) < conv.step_bytes(128, MemMode::Plain));
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        let rss = rss_mb();
+        assert!(rss.is_some());
+        assert!(rss.unwrap() > 1.0);
+        let peak = peak_rss_mb().unwrap();
+        assert!(peak >= rss_mb().unwrap() * 0.5);
+    }
+
+    #[test]
+    fn mb_conversion() {
+        let mm = MemoryModel {
+            param_count: 0,
+            feat_len: 0,
+            act_per_sample: 0,
+            chunk: 1,
+        };
+        assert_eq!(mm.step_mb(1, MemMode::Plain), 0.0);
+    }
+}

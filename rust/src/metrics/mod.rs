@@ -1,0 +1,8 @@
+//! Metrics: per-epoch run records (CSV/JSONL) + the analytic memory model
+//! behind the Table 2 reproduction.
+
+pub mod memory;
+pub mod records;
+
+pub use memory::{peak_rss_mb, rss_mb, MemMode, MemoryModel};
+pub use records::{EpochRecord, RunRecord, CSV_HEADER};

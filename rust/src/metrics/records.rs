@@ -1,0 +1,439 @@
+//! Run records: per-epoch metrics, CSV/JSONL serialization, and the
+//! summary accessors the paper's tables are computed from (accuracy at
+//! 25/50/75/100% of training; time to within ±1% of final accuracy).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Everything recorded at one epoch boundary.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Logical batch size used during this epoch.
+    pub batch_size: usize,
+    pub lr: f64,
+    /// Optimizer steps taken this epoch (= ceil(n/m)).
+    pub steps: usize,
+    /// Mean per-sample training loss / accuracy over the epoch.
+    pub train_loss: f64,
+    pub train_acc: f64,
+    /// Validation metrics at the epoch boundary.
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// Definition-2 estimate observed during the epoch (div policies).
+    pub delta_hat: Option<f64>,
+    /// `n * Delta_hat` (the Algorithm-1 line-11 quantity).
+    pub n_delta: Option<f64>,
+    /// Exact full-dataset diversity (Oracle policy only).
+    pub exact_delta: Option<f64>,
+    /// Real wall-clock seconds spent in this epoch (this testbed).
+    pub wall_s: f64,
+    /// Simulated cluster seconds (DESIGN.md §3 timing model).
+    pub sim_s: f64,
+    pub cum_wall_s: f64,
+    pub cum_sim_s: f64,
+    /// Analytic peak training memory at this epoch's batch size (MB).
+    pub mem_mb: f64,
+}
+
+/// One complete training run (one trial).
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Paper-style label, e.g. "DiveBatch (128 - 2048)".
+    pub label: String,
+    pub model: String,
+    pub policy_kind: String,
+    pub dataset: String,
+    pub seed: u64,
+    pub epochs: Vec<EpochRecord>,
+}
+
+pub const CSV_HEADER: &str = "epoch,batch_size,lr,steps,train_loss,train_acc,val_loss,val_acc,\
+delta_hat,n_delta,exact_delta,wall_s,sim_s,cum_wall_s,cum_sim_s,mem_mb";
+
+fn opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.6e}")).unwrap_or_default()
+}
+
+impl RunRecord {
+    pub fn new(label: &str, model: &str, policy_kind: &str, dataset: &str, seed: u64) -> Self {
+        RunRecord {
+            label: label.to_string(),
+            model: model.to_string(),
+            policy_kind: policy_kind.to_string(),
+            dataset: dataset.to_string(),
+            seed,
+            epochs: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------- series
+
+    pub fn val_acc_curve(&self) -> Vec<f64> {
+        self.epochs.iter().map(|e| e.val_acc).collect()
+    }
+
+    pub fn val_loss_curve(&self) -> Vec<f64> {
+        self.epochs.iter().map(|e| e.val_loss).collect()
+    }
+
+    pub fn batch_size_curve(&self) -> Vec<f64> {
+        self.epochs.iter().map(|e| e.batch_size as f64).collect()
+    }
+
+    pub fn delta_hat_curve(&self) -> Vec<f64> {
+        self.epochs
+            .iter()
+            .map(|e| e.delta_hat.unwrap_or(f64::NAN))
+            .collect()
+    }
+
+    pub fn exact_delta_curve(&self) -> Vec<f64> {
+        self.epochs
+            .iter()
+            .map(|e| e.exact_delta.unwrap_or(f64::NAN))
+            .collect()
+    }
+
+    // ------------------------------------------------------------ summary
+
+    pub fn final_val_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.val_acc).unwrap_or(f64::NAN)
+    }
+
+    /// Validation accuracy at `frac` (0..=1) of total training epochs —
+    /// the paper's 25% / 50% / 75% / 100% columns.
+    pub fn val_acc_at_frac(&self, frac: f64) -> f64 {
+        if self.epochs.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((self.epochs.len() as f64 * frac).ceil() as usize)
+            .clamp(1, self.epochs.len())
+            - 1;
+        self.epochs[idx].val_acc
+    }
+
+    /// First epoch whose val acc is within `tol_pct` percentage points of
+    /// the final accuracy AND stays within for the rest of the run
+    /// (the paper's "time to ±1% of final accuracy" criterion).
+    pub fn epoch_within_final(&self, tol_pct: f64) -> Option<usize> {
+        let final_acc = self.final_val_acc();
+        if final_acc.is_nan() {
+            return None;
+        }
+        let ok = |e: &EpochRecord| (e.val_acc - final_acc).abs() <= tol_pct;
+        // Find the earliest epoch from which every later epoch stays within.
+        let mut candidate = None;
+        for (i, e) in self.epochs.iter().enumerate() {
+            if ok(e) {
+                if candidate.is_none() {
+                    candidate = Some(i);
+                }
+            } else {
+                candidate = None;
+            }
+        }
+        candidate
+    }
+
+    /// Cumulative (simulated cluster | wall) seconds at the
+    /// `epoch_within_final` point.
+    pub fn time_within_final(&self, tol_pct: f64, simulated: bool) -> Option<f64> {
+        self.epoch_within_final(tol_pct).map(|i| {
+            let e = &self.epochs[i];
+            if simulated {
+                e.cum_sim_s
+            } else {
+                e.cum_wall_s
+            }
+        })
+    }
+
+    pub fn peak_mem_mb(&self) -> f64 {
+        self.epochs.iter().map(|e| e.mem_mb).fold(0.0, f64::max)
+    }
+
+    pub fn mean_mem_mb(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.mem_mb).sum::<f64>() / self.epochs.len() as f64
+    }
+
+    /// Final (maximum) batch size the policy reached — the paper reports
+    /// "initial - end" batch ranges.
+    pub fn end_batch_size(&self) -> usize {
+        self.epochs.iter().map(|e| e.batch_size).max().unwrap_or(0)
+    }
+
+    // -------------------------------------------------------------- io
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for e in &self.epochs {
+            out.push_str(&format!(
+                "{},{},{:.6e},{},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.2}\n",
+                e.epoch,
+                e.batch_size,
+                e.lr,
+                e.steps,
+                e.train_loss,
+                e.train_acc,
+                e.val_loss,
+                e.val_acc,
+                opt(e.delta_hat),
+                opt(e.n_delta),
+                opt(e.exact_delta),
+                e.wall_s,
+                e.sim_s,
+                e.cum_wall_s,
+                e.cum_sim_s,
+                e.mem_mb,
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv()).with_context(|| format!("writing {path:?}"))
+    }
+
+    /// Full-fidelity JSON (used by the results cache so benches sharing
+    /// experiment arms — e.g. Figures 3/4 and Table 1 — reuse runs).
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| Json::Num(v);
+        let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("policy", Json::Str(self.policy_kind.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("seed", num(self.seed as f64)),
+            (
+                "epochs",
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("epoch", num(e.epoch as f64)),
+                                ("m", num(e.batch_size as f64)),
+                                ("lr", num(e.lr)),
+                                ("steps", num(e.steps as f64)),
+                                ("tl", num(e.train_loss)),
+                                ("ta", num(e.train_acc)),
+                                ("vl", num(e.val_loss)),
+                                ("va", num(e.val_acc)),
+                                ("dh", opt_num(e.delta_hat)),
+                                ("nd", opt_num(e.n_delta)),
+                                ("xd", opt_num(e.exact_delta)),
+                                ("ws", num(e.wall_s)),
+                                ("ss", num(e.sim_s)),
+                                ("cw", num(e.cum_wall_s)),
+                                ("cs", num(e.cum_sim_s)),
+                                ("mm", num(e.mem_mb)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Inverse of [`to_json`].
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let get_f = |e: &Json, k: &str| -> Result<f64> {
+            e.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("field {k} not a number"))
+        };
+        let get_opt = |e: &Json, k: &str| -> Option<f64> { e.get(k).and_then(|v| v.as_f64()) };
+        let mut rec = RunRecord::new(
+            j.req_str("label")?,
+            j.req_str("model")?,
+            j.req_str("policy")?,
+            j.req_str("dataset")?,
+            j.req_usize("seed")? as u64,
+        );
+        for e in j.req_arr("epochs")? {
+            rec.epochs.push(EpochRecord {
+                epoch: e.req_usize("epoch")?,
+                batch_size: e.req_usize("m")?,
+                lr: get_f(e, "lr")?,
+                steps: e.req_usize("steps")?,
+                train_loss: get_f(e, "tl")?,
+                train_acc: get_f(e, "ta")?,
+                val_loss: get_f(e, "vl")?,
+                val_acc: get_f(e, "va")?,
+                delta_hat: get_opt(e, "dh"),
+                n_delta: get_opt(e, "nd"),
+                exact_delta: get_opt(e, "xd"),
+                wall_s: get_f(e, "ws")?,
+                sim_s: get_f(e, "ss")?,
+                cum_wall_s: get_f(e, "cw")?,
+                cum_sim_s: get_f(e, "cs")?,
+                mem_mb: get_f(e, "mm")?,
+            });
+        }
+        Ok(rec)
+    }
+
+    /// One-line JSON summary (JSONL sink for sweep aggregation).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("policy", Json::Str(self.policy_kind.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("epochs", Json::Num(self.epochs.len() as f64)),
+            ("final_val_acc", Json::Num(self.final_val_acc())),
+            (
+                "end_batch_size",
+                Json::Num(self.end_batch_size() as f64),
+            ),
+            (
+                "cum_wall_s",
+                Json::Num(self.epochs.last().map(|e| e.cum_wall_s).unwrap_or(0.0)),
+            ),
+            (
+                "cum_sim_s",
+                Json::Num(self.epochs.last().map(|e| e.cum_sim_s).unwrap_or(0.0)),
+            ),
+            ("peak_mem_mb", Json::Num(self.peak_mem_mb())),
+        ])
+    }
+
+    pub fn append_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        writeln!(f, "{}", self.summary_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, val_acc: f64, m: usize) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            batch_size: m,
+            lr: 0.1,
+            steps: 10,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            val_loss: 1.0,
+            val_acc,
+            delta_hat: Some(2.0),
+            n_delta: Some(100.0),
+            exact_delta: None,
+            wall_s: 1.0,
+            sim_s: 0.5,
+            cum_wall_s: (epoch + 1) as f64,
+            cum_sim_s: 0.5 * (epoch + 1) as f64,
+            mem_mb: 10.0 + m as f64,
+        }
+    }
+
+    fn run_with_accs(accs: &[f64]) -> RunRecord {
+        let mut r = RunRecord::new("t", "m", "sgd", "d", 0);
+        for (i, &a) in accs.iter().enumerate() {
+            r.epochs.push(rec(i, a, 128 * (i + 1)));
+        }
+        r
+    }
+
+    #[test]
+    fn acc_at_fractions() {
+        let r = run_with_accs(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(r.val_acc_at_frac(0.25), 10.0);
+        assert_eq!(r.val_acc_at_frac(0.5), 20.0);
+        assert_eq!(r.val_acc_at_frac(0.75), 30.0);
+        assert_eq!(r.val_acc_at_frac(1.0), 40.0);
+        assert_eq!(r.final_val_acc(), 40.0);
+    }
+
+    #[test]
+    fn epoch_within_final_requires_staying_within() {
+        // Dips back out at epoch 3, so the answer is 4 not 1.
+        let r = run_with_accs(&[50.0, 89.5, 89.8, 80.0, 89.9, 90.0]);
+        assert_eq!(r.epoch_within_final(1.0), Some(4));
+        assert_eq!(r.time_within_final(1.0, false), Some(5.0));
+        assert_eq!(r.time_within_final(1.0, true), Some(2.5));
+    }
+
+    #[test]
+    fn epoch_within_final_monotone_run() {
+        let r = run_with_accs(&[50.0, 70.0, 89.2, 89.8, 90.0]);
+        assert_eq!(r.epoch_within_final(1.0), Some(2));
+    }
+
+    #[test]
+    fn csv_round_numbers() {
+        let r = run_with_accs(&[1.0, 2.0]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with(CSV_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+        // Optional exact_delta empty.
+        assert!(csv.lines().nth(1).unwrap().contains(",,"));
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let r = run_with_accs(&[1.0, 2.0, 3.0]);
+        let j = r.summary_json().to_string();
+        assert!(j.contains("\"final_val_acc\":3"));
+        assert!(j.contains("\"end_batch_size\":384"));
+        assert!(j.contains("\"epochs\":3"));
+    }
+
+    #[test]
+    fn mem_summaries() {
+        let r = run_with_accs(&[1.0, 2.0]);
+        assert_eq!(r.peak_mem_mb(), 10.0 + 256.0);
+        assert!((r.mean_mem_mb() - (138.0 + 266.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip_full_fidelity() {
+        let mut r = run_with_accs(&[10.0, 20.0]);
+        r.epochs[1].exact_delta = Some(3.5);
+        let j = r.to_json();
+        let back = RunRecord::from_json(&crate::util::json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.label, r.label);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.epochs.len(), 2);
+        assert_eq!(back.epochs[0].batch_size, r.epochs[0].batch_size);
+        assert_eq!(back.epochs[0].val_acc, r.epochs[0].val_acc);
+        assert_eq!(back.epochs[0].delta_hat, Some(2.0));
+        assert_eq!(back.epochs[0].exact_delta, None);
+        assert_eq!(back.epochs[1].exact_delta, Some(3.5));
+        assert_eq!(back.epochs[1].cum_sim_s, r.epochs[1].cum_sim_s);
+    }
+
+    #[test]
+    fn empty_run_is_safe() {
+        let r = RunRecord::new("t", "m", "sgd", "d", 0);
+        assert!(r.final_val_acc().is_nan());
+        assert_eq!(r.epoch_within_final(1.0), None);
+        assert_eq!(r.end_batch_size(), 0);
+    }
+}

@@ -1,0 +1,143 @@
+//! The runtime: PJRT client + lazily-compiled executable cache.
+//!
+//! `Runtime::load` parses the manifest once; `Executable`s are compiled on
+//! first use (HLO text -> `HloModuleProto::from_text_file` -> XlaComputation
+//! -> PJRT compile) and cached by entry key, so a training run only pays
+//! compilation for the ladder rungs its batch-size policy actually visits.
+//! Compile times are recorded for the perf report.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+use super::manifest::{Manifest, ModelInfo};
+use crate::util::timer::Timer;
+
+/// Cumulative runtime statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_seconds: f64,
+}
+
+/// PJRT client + manifest + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifacts location: `$DIVEBATCH_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("DIVEBATCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Number of distinct compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Fetch (compiling on first use) the executable for `model/entry_key`.
+    pub fn entry(&self, model: &str, entry_key: &str) -> Result<Rc<Executable>> {
+        let cache_key = format!("{model}/{entry_key}");
+        if let Some(e) = self.cache.borrow().get(&cache_key) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.model(model)?.entry(entry_key)?.clone();
+        let path = self.manifest.path(&info.file);
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .with_context(|| format!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {cache_key}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_seconds += t.seconds();
+        }
+        let wrapped = Rc::new(Executable::new(cache_key.clone(), info, exe));
+        self.cache
+            .borrow_mut()
+            .insert(cache_key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Train-step executable for (model, diversity?, micro-batch).
+    pub fn train_exec(&self, model: &str, diversity: bool, micro: usize) -> Result<Rc<Executable>> {
+        self.entry(model, &ModelInfo::train_key(diversity, micro))
+    }
+
+    /// Eval-step executable for (model, micro-batch).
+    pub fn eval_exec(&self, model: &str, micro: usize) -> Result<Rc<Executable>> {
+        self.entry(model, &ModelInfo::eval_key(micro))
+    }
+
+    /// Fused on-device update executable for a model.
+    pub fn update_exec(&self, model: &str) -> Result<Rc<Executable>> {
+        self.entry(model, "update")
+    }
+
+    /// Pre-compile every ladder rung for a model (both variants + eval).
+    /// Useful before timed benchmarking so compilation never lands inside
+    /// a measured region.
+    pub fn warmup(&self, model: &str, diversity: bool) -> Result<()> {
+        let ladder = self.model(model)?.ladder.clone();
+        for m in ladder {
+            self.train_exec(model, diversity, m)?;
+            self.eval_exec(model, m)?;
+        }
+        Ok(())
+    }
+
+    /// Total executions across all cached executables.
+    pub fn total_executions(&self) -> u64 {
+        self.cache
+            .borrow()
+            .values()
+            .map(|e| e.executions.get())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Compilation/execution requires artifacts + a PJRT client; covered by
+    // rust/tests/integration_runtime.rs (run via `make test-rust`, which
+    // builds tiny artifacts first).
+}

@@ -1,0 +1,389 @@
+//! Typed view of `artifacts/manifest.json` (emitted by python/compile/aot.py).
+//!
+//! The manifest is the single source of truth about what was AOT-compiled:
+//! per model — parameter count, feature shape, label dtype, the micro-batch
+//! ladder, parameter layout (for the Table 2 memory model), init-params
+//! files, and per-entry tensor specs the executable wrapper validates
+//! against at execute time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of an executable input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One tensor in an entry signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            dtype: Dtype::parse(j.req_str("dtype")?)?,
+            shape: usize_vec(j.req_arr("shape")?)?,
+        })
+    }
+}
+
+/// One AOT-lowered executable entry.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    /// Path relative to the artifacts root.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_bytes: usize,
+}
+
+/// One named parameter tensor (layout of the flat vector).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Everything the manifest records about one model.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub label_dtype: Dtype,
+    pub num_classes: usize,
+    /// Compiled micro-batch sizes, ascending.
+    pub ladder: Vec<usize>,
+    pub chunk: usize,
+    pub tags: Vec<String>,
+    pub param_specs: Vec<ParamSpec>,
+    /// Relative paths of the seeded init-params files.
+    pub init_params: Vec<String>,
+    pub entries: BTreeMap<String, EntryInfo>,
+}
+
+impl ModelInfo {
+    pub fn feat_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Entry key for a train variant at micro-batch `m`.
+    pub fn train_key(diversity: bool, m: usize) -> String {
+        if diversity {
+            format!("train_div_b{m}")
+        } else {
+            format!("train_plain_b{m}")
+        }
+    }
+
+    pub fn eval_key(m: usize) -> String {
+        format!("eval_b{m}")
+    }
+
+    pub fn entry(&self, key: &str) -> Result<&EntryInfo> {
+        self.entries
+            .get(key)
+            .with_context(|| format!("model {:?} has no entry {key:?}", self.name))
+    }
+
+    /// Largest ladder micro-batch `<= m`, or the smallest rung if `m`
+    /// is below all of them.
+    pub fn best_micro(&self, m: usize) -> usize {
+        let mut best = self.ladder[0];
+        for &b in &self.ladder {
+            if b <= m {
+                best = b;
+            }
+        }
+        best
+    }
+
+    pub fn max_micro(&self) -> usize {
+        *self.ladder.last().expect("empty ladder")
+    }
+
+    pub fn min_micro(&self) -> usize {
+        self.ladder[0]
+    }
+}
+
+/// The parsed manifest plus its filesystem root.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub version: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn usize_vec(arr: &[Json]) -> Result<Vec<usize>> {
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("expected unsigned integer, got {v:?}"))
+        })
+        .collect()
+}
+
+fn string_vec(arr: &[Json]) -> Vec<String> {
+    arr.iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, root)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let doc = json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = doc.req_usize("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut models = BTreeMap::new();
+        let model_obj = doc
+            .req("models")?
+            .as_obj()
+            .context("manifest `models` is not an object")?;
+        for (name, m) in model_obj {
+            let mut entries = BTreeMap::new();
+            let entry_obj = m
+                .req("entries")?
+                .as_obj()
+                .context("`entries` is not an object")?;
+            for (key, e) in entry_obj {
+                let inputs = e
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = e
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                entries.insert(
+                    key.clone(),
+                    EntryInfo {
+                        file: e.req_str("file")?.to_string(),
+                        inputs,
+                        outputs,
+                        hlo_bytes: e.req_usize("hlo_bytes").unwrap_or(0),
+                    },
+                );
+            }
+            let param_specs = m
+                .req_arr("param_specs")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req_str("name")?.to_string(),
+                        shape: usize_vec(p.req_arr("shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let info = ModelInfo {
+                name: name.clone(),
+                param_count: m.req_usize("param_count")?,
+                input_shape: usize_vec(m.req_arr("input_shape")?)?,
+                label_dtype: Dtype::parse(m.req_str("label_dtype")?)?,
+                num_classes: m.req_usize("num_classes")?,
+                ladder: usize_vec(m.req_arr("ladder")?)?,
+                chunk: m.req_usize("chunk")?,
+                tags: string_vec(m.req_arr("tags")?),
+                param_specs,
+                init_params: string_vec(m.req_arr("init_params")?),
+                entries,
+            };
+            // Sanity invariants the runtime relies on.
+            if info.ladder.is_empty() {
+                bail!("model {name}: empty ladder");
+            }
+            if info.ladder.windows(2).any(|w| w[0] >= w[1]) {
+                bail!("model {name}: ladder not strictly ascending");
+            }
+            let spec_total: usize = info.param_specs.iter().map(|s| s.size()).sum();
+            if spec_total != info.param_count {
+                bail!(
+                    "model {name}: param_specs total {spec_total} != param_count {}",
+                    info.param_count
+                );
+            }
+            models.insert(name.clone(), info);
+        }
+        Ok(Manifest {
+            root,
+            version,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    /// Absolute path of an artifact-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Read a raw little-endian f32 init-params file for (model, seed).
+    /// Seeds beyond the emitted files wrap around (documented behaviour
+    /// for trial counts > n_init_seeds).
+    pub fn load_init_params(&self, model: &str, seed: usize) -> Result<Vec<f32>> {
+        let info = self.model(model)?;
+        if info.init_params.is_empty() {
+            bail!("model {model}: no init_params files");
+        }
+        let rel = &info.init_params[seed % info.init_params.len()];
+        let path = self.path(rel);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * info.param_count {
+            bail!(
+                "{path:?}: {} bytes, expected {}",
+                bytes.len(),
+                4 * info.param_count
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{"version": 1, "models": {"m": {
+            "param_count": 6,
+            "input_shape": [2],
+            "label_dtype": "f32",
+            "num_classes": 2,
+            "ladder": [4, 8, 32],
+            "chunk": 4,
+            "tags": ["tiny"],
+            "param_specs": [{"name": "w", "shape": [2, 2]}, {"name": "b", "shape": [2]}],
+            "init_params": ["m/init_s0.bin"],
+            "entries": {
+                "train_div_b4": {"file": "m/train_div_b4.hlo.txt", "hlo_bytes": 10,
+                    "inputs": [{"name": "params", "dtype": "f32", "shape": [6]},
+                               {"name": "x", "dtype": "f32", "shape": [4, 2]},
+                               {"name": "y", "dtype": "f32", "shape": [4]},
+                               {"name": "w", "dtype": "f32", "shape": [4]}],
+                    "outputs": [{"name": "loss_sum", "dtype": "f32", "shape": []},
+                                {"name": "correct", "dtype": "f32", "shape": []},
+                                {"name": "grad_sum", "dtype": "f32", "shape": [6]},
+                                {"name": "sqnorm_sum", "dtype": "f32", "shape": []}]}
+            }}}}"#
+            .to_string()
+    }
+
+    #[test]
+    fn parses_model_info() {
+        let m = Manifest::parse(&sample_manifest(), PathBuf::from("/tmp")).unwrap();
+        let info = m.model("m").unwrap();
+        assert_eq!(info.param_count, 6);
+        assert_eq!(info.ladder, vec![4, 8, 32]);
+        assert_eq!(info.label_dtype, Dtype::F32);
+        assert_eq!(info.feat_len(), 2);
+        let e = info.entry("train_div_b4").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.outputs[2].shape, vec![6]);
+        assert_eq!(e.inputs[1].elements(), 8);
+        assert_eq!(e.inputs[1].bytes(), 32);
+    }
+
+    #[test]
+    fn entry_keys() {
+        assert_eq!(ModelInfo::train_key(true, 128), "train_div_b128");
+        assert_eq!(ModelInfo::train_key(false, 8), "train_plain_b8");
+        assert_eq!(ModelInfo::eval_key(4), "eval_b4");
+    }
+
+    #[test]
+    fn best_micro_selection() {
+        let m = Manifest::parse(&sample_manifest(), PathBuf::from("/tmp")).unwrap();
+        let info = m.model("m").unwrap();
+        assert_eq!(info.best_micro(100), 32);
+        assert_eq!(info.best_micro(32), 32);
+        assert_eq!(info.best_micro(31), 8);
+        assert_eq!(info.best_micro(5), 4);
+        assert_eq!(info.best_micro(1), 4); // below the ladder -> smallest rung
+        assert_eq!(info.max_micro(), 32);
+        assert_eq!(info.min_micro(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "models": {}}"#, PathBuf::new()).is_err());
+        // Ladder not ascending.
+        let bad = sample_manifest().replace("[4, 8, 32]", "[8, 4]");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+        // Param specs inconsistent with param_count.
+        let bad = sample_manifest().replace(r#""param_count": 6"#, r#""param_count": 7"#);
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn unknown_model_error_lists_names() {
+        let m = Manifest::parse(&sample_manifest(), PathBuf::from("/tmp")).unwrap();
+        let err = format!("{:#}", m.model("nope").unwrap_err());
+        assert!(err.contains("nope") && err.contains('m'), "{err}");
+    }
+}

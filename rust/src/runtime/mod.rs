@@ -1,0 +1,15 @@
+//! PJRT runtime: manifest parsing, executable compilation cache, and typed
+//! execute wrappers over the AOT artifacts (DESIGN.md §4.2).
+//!
+//! The interchange format is HLO **text**: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that this crate's xla_extension (0.5.1)
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod cache;
+pub mod executable;
+pub mod manifest;
+
+pub use cache::{Runtime, RuntimeStats};
+pub use executable::{EvalOut, Executable, TrainOut};
+pub use manifest::{Dtype, EntryInfo, Manifest, ModelInfo, ParamSpec, TensorSpec};

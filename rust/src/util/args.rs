@@ -1,0 +1,287 @@
+//! Declarative CLI argument parser (clap is not vendored; see Cargo.toml).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and auto-generated `--help`
+//! text.  Used by the `divebatch` launcher, every example binary, and the
+//! bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument specification + parser.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed argument values.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        ArgSpec {
+            program,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument (required, in declaration order).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = write!(s, "\nusage: {}", self.program);
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, " [options]\n");
+        for (p, h) in &self.positionals {
+            let _ = writeln!(s, "  <{p:<18}> {h}");
+        }
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("--{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("--{} <v={d}>", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let _ = writeln!(s, "  {left:<22} {}", o.help);
+        }
+        s
+    }
+
+    /// Parse a token list (no program name).  Returns Err(usage) on
+    /// `--help` or malformed input.
+    pub fn parse_tokens(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} needs a value"))?
+                            .clone(),
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+        if args.positionals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[args.positionals.len()].0,
+                self.usage()
+            ));
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping the program name); print usage
+    /// and exit on error — the behaviour binaries want.
+    pub fn parse_or_exit(&self) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_tokens(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing (no default declared)"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.str(name);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("option --{name}: cannot parse {raw:?}");
+            std::process::exit(2);
+        })
+    }
+
+    pub fn positional(&self, idx: usize) -> &str {
+        &self.positionals[idx]
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test program")
+            .opt("epochs", Some("10"), "number of epochs")
+            .opt("policy", None, "batch size policy")
+            .flag("verbose", "chatty output")
+            .pos("model", "model name")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse_tokens(&toks(&["mymodel"])).unwrap();
+        assert_eq!(a.usize("epochs"), 10);
+        assert_eq!(a.positional(0), "mymodel");
+        assert!(!a.flag("verbose"));
+
+        let a = spec()
+            .parse_tokens(&toks(&["m", "--epochs", "50", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.usize("epochs"), 50);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = spec().parse_tokens(&toks(&["m", "--epochs=7"])).unwrap();
+        assert_eq!(a.usize("epochs"), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse_tokens(&toks(&["m", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        let e = spec().parse_tokens(&toks(&[])).unwrap_err();
+        assert!(e.contains("missing positional"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse_tokens(&toks(&["m", "--epochs"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = spec().parse_tokens(&toks(&["--help"])).unwrap_err();
+        assert!(e.contains("usage: test"));
+        assert!(e.contains("--epochs"));
+    }
+
+    #[test]
+    fn list_option() {
+        let s = ArgSpec::new("t", "").opt("models", Some("a,b , c"), "");
+        let a = s.parse_tokens(&[]).unwrap();
+        assert_eq!(a.list("models"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec().parse_tokens(&toks(&["m", "--verbose=1"])).is_err());
+    }
+}

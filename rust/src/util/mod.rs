@@ -1,0 +1,23 @@
+//! Foundation substrates (DESIGN.md §4.11).
+//!
+//! This offline build environment vendors only the `xla` crate's
+//! dependency closure, so the framework-grade utilities a project like
+//! this would normally pull from crates.io are implemented in-tree:
+//!
+//! * [`rng`]   — xoshiro256++ / SplitMix64 PRNG (replaces `rand`)
+//! * [`json`]  — full JSON parser + writer (replaces `serde_json`)
+//! * [`args`]  — declarative CLI parsing (replaces `clap`)
+//! * [`prop`]  — property-based testing with shrinking (replaces `proptest`)
+//! * [`stats`] — running moments, stderr, percentiles, curve averaging
+//! * [`table`] — paper-style ASCII tables
+//! * [`plot`]  — ASCII line plots for the figures
+//! * [`timer`] — stopwatch + scoped section profiler for the §Perf pass
+
+pub mod args;
+pub mod json;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

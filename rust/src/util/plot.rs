@@ -1,0 +1,133 @@
+//! ASCII line plots — renders the paper's figures (validation loss /
+//! accuracy / batch-size / diversity curves) directly in the terminal and
+//! in EXPERIMENTS.md code blocks.  Multiple labelled series per chart.
+
+/// A labelled series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(label: &str, ys: Vec<f64>) -> Self {
+        Series {
+            label: label.to_string(),
+            ys,
+        }
+    }
+}
+
+/// Render series (sharing an implicit x = 0..n index, e.g. epochs) into a
+/// `width` x `height` character grid with y-axis labels and a legend.
+pub fn render(title: &str, x_label: &str, series: &[Series], width: usize, height: usize) -> String {
+    const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    assert!(!series.is_empty(), "no series to plot");
+    let max_len = series.iter().map(|s| s.ys.len()).max().unwrap();
+    if max_len == 0 {
+        return format!("{title}: (empty)\n");
+    }
+    let finite = |v: f64| v.is_finite();
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for &y in s.ys.iter().filter(|y| finite(**y)) {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() || !ymax.is_finite() {
+        return format!("{title}: (no finite data)\n");
+    }
+    if (ymax - ymin).abs() < 1e-30 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for (i, &y) in s.ys.iter().enumerate() {
+            if !finite(y) {
+                continue;
+            }
+            let col = if max_len == 1 {
+                0
+            } else {
+                i * (width - 1) / (max_len - 1)
+            };
+            let frac = (y - ymin) / (ymax - ymin);
+            let row = height - 1 - ((frac * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[row][col] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("-- {title} --\n"));
+    for (r, line) in grid.iter().enumerate() {
+        let y_here = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        let label = if r == 0 || r == height - 1 || r == height / 2 {
+            format!("{y_here:>10.4} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(&line.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>12}0 .. {} ({x_label})\n", "", max_len - 1));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>12}{} = {}\n",
+            "",
+            MARKS[si % MARKS.len()],
+            s.label
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic_curve() {
+        let ys: Vec<f64> = (0..50).map(|i| (i as f64 * 0.2).sin()).collect();
+        let s = render("sine", "epoch", &[Series::new("sin", ys)], 60, 12);
+        assert!(s.contains("-- sine --"));
+        assert!(s.contains("* = sin"));
+        assert!(s.lines().count() > 12);
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a = Series::new("a", vec![0.0, 1.0, 2.0]);
+        let b = Series::new("b", vec![2.0, 1.0, 0.0]);
+        let s = render("two", "x", &[a, b], 30, 8);
+        assert!(s.contains("* = a"));
+        assert!(s.contains("+ = b"));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let s = render("c", "x", &[Series::new("k", vec![5.0; 10])], 20, 5);
+        assert!(s.contains("k"));
+    }
+
+    #[test]
+    fn handles_nan_gracefully() {
+        let s = render(
+            "n",
+            "x",
+            &[Series::new("nan", vec![f64::NAN, 1.0, 2.0])],
+            20,
+            5,
+        );
+        assert!(s.contains("nan"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = render("e", "x", &[Series::new("none", vec![])], 20, 5);
+        assert!(s.contains("empty"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Mini property-based testing framework (proptest is not vendored).
+//!
+//! Provides seeded generators and a `forall` runner with greedy shrinking:
+//! on failure, the runner repeatedly tries smaller variants of the failing
+//! input (as produced by `Shrink::shrink`) until a local minimum is found,
+//! then panics with the minimal counterexample and the reproducing seed.
+//!
+//! Usage:
+//! ```ignore
+//! forall(100, |r| (r.below(4096) as usize + 1, ladder_gen(r)), |(m, ladder)| {
+//!     let plan = Plan::build(*m, ladder);
+//!     plan.covered() == *m
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Types that know how to propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate smaller values, roughly ordered most-aggressive first.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, remove single elements, shrink single elements.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        for i in 0..self.len().min(8) {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for s in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `cases` random trials of `property` over inputs drawn by `gen`.
+///
+/// The seed comes from `DIVEBATCH_PROP_SEED` (default 0) so failures are
+/// reproducible; each case uses an independent forked stream.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, mut property: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let seed: u64 = std::env::var("DIVEBATCH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let mut r = root.fork(case as u64);
+        let input = gen(&mut r);
+        if !property(&input) {
+            let minimal = shrink_to_minimal(input, &mut property);
+            panic!(
+                "property failed (seed={seed}, case={case}).\n  minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_to_minimal<T, P>(mut failing: T, property: &mut P) -> T
+where
+    T: Shrink + std::fmt::Debug,
+    P: FnMut(&T) -> bool,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    'outer: for _ in 0..1000 {
+        for cand in failing.shrink() {
+            if !property(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            50,
+            |r| r.below(100) as usize,
+            |_| {
+                count += 1;
+                true
+            },
+        );
+        assert!(count >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall(100, |r| r.below(1000) as usize, |&n| n < 500);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Catch the panic and check the reported example is minimal-ish.
+        let result = std::panic::catch_unwind(|| {
+            forall(200, |r| r.below(10_000) as usize, |&n| n < 100);
+        });
+        let msg = match result {
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        // Greedy shrinking should land exactly on the boundary value 100.
+        assert!(msg.contains("counterexample: 100"), "{msg}");
+    }
+
+    #[test]
+    fn vec_shrink_reduces_length() {
+        let v = vec![5usize, 6, 7, 8];
+        let shrunk = v.shrink();
+        assert!(shrunk.iter().any(|s| s.len() < v.len()));
+    }
+
+    #[test]
+    fn tuple_shrink_covers_both_components() {
+        let t = (10usize, vec![3usize]);
+        let shrunk = t.shrink();
+        assert!(shrunk.iter().any(|(a, _)| *a < 10));
+        assert!(shrunk.iter().any(|(_, v)| v.is_empty()));
+    }
+}

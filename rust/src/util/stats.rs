@@ -1,0 +1,191 @@
+//! Small statistics toolkit: running moments, mean/stderr across trials,
+//! percentiles — everything the metrics layer and bench harness need.
+
+/// Welford running mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean — the paper reports acc ± stderr.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn stderr(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        std(xs) / (xs.len() as f64).sqrt()
+    }
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Element-wise mean across equal-length series (curve averaging over
+/// trials, as in the paper's "average over 5/10 trials" figures).
+pub fn mean_curve(series: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!series.is_empty());
+    let len = series[0].len();
+    assert!(
+        series.iter().all(|s| s.len() == len),
+        "curves must share length"
+    );
+    (0..len)
+        .map(|i| series.iter().map(|s| s[i]).sum::<f64>() / series.len() as f64)
+        .collect()
+}
+
+/// Element-wise standard error across series.
+pub fn stderr_curve(series: &[Vec<f64>]) -> Vec<f64> {
+    let len = series[0].len();
+    (0..len)
+        .map(|i| {
+            let col: Vec<f64> = series.iter().map(|s| s[i]).collect();
+            stderr(&col)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((r.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 16.0);
+        assert_eq!(r.count(), 5);
+    }
+
+    #[test]
+    fn stderr_scales_with_sqrt_n() {
+        let xs4 = vec![0.0, 1.0, 0.0, 1.0];
+        let xs16: Vec<f64> = xs4.iter().cycle().take(16).copied().collect();
+        let r = stderr(&xs4) / stderr(&xs16);
+        // Exactly 2 with population std; the (n-1) sample correction
+        // nudges it to sqrt(16/4 * 3/15 * 16/4) ≈ 2.24.
+        assert!((1.8..2.5).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curves_average() {
+        let a = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(mean_curve(&a), vec![2.0, 3.0]);
+        let se = stderr_curve(&a);
+        assert!((se[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(mean(&[]).is_nan());
+        assert_eq!(std(&[5.0]), 0.0);
+        let mut r = Running::new();
+        r.push(3.0);
+        assert_eq!(r.var(), 0.0);
+        assert_eq!(r.stderr(), 0.0);
+    }
+}

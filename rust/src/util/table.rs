@@ -1,0 +1,121 @@
+//! ASCII table renderer — prints the paper-style result tables
+//! (Table 1 / 2 / 5 rows) from the bench harnesses.
+
+/// A simple column-aligned table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        // Column widths in CHARS, not bytes — cells contain multibyte
+        // glyphs like '±'.
+        let w = |s: &String| s.chars().count();
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(w).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(w(c));
+            }
+        }
+        let sep = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for width in w {
+                s.push_str(&"-".repeat(width + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - w(&cells[i]);
+                s.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad)));
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep(&widths));
+        out.push('\n');
+        out
+    }
+}
+
+/// Format `mean ± err` with paper-style 2-decimal precision.
+pub fn pm(mean: f64, err: f64) -> String {
+    format!("{mean:.2} ± {err:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["Algorithm", "Acc"]);
+        t.row(vec!["SGD (128)".into(), pm(95.50, 0.02)]);
+        t.row(vec!["DiveBatch (128 - 2048)".into(), pm(93.82, 0.08)]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| Algorithm"));
+        assert!(s.contains("95.50 ± 0.02"));
+        // All body lines equal CHAR width (cells contain multibyte '±').
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn empty_table_renders_header() {
+        let t = Table::new("", &["col"]);
+        assert!(t.is_empty());
+        assert!(t.render().contains("| col |"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Wall-clock timing helpers + a scoped section profiler used by the
+//! §Perf pass to attribute epoch time to pipeline stages (marshal /
+//! execute / fetch / optimizer / data).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Accumulates per-section wall time across many scopes.
+///
+/// ```ignore
+/// let mut prof = Profiler::new();
+/// { let _g = prof.section("execute"); run(); }
+/// println!("{}", prof.report());
+/// ```
+#[derive(Debug, Default)]
+pub struct Profiler {
+    totals: BTreeMap<&'static str, (f64, u64)>,
+}
+
+pub struct SectionGuard<'a> {
+    prof: &'a mut Profiler,
+    name: &'static str,
+    start: Instant,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Profiler::default()
+    }
+
+    pub fn section(&mut self, name: &'static str) -> SectionGuard<'_> {
+        SectionGuard {
+            name,
+            start: Instant::now(),
+            prof: self,
+        }
+    }
+
+    pub fn add(&mut self, name: &'static str, seconds: f64) {
+        let e = self.totals.entry(name).or_insert((0.0, 0));
+        e.0 += seconds;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.totals.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&'static str, f64, u64)> + '_ {
+        self.totals.iter().map(|(k, (t, n))| (*k, *t, *n))
+    }
+
+    /// Human-readable breakdown sorted by total time.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.totals.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        let grand: f64 = rows.iter().map(|(_, (t, _))| t).sum();
+        let mut out = String::new();
+        for (name, (t, n)) in rows {
+            out.push_str(&format!(
+                "  {name:<12} {t:>9.3}s  {:>5.1}%  ({n} calls, {:.3} ms/call)\n",
+                if grand > 0.0 { 100.0 * t / grand } else { 0.0 },
+                1e3 * t / (*n).max(1) as f64,
+            ));
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.totals.clear();
+    }
+}
+
+impl Drop for SectionGuard<'_> {
+    fn drop(&mut self) {
+        self.prof
+            .add(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.seconds() >= 0.004);
+        assert!(t.millis() >= 4.0);
+    }
+
+    #[test]
+    fn profiler_accumulates_sections() {
+        let mut p = Profiler::new();
+        for _ in 0..3 {
+            let _g = p.section("work");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        p.add("manual", 1.5);
+        assert_eq!(p.count("work"), 3);
+        assert!(p.total("work") >= 0.005);
+        assert_eq!(p.total("manual"), 1.5);
+        let rep = p.report();
+        assert!(rep.contains("work"));
+        assert!(rep.contains("manual"));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut p = Profiler::new();
+        p.add("a", 1.0);
+        p.reset();
+        assert_eq!(p.total("a"), 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Policy-level integration: batch-size trajectories through real training
+//! (AdaBatch schedule shape, DiveBatch growth, plan execution over mixed
+//! ladder rungs) and the RunSpec/preset machinery end to end.
+
+use divebatch::config::presets::{preset, Scale};
+use divebatch::config::{DatasetSpec, RunSpec};
+use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::data::SyntheticSpec;
+use divebatch::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts-tiny` first")
+}
+
+fn tiny_synth(n: usize) -> DatasetSpec {
+    DatasetSpec::Synthetic(SyntheticSpec {
+        n,
+        d: 8,
+        noise: 0.05,
+        seed: 77,
+    })
+}
+
+fn run_policy(policy: Policy, epochs: usize, n: usize) -> divebatch::RunRecord {
+    let rt = runtime();
+    let spec = RunSpec {
+        cfg: TrainConfig::new("tinylogreg8", policy, LrSchedule::constant(0.3, false), epochs),
+        dataset: tiny_synth(n),
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    spec.run(&rt).unwrap().into_iter().next().unwrap()
+}
+
+#[test]
+fn adabatch_trajectory_through_real_training() {
+    let rec = run_policy(
+        Policy::AdaBatch {
+            m0: 4,
+            factor: 2,
+            every: 3,
+            m_max: 8,
+        },
+        9,
+        100,
+    );
+    let sizes: Vec<usize> = rec.epochs.iter().map(|e| e.batch_size).collect();
+    assert_eq!(sizes, vec![4, 4, 4, 8, 8, 8, 8, 8, 8]);
+    // AdaBatch never requests diversity instrumentation.
+    assert!(rec.epochs.iter().all(|e| e.delta_hat.is_none()));
+}
+
+#[test]
+fn divebatch_growth_is_bounded_and_instrumented() {
+    let rec = run_policy(
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 1.0,
+            m_max: 8,
+        },
+        6,
+        120,
+    );
+    assert!(rec.epochs[0].batch_size == 4);
+    assert!(rec.epochs.iter().all(|e| e.batch_size <= 8));
+    assert!(rec.epochs.iter().all(|e| e.delta_hat.is_some()));
+}
+
+#[test]
+fn mixed_ladder_plan_executes_odd_batches() {
+    // n=90, m=7 exercises tail batches (90 = 12*7 + 6) and padded blocks
+    // over a {4, 8} ladder every epoch.
+    let rec = run_policy(Policy::Fixed { m: 7 }, 3, 112);
+    // ceil(89.6->89 train? n split 80% of 112 = 90 train) / 7 = 13 steps.
+    let steps = rec.epochs[0].steps;
+    assert_eq!(steps, 90usize.div_ceil(7));
+    assert!(rec.epochs.iter().all(|e| e.val_loss.is_finite()));
+}
+
+#[test]
+fn runspec_multi_trial_aggregation() {
+    let rt = runtime();
+    let spec = RunSpec {
+        cfg: TrainConfig::new(
+            "tinylogreg8",
+            Policy::Fixed { m: 8 },
+            LrSchedule::constant(0.3, false),
+            4,
+        ),
+        dataset: tiny_synth(100),
+        trials: 3,
+        flops_per_sample: 1e3,
+    };
+    let records = spec.run(&rt).unwrap();
+    assert_eq!(records.len(), 3);
+    // Trials differ (different data draws + init seeds).
+    assert_ne!(
+        records[0].final_val_acc(),
+        records[1].final_val_acc()
+    );
+    // But all are labelled the same arm.
+    assert!(records.iter().all(|r| r.label == "SGD (8)"));
+}
+
+#[test]
+fn csv_writes_from_real_run() {
+    let rec = run_policy(Policy::Fixed { m: 8 }, 3, 80);
+    let dir = std::env::temp_dir().join("divebatch-test-csv");
+    let path = dir.join("run.csv");
+    rec.write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("epoch,batch_size"));
+    assert_eq!(text.lines().count(), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn preset_machinery_smoke() {
+    // Presets reference the full-size models; just validate resolution and
+    // configuration here (the benches run them for real).
+    for id in ["fig1-convex", "fig3-cifar10", "fig5-tin"] {
+        let e = preset(id, Scale::quick()).unwrap();
+        assert!(!e.runs.is_empty());
+        for r in &e.runs {
+            assert!(r.trials >= 1);
+            assert!(r.cfg.epochs >= 1);
+        }
+    }
+}
+
+#[test]
+fn profiler_sections_populated() {
+    let rt = runtime();
+    let spec = RunSpec {
+        cfg: TrainConfig::new(
+            "tinylogreg8",
+            Policy::DiveBatch {
+                m0: 4,
+                delta: 0.5,
+                m_max: 8,
+            },
+            LrSchedule::constant(0.3, false),
+            2,
+        ),
+        dataset: tiny_synth(80),
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    let (_, profile) = spec.run_trial(&rt, 0).unwrap();
+    for section in ["gather", "execute", "update", "eval", "accumulate"] {
+        assert!(
+            profile.count(section) > 0,
+            "missing profiler section {section}: {}",
+            profile.report()
+        );
+    }
+}

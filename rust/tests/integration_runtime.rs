@@ -1,0 +1,336 @@
+//! Integration tests: the real PJRT path over the tiny AOT artifacts.
+//!
+//! Requires `make artifacts-tiny` (or `make artifacts`) to have produced
+//! `artifacts/tinylogreg8` etc.  These tests validate the full
+//! jax -> HLO text -> rust compile -> execute round trip numerically
+//! against closed forms computed independently in Rust.
+
+use divebatch::data::{Dataset, Labels};
+use divebatch::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts-tiny` first")
+}
+
+/// A tiny hand-made dataset for tinylogreg8 (d = 8).
+fn toy_dataset(n: usize) -> Dataset {
+    // Deterministic, hand-written values (no RNG: we recompute expected
+    // losses below with plain Rust float math).
+    let mut x = Vec::with_capacity(n * 8);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        for j in 0..8 {
+            x.push(((i * 8 + j) as f32 * 0.37).sin());
+        }
+        y.push(((i * 7) % 2) as f32);
+    }
+    Dataset {
+        x,
+        y: Labels::Float(y),
+        feat_shape: vec![8],
+        num_classes: 2,
+        name: "toy".into(),
+    }
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Reference logreg forward in Rust: per-sample (loss, correct, residual).
+fn logreg_ref(params: &[f32], x: &[f32], y: f32) -> (f64, f64, f64) {
+    let d = 8;
+    let mut z = params[d] as f64; // bias
+    for j in 0..d {
+        z += params[j] as f64 * x[j] as f64;
+    }
+    // bce = logaddexp(z, 0) - z*y
+    let loss = if z > 0.0 {
+        z + (1.0 + (-z).exp()).ln()
+    } else {
+        (1.0 + z.exp()).ln()
+    } - z * y as f64;
+    let pred = if z > 0.0 { 1.0 } else { 0.0 };
+    let correct = if pred == y as f64 { 1.0 } else { 0.0 };
+    let residual = sigmoid(z) - y as f64;
+    (loss, correct, residual)
+}
+
+fn demo_params() -> Vec<f32> {
+    vec![0.3, -0.2, 0.05, 0.7, -0.4, 0.11, -0.09, 0.25, 0.02]
+}
+
+#[test]
+fn manifest_lists_tiny_models() {
+    let rt = runtime();
+    for name in ["tinylogreg8", "tinymlp8", "tinyresnet4"] {
+        let info = rt.model(name).unwrap();
+        assert!(!info.ladder.is_empty());
+        assert!(info.param_count > 0);
+    }
+    assert_eq!(rt.model("tinylogreg8").unwrap().param_count, 9);
+}
+
+#[test]
+fn eval_matches_rust_reference_numerics() {
+    let rt = runtime();
+    let ds = toy_dataset(8);
+    let params = demo_params();
+    let batch = ds.gather(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
+    let exec = rt.eval_exec("tinylogreg8", 8).unwrap();
+    let out = exec.run_eval(&params, &batch).unwrap();
+
+    let mut want_loss = 0.0;
+    let mut want_correct = 0.0;
+    let ys = match &ds.y {
+        Labels::Float(v) => v.clone(),
+        _ => unreachable!(),
+    };
+    for i in 0..8 {
+        let (l, c, _) = logreg_ref(&params, &ds.x[i * 8..(i + 1) * 8], ys[i]);
+        want_loss += l;
+        want_correct += c;
+    }
+    assert!(
+        (out.loss_sum - want_loss).abs() < 1e-4,
+        "{} vs {want_loss}",
+        out.loss_sum
+    );
+    assert_eq!(out.correct, want_correct);
+}
+
+#[test]
+fn train_grad_matches_closed_form() {
+    // grad = sum_i w_i * r_i * [x_i, 1] for logreg.
+    let rt = runtime();
+    let ds = toy_dataset(4);
+    let params = demo_params();
+    let batch = ds.gather(&[0, 1, 2, 3], 4);
+    let exec = rt.train_exec("tinylogreg8", true, 4).unwrap();
+    let out = exec.run_train(&params, &batch).unwrap();
+
+    let ys = match &ds.y {
+        Labels::Float(v) => v.clone(),
+        _ => unreachable!(),
+    };
+    let mut want = vec![0.0f64; 9];
+    let mut want_sq = 0.0;
+    for i in 0..4 {
+        let xi = &ds.x[i * 8..(i + 1) * 8];
+        let (_, _, r) = logreg_ref(&params, xi, ys[i]);
+        for j in 0..8 {
+            want[j] += r * xi[j] as f64;
+        }
+        want[8] += r;
+        let xnorm2: f64 = xi.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        want_sq += r * r * (xnorm2 + 1.0);
+    }
+    for (g, w) in out.grad_sum.iter().zip(&want) {
+        assert!((*g as f64 - w).abs() < 1e-4, "{g} vs {w}");
+    }
+    assert!(
+        (out.sqnorm_sum - want_sq).abs() / want_sq.max(1e-9) < 1e-3,
+        "{} vs {want_sq}",
+        out.sqnorm_sum
+    );
+}
+
+#[test]
+fn padding_rows_are_noops_through_pjrt() {
+    let rt = runtime();
+    let ds = toy_dataset(6);
+    let params = demo_params();
+    // 3 real rows padded to 4.
+    let batch = ds.gather(&[0, 2, 4], 4);
+    assert_eq!(batch.w, vec![1.0, 1.0, 1.0, 0.0]);
+    let exec = rt.train_exec("tinylogreg8", true, 4).unwrap();
+    let padded = exec.run_train(&params, &batch).unwrap();
+
+    // Same three rows with a DIFFERENT garbage padding row but w=0:
+    // outputs must match exactly.
+    let mut batch2 = ds.gather(&[0, 2, 4], 4);
+    for v in batch2.x[3 * 8..].iter_mut() {
+        *v = 1e3;
+    }
+    let poked = exec.run_train(&params, &batch2).unwrap();
+    assert_eq!(padded.loss_sum, poked.loss_sum);
+    assert_eq!(padded.grad_sum, poked.grad_sum);
+    assert_eq!(padded.sqnorm_sum, poked.sqnorm_sum);
+}
+
+#[test]
+fn sample_sum_additivity_across_micro_batches() {
+    let rt = runtime();
+    let ds = toy_dataset(8);
+    let params = demo_params();
+    let full = rt
+        .train_exec("tinylogreg8", true, 8)
+        .unwrap()
+        .run_train(&params, &ds.gather(&[0, 1, 2, 3, 4, 5, 6, 7], 8))
+        .unwrap();
+    let exec4 = rt.train_exec("tinylogreg8", true, 4).unwrap();
+    let h1 = exec4
+        .run_train(&params, &ds.gather(&[0, 1, 2, 3], 4))
+        .unwrap();
+    let h2 = exec4
+        .run_train(&params, &ds.gather(&[4, 5, 6, 7], 4))
+        .unwrap();
+    assert!((full.loss_sum - (h1.loss_sum + h2.loss_sum)).abs() < 1e-4);
+    assert!((full.sqnorm_sum - (h1.sqnorm_sum + h2.sqnorm_sum)).abs() < 1e-4);
+    for (f, (a, b)) in full
+        .grad_sum
+        .iter()
+        .zip(h1.grad_sum.iter().zip(&h2.grad_sum))
+    {
+        assert!((f - (a + b)).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn div_and_plain_agree_on_shared_outputs() {
+    let rt = runtime();
+    let ds = toy_dataset(8);
+    let params = demo_params();
+    let b = ds.gather(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
+    let div = rt
+        .train_exec("tinylogreg8", true, 8)
+        .unwrap()
+        .run_train(&params, &b)
+        .unwrap();
+    let plain = rt
+        .train_exec("tinylogreg8", false, 8)
+        .unwrap()
+        .run_train(&params, &b)
+        .unwrap();
+    assert!((div.loss_sum - plain.loss_sum).abs() < 1e-5);
+    assert_eq!(div.correct, plain.correct);
+    assert_eq!(plain.sqnorm_sum, 0.0);
+    assert!(div.sqnorm_sum > 0.0);
+}
+
+#[test]
+fn update_executable_matches_rust_optimizer_rule() {
+    let rt = runtime();
+    let exec = rt.update_exec("tinymlp8").unwrap();
+    let p0: Vec<f32> = (0..41).map(|i| (i as f32 * 0.1).sin()).collect();
+    let v0: Vec<f32> = (0..41).map(|i| (i as f32 * 0.05).cos() * 0.01).collect();
+    let g: Vec<f32> = (0..41).map(|i| (i as f32 * 0.2).cos()).collect();
+    let (lr, mu, wd, m) = (0.1f32, 0.9f32, 5e-4f32, 64usize);
+    let (dev_p, dev_v) = exec
+        .run_update(&p0, &v0, &g, lr, mu, wd, 1.0 / m as f32)
+        .unwrap();
+
+    let mut want_p = p0.clone();
+    let mut want_v = v0.clone();
+    for i in 0..41 {
+        let eff = g[i] / m as f32 + wd * want_p[i];
+        want_v[i] = mu * want_v[i] + eff;
+        want_p[i] -= lr * want_v[i];
+    }
+    for i in 0..41 {
+        assert!((dev_p[i] - want_p[i]).abs() < 1e-5, "p[{i}]");
+        assert!((dev_v[i] - want_v[i]).abs() < 1e-5, "v[{i}]");
+    }
+}
+
+#[test]
+fn resnet_entries_execute() {
+    let rt = runtime();
+    let info = rt.model("tinyresnet4").unwrap().clone();
+    assert_eq!(info.input_shape, vec![8, 8, 3]);
+    let n = 4;
+    let feat = 8 * 8 * 3;
+    let mut x = vec![0.0f32; n * feat];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i as f32) * 0.01).sin();
+    }
+    let ds = Dataset {
+        x,
+        y: Labels::Int(vec![0, 1, 2, 3]),
+        feat_shape: vec![8, 8, 3],
+        num_classes: 4,
+        name: "imgtoy".into(),
+    };
+    let params = rt.manifest.load_init_params("tinyresnet4", 0).unwrap();
+    let batch = ds.gather(&[0, 1, 2, 3], 4);
+    let out = rt
+        .train_exec("tinyresnet4", true, 4)
+        .unwrap()
+        .run_train(&params, &batch)
+        .unwrap();
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+    assert!(out.sqnorm_sum > 0.0);
+    assert_eq!(out.grad_sum.len(), info.param_count);
+    assert!((0.0..=4.0).contains(&out.correct));
+    // Cross-entropy at init should be near ln(4) per sample.
+    let per_sample = out.loss_sum / 4.0;
+    assert!((per_sample - (4.0f64).ln()).abs() < 1.0, "{per_sample}");
+}
+
+#[test]
+fn executable_cache_reuses_compiles() {
+    let rt = runtime();
+    let a = rt.eval_exec("tinylogreg8", 4).unwrap();
+    let before = rt.stats().compiles;
+    let b = rt.eval_exec("tinylogreg8", 4).unwrap();
+    assert_eq!(rt.stats().compiles, before);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(rt.cached_executables() >= 1);
+}
+
+#[test]
+fn input_validation_errors() {
+    let rt = runtime();
+    let ds = toy_dataset(4);
+    let exec = rt.train_exec("tinylogreg8", true, 4).unwrap();
+    // Wrong params length.
+    let short = vec![0.0f32; 5];
+    assert!(exec.run_train(&short, &ds.gather(&[0, 1], 4)).is_err());
+    // Wrong padding.
+    let params = demo_params();
+    assert!(exec.run_train(&params, &ds.gather(&[0, 1], 2)).is_err());
+    // Unknown model / entry.
+    assert!(rt.model("nope").is_err());
+    assert!(rt.entry("tinylogreg8", "train_div_b999").is_err());
+}
+
+#[test]
+fn init_params_load_and_differ_by_seed() {
+    let rt = runtime();
+    let p0 = rt.manifest.load_init_params("tinymlp8", 0).unwrap();
+    let p1 = rt.manifest.load_init_params("tinymlp8", 1).unwrap();
+    assert_eq!(p0.len(), 41);
+    assert_ne!(p0, p1);
+    // Wrap-around beyond available seeds (3 emitted for tiny models).
+    let p3 = rt.manifest.load_init_params("tinymlp8", 3).unwrap();
+    assert_eq!(p0, p3);
+}
+
+#[test]
+fn numerical_gradient_check_through_pjrt() {
+    // Finite differences on the EVAL executable vs grad from TRAIN —
+    // validates the whole AOT bridge end to end.
+    let rt = runtime();
+    let ds = toy_dataset(4);
+    let params = demo_params();
+    let batch = ds.gather(&[0, 1, 2, 3], 4);
+    let train = rt.train_exec("tinylogreg8", false, 4).unwrap();
+    let eval = rt.eval_exec("tinylogreg8", 4).unwrap();
+    let grad = train.run_train(&params, &batch).unwrap().grad_sum;
+    let eps = 1e-3f32;
+    for i in [0usize, 3, 8] {
+        let mut plus = params.clone();
+        plus[i] += eps;
+        let mut minus = params.clone();
+        minus[i] -= eps;
+        let lp = eval.run_eval(&plus, &batch).unwrap().loss_sum;
+        let lm = eval.run_eval(&minus, &batch).unwrap().loss_sum;
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        assert!(
+            (grad[i] as f64 - fd).abs() < 5e-2 * fd.abs().max(1.0),
+            "param {i}: grad {} vs fd {fd}",
+            grad[i]
+        );
+    }
+}

@@ -1,0 +1,337 @@
+//! End-to-end trainer integration over the tiny artifacts: full epoch
+//! loops through the PJRT runtime, policies adapting batch sizes, loss
+//! decreasing on learnable data, determinism, and the device-update path.
+
+use divebatch::cluster::ClusterModel;
+use divebatch::coordinator::{LrSchedule, Policy, TrainConfig, Trainer};
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts-tiny` first")
+}
+
+fn synth_split(n: usize, seed: u64) -> (divebatch::Dataset, divebatch::Dataset) {
+    synthetic::generate(&SyntheticSpec {
+        n,
+        d: 8,
+        noise: 0.05,
+        seed,
+    })
+    .split(0.8)
+}
+
+fn cluster() -> ClusterModel {
+    ClusterModel::a100x4(9, 1e3)
+}
+
+fn base_cfg(policy: Policy, epochs: usize) -> TrainConfig {
+    TrainConfig::new(
+        "tinylogreg8",
+        policy,
+        LrSchedule::constant(0.5, true),
+        epochs,
+    )
+}
+
+fn run(cfg: TrainConfig, n: usize, data_seed: u64) -> divebatch::RunRecord {
+    let rt = runtime();
+    let (train, val) = synth_split(n, data_seed);
+    Trainer::new(&rt, cfg, train, val, cluster())
+        .unwrap()
+        .run()
+        .unwrap()
+        .record
+}
+
+#[test]
+fn sgd_learns_separable_data() {
+    let rec = run(base_cfg(Policy::Fixed { m: 8 }, 15), 400, 1);
+    assert_eq!(rec.epochs.len(), 15);
+    let first = &rec.epochs[0];
+    let last = rec.epochs.last().unwrap();
+    assert!(
+        last.val_loss < 0.7 * first.val_loss,
+        "val loss {} -> {}",
+        first.val_loss,
+        last.val_loss
+    );
+    assert!(last.val_acc > 85.0, "val acc {}", last.val_acc);
+    // Steps per epoch = ceil(320/8).
+    assert_eq!(first.steps, 40);
+    assert_eq!(first.batch_size, 8);
+}
+
+#[test]
+fn divebatch_adapts_batch_size_and_records_diversity() {
+    let policy = Policy::DiveBatch {
+        m0: 4,
+        delta: 0.5,
+        m_max: 8,
+    };
+    let rec = run(base_cfg(policy, 10), 200, 2);
+    // Diversity recorded every epoch.
+    assert!(rec.epochs.iter().all(|e| e.delta_hat.is_some()));
+    assert!(rec.epochs.iter().all(|e| e.n_delta.unwrap() > 0.0));
+    // Batch stays within [m0, m_max].
+    assert!(rec
+        .epochs
+        .iter()
+        .all(|e| (4..=8).contains(&e.batch_size)));
+    // With delta=0.5 and n=160, target = 80 * delta_hat >> 8 -> should
+    // reach m_max quickly (diversity >= 1/n always).
+    assert_eq!(rec.end_batch_size(), 8);
+}
+
+#[test]
+fn oracle_records_exact_diversity() {
+    let policy = Policy::Oracle {
+        m0: 4,
+        delta: 0.5,
+        m_max: 8,
+    };
+    let rec = run(base_cfg(policy, 6), 200, 3);
+    assert!(rec.epochs.iter().all(|e| e.exact_delta.is_some()));
+    assert!(rec.epochs.iter().all(|e| e.delta_hat.is_none()));
+    let d = rec.epochs[0].exact_delta.unwrap();
+    assert!(d.is_finite() && d > 0.0);
+}
+
+#[test]
+fn oracle_and_divebatch_deltas_agree_roughly_on_logreg() {
+    // For a near-convex problem with a small lr, the within-epoch
+    // parameter drift is small, so Delta_hat ~ exact Delta (Figure 2 top).
+    let mut dive_cfg = base_cfg(
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 0.001,
+            m_max: 8,
+        },
+        5,
+    );
+    dive_cfg.schedule = LrSchedule::constant(0.05, false);
+    let dive = run(dive_cfg, 200, 4);
+    let mut oracle_cfg = base_cfg(
+        Policy::Oracle {
+            m0: 4,
+            delta: 0.001,
+            m_max: 8,
+        },
+        5,
+    );
+    oracle_cfg.schedule = LrSchedule::constant(0.05, false);
+    let oracle = run(oracle_cfg, 200, 4);
+    for (d, o) in dive.epochs.iter().zip(&oracle.epochs) {
+        let dh = d.delta_hat.unwrap();
+        let ex = o.exact_delta.unwrap();
+        let ratio = dh / ex;
+        assert!(
+            (0.2..5.0).contains(&ratio),
+            "epoch {}: delta_hat {dh} vs exact {ex}",
+            d.epoch
+        );
+    }
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let a = run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7);
+    let b = run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7);
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.val_loss, y.val_loss);
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.batch_size, y.batch_size);
+    }
+}
+
+#[test]
+fn device_update_matches_rust_update() {
+    let mk = |device: bool| {
+        let mut cfg = base_cfg(Policy::Fixed { m: 8 }, 5);
+        cfg.device_update = device;
+        run(cfg, 200, 9)
+    };
+    let host = mk(false);
+    let dev = mk(true);
+    for (h, d) in host.epochs.iter().zip(&dev.epochs) {
+        assert!(
+            (h.val_loss - d.val_loss).abs() < 1e-4,
+            "epoch {}: {} vs {}",
+            h.epoch,
+            h.val_loss,
+            d.val_loss
+        );
+    }
+}
+
+#[test]
+fn momentum_and_weight_decay_run() {
+    let mut cfg = base_cfg(Policy::Fixed { m: 8 }, 8);
+    cfg.momentum = 0.9;
+    cfg.weight_decay = 1e-4;
+    cfg.schedule = LrSchedule::constant(0.1, false);
+    let rec = run(cfg, 300, 11);
+    let last = rec.epochs.last().unwrap();
+    assert!(last.val_loss.is_finite());
+    assert!(last.val_acc > 70.0, "{}", last.val_acc);
+}
+
+#[test]
+fn lr_schedule_decays_in_records() {
+    let mut cfg = base_cfg(Policy::Fixed { m: 8 }, 6);
+    cfg.schedule = LrSchedule {
+        base: 1.0,
+        decay: 0.5,
+        every: 2,
+        rescale_with_batch: false,
+    };
+    let rec = run(cfg, 100, 12);
+    let lrs: Vec<f64> = rec.epochs.iter().map(|e| e.lr).collect();
+    assert_eq!(lrs, vec![1.0, 1.0, 0.5, 0.5, 0.25, 0.25]);
+}
+
+#[test]
+fn goyal_rescaling_scales_lr_with_batch() {
+    let policy = Policy::DiveBatch {
+        m0: 4,
+        delta: 1.0,
+        m_max: 8,
+    };
+    let mut cfg = base_cfg(policy, 6);
+    cfg.schedule = LrSchedule::constant(0.2, true);
+    let rec = run(cfg, 200, 13);
+    for e in &rec.epochs {
+        let want = 0.2 * e.batch_size as f64 / 4.0;
+        assert!((e.lr - want).abs() < 1e-12, "epoch {}: {}", e.epoch, e.lr);
+    }
+}
+
+#[test]
+fn simulated_time_accumulates_monotonically() {
+    let rec = run(base_cfg(Policy::Fixed { m: 8 }, 4), 100, 14);
+    let mut prev = 0.0;
+    for e in &rec.epochs {
+        assert!(e.cum_sim_s > prev);
+        assert!(e.cum_wall_s >= e.wall_s);
+        prev = e.cum_sim_s;
+    }
+}
+
+#[test]
+fn adam_trains_logreg() {
+    // Paper §6 extension: DiveBatch + Adam.  Adam needs a much smaller lr.
+    let mut cfg = base_cfg(
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 0.5,
+            m_max: 8,
+        },
+        12,
+    );
+    cfg.use_adam = true;
+    cfg.schedule = divebatch::coordinator::LrSchedule::constant(0.05, false);
+    let rec = run(cfg, 300, 21);
+    let first = &rec.epochs[0];
+    let last = rec.epochs.last().unwrap();
+    assert!(last.val_loss < first.val_loss);
+    assert!(last.val_acc > 80.0, "val acc {}", last.val_acc);
+    // Diversity still flows to the policy under Adam.
+    assert!(rec.epochs.iter().all(|e| e.delta_hat.is_some()));
+}
+
+#[test]
+fn adam_with_device_update_rejected() {
+    let rt = runtime();
+    let (train, val) = synth_split(100, 22);
+    let mut cfg = base_cfg(Policy::Fixed { m: 8 }, 1);
+    cfg.use_adam = true;
+    cfg.device_update = true;
+    let trainer = Trainer::new(&rt, cfg, train, val, cluster()).unwrap();
+    assert!(trainer.run().is_err());
+}
+
+#[test]
+fn sgld_boosts_diversity_and_batch_growth() {
+    // Same config with and without SGLD noise: the noised run must report
+    // higher Delta_hat (Yin et al.'s mechanism) and thus reach larger
+    // batches at least as fast.
+    let mk = |sigma: f64| {
+        let mut cfg = base_cfg(
+            Policy::DiveBatch {
+                m0: 4,
+                delta: 0.02,
+                m_max: 8,
+            },
+            6,
+        );
+        cfg.schedule = divebatch::coordinator::LrSchedule::constant(0.05, false);
+        cfg.sgld = divebatch::coordinator::SgldConfig { sigma };
+        run(cfg, 200, 23)
+    };
+    let plain = mk(0.0);
+    let noised = mk(0.5);
+    for (p, n) in plain.epochs.iter().zip(&noised.epochs) {
+        let (dp, dn) = (p.delta_hat.unwrap(), n.delta_hat.unwrap());
+        assert!(
+            dn > dp,
+            "epoch {}: sgld delta {dn} should exceed plain {dp}",
+            p.epoch
+        );
+    }
+    assert!(noised.end_batch_size() >= plain.end_batch_size());
+    // And training still works under the injected noise.
+    assert!(noised.epochs.last().unwrap().val_acc > 70.0);
+}
+
+#[test]
+fn mismatched_dataset_rejected() {
+    let rt = runtime();
+    // Image dataset against logreg model must fail fast.
+    let img = divebatch::data::images::generate(&divebatch::ImageSpec {
+        num_classes: 4,
+        per_class: 4,
+        size: 8,
+        noise: 0.3,
+        max_shift: 1,
+        seed: 0,
+    });
+    let (train, val) = img.split(0.8);
+    let cfg = base_cfg(Policy::Fixed { m: 4 }, 1);
+    assert!(Trainer::new(&rt, cfg, train, val, cluster()).is_err());
+}
+
+#[test]
+fn tiny_resnet_trains_on_images() {
+    let rt = runtime();
+    let img = divebatch::data::images::generate(&divebatch::ImageSpec {
+        num_classes: 4,
+        per_class: 30,
+        size: 8,
+        noise: 0.4,
+        max_shift: 1,
+        seed: 5,
+    });
+    let (train, val) = img.split(0.8);
+    let mut cfg = TrainConfig::new(
+        "tinyresnet4",
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 0.5,
+            m_max: 8,
+        },
+        LrSchedule::constant(0.05, true),
+        8,
+    );
+    cfg.momentum = 0.9;
+    let out = Trainer::new(&rt, cfg, train, val, ClusterModel::a100x4(428, 1e5))
+        .unwrap()
+        .run()
+        .unwrap();
+    let rec = out.record;
+    let first = &rec.epochs[0];
+    let last = rec.epochs.last().unwrap();
+    assert!(last.train_loss < first.train_loss, "{rec:?}");
+    // 4 classes, learnable templates: must beat chance (25%).
+    assert!(last.val_acc > 30.0, "val acc {}", last.val_acc);
+}
