@@ -1,0 +1,110 @@
+//! Write-your-own batch policy in ~30 lines.
+//!
+//! Demonstrates the open `BatchPolicy` API: a plateau-triggered batch
+//! grower defined *in this file* — no edits to `trainer.rs`, `args.rs`,
+//! or anything else in the crate — trained head-to-head against a
+//! registry-parsed wrapped DiveBatch spec.
+//!
+//! ```bash
+//! make artifacts            # once
+//! cargo run --release --example custom_policy
+//! ```
+
+use divebatch::cluster::ClusterModel;
+use divebatch::config::flops_per_sample;
+use divebatch::coordinator::{LrSchedule, PolicyRegistry, TrainConfig, Trainer};
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::runtime::Runtime;
+use divebatch::util::plot::{render, Series};
+use divebatch::{AdaptContext, BatchPolicy, Decision, DiversityNeed, PolicyError, PolicyHandle};
+
+/// Double the batch size whenever validation loss stops improving by at
+/// least `tol` — no gradient-diversity instrumentation needed, just the
+/// loss history the trainer already exposes in [`AdaptContext`].
+#[derive(Clone, Copy, Debug)]
+struct Plateau {
+    m0: usize,
+    m_max: usize,
+    tol: f64,
+}
+
+impl BatchPolicy for Plateau {
+    fn kind(&self) -> &'static str {
+        "plateau"
+    }
+    fn label(&self) -> String {
+        format!("Plateau ({} - {})", self.m0, self.m_max)
+    }
+    fn initial(&self) -> usize {
+        self.m0
+    }
+    fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        let stalled = match ctx.history {
+            [.., prev, last] => prev.val_loss - last.val_loss < self.tol,
+            _ => false,
+        };
+        let next = if stalled {
+            (ctx.batch_size * 2).min(self.m_max)
+        } else {
+            ctx.batch_size
+        };
+        Ok(Decision::new(next, DiversityNeed::None))
+    }
+    fn render_spec(&self) -> String {
+        format!("plateau:m0={},mmax={},tol={}", self.m0, self.m_max, self.tol)
+    }
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let (train, val) = synthetic::generate(&SyntheticSpec {
+        n: 4_000,
+        d: 512,
+        noise: 0.1,
+        seed: 0,
+    })
+    .split(0.8);
+
+    // Arm 1: the custom policy, boxed straight into TrainConfig.
+    let plateau = PolicyHandle::new(Box::new(Plateau {
+        m0: 128,
+        m_max: 4096,
+        tol: 1e-3,
+    }));
+    // Arm 2: a wrapped built-in via the registry spec grammar
+    // (EMA-smoothed DiveBatch clamped to the same range).
+    let wrapped = PolicyRegistry::builtin()
+        .parse("clamp:min=128,max=4096/ema:beta=0.5/divebatch:m0=128,delta=1,mmax=4096")
+        .map_err(anyhow::Error::new)?;
+
+    let mut curves = Vec::new();
+    for policy in [plateau, wrapped] {
+        let label = policy.label();
+        let mut cfg = TrainConfig::new(
+            "logreg512",
+            policy,
+            LrSchedule::step_075_20(16.0, true),
+            20,
+        );
+        cfg.verbose = true;
+        let info = rt.model("logreg512")?;
+        let cluster = ClusterModel::a100x4(info.param_count, flops_per_sample("logreg512"));
+        let rec = Trainer::new(&rt, cfg, train.clone(), val.clone(), cluster)?
+            .run()?
+            .record;
+        println!(
+            "{label}: final val acc {:.2}%  end batch {}",
+            rec.final_val_acc(),
+            rec.end_batch_size()
+        );
+        curves.push(Series::new(&label, rec.batch_size_curve()));
+    }
+    println!(
+        "\n{}",
+        render("batch size per epoch", "epoch", &curves, 64, 12)
+    );
+    Ok(())
+}

@@ -103,8 +103,10 @@ impl RunSpec {
         } else {
             String::new()
         };
+        // v3: the policy component is the canonical registry spec
+        // (PolicyHandle's Debug), not the old enum Debug format.
         let raw = format!(
-            "v2|{}|{:?}|lr{}-d{}-e{}-r{}|ep{}|mu{}|wd{}|cl{:?}|mm{:?}|du{}|{}|t{}{ext}",
+            "v3|{}|{:?}|lr{}-d{}-e{}-r{}|ep{}|mu{}|wd{}|cl{:?}|mm{:?}|du{}|{}|t{}{ext}",
             c.model,
             c.policy,
             s.base,
@@ -251,9 +253,16 @@ mod tests {
         other.trials = 3;
         assert_ne!(a, other.fingerprint());
         let mut other = base.clone();
-        other.cfg.policy = Policy::Fixed { m: 16 };
+        other.cfg.policy = Policy::Fixed { m: 16 }.into();
         assert_ne!(a, other.fingerprint());
         assert!(a.starts_with("m-sgd-"));
+        // Registry-parsed and enum-built policies fingerprint identically
+        // (both reduce to the canonical spec).
+        let mut via_registry = base.clone();
+        via_registry.cfg.policy = crate::coordinator::PolicyRegistry::builtin()
+            .parse("sgd:m=8")
+            .unwrap();
+        assert_eq!(a, via_registry.fingerprint());
     }
 
     #[test]

@@ -346,13 +346,18 @@ mod tests {
         assert_eq!(e.runs[0].cfg.schedule.base, 16.0);
         assert_eq!(e.runs[1].cfg.policy, Policy::Fixed { m: 4096 });
         assert_eq!(e.runs[1].cfg.schedule.base, 512.0);
-        match e.runs[2].cfg.policy {
-            Policy::DiveBatch { m0, delta, m_max } => {
-                assert_eq!((m0, m_max), (128, 4096));
-                assert_eq!(delta, 1.0);
+        assert_eq!(
+            e.runs[2].cfg.policy,
+            Policy::DiveBatch {
+                m0: 128,
+                delta: 1.0,
+                m_max: 4096
             }
-            ref p => panic!("{p:?}"),
-        }
+        );
+        assert_eq!(
+            e.runs[2].cfg.policy.spec(),
+            "divebatch:m0=128,delta=1,mmax=4096"
+        );
         assert!(e.runs[2].cfg.schedule.rescale_with_batch);
         assert_eq!(e.runs[2].cfg.schedule.decay, 0.75);
     }
@@ -370,10 +375,14 @@ mod tests {
         let e = realworld("cifar100", Scale::paper(), false).unwrap();
         assert_eq!(e.runs.len(), 4);
         // delta = 0.01 for cifar100 (Table 4).
-        match e.runs[3].cfg.policy {
-            Policy::DiveBatch { delta, .. } => assert_eq!(delta, 0.01),
-            ref p => panic!("{p:?}"),
-        }
+        assert_eq!(
+            e.runs[3].cfg.policy,
+            Policy::DiveBatch {
+                m0: 128,
+                delta: 0.01,
+                m_max: 2048
+            }
+        );
         // momentum + wd on image runs.
         assert_eq!(e.runs[0].cfg.momentum, 0.9);
         // clipping enabled as the BN substitute on image runs.

@@ -1,13 +1,16 @@
 //! The L3 coordinator — the paper's system contribution (DESIGN.md §4).
 //!
-//! * [`policy`]    — batch-size policies: Fixed SGD, AdaBatch, DiveBatch
-//!   (Algorithm 1), Oracle (exact-diversity ablation)
+//! * [`policy`]    — the open [`BatchPolicy`] controller API: built-in
+//!   Fixed SGD / AdaBatch / DiveBatch (Algorithm 1) / Oracle policies,
+//!   composable wrappers (Warmup, Clamp, EMA hysteresis, Chain), and the
+//!   [`PolicyRegistry`] that owns CLI spec parsing
 //! * [`plan`]      — accumulation planner over the compiled micro-batch
 //!   ladder (static-shape PJRT executables <-> dynamic batch sizes)
 //! * [`schedule`]  — LR step decay + Goyal linear batch rescaling
 //! * [`optimizer`] — reference SGD(+momentum,+wd) on the flat params
 //! * [`diversity`] — Definition-2 epoch accumulators (f64)
-//! * [`trainer`]   — the epoch event loop tying it all together
+//! * [`trainer`]   — the epoch event loop driving a boxed [`BatchPolicy`]
+//!   through `on_epoch_start` / `on_step` / `on_epoch_end`
 
 pub mod diversity;
 pub mod optimizer;
@@ -20,7 +23,10 @@ pub mod trainer;
 pub use diversity::DiversityAccum;
 pub use optimizer::{AdamOptimizer, Optim, SgdOptimizer};
 pub use plan::{MicroBlock, MicroPlan};
-pub use policy::{DiversityNeed, DiversityStats, Policy};
+pub use policy::{
+    AdaptContext, BatchPolicy, Decision, DiversityNeed, DiversityStats, HistoryPoint, Policy,
+    PolicyEntry, PolicyError, PolicyHandle, PolicyRegistry,
+};
 pub use schedule::LrSchedule;
 pub use sgld::SgldConfig;
 pub use trainer::{TrainConfig, TrainOutcome, Trainer};

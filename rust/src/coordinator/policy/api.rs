@@ -1,0 +1,397 @@
+//! The open controller API: [`BatchPolicy`], its step protocol
+//! ([`AdaptContext`] in, [`Decision`] out), the typed [`PolicyError`],
+//! and the [`PolicyHandle`] value type that `TrainConfig` carries.
+//!
+//! The trainer owns the event loop and calls the policy at three points:
+//!
+//! 1. `on_epoch_start(ctx)` — the epoch is about to run at
+//!    `ctx.batch_size`;
+//! 2. `on_step(ctx)` — after every optimizer step, *only* when
+//!    `wants_step_decisions()` returns true.  Returning `Some(decision)`
+//!    resizes the remaining logical batches of the epoch
+//!    (`decision.next_batch`); `need` / `lr_rescale` are ignored here —
+//!    instrumentation and lr changes are epoch-granular;
+//! 3. `on_epoch_end(ctx)` — the boundary decision: next epoch's batch
+//!    size, its diversity instrumentation, and an optional lr rescale
+//!    factor.
+//!
+//! Policies are stateful (`&mut self`) and cheap to clone
+//! ([`BatchPolicy::clone_box`]); the trainer clones a fresh instance from
+//! the [`PolicyHandle`] prototype per run, so trials never leak state
+//! into each other.
+
+use std::fmt;
+
+use super::{DiversityNeed, DiversityStats};
+
+/// Summary of one completed epoch, exposed to policies as recent history
+/// (oldest first).  Deliberately lightweight — policies that want the
+/// full record can track their own state in the hooks.
+#[derive(Clone, Copy, Debug)]
+pub struct HistoryPoint {
+    pub epoch: usize,
+    /// Logical batch size the epoch ran at.
+    pub batch_size: usize,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+}
+
+/// Everything a policy may consult when making a decision.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptContext<'a> {
+    /// Current epoch index (0-based).
+    pub epoch: usize,
+    /// Optimizer steps completed so far this epoch (0 at epoch start).
+    pub step: usize,
+    /// Current logical batch size.
+    pub batch_size: usize,
+    /// Training-set size.
+    pub n: usize,
+    /// The run's Goyal-rescaling reference batch size (the base
+    /// policy's `rescale_reference()`, usually its `m0`).
+    pub m0: usize,
+    /// Diversity statistics: the running epoch estimate on `on_step`,
+    /// the epoch total (or exact full-dataset recomputation, per
+    /// [`DiversityNeed`]) on `on_epoch_end`; `None` when the policy
+    /// requested no instrumentation.
+    pub stats: Option<DiversityStats>,
+    /// Completed-epoch summaries, oldest first.
+    pub history: &'a [HistoryPoint],
+    /// Simulated cluster seconds elapsed so far (`ClusterModel` timing).
+    pub sim_elapsed: f64,
+    /// Real wall-clock seconds elapsed so far on this testbed.
+    pub wall_elapsed: f64,
+}
+
+impl AdaptContext<'_> {
+    /// The diversity stats, or a typed [`PolicyError::MissingStats`] —
+    /// diversity-driven policies call this instead of panicking.
+    pub fn stats_or_err(&self, policy: &str) -> Result<DiversityStats, PolicyError> {
+        self.stats.ok_or_else(|| PolicyError::MissingStats {
+            policy: policy.to_string(),
+        })
+    }
+}
+
+/// A policy's verdict for the next epoch (or, from `on_step`, for the
+/// remainder of the current one).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Logical batch size to use next.
+    pub next_batch: usize,
+    /// Diversity instrumentation required for the next epoch.
+    pub need: DiversityNeed,
+    /// Optional multiplicative lr factor applied on top of the
+    /// `LrSchedule` from the next epoch on (`None` leaves the current
+    /// factor in place).  Built-in policies never set this; it is the
+    /// seam for policy-owned rescaling rules beyond Goyal's.
+    pub lr_rescale: Option<f64>,
+}
+
+impl Decision {
+    pub fn new(next_batch: usize, need: DiversityNeed) -> Decision {
+        Decision {
+            next_batch,
+            need,
+            lr_rescale: None,
+        }
+    }
+}
+
+/// Typed errors from policy construction, spec parsing, and decisions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyError {
+    /// A diversity-driven policy was asked to decide without stats.
+    MissingStats { policy: String },
+    /// Spec named a policy the registry does not know.
+    UnknownPolicy {
+        name: String,
+        suggestion: Option<String>,
+    },
+    /// Spec passed a parameter the policy does not declare.
+    UnknownParam {
+        policy: String,
+        key: String,
+        suggestion: Option<String>,
+    },
+    /// A required parameter (no default) was not supplied.
+    MissingParam { policy: String, key: String },
+    /// The same parameter appeared twice in one spec segment.
+    DuplicateParam { policy: String, key: String },
+    /// A parameter value failed to parse or validate.
+    BadValue {
+        policy: String,
+        key: String,
+        value: String,
+        reason: String,
+    },
+    /// The spec itself is malformed (empty segment, wrapper position...).
+    BadSpec { spec: String, msg: String },
+}
+
+impl fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PolicyError::MissingStats { policy } => write!(
+                f,
+                "policy {policy:?} needs diversity stats but none were provided \
+                 (its DiversityNeed and the trainer's instrumentation disagree)"
+            ),
+            PolicyError::UnknownPolicy { name, suggestion } => {
+                write!(f, "unknown policy {name:?}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " — did you mean {s:?}?")?;
+                }
+                write!(f, " (run `divebatch policies` for the list)")
+            }
+            PolicyError::UnknownParam {
+                policy,
+                key,
+                suggestion,
+            } => {
+                write!(f, "unknown parameter {key:?} for policy {policy}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " — did you mean {s:?}?")?;
+                }
+                Ok(())
+            }
+            PolicyError::MissingParam { policy, key } => {
+                write!(f, "policy {policy} needs {key}=")
+            }
+            PolicyError::DuplicateParam { policy, key } => {
+                write!(f, "parameter {key:?} given twice for policy {policy}")
+            }
+            PolicyError::BadValue {
+                policy,
+                key,
+                value,
+                reason,
+            } => {
+                write!(f, "bad {key}={value} for policy {policy}: {reason}")
+            }
+            PolicyError::BadSpec { spec, msg } => {
+                write!(f, "bad policy spec {spec:?}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PolicyError {}
+
+/// A batch-size adaptation policy.  See the module docs for the call
+/// protocol; `smoothed.rs` is a complete ~30-line implementation.
+pub trait BatchPolicy {
+    /// Short machine name for file paths / CLI (`"divebatch"`...).
+    /// Wrappers forward their inner policy's kind.
+    fn kind(&self) -> &'static str;
+
+    /// Human-readable label matching the paper's table rows, e.g.
+    /// `SGD (128)`, `DiveBatch (128 - 2048)`.
+    fn label(&self) -> String;
+
+    /// Batch size for epoch 0.
+    fn initial(&self) -> usize;
+
+    /// Reference batch size for Goyal lr rescaling (`LrSchedule`
+    /// scales by `m / rescale_reference()`).  Defaults to `initial()`;
+    /// wrappers forward the *inner* policy's reference so e.g. a small
+    /// warmup batch does not inflate the post-handover lr.
+    fn rescale_reference(&self) -> usize {
+        self.initial()
+    }
+
+    /// Instrumentation required for epoch 0 (later epochs come from
+    /// [`Decision::need`]).
+    fn diversity_need(&self) -> DiversityNeed {
+        DiversityNeed::None
+    }
+
+    /// Opt in to per-step `on_step` callbacks.  Off by default so
+    /// epoch-granular policies pay zero overhead in the step hot loop.
+    fn wants_step_decisions(&self) -> bool {
+        false
+    }
+
+    /// The epoch is about to run at `ctx.batch_size`.
+    fn on_epoch_start(&mut self, _ctx: &AdaptContext) {}
+
+    /// Called after each optimizer step when `wants_step_decisions()`.
+    /// `Some(d)` resizes the remaining logical batches to
+    /// `d.next_batch`; `None` keeps the current size.
+    fn on_step(&mut self, _ctx: &AdaptContext) -> Option<Decision> {
+        None
+    }
+
+    /// The epoch-boundary decision (Algorithm 1 line 11 for DiveBatch).
+    fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError>;
+
+    /// Canonical spec string: `PolicyRegistry::parse(render_spec())`
+    /// must reconstruct an equivalent policy for registry-parseable
+    /// policies (programmatic-only combinators like `Chain` render a
+    /// descriptive, non-parseable form).
+    fn render_spec(&self) -> String;
+
+    /// Clone into a fresh boxed instance (state included).
+    fn clone_box(&self) -> Box<dyn BatchPolicy>;
+}
+
+impl Clone for Box<dyn BatchPolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// The policy value carried by `TrainConfig`: a cloneable prototype plus
+/// value semantics (`Clone` / `Debug` / `PartialEq` via the canonical
+/// spec) so run configs stay comparable and fingerprintable.  The
+/// trainer calls [`PolicyHandle::build`] to get a fresh stateful
+/// instance per run.
+pub struct PolicyHandle {
+    proto: Box<dyn BatchPolicy>,
+}
+
+impl PolicyHandle {
+    pub fn new(proto: Box<dyn BatchPolicy>) -> PolicyHandle {
+        PolicyHandle { proto }
+    }
+
+    /// Fresh policy instance for one run (prototype state cloned).
+    pub fn build(&self) -> Box<dyn BatchPolicy> {
+        self.proto.clone_box()
+    }
+
+    /// Canonical spec string (the `Debug`/`PartialEq` identity).
+    pub fn spec(&self) -> String {
+        self.proto.render_spec()
+    }
+
+    pub fn label(&self) -> String {
+        self.proto.label()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.proto.kind()
+    }
+
+    pub fn initial(&self) -> usize {
+        self.proto.initial()
+    }
+
+    pub fn rescale_reference(&self) -> usize {
+        self.proto.rescale_reference()
+    }
+
+    pub fn diversity_need(&self) -> DiversityNeed {
+        self.proto.diversity_need()
+    }
+}
+
+impl Clone for PolicyHandle {
+    fn clone(&self) -> Self {
+        PolicyHandle {
+            proto: self.proto.clone_box(),
+        }
+    }
+}
+
+impl fmt::Debug for PolicyHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The canonical spec — this feeds RunSpec::fingerprint.
+        write!(f, "{}", self.spec())
+    }
+}
+
+impl fmt::Display for PolicyHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+impl PartialEq for PolicyHandle {
+    fn eq(&self, other: &PolicyHandle) -> bool {
+        self.spec() == other.spec()
+    }
+}
+
+impl From<Box<dyn BatchPolicy>> for PolicyHandle {
+    fn from(proto: Box<dyn BatchPolicy>) -> PolicyHandle {
+        PolicyHandle::new(proto)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baselines::{DiveBatch, Fixed};
+    use super::*;
+
+    fn ctx(stats: Option<DiversityStats>) -> AdaptContext<'static> {
+        AdaptContext {
+            epoch: 0,
+            step: 0,
+            batch_size: 32,
+            n: 1000,
+            m0: 32,
+            stats,
+            history: &[],
+            sim_elapsed: 0.0,
+            wall_elapsed: 0.0,
+        }
+    }
+
+    #[test]
+    fn handle_identity_is_the_canonical_spec() {
+        let a = PolicyHandle::new(Box::new(Fixed { m: 128 }));
+        let b = PolicyHandle::new(Box::new(Fixed { m: 128 }));
+        let c = PolicyHandle::new(Box::new(Fixed { m: 256 }));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(format!("{a:?}"), "sgd:m=128");
+        assert_eq!(format!("{a}"), "SGD (128)");
+        assert_eq!(a.clone(), a);
+        assert_eq!(a.kind(), "sgd");
+        assert_eq!(a.initial(), 128);
+    }
+
+    #[test]
+    fn handle_builds_independent_instances() {
+        let h = PolicyHandle::new(Box::new(DiveBatch {
+            m0: 8,
+            delta: 0.5,
+            m_max: 64,
+        }));
+        let mut p = h.build();
+        let d = p
+            .on_epoch_end(&ctx(Some(DiversityStats {
+                sqnorm_sum: 50.0,
+                grad_norm2: 25.0,
+            })))
+            .unwrap();
+        assert_eq!(d.next_batch, 64); // 0.5 * 1000 * 2 = 1000, capped
+        // The prototype is untouched; a second build starts fresh.
+        assert_eq!(h.initial(), 8);
+    }
+
+    #[test]
+    fn missing_stats_is_a_typed_error() {
+        let e = ctx(None).stats_or_err("divebatch").unwrap_err();
+        assert_eq!(
+            e,
+            PolicyError::MissingStats {
+                policy: "divebatch".into()
+            }
+        );
+        assert!(e.to_string().contains("divebatch"));
+    }
+
+    #[test]
+    fn error_display_mentions_suggestions() {
+        let e = PolicyError::UnknownParam {
+            policy: "divebatch".into(),
+            key: "detla".into(),
+            suggestion: Some("delta".into()),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("detla") && msg.contains("did you mean") && msg.contains("delta"));
+    }
+}

@@ -1,0 +1,582 @@
+//! The paper's four batch-size policies on the [`BatchPolicy`] trait:
+//! Fixed SGD, AdaBatch, DiveBatch (Algorithm 1), Oracle.  Update rules
+//! are byte-identical to the original closed `Policy` enum — the legacy
+//! shim in `legacy.rs` maps onto these structs.
+
+use super::api::{AdaptContext, BatchPolicy, Decision, PolicyError};
+use super::registry::{Build, ParamMap, ParamSpec, PolicyEntry};
+use super::{DiversityNeed, DiversityStats};
+
+/// Algorithm 1 line 11: `m_{k+1} = min(m_max, delta * n * Delta_hat)`,
+/// floored at `m0` (the paper only ever grows the batch) and capped at
+/// the dataset size.  Degenerate epochs (zero accumulated gradient ->
+/// infinite `Delta_hat`) keep the current batch size rather than jumping.
+pub(crate) fn divebatch_next(
+    m0: usize,
+    delta: f64,
+    m_max: usize,
+    current: usize,
+    n: usize,
+    stats: DiversityStats,
+) -> usize {
+    let delta_hat = stats.delta_hat();
+    if !delta_hat.is_finite() {
+        return current.clamp(m0.min(m_max), m_max);
+    }
+    let target = delta * n as f64 * delta_hat;
+    let target = target.round().max(1.0) as usize;
+    target.clamp(m0, m_max.min(n.max(m0)))
+}
+
+// ---------------------------------------------------------------- Fixed
+
+/// Fixed-batch mini-batch SGD (the paper's SGD baselines).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fixed {
+    pub m: usize,
+}
+
+pub const SGD_PARAMS: &[ParamSpec] = &[ParamSpec {
+    key: "m",
+    default: None,
+    help: "fixed batch size",
+}];
+
+impl BatchPolicy for Fixed {
+    fn kind(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn label(&self) -> String {
+        format!("SGD ({})", self.m)
+    }
+
+    fn initial(&self) -> usize {
+        self.m
+    }
+
+    fn on_epoch_end(&mut self, _ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        Ok(Decision::new(self.m, DiversityNeed::None))
+    }
+
+    fn render_spec(&self) -> String {
+        format!("sgd:m={}", self.m)
+    }
+
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+// -------------------------------------------------------------- AdaBatch
+
+/// AdaBatch (Devarakonda et al. 2018): multiply the batch size by
+/// `factor` every `every` epochs, capped at `m_max`.  `every = 0`
+/// disables growth entirely; `factor = 0` is treated as `factor = 1`
+/// (both pinned by unit tests below).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaBatch {
+    pub m0: usize,
+    pub factor: usize,
+    pub every: usize,
+    pub m_max: usize,
+}
+
+pub const ADABATCH_PARAMS: &[ParamSpec] = &[
+    ParamSpec {
+        key: "m0",
+        default: None,
+        help: "initial batch size",
+    },
+    ParamSpec {
+        key: "factor",
+        default: Some("2"),
+        help: "growth factor (0 acts as 1)",
+    },
+    ParamSpec {
+        key: "every",
+        default: Some("20"),
+        help: "grow every N epochs (0 = never)",
+    },
+    ParamSpec {
+        key: "mmax",
+        default: None,
+        help: "batch-size cap",
+    },
+];
+
+impl BatchPolicy for AdaBatch {
+    fn kind(&self) -> &'static str {
+        "adabatch"
+    }
+
+    fn label(&self) -> String {
+        format!("AdaBatch ({} - {})", self.m0, self.m_max)
+    }
+
+    fn initial(&self) -> usize {
+        self.m0
+    }
+
+    fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        let next = if self.every > 0 && (ctx.epoch + 1) % self.every == 0 {
+            (ctx.batch_size * self.factor.max(1)).min(self.m_max)
+        } else {
+            ctx.batch_size
+        };
+        Ok(Decision::new(next, DiversityNeed::None))
+    }
+
+    fn render_spec(&self) -> String {
+        format!(
+            "adabatch:m0={},factor={},every={},mmax={}",
+            self.m0, self.factor, self.every, self.m_max
+        )
+    }
+
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+// ------------------------------------------------------------- DiveBatch
+
+/// DiveBatch (Algorithm 1): `m_{k+1} = min(m_max, delta * n * Delta_hat)`
+/// from the Definition-2 estimate accumulated during the epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiveBatch {
+    pub m0: usize,
+    pub delta: f64,
+    pub m_max: usize,
+}
+
+pub const DIVEBATCH_PARAMS: &[ParamSpec] = &[
+    ParamSpec {
+        key: "m0",
+        default: None,
+        help: "initial batch size",
+    },
+    ParamSpec {
+        key: "delta",
+        default: Some("0.1"),
+        help: "diversity scale delta (Algorithm 1)",
+    },
+    ParamSpec {
+        key: "mmax",
+        default: None,
+        help: "batch-size cap",
+    },
+];
+
+impl BatchPolicy for DiveBatch {
+    fn kind(&self) -> &'static str {
+        "divebatch"
+    }
+
+    fn label(&self) -> String {
+        format!("DiveBatch ({} - {})", self.m0, self.m_max)
+    }
+
+    fn initial(&self) -> usize {
+        self.m0
+    }
+
+    fn diversity_need(&self) -> DiversityNeed {
+        DiversityNeed::Estimated
+    }
+
+    fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        let stats = ctx.stats_or_err(self.kind())?;
+        Ok(Decision::new(
+            divebatch_next(self.m0, self.delta, self.m_max, ctx.batch_size, ctx.n, stats),
+            DiversityNeed::Estimated,
+        ))
+    }
+
+    fn render_spec(&self) -> String {
+        format!(
+            "divebatch:m0={},delta={},mmax={}",
+            self.m0, self.delta, self.m_max
+        )
+    }
+
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+// ---------------------------------------------------------------- Oracle
+
+/// Oracle: DiveBatch's update rule driven by the *exact* gradient
+/// diversity of the full dataset (section 5.1 ablation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Oracle {
+    pub m0: usize,
+    pub delta: f64,
+    pub m_max: usize,
+}
+
+impl BatchPolicy for Oracle {
+    fn kind(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn label(&self) -> String {
+        format!("Oracle ({} - {})", self.m0, self.m_max)
+    }
+
+    fn initial(&self) -> usize {
+        self.m0
+    }
+
+    fn diversity_need(&self) -> DiversityNeed {
+        DiversityNeed::Exact
+    }
+
+    fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        let stats = ctx.stats_or_err(self.kind())?;
+        Ok(Decision::new(
+            divebatch_next(self.m0, self.delta, self.m_max, ctx.batch_size, ctx.n, stats),
+            DiversityNeed::Exact,
+        ))
+    }
+
+    fn render_spec(&self) -> String {
+        format!(
+            "oracle:m0={},delta={},mmax={}",
+            self.m0, self.delta, self.m_max
+        )
+    }
+
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+// ----------------------------------------------------- registry entries
+
+/// Reject configurations where the floor exceeds the cap (the update
+/// rule's clamp would panic at runtime otherwise).  Shared by the
+/// registry builders and the legacy `Policy::parse` path so both parse
+/// surfaces agree.
+pub(crate) fn check_bounds(policy: &'static str, m0: usize, m_max: usize) -> Result<(), PolicyError> {
+    if m0 == 0 {
+        return Err(PolicyError::BadValue {
+            policy: policy.into(),
+            key: "m0".into(),
+            value: "0".into(),
+            reason: "batch size must be >= 1".into(),
+        });
+    }
+    if m0 > m_max {
+        return Err(PolicyError::BadValue {
+            policy: policy.into(),
+            key: "mmax".into(),
+            value: m_max.to_string(),
+            reason: format!("mmax must be >= m0 ({m0})"),
+        });
+    }
+    Ok(())
+}
+
+pub(crate) fn entries() -> Vec<PolicyEntry> {
+    vec![
+        PolicyEntry {
+            name: "sgd",
+            aliases: &["fixed"],
+            summary: "fixed-batch mini-batch SGD (paper baseline)",
+            params: SGD_PARAMS,
+            build: Build::Base(|p: &ParamMap| {
+                let m = p.usize("m")?;
+                if m == 0 {
+                    return Err(PolicyError::BadValue {
+                        policy: "sgd".into(),
+                        key: "m".into(),
+                        value: "0".into(),
+                        reason: "batch size must be >= 1".into(),
+                    });
+                }
+                Ok(Box::new(Fixed { m }))
+            }),
+        },
+        PolicyEntry {
+            name: "adabatch",
+            aliases: &[],
+            summary: "multiply batch by `factor` every `every` epochs (Devarakonda et al.)",
+            params: ADABATCH_PARAMS,
+            build: Build::Base(|p: &ParamMap| {
+                let (m0, m_max) = (p.usize("m0")?, p.usize("mmax")?);
+                check_bounds("adabatch", m0, m_max)?;
+                Ok(Box::new(AdaBatch {
+                    m0,
+                    factor: p.usize("factor")?,
+                    every: p.usize("every")?,
+                    m_max,
+                }))
+            }),
+        },
+        PolicyEntry {
+            name: "divebatch",
+            aliases: &[],
+            summary: "grow batch with estimated gradient diversity (Algorithm 1)",
+            params: DIVEBATCH_PARAMS,
+            build: Build::Base(|p: &ParamMap| {
+                let (m0, m_max) = (p.usize("m0")?, p.usize("mmax")?);
+                check_bounds("divebatch", m0, m_max)?;
+                Ok(Box::new(DiveBatch {
+                    m0,
+                    delta: p.f64("delta")?,
+                    m_max,
+                }))
+            }),
+        },
+        PolicyEntry {
+            name: "oracle",
+            aliases: &[],
+            summary: "DiveBatch's rule on exact full-dataset diversity (ablation)",
+            params: DIVEBATCH_PARAMS,
+            build: Build::Base(|p: &ParamMap| {
+                let (m0, m_max) = (p.usize("m0")?, p.usize("mmax")?);
+                check_bounds("oracle", m0, m_max)?;
+                Ok(Box::new(Oracle {
+                    m0,
+                    delta: p.f64("delta")?,
+                    m_max,
+                }))
+            }),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::api::PolicyError;
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn ctx(
+        epoch: usize,
+        batch_size: usize,
+        n: usize,
+        stats: Option<DiversityStats>,
+    ) -> AdaptContext<'static> {
+        AdaptContext {
+            epoch,
+            step: 0,
+            batch_size,
+            n,
+            m0: batch_size,
+            stats,
+            history: &[],
+            sim_elapsed: 0.0,
+            wall_elapsed: 0.0,
+        }
+    }
+
+    fn stats(sq: f64, g2: f64) -> Option<DiversityStats> {
+        Some(DiversityStats {
+            sqnorm_sum: sq,
+            grad_norm2: g2,
+        })
+    }
+
+    fn next(p: &mut dyn BatchPolicy, c: &AdaptContext) -> usize {
+        p.on_epoch_end(c).unwrap().next_batch
+    }
+
+    #[test]
+    fn fixed_never_changes() {
+        let mut p = Fixed { m: 128 };
+        for e in 0..100 {
+            assert_eq!(next(&mut p, &ctx(e, 128, 20_000, None)), 128);
+        }
+        assert_eq!(p.diversity_need(), DiversityNeed::None);
+        assert!(!p.wants_step_decisions());
+    }
+
+    #[test]
+    fn adabatch_doubles_every_20() {
+        let mut p = AdaBatch {
+            m0: 128,
+            factor: 2,
+            every: 20,
+            m_max: 2048,
+        };
+        let mut m = p.initial();
+        let mut sizes = vec![m];
+        for e in 0..100 {
+            m = next(&mut p, &ctx(e, m, 50_000, None));
+            sizes.push(m);
+        }
+        assert_eq!(sizes[19], 128);
+        assert_eq!(sizes[20], 256);
+        assert_eq!(sizes[40], 512);
+        assert_eq!(sizes[60], 1024);
+        assert_eq!(sizes[80], 2048);
+        assert_eq!(sizes[100], 2048); // capped
+    }
+
+    #[test]
+    fn adabatch_every_zero_never_grows() {
+        // Pinned edge case: `every = 0` disables the growth schedule
+        // entirely — the policy degenerates to fixed-batch SGD at m0.
+        let mut p = AdaBatch {
+            m0: 64,
+            factor: 4,
+            every: 0,
+            m_max: 4096,
+        };
+        let mut m = p.initial();
+        for e in 0..200 {
+            m = next(&mut p, &ctx(e, m, 10_000, None));
+            assert_eq!(m, 64, "epoch {e}");
+        }
+    }
+
+    #[test]
+    fn adabatch_factor_zero_acts_as_factor_one() {
+        // Pinned edge case: `factor = 0` is clamped to 1 at every growth
+        // boundary, so the batch size never changes (and never collapses
+        // to zero).
+        let mut p = AdaBatch {
+            m0: 32,
+            factor: 0,
+            every: 5,
+            m_max: 1024,
+        };
+        let mut m = p.initial();
+        for e in 0..50 {
+            m = next(&mut p, &ctx(e, m, 10_000, None));
+            assert_eq!(m, 32, "epoch {e}");
+        }
+    }
+
+    #[test]
+    fn divebatch_follows_algorithm1_line11() {
+        let mut p = DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        // delta_hat = 50 / 25 = 2; target = 0.1 * 10_000 * 2 = 2000.
+        assert_eq!(next(&mut p, &ctx(0, 128, 10_000, stats(50.0, 25.0))), 2000);
+        // Cap at m_max.
+        assert_eq!(next(&mut p, &ctx(0, 128, 10_000, stats(500.0, 25.0))), 2048);
+        // Floor at m0.
+        assert_eq!(next(&mut p, &ctx(0, 128, 10_000, stats(0.001, 25.0))), 128);
+    }
+
+    #[test]
+    fn divebatch_degenerate_gradient_keeps_current() {
+        let mut p = DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        assert_eq!(next(&mut p, &ctx(3, 512, 10_000, stats(5.0, 0.0))), 512);
+    }
+
+    #[test]
+    fn diversity_policies_return_typed_error_without_stats() {
+        let mut d = DiveBatch {
+            m0: 4,
+            delta: 0.1,
+            m_max: 8,
+        };
+        match d.on_epoch_end(&ctx(0, 4, 100, None)) {
+            Err(PolicyError::MissingStats { policy }) => assert_eq!(policy, "divebatch"),
+            other => panic!("expected MissingStats, got {other:?}"),
+        }
+        let mut o = Oracle {
+            m0: 4,
+            delta: 0.1,
+            m_max: 8,
+        };
+        assert!(matches!(
+            o.on_epoch_end(&ctx(0, 4, 100, None)),
+            Err(PolicyError::MissingStats { .. })
+        ));
+    }
+
+    #[test]
+    fn oracle_shares_update_rule() {
+        let mut d = DiveBatch {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let mut o = Oracle {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let c = ctx(1, 128, 8_000, stats(30.0, 10.0));
+        assert_eq!(next(&mut d, &c), next(&mut o, &c));
+        assert_eq!(o.diversity_need(), DiversityNeed::Exact);
+        assert_eq!(d.diversity_need(), DiversityNeed::Estimated);
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        assert_eq!(Fixed { m: 2048 }.label(), "SGD (2048)");
+        assert_eq!(
+            AdaBatch {
+                m0: 128,
+                factor: 2,
+                every: 20,
+                m_max: 2048
+            }
+            .label(),
+            "AdaBatch (128 - 2048)"
+        );
+        assert_eq!(
+            DiveBatch {
+                m0: 256,
+                delta: 0.01,
+                m_max: 2048
+            }
+            .label(),
+            "DiveBatch (256 - 2048)"
+        );
+    }
+
+    #[test]
+    fn property_divebatch_always_within_bounds() {
+        let mut p = DiveBatch {
+            m0: 64,
+            delta: 0.1,
+            m_max: 4096,
+        };
+        forall(
+            300,
+            |r: &mut Rng| {
+                (
+                    r.below(1_000_000) as usize + 1,
+                    (r.next_f64() * 1e6, r.next_f64() * 1e6),
+                )
+            },
+            |&(n, (sq, g2))| {
+                let m = next(&mut p, &ctx(0, 64, n, stats(sq, g2)));
+                (64..=4096).contains(&m)
+            },
+        );
+    }
+
+    #[test]
+    fn property_adabatch_monotone_nondecreasing() {
+        let mut p = AdaBatch {
+            m0: 32,
+            factor: 2,
+            every: 5,
+            m_max: 1024,
+        };
+        let mut m = p.initial();
+        for e in 0..200 {
+            let n = next(&mut p, &ctx(e, m, 10_000, None));
+            assert!(n >= m);
+            m = n;
+        }
+        assert_eq!(m, 1024);
+    }
+}

@@ -1,0 +1,441 @@
+//! The original closed `Policy` enum, kept as a thin configuration shim.
+//!
+//! Presets, examples, and tests construct policies as plain enum values;
+//! `From<Policy> for PolicyHandle` maps each variant onto its
+//! [`baselines`] trait implementation, so `TrainConfig::new(model,
+//! Policy::DiveBatch { .. }, ...)` keeps compiling unchanged.  New code
+//! (and anything reachable from the CLI) should go through
+//! [`super::PolicyRegistry`] instead — the enum cannot represent
+//! wrappers or out-of-tree policies.
+
+use std::fmt;
+
+use super::api::PolicyHandle;
+use super::baselines::{self, ADABATCH_PARAMS, DIVEBATCH_PARAMS, SGD_PARAMS};
+use super::registry::{suggest, ParamMap};
+use super::{DiversityNeed, DiversityStats};
+
+/// A batch-size adaptation policy (closed built-in set).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// Fixed-batch mini-batch SGD (the paper's SGD baselines).
+    Fixed { m: usize },
+    /// AdaBatch (Devarakonda et al. 2018): multiply the batch size by
+    /// `factor` every `every` epochs, capped at `m_max`.
+    AdaBatch {
+        m0: usize,
+        factor: usize,
+        every: usize,
+        m_max: usize,
+    },
+    /// DiveBatch (Algorithm 1): `m_{k+1} = min(m_max, delta * n * Delta_hat)`.
+    DiveBatch { m0: usize, delta: f64, m_max: usize },
+    /// Oracle: DiveBatch's update rule driven by the *exact* gradient
+    /// diversity of the full dataset (section 5.1 ablation).
+    Oracle { m0: usize, delta: f64, m_max: usize },
+}
+
+impl Policy {
+    /// Batch size for epoch 0.
+    pub fn initial(&self) -> usize {
+        match *self {
+            Policy::Fixed { m } => m,
+            Policy::AdaBatch { m0, .. } => m0,
+            Policy::DiveBatch { m0, .. } => m0,
+            Policy::Oracle { m0, .. } => m0,
+        }
+    }
+
+    pub fn diversity_need(&self) -> DiversityNeed {
+        match self {
+            Policy::Fixed { .. } | Policy::AdaBatch { .. } => DiversityNeed::None,
+            Policy::DiveBatch { .. } => DiversityNeed::Estimated,
+            Policy::Oracle { .. } => DiversityNeed::Exact,
+        }
+    }
+
+    /// Batch size for epoch `epoch + 1`, given the size used during
+    /// `epoch`, the dataset size `n`, and (for diversity policies) the
+    /// epoch's diversity statistics.
+    ///
+    /// Kept for compatibility; the trainer now drives the equivalent
+    /// [`super::BatchPolicy`] implementations.  Unlike the trait API this
+    /// panics when a diversity policy is called without stats.
+    pub fn next(
+        &self,
+        epoch: usize,
+        current: usize,
+        n: usize,
+        stats: Option<DiversityStats>,
+    ) -> usize {
+        match *self {
+            Policy::Fixed { m } => m,
+            Policy::AdaBatch {
+                factor,
+                every,
+                m_max,
+                ..
+            } => {
+                if every > 0 && (epoch + 1) % every == 0 {
+                    (current * factor.max(1)).min(m_max)
+                } else {
+                    current
+                }
+            }
+            Policy::DiveBatch { m0, delta, m_max } | Policy::Oracle { m0, delta, m_max } => {
+                let stats = stats.expect("diversity policy requires stats");
+                baselines::divebatch_next(m0, delta, m_max, current, n, stats)
+            }
+        }
+    }
+
+    /// Human-readable label matching the paper's table rows, e.g.
+    /// `SGD (128)`, `AdaBatch (128 - 2048)`, `DiveBatch (128 - 2048)`.
+    pub fn label(&self) -> String {
+        match *self {
+            Policy::Fixed { m } => format!("SGD ({m})"),
+            Policy::AdaBatch { m0, m_max, .. } => format!("AdaBatch ({m0} - {m_max})"),
+            Policy::DiveBatch { m0, m_max, .. } => format!("DiveBatch ({m0} - {m_max})"),
+            Policy::Oracle { m0, m_max, .. } => format!("Oracle ({m0} - {m_max})"),
+        }
+    }
+
+    /// Short machine name for file paths / CLI.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Policy::Fixed { .. } => "sgd",
+            Policy::AdaBatch { .. } => "adabatch",
+            Policy::DiveBatch { .. } => "divebatch",
+            Policy::Oracle { .. } => "oracle",
+        }
+    }
+
+    /// Parse a CLI policy spec into the enum, e.g.:
+    /// `sgd:m=128` | `adabatch:m0=128,factor=2,every=20,mmax=2048` |
+    /// `divebatch:m0=128,delta=0.1,mmax=2048` | `oracle:m0=512,delta=0.1,mmax=8192`
+    ///
+    /// Strict like the registry: unknown parameters are rejected with a
+    /// "did you mean" suggestion, and values are validated the same way
+    /// (`m >= 1`, `m0 <= mmax`) so the two parse surfaces agree instead
+    /// of deferring failure to a trainer assert.  Wrapper specs
+    /// (`warmup:.../...`) and out-of-tree policies are registry-only —
+    /// use [`super::PolicyRegistry::parse`].
+    pub fn parse(spec: &str) -> Result<Policy, String> {
+        let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let params = |allowed| ParamMap::from_spec(kind, rest, allowed).map_err(|e| e.to_string());
+        let e = |err: super::PolicyError| err.to_string();
+        match kind {
+            "sgd" | "fixed" => {
+                let m = params(SGD_PARAMS)?.usize("m").map_err(e)?;
+                if m == 0 {
+                    return Err(format!("bad m=0 for policy {kind}: batch size must be >= 1"));
+                }
+                Ok(Policy::Fixed { m })
+            }
+            "adabatch" => {
+                let p = params(ADABATCH_PARAMS)?;
+                let (m0, m_max) = (p.usize("m0").map_err(e)?, p.usize("mmax").map_err(e)?);
+                baselines::check_bounds("adabatch", m0, m_max).map_err(e)?;
+                Ok(Policy::AdaBatch {
+                    m0,
+                    factor: p.usize("factor").map_err(e)?,
+                    every: p.usize("every").map_err(e)?,
+                    m_max,
+                })
+            }
+            "divebatch" | "oracle" => {
+                let p = params(DIVEBATCH_PARAMS)?;
+                let (m0, delta, m_max) = (
+                    p.usize("m0").map_err(e)?,
+                    p.f64("delta").map_err(e)?,
+                    p.usize("mmax").map_err(e)?,
+                );
+                if kind == "divebatch" {
+                    baselines::check_bounds("divebatch", m0, m_max).map_err(e)?;
+                    Ok(Policy::DiveBatch { m0, delta, m_max })
+                } else {
+                    baselines::check_bounds("oracle", m0, m_max).map_err(e)?;
+                    Ok(Policy::Oracle { m0, delta, m_max })
+                }
+            }
+            other => Err(super::PolicyError::UnknownPolicy {
+                name: other.to_string(),
+                suggestion: suggest(
+                    other,
+                    ["sgd", "fixed", "adabatch", "divebatch", "oracle"].into_iter(),
+                ),
+            }
+            .to_string()),
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+impl From<Policy> for PolicyHandle {
+    fn from(p: Policy) -> PolicyHandle {
+        let boxed: Box<dyn super::BatchPolicy> = match p {
+            Policy::Fixed { m } => Box::new(baselines::Fixed { m }),
+            Policy::AdaBatch {
+                m0,
+                factor,
+                every,
+                m_max,
+            } => Box::new(baselines::AdaBatch {
+                m0,
+                factor,
+                every,
+                m_max,
+            }),
+            Policy::DiveBatch { m0, delta, m_max } => {
+                Box::new(baselines::DiveBatch { m0, delta, m_max })
+            }
+            Policy::Oracle { m0, delta, m_max } => Box::new(baselines::Oracle { m0, delta, m_max }),
+        };
+        PolicyHandle::new(boxed)
+    }
+}
+
+/// Presets/tests compare a config's handle against enum literals.
+impl PartialEq<Policy> for PolicyHandle {
+    fn eq(&self, other: &Policy) -> bool {
+        self.spec() == PolicyHandle::from(other.clone()).spec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(sq: f64, g2: f64) -> Option<DiversityStats> {
+        Some(DiversityStats {
+            sqnorm_sum: sq,
+            grad_norm2: g2,
+        })
+    }
+
+    #[test]
+    fn fixed_never_changes() {
+        let p = Policy::Fixed { m: 128 };
+        for e in 0..100 {
+            assert_eq!(p.next(e, 128, 20_000, None), 128);
+        }
+        assert_eq!(p.diversity_need(), DiversityNeed::None);
+    }
+
+    #[test]
+    fn adabatch_doubles_every_20() {
+        let p = Policy::AdaBatch {
+            m0: 128,
+            factor: 2,
+            every: 20,
+            m_max: 2048,
+        };
+        let mut m = p.initial();
+        let mut sizes = vec![m];
+        for e in 0..100 {
+            m = p.next(e, m, 50_000, None);
+            sizes.push(m);
+        }
+        // Doubles at epochs 19->20, 39->40, ... capped at 2048.
+        assert_eq!(sizes[19], 128);
+        assert_eq!(sizes[20], 256);
+        assert_eq!(sizes[40], 512);
+        assert_eq!(sizes[60], 1024);
+        assert_eq!(sizes[80], 2048);
+        assert_eq!(sizes[100], 2048); // capped
+    }
+
+    #[test]
+    fn adabatch_edge_cases_pinned() {
+        // every = 0: the growth schedule is disabled entirely.
+        let p = Policy::AdaBatch {
+            m0: 64,
+            factor: 4,
+            every: 0,
+            m_max: 4096,
+        };
+        for e in 0..100 {
+            assert_eq!(p.next(e, 64, 10_000, None), 64);
+        }
+        // factor = 0: clamped to 1 -> batch never changes, never zeroes.
+        let p = Policy::AdaBatch {
+            m0: 32,
+            factor: 0,
+            every: 5,
+            m_max: 1024,
+        };
+        let mut m = p.initial();
+        for e in 0..50 {
+            m = p.next(e, m, 10_000, None);
+            assert_eq!(m, 32);
+        }
+    }
+
+    #[test]
+    fn divebatch_follows_algorithm1_line11() {
+        let p = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        // delta_hat = 50 / 25 = 2; target = 0.1 * 10_000 * 2 = 2000.
+        assert_eq!(p.next(0, 128, 10_000, stats(50.0, 25.0)), 2000);
+        // Cap at m_max.
+        assert_eq!(p.next(0, 128, 10_000, stats(500.0, 25.0)), 2048);
+        // Floor at m0.
+        assert_eq!(p.next(0, 128, 10_000, stats(0.001, 25.0)), 128);
+    }
+
+    #[test]
+    fn divebatch_degenerate_gradient_keeps_current() {
+        let p = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.1,
+            m_max: 2048,
+        };
+        assert_eq!(p.next(3, 512, 10_000, stats(5.0, 0.0)), 512);
+    }
+
+    #[test]
+    fn oracle_shares_update_rule() {
+        let d = Policy::DiveBatch {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let o = Policy::Oracle {
+            m0: 128,
+            delta: 0.5,
+            m_max: 4096,
+        };
+        let s = stats(30.0, 10.0);
+        assert_eq!(d.next(1, 128, 8_000, s), o.next(1, 128, 8_000, s));
+        assert_eq!(o.diversity_need(), DiversityNeed::Exact);
+        assert_eq!(d.diversity_need(), DiversityNeed::Estimated);
+    }
+
+    #[test]
+    fn labels_match_paper_style() {
+        assert_eq!(Policy::Fixed { m: 2048 }.label(), "SGD (2048)");
+        assert_eq!(
+            Policy::AdaBatch {
+                m0: 128,
+                factor: 2,
+                every: 20,
+                m_max: 2048
+            }
+            .label(),
+            "AdaBatch (128 - 2048)"
+        );
+        assert_eq!(
+            Policy::DiveBatch {
+                m0: 256,
+                delta: 0.01,
+                m_max: 2048
+            }
+            .label(),
+            "DiveBatch (256 - 2048)"
+        );
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Policy::parse("sgd:m=128").unwrap(), Policy::Fixed { m: 128 });
+        assert_eq!(
+            Policy::parse("adabatch:m0=128,mmax=2048").unwrap(),
+            Policy::AdaBatch {
+                m0: 128,
+                factor: 2,
+                every: 20,
+                m_max: 2048
+            }
+        );
+        assert_eq!(
+            Policy::parse("divebatch:m0=256,delta=0.01,mmax=2048").unwrap(),
+            Policy::DiveBatch {
+                m0: 256,
+                delta: 0.01,
+                m_max: 2048
+            }
+        );
+        assert!(Policy::parse("bogus").is_err());
+        assert!(Policy::parse("sgd").is_err()); // missing m
+        assert!(Policy::parse("sgd:m=abc").is_err());
+    }
+
+    #[test]
+    fn parse_validates_values_like_the_registry() {
+        // Both parse surfaces must agree: these used to construct
+        // policies that only failed later, inside the trainer.
+        assert!(Policy::parse("sgd:m=0").is_err());
+        assert!(Policy::parse("divebatch:m0=4096,mmax=128").is_err());
+        assert!(Policy::parse("oracle:m0=0,mmax=128").is_err());
+        assert!(Policy::parse("adabatch:m0=512,mmax=64").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys() {
+        // Previously `divebatch:m0=128,tpyo=5,mmax=2048` parsed fine,
+        // silently dropping the typo'd key.
+        let e = Policy::parse("divebatch:m0=128,tpyo=5,mmax=2048").unwrap_err();
+        assert!(e.contains("tpyo"), "{e}");
+        // Near-miss keys get a suggestion.
+        let e = Policy::parse("divebatch:m0=128,detla=0.5,mmax=2048").unwrap_err();
+        assert!(e.contains("delta"), "{e}");
+        // And near-miss policy names too.
+        let e = Policy::parse("divebatchh:m0=128,mmax=2048").unwrap_err();
+        assert!(e.contains("divebatch"), "{e}");
+    }
+
+    #[test]
+    fn enum_and_handle_agree() {
+        let p = Policy::DiveBatch {
+            m0: 128,
+            delta: 1.0,
+            m_max: 4096,
+        };
+        let h = PolicyHandle::from(p.clone());
+        assert_eq!(h.label(), p.label());
+        assert_eq!(h.kind(), p.kind());
+        assert_eq!(h.initial(), p.initial());
+        assert_eq!(h.diversity_need(), p.diversity_need());
+        assert_eq!(h, p); // PartialEq<Policy> for PolicyHandle
+        assert_eq!(h.spec(), "divebatch:m0=128,delta=1,mmax=4096");
+    }
+
+    #[test]
+    fn handle_decisions_match_enum_next() {
+        // The trait port must be byte-identical to the enum rule.
+        use super::super::api::AdaptContext;
+        let p = Policy::DiveBatch {
+            m0: 64,
+            delta: 0.1,
+            m_max: 4096,
+        };
+        let mut b = PolicyHandle::from(p.clone()).build();
+        let mut m = p.initial();
+        for e in 0..40 {
+            let s = stats((e + 1) as f64 * 3.7, 2.5);
+            let ctx = AdaptContext {
+                epoch: e,
+                step: 0,
+                batch_size: m,
+                n: 10_000,
+                m0: 64,
+                stats: s,
+                history: &[],
+                sim_elapsed: 0.0,
+                wall_elapsed: 0.0,
+            };
+            let want = p.next(e, m, 10_000, s);
+            let got = b.on_epoch_end(&ctx).unwrap().next_batch;
+            assert_eq!(got, want, "epoch {e}");
+            m = got;
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Batch-size controllers: the open [`BatchPolicy`] trait API plus the
+//! built-in policies from the paper.
+//!
+//! Layout:
+//!
+//! * [`api`]       — the [`BatchPolicy`] trait, [`AdaptContext`] /
+//!   [`Decision`] step protocol, [`PolicyError`], and the [`PolicyHandle`]
+//!   value type carried by `TrainConfig`
+//! * [`baselines`] — Fixed SGD, AdaBatch, DiveBatch (Algorithm 1), Oracle
+//! * [`wrappers`]  — composable combinators: [`Warmup`], [`Clamp`],
+//!   [`Ema`] (hysteresis), [`Chain`]
+//! * [`smoothed`]  — EMA-smoothed DiveBatch, the one-file "write your own
+//!   policy" exemplar
+//! * [`registry`]  — [`PolicyRegistry`]: CLI spec grammar
+//!   (`wrapper:.../base:k=v,...`), strict param validation with
+//!   did-you-mean suggestions, and `--list-policies` help
+//! * [`legacy`]    — the closed [`Policy`] enum kept as a thin shim so
+//!   presets and existing call sites keep compiling (`From<Policy> for
+//!   PolicyHandle`)
+//!
+//! The trainer drives a policy through three hooks per epoch:
+//! `on_epoch_start`, `on_step` (mid-epoch adaptation, opt-in via
+//! `wants_step_decisions`), and `on_epoch_end`, which returns the next
+//! epoch's [`Decision`] (batch size, diversity instrumentation, optional
+//! lr rescale).  Adding a new policy is one file + one registration in
+//! [`registry::PolicyRegistry::with_builtins`] — no trainer or CLI edits.
+
+pub mod api;
+pub mod baselines;
+pub mod legacy;
+pub mod registry;
+pub mod smoothed;
+pub mod wrappers;
+
+pub use api::{AdaptContext, BatchPolicy, Decision, HistoryPoint, PolicyError, PolicyHandle};
+pub use baselines::{AdaBatch, DiveBatch, Fixed, Oracle};
+pub use legacy::Policy;
+pub use registry::{Build, ParamMap, ParamSpec, PolicyEntry, PolicyRegistry};
+pub use smoothed::SmoothedDiveBatch;
+pub use wrappers::{Chain, Clamp, Ema, Warmup};
+
+/// Gradient-diversity statistics accumulated over an epoch
+/// (Definition 2 numerator and denominator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DiversityStats {
+    /// `sum_i ||grad_i||^2` accumulated over every sample of the epoch.
+    pub sqnorm_sum: f64,
+    /// `|| sum_i grad_i ||^2` of the epoch-accumulated gradient vector.
+    pub grad_norm2: f64,
+}
+
+impl DiversityStats {
+    /// Estimated gradient diversity `Delta_hat` (Definition 2).
+    pub fn delta_hat(&self) -> f64 {
+        if self.grad_norm2 <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.sqnorm_sum / self.grad_norm2
+        }
+    }
+}
+
+/// Which diversity signal a policy consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiversityNeed {
+    /// No instrumentation (`train_plain`).
+    None,
+    /// Accumulate Definition-2 stats during the epoch (`train_div`).
+    Estimated,
+    /// Recompute the exact diversity on the full dataset at epoch end
+    /// (extra instrumented pass, no parameter updates).
+    Exact,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_hat_definition() {
+        let s = DiversityStats {
+            sqnorm_sum: 12.0,
+            grad_norm2: 3.0,
+        };
+        assert!((s.delta_hat() - 4.0).abs() < 1e-12);
+        assert!(DiversityStats::default().delta_hat().is_infinite());
+    }
+}

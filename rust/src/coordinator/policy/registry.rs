@@ -1,0 +1,524 @@
+//! The policy registry: one table owning CLI spec parsing, labels, and
+//! kinds for every selectable policy and wrapper.
+//!
+//! Spec grammar (`--policy` and presets):
+//!
+//! ```text
+//! spec    := (wrapper "/")* base
+//! wrapper := name [":" params]          e.g.  warmup:epochs=5,m=32
+//! base    := name [":" params]          e.g.  divebatch:m0=128,mmax=4096
+//! params  := key "=" value ("," key "=" value)*
+//! ```
+//!
+//! The leftmost segment is the outermost wrapper:
+//! `clamp:max=1024/warmup:epochs=5,m=32/divebatch:m0=128,mmax=4096`
+//! clamps a warmed-up DiveBatch.  Parsing is strict: unknown policy
+//! names and unknown parameters are rejected with a "did you mean"
+//! suggestion; required parameters (no default) must be present.
+//! `render_spec` of a parsed policy is canonical — parsing it again
+//! reconstructs an equivalent policy (round-trip property-tested below).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::OnceLock;
+
+use super::api::{BatchPolicy, PolicyError, PolicyHandle};
+use super::{baselines, smoothed, wrappers};
+
+/// One declared parameter of a policy spec.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    /// `None` = required.
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Validated `key=value` parameters for one spec segment, with defaults
+/// materialized.  Construction rejects unknown keys (did-you-mean) and
+/// missing required keys.
+#[derive(Clone, Debug)]
+pub struct ParamMap {
+    policy: String,
+    kv: BTreeMap<String, String>,
+}
+
+impl ParamMap {
+    pub fn from_spec(policy: &str, rest: &str, allowed: &[ParamSpec]) -> Result<ParamMap, PolicyError> {
+        let mut kv = BTreeMap::new();
+        for pair in rest.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = pair.split_once('=').ok_or_else(|| PolicyError::BadSpec {
+                spec: pair.to_string(),
+                msg: "expected key=value".into(),
+            })?;
+            let k = k.trim();
+            if !allowed.iter().any(|p| p.key == k) {
+                return Err(PolicyError::UnknownParam {
+                    policy: policy.to_string(),
+                    key: k.to_string(),
+                    suggestion: suggest(k, allowed.iter().map(|p| p.key)),
+                });
+            }
+            if kv.insert(k.to_string(), v.trim().to_string()).is_some() {
+                return Err(PolicyError::DuplicateParam {
+                    policy: policy.to_string(),
+                    key: k.to_string(),
+                });
+            }
+        }
+        for p in allowed {
+            if !kv.contains_key(p.key) {
+                match p.default {
+                    Some(d) => {
+                        kv.insert(p.key.to_string(), d.to_string());
+                    }
+                    None => {
+                        return Err(PolicyError::MissingParam {
+                            policy: policy.to_string(),
+                            key: p.key.to_string(),
+                        })
+                    }
+                }
+            }
+        }
+        Ok(ParamMap {
+            policy: policy.to_string(),
+            kv,
+        })
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, PolicyError> {
+        self.parse(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, PolicyError> {
+        self.parse(key)
+    }
+
+    fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<T, PolicyError> {
+        let v = self.kv.get(key).ok_or_else(|| PolicyError::MissingParam {
+            policy: self.policy.clone(),
+            key: key.to_string(),
+        })?;
+        v.parse().map_err(|_| PolicyError::BadValue {
+            policy: self.policy.clone(),
+            key: key.to_string(),
+            value: v.clone(),
+            reason: "unparseable number".into(),
+        })
+    }
+}
+
+/// Levenshtein distance — inputs are short policy/param names.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate within edit distance 2, for "did you mean".
+pub(crate) fn suggest<'a>(key: &str, candidates: impl Iterator<Item = &'a str>) -> Option<String> {
+    candidates
+        .map(|c| (levenshtein(key, c), c))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| c.to_string())
+}
+
+/// How a registry entry constructs its policy.
+#[derive(Clone, Copy)]
+pub enum Build {
+    /// Terminal policy: params -> policy.
+    Base(fn(&ParamMap) -> Result<Box<dyn BatchPolicy>, PolicyError>),
+    /// Combinator: params + inner policy -> wrapped policy.
+    Wrapper(fn(&ParamMap, Box<dyn BatchPolicy>) -> Result<Box<dyn BatchPolicy>, PolicyError>),
+}
+
+/// One selectable policy or wrapper.
+pub struct PolicyEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub params: &'static [ParamSpec],
+    pub build: Build,
+}
+
+impl PolicyEntry {
+    pub fn is_wrapper(&self) -> bool {
+        matches!(self.build, Build::Wrapper(_))
+    }
+}
+
+/// The registry.  [`PolicyRegistry::builtin`] is the process-wide table
+/// behind the CLI; custom experiments can build their own with
+/// [`PolicyRegistry::new`] + [`PolicyRegistry::register`].
+#[derive(Default)]
+pub struct PolicyRegistry {
+    entries: Vec<PolicyEntry>,
+}
+
+impl PolicyRegistry {
+    pub fn new() -> PolicyRegistry {
+        PolicyRegistry::default()
+    }
+
+    /// All built-in policies and wrappers.  Adding a policy to the CLI
+    /// is one `register` line here plus the policy's own file.
+    pub fn with_builtins() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::new();
+        for e in baselines::entries() {
+            reg.register(e);
+        }
+        reg.register(smoothed::entry());
+        for e in wrappers::entries() {
+            reg.register(e);
+        }
+        reg
+    }
+
+    /// The shared built-in registry (lazily initialized).
+    pub fn builtin() -> &'static PolicyRegistry {
+        static REG: OnceLock<PolicyRegistry> = OnceLock::new();
+        REG.get_or_init(PolicyRegistry::with_builtins)
+    }
+
+    /// Register an entry, replacing any same-name entry.
+    pub fn register(&mut self, entry: PolicyEntry) {
+        self.entries.retain(|e| e.name != entry.name);
+        self.entries.push(entry);
+    }
+
+    pub fn entries(&self) -> &[PolicyEntry] {
+        &self.entries
+    }
+
+    fn lookup(&self, name: &str) -> Result<&PolicyEntry, PolicyError> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name || e.aliases.contains(&name))
+            .ok_or_else(|| PolicyError::UnknownPolicy {
+                name: name.to_string(),
+                suggestion: suggest(
+                    name,
+                    self.entries
+                        .iter()
+                        .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied())),
+                ),
+            })
+    }
+
+    /// Parse a full spec (`wrapper/.../base`) into a policy.
+    pub fn parse_policy(&self, spec: &str) -> Result<Box<dyn BatchPolicy>, PolicyError> {
+        let segs: Vec<&str> = spec.split('/').map(str::trim).collect();
+        if segs.iter().any(|s| s.is_empty()) {
+            return Err(PolicyError::BadSpec {
+                spec: spec.to_string(),
+                msg: "empty spec segment".into(),
+            });
+        }
+        let (&base_seg, wrapper_segs) = segs.split_last().expect("split produced >= 1 segment");
+        let (name, rest) = base_seg.split_once(':').unwrap_or((base_seg, ""));
+        let entry = self.lookup(name.trim())?;
+        let mut policy = match entry.build {
+            Build::Base(build) => build(&ParamMap::from_spec(entry.name, rest, entry.params)?)?,
+            Build::Wrapper(_) => {
+                return Err(PolicyError::BadSpec {
+                    spec: spec.to_string(),
+                    msg: format!(
+                        "{} is a wrapper; end the spec with a base policy, e.g. {}:.../divebatch:m0=128,mmax=4096",
+                        entry.name, entry.name
+                    ),
+                })
+            }
+        };
+        // Apply wrappers right-to-left so the leftmost is outermost.
+        for seg in wrapper_segs.iter().rev() {
+            let (name, rest) = seg.split_once(':').unwrap_or((*seg, ""));
+            let entry = self.lookup(name.trim())?;
+            policy = match entry.build {
+                Build::Wrapper(build) => {
+                    build(&ParamMap::from_spec(entry.name, rest, entry.params)?, policy)?
+                }
+                Build::Base(_) => {
+                    return Err(PolicyError::BadSpec {
+                        spec: spec.to_string(),
+                        msg: format!("base policy {} cannot wrap another policy", entry.name),
+                    })
+                }
+            };
+        }
+        Ok(policy)
+    }
+
+    /// Parse a spec into the [`PolicyHandle`] `TrainConfig` carries.
+    pub fn parse(&self, spec: &str) -> Result<PolicyHandle, PolicyError> {
+        self.parse_policy(spec).map(PolicyHandle::new)
+    }
+
+    /// Human-readable listing for `divebatch policies` / `--list-policies`.
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "batch-size policies — spec grammar: [wrapper/...]base, params key=value,key=value"
+        );
+        for (wrapper_pass, header) in [(false, "base policies"), (true, "wrappers (compose left = outermost)")] {
+            let _ = writeln!(s, "\n{header}:");
+            for e in self.entries.iter().filter(|e| e.is_wrapper() == wrapper_pass) {
+                let aliases = if e.aliases.is_empty() {
+                    String::new()
+                } else {
+                    format!(" (alias: {})", e.aliases.join(", "))
+                };
+                let _ = writeln!(s, "  {:<14}{} — {}", e.name, aliases, e.summary);
+                for p in e.params {
+                    let left = match p.default {
+                        Some(d) => format!("{}={d}", p.key),
+                        None => format!("{} (required)", p.key),
+                    };
+                    let _ = writeln!(s, "      {left:<22} {}", p.help);
+                }
+            }
+        }
+        let _ = writeln!(
+            s,
+            "\nexamples:\n  --policy divebatch:m0=128,delta=1,mmax=4096\n  \
+             --policy warmup:epochs=5,m=64/divebatch:m0=128,mmax=4096\n  \
+             --policy clamp:min=64,max=1024/ema:beta=0.7/divebatch:m0=128,mmax=4096"
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::api::PolicyError;
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn reg() -> &'static PolicyRegistry {
+        PolicyRegistry::builtin()
+    }
+
+    #[test]
+    fn parses_all_builtin_base_policies() {
+        for spec in [
+            "sgd:m=128",
+            "fixed:m=64", // alias
+            "adabatch:m0=128,factor=2,every=20,mmax=2048",
+            "adabatch:m0=128,mmax=2048", // defaults
+            "divebatch:m0=256,delta=0.01,mmax=2048",
+            "oracle:m0=512,delta=0.1,mmax=8192",
+            "divebatch-ema:m0=128,mmax=4096,beta=0.75",
+        ] {
+            let p = reg().parse_policy(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert!(p.initial() > 0, "{spec}");
+        }
+    }
+
+    #[test]
+    fn unknown_policy_rejected_with_suggestion() {
+        match reg().parse_policy("divebatchh:m0=128,mmax=2048") {
+            Err(PolicyError::UnknownPolicy { name, suggestion }) => {
+                assert_eq!(name, "divebatchh");
+                assert_eq!(suggestion.as_deref(), Some("divebatch"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(reg().parse_policy("bogus").is_err());
+    }
+
+    #[test]
+    fn unknown_param_rejected() {
+        // The ISSUE's motivating bug: a typo'd key must not parse.
+        match reg().parse_policy("divebatch:m0=128,tpyo=5,mmax=2048") {
+            Err(PolicyError::UnknownParam { policy, key, .. }) => {
+                assert_eq!(policy, "divebatch");
+                assert_eq!(key, "tpyo");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_param_suggests_nearest_key() {
+        match reg().parse_policy("divebatch:m0=128,detla=0.5,mmax=2048") {
+            Err(PolicyError::UnknownParam { key, suggestion, .. }) => {
+                assert_eq!(key, "detla");
+                assert_eq!(suggestion.as_deref(), Some("delta"));
+            }
+            other => panic!("{other:?}"),
+        }
+        match reg().parse_policy("adabatch:m0=128,evry=10,mmax=2048") {
+            Err(PolicyError::UnknownParam { suggestion, .. }) => {
+                assert_eq!(suggestion.as_deref(), Some("every"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_param_rejected() {
+        // Last-one-wins would silently discard the user's first value —
+        // the same silent-mistake class as unknown keys.
+        match reg().parse_policy("divebatch:m0=128,mmax=2048,mmax=64") {
+            Err(PolicyError::DuplicateParam { policy, key }) => {
+                assert_eq!((policy.as_str(), key.as_str()), ("divebatch", "mmax"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_required_param_rejected() {
+        assert!(matches!(
+            reg().parse_policy("sgd"),
+            Err(PolicyError::MissingParam { .. })
+        ));
+        assert!(matches!(
+            reg().parse_policy("divebatch:m0=128"), // missing mmax
+            Err(PolicyError::MissingParam { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(matches!(
+            reg().parse_policy("sgd:m=abc"),
+            Err(PolicyError::BadValue { .. })
+        ));
+        assert!(matches!(
+            reg().parse_policy("sgd:m=0"),
+            Err(PolicyError::BadValue { .. })
+        ));
+        // Floor above cap cannot construct.
+        assert!(matches!(
+            reg().parse_policy("divebatch:m0=4096,mmax=128"),
+            Err(PolicyError::BadValue { .. })
+        ));
+        assert!(matches!(
+            reg().parse_policy("ema:beta=1.5/divebatch:m0=128,mmax=256"),
+            Err(PolicyError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        for spec in [
+            "",
+            "sgd:m=128/",              // empty segment
+            "/sgd:m=128",              // empty segment
+            "sgd:m128",                // not key=value
+            "warmup:epochs=3,m=8",     // wrapper with no base
+            "sgd:m=8/divebatch:m0=4,mmax=8", // base in wrapper position
+        ] {
+            assert!(reg().parse_policy(spec).is_err(), "{spec:?} should fail");
+        }
+    }
+
+    #[test]
+    fn wrapper_grammar_leftmost_is_outermost() {
+        let p = reg()
+            .parse_policy("clamp:min=16,max=256/warmup:epochs=2,m=32/divebatch:m0=8,mmax=4096")
+            .unwrap();
+        // Outermost clamp pulls warmup's 32 into bounds (already in) and
+        // the rendered spec preserves the wrapper order.
+        assert_eq!(
+            p.render_spec(),
+            "clamp:min=16,max=256/warmup:epochs=2,m=32/divebatch:m0=8,delta=0.1,mmax=4096"
+        );
+        assert_eq!(p.initial(), 32);
+        assert_eq!(p.kind(), "divebatch");
+    }
+
+    #[test]
+    fn custom_registration_is_one_call() {
+        // A fresh registry with only the exemplar policy registered.
+        let mut custom = PolicyRegistry::new();
+        custom.register(super::super::smoothed::entry());
+        let p = custom.parse("divebatch-ema:m0=8,mmax=64").unwrap();
+        assert_eq!(p.kind(), "divebatch-ema");
+        // And the builtin names are absent.
+        assert!(custom.parse("sgd:m=8").is_err());
+    }
+
+    #[test]
+    fn help_lists_every_entry() {
+        let h = reg().help();
+        for e in reg().entries() {
+            assert!(h.contains(e.name), "{} missing from help", e.name);
+        }
+        assert!(h.contains("required"));
+        assert!(h.contains("examples"));
+    }
+
+    /// Deterministically derive a valid spec from fuzz dice (total on
+    /// arbitrary dice, including shrunk short vectors).
+    fn spec_from_dice(d: &[u64]) -> String {
+        let g = |i: usize| d.get(i).copied().unwrap_or(0);
+        let m0 = (g(0) % 512 + 1) as usize;
+        let mmax = m0 + (g(1) % 4096) as usize;
+        let base = match g(2) % 5 {
+            0 => format!("sgd:m={m0}"),
+            1 => format!(
+                "adabatch:m0={m0},factor={},every={},mmax={mmax}",
+                g(3) % 5,
+                g(4) % 9
+            ),
+            2 => format!("divebatch:m0={m0},delta=0.25,mmax={mmax}"),
+            3 => format!("oracle:m0={m0},delta=0.5,mmax={mmax}"),
+            _ => format!("divebatch-ema:m0={m0},delta=0.5,mmax={mmax},beta=0.75"),
+        };
+        match g(5) % 4 {
+            0 => base,
+            1 => format!("warmup:epochs={},m={}/{base}", g(3) % 10, 1 + g(4) % 64),
+            2 => format!("clamp:min={},max={}/{base}", 1 + g(4) % 8, 64 + g(4) % 64),
+            _ => format!("ema:beta=0.25,band=0.5/{base}"),
+        }
+    }
+
+    #[test]
+    fn property_parseable_specs_round_trip() {
+        forall(
+            300,
+            |r: &mut Rng| (0..6).map(|_| r.next_u64()).collect::<Vec<u64>>(),
+            |dice| {
+                let spec = spec_from_dice(dice);
+                let p = match reg().parse_policy(&spec) {
+                    Ok(p) => p,
+                    Err(e) => panic!("dice-generated spec {spec:?} failed: {e}"),
+                };
+                let rendered = p.render_spec();
+                let q = match reg().parse_policy(&rendered) {
+                    Ok(q) => q,
+                    Err(e) => panic!("rendered spec {rendered:?} failed: {e}"),
+                };
+                // Canonical form is a fixed point, and the reconstructed
+                // policy is observationally identical.
+                q.render_spec() == rendered
+                    && q.label() == p.label()
+                    && q.kind() == p.kind()
+                    && q.initial() == p.initial()
+                    && q.diversity_need() == p.diversity_need()
+            },
+        );
+    }
+
+    #[test]
+    fn canonical_spec_materializes_defaults() {
+        let p = reg().parse_policy("divebatch:m0=128,mmax=2048").unwrap();
+        assert_eq!(p.render_spec(), "divebatch:m0=128,delta=0.1,mmax=2048");
+        let q = reg().parse_policy(&p.render_spec()).unwrap();
+        assert_eq!(q.render_spec(), p.render_spec());
+    }
+}

@@ -10,18 +10,25 @@
 //! 3. apply one optimizer update per logical batch
 //!    (`theta -= eta_k/m_k * sum_grad`, + momentum/wd for image runs);
 //! 4. push `(grad_sum, sqnorm_sum)` into the epoch's [`DiversityAccum`];
+//!    step-level policies (`wants_step_decisions`) may resize the
+//!    remaining logical batches mid-epoch via `on_step`;
 //! 5. at the epoch boundary: evaluate on the validation set, optionally
-//!    recompute the exact diversity (Oracle), ask the policy for
-//!    `m_{k+1}`, and apply the LR schedule (incl. Goyal rescaling).
+//!    recompute the exact diversity (Oracle), hand the policy an
+//!    [`AdaptContext`] and apply its [`Decision`] (next batch size, next
+//!    epoch's instrumentation, optional lr rescale), then the LR schedule
+//!    (incl. Goyal rescaling).
 //!
-//! Python never runs here: every numeric kernel is a compiled artifact.
+//! The trainer is generic over any boxed [`BatchPolicy`]: it builds a
+//! fresh stateful instance from the config's [`PolicyHandle`] per run,
+//! so trials never share controller state.  Python never runs here:
+//! every numeric kernel is a compiled artifact.
 
 use anyhow::{bail, Result};
 
 use super::diversity::DiversityAccum;
 use super::optimizer::{AdamOptimizer, Optim, SgdOptimizer};
 use super::plan::MicroPlan;
-use super::policy::{DiversityNeed, DiversityStats, Policy};
+use super::policy::{AdaptContext, DiversityNeed, DiversityStats, HistoryPoint, PolicyHandle};
 use super::schedule::LrSchedule;
 use super::sgld::SgldConfig;
 use crate::cluster::ClusterModel;
@@ -36,7 +43,8 @@ use crate::util::timer::{Profiler, Timer};
 pub struct TrainConfig {
     /// Manifest model name (e.g. "logreg512").
     pub model: String,
-    pub policy: Policy,
+    /// Batch-size controller (any [`super::BatchPolicy`], via handle).
+    pub policy: PolicyHandle,
     pub schedule: LrSchedule,
     pub epochs: usize,
     pub momentum: f64,
@@ -62,10 +70,17 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    pub fn new(model: &str, policy: Policy, schedule: LrSchedule, epochs: usize) -> TrainConfig {
+    /// `policy` accepts the legacy `Policy` enum, a `PolicyHandle` from
+    /// [`super::PolicyRegistry::parse`], or any `Box<dyn BatchPolicy>`.
+    pub fn new(
+        model: &str,
+        policy: impl Into<PolicyHandle>,
+        schedule: LrSchedule,
+        epochs: usize,
+    ) -> TrainConfig {
         TrainConfig {
             model: model.to_string(),
-            policy,
+            policy: policy.into(),
             schedule,
             epochs,
             momentum: 0.0,
@@ -136,10 +151,14 @@ impl<'rt> Trainer<'rt> {
         let cfg = &self.cfg;
         let info = self.rt.model(&cfg.model)?.clone();
         let n = self.train.n();
-        let need = cfg.policy.diversity_need();
-        // Only DiveBatch instruments its actual training steps; Oracle
-        // trains plain and pays a separate exact pass at the boundary.
-        let instrumented = need == DiversityNeed::Estimated;
+        // Fresh stateful policy instance for this run.
+        let mut policy = cfg.policy.build();
+        // Instrumentation for epoch 0; later epochs come from decisions.
+        // Only estimating policies instrument their actual training
+        // steps; Oracle trains plain and pays a separate exact pass at
+        // the boundary.
+        let mut need = policy.diversity_need();
+        let step_decisions = policy.wants_step_decisions();
 
         if cfg.device_update && cfg.use_adam {
             bail!("device_update supports the SGD path only");
@@ -161,11 +180,6 @@ impl<'rt> Trainer<'rt> {
             info.input_shape.len(),
             info.chunk,
         );
-        let mem_mode = if instrumented {
-            MemMode::DivChunked
-        } else {
-            MemMode::Plain
-        };
 
         let mut record = RunRecord::new(
             &cfg.policy.label(),
@@ -176,10 +190,16 @@ impl<'rt> Trainer<'rt> {
         );
         let mut profile = Profiler::new();
 
-        let m0 = cfg.policy.initial();
+        let m0 = policy.initial();
+        // Goyal rescaling reference: the base policy's m0 even under
+        // wrappers (a warmup batch must not inflate the rescaled lr).
+        let lr_ref = policy.rescale_reference();
         let mut m_k = m0;
+        // Policy-owned lr factor on top of the schedule (Decision::lr_rescale).
+        let mut lr_scale = 1.0f64;
         let mut cum_wall = 0.0;
         let mut cum_sim = 0.0;
+        let mut history: Vec<HistoryPoint> = Vec::new();
 
         // Reusable buffers (no allocation inside the epoch loop — §Perf).
         let mut batch_buf = Batch::empty();
@@ -187,19 +207,45 @@ impl<'rt> Trainer<'rt> {
         // Per-run executable handles: the runtime cache is keyed by a
         // formatted string (alloc + hash per lookup); the ladder has <= 4
         // rungs, so a linear-scan Vec of Rc handles makes the per-block
-        // lookup free (§Perf L3 iteration 1).
-        let mut exec_handles: Vec<(usize, std::rc::Rc<crate::runtime::Executable>)> = Vec::new();
+        // lookup free (§Perf L3 iteration 1).  Keyed by (micro,
+        // instrumented) because dynamic-need policies may flip the
+        // executable variant between epochs.
+        let mut exec_handles: Vec<((usize, bool), std::rc::Rc<crate::runtime::Executable>)> =
+            Vec::new();
 
         for epoch in 0..cfg.epochs {
             let epoch_timer = Timer::start();
-            let lr = cfg.schedule.lr(epoch, m_k, m0);
+            let instrumented = need == DiversityNeed::Estimated;
+            let mem_mode = if instrumented {
+                MemMode::DivChunked
+            } else {
+                MemMode::Plain
+            };
+            let lr = cfg.schedule.lr(epoch, m_k, lr_ref) * lr_scale;
             let mut diversity = DiversityAccum::new(info.param_count);
             let mut train_loss_sum = 0.0;
             let mut train_correct = 0.0;
             let mut steps = 0usize;
 
-            let batches = EpochBatches::new(n, m_k, &mut shuffle_rng);
-            for indices in batches {
+            policy.on_epoch_start(&AdaptContext {
+                epoch,
+                step: 0,
+                batch_size: m_k,
+                n,
+                m0: lr_ref,
+                stats: None,
+                history: &history,
+                sim_elapsed: cum_sim,
+                wall_elapsed: cum_wall,
+            });
+
+            // Current logical batch size; step-level policies may resize
+            // the remaining batches of the epoch.
+            let mut m_cur = m_k;
+            let mut m_peak = m_k;
+            let sim_before_steps = cum_sim;
+            let mut batches = EpochBatches::new(n, m_cur, &mut shuffle_rng);
+            while let Some(indices) = batches.next() {
                 let logical = indices.len();
                 let plan = MicroPlan::build(logical, &info.ladder, cfg.max_micro);
                 grad_accum.iter_mut().for_each(|g| *g = 0.0);
@@ -211,12 +257,13 @@ impl<'rt> Trainer<'rt> {
                         let _g = profile.section("gather");
                         self.train.gather_into(idx, block.micro, &mut batch_buf);
                     }
-                    let exec = match exec_handles.iter().find(|(m, _)| *m == block.micro) {
+                    let key = (block.micro, instrumented);
+                    let exec = match exec_handles.iter().find(|(k, _)| *k == key) {
                         Some((_, e)) => e.clone(),
                         None => {
                             let _g = profile.section("compile");
                             let e = self.rt.train_exec(&cfg.model, instrumented, block.micro)?;
-                            exec_handles.push((block.micro, e.clone()));
+                            exec_handles.push((key, e.clone()));
                             e
                         }
                     };
@@ -231,7 +278,7 @@ impl<'rt> Trainer<'rt> {
                         }
                         train_loss_sum += out.loss_sum;
                         train_correct += out.correct;
-                        if need == DiversityNeed::Estimated {
+                        if instrumented {
                             diversity.push(&out.grad_sum, out.sqnorm_sum, block.take);
                         }
                     }
@@ -269,7 +316,47 @@ impl<'rt> Trainer<'rt> {
                 }
                 steps += 1;
                 cum_sim += self.cluster.step_time(logical, instrumented);
+
+                // Step-level adaptation (opt-in): the policy may resize
+                // the remaining logical batches of this epoch.  Only
+                // `next_batch` is applied here; instrumentation and lr
+                // changes are epoch-granular.
+                if step_decisions {
+                    let step_stats = if instrumented && diversity.samples() > 0 {
+                        Some(cfg.sgld.adjust_stats(
+                            diversity.stats(),
+                            diversity.samples(),
+                            info.param_count,
+                        ))
+                    } else {
+                        None
+                    };
+                    let ctx = AdaptContext {
+                        epoch,
+                        step: steps,
+                        batch_size: m_cur,
+                        n,
+                        m0: lr_ref,
+                        stats: step_stats,
+                        history: &history,
+                        sim_elapsed: cum_sim,
+                        wall_elapsed: cum_wall + epoch_timer.seconds(),
+                    };
+                    if let Some(d) = policy.on_step(&ctx) {
+                        let next = d.next_batch.max(1);
+                        if next != m_cur {
+                            m_cur = next;
+                            m_peak = m_peak.max(m_cur);
+                            batches.set_batch_size(m_cur);
+                        }
+                    }
+                }
             }
+
+            // Actual simulated time spent in this epoch's steps (exact
+            // under mid-epoch resizes; equals the closed-form epoch
+            // estimate only when the batch size was constant).
+            let sim_steps = cum_sim - sim_before_steps;
 
             // Epoch boundary: diversity statistics for the policy.
             let (stats, delta_hat, n_delta, exact_delta) = match need {
@@ -307,13 +394,23 @@ impl<'rt> Trainer<'rt> {
 
             let wall = epoch_timer.seconds();
             cum_wall += wall;
-            let sim_epoch = self.cluster.epoch_time(n, m_k, instrumented);
+            // Epoch-granular policies keep the paper's closed-form epoch
+            // estimate (byte-identical records); step-level policies get
+            // the per-step accumulation, which reflects mid-epoch sizes.
+            let sim_epoch = if step_decisions {
+                sim_steps
+            } else {
+                self.cluster.epoch_time(n, m_k, instrumented)
+            };
+            let train_loss = train_loss_sum / n as f64;
             record.epochs.push(EpochRecord {
                 epoch,
+                // The size the epoch *started* at; step-level policies
+                // may have resized mid-epoch (see `steps` and `mem_mb`).
                 batch_size: m_k,
                 lr,
                 steps,
-                train_loss: train_loss_sum / n as f64,
+                train_loss,
                 train_acc: 100.0 * train_correct / n as f64,
                 val_loss,
                 val_acc,
@@ -324,13 +421,22 @@ impl<'rt> Trainer<'rt> {
                 sim_s: sim_epoch,
                 cum_wall_s: cum_wall,
                 cum_sim_s: cum_sim,
-                mem_mb: mem_model.step_mb(m_k, mem_mode),
+                // Peak batch size of the epoch (== m_k unless a
+                // step-level policy grew it mid-epoch).
+                mem_mb: mem_model.step_mb(m_peak, mem_mode),
+            });
+            history.push(HistoryPoint {
+                epoch,
+                batch_size: m_k,
+                train_loss,
+                val_loss,
+                val_acc,
             });
             if cfg.verbose {
                 eprintln!(
                     "[{}] epoch {epoch:>3}  m={m_k:<5} lr={lr:<8.4} train_loss={:.4} val_acc={val_acc:.2}%{}",
                     cfg.policy.kind(),
-                    train_loss_sum / n as f64,
+                    train_loss,
                     delta_hat
                         .or(exact_delta)
                         .map(|d| format!(" delta={d:.3e}"))
@@ -338,8 +444,23 @@ impl<'rt> Trainer<'rt> {
                 );
             }
 
-            // Next epoch's batch size (Algorithm 1 line 11 for DiveBatch).
-            m_k = cfg.policy.next(epoch, m_k, n, stats);
+            // Next epoch's decision (Algorithm 1 line 11 for DiveBatch).
+            let decision = policy.on_epoch_end(&AdaptContext {
+                epoch,
+                step: steps,
+                batch_size: m_cur,
+                n,
+                m0: lr_ref,
+                stats,
+                history: &history,
+                sim_elapsed: cum_sim,
+                wall_elapsed: cum_wall,
+            })?;
+            m_k = decision.next_batch.max(1);
+            need = decision.need;
+            if let Some(f) = decision.lr_rescale {
+                lr_scale = f;
+            }
         }
 
         Ok(TrainOutcome {
@@ -406,6 +527,8 @@ impl<'rt> Trainer<'rt> {
 mod tests {
     // Trainer requires a Runtime with compiled artifacts; end-to-end
     // behaviour (loss decreases, policies adapt, oracle matches estimate
-    // on quadratic-like problems) is covered by
-    // rust/tests/integration_trainer.rs over the tiny artifacts.
+    // on quadratic-like problems, registry-parsed specs match enum-built
+    // configs, step-level policies resize mid-epoch) is covered by
+    // rust/tests/integration_trainer.rs and integration_policies.rs over
+    // the tiny artifacts.
 }

@@ -228,6 +228,19 @@ impl EpochBatches {
     pub fn num_batches(&self) -> usize {
         self.perm.len().div_ceil(self.m)
     }
+
+    /// Change the chunk size mid-iteration (step-level batch policies):
+    /// the remaining indices are re-chunked at the new size; already
+    /// yielded batches are unaffected.
+    pub fn set_batch_size(&mut self, m: usize) {
+        assert!(m > 0);
+        self.m = m;
+    }
+
+    /// Current chunk size.
+    pub fn batch_size(&self) -> usize {
+        self.m
+    }
 }
 
 impl Iterator for EpochBatches {
@@ -332,6 +345,18 @@ mod tests {
         let seq: Vec<u32> = EpochBatches::sequential(50, 50).next().unwrap();
         assert_ne!(shuffled, seq);
         assert_eq!(seq, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn set_batch_size_rechunks_remaining_indices() {
+        let mut b = EpochBatches::sequential(20, 4);
+        assert_eq!(b.next().unwrap(), vec![0, 1, 2, 3]);
+        b.set_batch_size(7);
+        assert_eq!(b.batch_size(), 7);
+        assert_eq!(b.next().unwrap(), vec![4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(b.next().unwrap(), vec![11, 12, 13, 14, 15, 16, 17]);
+        assert_eq!(b.next().unwrap(), vec![18, 19]); // tail
+        assert!(b.next().is_none());
     }
 
     #[test]

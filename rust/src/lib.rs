@@ -5,8 +5,8 @@
 //! (Chen, Wang & Sundaram, 2025) as a three-layer Rust + JAX + Pallas
 //! stack:
 //!
-//! * **L3 (this crate)** — the training coordinator: batch-size policies
-//!   (Fixed / AdaBatch / DiveBatch / Oracle), accumulation planning over a
+//! * **L3 (this crate)** — the training coordinator: the open
+//!   [`BatchPolicy`] controller API (below), accumulation planning over a
 //!   compiled micro-batch ladder, optimizer, LR schedules, diversity
 //!   accumulation, data pipeline, simulated-cluster timing, metrics and
 //!   benches.  Owns the event loop; Python never runs here.
@@ -22,7 +22,66 @@
 //! make artifacts                     # AOT: python runs once, never again
 //! cargo run --release --example quickstart
 //! cargo run --release -- train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096
+//! cargo run --release -- policies    # list every policy + wrapper
 //! cargo bench --bench fig1_synthetic
+//! ```
+//!
+//! ## Batch policies
+//!
+//! Batch-size control is an open, trait-based API
+//! ([`coordinator::policy`]).  A policy implements [`BatchPolicy`]: the
+//! trainer hands it an [`AdaptContext`] (epoch, step, current batch,
+//! dataset size, diversity stats, loss/val history, simulated cluster
+//! clock) at `on_epoch_start` / `on_step` / `on_epoch_end`, and receives
+//! a [`Decision`] — the next batch size, the diversity instrumentation
+//! the next epoch needs, and an optional lr rescale factor.  Step-level
+//! policies (opt-in via `wants_step_decisions`) can resize batches
+//! mid-epoch, not just at boundaries.
+//!
+//! Built-ins: Fixed SGD, AdaBatch, DiveBatch (Algorithm 1), Oracle, and
+//! EMA-smoothed DiveBatch, plus composable wrappers (`warmup`, `clamp`,
+//! `ema` hysteresis, programmatic `Chain`).  The [`PolicyRegistry`] owns
+//! the CLI spec grammar:
+//!
+//! ```text
+//! spec := (wrapper "/")* base          leftmost wrapper = outermost
+//! divebatch:m0=128,delta=1,mmax=4096
+//! warmup:epochs=5,m=64/divebatch:m0=128,mmax=4096
+//! clamp:min=64,max=1024/ema:beta=0.7/divebatch:m0=128,mmax=4096
+//! ```
+//!
+//! Parsing is strict — unknown policies/parameters fail with "did you
+//! mean" suggestions — and every registry spec round-trips through
+//! `render_spec` (property-tested).  Writing your own policy is ~30
+//! lines; `coordinator/policy/smoothed.rs` is the template:
+//!
+//! ```ignore
+//! use divebatch::{AdaptContext, BatchPolicy, Decision, DiversityNeed, PolicyError};
+//!
+//! /// Double the batch whenever validation loss stops improving.
+//! #[derive(Clone, Copy, Debug)]
+//! struct Plateau { m0: usize, m_max: usize, tol: f64 }
+//!
+//! impl BatchPolicy for Plateau {
+//!     fn kind(&self) -> &'static str { "plateau" }
+//!     fn label(&self) -> String { format!("Plateau ({} - {})", self.m0, self.m_max) }
+//!     fn initial(&self) -> usize { self.m0 }
+//!     fn on_epoch_end(&mut self, ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+//!         let stalled = match ctx.history {
+//!             [.., prev, last] => prev.val_loss - last.val_loss < self.tol,
+//!             _ => false,
+//!         };
+//!         let next = if stalled { ctx.batch_size * 2 } else { ctx.batch_size };
+//!         Ok(Decision::new(next.min(self.m_max), DiversityNeed::None))
+//!     }
+//!     fn render_spec(&self) -> String {
+//!         format!("plateau:m0={},mmax={},tol={}", self.m0, self.m_max, self.tol)
+//!     }
+//!     fn clone_box(&self) -> Box<dyn BatchPolicy> { Box::new(*self) }
+//! }
+//! // CLI selection = one registration in PolicyRegistry::with_builtins
+//! // (or a custom registry); TrainConfig::new also accepts the boxed
+//! // policy directly.  See examples/custom_policy.rs for the full flow.
 //! ```
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
@@ -40,8 +99,9 @@ pub mod util;
 pub use cluster::ClusterModel;
 pub use config::{presets, DatasetSpec, RunSpec};
 pub use coordinator::{
-    DiversityAccum, DiversityNeed, DiversityStats, LrSchedule, MicroPlan, Policy, SgdOptimizer,
-    TrainConfig, Trainer,
+    AdaptContext, BatchPolicy, Decision, DiversityAccum, DiversityNeed, DiversityStats,
+    HistoryPoint, LrSchedule, MicroPlan, Policy, PolicyError, PolicyHandle, PolicyRegistry,
+    SgdOptimizer, TrainConfig, Trainer,
 };
 pub use data::{Batch, Dataset, EpochBatches, ImageSpec, Labels, SyntheticSpec};
 pub use metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};

@@ -3,15 +3,26 @@
 //! Subcommands:
 //!
 //! * `list`                      — show manifest models + experiment presets
+//! * `policies`                  — list batch-size policies + spec grammar
 //! * `train <model> [opts]`      — one training run with an explicit policy
 //! * `preset <id> [opts]`        — run a DESIGN.md §5 experiment preset
+//!
+//! Policies are resolved through the [`divebatch::PolicyRegistry`]: specs
+//! are `[wrapper/...]base` segments with `key=value` params (leftmost
+//! wrapper outermost), e.g. `divebatch:m0=128,delta=1,mmax=4096` or
+//! `warmup:epochs=5,m=64/divebatch:m0=128,mmax=4096`.  Parsing is strict:
+//! unknown policies and parameters are rejected with a "did you mean"
+//! suggestion.  Adding a policy is one file + one registry registration —
+//! this launcher does not change.
 //!
 //! Examples:
 //!
 //! ```bash
 //! divebatch list
+//! divebatch policies
 //! divebatch train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096 \
 //!     --dataset synthetic --epochs 40 --lr 16 --rescale-lr
+//! divebatch train logreg512 --policy clamp:min=64,max=1024/divebatch:m0=128,mmax=4096
 //! divebatch preset fig1-convex --scale quick --out runs/fig1
 //! ```
 
@@ -19,7 +30,7 @@ use anyhow::{bail, Result};
 
 use divebatch::config::presets::{preset, preset_ids, Scale};
 use divebatch::config::{flops_per_sample, DatasetSpec, RunSpec};
-use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::coordinator::{LrSchedule, PolicyRegistry, TrainConfig};
 use divebatch::data::{ImageSpec, SyntheticSpec};
 use divebatch::util::args::ArgSpec;
 use divebatch::util::plot::{render, Series};
@@ -31,6 +42,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("list") => cmd_list(),
+        Some("policies") | Some("--list-policies") => cmd_policies(),
         Some("train") => cmd_train(&args[1..]),
         Some("preset") => cmd_preset(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -50,12 +62,18 @@ fn main() {
 
 fn usage() -> String {
     "divebatch — gradient-diversity aware batch-size adaptation (paper repro)\n\n\
-     usage: divebatch <list|train|preset> [options]\n\n\
+     usage: divebatch <list|policies|train|preset> [options]\n\n\
      subcommands:\n  \
      list                 show manifest models and experiment presets\n  \
+     policies             list batch-size policies, wrappers, and the spec grammar\n  \
      train <model>        run one training configuration (see train --help)\n  \
      preset <id>          run a paper experiment preset (see preset --help)\n"
         .to_string()
+}
+
+fn cmd_policies() -> Result<()> {
+    println!("{}", PolicyRegistry::builtin().help());
+    Ok(())
 }
 
 fn cmd_list() -> Result<()> {
@@ -79,7 +97,7 @@ fn cmd_list() -> Result<()> {
 fn train_spec() -> ArgSpec {
     ArgSpec::new("divebatch train", "run one training configuration")
         .pos("model", "manifest model name (e.g. logreg512)")
-        .opt("policy", None, "sgd:m=.. | adabatch:m0=..,mmax=.. | divebatch:m0=..,delta=..,mmax=.. | oracle:..")
+        .opt("policy", None, "policy spec, e.g. divebatch:m0=..,delta=..,mmax=.. or warmup:epochs=..,m=../divebatch:.. (see `divebatch policies`)")
         .opt("dataset", Some("synthetic"), "synthetic | cifar10 | cifar100 | tin")
         .opt("n", Some("20000"), "synthetic dataset size")
         .opt("per-class", Some("100"), "images per class (image datasets)")
@@ -110,7 +128,9 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
         }
     };
     let model = a.positional(0).to_string();
-    let policy = Policy::parse(a.str("policy")).map_err(|e| anyhow::anyhow!(e))?;
+    let policy = PolicyRegistry::builtin()
+        .parse(a.str("policy"))
+        .map_err(anyhow::Error::new)?;
     let schedule = LrSchedule {
         base: a.f64("lr"),
         decay: a.f64("decay"),

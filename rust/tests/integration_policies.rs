@@ -1,12 +1,15 @@
 //! Policy-level integration: batch-size trajectories through real training
 //! (AdaBatch schedule shape, DiveBatch growth, plan execution over mixed
-//! ladder rungs) and the RunSpec/preset machinery end to end.
+//! ladder rungs), registry-parsed specs vs enum-built configs, wrapper
+//! and step-level policies through the real trainer, and the
+//! RunSpec/preset machinery end to end.
 
 use divebatch::config::presets::{preset, Scale};
 use divebatch::config::{DatasetSpec, RunSpec};
-use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::coordinator::{LrSchedule, Policy, PolicyRegistry, TrainConfig};
 use divebatch::data::SyntheticSpec;
 use divebatch::runtime::Runtime;
+use divebatch::{AdaptContext, BatchPolicy, Decision, DiversityNeed, PolicyError, PolicyHandle};
 
 fn runtime() -> Runtime {
     Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
@@ -113,6 +116,120 @@ fn csv_writes_from_real_run() {
     assert!(text.starts_with("epoch,batch_size"));
     assert_eq!(text.lines().count(), 4);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_spec_matches_enum_trajectory() {
+    // Acceptance gate for the BatchPolicy redesign: a registry-parsed
+    // spec must produce a byte-identical run to the legacy enum config.
+    let by_enum = run_policy(
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 1.0,
+            m_max: 8,
+        },
+        6,
+        120,
+    );
+    let rt = runtime();
+    let handle = PolicyRegistry::builtin()
+        .parse("divebatch:m0=4,delta=1,mmax=8")
+        .unwrap();
+    let spec = RunSpec {
+        cfg: TrainConfig::new("tinylogreg8", handle, LrSchedule::constant(0.3, false), 6),
+        dataset: tiny_synth(120),
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    let by_spec = spec.run(&rt).unwrap().into_iter().next().unwrap();
+    assert_eq!(by_enum.label, by_spec.label);
+    assert_eq!(by_enum.policy_kind, by_spec.policy_kind);
+    for (a, b) in by_enum.epochs.iter().zip(&by_spec.epochs) {
+        assert_eq!(a.batch_size, b.batch_size, "epoch {}", a.epoch);
+        assert_eq!(a.train_loss, b.train_loss, "epoch {}", a.epoch);
+        assert_eq!(a.val_loss, b.val_loss, "epoch {}", a.epoch);
+        assert_eq!(a.lr, b.lr, "epoch {}", a.epoch);
+    }
+}
+
+#[test]
+fn warmup_wrapper_through_real_training() {
+    let rt = runtime();
+    let handle = PolicyRegistry::builtin()
+        .parse("warmup:epochs=3,m=2/sgd:m=8")
+        .unwrap();
+    let spec = RunSpec {
+        cfg: TrainConfig::new("tinylogreg8", handle, LrSchedule::constant(0.3, false), 6),
+        dataset: tiny_synth(100),
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    let rec = spec.run(&rt).unwrap().into_iter().next().unwrap();
+    let sizes: Vec<usize> = rec.epochs.iter().map(|e| e.batch_size).collect();
+    assert_eq!(sizes, vec![2, 2, 2, 8, 8, 8]);
+    assert!(rec.epochs.iter().all(|e| e.val_loss.is_finite()));
+}
+
+/// A step-level policy: after `grow_at_step` optimizer steps each epoch,
+/// multiply the batch size for the remainder of the epoch.  Exercises
+/// `wants_step_decisions` + `on_step` through the real trainer.
+#[derive(Clone, Copy, Debug)]
+struct StepRamp {
+    m0: usize,
+    grow_at_step: usize,
+    factor: usize,
+}
+
+impl BatchPolicy for StepRamp {
+    fn kind(&self) -> &'static str {
+        "stepramp"
+    }
+    fn label(&self) -> String {
+        format!("StepRamp ({})", self.m0)
+    }
+    fn initial(&self) -> usize {
+        self.m0
+    }
+    fn wants_step_decisions(&self) -> bool {
+        true
+    }
+    fn on_step(&mut self, ctx: &AdaptContext) -> Option<Decision> {
+        (ctx.step == self.grow_at_step)
+            .then(|| Decision::new(ctx.batch_size * self.factor, DiversityNeed::None))
+    }
+    fn on_epoch_end(&mut self, _ctx: &AdaptContext) -> Result<Decision, PolicyError> {
+        // Restart every epoch from m0.
+        Ok(Decision::new(self.m0, DiversityNeed::None))
+    }
+    fn render_spec(&self) -> String {
+        format!("stepramp:m0={}", self.m0)
+    }
+    fn clone_box(&self) -> Box<dyn BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+#[test]
+fn step_level_policy_resizes_mid_epoch() {
+    let rt = runtime();
+    let policy = PolicyHandle::new(Box::new(StepRamp {
+        m0: 4,
+        grow_at_step: 5,
+        factor: 2,
+    }));
+    let spec = RunSpec {
+        cfg: TrainConfig::new("tinylogreg8", policy, LrSchedule::constant(0.3, false), 2),
+        dataset: tiny_synth(200), // 160 train rows
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    let rec = spec.run(&rt).unwrap().into_iter().next().unwrap();
+    // 5 steps at m=4 cover 20 rows; the remaining 140 run at m=8:
+    // 5 + ceil(140/8) = 23 steps, vs 40 had the epoch stayed at m=4.
+    assert_eq!(rec.epochs[0].steps, 5 + 140usize.div_ceil(8));
+    // The boundary decision resets to m0, so every epoch repeats.
+    assert_eq!(rec.epochs[1].steps, rec.epochs[0].steps);
+    assert!(rec.epochs.iter().all(|e| e.val_loss.is_finite()));
 }
 
 #[test]
