@@ -9,8 +9,11 @@
 //! per-sample-gradient kernels.
 //!
 //! ```bash
-//! cargo run --release --example cifar_like_sweep [-- --epochs 30 --per-class 50]
+//! cargo run --release --example cifar_like_sweep [-- --epochs 30 --per-class 50 --trials 3 --jobs 0]
 //! ```
+//!
+//! Multi-trial arms run through the parallel trial engine
+//! (`divebatch::engine`); `--jobs 0` uses every core.
 
 use divebatch::config::presets::{realworld, Scale};
 use divebatch::runtime::Runtime;
@@ -25,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         .opt("epochs", Some("20"), "epochs per arm")
         .opt("per-class", Some("40"), "images per class")
         .opt("trials", Some("1"), "trials per arm")
+        .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
         .flag("rescale-lr", "appendix-E lr rescaling variant")
         .parse_or_exit();
 
@@ -46,8 +50,10 @@ fn main() -> anyhow::Result<()> {
         "Table 1 (example scale)",
         &["algorithm", "25%", "50%", "75%", "100%", "t±1% sim(s)", "t±1% wall(s)"],
     );
+    // Each arm's trials fan across the trial engine (wall-clock columns
+    // measure contended time under --jobs > 1; sim(s) is jobs-invariant).
     for run in &exp.runs {
-        let records = run.run(&rt)?;
+        let records = run.run_jobs(&rt, args.usize("jobs"))?;
         let label = records[0].label.clone();
         eprintln!("done: {label}");
         let accs: Vec<Vec<f64>> = records.iter().map(|r| r.val_acc_curve()).collect();

@@ -4,10 +4,15 @@
 //! schedules track — the paper's validation of Definition 2.
 //!
 //! ```bash
-//! cargo run --release --example oracle_compare [-- --nonconvex]
+//! cargo run --release --example oracle_compare [-- --nonconvex --jobs 2]
 //! ```
+//!
+//! The two arms (DiveBatch, Oracle) run concurrently on the parallel
+//! trial engine — the Oracle's exact full-dataset passes no longer
+//! serialize behind the DiveBatch arm.
 
 use divebatch::config::presets::{fig1_convex, fig1_nonconvex, Scale};
+use divebatch::engine::{TrialRunner, TrialSpec};
 use divebatch::runtime::Runtime;
 use divebatch::util::args::ArgSpec;
 use divebatch::util::plot::{render, Series};
@@ -16,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     let args = ArgSpec::new("oracle_compare", "Figure 2: Oracle vs DiveBatch")
         .opt("epochs", Some("20"), "epochs per run")
         .opt("n", Some("3000"), "synthetic dataset size")
+        .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
         .flag("nonconvex", "use the MLP (Figure 2 bottom) instead of logreg")
         .parse_or_exit();
 
@@ -39,8 +45,11 @@ fn main() -> anyhow::Result<()> {
     let mut batch_series = Vec::new();
     let mut loss_series = Vec::new();
     let mut div_series = Vec::new();
-    for run in arms {
-        let rec = run.run(&rt)?.into_iter().next().unwrap();
+    // Both arms through one engine pool, concurrently.
+    let specs: Vec<TrialSpec> = arms.iter().flat_map(TrialSpec::expand).collect();
+    let results = TrialRunner::new(args.usize("jobs")).run(&rt, &specs);
+    for res in results {
+        let rec = res.map_err(anyhow::Error::new)?;
         eprintln!("done: {}", rec.label);
         batch_series.push(Series::new(&rec.label, rec.batch_size_curve()));
         loss_series.push(Series::new(&rec.label, rec.val_loss_curve()));

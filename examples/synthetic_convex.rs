@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         .opt("epochs", Some("24"), "epochs per run")
         .opt("n", Some("4000"), "synthetic dataset size")
         .opt("trials", Some("1"), "trials per arm")
+        .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
         .parse_or_exit();
 
     let scale = Scale {
@@ -40,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         &["arm", "25%", "50%", "100%", "end m"],
     );
     for run in &exp.runs {
-        let records = run.run(&rt)?;
+        let records = run.run_jobs(&rt, args.usize("jobs"))?;
         let label = records[0].label.clone();
         eprintln!("done: {label}");
         let losses: Vec<Vec<f64>> = records.iter().map(|r| r.val_loss_curve()).collect();

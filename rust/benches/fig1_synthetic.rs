@@ -2,6 +2,8 @@
 //! validation loss/accuracy curves for SGD(small), SGD(large), DiveBatch.
 //!
 //! Scale via env: DIVEBATCH_SCALE=quick|bench|paper (default bench).
+//! Parallelism: DIVEBATCH_JOBS=N trial-engine workers (unset/0 = all
+//! cores; use 1 when the real wall-clock columns matter).
 //! Run: `cargo bench --bench fig1_synthetic`
 
 use divebatch::bench::{bench_header, run_experiment};

@@ -2,7 +2,8 @@
 //! DIVEBATCH (within-epoch estimate): validation loss, batch-size
 //! progression, and the diversity curves themselves.
 //!
-//! Run: `cargo bench --bench fig2_oracle` (DIVEBATCH_SCALE=quick|bench|paper)
+//! Run: `cargo bench --bench fig2_oracle` (DIVEBATCH_SCALE=quick|bench|paper,
+//! DIVEBATCH_JOBS=N trial-engine workers, unset/0 = all cores)
 
 use divebatch::bench::{bench_header, run_experiment};
 use divebatch::config::presets::{preset, Scale};

@@ -3,7 +3,8 @@
 //! DiveBatch (main-text variant: no lr rescaling).
 //!
 //! Run: `cargo bench --bench fig3_4_realworld`
-//! Env: DIVEBATCH_SCALE=quick|bench|paper, DIVEBATCH_DATASETS=cifar10,...
+//! Env: DIVEBATCH_SCALE=quick|bench|paper, DIVEBATCH_DATASETS=cifar10,...,
+//! DIVEBATCH_JOBS=N trial-engine workers (unset/0 = all cores)
 
 use divebatch::bench::{bench_header, run_experiment};
 use divebatch::config::presets::{realworld, Scale};

@@ -3,7 +3,8 @@
 //! SGD(2048) starts at the linearly-scaled lr.  The paper finds this
 //! destabilizes early training on CIFAR-10/100.
 //!
-//! Run: `cargo bench --bench fig5_6_rescale`
+//! Run: `cargo bench --bench fig5_6_rescale` (DIVEBATCH_JOBS=N trial-engine
+//! workers, unset/0 = all cores)
 
 use divebatch::bench::{bench_header, run_experiment};
 use divebatch::config::presets::{realworld, Scale};

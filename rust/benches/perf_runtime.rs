@@ -21,6 +21,12 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::load_default()?;
     let b = Bencher::default();
 
+    // Pre-compile everything a logreg512 run can touch — both train
+    // variants, the eval ladder, AND the fused `update` entry — so no
+    // JIT compile lands inside a measured region below.
+    rt.warmup("logreg512", true)?;
+    rt.warmup("logreg512", false)?;
+
     // ---------------- logreg512: dispatch cost per ladder rung ----------
     let info = rt.model("logreg512")?.clone();
     let ds = synthetic::generate(&SyntheticSpec {

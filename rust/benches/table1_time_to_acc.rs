@@ -3,7 +3,9 @@
 //! including the headline "DiveBatch is 1.06-5x faster" speedup factors.
 //!
 //! Run: `cargo bench --bench table1_time_to_acc`
-//! Env: DIVEBATCH_SCALE, DIVEBATCH_DATASETS (default all three).
+//! Env: DIVEBATCH_SCALE, DIVEBATCH_DATASETS (default all three),
+//! DIVEBATCH_JOBS (trial-engine workers; set 1 for clean wall-clock
+//! columns — sim(s) is jobs-invariant either way).
 
 use divebatch::bench::{bench_header, run_experiment};
 use divebatch::config::presets::{realworld, Scale};

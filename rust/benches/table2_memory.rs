@@ -52,6 +52,9 @@ fn main() -> anyhow::Result<()> {
         );
         let instrumented = run.cfg.policy.kind() == "divebatch";
         let rss_before = peak_rss_mb().unwrap_or(0.0);
+        // Deliberately serial (engine jobs = 1): the measured ΔRSS column
+        // attributes the high-water mark to ONE algorithm at a time, which
+        // concurrent trials would conflate.
         let records = run.run(&rt)?;
         let rss_after = peak_rss_mb().unwrap_or(0.0);
 

@@ -7,7 +7,7 @@
 
 pub mod report;
 
-pub use report::{run_experiment, ArmResult, ExperimentResult};
+pub use report::{run_experiment, run_experiment_jobs, ArmResult, ExperimentResult};
 
 use crate::util::stats::Running;
 use crate::util::timer::Timer;

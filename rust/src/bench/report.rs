@@ -69,26 +69,109 @@ pub struct ExperimentResult {
 /// `results/cache`) so benches that share arms — Figures 3/4 and
 /// Table 1 run the *same* experiments — reuse completed runs.  Set
 /// `DIVEBATCH_NO_CACHE=1` to force recomputation.
+///
+/// Trials of *all* uncached arms are fanned across one trial-engine
+/// worker pool; `DIVEBATCH_JOBS` picks the worker count (unset/0 = all
+/// cores).  Records are identical at any jobs level, but the real
+/// wall-clock columns (`t±1% wall(s)`) measure contended time under
+/// parallel trials — set `DIVEBATCH_JOBS=1` when those columns matter.
+/// Parallel results are cached in a jobs-segregated subdirectory
+/// ([`crate::config::RunSpec::cache_dir_for_jobs`]) so a later
+/// `DIVEBATCH_JOBS=1` run never silently reuses contention-inflated
+/// wall times.
 pub fn run_experiment(rt: &Runtime, exp: &Experiment, verbose: bool) -> Result<ExperimentResult> {
-    let cache_dir = std::path::PathBuf::from(
+    run_experiment_jobs(rt, exp, verbose, crate::engine::jobs_from_env())
+}
+
+/// [`run_experiment`] with an explicit trial-engine jobs knob
+/// (0 = all available cores).
+pub fn run_experiment_jobs(
+    rt: &Runtime,
+    exp: &Experiment,
+    verbose: bool,
+    jobs: usize,
+) -> Result<ExperimentResult> {
+    let base_dir = std::path::PathBuf::from(
         std::env::var("DIVEBATCH_RESULTS").unwrap_or_else(|_| "results/cache".into()),
     );
+    let cache_dir = crate::config::RunSpec::cache_dir_for_jobs(&base_dir, jobs);
     let use_cache = std::env::var("DIVEBATCH_NO_CACHE").is_err();
-    let mut arms = Vec::new();
-    for run in &exp.runs {
+
+    // Resolve cache hits first; everything else becomes engine work.
+    let mut arm_records: Vec<Option<Vec<crate::metrics::RunRecord>>> = Vec::new();
+    let mut pending: Vec<(usize, crate::config::RunSpec)> = Vec::new();
+    for (i, run) in exp.runs.iter().enumerate() {
         let mut r = run.clone();
         r.cfg.verbose = verbose;
-        let t = crate::util::timer::Timer::start();
-        let records = if use_cache {
-            r.run_cached(rt, &cache_dir)?
-        } else {
-            r.run(rt)?
-        };
+        let cached = if use_cache { r.load_cached(&cache_dir) } else { None };
+        let hit = cached.is_some();
+        arm_records.push(cached);
+        if !hit {
+            pending.push((i, r));
+        }
+    }
+
+    if !pending.is_empty() {
+        // One flat trial list across all uncached arms: the pool stays
+        // busy even when arms have uneven trial counts.
+        let mut specs = Vec::new();
+        let mut owner = Vec::new();
+        for (slot, (_, r)) in pending.iter().enumerate() {
+            for t in crate::engine::TrialSpec::expand(r) {
+                specs.push(t);
+                owner.push(slot);
+            }
+        }
+        let runner = crate::engine::TrialRunner::new(jobs);
         eprintln!(
-            "  arm done: {:<26} ({} trials, {:.1}s)",
+            "  engine: {} trials ({} arms) on {} workers",
+            specs.len(),
+            pending.len(),
+            runner.jobs_for(specs.len())
+        );
+        let t = crate::util::timer::Timer::start();
+        let results = runner.run_with(rt, &specs, |spec, res| match res {
+            Ok(_) => eprintln!("  trial done: {}", spec.label()),
+            Err(e) => eprintln!("  trial FAILED: {}: {e}", spec.label()),
+        });
+        let mut grouped: Vec<Vec<crate::metrics::RunRecord>> = Vec::new();
+        grouped.resize_with(pending.len(), Vec::new);
+        let mut first_err = None;
+        for ((res, spec), &slot) in results.into_iter().zip(&specs).zip(&owner) {
+            match res {
+                Ok(rec) => grouped[slot].push(rec),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("{}: {e}", spec.label()));
+                    }
+                }
+            }
+        }
+        eprintln!("  engine: sweep finished in {:.1}s", t.seconds());
+        // Persist every FULLY-completed arm before reporting any failure:
+        // engine isolation means the other arms' work is done, and a rerun
+        // after fixing the failing arm should not recompute them.
+        for ((i, r), recs) in pending.iter().zip(grouped) {
+            if recs.len() != r.trials {
+                continue; // incomplete arm (some trial failed)
+            }
+            if use_cache {
+                r.store_cached(&cache_dir, &recs)?;
+            }
+            arm_records[*i] = Some(recs);
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+    }
+
+    let mut arms = Vec::new();
+    for cached in arm_records {
+        let records = cached.expect("every arm resolved via cache or engine");
+        eprintln!(
+            "  arm done: {:<26} ({} trials)",
             records[0].label,
-            records.len(),
-            t.seconds()
+            records.len()
         );
         arms.push(ArmResult {
             label: records[0].label.clone(),

@@ -22,6 +22,48 @@
 //! Constants default to A100-class magnitudes and can be calibrated from
 //! measured CPU per-sample costs via [`ClusterModel::calibrated`].
 
+/// Per-run overrides of the simulated cluster shape — the knobs a
+/// scenario varies (worker count, instrumentation surcharge) without
+/// retuning the A100-class hardware constants.  Carried by
+/// `TrainConfig` and exposed on the `train`/`sweep` CLI as
+/// `--sim-workers` / `--sim-div-overhead`; the default reproduces the
+/// paper's 4 x A100 testbed exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// Number of data-parallel workers (paper: 4).
+    pub workers: usize,
+    /// Multiplicative per-sample surcharge of diversity-instrumented
+    /// steps (paper's BackPACK regime: ~0.9, i.e. ~1.9x per sample).
+    pub div_overhead: f64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> ClusterSpec {
+        ClusterSpec {
+            workers: 4,
+            div_overhead: 0.9,
+        }
+    }
+}
+
+impl ClusterSpec {
+    /// True when this is the paper's a100x4 configuration (the default);
+    /// non-default specs contribute to run fingerprints so cached results
+    /// from different scenarios never collide.
+    pub fn is_default(&self) -> bool {
+        *self == ClusterSpec::default()
+    }
+
+    /// Instantiate the timing model for a concrete workload.  A zero
+    /// worker count is clamped to 1 (the CLI rejects it earlier).
+    pub fn model(&self, param_count: usize, flops_per_sample: f64) -> ClusterModel {
+        let mut m = ClusterModel::a100x4(param_count, flops_per_sample);
+        m.workers = self.workers.max(1);
+        m.div_overhead = self.div_overhead;
+        m
+    }
+}
+
 /// Synchronous data-parallel step-time model.
 #[derive(Clone, Debug)]
 pub struct ClusterModel {
@@ -175,6 +217,35 @@ mod tests {
         m.workers = 1;
         let t1 = m.step_time(1024, false);
         assert!(t1 > 3.0 * t4, "expected near-4x: {t1} vs {t4}");
+    }
+
+    #[test]
+    fn cluster_spec_overrides_a100x4() {
+        let spec = ClusterSpec::default();
+        assert!(spec.is_default());
+        let base = spec.model(272_000, 250e6);
+        assert_eq!(base.workers, 4);
+        assert!((base.div_overhead - 0.9).abs() < 1e-12);
+
+        let wide = ClusterSpec {
+            workers: 16,
+            div_overhead: 0.2,
+        };
+        assert!(!wide.is_default());
+        let m = wide.model(272_000, 250e6);
+        assert_eq!(m.workers, 16);
+        // More workers shard compute further.
+        assert!(m.step_time(4096, false) < base.step_time(4096, false));
+        // Cheaper instrumentation narrows the div surcharge.
+        let cheap_ratio = m.step_time(4096, true) / m.step_time(4096, false);
+        let base_ratio = base.step_time(4096, true) / base.step_time(4096, false);
+        assert!(cheap_ratio < base_ratio);
+        // Degenerate worker count clamps instead of dividing by zero.
+        let z = ClusterSpec {
+            workers: 0,
+            div_overhead: 0.9,
+        };
+        assert_eq!(z.model(10, 1.0).workers, 1);
     }
 
     #[test]

@@ -6,8 +6,7 @@ pub mod presets;
 
 use anyhow::Result;
 
-use crate::cluster::ClusterModel;
-use crate::coordinator::{TrainConfig, Trainer};
+use crate::coordinator::TrainConfig;
 use crate::data::{images, synthetic, Dataset, ImageSpec, SyntheticSpec};
 use crate::metrics::RunRecord;
 use crate::runtime::Runtime;
@@ -72,14 +71,27 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
-    /// Execute all trials; returns one [`RunRecord`] per trial.
+    /// Execute all trials serially; returns one [`RunRecord`] per trial.
     pub fn run(&self, rt: &Runtime) -> Result<Vec<RunRecord>> {
-        let mut records = Vec::with_capacity(self.trials);
-        for trial in 0..self.trials {
-            let (rec, _) = self.run_trial(rt, trial as u64)?;
-            records.push(rec);
-        }
-        Ok(records)
+        self.run_jobs(rt, 1)
+    }
+
+    /// Execute all trials on up to `jobs` worker threads (0 = all cores)
+    /// through the [`crate::engine`]; records come back in trial order
+    /// and are identical to [`RunSpec::run`]'s at any jobs level (wall
+    /// clock aside).  The first trial failure is reported after the
+    /// whole sweep has completed (panic-isolated trials don't abort
+    /// their siblings).
+    pub fn run_jobs(&self, rt: &Runtime, jobs: usize) -> Result<Vec<RunRecord>> {
+        let specs = crate::engine::TrialSpec::expand(self);
+        let results = crate::engine::TrialRunner::new(jobs).run(rt, &specs);
+        results
+            .into_iter()
+            .zip(&specs)
+            .map(|(res, spec)| {
+                res.map_err(|e| anyhow::anyhow!("{}: {e}", spec.label()))
+            })
+            .collect()
     }
 
     /// A stable fingerprint of everything that determines the run's
@@ -98,11 +110,19 @@ impl RunSpec {
         };
         // Extension knobs only contribute when non-default, so enabling
         // them never invalidates the cache of standard runs.
-        let ext = if c.use_adam || c.sgld.enabled() {
+        let mut ext = if c.use_adam || c.sgld.enabled() {
             format!("|adam{}|sgld{}", c.use_adam, c.sgld.sigma)
         } else {
             String::new()
         };
+        // Simulated-cluster shape feeds the sim_s columns, so scenario
+        // overrides must key distinct cache entries.
+        if !c.cluster.is_default() {
+            ext.push_str(&format!(
+                "|cw{}do{}",
+                c.cluster.workers, c.cluster.div_overhead
+            ));
+        }
         // v3: the policy component is the canonical registry spec
         // (PolicyHandle's Debug), not the old enum Debug format.
         let raw = format!(
@@ -131,42 +151,79 @@ impl RunSpec {
         format!("{}-{}-{h:016x}", c.model, c.policy.kind(), h = h)
     }
 
+    /// Results-cache file for this spec under `cache_dir`.
+    pub fn cache_path(&self, cache_dir: &std::path::Path) -> std::path::PathBuf {
+        cache_dir.join(format!("{}.json", self.fingerprint()))
+    }
+
+    /// Cache directory for results produced at a given trial-engine jobs
+    /// level.  Parallel trials contend for the CPU, inflating the REAL
+    /// wall-clock columns of the records they produce; segregating their
+    /// cache under `jobs<N>/` guarantees a later `--jobs 1` run never
+    /// silently reuses contention-inflated wall times (the simulated
+    /// columns are identical at every jobs level).  Serial runs keep the
+    /// base directory, so pre-existing caches stay valid.
+    pub fn cache_dir_for_jobs(base: &std::path::Path, jobs: usize) -> std::path::PathBuf {
+        let workers = crate::engine::effective_jobs(jobs);
+        if workers <= 1 {
+            base.to_path_buf()
+        } else {
+            base.join(format!("jobs{workers}"))
+        }
+    }
+
+    /// Load this spec's complete trial set from the results cache, if a
+    /// valid entry exists.
+    pub fn load_cached(&self, cache_dir: &std::path::Path) -> Option<Vec<RunRecord>> {
+        let path = self.cache_path(cache_dir);
+        let text = std::fs::read_to_string(&path).ok()?;
+        let json = crate::util::json::parse(&text).ok()?;
+        let recs: Result<Vec<RunRecord>> = json.as_arr()?.iter().map(RunRecord::from_json).collect();
+        let recs = recs.ok()?;
+        (recs.len() == self.trials).then(|| {
+            eprintln!("  (cache hit: {})", path.display());
+            recs
+        })
+    }
+
+    /// Store a completed trial set in the results cache.
+    pub fn store_cached(&self, cache_dir: &std::path::Path, records: &[RunRecord]) -> Result<()> {
+        std::fs::create_dir_all(cache_dir)?;
+        let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
+        std::fs::write(self.cache_path(cache_dir), json.to_string())?;
+        Ok(())
+    }
+
     /// Like [`run`], but memoized on disk: results land in
     /// `<cache_dir>/<fingerprint>.json` and later invocations (e.g. the
     /// Table 1 bench reusing Figure 3's runs) load instead of retraining.
     pub fn run_cached(&self, rt: &Runtime, cache_dir: &std::path::Path) -> Result<Vec<RunRecord>> {
-        let path = cache_dir.join(format!("{}.json", self.fingerprint()));
-        if let Ok(text) = std::fs::read_to_string(&path) {
-            if let Ok(json) = crate::util::json::parse(&text) {
-                if let Some(arr) = json.as_arr() {
-                    let recs: Result<Vec<RunRecord>> =
-                        arr.iter().map(RunRecord::from_json).collect();
-                    if let Ok(recs) = recs {
-                        if recs.len() == self.trials {
-                            eprintln!("  (cache hit: {})", path.display());
-                            return Ok(recs);
-                        }
-                    }
-                }
-            }
+        self.run_cached_jobs(rt, cache_dir, 1)
+    }
+
+    /// [`run_cached`] with the trial engine's jobs knob (0 = all cores).
+    /// Parallel results land in a jobs-segregated cache subdirectory —
+    /// see [`RunSpec::cache_dir_for_jobs`].
+    pub fn run_cached_jobs(
+        &self,
+        rt: &Runtime,
+        cache_dir: &std::path::Path,
+        jobs: usize,
+    ) -> Result<Vec<RunRecord>> {
+        let dir = Self::cache_dir_for_jobs(cache_dir, jobs);
+        if let Some(recs) = self.load_cached(&dir) {
+            return Ok(recs);
         }
-        let records = self.run(rt)?;
-        std::fs::create_dir_all(cache_dir)?;
-        let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
-        std::fs::write(&path, json.to_string())?;
+        let records = self.run_jobs(rt, jobs)?;
+        self.store_cached(&dir, &records)?;
         Ok(records)
     }
 
     /// Execute one trial; returns the record and the stage profile.
+    /// (Delegates to the engine's [`crate::engine::TrialSpec`] — the
+    /// single definition of what a trial is.)
     pub fn run_trial(&self, rt: &Runtime, trial: u64) -> Result<(RunRecord, Profiler)> {
-        let (train, val) = self.dataset.build(trial);
-        let info = rt.model(&self.cfg.model)?;
-        let cluster = ClusterModel::a100x4(info.param_count, self.flops_per_sample);
-        let mut cfg = self.cfg.clone();
-        cfg.seed = trial;
-        let trainer = Trainer::new(rt, cfg, train, val, cluster)?;
-        let out = trainer.run()?;
-        Ok((out.record, out.profile))
+        crate::engine::TrialSpec::from_run(self, trial).execute_profiled(rt)
     }
 }
 
@@ -263,6 +320,47 @@ mod tests {
             .parse("sgd:m=8")
             .unwrap();
         assert_eq!(a, via_registry.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_cluster_spec() {
+        use crate::cluster::ClusterSpec;
+        use crate::coordinator::{LrSchedule, Policy, TrainConfig};
+        let base = RunSpec {
+            cfg: TrainConfig::new(
+                "m",
+                Policy::Fixed { m: 8 },
+                LrSchedule::constant(0.1, false),
+                4,
+            ),
+            dataset: DatasetSpec::Synthetic(SyntheticSpec {
+                n: 10,
+                d: 4,
+                noise: 0.1,
+                seed: 0,
+            }),
+            trials: 1,
+            flops_per_sample: 1.0,
+        };
+        let a = base.fingerprint();
+        // The default cluster spec keeps pre-existing fingerprints valid.
+        let mut explicit = base.clone();
+        explicit.cfg.cluster = ClusterSpec::default();
+        assert_eq!(a, explicit.fingerprint());
+        // Scenario overrides key distinct cache entries.
+        let mut wide = base.clone();
+        wide.cfg.cluster = ClusterSpec {
+            workers: 8,
+            div_overhead: 0.9,
+        };
+        assert_ne!(a, wide.fingerprint());
+        let mut cheap = base.clone();
+        cheap.cfg.cluster = ClusterSpec {
+            workers: 4,
+            div_overhead: 0.1,
+        };
+        assert_ne!(a, cheap.fingerprint());
+        assert_ne!(wide.fingerprint(), cheap.fingerprint());
     }
 
     #[test]

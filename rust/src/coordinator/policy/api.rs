@@ -60,7 +60,12 @@ pub struct AdaptContext<'a> {
     pub history: &'a [HistoryPoint],
     /// Simulated cluster seconds elapsed so far (`ClusterModel` timing).
     pub sim_elapsed: f64,
-    /// Real wall-clock seconds elapsed so far on this testbed.
+    /// Real wall-clock seconds elapsed so far on this testbed.  NOTE:
+    /// under the parallel trial engine this measures *contended* time,
+    /// so a policy that keys decisions off it gives up the engine's
+    /// records-identical-at-any-jobs-level guarantee for its runs —
+    /// prefer `sim_elapsed` for time budgets.  No built-in policy reads
+    /// this field.
     pub wall_elapsed: f64,
 }
 
@@ -181,7 +186,13 @@ impl std::error::Error for PolicyError {}
 
 /// A batch-size adaptation policy.  See the module docs for the call
 /// protocol; `smoothed.rs` is a complete ~30-line implementation.
-pub trait BatchPolicy {
+///
+/// `Send + Sync` is a supertrait: `TrainConfig` (which carries the
+/// prototype via [`PolicyHandle`]) crosses thread boundaries in the
+/// parallel trial engine ([`crate::engine`]).  Policies are plain data —
+/// each trial builds and mutates its own instance — so this costs
+/// implementors nothing.
+pub trait BatchPolicy: Send + Sync {
     /// Short machine name for file paths / CLI (`"divebatch"`...).
     /// Wrappers forward their inner policy's kind.
     fn kind(&self) -> &'static str;

@@ -65,6 +65,11 @@ pub struct TrainConfig {
     /// per-sample gradient noise of std sigma into the updates and apply
     /// the closed-form diversity adjustment (see coordinator/sgld.rs).
     pub sgld: SgldConfig,
+    /// Simulated-cluster shape for this run's `sim_s` timing columns
+    /// (worker count, instrumentation surcharge).  Default: the paper's
+    /// a100x4 constants; the `train`/`sweep` CLI exposes it as
+    /// `--sim-workers` / `--sim-div-overhead`.
+    pub cluster: crate::cluster::ClusterSpec,
     /// Print per-epoch progress lines.
     pub verbose: bool,
 }
@@ -91,6 +96,7 @@ impl TrainConfig {
             device_update: false,
             use_adam: false,
             sgld: SgldConfig::disabled(),
+            cluster: crate::cluster::ClusterSpec::default(),
             verbose: false,
         }
     }
@@ -205,12 +211,12 @@ impl<'rt> Trainer<'rt> {
         let mut batch_buf = Batch::empty();
         let mut grad_accum = vec![0.0f32; info.param_count];
         // Per-run executable handles: the runtime cache is keyed by a
-        // formatted string (alloc + hash per lookup); the ladder has <= 4
-        // rungs, so a linear-scan Vec of Rc handles makes the per-block
-        // lookup free (§Perf L3 iteration 1).  Keyed by (micro,
-        // instrumented) because dynamic-need policies may flip the
-        // executable variant between epochs.
-        let mut exec_handles: Vec<((usize, bool), std::rc::Rc<crate::runtime::Executable>)> =
+        // formatted string (alloc + hash per lookup) behind a lock; the
+        // ladder has <= 4 rungs, so a linear-scan Vec of Arc handles makes
+        // the per-block lookup free and lock-free (§Perf L3 iteration 1).
+        // Keyed by (micro, instrumented) because dynamic-need policies may
+        // flip the executable variant between epochs.
+        let mut exec_handles: Vec<((usize, bool), std::sync::Arc<crate::runtime::Executable>)> =
             Vec::new();
 
         for epoch in 0..cfg.epochs {

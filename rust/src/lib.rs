@@ -9,7 +9,9 @@
 //!   [`BatchPolicy`] controller API (below), accumulation planning over a
 //!   compiled micro-batch ladder, optimizer, LR schedules, diversity
 //!   accumulation, data pipeline, simulated-cluster timing, metrics and
-//!   benches.  Owns the event loop; Python never runs here.
+//!   benches, plus the **parallel trial engine** ([`engine`]) that fans
+//!   multi-policy / multi-seed sweeps across a scoped worker pool.  Owns
+//!   the event loop; Python never runs here.
 //! * **L2 (python/compile, build time)** — JAX model fwd/bwd step
 //!   functions lowered once to HLO text (`make artifacts`).
 //! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
@@ -22,9 +24,28 @@
 //! make artifacts                     # AOT: python runs once, never again
 //! cargo run --release --example quickstart
 //! cargo run --release -- train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096
+//! cargo run --release -- sweep logreg512 --seeds 5 --jobs 0 \
+//!     --policies "sgd:m=128;adabatch:m0=128,mmax=4096;divebatch:m0=128,mmax=4096"
 //! cargo run --release -- policies    # list every policy + wrapper
-//! cargo bench --bench fig1_synthetic
+//! DIVEBATCH_JOBS=0 cargo bench --bench fig1_synthetic
 //! ```
+//!
+//! ## The runtime + trial engine
+//!
+//! The runtime layer ([`runtime`]) is `Send + Sync` end to end: one
+//! [`Runtime`] — PJRT client, manifest, and executable cache — is shared
+//! by every worker thread, with concurrent first access to an entry
+//! compiling it exactly once and execution counts kept exact.  On top of
+//! it, the trial engine ([`engine`]) schedules `(config, dataset, seed)`
+//! trials ([`TrialSpec`]) across a scoped pool ([`TrialRunner`], `--jobs
+//! N`, 0 = all cores), streaming records back **in spec order** with
+//! per-trial panic isolation: a poisoned trial reports an error and the
+//! rest of the sweep completes.  Trial records are identical at every
+//! jobs level (each trial owns its RNG streams and policy instance);
+//! only the real wall-clock columns vary under CPU contention —
+//! `RunRecord::to_canonical_json` is the determinism-comparable view.
+//! The `train`/`sweep`/`preset` subcommands, the figure/table benches
+//! (`DIVEBATCH_JOBS`), and the sweep examples all route through it.
 //!
 //! ## Batch policies
 //!
@@ -92,12 +113,14 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod metrics;
 pub mod runtime;
 pub mod util;
 
-pub use cluster::ClusterModel;
+pub use cluster::{ClusterModel, ClusterSpec};
 pub use config::{presets, DatasetSpec, RunSpec};
+pub use engine::{TrialError, TrialRunner, TrialSpec};
 pub use coordinator::{
     AdaptContext, BatchPolicy, Decision, DiversityAccum, DiversityNeed, DiversityStats,
     HistoryPoint, LrSchedule, MicroPlan, Policy, PolicyError, PolicyHandle, PolicyRegistry,

@@ -5,7 +5,16 @@
 //! * `list`                      — show manifest models + experiment presets
 //! * `policies`                  — list batch-size policies + spec grammar
 //! * `train <model> [opts]`      — one training run with an explicit policy
+//! * `sweep <model> [opts]`      — cross policies x seeds through the
+//!   parallel trial engine (`--jobs N`, 0 = all cores)
 //! * `preset <id> [opts]`        — run a DESIGN.md §5 experiment preset
+//!
+//! Multi-trial work (`train --trials K --jobs N`, `sweep`) fans trials
+//! across a scoped worker pool over one shared runtime/compile cache
+//! ([`divebatch::engine`]); records are identical at any `--jobs` level
+//! (wall-clock columns measure contended time under parallelism — use
+//! `--jobs 1` when they matter).  The simulated-cluster scenario is per
+//! run: `--sim-workers` / `--sim-div-overhead` (paper testbed: 4 / 0.9).
 //!
 //! Policies are resolved through the [`divebatch::PolicyRegistry`]: specs
 //! are `[wrapper/...]base` segments with `key=value` params (leftmost
@@ -23,6 +32,8 @@
 //! divebatch train logreg512 --policy divebatch:m0=128,delta=1,mmax=4096 \
 //!     --dataset synthetic --epochs 40 --lr 16 --rescale-lr
 //! divebatch train logreg512 --policy clamp:min=64,max=1024/divebatch:m0=128,mmax=4096
+//! divebatch sweep logreg512 --seeds 5 --jobs 0 \
+//!     --policies "sgd:m=128;adabatch:m0=128,mmax=4096;divebatch:m0=128,delta=1,mmax=4096"
 //! divebatch preset fig1-convex --scale quick --out runs/fig1
 //! ```
 
@@ -30,13 +41,14 @@ use anyhow::{bail, Result};
 
 use divebatch::config::presets::{preset, preset_ids, Scale};
 use divebatch::config::{flops_per_sample, DatasetSpec, RunSpec};
-use divebatch::coordinator::{LrSchedule, PolicyRegistry, TrainConfig};
+use divebatch::coordinator::{LrSchedule, PolicyHandle, PolicyRegistry, TrainConfig};
 use divebatch::data::{ImageSpec, SyntheticSpec};
-use divebatch::util::args::ArgSpec;
+use divebatch::engine::{TrialRunner, TrialSpec};
+use divebatch::util::args::{ArgSpec, Args};
 use divebatch::util::plot::{render, Series};
 use divebatch::util::stats;
 use divebatch::util::table::{pm, Table};
-use divebatch::Runtime;
+use divebatch::{ClusterSpec, Runtime};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -44,6 +56,7 @@ fn main() {
         Some("list") => cmd_list(),
         Some("policies") | Some("--list-policies") => cmd_policies(),
         Some("train") => cmd_train(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("preset") => cmd_preset(&args[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{}", usage());
@@ -62,11 +75,12 @@ fn main() {
 
 fn usage() -> String {
     "divebatch — gradient-diversity aware batch-size adaptation (paper repro)\n\n\
-     usage: divebatch <list|policies|train|preset> [options]\n\n\
+     usage: divebatch <list|policies|train|sweep|preset> [options]\n\n\
      subcommands:\n  \
      list                 show manifest models and experiment presets\n  \
      policies             list batch-size policies, wrappers, and the spec grammar\n  \
      train <model>        run one training configuration (see train --help)\n  \
+     sweep <model>        cross policies x seeds on the parallel trial engine (see sweep --help)\n  \
      preset <id>          run a paper experiment preset (see preset --help)\n"
         .to_string()
 }
@@ -94,11 +108,10 @@ fn cmd_list() -> Result<()> {
     Ok(())
 }
 
-fn train_spec() -> ArgSpec {
-    ArgSpec::new("divebatch train", "run one training configuration")
-        .pos("model", "manifest model name (e.g. logreg512)")
-        .opt("policy", None, "policy spec, e.g. divebatch:m0=..,delta=..,mmax=.. or warmup:epochs=..,m=../divebatch:.. (see `divebatch policies`)")
-        .opt("dataset", Some("synthetic"), "synthetic | cifar10 | cifar100 | tin")
+/// Options shared by `train` and `sweep` (dataset, optimization,
+/// simulated-cluster scenario, engine jobs).
+fn run_opts(s: ArgSpec) -> ArgSpec {
+    s.opt("dataset", Some("synthetic"), "synthetic | cifar10 | cifar100 | tin")
         .opt("n", Some("20000"), "synthetic dataset size")
         .opt("per-class", Some("100"), "images per class (image datasets)")
         .opt("epochs", Some("40"), "training epochs")
@@ -109,7 +122,9 @@ fn train_spec() -> ArgSpec {
         .opt("weight-decay", Some("0"), "L2 weight decay")
         .opt("clip", Some("0"), "global-norm grad clipping (0 = off)")
         .opt("max-micro", Some("0"), "cap planner micro-batch rung (0 = whole ladder)")
-        .opt("trials", Some("1"), "number of seeded trials")
+        .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
+        .opt("sim-workers", Some("4"), "simulated cluster: data-parallel workers")
+        .opt("sim-div-overhead", Some("0.9"), "simulated cluster: per-sample diversity surcharge")
         .opt("out", Some(""), "write per-trial CSVs under this directory")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .opt("sgld-sigma", Some("0"), "SGLD per-sample grad-noise std (0 = off; boosts diversity)")
@@ -119,25 +134,34 @@ fn train_spec() -> ArgSpec {
         .flag("quiet", "suppress per-epoch progress")
 }
 
-fn cmd_train(tokens: &[String]) -> Result<()> {
-    let a = match train_spec().parse_tokens(tokens) {
-        Ok(a) => a,
-        Err(msg) => {
-            eprintln!("{msg}");
-            std::process::exit(2);
-        }
-    };
-    let model = a.positional(0).to_string();
-    let policy = PolicyRegistry::builtin()
-        .parse(a.str("policy"))
-        .map_err(anyhow::Error::new)?;
-    let schedule = LrSchedule {
-        base: a.f64("lr"),
-        decay: a.f64("decay"),
-        every: a.usize("decay-every"),
-        rescale_with_batch: a.flag("rescale-lr"),
-    };
-    let dataset = match a.str("dataset") {
+fn train_spec() -> ArgSpec {
+    run_opts(
+        ArgSpec::new("divebatch train", "run one training configuration")
+            .pos("model", "manifest model name (e.g. logreg512)")
+            .opt("policy", None, "policy spec, e.g. divebatch:m0=..,delta=..,mmax=.. or warmup:epochs=..,m=../divebatch:.. (see `divebatch policies`)")
+            .opt("trials", Some("1"), "number of seeded trials"),
+    )
+}
+
+fn sweep_spec() -> ArgSpec {
+    run_opts(
+        ArgSpec::new(
+            "divebatch sweep",
+            "cross policies x seeds through the parallel trial engine",
+        )
+        .pos("model", "manifest model name (e.g. logreg512)")
+        .opt(
+            "policies",
+            None,
+            "';'-separated policy specs, e.g. \"sgd:m=128;adabatch:m0=128,mmax=4096;divebatch:m0=128,mmax=4096\"",
+        )
+        .opt("seeds", Some("3"), "trials per policy (seeds 0..N-1)")
+        .opt("jsonl", Some(""), "append one summary line per trial to this JSONL file"),
+    )
+}
+
+fn dataset_from_args(a: &Args) -> Result<DatasetSpec> {
+    Ok(match a.str("dataset") {
         "synthetic" => DatasetSpec::Synthetic(SyntheticSpec {
             n: a.usize("n"),
             d: 512,
@@ -148,8 +172,17 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
         "cifar100" => DatasetSpec::Images(ImageSpec::cifar100_like(a.usize("per-class"), 3000)),
         "tin" => DatasetSpec::Images(ImageSpec::tiny_imagenet_like(a.usize("per-class"), 4000)),
         other => bail!("unknown dataset {other:?}"),
+    })
+}
+
+fn cfg_from_args(a: &Args, model: &str, policy: PolicyHandle) -> Result<TrainConfig> {
+    let schedule = LrSchedule {
+        base: a.f64("lr"),
+        decay: a.f64("decay"),
+        every: a.usize("decay-every"),
+        rescale_with_batch: a.flag("rescale-lr"),
     };
-    let mut cfg = TrainConfig::new(&model, policy, schedule, a.usize("epochs"));
+    let mut cfg = TrainConfig::new(model, policy, schedule, a.usize("epochs"));
     cfg.momentum = a.f64("momentum");
     cfg.weight_decay = a.f64("weight-decay");
     let clip = a.f64("clip");
@@ -161,16 +194,46 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
         sigma: a.f64("sgld-sigma"),
     };
     cfg.device_update = a.flag("device-update");
+    let workers = a.usize("sim-workers");
+    if workers == 0 {
+        bail!("--sim-workers must be >= 1");
+    }
+    let div_overhead = a.f64("sim-div-overhead");
+    if !div_overhead.is_finite() || div_overhead < 0.0 {
+        bail!("--sim-div-overhead must be a finite value >= 0 (0 = free instrumentation)");
+    }
+    cfg.cluster = ClusterSpec {
+        workers,
+        div_overhead,
+    };
     cfg.verbose = !a.flag("quiet");
+    Ok(cfg)
+}
+
+fn cmd_train(tokens: &[String]) -> Result<()> {
+    let a = match train_spec().parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let model = a.positional(0).to_string();
+    let Some(policy_spec) = a.get("policy") else {
+        bail!("--policy is required (see `divebatch policies` for the grammar)");
+    };
+    let policy = PolicyRegistry::builtin()
+        .parse(policy_spec)
+        .map_err(anyhow::Error::new)?;
     let run = RunSpec {
         flops_per_sample: flops_per_sample(&model),
-        cfg,
-        dataset,
+        cfg: cfg_from_args(&a, &model, policy)?,
+        dataset: dataset_from_args(&a)?,
         trials: a.usize("trials"),
     };
 
     let rt = Runtime::load(a.str("artifacts"))?;
-    let records = run.run(&rt)?;
+    let records = run.run_jobs(&rt, a.usize("jobs"))?;
     print_run_summary(&records);
     let out = a.str("out");
     if !out.is_empty() {
@@ -183,10 +246,148 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `divebatch sweep`: the full policies x seeds cross through one
+/// [`TrialRunner`] pool.  Per-trial failures (including panics) are
+/// isolated — the rest of the sweep completes and is summarized — and
+/// reported collectively through the exit status.
+fn cmd_sweep(tokens: &[String]) -> Result<()> {
+    let a = match sweep_spec().parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let model = a.positional(0).to_string();
+    let Some(raw_policies) = a.get("policies") else {
+        bail!("--policies is required: ';'-separated specs (see `divebatch policies`)");
+    };
+    let policy_specs: Vec<&str> = raw_policies
+        .split(';')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if policy_specs.is_empty() {
+        bail!("--policies needs at least one spec (see `divebatch policies`)");
+    }
+    let seeds = a.usize("seeds");
+    if seeds == 0 {
+        bail!("--seeds must be >= 1");
+    }
+    let registry = PolicyRegistry::builtin();
+    let dataset = dataset_from_args(&a)?;
+
+    let mut runs = Vec::new();
+    let mut trial_specs = Vec::new();
+    let mut arm_of = Vec::new();
+    for (ai, ps) in policy_specs.iter().enumerate() {
+        let policy = registry.parse(ps).map_err(anyhow::Error::new)?;
+        let run = RunSpec {
+            flops_per_sample: flops_per_sample(&model),
+            cfg: cfg_from_args(&a, &model, policy)?,
+            dataset: dataset.clone(),
+            trials: seeds,
+        };
+        for spec in TrialSpec::expand(&run) {
+            trial_specs.push(spec);
+            arm_of.push(ai);
+        }
+        runs.push(run);
+    }
+
+    let rt = Runtime::load(a.str("artifacts"))?;
+    let runner = TrialRunner::new(a.usize("jobs"));
+    eprintln!(
+        "sweep: {} policies x {} seeds = {} trials on {} workers",
+        policy_specs.len(),
+        seeds,
+        trial_specs.len(),
+        runner.jobs_for(trial_specs.len())
+    );
+    let t = divebatch::util::timer::Timer::start();
+    let results = runner.run_with(&rt, &trial_specs, |spec, res| match res {
+        Ok(_) => eprintln!("  trial done: {}", spec.label()),
+        Err(e) => eprintln!("  trial FAILED: {}: {e}", spec.label()),
+    });
+    eprintln!("sweep finished in {:.1}s", t.seconds());
+
+    let mut arms: Vec<Vec<divebatch::RunRecord>> = Vec::new();
+    arms.resize_with(runs.len(), Vec::new);
+    let mut failures = Vec::new();
+    for ((res, spec), &ai) in results.into_iter().zip(&trial_specs).zip(&arm_of) {
+        match res {
+            Ok(rec) => arms[ai].push(rec),
+            Err(e) => failures.push(format!("{}: {e}", spec.label())),
+        }
+    }
+
+    let out = a.str("out");
+    let jsonl = a.str("jsonl");
+    let mut table = Table::new(
+        &format!("sweep: {model} ({} seeds/policy)", seeds),
+        &["policy", "final acc", "t±1% sim(s)", "end m", "trials"],
+    );
+    for (ai, records) in arms.iter().enumerate() {
+        if records.is_empty() {
+            table.row(vec![
+                policy_specs[ai].to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "0".into(),
+            ]);
+            continue;
+        }
+        print_run_summary(records);
+        let finals: Vec<f64> = records.iter().map(|r| r.final_val_acc()).collect();
+        let times: Vec<f64> = records
+            .iter()
+            .filter_map(|r| r.time_within_final(1.0, true))
+            .collect();
+        table.row(vec![
+            records[0].label.clone(),
+            pm(stats::mean(&finals), stats::stderr(&finals)),
+            if times.is_empty() {
+                "-".into()
+            } else {
+                format!("{:.2}", stats::mean(&times))
+            },
+            format!("{}", records[0].end_batch_size()),
+            format!("{}", records.len()),
+        ]);
+        for r in records {
+            if !out.is_empty() {
+                let path = format!("{out}/arm{ai}_{}_seed{}.csv", r.policy_kind, r.seed);
+                r.write_csv(&path)?;
+            }
+            if !jsonl.is_empty() {
+                r.append_jsonl(jsonl)?;
+            }
+        }
+    }
+    println!("{}", table.render());
+    if !out.is_empty() {
+        println!("per-trial CSVs under {out}/");
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAILED: {f}");
+        }
+        bail!(
+            "{} of {} trials failed (results above cover the rest)",
+            failures.len(),
+            trial_specs.len()
+        );
+    }
+    Ok(())
+}
+
 fn preset_spec() -> ArgSpec {
     ArgSpec::new("divebatch preset", "run a paper experiment preset")
         .pos("id", "preset id (divebatch list)")
         .opt("scale", Some("quick"), "quick | bench | paper")
+        .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
         .opt("out", Some(""), "write per-trial CSVs under this directory")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .flag("quiet", "suppress per-epoch progress")
@@ -216,7 +417,7 @@ fn cmd_preset(tokens: &[String]) -> Result<()> {
     let mut all_records = Vec::new();
     for mut run in exp.runs {
         run.cfg.verbose = !a.flag("quiet");
-        let records = run.run(&rt)?;
+        let records = run.run_jobs(&rt, a.usize("jobs"))?;
         let curve = stats::mean_curve(
             &records.iter().map(|r| r.val_acc_curve()).collect::<Vec<_>>(),
         );

@@ -249,6 +249,22 @@ impl RunRecord {
         ])
     }
 
+    /// Determinism-comparable JSON: identical across reruns and across
+    /// trial-engine `--jobs` levels.  Wall-clock fields (`ws`, `cw`) are
+    /// zeroed because they measure this testbed's real elapsed time —
+    /// which varies run to run and under CPU contention — not the run's
+    /// outcome; every other field is bit-deterministic given the spec.
+    /// The serial-vs-parallel equivalence tests compare these strings
+    /// byte for byte.
+    pub fn to_canonical_json(&self) -> Json {
+        let mut canon = self.clone();
+        for e in &mut canon.epochs {
+            e.wall_s = 0.0;
+            e.cum_wall_s = 0.0;
+        }
+        canon.to_json()
+    }
+
     /// Inverse of [`to_json`].
     pub fn from_json(j: &Json) -> Result<RunRecord> {
         let get_f = |e: &Json, k: &str| -> Result<f64> {
@@ -427,6 +443,28 @@ mod tests {
         assert_eq!(back.epochs[0].exact_delta, None);
         assert_eq!(back.epochs[1].exact_delta, Some(3.5));
         assert_eq!(back.epochs[1].cum_sim_s, r.epochs[1].cum_sim_s);
+    }
+
+    #[test]
+    fn canonical_json_masks_wall_clock_only() {
+        let mut a = run_with_accs(&[10.0, 20.0]);
+        let mut b = run_with_accs(&[10.0, 20.0]);
+        // Same outcome, different testbed timing.
+        a.epochs[0].wall_s = 1.25;
+        a.epochs[0].cum_wall_s = 1.25;
+        b.epochs[0].wall_s = 9.75;
+        b.epochs[0].cum_wall_s = 9.75;
+        assert_ne!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(
+            a.to_canonical_json().to_string(),
+            b.to_canonical_json().to_string()
+        );
+        // Outcome changes still show through.
+        b.epochs[1].val_acc += 1.0;
+        assert_ne!(
+            a.to_canonical_json().to_string(),
+            b.to_canonical_json().to_string()
+        );
     }
 
     #[test]

@@ -5,10 +5,25 @@
 //! -> PJRT compile) and cached by entry key, so a training run only pays
 //! compilation for the ladder rungs its batch-size policy actually visits.
 //! Compile times are recorded for the perf report.
+//!
+//! The whole type is `Send + Sync` (statically asserted in
+//! rust/tests/engine.rs): one `Runtime` — and therefore one compile cache —
+//! is shared by every worker of the parallel trial engine
+//! ([`crate::engine`]).  Concurrency contract:
+//!
+//! * the cache map is behind an `RwLock`, so steady-state lookups are
+//!   read-locked and scale across workers;
+//! * first access to an entry compiles it **exactly once**: compilation
+//!   runs under a per-key lock (not the map lock), so two workers racing
+//!   on the same rung serialize on that rung only, while different rungs
+//!   compile concurrently;
+//! * [`RuntimeStats`] and per-executable execution counts stay exact
+//!   (mutex / atomic increments);
+//! * locks are poison-tolerant: a panicking trial (isolated by the
+//!   engine) never wedges the shared cache for the rest of the sweep.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -23,12 +38,23 @@ pub struct RuntimeStats {
     pub compile_seconds: f64,
 }
 
+/// Lock, recovering from poisoning: the protected state here (cache map,
+/// stats, per-key compile guards) is always left consistent — writers
+/// never panic mid-update — so a panic elsewhere in a worker thread must
+/// not disable the shared runtime.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// PJRT client + manifest + compile cache.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    stats: RefCell<RuntimeStats>,
+    cache: RwLock<HashMap<String, Arc<Executable>>>,
+    /// Per-entry compile guards: racing first accesses to one key
+    /// serialize here while other keys proceed.
+    compiling: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
@@ -39,8 +65,9 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            cache: RwLock::new(HashMap::new()),
+            compiling: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -54,73 +81,117 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Whether the linked `xla` crate can actually execute compiled
+    /// entries.  False under the vendored compile/link stub
+    /// (rust/vendor/xla) — tests that need real numerics skip on this.
+    pub fn has_execution_backend(&self) -> bool {
+        self.platform() != "stub"
+    }
+
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.manifest.model(name)
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        lock_unpoisoned(&self.stats).clone()
     }
 
     /// Number of distinct compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Fetch (compiling on first use) the executable for `model/entry_key`.
-    pub fn entry(&self, model: &str, entry_key: &str) -> Result<Rc<Executable>> {
+    pub fn entry(&self, model: &str, entry_key: &str) -> Result<Arc<Executable>> {
         let cache_key = format!("{model}/{entry_key}");
-        if let Some(e) = self.cache.borrow().get(&cache_key) {
+        if let Some(e) = self
+            .cache
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&cache_key)
+        {
             return Ok(e.clone());
         }
-        let info = self.manifest.model(model)?.entry(entry_key)?.clone();
-        let path = self.manifest.path(&info.file);
-        let t = Timer::start();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .with_context(|| format!("non-utf8 path {path:?}"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {cache_key}"))?;
+        // Miss: take this entry's compile guard so concurrent first
+        // accesses compile exactly once (other entries stay unblocked).
+        let guard = lock_unpoisoned(&self.compiling)
+            .entry(cache_key.clone())
+            .or_default()
+            .clone();
+        let _compiling = lock_unpoisoned(&guard);
+        // A racing worker may have compiled while we waited for the guard.
+        if let Some(e) = self
+            .cache
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&cache_key)
         {
-            let mut s = self.stats.borrow_mut();
-            s.compiles += 1;
-            s.compile_seconds += t.seconds();
+            return Ok(e.clone());
         }
-        let wrapped = Rc::new(Executable::new(cache_key.clone(), info, exe));
-        self.cache
-            .borrow_mut()
-            .insert(cache_key, wrapped.clone());
-        Ok(wrapped)
+        let compiled = (|| -> Result<Arc<Executable>> {
+            let info = self.manifest.model(model)?.entry(entry_key)?.clone();
+            let path = self.manifest.path(&info.file);
+            let t = Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .with_context(|| format!("non-utf8 path {path:?}"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {cache_key}"))?;
+            {
+                let mut s = lock_unpoisoned(&self.stats);
+                s.compiles += 1;
+                s.compile_seconds += t.seconds();
+            }
+            let wrapped = Arc::new(Executable::new(cache_key.clone(), info, exe));
+            // Publish to the cache BEFORE the guard entry is dropped, so
+            // a waiter's re-check always finds it.
+            self.cache
+                .write()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(cache_key.clone(), wrapped.clone());
+            Ok(wrapped)
+        })();
+        // Drop the guard entry on success AND failure — later lookups hit
+        // the cache fast path (or retry a failed compile afresh) and the
+        // guard map never accumulates dead keys.
+        lock_unpoisoned(&self.compiling).remove(&cache_key);
+        compiled
     }
 
     /// Train-step executable for (model, diversity?, micro-batch).
-    pub fn train_exec(&self, model: &str, diversity: bool, micro: usize) -> Result<Rc<Executable>> {
+    pub fn train_exec(&self, model: &str, diversity: bool, micro: usize) -> Result<Arc<Executable>> {
         self.entry(model, &ModelInfo::train_key(diversity, micro))
     }
 
     /// Eval-step executable for (model, micro-batch).
-    pub fn eval_exec(&self, model: &str, micro: usize) -> Result<Rc<Executable>> {
+    pub fn eval_exec(&self, model: &str, micro: usize) -> Result<Arc<Executable>> {
         self.entry(model, &ModelInfo::eval_key(micro))
     }
 
     /// Fused on-device update executable for a model.
-    pub fn update_exec(&self, model: &str) -> Result<Rc<Executable>> {
+    pub fn update_exec(&self, model: &str) -> Result<Arc<Executable>> {
         self.entry(model, "update")
     }
 
-    /// Pre-compile every ladder rung for a model (both variants + eval).
-    /// Useful before timed benchmarking so compilation never lands inside
-    /// a measured region.
+    /// Pre-compile every entry a run can touch for a model: the full
+    /// train (both variants) + eval ladder, and — when the model ships
+    /// one — the fused `update` entry, so `--device-update` runs never
+    /// pay JIT compilation inside a measured bench region.
     pub fn warmup(&self, model: &str, diversity: bool) -> Result<()> {
-        let ladder = self.model(model)?.ladder.clone();
+        let info = self.model(model)?;
+        let ladder = info.ladder.clone();
+        let has_update = info.entries.contains_key("update");
         for m in ladder {
             self.train_exec(model, diversity, m)?;
             self.eval_exec(model, m)?;
+        }
+        if has_update {
+            self.update_exec(model)?;
         }
         Ok(())
     }
@@ -128,16 +199,18 @@ impl Runtime {
     /// Total executions across all cached executables.
     pub fn total_executions(&self) -> u64 {
         self.cache
-            .borrow()
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
             .values()
-            .map(|e| e.executions.get())
+            .map(|e| e.executions())
             .sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // Compilation/execution requires artifacts + a PJRT client; covered by
-    // rust/tests/integration_runtime.rs (run via `make test-rust`, which
-    // builds tiny artifacts first).
+    // Compilation requires artifacts (real or fake-over-the-stub);
+    // cache behaviour — reuse, concurrent compile-once, Send + Sync —
+    // is covered by rust/tests/engine.rs, and the real-numerics path by
+    // rust/tests/integration_runtime.rs over the tiny artifacts.
 }

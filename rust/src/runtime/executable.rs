@@ -5,6 +5,10 @@
 //! before upload, and the tuple output is decomposed into typed results.
 //! Three facades cover the interface contract of python/compile/model.py:
 //! train (4 outputs), eval (2 outputs), update (2 outputs).
+//!
+//! `Executable` is immutable after construction apart from its execution
+//! counter (an `AtomicU64`), so it is `Send + Sync` and one compiled
+//! entry is shared by every trial-engine worker concurrently.
 
 use anyhow::{bail, Context, Result};
 
@@ -34,8 +38,9 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     /// Static batch dimension (rows) for batch entries; 0 for `update`.
     pub micro: usize,
-    /// Cumulative execute() invocations (runtime stats / perf accounting).
-    pub executions: std::cell::Cell<u64>,
+    /// Cumulative execute() invocations (runtime stats / perf accounting);
+    /// atomic so concurrent trials keep the count exact.
+    executions: std::sync::atomic::AtomicU64,
 }
 
 impl Executable {
@@ -52,8 +57,13 @@ impl Executable {
             info,
             exe,
             micro,
-            executions: std::cell::Cell::new(0),
+            executions: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// Cumulative execute() invocations so far.
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Raw execute over literals; returns the decomposed output tuple.
@@ -66,7 +76,8 @@ impl Executable {
                 self.info.inputs.len()
             );
         }
-        self.executions.set(self.executions.get() + 1);
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)

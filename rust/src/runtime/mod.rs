@@ -5,6 +5,14 @@
 //! with 64-bit instruction ids that this crate's xla_extension (0.5.1)
 //! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
 //! cleanly (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The whole layer is thread-safe: [`Runtime`] and [`Executable`] are
+//! `Send + Sync`, the compile cache hands out `Arc<Executable>` handles,
+//! and concurrent first access to one entry compiles it exactly once —
+//! this is what the parallel trial engine ([`crate::engine`]) builds on.
+//! When the `xla` dependency is the vendored stub (rust/vendor/xla),
+//! compilation/caching works everywhere but execution is unavailable;
+//! see [`Runtime::has_execution_backend`].
 
 pub mod cache;
 pub mod executable;

@@ -1,0 +1,22 @@
+//! Shared helper for the integration/engine test suites.
+
+use divebatch::runtime::Runtime;
+
+/// The tiny-artifacts runtime (`make artifacts-tiny`), or `None` — with
+/// a stderr note, so the calling test skips — when either the artifacts
+/// or a real execution backend is unavailable (the vendored `xla` stub
+/// compiles but cannot execute; see rust/vendor/xla).
+pub fn runtime() -> Option<Runtime> {
+    let rt = match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: artifacts missing — run `make artifacts-tiny` ({e:#})");
+            return None;
+        }
+    };
+    if !rt.has_execution_backend() {
+        eprintln!("skipping: xla stub backend cannot execute (see rust/vendor/xla)");
+        return None;
+    }
+    Some(rt)
+}

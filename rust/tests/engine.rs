@@ -1,0 +1,319 @@
+//! Trial-engine + thread-safe-runtime acceptance tests.
+//!
+//! Three layers, by environment requirement:
+//!
+//! 1. **Always run** — static `Send + Sync` assertions (the compile-time
+//!    guarantee that one `Runtime` may be shared across engine workers)
+//!    and engine scheduling tests over fabricated trial specs.
+//! 2. **Compile-only** — concurrent compile-once semantics of the
+//!    executable cache.  Runs over fake artifacts under the vendored
+//!    `xla` stub (which compiles-but-cannot-execute), or over the real
+//!    tiny artifacts when a real backend is linked.
+//! 3. **Execution** — the serial-vs-parallel equivalence gate: a
+//!    policies x seeds sweep produces byte-identical canonical records
+//!    at `jobs = 1` and `jobs = 4`.  Skips (with a stderr note) without
+//!    `make artifacts-tiny` + a real backend.
+
+mod common;
+
+use std::sync::Arc;
+
+use divebatch::config::{DatasetSpec, RunSpec};
+use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::data::SyntheticSpec;
+use divebatch::engine::{TrialRunner, TrialSpec};
+use divebatch::runtime::{Executable, Runtime};
+
+// ------------------------------------------------------------ layer 1
+
+/// Compile-enforced: these types cross (or are shared between) engine
+/// worker threads.  If any stops being thread-safe, this test fails to
+/// COMPILE rather than at runtime.
+#[test]
+fn runtime_layer_is_send_and_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Runtime>();
+    assert_send_sync::<Executable>();
+    assert_send_sync::<Arc<Executable>>();
+    assert_send_sync::<TrainConfig>();
+    assert_send_sync::<divebatch::coordinator::PolicyHandle>();
+    assert_send_sync::<RunSpec>();
+    assert_send_sync::<TrialSpec>();
+    assert_send_sync::<TrialRunner>();
+    assert_send_sync::<divebatch::RunRecord>();
+    assert_send_sync::<divebatch::engine::TrialError>();
+}
+
+// ------------------------------------------------------------ layer 2
+
+/// A minimal-but-valid manifest over throwaway HLO text files, written
+/// to a fresh temp dir.  Under the stub backend these entries *compile*
+/// (the stub retains the text), which is all the cache tests need.
+fn fake_artifacts(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "divebatch-engine-test-{}-{tag}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let entry = |file: &str| {
+        format!(
+            r#"{{"file": "{file}", "hlo_bytes": 20,
+                "inputs": [{{"name": "params", "dtype": "f32", "shape": [9]}},
+                           {{"name": "x", "dtype": "f32", "shape": [4, 8]}},
+                           {{"name": "y", "dtype": "f32", "shape": [4]}},
+                           {{"name": "w", "dtype": "f32", "shape": [4]}}],
+                "outputs": [{{"name": "loss_sum", "dtype": "f32", "shape": []}},
+                            {{"name": "correct", "dtype": "f32", "shape": []}}]}}"#
+        )
+    };
+    let manifest = format!(
+        r#"{{"version": 1, "models": {{"m8": {{
+            "param_count": 9,
+            "input_shape": [8],
+            "label_dtype": "f32",
+            "num_classes": 2,
+            "ladder": [4],
+            "chunk": 4,
+            "tags": ["fake"],
+            "param_specs": [{{"name": "w", "shape": [8]}}, {{"name": "b", "shape": [1]}}],
+            "init_params": ["m8/init_s0.bin"],
+            "entries": {{
+                "train_div_b4": {e1},
+                "train_plain_b4": {e2},
+                "eval_b4": {e3}
+            }}}}}}}}"#,
+        e1 = entry("m8/train_div_b4.hlo.txt"),
+        e2 = entry("m8/train_plain_b4.hlo.txt"),
+        e3 = entry("m8/eval_b4.hlo.txt"),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    let model_dir = dir.join("m8");
+    std::fs::create_dir_all(&model_dir).unwrap();
+    for f in ["train_div_b4.hlo.txt", "train_plain_b4.hlo.txt", "eval_b4.hlo.txt"] {
+        std::fs::write(model_dir.join(f), "HloModule fake_entry").unwrap();
+    }
+    dir
+}
+
+/// A runtime whose entries can at least COMPILE, plus the model name to
+/// use: fake artifacts under the stub, the real tiny artifacts under a
+/// real backend (skipping if they're absent).
+fn compile_capable_runtime(tag: &str) -> Option<(Runtime, &'static str)> {
+    // Probe the backend with a throwaway client-only runtime.
+    let fake_dir = fake_artifacts(tag);
+    let fake_rt = Runtime::load(&fake_dir).unwrap();
+    if !fake_rt.has_execution_backend() {
+        return Some((fake_rt, "m8"));
+    }
+    let _ = std::fs::remove_dir_all(&fake_dir);
+    match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        Ok(rt) => Some((rt, "tinylogreg8")),
+        Err(e) => {
+            eprintln!("skipping: real backend but artifacts missing ({e:#})");
+            None
+        }
+    }
+}
+
+#[test]
+fn concurrent_first_access_compiles_exactly_once() {
+    let Some((rt, model)) = compile_capable_runtime("once") else {
+        return;
+    };
+    assert_eq!(rt.stats().compiles, 0);
+    let rt = &rt;
+    let handles: Vec<Arc<Executable>> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..8)
+            .map(|_| s.spawn(move || rt.train_exec(model, true, 4).unwrap()))
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+    // Exactly one compile happened, and everyone shares the same object.
+    assert_eq!(rt.stats().compiles, 1);
+    assert_eq!(rt.cached_executables(), 1);
+    for h in &handles[1..] {
+        assert!(Arc::ptr_eq(&handles[0], h));
+    }
+    // Subsequent lookups hit the fast path.
+    let again = rt.train_exec(model, true, 4).unwrap();
+    assert!(Arc::ptr_eq(&handles[0], &again));
+    assert_eq!(rt.stats().compiles, 1);
+}
+
+#[test]
+fn distinct_entries_compile_concurrently_once_each() {
+    let Some((rt, model)) = compile_capable_runtime("distinct") else {
+        return;
+    };
+    let rt = &rt;
+    std::thread::scope(|s| {
+        // 3 distinct entries x 4 racing threads each.
+        for _ in 0..4 {
+            s.spawn(move || rt.train_exec(model, true, 4).unwrap());
+            s.spawn(move || rt.train_exec(model, false, 4).unwrap());
+            s.spawn(move || rt.eval_exec(model, 4).unwrap());
+        }
+    });
+    assert_eq!(rt.stats().compiles, 3);
+    assert_eq!(rt.cached_executables(), 3);
+    assert!(rt.stats().compile_seconds >= 0.0);
+}
+
+#[test]
+fn failed_trials_are_isolated_and_ordered() {
+    // Over fake artifacts the trials cannot execute (stub) or even load
+    // real init params — every trial must come back as an ERROR, in spec
+    // order, with the sweep completing rather than aborting.  Under a
+    // real backend this exercises the same path via the missing-model
+    // error instead.
+    let Some((rt, _)) = compile_capable_runtime("isolated") else {
+        return;
+    };
+    let run = RunSpec {
+        cfg: TrainConfig::new(
+            "no-such-model",
+            Policy::Fixed { m: 4 },
+            LrSchedule::constant(0.1, false),
+            1,
+        ),
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 40,
+            d: 8,
+            noise: 0.1,
+            seed: 7,
+        }),
+        trials: 5,
+        flops_per_sample: 1.0,
+    };
+    let specs = TrialSpec::expand(&run);
+    assert_eq!(specs.len(), 5);
+    assert_eq!(specs[3].trial, 3);
+    let results = TrialRunner::new(4).run(&rt, &specs);
+    assert_eq!(results.len(), 5);
+    for r in &results {
+        let e = r.as_ref().expect_err("no-such-model cannot train");
+        assert!(e.to_string().contains("no-such-model"), "{e}");
+    }
+    // The runtime stays usable after failed trials.
+    assert!(rt.cached_executables() <= 3);
+}
+
+// ------------------------------------------------------------ layer 3
+
+/// The acceptance gate: a policies x seeds sweep through the engine is
+/// byte-identical between `jobs = 1` and `jobs = 4` on the canonical
+/// record JSON (wall-clock masked — everything else must match exactly),
+/// and matches the plain serial `RunSpec::run` path.
+#[test]
+fn sweep_records_byte_identical_serial_vs_parallel() {
+    let Some(rt) = common::runtime() else {
+        return;
+    };
+    let dataset = DatasetSpec::Synthetic(SyntheticSpec {
+        n: 120,
+        d: 8,
+        noise: 0.05,
+        seed: 33,
+    });
+    let policies = [
+        Policy::Fixed { m: 8 },
+        Policy::AdaBatch {
+            m0: 4,
+            factor: 2,
+            every: 2,
+            m_max: 8,
+        },
+        Policy::DiveBatch {
+            m0: 4,
+            delta: 0.5,
+            m_max: 8,
+        },
+    ];
+    let mut specs = Vec::new();
+    let mut runs = Vec::new();
+    for p in policies {
+        let run = RunSpec {
+            cfg: TrainConfig::new(
+                "tinylogreg8",
+                p,
+                LrSchedule::constant(0.3, true),
+                4,
+            ),
+            dataset: dataset.clone(),
+            trials: 2,
+            flops_per_sample: 1e3,
+        };
+        specs.extend(TrialSpec::expand(&run));
+        runs.push(run);
+    }
+    assert_eq!(specs.len(), 6); // 3 policies x 2 seeds
+
+    let serial: Vec<String> = TrialRunner::new(1)
+        .run(&rt, &specs)
+        .into_iter()
+        .map(|r| r.unwrap().to_canonical_json().to_string())
+        .collect();
+    let parallel: Vec<String> = TrialRunner::new(4)
+        .run(&rt, &specs)
+        .into_iter()
+        .map(|r| r.unwrap().to_canonical_json().to_string())
+        .collect();
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(a, b, "trial {i} ({}) diverged across jobs levels", specs[i].label());
+    }
+
+    // And the engine path agrees with the classic serial RunSpec loop.
+    let mut via_runspec = Vec::new();
+    for run in &runs {
+        for rec in run.run(&rt).unwrap() {
+            via_runspec.push(rec.to_canonical_json().to_string());
+        }
+    }
+    assert_eq!(serial, via_runspec);
+}
+
+/// `RunSpec::run_jobs` is the engine-backed public entry point the CLI
+/// and examples use; same equivalence, arm-level.
+#[test]
+fn run_jobs_matches_run() {
+    let Some(rt) = common::runtime() else {
+        return;
+    };
+    let run = RunSpec {
+        cfg: TrainConfig::new(
+            "tinylogreg8",
+            Policy::DiveBatch {
+                m0: 4,
+                delta: 0.5,
+                m_max: 8,
+            },
+            LrSchedule::constant(0.3, false),
+            3,
+        ),
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 100,
+            d: 8,
+            noise: 0.05,
+            seed: 5,
+        }),
+        trials: 4,
+        flops_per_sample: 1e3,
+    };
+    let a: Vec<String> = run
+        .run(&rt)
+        .unwrap()
+        .iter()
+        .map(|r| r.to_canonical_json().to_string())
+        .collect();
+    let b: Vec<String> = run
+        .run_jobs(&rt, 4)
+        .unwrap()
+        .iter()
+        .map(|r| r.to_canonical_json().to_string())
+        .collect();
+    assert_eq!(a, b);
+    // Trial order is the seed order.
+    let seeds: Vec<u64> = run.run_jobs(&rt, 3).unwrap().iter().map(|r| r.seed).collect();
+    assert_eq!(seeds, vec![0, 1, 2, 3]);
+}

@@ -1,17 +1,17 @@
 //! Integration tests: the real PJRT path over the tiny AOT artifacts.
 //!
 //! Requires `make artifacts-tiny` (or `make artifacts`) to have produced
-//! `artifacts/tinylogreg8` etc.  These tests validate the full
-//! jax -> HLO text -> rust compile -> execute round trip numerically
-//! against closed forms computed independently in Rust.
+//! `artifacts/tinylogreg8` etc., AND a real execution backend (the
+//! vendored `xla` stub compiles but cannot execute — rust/vendor/xla).
+//! When either is missing, every test skips with a stderr note.  These
+//! tests validate the full jax -> HLO text -> rust compile -> execute
+//! round trip numerically against closed forms computed independently in
+//! Rust.
 
+mod common;
+
+use common::runtime;
 use divebatch::data::{Dataset, Labels};
-use divebatch::runtime::Runtime;
-
-fn runtime() -> Runtime {
-    Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("artifacts missing — run `make artifacts-tiny` first")
-}
 
 /// A tiny hand-made dataset for tinylogreg8 (d = 8).
 fn toy_dataset(n: usize) -> Dataset {
@@ -63,7 +63,9 @@ fn demo_params() -> Vec<f32> {
 
 #[test]
 fn manifest_lists_tiny_models() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     for name in ["tinylogreg8", "tinymlp8", "tinyresnet4"] {
         let info = rt.model(name).unwrap();
         assert!(!info.ladder.is_empty());
@@ -74,7 +76,9 @@ fn manifest_lists_tiny_models() {
 
 #[test]
 fn eval_matches_rust_reference_numerics() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(8);
     let params = demo_params();
     let batch = ds.gather(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
@@ -103,7 +107,9 @@ fn eval_matches_rust_reference_numerics() {
 #[test]
 fn train_grad_matches_closed_form() {
     // grad = sum_i w_i * r_i * [x_i, 1] for logreg.
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(4);
     let params = demo_params();
     let batch = ds.gather(&[0, 1, 2, 3], 4);
@@ -138,7 +144,9 @@ fn train_grad_matches_closed_form() {
 
 #[test]
 fn padding_rows_are_noops_through_pjrt() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(6);
     let params = demo_params();
     // 3 real rows padded to 4.
@@ -161,7 +169,9 @@ fn padding_rows_are_noops_through_pjrt() {
 
 #[test]
 fn sample_sum_additivity_across_micro_batches() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(8);
     let params = demo_params();
     let full = rt
@@ -189,7 +199,9 @@ fn sample_sum_additivity_across_micro_batches() {
 
 #[test]
 fn div_and_plain_agree_on_shared_outputs() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(8);
     let params = demo_params();
     let b = ds.gather(&[0, 1, 2, 3, 4, 5, 6, 7], 8);
@@ -211,7 +223,9 @@ fn div_and_plain_agree_on_shared_outputs() {
 
 #[test]
 fn update_executable_matches_rust_optimizer_rule() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let exec = rt.update_exec("tinymlp8").unwrap();
     let p0: Vec<f32> = (0..41).map(|i| (i as f32 * 0.1).sin()).collect();
     let v0: Vec<f32> = (0..41).map(|i| (i as f32 * 0.05).cos() * 0.01).collect();
@@ -236,7 +250,9 @@ fn update_executable_matches_rust_optimizer_rule() {
 
 #[test]
 fn resnet_entries_execute() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let info = rt.model("tinyresnet4").unwrap().clone();
     assert_eq!(info.input_shape, vec![8, 8, 3]);
     let n = 4;
@@ -270,18 +286,22 @@ fn resnet_entries_execute() {
 
 #[test]
 fn executable_cache_reuses_compiles() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let a = rt.eval_exec("tinylogreg8", 4).unwrap();
     let before = rt.stats().compiles;
     let b = rt.eval_exec("tinylogreg8", 4).unwrap();
     assert_eq!(rt.stats().compiles, before);
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
     assert!(rt.cached_executables() >= 1);
 }
 
 #[test]
 fn input_validation_errors() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(4);
     let exec = rt.train_exec("tinylogreg8", true, 4).unwrap();
     // Wrong params length.
@@ -297,7 +317,9 @@ fn input_validation_errors() {
 
 #[test]
 fn init_params_load_and_differ_by_seed() {
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let p0 = rt.manifest.load_init_params("tinymlp8", 0).unwrap();
     let p1 = rt.manifest.load_init_params("tinymlp8", 1).unwrap();
     assert_eq!(p0.len(), 41);
@@ -311,7 +333,9 @@ fn init_params_load_and_differ_by_seed() {
 fn numerical_gradient_check_through_pjrt() {
     // Finite differences on the EVAL executable vs grad from TRAIN —
     // validates the whole AOT bridge end to end.
-    let rt = runtime();
+    let Some(rt) = runtime() else {
+        return;
+    };
     let ds = toy_dataset(4);
     let params = demo_params();
     let batch = ds.gather(&[0, 1, 2, 3], 4);

@@ -1,0 +1,301 @@
+//! Compile/link **stub** of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The real dependency is the Rust binding over `xla_extension` 0.5.1
+//! (PJRT CPU client + HLO-text compilation; see `/opt/xla-example` on the
+//! AOT build machine and `python/compile/aot.py`).  That native library is
+//! not vendorable into this repository, so this crate provides the exact
+//! API surface `divebatch::runtime` consumes with the same signatures and
+//! ownership rules — every type is plain data and therefore `Send + Sync`,
+//! which is what lets the runtime layer be shared across trial-engine
+//! worker threads in unit tests without the native backend.
+//!
+//! Semantics:
+//!
+//! * Parsing ([`HloModuleProto::from_text_file`]) and compilation
+//!   ([`PjRtClient::compile`]) **succeed** — they read and retain the HLO
+//!   text, so the compile-cache (hit/miss, compile-once-per-entry under
+//!   concurrency, stats accounting) is fully exercisable without XLA.
+//! * Execution ([`PjRtLoadedExecutable::execute`]) **fails** with a clear
+//!   [`Error::StubBackend`] — the stub cannot evaluate HLO.  Integration
+//!   tests that need real numerics detect this via
+//!   `Runtime::has_execution_backend()` (the client reports platform
+//!   [`STUB_PLATFORM`]) and skip.
+//!
+//! Swapping in the real backend is a one-line change in
+//! `rust/Cargo.toml`: point the `xla` dependency at the real binding
+//! instead of `vendor/xla`.  No source file outside that manifest refers
+//! to this crate being a stub except through `platform_name()`.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::sync::Arc;
+
+/// Platform name reported by the stub client; the runtime uses this to
+/// detect that execution is unavailable.
+pub const STUB_PLATFORM: &str = "stub";
+
+/// Error type mirroring the real binding's (anyhow-compatible: it is a
+/// `std::error::Error` and `Send + Sync`).
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// An operation the stub cannot perform (execution).
+    StubBackend(String),
+    /// File / parse errors from the HLO-text loading path.
+    Io(String),
+    /// Shape/dtype misuse of a [`Literal`].
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubBackend(msg) => write!(
+                f,
+                "xla stub backend: {msg} (link the real xla_extension binding \
+                 in rust/Cargo.toml to execute compiled entries)"
+            ),
+            Error::Io(msg) => write!(f, "xla stub io: {msg}"),
+            Error::Literal(msg) => write!(f, "xla stub literal: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold (the subset the runtime uses).
+pub trait Element: Copy + Send + Sync + 'static {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+    fn type_name() -> &'static str;
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+impl Element for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "f32"
+    }
+}
+
+impl Element for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn type_name() -> &'static str {
+        "i32"
+    }
+}
+
+/// Host-side tensor value (upload argument / fetched result).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Element>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error::Literal(format!(
+                "reshape to {dims:?} ({want} elements) from {} elements",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error::Literal(format!("literal is not {}", T::type_name())))
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Literal("empty literal".into()))
+    }
+
+    /// Split a tuple literal into its components.  Stub literals are
+    /// never tuples (they only exist on the upload path), so this is
+    /// reachable only through an (impossible) stub execution result.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::StubBackend("decompose_tuple on a stub literal".into()))
+    }
+}
+
+/// Parsed HLO module (the stub retains the text it was parsed from).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: Arc<String>,
+}
+
+impl HloModuleProto {
+    /// Read an HLO **text** file (the interchange format emitted by
+    /// python/compile/aot.py).  The stub validates readability only.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("reading HLO text {path:?}: {e}")))?;
+        Ok(HloModuleProto {
+            text: Arc::new(text),
+        })
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            module: proto.clone(),
+        }
+    }
+}
+
+/// PJRT client handle.  The stub's only state is the platform name it
+/// reports; creation never fails.
+#[derive(Clone, Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        STUB_PLATFORM.to_string()
+    }
+
+    /// "Compile" a computation.  Succeeds so the executable cache is
+    /// exercisable; the product refuses to execute.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            hlo_bytes: comp.module.text.len(),
+        })
+    }
+}
+
+/// Device buffer handle returned by `execute` (never constructed by the
+/// stub; present so caller code type-checks against the real binding).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubBackend("fetching from a stub buffer".into()))
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Clone, Debug)]
+pub struct PjRtLoadedExecutable {
+    /// Size of the HLO text this was "compiled" from (debug visibility).
+    pub hlo_bytes: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execution is the one operation the stub cannot provide.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubBackend(
+            "cannot execute compiled HLO".into(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_is_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<Literal>();
+        check::<HloModuleProto>();
+        check::<XlaComputation>();
+        check::<Error>();
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn compile_succeeds_execute_fails() {
+        let dir = std::env::temp_dir().join(format!("xla-stub-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mod.hlo.txt");
+        std::fs::write(&path, "HloModule stub_test").unwrap();
+
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), STUB_PLATFORM);
+        let exe = client.compile(&comp).unwrap();
+        assert!(exe.hlo_bytes > 0);
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub backend"), "{err}");
+
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
