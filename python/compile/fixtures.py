@@ -1,0 +1,141 @@
+"""Emit the committed interpreter-backend test fixtures (rust/tests/fixtures).
+
+The Rust numeric test suites run everywhere — no AOT build, no real XLA —
+against a pure-Rust HLO interpreter (rust/vendor/xla, ``interp`` backend)
+over a tiny set of **committed** artifacts for the paper's synthetic-convex
+model (``tinylogreg8``).  This script generates those artifacts once, at
+authoring time; the files it writes are checked in, so `cargo test` never
+needs Python.
+
+Two outputs:
+
+* ``rust/tests/fixtures/artifacts/`` — a regular artifact tree (same layout
+  as ``python -m compile.aot``): ``manifest.json``, per-entry HLO text for
+  the (4, 8) ladder, and seeded ``init_s<k>.bin`` parameter files.
+* ``rust/tests/fixtures/golden_entry_outputs.json`` — for every entry, a
+  deterministic set of inputs and the jax-evaluated outputs.  The Rust
+  test ``integration_runtime::interpreter_matches_python_golden`` replays
+  these through the interpreter, anchoring it to the Python reference
+  (the same traced functions the HLO was lowered from).
+
+The Pallas kernels are swapped for their pure-jnp references
+(:mod:`compile.kernels.ref`, semantics enforced identical by
+``python/tests/test_kernels.py``) BEFORE the step builders import them:
+interpret-mode ``pallas_call`` lowers to while-loops + dynamic slices,
+outside the interpreter's op subset, while the refs lower to plain
+elementwise/dot/reduce HLO.
+
+Usage (from ``python/``)::
+
+    python -m compile.fixtures [--out-dir ../rust/tests/fixtures]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import compile.kernels as kernels
+from compile.kernels import ref as kernel_ref
+
+# Patch before compile.model / compile.models bind the kernel names.
+kernels.dense_sqnorm = lambda a, d, *, has_bias=True: kernel_ref.dense_sqnorm_ref(
+    a, d, has_bias=has_bias
+)
+kernels.diversity_reduce = kernel_ref.diversity_reduce_ref
+kernels.sgd_fused = kernel_ref.sgd_fused_ref
+kernels.row_sqnorm = kernel_ref.row_sqnorm_ref
+
+from compile import aot  # noqa: E402  (must import after the patch)
+from compile import model as step_builders  # noqa: E402
+from compile.models import REGISTRY  # noqa: E402
+
+FIXTURE_MODEL = "tinylogreg8"
+
+
+def golden_inputs(m: int, d: int) -> tuple[np.ndarray, ...]:
+    """Deterministic batch inputs (mirrors the Rust toy_dataset pattern)."""
+    params = np.array(
+        [0.3, -0.2, 0.05, 0.7, -0.4, 0.11, -0.09, 0.25, 0.02], dtype=np.float32
+    )
+    x = np.sin(np.arange(m * d, dtype=np.float32) * 0.37).reshape(m, d)
+    y = np.array([(i * 7) % 2 for i in range(m)], dtype=np.float32)
+    # One padding row (w = 0) when m > 4 so the goldens pin the padding
+    # no-op behaviour too.
+    w = np.ones(m, dtype=np.float32)
+    if m > 4:
+        w[m - 1] = 0.0
+    return params, x, y, w
+
+
+def golden_update_inputs(p: int) -> tuple[np.ndarray, ...]:
+    i = np.arange(p, dtype=np.float32)
+    params = np.sin(i * 0.1).astype(np.float32)
+    velocity = (np.cos(i * 0.05) * 0.01).astype(np.float32)
+    grad_sum = np.cos(i * 0.2).astype(np.float32)
+    scalars = np.array([0.1, 0.9, 5e-4, 1.0 / 64.0], dtype=np.float32)
+    return params, velocity, grad_sum, scalars
+
+
+def flat(a) -> list[float]:
+    return [float(v) for v in np.asarray(a, dtype=np.float32).reshape(-1)]
+
+
+def build_golden(model, entry) -> dict:
+    """Evaluate every entry's step function on the deterministic inputs."""
+    d = model.input_shape[0]
+    out: dict[str, dict] = {}
+    for m in entry.ladder:
+        args = tuple(jnp.asarray(a) for a in golden_inputs(m, d))
+        for key, fn in (
+            (f"train_div_b{m}", step_builders.make_train_div(model, entry.chunk)),
+            (f"train_plain_b{m}", step_builders.make_train_plain(model)),
+            (f"eval_b{m}", step_builders.make_eval(model)),
+        ):
+            res = jax.jit(fn)(*args)
+            out[key] = {
+                "inputs": [flat(a) for a in args],
+                "outputs": [flat(r) for r in res],
+            }
+    upd_args = tuple(jnp.asarray(a) for a in golden_update_inputs(model.param_count))
+    res = jax.jit(step_builders.make_update(model))(*upd_args)
+    out["update"] = {
+        "inputs": [flat(a) for a in upd_args],
+        "outputs": [flat(r) for r in res],
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default="../rust/tests/fixtures",
+        help="fixture root (artifacts/ + golden json go under it)",
+    )
+    args = ap.parse_args()
+
+    fixture_root = Path(args.out_dir).resolve()
+    artifacts = fixture_root / "artifacts"
+    artifacts.mkdir(parents=True, exist_ok=True)
+
+    entry = REGISTRY[FIXTURE_MODEL]
+    model = entry.factory()
+
+    section = aot.build_model_artifacts(FIXTURE_MODEL, entry, artifacts, force=True)
+    manifest = {"version": aot.MANIFEST_VERSION, "models": {FIXTURE_MODEL: section}}
+    (artifacts / "manifest.json").write_text(json.dumps(manifest, indent=1, sort_keys=True))
+
+    golden = {"model": FIXTURE_MODEL, "entries": build_golden(model, entry)}
+    golden_path = fixture_root / "golden_entry_outputs.json"
+    golden_path.write_text(json.dumps(golden, indent=1, sort_keys=True))
+    print(f"wrote {artifacts}/manifest.json and {golden_path}")
+
+
+if __name__ == "__main__":
+    main()

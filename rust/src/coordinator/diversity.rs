@@ -124,6 +124,109 @@ mod tests {
         assert!(acc.stats().delta_hat().is_infinite());
     }
 
+    // ------------------------------------------------- property tests
+    // Definition-2 invariants over randomized gradient sets (seeded
+    // mini-prop framework: util::prop; failures shrink + report a seed).
+
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_identical_gradients_give_minimal_diversity() {
+        // n copies of one gradient: Delta = 1/n, so n*Delta = 1 — the
+        // metric's floor, "a batch of 1 already captures everything".
+        forall(
+            150,
+            |r| {
+                (
+                    r.below(30) as usize + 2,
+                    r.below(8) as usize + 1,
+                    r.next_u64(),
+                )
+            },
+            |&(n, d, seed)| {
+                let mut r = Rng::new(seed);
+                let g: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+                let sq: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                if sq < 1e-6 {
+                    return true; // degenerate near-zero draw
+                }
+                let mut acc = DiversityAccum::new(d);
+                for _ in 0..n {
+                    acc.push(&g, sq, 1);
+                }
+                (acc.stats().delta_hat() - 1.0 / n as f64).abs() < 1e-9
+                    && (acc.n_delta() - 1.0).abs() < 1e-6
+            },
+        );
+    }
+
+    #[test]
+    fn prop_orthogonal_gradients_give_diversity_n() {
+        // n mutually orthogonal per-sample gradients (scaled axes of R^n):
+        // ||sum g||^2 = sum ||g||^2, so Delta = 1 and n*Delta = n — full
+        // batch-size headroom — for ANY per-axis scales.
+        forall(
+            150,
+            |r| (r.below(16) as usize + 2, r.next_u64()),
+            |&(n, seed)| {
+                let mut r = Rng::new(seed);
+                let mut acc = DiversityAccum::new(n);
+                for i in 0..n {
+                    let s = r.uniform(0.2, 3.0) as f32; // bounded away from 0
+                    let mut g = vec![0.0f32; n];
+                    g[i] = s;
+                    acc.push(&g, (s as f64) * (s as f64), 1);
+                }
+                (acc.stats().delta_hat() - 1.0).abs() < 1e-9
+                    && (acc.n_delta() - n as f64).abs() < 1e-6 * n as f64
+            },
+        );
+    }
+
+    #[test]
+    fn prop_metric_invariant_under_gradient_permutation() {
+        // Definition 2 is a sum over samples: the push order must not
+        // change the statistics (up to f64 re-association noise).
+        forall(
+            150,
+            |r| {
+                (
+                    r.below(10) as usize + 2,
+                    r.below(6) as usize + 1,
+                    r.next_u64(),
+                )
+            },
+            |&(k, d, seed)| {
+                let mut r = Rng::new(seed);
+                let gs: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..d).map(|_| r.normal() as f32).collect())
+                    .collect();
+                let sq: Vec<f64> = gs
+                    .iter()
+                    .map(|g| g.iter().map(|&x| (x as f64) * (x as f64)).sum())
+                    .collect();
+                let mut fwd = DiversityAccum::new(d);
+                for i in 0..k {
+                    fwd.push(&gs[i], sq[i], 1);
+                }
+                let perm = r.permutation(k);
+                let mut per = DiversityAccum::new(d);
+                for &i in &perm {
+                    per.push(&gs[i as usize], sq[i as usize], 1);
+                }
+                if fwd.samples() != per.samples() {
+                    return false;
+                }
+                let (a, b) = (fwd.stats().delta_hat(), per.stats().delta_hat());
+                if !a.is_finite() {
+                    return !b.is_finite(); // all-zero-gradient draw
+                }
+                (a - b).abs() <= 1e-9 * a.abs().max(1.0)
+            },
+        );
+    }
+
     #[test]
     fn f64_accumulation_avoids_f32_cancellation() {
         // Alternating large +/- f32 grads whose true sum is tiny: f32

@@ -47,6 +47,25 @@
 //! The `train`/`sweep`/`preset` subcommands, the figure/table benches
 //! (`DIVEBATCH_JOBS`), and the sweep examples all route through it.
 //!
+//! ## Execution backends
+//!
+//! Compiled entries execute on one of three backend tiers (selected in
+//! rust/vendor/xla — see its crate docs):
+//!
+//! 1. **Interpreter** (default): a pure-Rust HLO-text evaluator.  Every
+//!    numeric test — trainer epochs, policy trajectories, the `jobs=1`
+//!    vs `jobs=4` equivalence gate, the golden-record regression — runs
+//!    in plain `cargo test` over the committed fixtures in
+//!    rust/tests/fixtures, on any machine, with zero skips.  Correctness
+//!    is anchored by jax-evaluated goldens
+//!    (`python -m compile.fixtures` regenerates both).
+//! 2. **Stub** (`DIVEBATCH_BACKEND=stub`): compile/cache-only — for
+//!    exercising the runtime plumbing with execution explicitly off.
+//! 3. **Real PJRT**: swap the `xla` dependency in rust/Cargo.toml to the
+//!    real xla_extension binding and run over `make artifacts` output;
+//!    integration suites pick up extra real-backend coverage via
+//!    `DIVEBATCH_TEST_ARTIFACTS=<dir>`.
+//!
 //! ## Batch policies
 //!
 //! Batch-size control is an open, trait-based API

@@ -21,6 +21,12 @@
 //!   (mutex / atomic increments);
 //! * locks are poison-tolerant: a panicking trial (isolated by the
 //!   engine) never wedges the shared cache for the rest of the sweep.
+//!
+//! Execution capability depends on the backend tier the `xla` crate
+//! provides (see rust/vendor/xla): the pure-Rust **interpreter** (the
+//! default — [`Runtime::has_execution_backend`] is true everywhere), the
+//! compile-only **stub** (`DIVEBATCH_BACKEND=stub`), or a **real PJRT**
+//! binding swapped in via rust/Cargo.toml.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
@@ -82,8 +88,14 @@ impl Runtime {
     }
 
     /// Whether the linked `xla` crate can actually execute compiled
-    /// entries.  False under the vendored compile/link stub
-    /// (rust/vendor/xla) — tests that need real numerics skip on this.
+    /// entries.  True under the default pure-Rust interpreter backend
+    /// (platform `"interp"`) and under a real PJRT binding; false only
+    /// under the compile-only stub (`DIVEBATCH_BACKEND=stub`; see
+    /// rust/vendor/xla for the three backend tiers).
+    ///
+    /// Compared as a string literal on purpose: the real xla_extension
+    /// binding exports no `STUB_PLATFORM` const, and swapping it in must
+    /// stay a one-line Cargo.toml change.
     pub fn has_execution_backend(&self) -> bool {
         self.platform() != "stub"
     }
@@ -209,8 +221,9 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    // Compilation requires artifacts (real or fake-over-the-stub);
-    // cache behaviour — reuse, concurrent compile-once, Send + Sync —
-    // is covered by rust/tests/engine.rs, and the real-numerics path by
-    // rust/tests/integration_runtime.rs over the tiny artifacts.
+    // Compilation requires an artifact tree; cache behaviour — reuse,
+    // concurrent compile-once, Send + Sync — is covered by
+    // rust/tests/engine.rs, and the numeric path by
+    // rust/tests/integration_runtime.rs, both over the committed
+    // interpreter fixtures (rust/tests/fixtures/artifacts).
 }

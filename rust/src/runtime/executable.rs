@@ -70,7 +70,7 @@ impl Executable {
     fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.info.inputs.len() {
             bail!(
-                "{}: {} inputs given, {} expected",
+                "entry {}: {} inputs given, {} expected",
                 self.key,
                 inputs.len(),
                 self.info.inputs.len()
@@ -99,54 +99,65 @@ impl Executable {
         Ok(parts)
     }
 
+    /// `entry <key>: input '<tensor>' has N elements, expected M (shape)` —
+    /// every validation failure names the entry and the offending tensor
+    /// with its manifest spec, so the error is actionable without a
+    /// debugger (the specs come straight from `artifacts/manifest.json`).
+    fn input_mismatch(&self, spec: &super::manifest::TensorSpec, got: usize) -> anyhow::Error {
+        anyhow::anyhow!(
+            "entry {}: input {:?} has {got} elements, expected {} (shape {:?})",
+            self.key,
+            spec.name,
+            spec.elements(),
+            spec.shape
+        )
+    }
+
     /// Build the standard (params, x, y, w) literal list for a batch entry.
     fn batch_inputs(&self, params: &[f32], batch: &Batch) -> Result<Vec<xla::Literal>> {
         let spec = &self.info.inputs;
         if spec.len() != 4 {
-            bail!("{}: not a batch entry", self.key);
+            bail!(
+                "entry {}: not a batch entry ({} inputs, expected params/x/y/w)",
+                self.key,
+                spec.len()
+            );
         }
         if params.len() != spec[0].elements() {
-            bail!(
-                "{}: params len {} != {}",
-                self.key,
-                params.len(),
-                spec[0].elements()
-            );
+            return Err(self.input_mismatch(&spec[0], params.len()));
         }
         if batch.pad_to != self.micro {
             bail!(
-                "{}: batch padded to {} rows, executable expects {}",
+                "entry {}: batch padded to {} rows, executable expects {}",
                 self.key,
                 batch.pad_to,
                 self.micro
             );
         }
         if batch.x.len() != spec[1].elements() {
-            bail!(
-                "{}: x len {} != {}",
-                self.key,
-                batch.x.len(),
-                spec[1].elements()
-            );
+            return Err(self.input_mismatch(&spec[1], batch.x.len()));
         }
         let dims: Vec<i64> = spec[1].shape.iter().map(|&d| d as i64).collect();
         let x = xla::Literal::vec1(&batch.x)
             .reshape(&dims)
-            .context("reshaping x")?;
+            .with_context(|| format!("entry {}: reshaping input \"x\"", self.key))?;
         let y = match spec[2].dtype {
             Dtype::F32 => {
                 if batch.y_f32.len() != self.micro {
-                    bail!("{}: f32 labels missing/short", self.key);
+                    return Err(self.input_mismatch(&spec[2], batch.y_f32.len()));
                 }
                 xla::Literal::vec1(&batch.y_f32)
             }
             Dtype::S32 => {
                 if batch.y_i32.len() != self.micro {
-                    bail!("{}: s32 labels missing/short", self.key);
+                    return Err(self.input_mismatch(&spec[2], batch.y_i32.len()));
                 }
                 xla::Literal::vec1(&batch.y_i32)
             }
         };
+        if batch.w.len() != spec[3].elements() {
+            return Err(self.input_mismatch(&spec[3], batch.w.len()));
+        }
         let w = xla::Literal::vec1(&batch.w);
         Ok(vec![xla::Literal::vec1(params), x, y, w])
     }
@@ -186,11 +197,23 @@ impl Executable {
         inv_m: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         if self.info.inputs.len() != 4 || self.info.inputs[3].name != "scalars" {
-            bail!("{}: not an update entry", self.key);
+            bail!(
+                "entry {}: not an update entry (expected params/velocity/grad_sum/scalars)",
+                self.key
+            );
         }
         let p = self.info.inputs[0].elements();
-        if params.len() != p || velocity.len() != p || grad_sum.len() != p {
-            bail!("{}: update vector length mismatch", self.key);
+        for (name, len) in [
+            ("params", params.len()),
+            ("velocity", velocity.len()),
+            ("grad_sum", grad_sum.len()),
+        ] {
+            if len != p {
+                bail!(
+                    "entry {}: input {name:?} has {len} elements, expected {p}",
+                    self.key
+                );
+            }
         }
         let scalars = [lr, momentum, weight_decay, inv_m];
         let inputs = vec![
@@ -206,9 +229,8 @@ impl Executable {
 
 #[cfg(test)]
 mod tests {
-    // Executable requires a live PJRT client + compiled HLO; its behaviour
-    // is covered end-to-end by rust/tests/integration_runtime.rs over the
-    // tiny artifacts.  Pure input-validation logic is tested there too
-    // (bad batch padding, wrong vector lengths) since constructing an
-    // Executable needs a real compile.
+    // Executable behaviour — numerics, padding no-ops, additivity, the
+    // actionable input-validation error messages — is covered end-to-end
+    // by rust/tests/integration_runtime.rs over the committed interpreter
+    // fixtures (rust/tests/fixtures), which run on every machine.
 }

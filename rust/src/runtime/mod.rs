@@ -10,9 +10,20 @@
 //! `Send + Sync`, the compile cache hands out `Arc<Executable>` handles,
 //! and concurrent first access to one entry compiles it exactly once —
 //! this is what the parallel trial engine ([`crate::engine`]) builds on.
-//! When the `xla` dependency is the vendored stub (rust/vendor/xla),
-//! compilation/caching works everywhere but execution is unavailable;
-//! see [`Runtime::has_execution_backend`].
+//!
+//! Execution comes in three backend tiers (see rust/vendor/xla):
+//!
+//! 1. **Interpreter** (default): a pure-Rust HLO evaluator inside the
+//!    vendored `xla` crate.  Compiled entries execute on every machine —
+//!    the full numeric test suite runs in plain `cargo test` over the
+//!    committed fixtures in rust/tests/fixtures, with no AOT build and
+//!    no native XLA.
+//! 2. **Stub** (`DIVEBATCH_BACKEND=stub`): compile/cache-only; execution
+//!    fails and [`Runtime::has_execution_backend`] reports `false`.
+//! 3. **Real PJRT**: point the `xla` dependency in rust/Cargo.toml at the
+//!    real xla_extension binding for native CPU/TPU execution over
+//!    `make artifacts` output (integration tests opt in with
+//!    `DIVEBATCH_TEST_ARTIFACTS=<dir>`).
 
 pub mod cache;
 pub mod executable;

@@ -1,18 +1,16 @@
 //! Trial-engine + thread-safe-runtime acceptance tests.
 //!
-//! Three layers, by environment requirement:
+//! Three layers, all of which now run everywhere over the committed
+//! interpreter fixtures (rust/tests/fixtures) — no skips:
 //!
-//! 1. **Always run** — static `Send + Sync` assertions (the compile-time
-//!    guarantee that one `Runtime` may be shared across engine workers)
-//!    and engine scheduling tests over fabricated trial specs.
-//! 2. **Compile-only** — concurrent compile-once semantics of the
-//!    executable cache.  Runs over fake artifacts under the vendored
-//!    `xla` stub (which compiles-but-cannot-execute), or over the real
-//!    tiny artifacts when a real backend is linked.
+//! 1. **Static** — `Send + Sync` assertions (the compile-time guarantee
+//!    that one `Runtime` may be shared across engine workers).
+//! 2. **Compile cache** — concurrent compile-once semantics of the
+//!    executable cache over real fixture entries (each parse-compiled by
+//!    the interpreter backend exactly once).
 //! 3. **Execution** — the serial-vs-parallel equivalence gate: a
 //!    policies x seeds sweep produces byte-identical canonical records
-//!    at `jobs = 1` and `jobs = 4`.  Skips (with a stderr note) without
-//!    `make artifacts-tiny` + a real backend.
+//!    at `jobs = 1` and `jobs = 4`.
 
 mod common;
 
@@ -46,85 +44,14 @@ fn runtime_layer_is_send_and_sync() {
 
 // ------------------------------------------------------------ layer 2
 
-/// A minimal-but-valid manifest over throwaway HLO text files, written
-/// to a fresh temp dir.  Under the stub backend these entries *compile*
-/// (the stub retains the text), which is all the cache tests need.
-fn fake_artifacts(tag: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join(format!(
-        "divebatch-engine-test-{}-{tag}",
-        std::process::id()
-    ));
-    std::fs::create_dir_all(&dir).unwrap();
-    let entry = |file: &str| {
-        format!(
-            r#"{{"file": "{file}", "hlo_bytes": 20,
-                "inputs": [{{"name": "params", "dtype": "f32", "shape": [9]}},
-                           {{"name": "x", "dtype": "f32", "shape": [4, 8]}},
-                           {{"name": "y", "dtype": "f32", "shape": [4]}},
-                           {{"name": "w", "dtype": "f32", "shape": [4]}}],
-                "outputs": [{{"name": "loss_sum", "dtype": "f32", "shape": []}},
-                            {{"name": "correct", "dtype": "f32", "shape": []}}]}}"#
-        )
-    };
-    let manifest = format!(
-        r#"{{"version": 1, "models": {{"m8": {{
-            "param_count": 9,
-            "input_shape": [8],
-            "label_dtype": "f32",
-            "num_classes": 2,
-            "ladder": [4],
-            "chunk": 4,
-            "tags": ["fake"],
-            "param_specs": [{{"name": "w", "shape": [8]}}, {{"name": "b", "shape": [1]}}],
-            "init_params": ["m8/init_s0.bin"],
-            "entries": {{
-                "train_div_b4": {e1},
-                "train_plain_b4": {e2},
-                "eval_b4": {e3}
-            }}}}}}}}"#,
-        e1 = entry("m8/train_div_b4.hlo.txt"),
-        e2 = entry("m8/train_plain_b4.hlo.txt"),
-        e3 = entry("m8/eval_b4.hlo.txt"),
-    );
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    let model_dir = dir.join("m8");
-    std::fs::create_dir_all(&model_dir).unwrap();
-    for f in ["train_div_b4.hlo.txt", "train_plain_b4.hlo.txt", "eval_b4.hlo.txt"] {
-        std::fs::write(model_dir.join(f), "HloModule fake_entry").unwrap();
-    }
-    dir
-}
-
-/// A runtime whose entries can at least COMPILE, plus the model name to
-/// use: fake artifacts under the stub, the real tiny artifacts under a
-/// real backend (skipping if they're absent).
-fn compile_capable_runtime(tag: &str) -> Option<(Runtime, &'static str)> {
-    // Probe the backend with a throwaway client-only runtime.
-    let fake_dir = fake_artifacts(tag);
-    let fake_rt = Runtime::load(&fake_dir).unwrap();
-    if !fake_rt.has_execution_backend() {
-        return Some((fake_rt, "m8"));
-    }
-    let _ = std::fs::remove_dir_all(&fake_dir);
-    match Runtime::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
-        Ok(rt) => Some((rt, "tinylogreg8")),
-        Err(e) => {
-            eprintln!("skipping: real backend but artifacts missing ({e:#})");
-            None
-        }
-    }
-}
-
 #[test]
 fn concurrent_first_access_compiles_exactly_once() {
-    let Some((rt, model)) = compile_capable_runtime("once") else {
-        return;
-    };
+    let rt = common::runtime();
     assert_eq!(rt.stats().compiles, 0);
     let rt = &rt;
     let handles: Vec<Arc<Executable>> = std::thread::scope(|s| {
         let workers: Vec<_> = (0..8)
-            .map(|_| s.spawn(move || rt.train_exec(model, true, 4).unwrap()))
+            .map(|_| s.spawn(move || rt.train_exec("tinylogreg8", true, 4).unwrap()))
             .collect();
         workers.into_iter().map(|w| w.join().unwrap()).collect()
     });
@@ -135,23 +62,21 @@ fn concurrent_first_access_compiles_exactly_once() {
         assert!(Arc::ptr_eq(&handles[0], h));
     }
     // Subsequent lookups hit the fast path.
-    let again = rt.train_exec(model, true, 4).unwrap();
+    let again = rt.train_exec("tinylogreg8", true, 4).unwrap();
     assert!(Arc::ptr_eq(&handles[0], &again));
     assert_eq!(rt.stats().compiles, 1);
 }
 
 #[test]
 fn distinct_entries_compile_concurrently_once_each() {
-    let Some((rt, model)) = compile_capable_runtime("distinct") else {
-        return;
-    };
+    let rt = common::runtime();
     let rt = &rt;
     std::thread::scope(|s| {
         // 3 distinct entries x 4 racing threads each.
         for _ in 0..4 {
-            s.spawn(move || rt.train_exec(model, true, 4).unwrap());
-            s.spawn(move || rt.train_exec(model, false, 4).unwrap());
-            s.spawn(move || rt.eval_exec(model, 4).unwrap());
+            s.spawn(move || rt.train_exec("tinylogreg8", true, 4).unwrap());
+            s.spawn(move || rt.train_exec("tinylogreg8", false, 4).unwrap());
+            s.spawn(move || rt.eval_exec("tinylogreg8", 4).unwrap());
         }
     });
     assert_eq!(rt.stats().compiles, 3);
@@ -161,14 +86,10 @@ fn distinct_entries_compile_concurrently_once_each() {
 
 #[test]
 fn failed_trials_are_isolated_and_ordered() {
-    // Over fake artifacts the trials cannot execute (stub) or even load
-    // real init params — every trial must come back as an ERROR, in spec
-    // order, with the sweep completing rather than aborting.  Under a
-    // real backend this exercises the same path via the missing-model
-    // error instead.
-    let Some((rt, _)) = compile_capable_runtime("isolated") else {
-        return;
-    };
+    // A sweep over a nonexistent model: every trial must come back as an
+    // ERROR, in spec order, with the sweep completing rather than
+    // aborting — per-trial isolation through the worker pool.
+    let rt = common::runtime();
     let run = RunSpec {
         cfg: TrainConfig::new(
             "no-such-model",
@@ -195,7 +116,8 @@ fn failed_trials_are_isolated_and_ordered() {
         assert!(e.to_string().contains("no-such-model"), "{e}");
     }
     // The runtime stays usable after failed trials.
-    assert!(rt.cached_executables() <= 3);
+    let ok = rt.eval_exec("tinylogreg8", 4);
+    assert!(ok.is_ok());
 }
 
 // ------------------------------------------------------------ layer 3
@@ -203,12 +125,12 @@ fn failed_trials_are_isolated_and_ordered() {
 /// The acceptance gate: a policies x seeds sweep through the engine is
 /// byte-identical between `jobs = 1` and `jobs = 4` on the canonical
 /// record JSON (wall-clock masked — everything else must match exactly),
-/// and matches the plain serial `RunSpec::run` path.
+/// and matches the plain serial `RunSpec::run` path.  The interpreter
+/// backend evaluates every trial's HLO deterministically, so this runs —
+/// and gates — on every machine.
 #[test]
 fn sweep_records_byte_identical_serial_vs_parallel() {
-    let Some(rt) = common::runtime() else {
-        return;
-    };
+    let rt = common::runtime();
     let dataset = DatasetSpec::Synthetic(SyntheticSpec {
         n: 120,
         d: 8,
@@ -277,9 +199,7 @@ fn sweep_records_byte_identical_serial_vs_parallel() {
 /// and examples use; same equivalence, arm-level.
 #[test]
 fn run_jobs_matches_run() {
-    let Some(rt) = common::runtime() else {
-        return;
-    };
+    let rt = common::runtime();
     let run = RunSpec {
         cfg: TrainConfig::new(
             "tinylogreg8",

@@ -1,0 +1,117 @@
+//! Golden-record regression gate: one fixed `(config, dataset, seed)`
+//! synthetic run whose canonical record JSON is pinned byte-for-byte.
+//!
+//! Any numeric drift in the trainer, optimizer, diversity accumulation,
+//! policy decisions, simulated-cluster timing, record serialization, or
+//! the interpreter backend itself changes the canonical JSON and fails
+//! this test loudly — the fixture diff then *is* the drift report.
+//!
+//! Blessing a new golden (after an intentional semantic change):
+//!
+//! ```bash
+//! DIVEBATCH_BLESS=1 cargo test --test golden_record
+//! git add rust/tests/fixtures/golden_run_record.json
+//! ```
+//!
+//! Bootstrap: if the fixture file is absent, the test writes it from
+//! the current run and passes, with a loud note (a GitHub `::warning::`
+//! annotation under CI) demanding the file be committed — the
+//! authoring environment has no Rust toolchain, so the first machine to
+//! run the suite materializes the baseline for review.  Until it is
+//! committed, the cross-checkout pin is inactive and only the
+//! in-process determinism assertion below gates; once committed, any
+//! byte of drift fails.
+
+mod common;
+
+use divebatch::config::{DatasetSpec, RunSpec};
+use divebatch::coordinator::{LrSchedule, Policy, TrainConfig};
+use divebatch::data::SyntheticSpec;
+
+fn golden_path() -> &'static str {
+    concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/golden_run_record.json"
+    )
+}
+
+/// The pinned run: DiveBatch over the synthetic-convex fixture model.
+/// Every knob is explicit so the fixture is reproducible from this file
+/// alone.
+fn golden_run() -> String {
+    let rt = common::runtime();
+    let spec = RunSpec {
+        cfg: TrainConfig::new(
+            "tinylogreg8",
+            Policy::DiveBatch {
+                m0: 4,
+                delta: 0.5,
+                m_max: 8,
+            },
+            LrSchedule::constant(0.3, true),
+            6,
+        ),
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 120,
+            d: 8,
+            noise: 0.05,
+            seed: 33,
+        }),
+        trials: 1,
+        flops_per_sample: 1e3,
+    };
+    let rec = spec.run(&rt).unwrap().into_iter().next().unwrap();
+    rec.to_canonical_json().to_string()
+}
+
+#[test]
+fn golden_run_record_matches_committed_fixture() {
+    let got = golden_run();
+    let path = golden_path();
+    let bless = std::env::var("DIVEBATCH_BLESS").is_ok_and(|v| v == "1");
+    match std::fs::read_to_string(path) {
+        Ok(want) => {
+            if bless && got != want {
+                std::fs::write(path, &got).unwrap();
+                eprintln!("golden_record: re-blessed {path} (commit the new fixture)");
+                return;
+            }
+            assert_eq!(
+                got, want,
+                "canonical run record drifted from the committed golden \
+                 ({path}); if the change is intentional, re-bless with \
+                 DIVEBATCH_BLESS=1 and commit the diff"
+            );
+        }
+        // Bootstrap applies ONLY to a genuinely absent fixture; any other
+        // read failure (permissions, non-UTF8 from a botched merge) must
+        // fail rather than silently re-bless a damaged baseline.
+        Err(e) if e.kind() != std::io::ErrorKind::NotFound => {
+            panic!("golden_record: cannot read fixture {path}: {e}");
+        }
+        Err(_) => {
+            std::fs::write(path, &got).unwrap();
+            eprintln!(
+                "golden_record: no fixture at {path} — wrote one from this run; \
+                 COMMIT IT so future runs gate on it"
+            );
+            if std::env::var("CI").is_ok() {
+                // Surfaced as a GitHub Actions annotation (tests run
+                // with --nocapture in CI, so this reaches the log).
+                println!(
+                    "::warning file=rust/tests/golden_record.rs::golden_record \
+                     baseline missing — bootstrap-blessed this run; commit \
+                     rust/tests/fixtures/golden_run_record.json to arm the gate"
+                );
+            }
+        }
+    }
+}
+
+/// The golden run itself is reproducible within a process: two fresh
+/// trainer invocations produce byte-identical canonical JSON.  (The
+/// cross-process pin is the committed fixture above.)
+#[test]
+fn golden_run_is_deterministic_in_process() {
+    assert_eq!(golden_run(), golden_run());
+}

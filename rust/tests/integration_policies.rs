@@ -4,8 +4,8 @@
 //! and step-level policies through the real trainer, and the
 //! RunSpec/preset machinery end to end.
 //!
-//! Needs the tiny artifacts + a real execution backend; tests skip with
-//! a stderr note otherwise (see rust/vendor/xla).
+//! Runs everywhere over the committed interpreter fixtures
+//! (rust/tests/fixtures) — no AOT artifacts, no native XLA, no skips.
 
 mod common;
 
@@ -25,20 +25,20 @@ fn tiny_synth(n: usize) -> DatasetSpec {
     })
 }
 
-fn run_policy(policy: Policy, epochs: usize, n: usize) -> Option<divebatch::RunRecord> {
-    let rt = runtime()?;
+fn run_policy(policy: Policy, epochs: usize, n: usize) -> divebatch::RunRecord {
+    let rt = runtime();
     let spec = RunSpec {
         cfg: TrainConfig::new("tinylogreg8", policy, LrSchedule::constant(0.3, false), epochs),
         dataset: tiny_synth(n),
         trials: 1,
         flops_per_sample: 1e3,
     };
-    Some(spec.run(&rt).unwrap().into_iter().next().unwrap())
+    spec.run(&rt).unwrap().into_iter().next().unwrap()
 }
 
 #[test]
 fn adabatch_trajectory_through_real_training() {
-    let Some(rec) = run_policy(
+    let rec = run_policy(
         Policy::AdaBatch {
             m0: 4,
             factor: 2,
@@ -47,9 +47,7 @@ fn adabatch_trajectory_through_real_training() {
         },
         9,
         100,
-    ) else {
-        return;
-    };
+    );
     let sizes: Vec<usize> = rec.epochs.iter().map(|e| e.batch_size).collect();
     assert_eq!(sizes, vec![4, 4, 4, 8, 8, 8, 8, 8, 8]);
     // AdaBatch never requests diversity instrumentation.
@@ -58,7 +56,7 @@ fn adabatch_trajectory_through_real_training() {
 
 #[test]
 fn divebatch_growth_is_bounded_and_instrumented() {
-    let Some(rec) = run_policy(
+    let rec = run_policy(
         Policy::DiveBatch {
             m0: 4,
             delta: 1.0,
@@ -66,9 +64,7 @@ fn divebatch_growth_is_bounded_and_instrumented() {
         },
         6,
         120,
-    ) else {
-        return;
-    };
+    );
     assert!(rec.epochs[0].batch_size == 4);
     assert!(rec.epochs.iter().all(|e| e.batch_size <= 8));
     assert!(rec.epochs.iter().all(|e| e.delta_hat.is_some()));
@@ -78,10 +74,8 @@ fn divebatch_growth_is_bounded_and_instrumented() {
 fn mixed_ladder_plan_executes_odd_batches() {
     // n=90, m=7 exercises tail batches (90 = 12*7 + 6) and padded blocks
     // over a {4, 8} ladder every epoch.
-    let Some(rec) = run_policy(Policy::Fixed { m: 7 }, 3, 112) else {
-        return;
-    };
-    // ceil(89.6->89 train? n split 80% of 112 = 90 train) / 7 = 13 steps.
+    let rec = run_policy(Policy::Fixed { m: 7 }, 3, 112);
+    // 80% of 112 = 90 train rows; ceil(90/7) steps.
     let steps = rec.epochs[0].steps;
     assert_eq!(steps, 90usize.div_ceil(7));
     assert!(rec.epochs.iter().all(|e| e.val_loss.is_finite()));
@@ -89,9 +83,7 @@ fn mixed_ladder_plan_executes_odd_batches() {
 
 #[test]
 fn runspec_multi_trial_aggregation() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     let spec = RunSpec {
         cfg: TrainConfig::new(
             "tinylogreg8",
@@ -116,9 +108,7 @@ fn runspec_multi_trial_aggregation() {
 
 #[test]
 fn csv_writes_from_real_run() {
-    let Some(rec) = run_policy(Policy::Fixed { m: 8 }, 3, 80) else {
-        return;
-    };
+    let rec = run_policy(Policy::Fixed { m: 8 }, 3, 80);
     let dir = std::env::temp_dir().join("divebatch-test-csv");
     let path = dir.join("run.csv");
     rec.write_csv(&path).unwrap();
@@ -132,7 +122,7 @@ fn csv_writes_from_real_run() {
 fn registry_spec_matches_enum_trajectory() {
     // Acceptance gate for the BatchPolicy redesign: a registry-parsed
     // spec must produce a byte-identical run to the legacy enum config.
-    let Some(by_enum) = run_policy(
+    let by_enum = run_policy(
         Policy::DiveBatch {
             m0: 4,
             delta: 1.0,
@@ -140,12 +130,8 @@ fn registry_spec_matches_enum_trajectory() {
         },
         6,
         120,
-    ) else {
-        return;
-    };
-    let Some(rt) = runtime() else {
-        return;
-    };
+    );
+    let rt = runtime();
     let handle = PolicyRegistry::builtin()
         .parse("divebatch:m0=4,delta=1,mmax=8")
         .unwrap();
@@ -168,9 +154,7 @@ fn registry_spec_matches_enum_trajectory() {
 
 #[test]
 fn warmup_wrapper_through_real_training() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     let handle = PolicyRegistry::builtin()
         .parse("warmup:epochs=3,m=2/sgd:m=8")
         .unwrap();
@@ -227,9 +211,7 @@ impl BatchPolicy for StepRamp {
 
 #[test]
 fn step_level_policy_resizes_mid_epoch() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     let policy = PolicyHandle::new(Box::new(StepRamp {
         m0: 4,
         grow_at_step: 5,
@@ -266,9 +248,7 @@ fn preset_machinery_smoke() {
 
 #[test]
 fn profiler_sections_populated() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     let spec = RunSpec {
         cfg: TrainConfig::new(
             "tinylogreg8",

@@ -1,16 +1,16 @@
-//! End-to-end trainer integration over the tiny artifacts: full epoch
-//! loops through the PJRT runtime, policies adapting batch sizes, loss
-//! decreasing on learnable data, determinism, and the device-update path.
+//! End-to-end trainer integration over the committed interpreter
+//! fixtures: full epoch loops through the runtime, policies adapting
+//! batch sizes, loss decreasing on learnable data, determinism, and the
+//! device-update path.  Runs everywhere in plain `cargo test` — no AOT
+//! artifacts, no native XLA, no skips.
 //!
-//! Requires the tiny AOT artifacts (`make artifacts-tiny`) AND a real
-//! execution backend (the vendored `xla` stub compiles but cannot
-//! execute — see rust/vendor/xla).  When either is missing, every test
-//! here skips with a note instead of failing, so `cargo test` stays
-//! green on artifact-free machines/CI.
+//! The conv-resnet image run additionally executes on a real backend
+//! when `DIVEBATCH_TEST_ARTIFACTS` opts in (the interpreter fixtures
+//! ship only the convex model).
 
 mod common;
 
-use common::runtime;
+use common::{real_runtime, runtime};
 use divebatch::cluster::ClusterModel;
 use divebatch::coordinator::{LrSchedule, Policy, TrainConfig, Trainer};
 use divebatch::data::{synthetic, SyntheticSpec};
@@ -38,24 +38,20 @@ fn base_cfg(policy: Policy, epochs: usize) -> TrainConfig {
     )
 }
 
-/// Run one config; `None` means the environment can't execute (skip).
-fn run(cfg: TrainConfig, n: usize, data_seed: u64) -> Option<divebatch::RunRecord> {
-    let rt = runtime()?;
+/// Run one config over the fixture runtime.
+fn run(cfg: TrainConfig, n: usize, data_seed: u64) -> divebatch::RunRecord {
+    let rt = runtime();
     let (train, val) = synth_split(n, data_seed);
-    Some(
-        Trainer::new(&rt, cfg, train, val, cluster())
-            .unwrap()
-            .run()
-            .unwrap()
-            .record,
-    )
+    Trainer::new(&rt, cfg, train, val, cluster())
+        .unwrap()
+        .run()
+        .unwrap()
+        .record
 }
 
 #[test]
 fn sgd_learns_separable_data() {
-    let Some(rec) = run(base_cfg(Policy::Fixed { m: 8 }, 15), 400, 1) else {
-        return;
-    };
+    let rec = run(base_cfg(Policy::Fixed { m: 8 }, 15), 400, 1);
     assert_eq!(rec.epochs.len(), 15);
     let first = &rec.epochs[0];
     let last = rec.epochs.last().unwrap();
@@ -78,9 +74,7 @@ fn divebatch_adapts_batch_size_and_records_diversity() {
         delta: 0.5,
         m_max: 8,
     };
-    let Some(rec) = run(base_cfg(policy, 10), 200, 2) else {
-        return;
-    };
+    let rec = run(base_cfg(policy, 10), 200, 2);
     // Diversity recorded every epoch.
     assert!(rec.epochs.iter().all(|e| e.delta_hat.is_some()));
     assert!(rec.epochs.iter().all(|e| e.n_delta.unwrap() > 0.0));
@@ -101,9 +95,7 @@ fn oracle_records_exact_diversity() {
         delta: 0.5,
         m_max: 8,
     };
-    let Some(rec) = run(base_cfg(policy, 6), 200, 3) else {
-        return;
-    };
+    let rec = run(base_cfg(policy, 6), 200, 3);
     assert!(rec.epochs.iter().all(|e| e.exact_delta.is_some()));
     assert!(rec.epochs.iter().all(|e| e.delta_hat.is_none()));
     let d = rec.epochs[0].exact_delta.unwrap();
@@ -123,9 +115,7 @@ fn oracle_and_divebatch_deltas_agree_roughly_on_logreg() {
         5,
     );
     dive_cfg.schedule = LrSchedule::constant(0.05, false);
-    let Some(dive) = run(dive_cfg, 200, 4) else {
-        return;
-    };
+    let dive = run(dive_cfg, 200, 4);
     let mut oracle_cfg = base_cfg(
         Policy::Oracle {
             m0: 4,
@@ -135,9 +125,7 @@ fn oracle_and_divebatch_deltas_agree_roughly_on_logreg() {
         5,
     );
     oracle_cfg.schedule = LrSchedule::constant(0.05, false);
-    let Some(oracle) = run(oracle_cfg, 200, 4) else {
-        return;
-    };
+    let oracle = run(oracle_cfg, 200, 4);
     for (d, o) in dive.epochs.iter().zip(&oracle.epochs) {
         let dh = d.delta_hat.unwrap();
         let ex = o.exact_delta.unwrap();
@@ -152,12 +140,8 @@ fn oracle_and_divebatch_deltas_agree_roughly_on_logreg() {
 
 #[test]
 fn runs_are_deterministic_per_seed() {
-    let (Some(a), Some(b)) = (
-        run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7),
-        run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7),
-    ) else {
-        return;
-    };
+    let a = run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7);
+    let b = run(base_cfg(Policy::Fixed { m: 8 }, 5), 200, 7);
     for (x, y) in a.epochs.iter().zip(&b.epochs) {
         assert_eq!(x.val_loss, y.val_loss);
         assert_eq!(x.train_loss, y.train_loss);
@@ -172,9 +156,7 @@ fn device_update_matches_rust_update() {
         cfg.device_update = device;
         run(cfg, 200, 9)
     };
-    let (Some(host), Some(dev)) = (mk(false), mk(true)) else {
-        return;
-    };
+    let (host, dev) = (mk(false), mk(true));
     for (h, d) in host.epochs.iter().zip(&dev.epochs) {
         assert!(
             (h.val_loss - d.val_loss).abs() < 1e-4,
@@ -192,9 +174,7 @@ fn momentum_and_weight_decay_run() {
     cfg.momentum = 0.9;
     cfg.weight_decay = 1e-4;
     cfg.schedule = LrSchedule::constant(0.1, false);
-    let Some(rec) = run(cfg, 300, 11) else {
-        return;
-    };
+    let rec = run(cfg, 300, 11);
     let last = rec.epochs.last().unwrap();
     assert!(last.val_loss.is_finite());
     assert!(last.val_acc > 70.0, "{}", last.val_acc);
@@ -209,9 +189,7 @@ fn lr_schedule_decays_in_records() {
         every: 2,
         rescale_with_batch: false,
     };
-    let Some(rec) = run(cfg, 100, 12) else {
-        return;
-    };
+    let rec = run(cfg, 100, 12);
     let lrs: Vec<f64> = rec.epochs.iter().map(|e| e.lr).collect();
     assert_eq!(lrs, vec![1.0, 1.0, 0.5, 0.5, 0.25, 0.25]);
 }
@@ -225,9 +203,7 @@ fn goyal_rescaling_scales_lr_with_batch() {
     };
     let mut cfg = base_cfg(policy, 6);
     cfg.schedule = LrSchedule::constant(0.2, true);
-    let Some(rec) = run(cfg, 200, 13) else {
-        return;
-    };
+    let rec = run(cfg, 200, 13);
     for e in &rec.epochs {
         let want = 0.2 * e.batch_size as f64 / 4.0;
         assert!((e.lr - want).abs() < 1e-12, "epoch {}: {}", e.epoch, e.lr);
@@ -236,9 +212,7 @@ fn goyal_rescaling_scales_lr_with_batch() {
 
 #[test]
 fn simulated_time_accumulates_monotonically() {
-    let Some(rec) = run(base_cfg(Policy::Fixed { m: 8 }, 4), 100, 14) else {
-        return;
-    };
+    let rec = run(base_cfg(Policy::Fixed { m: 8 }, 4), 100, 14);
     let mut prev = 0.0;
     for e in &rec.epochs {
         assert!(e.cum_sim_s > prev);
@@ -260,9 +234,7 @@ fn adam_trains_logreg() {
     );
     cfg.use_adam = true;
     cfg.schedule = divebatch::coordinator::LrSchedule::constant(0.05, false);
-    let Some(rec) = run(cfg, 300, 21) else {
-        return;
-    };
+    let rec = run(cfg, 300, 21);
     let first = &rec.epochs[0];
     let last = rec.epochs.last().unwrap();
     assert!(last.val_loss < first.val_loss);
@@ -273,9 +245,7 @@ fn adam_trains_logreg() {
 
 #[test]
 fn adam_with_device_update_rejected() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     let (train, val) = synth_split(100, 22);
     let mut cfg = base_cfg(Policy::Fixed { m: 8 }, 1);
     cfg.use_adam = true;
@@ -302,9 +272,7 @@ fn sgld_boosts_diversity_and_batch_growth() {
         cfg.sgld = divebatch::coordinator::SgldConfig { sigma };
         run(cfg, 200, 23)
     };
-    let (Some(plain), Some(noised)) = (mk(0.0), mk(0.5)) else {
-        return;
-    };
+    let (plain, noised) = (mk(0.0), mk(0.5));
     for (p, n) in plain.epochs.iter().zip(&noised.epochs) {
         let (dp, dn) = (p.delta_hat.unwrap(), n.delta_hat.unwrap());
         assert!(
@@ -320,9 +288,7 @@ fn sgld_boosts_diversity_and_batch_growth() {
 
 #[test]
 fn mismatched_dataset_rejected() {
-    let Some(rt) = runtime() else {
-        return;
-    };
+    let rt = runtime();
     // Image dataset against logreg model must fail fast.
     let img = divebatch::data::images::generate(&divebatch::ImageSpec {
         num_classes: 4,
@@ -338,9 +304,9 @@ fn mismatched_dataset_rejected() {
 }
 
 #[test]
-fn tiny_resnet_trains_on_images() {
-    let Some(rt) = runtime() else {
-        return;
+fn real_backend_tiny_resnet_trains_on_images() {
+    let Some(rt) = real_runtime() else {
+        return; // opt-in extra (needs conv support, i.e. a real backend)
     };
     let img = divebatch::data::images::generate(&divebatch::ImageSpec {
         num_classes: 4,

@@ -1,0 +1,1769 @@
+//! Pure-Rust HLO-text interpreter: the `interp` execution backend.
+//!
+//! Parses the HLO **text** interchange format emitted by the AOT pipeline
+//! (python/compile/aot.py via `XlaComputation::as_hlo_text`) and evaluates
+//! it on the host, so compiled entries execute with no native XLA at all.
+//! This is a *reference* backend: correctness over speed, anchored by
+//! golden outputs from the Python/jax side
+//! (rust/tests/fixtures/golden_entry_outputs.json).
+//!
+//! Supported op subset — everything the repo's lowered entries use
+//! (elementwise arithmetic + math, dot, reduce, broadcast, reshape,
+//! transpose, slice, pad, concatenate, compare, select, convert,
+//! constant, parameter, iota, tuple / get-tuple-element) over `f32`,
+//! `s32` and `pred` element types.  Anything outside the subset (e.g.
+//! convolution, while, custom-call from a non-interpret Pallas lowering)
+//! fails at **compile** time with an error naming the opcode, so misuse
+//! surfaces before any train loop starts.
+//!
+//! Numerics: elementwise math and dot/reduce accumulation are performed
+//! in `f32`, mirroring the XLA CPU backend closely enough that the
+//! committed goldens agree to ~1e-5 relative; evaluation order is fixed,
+//! so results are bit-identical across runs and across engine workers
+//! (the `jobs=1` vs `jobs=4` canonical-record equivalence relies on
+//! this).
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::{Data, Error, Literal, Result};
+
+// ------------------------------------------------------------------ shapes
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::Pred => "pred",
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct Shape {
+    dtype: DType,
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+#[derive(Clone, Debug)]
+enum ShapeSpec {
+    Dense(Shape),
+    Tuple(Vec<Shape>),
+}
+
+fn err(msg: String) -> Error {
+    Error::Interp(msg)
+}
+
+fn parse_dense_shape(tok: &str) -> Result<Shape> {
+    let tok = tok.trim();
+    let (dt, rest) = tok
+        .split_once('[')
+        .ok_or_else(|| err(format!("malformed shape {tok:?}")))?;
+    let dtype = match dt.trim() {
+        "f32" => DType::F32,
+        "s32" => DType::S32,
+        "pred" => DType::Pred,
+        other => {
+            return Err(err(format!(
+                "unsupported element type {other:?} (interp handles f32/s32/pred)"
+            )))
+        }
+    };
+    let (dims_str, _layout) = rest
+        .split_once(']')
+        .ok_or_else(|| err(format!("malformed shape {tok:?}")))?;
+    let mut dims = Vec::new();
+    if !dims_str.trim().is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad dimension {d:?} in shape {tok:?}")))?,
+            );
+        }
+    }
+    Ok(Shape { dtype, dims })
+}
+
+fn parse_shape_spec(s: &str) -> Result<ShapeSpec> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner
+            .strip_suffix(')')
+            .ok_or_else(|| err(format!("malformed tuple shape {s:?}")))?;
+        let mut parts = Vec::new();
+        for piece in split_top(inner, ',') {
+            parts.push(parse_dense_shape(&piece)?);
+        }
+        Ok(ShapeSpec::Tuple(parts))
+    } else {
+        Ok(ShapeSpec::Dense(parse_dense_shape(s)?))
+    }
+}
+
+/// Split on `sep` at nesting depth 0 w.r.t. `()`, `{}`, `[]`.
+fn split_top(s: &str, sep: char) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            _ => {}
+        }
+        if c == sep && depth == 0 {
+            if !cur.trim().is_empty() {
+                out.push(cur.trim().to_string());
+            }
+            cur.clear();
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+// ------------------------------------------------------------------ values
+
+#[derive(Clone, Debug)]
+enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::Pred(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Buf::F32(_) => DType::F32,
+            Buf::I32(_) => DType::S32,
+            Buf::Pred(_) => DType::Pred,
+        }
+    }
+
+    /// Lossless-for-our-dtypes scalar view (f32 and i32 embed exactly in
+    /// f64; pred maps to 0/1) — used by structural ops only, which write
+    /// the values straight back into the same dtype.
+    fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Buf::F32(v) => v[i] as f64,
+            Buf::I32(v) => v[i] as f64,
+            Buf::Pred(v) => {
+                if v[i] {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    fn build(dtype: DType, vals: Vec<f64>) -> Buf {
+        match dtype {
+            DType::F32 => Buf::F32(vals.into_iter().map(|v| v as f32).collect()),
+            DType::S32 => Buf::I32(vals.into_iter().map(|v| v as i32).collect()),
+            DType::Pred => Buf::Pred(vals.into_iter().map(|v| v != 0.0).collect()),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Value {
+    Dense { dims: Vec<usize>, buf: Buf },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    fn dense(&self) -> Result<(&[usize], &Buf)> {
+        match self {
+            Value::Dense { dims, buf } => Ok((dims, buf)),
+            Value::Tuple(_) => Err(err("expected a dense (non-tuple) value".into())),
+        }
+    }
+
+    fn f32s(&self) -> Result<&[f32]> {
+        match self.dense()?.1 {
+            Buf::F32(v) => Ok(v),
+            other => Err(err(format!("expected f32 data, got {}", other.dtype()))),
+        }
+    }
+
+    fn preds(&self) -> Result<&[bool]> {
+        match self.dense()?.1 {
+            Buf::Pred(v) => Ok(v),
+            other => Err(err(format!("expected pred data, got {}", other.dtype()))),
+        }
+    }
+
+    fn scalar_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            return Err(err(format!("expected a scalar, got {} elements", v.len())));
+        }
+        Ok(v[0])
+    }
+}
+
+fn elements(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Row-major strides for `dims`.
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Decompose a flat row-major index into coordinates.
+fn coords_of(mut flat: usize, dims: &[usize], st: &[usize]) -> Vec<usize> {
+    let mut c = vec![0usize; dims.len()];
+    for i in 0..dims.len() {
+        c[i] = flat / st[i];
+        flat %= st[i];
+    }
+    c
+}
+
+// ------------------------------------------------------------ instructions
+
+#[derive(Clone, Debug, Default)]
+struct Attrs {
+    dimensions: Vec<usize>,
+    slice: Vec<(i64, i64, i64)>,
+    padding: Vec<(i64, i64, i64)>,
+    direction: Option<String>,
+    to_apply: Option<String>,
+    lhs_contracting: Vec<usize>,
+    rhs_contracting: Vec<usize>,
+    lhs_batch: Vec<usize>,
+    rhs_batch: Vec<usize>,
+    index: Option<usize>,
+    iota_dimension: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+struct Instr {
+    name: String,
+    shape: ShapeSpec,
+    op: String,
+    operands: Vec<usize>,
+    attrs: Attrs,
+    param: Option<usize>,
+    literal: Option<Value>,
+    is_root: bool,
+}
+
+#[derive(Clone, Debug)]
+struct Computation {
+    name: String,
+    instrs: Vec<Instr>,
+    root: usize,
+    /// Instruction index by parameter number.
+    params: Vec<usize>,
+}
+
+/// A parsed, executable HLO module.
+#[derive(Debug)]
+pub(crate) struct Module {
+    computations: Vec<Computation>,
+    by_name: HashMap<String, usize>,
+    entry: usize,
+}
+
+/// Pre-resolution instruction: operand names instead of indices.
+struct RawInstr {
+    instr: Instr,
+    operand_names: Vec<String>,
+}
+
+fn parse_usize_set(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for piece in inner.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        out.push(
+            piece
+                .parse::<usize>()
+                .map_err(|_| err(format!("bad integer list entry {piece:?}")))?,
+        );
+    }
+    Ok(out)
+}
+
+fn parse_slice_spec(s: &str) -> Result<Vec<(i64, i64, i64)>> {
+    // {[0:8], [1:3:2]}
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for piece in split_top(inner, ',') {
+        let piece = piece.trim().trim_start_matches('[').trim_end_matches(']');
+        let parts: Vec<&str> = piece.split(':').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(err(format!("bad slice spec {piece:?}")));
+        }
+        let p = |i: usize| -> Result<i64> {
+            parts[i]
+                .trim()
+                .parse::<i64>()
+                .map_err(|_| err(format!("bad slice bound {:?}", parts[i])))
+        };
+        let stride = if parts.len() == 3 { p(2)? } else { 1 };
+        out.push((p(0)?, p(1)?, stride));
+    }
+    Ok(out)
+}
+
+fn parse_padding_spec(s: &str) -> Result<Vec<(i64, i64, i64)>> {
+    // 8_0 | 0_1x2_3 | 1_1_2 (lo_hi[_interior] per dim, joined by x)
+    let mut out = Vec::new();
+    for piece in s.trim().split('x') {
+        let parts: Vec<&str> = piece.split('_').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(err(format!("bad padding spec {piece:?}")));
+        }
+        let p = |i: usize| -> Result<i64> {
+            parts[i]
+                .trim()
+                .parse::<i64>()
+                .map_err(|_| err(format!("bad padding entry {:?}", parts[i])))
+        };
+        let interior = if parts.len() == 3 { p(2)? } else { 0 };
+        out.push((p(0)?, p(1)?, interior));
+    }
+    Ok(out)
+}
+
+fn parse_constant_payload(payload: &str, shape: &Shape) -> Result<Value> {
+    let toks: Vec<String> = payload
+        .replace(['{', '}', ','], " ")
+        .split_whitespace()
+        .map(str::to_string)
+        .collect();
+    let want = shape.elements();
+    if toks.len() != want {
+        return Err(err(format!(
+            "constant payload has {} values, shape {shape} wants {want}",
+            toks.len()
+        )));
+    }
+    let buf = match shape.dtype {
+        DType::F32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(
+                    t.parse::<f32>()
+                        .map_err(|_| err(format!("bad f32 constant {t:?}")))?,
+                );
+            }
+            Buf::F32(v)
+        }
+        DType::S32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(
+                    t.parse::<i32>()
+                        .map_err(|_| err(format!("bad s32 constant {t:?}")))?,
+                );
+            }
+            Buf::I32(v)
+        }
+        DType::Pred => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(match t.as_str() {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    _ => return Err(err(format!("bad pred constant {t:?}"))),
+                });
+            }
+            Buf::Pred(v)
+        }
+    };
+    Ok(Value::Dense {
+        dims: shape.dims.clone(),
+        buf,
+    })
+}
+
+/// Strip an operand token down to its instruction name: the last
+/// whitespace-separated word (drops optional type prefixes in canonical
+/// HLO), minus any leading `%`.
+fn operand_name(tok: &str) -> String {
+    tok.split_whitespace()
+        .last()
+        .unwrap_or("")
+        .trim_start_matches('%')
+        .to_string()
+}
+
+fn parse_instr(line: &str) -> Result<RawInstr> {
+    let (lhs, rhs) = line
+        .split_once(" = ")
+        .ok_or_else(|| err(format!("malformed instruction {line:?}")))?;
+    let lhs = lhs.trim();
+    let is_root = lhs.starts_with("ROOT ");
+    let name = lhs
+        .trim_start_matches("ROOT ")
+        .trim()
+        .trim_start_matches('%')
+        .to_string();
+
+    // Shape: a leading parenthesized tuple type, or the first token.
+    let rhs = rhs.trim();
+    let (shape_str, rest) = if rhs.starts_with('(') {
+        let mut depth = 0i32;
+        let mut cut = None;
+        for (i, c) in rhs.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = Some(i + 1);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let cut = cut.ok_or_else(|| err(format!("unbalanced tuple shape in {line:?}")))?;
+        (&rhs[..cut], rhs[cut..].trim_start())
+    } else {
+        let cut = rhs
+            .find(' ')
+            .ok_or_else(|| err(format!("malformed instruction {line:?}")))?;
+        (&rhs[..cut], rhs[cut..].trim_start())
+    };
+    let shape = parse_shape_spec(shape_str)?;
+
+    // Opcode, then its balanced parenthesized operand list.
+    let open = rest
+        .find('(')
+        .ok_or_else(|| err(format!("missing operand list in {line:?}")))?;
+    let op = rest[..open].trim().to_string();
+    let mut depth = 0i32;
+    let mut close = None;
+    for (i, c) in rest.char_indices().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = close.ok_or_else(|| err(format!("unbalanced operand list in {line:?}")))?;
+    let payload = &rest[open + 1..close];
+    let attrs_str = rest[close + 1..].trim_start_matches(',').trim();
+
+    let mut attrs = Attrs::default();
+    for piece in split_top(attrs_str, ',') {
+        let Some((key, val)) = piece.split_once('=') else {
+            continue;
+        };
+        match key.trim() {
+            "dimensions" => attrs.dimensions = parse_usize_set(val)?,
+            "slice" => attrs.slice = parse_slice_spec(val)?,
+            "padding" => attrs.padding = parse_padding_spec(val)?,
+            "direction" => attrs.direction = Some(val.trim().to_string()),
+            "to_apply" => {
+                attrs.to_apply = Some(val.trim().trim_start_matches('%').to_string())
+            }
+            "lhs_contracting_dims" => attrs.lhs_contracting = parse_usize_set(val)?,
+            "rhs_contracting_dims" => attrs.rhs_contracting = parse_usize_set(val)?,
+            "lhs_batch_dims" => attrs.lhs_batch = parse_usize_set(val)?,
+            "rhs_batch_dims" => attrs.rhs_batch = parse_usize_set(val)?,
+            "index" => {
+                attrs.index = Some(val.trim().parse::<usize>().map_err(|_| {
+                    err(format!("bad get-tuple-element index {val:?}"))
+                })?)
+            }
+            "iota_dimension" => {
+                attrs.iota_dimension = Some(val.trim().parse::<usize>().map_err(|_| {
+                    err(format!("bad iota_dimension {val:?}"))
+                })?)
+            }
+            // metadata / frontend_attributes / backend_config / sharding /
+            // operand_precision … are irrelevant to evaluation.
+            _ => {}
+        }
+    }
+
+    const SUPPORTED: &[&str] = &[
+        "parameter",
+        "constant",
+        "add",
+        "subtract",
+        "multiply",
+        "divide",
+        "maximum",
+        "minimum",
+        "power",
+        "remainder",
+        "and",
+        "or",
+        "xor",
+        "abs",
+        "negate",
+        "exponential",
+        "exponential-minus-one",
+        "log",
+        "log-plus-one",
+        "logistic",
+        "tanh",
+        "sqrt",
+        "rsqrt",
+        "sign",
+        "floor",
+        "ceil",
+        "cosine",
+        "sine",
+        "not",
+        "copy",
+        "compare",
+        "select",
+        "convert",
+        "broadcast",
+        "reshape",
+        "transpose",
+        "slice",
+        "pad",
+        "concatenate",
+        "dot",
+        "reduce",
+        "iota",
+        "tuple",
+        "get-tuple-element",
+    ];
+    if !SUPPORTED.contains(&op.as_str()) {
+        return Err(err(format!(
+            "unsupported HLO opcode {op:?} (instruction {name}) — the interp backend \
+             covers the elementwise/dot/reduce/shape subset only; link the real \
+             xla_extension binding for full HLO"
+        )));
+    }
+
+    let mut param = None;
+    let mut literal = None;
+    let mut operand_names = Vec::new();
+    match op.as_str() {
+        "parameter" => {
+            param = Some(payload.trim().parse::<usize>().map_err(|_| {
+                err(format!("bad parameter number {payload:?}"))
+            })?);
+        }
+        "constant" => {
+            let ShapeSpec::Dense(s) = &shape else {
+                return Err(err(format!("tuple-shaped constant in {line:?}")));
+            };
+            literal = Some(parse_constant_payload(payload, s)?);
+        }
+        _ => {
+            for tok in split_top(payload, ',') {
+                operand_names.push(operand_name(&tok));
+            }
+        }
+    }
+
+    Ok(RawInstr {
+        instr: Instr {
+            name,
+            shape,
+            op,
+            operands: Vec::new(),
+            attrs,
+            param,
+            literal,
+            is_root,
+        },
+        operand_names,
+    })
+}
+
+impl Module {
+    /// Parse an HLO text module.  Unsupported opcodes are rejected here —
+    /// at "compile" time — rather than mid-execution.
+    pub(crate) fn parse(text: &str) -> Result<Module> {
+        let mut computations: Vec<Computation> = Vec::new();
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        let mut entry: Option<usize> = None;
+        let mut cur: Option<(String, bool, Vec<RawInstr>)> = None;
+
+        for raw_line in text.lines() {
+            let line = raw_line.trim();
+            if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
+                continue;
+            }
+            if line == "}" {
+                let (name, is_entry, raws) =
+                    cur.take().ok_or_else(|| err("stray '}' in HLO text".into()))?;
+                let comp = build_computation(name, raws)?;
+                let idx = computations.len();
+                if by_name.insert(comp.name.clone(), idx).is_some() {
+                    return Err(err(format!("duplicate computation {:?}", comp.name)));
+                }
+                if is_entry {
+                    entry = Some(idx);
+                }
+                computations.push(comp);
+                continue;
+            }
+            if line.ends_with('{') && !line.contains(" = ") {
+                if cur.is_some() {
+                    return Err(err("nested computation block in HLO text".into()));
+                }
+                let is_entry = line.starts_with("ENTRY ");
+                let rest = line.strip_prefix("ENTRY ").unwrap_or(line);
+                let tok = rest
+                    .split_whitespace()
+                    .next()
+                    .ok_or_else(|| err("missing computation name".into()))?;
+                let name = tok
+                    .trim_start_matches('%')
+                    .split('(')
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                cur = Some((name, is_entry, Vec::new()));
+                continue;
+            }
+            let Some((_, _, raws)) = cur.as_mut() else {
+                return Err(err(format!("instruction outside computation: {line:?}")));
+            };
+            raws.push(parse_instr(line)?);
+        }
+        if cur.is_some() {
+            return Err(err("unterminated computation block".into()));
+        }
+        let entry = match entry {
+            Some(e) => e,
+            None if computations.len() == 1 => 0,
+            None => return Err(err("no ENTRY computation in HLO text".into())),
+        };
+        Ok(Module {
+            computations,
+            by_name,
+            entry,
+        })
+    }
+
+    fn computation(&self, name: &str) -> Result<&Computation> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.computations[i])
+            .ok_or_else(|| err(format!("unknown computation {name:?}")))
+    }
+
+    /// Execute the entry computation over argument literals.
+    pub(crate) fn evaluate(&self, args: &[&Literal]) -> Result<Literal> {
+        let comp = &self.computations[self.entry];
+        if args.len() != comp.params.len() {
+            return Err(err(format!(
+                "entry {:?} takes {} parameters, got {} arguments",
+                comp.name,
+                comp.params.len(),
+                args.len()
+            )));
+        }
+        let mut vals = Vec::with_capacity(args.len());
+        for (i, lit) in args.iter().enumerate() {
+            let v = value_from_literal(lit)?;
+            let pins = &comp.instrs[comp.params[i]];
+            if let ShapeSpec::Dense(want) = &pins.shape {
+                let (dims, buf) = v.dense()?;
+                if dims != want.dims.as_slice() || buf.dtype() != want.dtype {
+                    return Err(err(format!(
+                        "argument {i} ({}): expected {want}, got {}[{}]",
+                        pins.name,
+                        buf.dtype(),
+                        dims.iter()
+                            .map(|d| d.to_string())
+                            .collect::<Vec<_>>()
+                            .join(",")
+                    )));
+                }
+            }
+            vals.push(v);
+        }
+        let out = self.eval_computation(comp, &vals)?;
+        literal_from_value(out)
+    }
+
+    fn eval_computation(&self, comp: &Computation, args: &[Value]) -> Result<Value> {
+        let mut env: Vec<Option<Value>> = vec![None; comp.instrs.len()];
+        for idx in 0..comp.instrs.len() {
+            let v = self.eval_instr(comp, idx, &env, args)?;
+            env[idx] = Some(v);
+        }
+        Ok(env[comp.root].take().expect("root evaluated"))
+    }
+
+    fn eval_instr(
+        &self,
+        comp: &Computation,
+        idx: usize,
+        env: &[Option<Value>],
+        args: &[Value],
+    ) -> Result<Value> {
+        let ins = &comp.instrs[idx];
+        let opv = |i: usize| -> Result<&Value> {
+            let oi = *ins.operands.get(i).ok_or_else(|| {
+                err(format!("{}: missing operand {i}", ins.name))
+            })?;
+            env[oi]
+                .as_ref()
+                .ok_or_else(|| err(format!("{}: operand used before definition", ins.name)))
+        };
+        let out = match ins.op.as_str() {
+            "parameter" => {
+                let p = ins.param.expect("parameter number");
+                args.get(p)
+                    .ok_or_else(|| {
+                        err(format!(
+                            "{}: parameter({p}) exceeds the {} arguments supplied",
+                            ins.name,
+                            args.len()
+                        ))
+                    })?
+                    .clone()
+            }
+            "constant" => ins.literal.clone().expect("parsed constant"),
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+            | "remainder" | "and" | "or" | "xor" => {
+                binary_elementwise(&ins.op, opv(0)?, opv(1)?)?
+            }
+            "abs" | "negate" | "exponential" | "exponential-minus-one" | "log"
+            | "log-plus-one" | "logistic" | "tanh" | "sqrt" | "rsqrt" | "sign" | "floor"
+            | "ceil" | "cosine" | "sine" | "not" | "copy" => unary_elementwise(&ins.op, opv(0)?)?,
+            "compare" => compare(
+                ins.attrs
+                    .direction
+                    .as_deref()
+                    .ok_or_else(|| err(format!("{}: compare without direction", ins.name)))?,
+                opv(0)?,
+                opv(1)?,
+            )?,
+            "select" => select(opv(0)?, opv(1)?, opv(2)?)?,
+            "convert" => convert(opv(0)?, declared_dense(ins)?)?,
+            "broadcast" => broadcast(opv(0)?, &ins.attrs.dimensions, declared_dense(ins)?)?,
+            "reshape" => reshape(opv(0)?, declared_dense(ins)?)?,
+            "transpose" => transpose(opv(0)?, &ins.attrs.dimensions)?,
+            "slice" => slice(opv(0)?, &ins.attrs.slice)?,
+            "pad" => pad(opv(0)?, opv(1)?, &ins.attrs.padding)?,
+            "concatenate" => {
+                let mut parts = Vec::with_capacity(ins.operands.len());
+                for i in 0..ins.operands.len() {
+                    parts.push(opv(i)?);
+                }
+                concatenate(&parts, ins.attrs.dimensions.first().copied().unwrap_or(0))?
+            }
+            "dot" => dot(opv(0)?, opv(1)?, &ins.attrs)?,
+            "reduce" => self.reduce(opv(0)?, opv(1)?, &ins.attrs)?,
+            "iota" => iota(declared_dense(ins)?, ins.attrs.iota_dimension.unwrap_or(0))?,
+            "tuple" => {
+                let mut parts = Vec::with_capacity(ins.operands.len());
+                for i in 0..ins.operands.len() {
+                    parts.push(opv(i)?.clone());
+                }
+                Value::Tuple(parts)
+            }
+            "get-tuple-element" => {
+                let i = ins
+                    .attrs
+                    .index
+                    .ok_or_else(|| err(format!("{}: get-tuple-element without index", ins.name)))?;
+                match opv(0)? {
+                    Value::Tuple(parts) => parts
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| err(format!("{}: tuple index {i} out of range", ins.name)))?,
+                    Value::Dense { .. } => {
+                        return Err(err(format!("{}: get-tuple-element of non-tuple", ins.name)))
+                    }
+                }
+            }
+            // Unreachable for modules from Module::parse (its SUPPORTED
+            // allow-list screens opcodes); reachable only if that list
+            // and these arms drift apart — report it as the bug it is.
+            other => {
+                return Err(err(format!(
+                    "opcode {other:?} (instruction {}) passed the parse-time \
+                     allow-list but has no evaluator — interp.rs SUPPORTED and \
+                     eval_instr are out of sync",
+                    ins.name
+                )))
+            }
+        };
+        // Self-check against the declared result shape: a mismatch means
+        // an interpreter bug, better caught here than as silent numerics.
+        if let (ShapeSpec::Dense(want), Value::Dense { dims, buf }) = (&ins.shape, &out) {
+            if dims != &want.dims || buf.dtype() != want.dtype {
+                return Err(err(format!(
+                    "{}: interpreter produced {}[{}], HLO declares {want}",
+                    ins.name,
+                    buf.dtype(),
+                    dims.iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )));
+            }
+        }
+        Ok(out)
+    }
+
+    fn reduce(&self, data: &Value, init: &Value, attrs: &Attrs) -> Result<Value> {
+        let (dims, buf) = data.dense()?;
+        let red = &attrs.dimensions;
+        let keep: Vec<usize> = (0..dims.len()).filter(|d| !red.contains(d)).collect();
+        let out_dims: Vec<usize> = keep.iter().map(|&d| dims[d]).collect();
+        let out_elems = elements(&out_dims);
+        let comp_name = attrs
+            .to_apply
+            .as_deref()
+            .ok_or_else(|| err("reduce without to_apply".into()))?;
+        let comp = self.computation(comp_name)?;
+        if comp.params.len() != 2 {
+            return Err(err(format!(
+                "reduce region {comp_name:?} takes {} parameters, expected 2",
+                comp.params.len()
+            )));
+        }
+        let fast = fast_binop(comp);
+        let st = strides(dims);
+        let out_st = strides(&out_dims);
+
+        match buf {
+            Buf::F32(v) => {
+                let init = init.scalar_f32()?;
+                let mut acc = vec![init; out_elems];
+                for (flat, &x) in v.iter().enumerate() {
+                    let c = coords_of(flat, dims, &st);
+                    let mut of = 0usize;
+                    for (k, &d) in keep.iter().enumerate() {
+                        of += c[d] * out_st[k];
+                    }
+                    acc[of] = match fast {
+                        Some("add") => acc[of] + x,
+                        Some("multiply") => acc[of] * x,
+                        Some("maximum") => acc[of].max(x),
+                        Some("minimum") => acc[of].min(x),
+                        _ => {
+                            let a = Value::Dense {
+                                dims: vec![],
+                                buf: Buf::F32(vec![acc[of]]),
+                            };
+                            let b = Value::Dense {
+                                dims: vec![],
+                                buf: Buf::F32(vec![x]),
+                            };
+                            self.eval_computation(comp, &[a, b])?.scalar_f32()?
+                        }
+                    };
+                }
+                Ok(Value::Dense {
+                    dims: out_dims,
+                    buf: Buf::F32(acc),
+                })
+            }
+            other => Err(err(format!(
+                "reduce over {} is not supported by the interp backend",
+                other.dtype()
+            ))),
+        }
+    }
+}
+
+fn build_computation(name: String, raws: Vec<RawInstr>) -> Result<Computation> {
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (i, r) in raws.iter().enumerate() {
+        if index.insert(r.instr.name.clone(), i).is_some() {
+            return Err(err(format!(
+                "duplicate instruction name {:?} in computation {name:?}",
+                r.instr.name
+            )));
+        }
+    }
+    let mut instrs = Vec::with_capacity(raws.len());
+    let mut params: Vec<(usize, usize)> = Vec::new();
+    let mut root = None;
+    for (i, raw) in raws.into_iter().enumerate() {
+        let mut ins = raw.instr;
+        for on in &raw.operand_names {
+            let oi = *index.get(on).ok_or_else(|| {
+                err(format!(
+                    "unknown operand {on:?} of {:?} in computation {name:?}",
+                    ins.name
+                ))
+            })?;
+            ins.operands.push(oi);
+        }
+        if let Some(p) = ins.param {
+            params.push((p, i));
+        }
+        if ins.is_root {
+            root = Some(i);
+        }
+        instrs.push(ins);
+    }
+    let root = root.unwrap_or(instrs.len().saturating_sub(1));
+    if instrs.is_empty() {
+        return Err(err(format!("empty computation {name:?}")));
+    }
+    params.sort();
+    for (want, &(got, _)) in params.iter().enumerate() {
+        if want != got {
+            return Err(err(format!(
+                "computation {name:?} has non-contiguous parameter numbers"
+            )));
+        }
+    }
+    let params = params.into_iter().map(|(_, i)| i).collect();
+    Ok(Computation {
+        name,
+        instrs,
+        root,
+        params,
+    })
+}
+
+/// If `comp` is a single binary op over its two parameters, return the op
+/// name (fast-path for reduce regions, which jax emits as one-op adds).
+fn fast_binop(comp: &Computation) -> Option<&str> {
+    if comp.instrs.len() != 3 || comp.params.len() != 2 {
+        return None;
+    }
+    let root = &comp.instrs[comp.root];
+    if root.operands.len() == 2
+        && comp.instrs[root.operands[0]].op == "parameter"
+        && comp.instrs[root.operands[1]].op == "parameter"
+    {
+        Some(root.op.as_str())
+    } else {
+        None
+    }
+}
+
+fn declared_dense(ins: &Instr) -> Result<&Shape> {
+    match &ins.shape {
+        ShapeSpec::Dense(s) => Ok(s),
+        ShapeSpec::Tuple(_) => Err(err(format!("{}: unexpected tuple shape", ins.name))),
+    }
+}
+
+// -------------------------------------------------------------- op kernels
+
+fn same_dims<'v>(a: &'v Value, b: &'v Value) -> Result<(&'v [usize], &'v Buf, &'v Buf)> {
+    let (da, ba) = a.dense()?;
+    let (db, bb) = b.dense()?;
+    if da != db {
+        return Err(err(format!(
+            "shape mismatch in elementwise op: [{}] vs [{}]",
+            da.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+            db.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+        )));
+    }
+    Ok((da, ba, bb))
+}
+
+fn binary_elementwise(op: &str, a: &Value, b: &Value) -> Result<Value> {
+    let (dims, ba, bb) = same_dims(a, b)?;
+    let buf = match (ba, bb) {
+        (Buf::F32(x), Buf::F32(y)) => {
+            let f: fn(f32, f32) -> f32 = match op {
+                "add" => |a, b| a + b,
+                "subtract" => |a, b| a - b,
+                "multiply" => |a, b| a * b,
+                "divide" => |a, b| a / b,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                "power" => f32::powf,
+                "remainder" => |a, b| a % b,
+                _ => return Err(err(format!("op {op:?} not defined for f32"))),
+            };
+            Buf::F32(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        (Buf::I32(x), Buf::I32(y)) => {
+            let f: fn(i32, i32) -> i32 = match op {
+                "add" => i32::wrapping_add,
+                "subtract" => i32::wrapping_sub,
+                "multiply" => i32::wrapping_mul,
+                "maximum" => i32::max,
+                "minimum" => i32::min,
+                "and" => |a, b| a & b,
+                "or" => |a, b| a | b,
+                "xor" => |a, b| a ^ b,
+                _ => return Err(err(format!("op {op:?} not defined for s32"))),
+            };
+            Buf::I32(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        (Buf::Pred(x), Buf::Pred(y)) => {
+            let f: fn(bool, bool) -> bool = match op {
+                "and" => |a, b| a && b,
+                "or" => |a, b| a || b,
+                "xor" => |a, b| a ^ b,
+                _ => return Err(err(format!("op {op:?} not defined for pred"))),
+            };
+            Buf::Pred(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        _ => {
+            return Err(err(format!(
+                "mixed element types in {op:?}: {} vs {}",
+                ba.dtype(),
+                bb.dtype()
+            )))
+        }
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf,
+    })
+}
+
+fn unary_elementwise(op: &str, a: &Value) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    let out = match buf {
+        Buf::F32(v) => {
+            let f: fn(f32) -> f32 = match op {
+                "abs" => f32::abs,
+                "negate" => |x| -x,
+                "exponential" => f32::exp,
+                "exponential-minus-one" => f32::exp_m1,
+                "log" => f32::ln,
+                "log-plus-one" => f32::ln_1p,
+                "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
+                "tanh" => f32::tanh,
+                "sqrt" => f32::sqrt,
+                "rsqrt" => |x| 1.0 / x.sqrt(),
+                "sign" => |x| {
+                    if x == 0.0 {
+                        0.0
+                    } else {
+                        x.signum()
+                    }
+                },
+                "floor" => f32::floor,
+                "ceil" => f32::ceil,
+                "cosine" => f32::cos,
+                "sine" => f32::sin,
+                "copy" => |x| x,
+                _ => return Err(err(format!("op {op:?} not defined for f32"))),
+            };
+            Buf::F32(v.iter().map(|&x| f(x)).collect())
+        }
+        Buf::I32(v) => {
+            let f: fn(i32) -> i32 = match op {
+                "abs" => i32::wrapping_abs,
+                "negate" => i32::wrapping_neg,
+                "sign" => i32::signum,
+                "copy" => |x| x,
+                _ => return Err(err(format!("op {op:?} not defined for s32"))),
+            };
+            Buf::I32(v.iter().map(|&x| f(x)).collect())
+        }
+        Buf::Pred(v) => match op {
+            "not" => Buf::Pred(v.iter().map(|&x| !x).collect()),
+            "copy" => Buf::Pred(v.clone()),
+            _ => return Err(err(format!("op {op:?} not defined for pred"))),
+        },
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: out,
+    })
+}
+
+fn compare(direction: &str, a: &Value, b: &Value) -> Result<Value> {
+    let (dims, ba, bb) = same_dims(a, b)?;
+    let n = ba.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let ord = match (ba, bb) {
+            (Buf::F32(x), Buf::F32(y)) => x[i].partial_cmp(&y[i]),
+            (Buf::I32(x), Buf::I32(y)) => Some(x[i].cmp(&y[i])),
+            (Buf::Pred(x), Buf::Pred(y)) => Some(x[i].cmp(&y[i])),
+            _ => {
+                return Err(err(format!(
+                    "mixed element types in compare: {} vs {}",
+                    ba.dtype(),
+                    bb.dtype()
+                )))
+            }
+        };
+        // `ord` is None only for NaN: all comparisons false except NE.
+        let r = match direction {
+            "EQ" => ord == Some(std::cmp::Ordering::Equal),
+            "NE" => ord != Some(std::cmp::Ordering::Equal),
+            "LT" => ord == Some(std::cmp::Ordering::Less),
+            "GT" => ord == Some(std::cmp::Ordering::Greater),
+            "LE" => matches!(
+                ord,
+                Some(std::cmp::Ordering::Less | std::cmp::Ordering::Equal)
+            ),
+            "GE" => matches!(
+                ord,
+                Some(std::cmp::Ordering::Greater | std::cmp::Ordering::Equal)
+            ),
+            other => return Err(err(format!("unknown compare direction {other:?}"))),
+        };
+        out.push(r);
+    }
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: Buf::Pred(out),
+    })
+}
+
+fn select(pred: &Value, on_true: &Value, on_false: &Value) -> Result<Value> {
+    let p = pred.preds()?;
+    let (dims, bt, bf) = same_dims(on_true, on_false)?;
+    let n = bt.len();
+    if p.len() != n && p.len() != 1 {
+        return Err(err(format!(
+            "select predicate has {} elements, operands have {n}",
+            p.len()
+        )));
+    }
+    let pick = |i: usize| -> bool {
+        if p.len() == 1 {
+            p[0]
+        } else {
+            p[i]
+        }
+    };
+    let buf = match (bt, bf) {
+        (Buf::F32(t), Buf::F32(f)) => {
+            Buf::F32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Buf::I32(t), Buf::I32(f)) => {
+            Buf::I32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Buf::Pred(t), Buf::Pred(f)) => {
+            Buf::Pred((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        _ => return Err(err("mixed element types in select".into())),
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf,
+    })
+}
+
+fn convert(a: &Value, want: &Shape) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    let n = buf.len();
+    let out = match (buf, want.dtype) {
+        (Buf::F32(v), DType::F32) => Buf::F32(v.clone()),
+        (Buf::I32(v), DType::S32) => Buf::I32(v.clone()),
+        (Buf::Pred(v), DType::Pred) => Buf::Pred(v.clone()),
+        (Buf::Pred(v), DType::F32) => {
+            Buf::F32(v.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect())
+        }
+        (Buf::Pred(v), DType::S32) => Buf::I32(v.iter().map(|&b| b as i32).collect()),
+        (Buf::I32(v), DType::F32) => Buf::F32(v.iter().map(|&x| x as f32).collect()),
+        (Buf::F32(v), DType::S32) => {
+            // XLA convert f32->s32 rounds toward zero.
+            Buf::I32(v.iter().map(|&x| x as i32).collect())
+        }
+        (Buf::F32(v), DType::Pred) => Buf::Pred(v.iter().map(|&x| x != 0.0).collect()),
+        (Buf::I32(v), DType::Pred) => Buf::Pred(v.iter().map(|&x| x != 0).collect()),
+    };
+    debug_assert_eq!(out.len(), n);
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: out,
+    })
+}
+
+fn broadcast(a: &Value, mapping: &[usize], want: &Shape) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if mapping.len() != in_dims.len() {
+        return Err(err(format!(
+            "broadcast dimensions {:?} do not cover operand rank {}",
+            mapping,
+            in_dims.len()
+        )));
+    }
+    for (i, &od) in mapping.iter().enumerate() {
+        // A mapped dim must match the output dim or be degenerate (1).
+        if od >= want.dims.len() || (want.dims[od] != in_dims[i] && in_dims[i] != 1) {
+            return Err(err(format!(
+                "broadcast maps operand dim {i} (size {}) to output dim {od} of {want}",
+                in_dims[i]
+            )));
+        }
+    }
+    let out_dims = want.dims.clone();
+    let out_elems = elements(&out_dims);
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let mut vals = Vec::with_capacity(out_elems);
+    for flat in 0..out_elems {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (i, &od) in mapping.iter().enumerate() {
+            let ci = if in_dims[i] == 1 { 0 } else { c[od] };
+            inf += ci * in_st[i];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn reshape(a: &Value, want: &Shape) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if elements(in_dims) != want.elements() {
+        return Err(err(format!(
+            "reshape element count mismatch: {} -> {want}",
+            elements(in_dims)
+        )));
+    }
+    Ok(Value::Dense {
+        dims: want.dims.clone(),
+        buf: buf.clone(),
+    })
+}
+
+fn transpose(a: &Value, perm: &[usize]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if perm.len() != in_dims.len() || perm.iter().any(|&p| p >= in_dims.len()) {
+        return Err(err(format!(
+            "transpose permutation {:?} is not a permutation of rank {}",
+            perm,
+            in_dims.len()
+        )));
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            inf += c[i] * in_st[p];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn slice(a: &Value, spec: &[(i64, i64, i64)]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if spec.len() != in_dims.len() {
+        return Err(err(format!(
+            "slice spec rank {} does not match operand rank {}",
+            spec.len(),
+            in_dims.len()
+        )));
+    }
+    let mut out_dims = Vec::with_capacity(spec.len());
+    for (d, &(start, limit, stride)) in spec.iter().enumerate() {
+        if stride <= 0 || start < 0 || limit < start || limit as usize > in_dims[d] {
+            return Err(err(format!(
+                "invalid slice [{start}:{limit}:{stride}] for dimension of size {}",
+                in_dims[d]
+            )));
+        }
+        out_dims.push(((limit - start) as usize).div_ceil(stride as usize));
+    }
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (d, &(start, _, stride)) in spec.iter().enumerate() {
+            inf += (start as usize + c[d] * stride as usize) * in_st[d];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn pad(a: &Value, fill: &Value, spec: &[(i64, i64, i64)]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    let (fdims, fbuf) = fill.dense()?;
+    if !fdims.is_empty() || fbuf.len() != 1 {
+        return Err(err("pad fill value must be a scalar".into()));
+    }
+    if spec.len() != in_dims.len() {
+        return Err(err(format!(
+            "padding spec rank {} does not match operand rank {}",
+            spec.len(),
+            in_dims.len()
+        )));
+    }
+    let mut out_dims = Vec::with_capacity(spec.len());
+    for (d, &(lo, hi, interior)) in spec.iter().enumerate() {
+        if interior < 0 {
+            return Err(err("negative interior padding".into()));
+        }
+        let n = in_dims[d] as i64;
+        let stretched = if n == 0 { 0 } else { n + (n - 1) * interior };
+        let total = lo + stretched + hi;
+        if total < 0 {
+            return Err(err(format!("padding {lo}_{hi} collapses dimension {d}")));
+        }
+        out_dims.push(total as usize);
+    }
+    let out_elems = elements(&out_dims);
+    let fill_v = fbuf.get_f64(0);
+    let mut vals = vec![fill_v; out_elems];
+    let in_st = strides(in_dims);
+    let out_st = strides(&out_dims);
+    let in_elems = elements(in_dims);
+    'next: for flat in 0..in_elems {
+        let c = coords_of(flat, in_dims, &in_st);
+        let mut of = 0usize;
+        for (d, &(lo, _, interior)) in spec.iter().enumerate() {
+            let pos = lo + c[d] as i64 * (1 + interior);
+            if pos < 0 || pos as usize >= out_dims[d] {
+                continue 'next; // cropped away by negative padding
+            }
+            of += pos as usize * out_st[d];
+        }
+        vals[of] = buf.get_f64(flat);
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn concatenate(parts: &[&Value], dim: usize) -> Result<Value> {
+    if parts.is_empty() {
+        return Err(err("concatenate with no operands".into()));
+    }
+    let (d0, b0) = parts[0].dense()?;
+    if dim >= d0.len() {
+        return Err(err(format!(
+            "concatenate dimension {dim} out of range for rank {}",
+            d0.len()
+        )));
+    }
+    let dtype = b0.dtype();
+    let mut out_dims = d0.to_vec();
+    out_dims[dim] = 0;
+    for p in parts {
+        let (d, b) = p.dense()?;
+        if d.len() != d0.len() || b.dtype() != dtype {
+            return Err(err("concatenate operand shape/type mismatch".into()));
+        }
+        out_dims[dim] += d[dim];
+    }
+    let out_st = strides(&out_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let mut c = coords_of(flat, &out_dims, &out_st);
+        let mut k = c[dim];
+        let mut src = None;
+        for p in parts {
+            let (d, b) = p.dense()?;
+            if k < d[dim] {
+                c[dim] = k;
+                let st = strides(d);
+                let inf: usize = c.iter().zip(&st).map(|(&ci, &si)| ci * si).sum();
+                src = Some(b.get_f64(inf));
+                break;
+            }
+            k -= d[dim];
+        }
+        vals.push(src.expect("concatenate source found"));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(dtype, vals),
+    })
+}
+
+fn dot(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
+    if !attrs.lhs_batch.is_empty() || !attrs.rhs_batch.is_empty() {
+        return Err(err("dot with batch dimensions is not supported".into()));
+    }
+    if attrs.lhs_contracting.len() != 1 || attrs.rhs_contracting.len() != 1 {
+        return Err(err(
+            "dot requires exactly one contracting dimension per side".into(),
+        ));
+    }
+    let (lc, rc) = (attrs.lhs_contracting[0], attrs.rhs_contracting[0]);
+    let la = a.f32s()?;
+    let rb = b.f32s()?;
+    let (ld, _) = a.dense()?;
+    let (rd, _) = b.dense()?;
+    if lc >= ld.len() || rc >= rd.len() || ld[lc] != rd[rc] {
+        return Err(err(format!(
+            "dot contraction mismatch: lhs dim {lc} of {ld:?} vs rhs dim {rc} of {rd:?}"
+        )));
+    }
+    let k = ld[lc];
+    let lfree: Vec<usize> = (0..ld.len()).filter(|&d| d != lc).collect();
+    let rfree: Vec<usize> = (0..rd.len()).filter(|&d| d != rc).collect();
+    let out_dims: Vec<usize> = lfree
+        .iter()
+        .map(|&d| ld[d])
+        .chain(rfree.iter().map(|&d| rd[d]))
+        .collect();
+    let l_st = strides(ld);
+    let r_st = strides(rd);
+    let out_st = strides(&out_dims);
+    let n = elements(&out_dims);
+    let mut out = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut lbase = 0usize;
+        for (i, &d) in lfree.iter().enumerate() {
+            lbase += c[i] * l_st[d];
+        }
+        let mut rbase = 0usize;
+        for (i, &d) in rfree.iter().enumerate() {
+            rbase += c[lfree.len() + i] * r_st[d];
+        }
+        let mut acc = 0.0f32;
+        for kk in 0..k {
+            acc += la[lbase + kk * l_st[lc]] * rb[rbase + kk * r_st[rc]];
+        }
+        out.push(acc);
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::F32(out),
+    })
+}
+
+fn iota(want: &Shape, dim: usize) -> Result<Value> {
+    if dim >= want.dims.len().max(1) {
+        return Err(err(format!("iota dimension {dim} out of range for {want}")));
+    }
+    let st = strides(&want.dims);
+    let n = want.elements();
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &want.dims, &st);
+        vals.push(c.get(dim).copied().unwrap_or(0) as f64);
+    }
+    Ok(Value::Dense {
+        dims: want.dims.clone(),
+        buf: Buf::build(want.dtype, vals),
+    })
+}
+
+// ----------------------------------------------------- literal conversion
+
+fn value_from_literal(l: &Literal) -> Result<Value> {
+    let (data, dims) = l
+        .dense_parts()
+        .ok_or_else(|| err("tuple arguments are not supported".into()))?;
+    let mut ud = Vec::with_capacity(dims.len());
+    for &d in dims {
+        if d < 0 {
+            return Err(err(format!("negative dimension {d} in argument")));
+        }
+        ud.push(d as usize);
+    }
+    let buf = match data {
+        Data::F32(v) => Buf::F32(v.clone()),
+        Data::I32(v) => Buf::I32(v.clone()),
+    };
+    if buf.len() != elements(&ud) {
+        return Err(err(format!(
+            "argument has {} elements but dims {ud:?}",
+            buf.len()
+        )));
+    }
+    Ok(Value::Dense { dims: ud, buf })
+}
+
+fn literal_from_value(v: Value) -> Result<Literal> {
+    match v {
+        Value::Dense { dims, buf } => {
+            let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let data = match buf {
+                Buf::F32(v) => Data::F32(v),
+                Buf::I32(v) => Data::I32(v),
+                Buf::Pred(v) => Data::I32(v.into_iter().map(i32::from).collect()),
+            };
+            Ok(Literal::from_data(data, dims))
+        }
+        Value::Tuple(parts) => {
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(literal_from_value(p)?);
+            }
+            Ok(Literal::tuple(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(text: &str, args: &[&Literal]) -> Vec<Literal> {
+        let module = Module::parse(text).unwrap();
+        let mut root = module.evaluate(args).unwrap();
+        match root.decompose_tuple() {
+            Ok(parts) => parts,
+            Err(_) => vec![root],
+        }
+    }
+
+    #[test]
+    fn matvec_bias_roundtrip() {
+        // y = x @ w + b over f32[2,3] x f32[3], b broadcast from w tail.
+        let text = r#"
+HloModule t, entry_computation_layout={(f32[4]{0}, f32[2,3]{1,0})->(f32[2])}
+
+ENTRY main.10 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  Arg_1.2 = f32[2,3]{1,0} parameter(1)
+  slice.3 = f32[3]{0} slice(Arg_0.1), slice={[0:3]}
+  dot.4 = f32[2]{0} dot(Arg_1.2, slice.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  slice.5 = f32[1]{0} slice(Arg_0.1), slice={[3:4]}
+  reshape.6 = f32[] reshape(slice.5)
+  broadcast.7 = f32[2]{0} broadcast(reshape.6), dimensions={}
+  add.8 = f32[2]{0} add(dot.4, broadcast.7)
+  ROOT tuple.9 = (f32[2]{0}) tuple(add.8)
+}
+"#;
+        let params = Literal::vec1(&[1.0f32, 2.0, 3.0, 0.5]);
+        let x = Literal::vec1(&[1.0f32, 0.0, -1.0, 2.0, 2.0, 2.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let out = eval(text, &[&params, &x]);
+        assert_eq!(out.len(), 1);
+        // Row 0: 1*1 + 0*2 + -1*3 + 0.5 = -1.5; row 1: 2+4+6+0.5 = 12.5.
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![-1.5, 12.5]);
+    }
+
+    #[test]
+    fn reduce_rows_and_columns() {
+        let text = r#"
+HloModule t
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.10 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  constant.2 = f32[] constant(0)
+  reduce.3 = f32[2]{0} reduce(Arg_0.1, constant.2), dimensions={1}, to_apply=region_0.1
+  reduce.4 = f32[3]{0} reduce(Arg_0.1, constant.2), dimensions={0}, to_apply=region_0.1
+  reduce.5 = f32[] reduce(Arg_0.1, constant.2), dimensions={0,1}, to_apply=region_0.1
+  ROOT tuple.6 = (f32[2]{0}, f32[3]{0}, f32[]) tuple(reduce.3, reduce.4, reduce.5)
+}
+"#;
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let out = eval(text, &[&x]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![5.0, 7.0, 9.0]);
+        assert_eq!(out[2].get_first_element::<f32>().unwrap(), 21.0);
+    }
+
+    #[test]
+    fn compare_select_convert_pad() {
+        let text = r#"
+HloModule t
+
+ENTRY main.12 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  constant.2 = f32[] constant(0)
+  broadcast.3 = f32[4]{0} broadcast(constant.2), dimensions={}
+  compare.4 = pred[4]{0} compare(Arg_0.1, broadcast.3), direction=GT
+  convert.5 = f32[4]{0} convert(compare.4)
+  negate.6 = f32[4]{0} negate(Arg_0.1)
+  select.7 = f32[4]{0} select(compare.4, Arg_0.1, negate.6)
+  pad.8 = f32[6]{0} pad(select.7, constant.2), padding=1_1
+  ROOT tuple.9 = (f32[4]{0}, f32[6]{0}) tuple(convert.5, pad.8)
+}
+"#;
+        let x = Literal::vec1(&[1.5f32, -2.0, 0.0, 3.0]);
+        let out = eval(text, &[&x]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![1.0, 0.0, 0.0, 1.0]);
+        // select implements |x|; pad adds one zero each side.
+        assert_eq!(
+            out[1].to_vec::<f32>().unwrap(),
+            vec![0.0, 1.5, 2.0, 0.0, 3.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn transpose_concatenate_iota() {
+        let text = r#"
+HloModule t
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  transpose.2 = f32[3,2]{1,0} transpose(Arg_0.1), dimensions={1,0}
+  reshape.3 = f32[6]{0} reshape(transpose.2)
+  iota.4 = f32[2]{0} iota(), iota_dimension=0
+  concatenate.5 = f32[8]{0} concatenate(reshape.3, iota.4), dimensions={0}
+  ROOT tuple.6 = (f32[8]{0}) tuple(concatenate.5)
+}
+"#;
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        let out = eval(text, &[&x]);
+        assert_eq!(
+            out[0].to_vec::<f32>().unwrap(),
+            vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0, 0.0, 1.0]
+        );
+    }
+
+    #[test]
+    fn math_unaries_match_std() {
+        let text = r#"
+HloModule t
+
+ENTRY main.8 {
+  Arg_0.1 = f32[3]{0} parameter(0)
+  exponential.2 = f32[3]{0} exponential(Arg_0.1)
+  log-plus-one.3 = f32[3]{0} log-plus-one(Arg_0.1)
+  logistic.4 = f32[3]{0} logistic(Arg_0.1)
+  abs.5 = f32[3]{0} abs(Arg_0.1)
+  ROOT tuple.6 = (f32[3]{0}, f32[3]{0}, f32[3]{0}, f32[3]{0}) tuple(exponential.2, log-plus-one.3, logistic.4, abs.5)
+}
+"#;
+        let xs = [0.5f32, -1.25, 2.0];
+        let out = eval(text, &[&Literal::vec1(&xs)]);
+        let exp = out[0].to_vec::<f32>().unwrap();
+        let l1p = out[1].to_vec::<f32>().unwrap();
+        let sig = out[2].to_vec::<f32>().unwrap();
+        let abs = out[3].to_vec::<f32>().unwrap();
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(exp[i], x.exp());
+            assert_eq!(l1p[i], x.ln_1p());
+            assert!((sig[i] - 1.0 / (1.0 + (-x).exp())).abs() < 1e-7);
+            assert_eq!(abs[i], x.abs());
+        }
+    }
+
+    #[test]
+    fn constants_including_inf_and_arrays() {
+        let text = r#"
+HloModule t
+
+ENTRY main.5 {
+  constant.1 = f32[] constant(inf)
+  constant.2 = f32[3]{0} constant({1, -2.5, 3e2})
+  constant.3 = s32[2]{0} constant({7, -9})
+  ROOT tuple.4 = (f32[], f32[3]{0}, s32[2]{0}) tuple(constant.1, constant.2, constant.3)
+}
+"#;
+        let out = eval(text, &[]);
+        assert_eq!(out[0].get_first_element::<f32>().unwrap(), f32::INFINITY);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![1.0, -2.5, 300.0]);
+        assert_eq!(out[2].to_vec::<i32>().unwrap(), vec![7, -9]);
+    }
+
+    #[test]
+    fn argument_validation_names_parameter_and_shapes() {
+        let text = r#"
+HloModule t
+
+ENTRY main.3 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  ROOT tuple.2 = (f32[4]{0}) tuple(Arg_0.1)
+}
+"#;
+        let module = Module::parse(text).unwrap();
+        let bad = Literal::vec1(&[1.0f32, 2.0]);
+        let e = module.evaluate(&[&bad]).unwrap_err().to_string();
+        assert!(e.contains("Arg_0.1") && e.contains("f32[4]"), "{e}");
+        let e = module.evaluate(&[]).unwrap_err().to_string();
+        assert!(e.contains("1 parameters"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_ops_rejected_at_parse_time() {
+        let text = r#"
+HloModule t
+
+ENTRY main.3 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  ROOT custom-call.2 = f32[4]{0} custom-call(Arg_0.1), custom_call_target="foo"
+}
+"#;
+        // Rejected at parse ("compile") time, naming the opcode, so a bad
+        // artifact fails before any training loop starts.
+        let e = Module::parse(text).unwrap_err().to_string();
+        assert!(e.contains("custom-call"), "{e}");
+    }
+
+    #[test]
+    fn canonical_text_with_typed_operands_parses() {
+        // The canonical HLO printer prefixes operands with types and '%'.
+        let text = r#"
+HloModule t
+
+ENTRY %main.4 (Arg_0.1: f32[2]) -> (f32[2]) {
+  %Arg_0.1 = f32[2]{0} parameter(0)
+  %add.2 = f32[2]{0} add(f32[2]{0} %Arg_0.1, f32[2]{0} %Arg_0.1)
+  ROOT %tuple.3 = (f32[2]{0}) tuple(f32[2]{0} %add.2)
+}
+"#;
+        let out = eval(text, &[&Literal::vec1(&[1.0f32, -3.0])]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![2.0, -6.0]);
+    }
+}

@@ -1,49 +1,61 @@
-//! Compile/link **stub** of the `xla` (xla_extension) PJRT bindings.
+//! Vendored `xla` (xla_extension) PJRT bindings with two in-crate backends.
 //!
 //! The real dependency is the Rust binding over `xla_extension` 0.5.1
 //! (PJRT CPU client + HLO-text compilation; see `/opt/xla-example` on the
 //! AOT build machine and `python/compile/aot.py`).  That native library is
 //! not vendorable into this repository, so this crate provides the exact
-//! API surface `divebatch::runtime` consumes with the same signatures and
-//! ownership rules — every type is plain data and therefore `Send + Sync`,
-//! which is what lets the runtime layer be shared across trial-engine
-//! worker threads in unit tests without the native backend.
+//! API surface `divebatch::runtime` consumes — same signatures, same
+//! ownership rules, every type plain data and therefore `Send + Sync` —
+//! with the backend selected by `DIVEBATCH_BACKEND` at client creation:
 //!
-//! Semantics:
+//! * **`interp`** (the default): a pure-Rust HLO-text interpreter
+//!   (the `interp` module).  [`PjRtClient::compile`] parses the module (rejecting
+//!   anything outside the supported op subset with an error naming the
+//!   opcode) and [`PjRtLoadedExecutable::execute`] evaluates it on the
+//!   host.  This is the reference backend the numeric test suite runs on
+//!   everywhere — no AOT artifacts beyond the committed fixtures, no
+//!   native XLA.  Platform name: [`INTERP_PLATFORM`].
+//! * **`stub`** (`DIVEBATCH_BACKEND=stub`): compile/link stub.  Parsing
+//!   and compilation succeed (the HLO text is retained, so the compile
+//!   cache is fully exercisable) but execution fails with a clear
+//!   [`Error::StubBackend`].  Platform name: [`STUB_PLATFORM`]; the
+//!   runtime's `has_execution_backend()` reports `false` on it.
 //!
-//! * Parsing ([`HloModuleProto::from_text_file`]) and compilation
-//!   ([`PjRtClient::compile`]) **succeed** — they read and retain the HLO
-//!   text, so the compile-cache (hit/miss, compile-once-per-entry under
-//!   concurrency, stats accounting) is fully exercisable without XLA.
-//! * Execution ([`PjRtLoadedExecutable::execute`]) **fails** with a clear
-//!   [`Error::StubBackend`] — the stub cannot evaluate HLO.  Integration
-//!   tests that need real numerics detect this via
-//!   `Runtime::has_execution_backend()` (the client reports platform
-//!   [`STUB_PLATFORM`]) and skip.
+//! The env var is read once per [`PjRtClient::cpu`] call; tests that need
+//! a specific backend regardless of the environment use the explicit
+//! [`PjRtClient::interp`] / [`PjRtClient::stub`] constructors instead of
+//! racing on process-global env state.
 //!
-//! Swapping in the real backend is a one-line change in
+//! Swapping in the **real** backend is a one-line change in
 //! `rust/Cargo.toml`: point the `xla` dependency at the real binding
 //! instead of `vendor/xla`.  No source file outside that manifest refers
-//! to this crate being a stub except through `platform_name()`.
+//! to this crate being vendored except through `platform_name()`.
 
 use std::borrow::Borrow;
 use std::fmt;
 use std::sync::Arc;
 
-/// Platform name reported by the stub client; the runtime uses this to
-/// detect that execution is unavailable.
+mod interp;
+
+/// Platform name reported by the compile-only stub backend; the runtime
+/// uses this to detect that execution is unavailable.
 pub const STUB_PLATFORM: &str = "stub";
+
+/// Platform name reported by the pure-Rust HLO interpreter backend.
+pub const INTERP_PLATFORM: &str = "interp";
 
 /// Error type mirroring the real binding's (anyhow-compatible: it is a
 /// `std::error::Error` and `Send + Sync`).
 #[derive(Clone, Debug)]
 pub enum Error {
-    /// An operation the stub cannot perform (execution).
+    /// An operation the compile-only stub cannot perform (execution).
     StubBackend(String),
     /// File / parse errors from the HLO-text loading path.
     Io(String),
     /// Shape/dtype misuse of a [`Literal`].
     Literal(String),
+    /// HLO parse/evaluation errors from the interpreter backend.
+    Interp(String),
 }
 
 impl fmt::Display for Error {
@@ -51,11 +63,13 @@ impl fmt::Display for Error {
         match self {
             Error::StubBackend(msg) => write!(
                 f,
-                "xla stub backend: {msg} (link the real xla_extension binding \
-                 in rust/Cargo.toml to execute compiled entries)"
+                "xla stub backend: {msg} (use the default interp backend, or link \
+                 the real xla_extension binding in rust/Cargo.toml, to execute \
+                 compiled entries)"
             ),
-            Error::Io(msg) => write!(f, "xla stub io: {msg}"),
-            Error::Literal(msg) => write!(f, "xla stub literal: {msg}"),
+            Error::Io(msg) => write!(f, "xla io: {msg}"),
+            Error::Literal(msg) => write!(f, "xla literal: {msg}"),
+            Error::Interp(msg) => write!(f, "xla interp: {msg}"),
         }
     }
 }
@@ -117,39 +131,83 @@ impl Element for i32 {
     }
 }
 
-/// Host-side tensor value (upload argument / fetched result).
+/// Host-side tensor value (upload argument / fetched result).  Execution
+/// results from the interpreter backend can be **tuples** — split them
+/// with [`Literal::decompose_tuple`], exactly like the real binding.
 #[derive(Clone, Debug)]
 pub struct Literal {
-    data: Data,
-    dims: Vec<i64>,
+    repr: Repr,
+}
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Dense { data: Data, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
 }
 
 impl Literal {
     /// Rank-1 literal from a host slice.
     pub fn vec1<T: Element>(v: &[T]) -> Literal {
         Literal {
-            dims: vec![v.len() as i64],
-            data: T::wrap(v.to_vec()),
+            repr: Repr::Dense {
+                dims: vec![v.len() as i64],
+                data: T::wrap(v.to_vec()),
+            },
         }
     }
 
-    /// Reinterpret under new dimensions (element count must match).
+    pub(crate) fn from_data(data: Data, dims: Vec<i64>) -> Literal {
+        Literal {
+            repr: Repr::Dense { data, dims },
+        }
+    }
+
+    pub(crate) fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            repr: Repr::Tuple(parts),
+        }
+    }
+
+    pub(crate) fn dense_parts(&self) -> Option<(&Data, &[i64])> {
+        match &self.repr {
+            Repr::Dense { data, dims } => Some((data, dims)),
+            Repr::Tuple(_) => None,
+        }
+    }
+
+    /// Reinterpret under new dimensions.  Every dimension must be
+    /// non-negative and the element count must match exactly.
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let Repr::Dense { data, dims: _ } = &self.repr else {
+            return Err(Error::Literal("cannot reshape a tuple literal".into()));
+        };
+        if dims.iter().any(|&d| d < 0) {
+            return Err(Error::Literal(format!(
+                "reshape to {dims:?}: negative dimension"
+            )));
+        }
         let want: i64 = dims.iter().product();
-        if want < 0 || want as usize != self.data.len() {
+        if want as usize != data.len() {
             return Err(Error::Literal(format!(
                 "reshape to {dims:?} ({want} elements) from {} elements",
-                self.data.len()
+                data.len()
             )));
         }
         Ok(Literal {
-            data: self.data.clone(),
-            dims: dims.to_vec(),
+            repr: Repr::Dense {
+                data: data.clone(),
+                dims: dims.to_vec(),
+            },
         })
     }
 
     pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
-        T::unwrap(&self.data)
+        let Repr::Dense { data, .. } = &self.repr else {
+            return Err(Error::Literal(
+                "literal is a tuple (decompose it first)".into(),
+            ));
+        };
+        T::unwrap(data)
             .map(<[T]>::to_vec)
             .ok_or_else(|| Error::Literal(format!("literal is not {}", T::type_name())))
     }
@@ -161,15 +219,19 @@ impl Literal {
             .ok_or_else(|| Error::Literal("empty literal".into()))
     }
 
-    /// Split a tuple literal into its components.  Stub literals are
-    /// never tuples (they only exist on the upload path), so this is
-    /// reachable only through an (impossible) stub execution result.
+    /// Split a tuple literal into its components (consumes the elements,
+    /// like the real binding).
     pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
-        Err(Error::StubBackend("decompose_tuple on a stub literal".into()))
+        match &mut self.repr {
+            Repr::Tuple(parts) => Ok(std::mem::take(parts)),
+            Repr::Dense { .. } => Err(Error::Literal(
+                "decompose_tuple on a non-tuple literal".into(),
+            )),
+        }
     }
 }
 
-/// Parsed HLO module (the stub retains the text it was parsed from).
+/// Parsed HLO module (retains the text it was parsed from).
 #[derive(Clone, Debug)]
 pub struct HloModuleProto {
     text: Arc<String>,
@@ -177,7 +239,8 @@ pub struct HloModuleProto {
 
 impl HloModuleProto {
     /// Read an HLO **text** file (the interchange format emitted by
-    /// python/compile/aot.py).  The stub validates readability only.
+    /// python/compile/aot.py).  Validates readability only; op-level
+    /// validation happens at [`PjRtClient::compile`].
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Io(format!("reading HLO text {path:?}: {e}")))?;
@@ -201,53 +264,103 @@ impl XlaComputation {
     }
 }
 
-/// PJRT client handle.  The stub's only state is the platform name it
-/// reports; creation never fails.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Backend {
+    Interp,
+    Stub,
+}
+
+/// PJRT client handle: the backend mode plus nothing else; creation never
+/// fails for the in-crate backends.
 #[derive(Clone, Debug)]
-pub struct PjRtClient;
+pub struct PjRtClient {
+    backend: Backend,
+}
 
 impl PjRtClient {
+    /// Backend from `DIVEBATCH_BACKEND` (default: the interpreter).
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient)
+        match std::env::var("DIVEBATCH_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("interp") => Ok(Self::interp()),
+            Ok("stub") => Ok(Self::stub()),
+            Ok(other) => Err(Error::Io(format!(
+                "unknown DIVEBATCH_BACKEND {other:?} (expected \"interp\" or \"stub\")"
+            ))),
+        }
+    }
+
+    /// The pure-Rust HLO interpreter backend, regardless of environment.
+    pub fn interp() -> PjRtClient {
+        PjRtClient {
+            backend: Backend::Interp,
+        }
+    }
+
+    /// The compile-only stub backend, regardless of environment.
+    pub fn stub() -> PjRtClient {
+        PjRtClient {
+            backend: Backend::Stub,
+        }
     }
 
     pub fn platform_name(&self) -> String {
-        STUB_PLATFORM.to_string()
+        match self.backend {
+            Backend::Interp => INTERP_PLATFORM.to_string(),
+            Backend::Stub => STUB_PLATFORM.to_string(),
+        }
     }
 
-    /// "Compile" a computation.  Succeeds so the executable cache is
-    /// exercisable; the product refuses to execute.
+    /// Compile a computation.  Under `interp` this parses the HLO text
+    /// into an executable program (clear error on anything outside the
+    /// supported op subset); under `stub` it succeeds unconditionally so
+    /// the executable cache is exercisable, and the product refuses to
+    /// execute.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let program = match self.backend {
+            Backend::Stub => None,
+            Backend::Interp => Some(Arc::new(interp::Module::parse(&comp.module.text)?)),
+        };
         Ok(PjRtLoadedExecutable {
             hlo_bytes: comp.module.text.len(),
+            program,
         })
     }
 }
 
-/// Device buffer handle returned by `execute` (never constructed by the
-/// stub; present so caller code type-checks against the real binding).
+/// Device buffer handle returned by `execute`.  Under the interpreter it
+/// holds the materialized result; the stub never constructs one.
 #[derive(Clone, Debug)]
-pub struct PjRtBuffer;
+pub struct PjRtBuffer {
+    value: Literal,
+}
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(Error::StubBackend("fetching from a stub buffer".into()))
+        Ok(self.value.clone())
     }
 }
 
 /// A compiled executable handle.
 #[derive(Clone, Debug)]
 pub struct PjRtLoadedExecutable {
-    /// Size of the HLO text this was "compiled" from (debug visibility).
+    /// Size of the HLO text this was compiled from (debug visibility).
     pub hlo_bytes: usize,
+    /// The interpreter program; `None` under the compile-only stub.
+    program: Option<Arc<interp::Module>>,
 }
 
 impl PjRtLoadedExecutable {
-    /// Execution is the one operation the stub cannot provide.
-    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::StubBackend(
-            "cannot execute compiled HLO".into(),
-        ))
+    /// Run the program.  Mirrors the real binding's return shape:
+    /// `result[replica][output]`, with the entry's tuple result in
+    /// `result[0][0]` (fetch with `to_literal_sync`, then
+    /// `decompose_tuple`).
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let Some(program) = &self.program else {
+            return Err(Error::StubBackend("cannot execute compiled HLO".into()));
+        };
+        let lits: Vec<&Literal> = args.iter().map(Borrow::borrow).collect();
+        let value = program.evaluate(&lits)?;
+        Ok(vec![vec![PjRtBuffer { value }]])
     }
 }
 
@@ -275,20 +388,39 @@ mod tests {
         assert!(l.to_vec::<i32>().is_err());
         assert!(l.reshape(&[2, 2]).is_ok());
         assert!(l.reshape(&[3, 2]).is_err());
+        // Element-count mismatches and negative dims are rejected even
+        // when the product happens to match.
+        assert!(l.reshape(&[5]).is_err());
+        assert!(l.reshape(&[-1, -4]).is_err());
+        assert!(l.reshape(&[-2, -2]).is_err());
         let i = Literal::vec1(&[7i32]);
         assert_eq!(i.get_first_element::<i32>().unwrap(), 7);
     }
 
-    #[test]
-    fn compile_succeeds_execute_fails() {
-        let dir = std::env::temp_dir().join(format!("xla-stub-test-{}", std::process::id()));
+    fn write_hlo(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("xla-vendor-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("mod.hlo.txt");
-        std::fs::write(&path, "HloModule stub_test").unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        path
+    }
 
+    const DOUBLER: &str = r#"
+HloModule doubler
+
+ENTRY main.4 {
+  Arg_0.1 = f32[3]{0} parameter(0)
+  add.2 = f32[3]{0} add(Arg_0.1, Arg_0.1)
+  ROOT tuple.3 = (f32[3]{0}) tuple(add.2)
+}
+"#;
+
+    #[test]
+    fn stub_compiles_but_refuses_to_execute() {
+        let path = write_hlo("stub.hlo.txt", DOUBLER);
         let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
         let comp = XlaComputation::from_proto(&proto);
-        let client = PjRtClient::cpu().unwrap();
+        let client = PjRtClient::stub();
         assert_eq!(client.platform_name(), STUB_PLATFORM);
         let exe = client.compile(&comp).unwrap();
         assert!(exe.hlo_bytes > 0);
@@ -296,6 +428,44 @@ mod tests {
         assert!(err.to_string().contains("stub backend"), "{err}");
 
         assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interp_compiles_and_executes() {
+        let path = write_hlo("interp.hlo.txt", DOUBLER);
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::interp();
+        assert_eq!(client.platform_name(), INTERP_PLATFORM);
+        let exe = client.compile(&comp).unwrap();
+        let args = [Literal::vec1(&[1.0f32, -2.0, 0.5])];
+        let result = exe.execute(&args).unwrap();
+        let mut tuple = result[0][0].to_literal_sync().unwrap();
+        let parts = tuple.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![2.0, -4.0, 1.0]);
+        // Wrong arity / shape errors are descriptive.
+        let e = exe.execute::<Literal>(&[]).unwrap_err().to_string();
+        assert!(e.contains("parameters"), "{e}");
+    }
+
+    #[test]
+    fn interp_rejects_malformed_hlo_at_compile() {
+        let path = write_hlo("bad.hlo.txt", "HloModule nothing_here");
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(PjRtClient::interp().compile(&comp).is_err());
+        // The stub accepts anything (compile-only).
+        assert!(PjRtClient::stub().compile(&comp).is_ok());
+    }
+
+    #[test]
+    fn cpu_defaults_to_interp() {
+        // Do not mutate DIVEBATCH_BACKEND here (env is process-global and
+        // tests run concurrently); the default path must be interp unless
+        // the test environment explicitly forces the stub.
+        if std::env::var("DIVEBATCH_BACKEND").is_err() {
+            assert_eq!(PjRtClient::cpu().unwrap().platform_name(), INTERP_PLATFORM);
+        }
     }
 }
