@@ -1,0 +1,29 @@
+"""Bit-exact Python mirror of the Rust trainer + compiled interpreter.
+
+The PR-4 authoring environment has no Rust toolchain, yet the golden-record
+regression gate (rust/tests/golden_record.rs) pins a full training run's
+canonical JSON byte for byte.  This package reproduces that run exactly:
+
+* ``fmath``   — line-for-line numpy mirror of the deterministic f32 math
+  kernels in rust/vendor/xla/src/interp/fmath.rs;
+* ``interp``  — HLO-text parser + evaluator matching the compiled register
+  program's numeric semantics (same op order, same f32 rounding);
+* ``trainer`` — the full golden-run pipeline: xoshiro256++ RNG, synthetic
+  dataset, batching, micro-plans, SGD, diversity accumulation, DiveBatch
+  policy, simulated-cluster timing, memory model;
+* ``rust_fmt``— Rust ``Display``-compatible f64 formatting + the canonical
+  JSON writer (sorted keys, wall-clock masked);
+* ``golden_run`` — entry point: regenerates
+  rust/tests/fixtures/golden_run_record.json;
+* ``selfcheck``  — validates the interp mirror against the committed
+  jax-evaluated golden_entry_outputs.json;
+* ``check_bench`` — CI perf-smoke comparison of BENCH_4.json files.
+
+Every floating-point operation in the Rust golden path is either IEEE
+basic arithmetic (exactly reproduced by numpy f32/f64 ops), an fmath
+kernel (mirrored here op for op), or a libm call whose result is only
+*threshold*-consumed (dataset label signs) — so the mirrored record is
+bit-identical to what `cargo test` produces.  KEEP IN SYNC: any numeric
+change on the Rust side must be applied here and the golden re-blessed
+(`python -m mirror.golden_run`, or DIVEBATCH_BLESS=1 with a toolchain).
+"""

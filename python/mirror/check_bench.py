@@ -1,0 +1,57 @@
+"""CI perf-smoke gate: compare a fresh perf_interp result to the baseline.
+
+Usage: check_bench.py NEW_BENCH_JSON COMMITTED_BENCH_JSON
+
+Fails (exit 1) if any entry regressed more than 2x against the committed
+BENCH_4.json.  The comparison uses each entry's **speedup** (compiled vs
+the reference evaluator, measured in the same process) rather than raw
+ns/step: speedup is machine-invariant, so a baseline blessed on faster or
+slower hardware than the CI runner cannot spuriously trip the gate.  Raw
+ns/step stays in the file for humans.  While the committed file is still
+the bootstrap marker (``"bootstrap": true`` — the PR-4 authoring
+environment had no Rust toolchain to measure a baseline), the comparison
+is skipped with a ``::warning::`` asking for the measured artifact to be
+committed.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    new = json.load(open(argv[1]))
+    old = json.load(open(argv[2]))
+    if old.get("bootstrap"):
+        print(
+            "::warning file=BENCH_4.json::perf baseline is the bootstrap marker"
+            " - commit the perf-smoke artifact to arm the 2x regression gate"
+        )
+        return 0
+    bad = []
+    for key, ent in old.get("entries", {}).items():
+        got = new.get("entries", {}).get(key, {}).get("speedup")
+        want = ent.get("speedup")
+        if got is None:
+            # A baseline entry the fresh run did not produce is itself a
+            # failure — otherwise a renamed/truncated bench output would
+            # silently drain the gate of coverage.
+            bad.append(f"{key}: missing from the fresh bench output")
+        elif want and got < want / REGRESSION_FACTOR:
+            bad.append(f"{key}: speedup {got:.1f}x vs baseline {want:.1f}x")
+    if bad:
+        print("perf regression >2x vs committed BENCH_4.json (speedup ratio):")
+        print("\n".join(bad))
+        return 1
+    print("perf-smoke: within 2x of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

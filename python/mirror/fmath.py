@@ -1,0 +1,305 @@
+"""numpy mirror of rust/vendor/xla/src/interp/fmath.rs — bit-exact.
+
+Every function takes/returns ``np.float32`` arrays and performs the same
+sequence of IEEE-754 double operations as the Rust kernels: basic
+arithmetic (correctly rounded in both), ``floor``, exact power-of-two
+scaling, and bit-level mantissa/exponent splits.  No libm transcendental
+is ever called, so results match the Rust side bit for bit on any host.
+
+KEEP IN SYNC with fmath.rs (constants, polynomial degrees, operation
+order).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LOG2E = 1.4426950408889634
+LN2_HI = 0.6931471803691238
+LN2_LO = 1.9082149292705877e-10
+SQRT_2 = 1.4142135623730951
+FRAC_2_PI = 0.6366197723675814
+PIO2_HI = 1.5707963267341256
+PIO2_LO = 6.077100506506192e-11
+
+_MANT = np.uint64(0x000F_FFFF_FFFF_FFFF)
+_ONE_BITS = np.uint64(0x3FF0_0000_0000_0000)
+
+
+def _f64(x):
+    return np.asarray(x, dtype=np.float32).astype(np.float64)
+
+
+def _exp_core(x):
+    """e^x for |x| <= 700 (callers clip); mirrors fmath::exp_core."""
+    k = np.floor(x * LOG2E + 0.5)
+    hi = x - k * LN2_HI
+    r = hi - k * LN2_LO
+    p = 1.0 + r * (
+        1.0
+        + r * (
+            0.5
+            + r * (
+                1.0 / 6.0
+                + r * (
+                    1.0 / 24.0
+                    + r * (
+                        1.0 / 120.0
+                        + r * (
+                            1.0 / 720.0
+                            + r * (
+                                1.0 / 5040.0
+                                + r * (
+                                    1.0 / 40320.0
+                                    + r * (1.0 / 362880.0 + r * (1.0 / 3628800.0))
+                                )
+                            )
+                        )
+                    )
+                )
+            )
+        )
+    )
+    return p * np.ldexp(1.0, k.astype(np.int64))
+
+
+def _expm1_core(x):
+    """e^x - 1 for |x| <= 700; mirrors fmath::expm1_core."""
+    r = x
+    small = r * (
+        1.0
+        + r * (
+            0.5
+            + r * (
+                1.0 / 6.0
+                + r * (
+                    1.0 / 24.0
+                    + r * (
+                        1.0 / 120.0
+                        + r * (
+                            1.0 / 720.0
+                            + r * (
+                                1.0 / 5040.0
+                                + r * (
+                                    1.0 / 40320.0
+                                    + r * (1.0 / 362880.0 + r * (1.0 / 3628800.0))
+                                )
+                            )
+                        )
+                    )
+                )
+            )
+        )
+    )
+    return np.where(np.abs(x) <= 0.34657359027997264, small, _exp_core(x) - 1.0)
+
+
+def _atanh2_core(t):
+    """2*atanh(t); mirrors fmath::atanh2_core."""
+    t2 = t * t
+    return (
+        2.0
+        * t
+        * (
+            1.0
+            + t2
+            * (
+                1.0 / 3.0
+                + t2
+                * (
+                    1.0 / 5.0
+                    + t2
+                    * (1.0 / 7.0 + t2 * (1.0 / 9.0 + t2 * (1.0 / 11.0 + t2 * (1.0 / 13.0))))
+                )
+            )
+        )
+    )
+
+
+def _ln_core(x):
+    """ln x for positive finite f64-normal x; mirrors fmath::ln_core."""
+    bits = np.asarray(x, dtype=np.float64).view(np.uint64)
+    e = ((bits >> np.uint64(52)) & np.uint64(0x7FF)).astype(np.int64) - 1023
+    m = ((bits & _MANT) | _ONE_BITS).view(np.float64)
+    big = m > SQRT_2
+    m = np.where(big, m * 0.5, m)
+    e = e + big
+    t = (m - 1.0) / (m + 1.0)
+    p = _atanh2_core(t)
+    ef = e.astype(np.float64)
+    return p + ef * LN2_LO + ef * LN2_HI
+
+
+def exp(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    with np.errstate(all="ignore"):
+        core = _exp_core(np.clip(xd, -700.0, 700.0)).astype(np.float32)
+    out = np.where(xd > 700.0, np.float32(np.inf), core)
+    out = np.where(xd < -700.0, np.float32(0.0), out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def exp_m1(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    with np.errstate(all="ignore"):
+        core = _expm1_core(np.clip(xd, -700.0, 700.0)).astype(np.float32)
+    out = np.where(xd > 700.0, np.float32(np.inf), core)
+    out = np.where(xd < -700.0, np.float32(-1.0), out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def ln(x):
+    x = np.asarray(x, dtype=np.float32)
+    with np.errstate(all="ignore"):
+        safe = np.where(x > 0, x.astype(np.float64), 1.0)
+        core = _ln_core(safe).astype(np.float32)
+    out = core
+    out = np.where(x == 0.0, np.float32(-np.inf), out)
+    out = np.where(x < 0.0, np.float32(np.nan), out)
+    out = np.where(np.isposinf(x.astype(np.float64)), np.float32(np.inf), out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def ln_1p(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    with np.errstate(all="ignore"):
+        t = xd / (2.0 + xd)
+        small = _atanh2_core(t).astype(np.float32)
+        safe = np.where(1.0 + xd > 0, 1.0 + xd, 1.0)
+        large = _ln_core(safe).astype(np.float32)
+    out = np.where((xd > -0.25) & (xd < 0.25), small, large)
+    out = np.where(x == -1.0, np.float32(-np.inf), out)
+    out = np.where(x < -1.0, np.float32(np.nan), out)
+    out = np.where(np.isposinf(xd), np.float32(np.inf), out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def logistic(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    with np.errstate(all="ignore"):
+        core = (1.0 / (1.0 + _exp_core(-np.clip(xd, -700.0, 700.0)))).astype(np.float32)
+    out = np.where(xd >= 700.0, np.float32(1.0), core)
+    out = np.where(xd <= -700.0, np.float32(0.0), out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def tanh(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    a = np.abs(xd)
+    with np.errstate(all="ignore"):
+        em = _expm1_core(-2.0 * np.clip(a, 0.0, 700.0))
+        t = -em / (2.0 + em)
+    sat = np.where(xd > 0.0, np.float32(1.0), np.float32(-1.0))
+    core = np.where(xd < 0.0, -t, t).astype(np.float32)
+    out = np.where(a >= 20.0, sat, core)
+    out = np.where(x == 0.0, x, out)
+    return np.where(np.isnan(x), x, out).astype(np.float32)
+
+
+def _sin_poly(r):
+    r2 = r * r
+    return r * (
+        1.0
+        + r2 * (-1.0 / 6.0 + r2 * (1.0 / 120.0 + r2 * (-1.0 / 5040.0 + r2 * (1.0 / 362880.0))))
+    )
+
+
+def _cos_poly(r):
+    r2 = r * r
+    return 1.0 + r2 * (
+        -0.5
+        + r2 * (1.0 / 24.0 + r2 * (-1.0 / 720.0 + r2 * (1.0 / 40320.0 + r2 * (-1.0 / 3628800.0))))
+    )
+
+
+def _sincos_reduce(xd):
+    n = np.floor(xd * FRAC_2_PI + 0.5)
+    r = xd - n * PIO2_HI - n * PIO2_LO
+    nm = n - np.floor(n * 0.25) * 4.0
+    q = np.clip(nm, 0.0, 3.0).astype(np.int64) & 3
+    return q, r
+
+
+def sin(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    finite = np.isfinite(xd)
+    with np.errstate(all="ignore"):
+        q, r = _sincos_reduce(np.where(finite, xd, 0.0))
+        s, c = _sin_poly(r), _cos_poly(r)
+        core = np.choose(q, [s, c, -s, -c]).astype(np.float32)
+    return np.where(finite, core, np.float32(np.nan)).astype(np.float32)
+
+
+def cos(x):
+    x = np.asarray(x, dtype=np.float32)
+    xd = x.astype(np.float64)
+    finite = np.isfinite(xd)
+    with np.errstate(all="ignore"):
+        q, r = _sincos_reduce(np.where(finite, xd, 0.0))
+        s, c = _sin_poly(r), _cos_poly(r)
+        core = np.choose(q, [c, -s, -c, s]).astype(np.float32)
+    return np.where(finite, core, np.float32(np.nan)).astype(np.float32)
+
+
+def pow(a, b):  # noqa: A001 - mirrors fmath::pow
+    a = np.asarray(a, dtype=np.float32)
+    b = np.asarray(b, dtype=np.float32)
+    a, b = np.broadcast_arrays(a, b)
+    ad = a.astype(np.float64)
+    bd = b.astype(np.float64)
+    with np.errstate(all="ignore"):
+        b_is_int = np.floor(bd) == bd
+        b_is_odd = b_is_int & (np.floor(bd * 0.5) * 2.0 != bd)
+        safe_mag = np.where((np.abs(ad) > 0) & np.isfinite(ad), np.abs(ad), 1.0)
+        t = bd * _ln_core(safe_mag)
+        mag = np.where(
+            t > 700.0,
+            np.inf,
+            np.where(t < -700.0, 0.0, _exp_core(np.clip(t, -700.0, 700.0))),
+        )
+        signed = np.where((ad < 0.0) & b_is_odd, -mag, mag).astype(np.float32)
+    out = signed
+    out = np.where((a < 0.0) & ~b_is_int, np.float32(np.nan), out)
+    # a == +-inf
+    inf_a = np.isinf(ad)
+    out = np.where(inf_a & (bd > 0.0) & ~((ad < 0.0) & b_is_odd), np.float32(np.inf), out)
+    out = np.where(inf_a & (bd > 0.0) & (ad < 0.0) & b_is_odd, np.float32(-np.inf), out)
+    out = np.where(inf_a & (bd < 0.0) & (ad < 0.0) & b_is_odd, np.float32(-0.0), out)
+    out = np.where(inf_a & (bd < 0.0) & ~((ad < 0.0) & b_is_odd), np.float32(0.0), out)
+    # b == +-inf
+    inf_b = np.isinf(bd)
+    small = np.abs(a) < 1.0
+    out = np.where(inf_b & ((small & (bd > 0.0)) | (~small & (bd < 0.0))), np.float32(0.0), out)
+    out = np.where(
+        inf_b & ((small & (bd < 0.0)) | (~small & (bd > 0.0))), np.float32(np.inf), out
+    )
+    # a == 0
+    zero_a = a == 0.0
+    out = np.where(zero_a & (bd > 0.0) & b_is_odd, a, out)
+    out = np.where(zero_a & (bd > 0.0) & ~b_is_odd, np.float32(0.0), out)
+    with np.errstate(divide="ignore"):
+        out = np.where(zero_a & (bd < 0.0) & b_is_odd, np.float32(1.0) / a, out)
+    out = np.where(zero_a & (bd < 0.0) & ~b_is_odd, np.float32(np.inf), out)
+    # NaN propagation, then the two unconditional identities.
+    out = np.where(np.isnan(a) | np.isnan(b), np.float32(np.nan), out)
+    out = np.where((b == 0.0) | (a == 1.0), np.float32(1.0), out)
+    return out.astype(np.float32)
+
+
+def sqrt(x):
+    # IEEE-exact in both languages.
+    x = np.asarray(x, dtype=np.float32)
+    with np.errstate(all="ignore"):
+        return np.sqrt(x)
+
+
+def rsqrt(x):
+    x = np.asarray(x, dtype=np.float32)
+    with np.errstate(all="ignore"):
+        return (np.float32(1.0) / np.sqrt(x)).astype(np.float32)

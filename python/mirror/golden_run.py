@@ -1,0 +1,61 @@
+"""Regenerate rust/tests/fixtures/golden_run_record.json from the mirror.
+
+Usage (from the python/ directory):
+
+    python -m mirror.golden_run [--check]
+
+Runs the mirrored golden training run (see trainer.GoldenRun) and writes
+the canonical record JSON — byte-identical to what
+`cargo test --test golden_record` produces with DIVEBATCH_BLESS=1 —
+after first validating the interpreter mirror against the committed
+jax-evaluated golden_entry_outputs.json (selfcheck).  With --check, the
+existing committed file is compared instead of overwritten.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from . import rust_fmt, selfcheck
+from .trainer import GoldenRun
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+FIXTURES = os.path.join(REPO, "rust", "tests", "fixtures")
+
+
+def canonical_record_json() -> str:
+    record = GoldenRun(os.path.join(FIXTURES, "artifacts")).run()
+    # to_canonical_json: wall-clock fields already masked to 0 by the
+    # mirror; serialization is sorted-key compact JSON (util/json.rs).
+    return rust_fmt.write_json(record)
+
+
+def main(argv: list[str]) -> int:
+    failures = selfcheck.run(FIXTURES)
+    if failures:
+        print("selfcheck FAILED — not writing the golden record:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("selfcheck: interp mirror matches the jax goldens")
+    text = canonical_record_json()
+    out = os.path.join(FIXTURES, "golden_run_record.json")
+    if "--check" in argv:
+        with open(out) as f:
+            committed = f.read()
+        if committed != text:
+            print(f"MISMATCH against {out}")
+            print(f"  committed: {committed[:200]}...")
+            print(f"  mirrored:  {text[:200]}...")
+            return 1
+        print(f"{out} matches the mirrored run")
+        return 0
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"wrote {out} ({len(text)} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,547 @@
+"""HLO-text evaluator mirroring the Rust compiled interpreter bit-exactly.
+
+Parses the same HLO text interchange format as
+rust/vendor/xla/src/interp/parse.rs and evaluates entries with the same
+numeric semantics as the compiled register program
+(program.rs/kernels.rs/exec.rs):
+
+* all f32 elementwise arithmetic is IEEE single precision (numpy float32
+  ufuncs — correctly rounded per element, like the Rust loops);
+* transcendentals go through :mod:`mirror.fmath` (the bit-exact mirror of
+  interp/fmath.rs) — never numpy's own exp/log;
+* ``maximum``/``minimum`` mirror Rust ``f32::max``/``min`` (NaN-ignoring);
+* ``dot`` accumulates each output element in ascending-k order
+  (mul-then-add, no FMA), exactly like kernels::dot;
+* ``reduce`` folds flat-ascending per output element, exactly like
+  kernels::reduce; multi-op regions are evaluated per element with f32
+  scalar semantics (the scalar register program's arithmetic).
+
+Data movement (broadcast/transpose/slice/pad/concatenate) is exact in any
+implementation, so numpy indexing is used directly.
+
+KEEP IN SYNC with the Rust interp module: same op set, same orders.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import fmath
+
+
+# ------------------------------------------------------------------ parsing
+
+
+def _split_top(s: str, sep: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for c in s:
+        if c in "({[":
+            depth += 1
+        elif c in ")}]":
+            depth -= 1
+        if c == sep and depth == 0:
+            tok = "".join(cur).strip()
+            if tok:
+                out.append(tok)
+            cur = []
+        else:
+            cur.append(c)
+    tok = "".join(cur).strip()
+    if tok:
+        out.append(tok)
+    return out
+
+
+_DTYPES = {"f32": np.float32, "s32": np.int32, "pred": np.bool_}
+
+
+def _parse_dense_shape(tok: str):
+    tok = tok.strip()
+    dt, rest = tok.split("[", 1)
+    dtype = _DTYPES[dt.strip()]
+    dims_str = rest.split("]", 1)[0]
+    dims = tuple(int(d) for d in dims_str.split(",") if d.strip()) if dims_str.strip() else ()
+    return dtype, dims
+
+
+def _parse_shape_spec(s: str):
+    s = s.strip()
+    if s.startswith("("):
+        inner = s[1:].rsplit(")", 1)[0]
+        return [("tuple", _parse_dense_shape(p)) for p in _split_top(inner, ",")]
+    return _parse_dense_shape(s)
+
+
+def _parse_usize_set(s: str) -> list[int]:
+    inner = s.strip().lstrip("{").rstrip("}")
+    return [int(p) for p in inner.split(",") if p.strip()]
+
+
+def _parse_slice_spec(s: str):
+    inner = s.strip().lstrip("{").rstrip("}")
+    out = []
+    for piece in _split_top(inner, ","):
+        parts = piece.strip().lstrip("[").rstrip("]").split(":")
+        stride = int(parts[2]) if len(parts) == 3 else 1
+        out.append((int(parts[0]), int(parts[1]), stride))
+    return out
+
+
+def _parse_padding_spec(s: str):
+    out = []
+    for piece in s.strip().split("x"):
+        parts = piece.split("_")
+        interior = int(parts[2]) if len(parts) == 3 else 0
+        out.append((int(parts[0]), int(parts[1]), interior))
+    return out
+
+
+def _operand_name(tok: str) -> str:
+    return tok.split()[-1].lstrip("%")
+
+
+class Instr:
+    __slots__ = ("name", "shape", "op", "operands", "attrs", "param", "literal", "is_root")
+
+
+def _parse_constant(payload: str, dtype, dims):
+    toks = payload.replace("{", " ").replace("}", " ").replace(",", " ").split()
+    if dtype is np.float32:
+        vals = [np.float32(t) for t in toks]
+    elif dtype is np.int32:
+        vals = [np.int32(t) for t in toks]
+    else:
+        vals = [t in ("true", "1") for t in toks]
+    return np.array(vals, dtype=dtype).reshape(dims)
+
+
+def _parse_instr(line: str) -> tuple[Instr, list[str]]:
+    lhs, rhs = line.split(" = ", 1)
+    lhs = lhs.strip()
+    ins = Instr()
+    ins.is_root = lhs.startswith("ROOT ")
+    ins.name = lhs.removeprefix("ROOT ").strip().lstrip("%")
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth, cut = 0, None
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    cut = i + 1
+                    break
+        shape_str, rest = rhs[:cut], rhs[cut:].lstrip()
+    else:
+        cut = rhs.index(" ")
+        shape_str, rest = rhs[:cut], rhs[cut:].lstrip()
+    ins.shape = _parse_shape_spec(shape_str)
+
+    open_ix = rest.index("(")
+    ins.op = rest[:open_ix].strip()
+    depth, close = 0, None
+    for i in range(open_ix, len(rest)):
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                close = i
+                break
+    payload = rest[open_ix + 1 : close]
+    attrs_str = rest[close + 1 :].lstrip(",").strip()
+
+    attrs = {}
+    for piece in _split_top(attrs_str, ","):
+        if "=" not in piece:
+            continue
+        key, val = piece.split("=", 1)
+        key = key.strip()
+        if key == "dimensions":
+            attrs["dimensions"] = _parse_usize_set(val)
+        elif key == "slice":
+            attrs["slice"] = _parse_slice_spec(val)
+        elif key == "padding":
+            attrs["padding"] = _parse_padding_spec(val)
+        elif key == "direction":
+            attrs["direction"] = val.strip()
+        elif key == "to_apply":
+            attrs["to_apply"] = val.strip().lstrip("%")
+        elif key == "lhs_contracting_dims":
+            attrs["lhs_contracting"] = _parse_usize_set(val)
+        elif key == "rhs_contracting_dims":
+            attrs["rhs_contracting"] = _parse_usize_set(val)
+        elif key == "index":
+            attrs["index"] = int(val.strip())
+        elif key == "iota_dimension":
+            attrs["iota_dimension"] = int(val.strip())
+    ins.attrs = attrs
+
+    ins.param = None
+    ins.literal = None
+    operand_names: list[str] = []
+    if ins.op == "parameter":
+        ins.param = int(payload.strip())
+    elif ins.op == "constant":
+        dtype, dims = ins.shape
+        ins.literal = _parse_constant(payload, dtype, dims)
+    else:
+        operand_names = [_operand_name(t) for t in _split_top(payload, ",")]
+    ins.operands = []
+    return ins, operand_names
+
+
+class Computation:
+    def __init__(self, name: str, raws):
+        self.name = name
+        index = {ins.name: i for i, (ins, _) in enumerate(raws)}
+        self.instrs = []
+        self.params: list[tuple[int, int]] = []
+        self.root = len(raws) - 1
+        for i, (ins, names) in enumerate(raws):
+            ins.operands = [index[n] for n in names]
+            if ins.param is not None:
+                self.params.append((ins.param, i))
+            if ins.is_root:
+                self.root = i
+            self.instrs.append(ins)
+        self.params = [i for _, i in sorted(self.params)]
+
+
+class Module:
+    """Parsed HLO module (same grammar as parse.rs)."""
+
+    def __init__(self, text: str):
+        self.computations: list[Computation] = []
+        self.by_name: dict[str, int] = {}
+        self.entry = None
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("HloModule") or line.startswith("//"):
+                continue
+            if line == "}":
+                name, is_entry, raws = cur
+                comp = Computation(name, raws)
+                self.by_name[name] = len(self.computations)
+                if is_entry:
+                    self.entry = len(self.computations)
+                self.computations.append(comp)
+                cur = None
+                continue
+            if line.endswith("{") and " = " not in line:
+                is_entry = line.startswith("ENTRY ")
+                rest = line.removeprefix("ENTRY ")
+                name = rest.split()[0].lstrip("%").split("(")[0]
+                cur = (name, is_entry, [])
+                continue
+            cur[2].append(_parse_instr(line))
+        if self.entry is None:
+            assert len(self.computations) == 1
+            self.entry = 0
+
+    def computation(self, name: str) -> Computation:
+        return self.computations[self.by_name[name]]
+
+    # ------------------------------------------------------------ evaluate
+
+    def evaluate(self, args):
+        comp = self.computations[self.entry]
+        assert len(args) == len(comp.params), "argument arity"
+        env = [None] * len(comp.instrs)
+        for idx in range(len(comp.instrs)):
+            env[idx] = self._eval(comp, idx, env, args)
+        return env[comp.root]
+
+    def _eval(self, comp, idx, env, args):
+        ins = comp.instrs[idx]
+        op = ins.op
+        opv = lambda i: env[ins.operands[i]]  # noqa: E731
+        if op == "parameter":
+            return np.asarray(args[ins.param])
+        if op == "constant":
+            return ins.literal
+        if op in _BINARY_F32:
+            return _BINARY_F32[op](opv(0), opv(1))
+        if op in _UNARY_F32:
+            return _UNARY_F32[op](opv(0))
+        if op == "compare":
+            return _compare(ins.attrs["direction"], opv(0), opv(1))
+        if op == "select":
+            return np.where(opv(0), opv(1), opv(2))
+        if op == "convert":
+            dtype, _ = ins.shape
+            return _convert(opv(0), dtype)
+        if op == "broadcast":
+            _, dims = ins.shape
+            return _broadcast(opv(0), ins.attrs.get("dimensions", []), dims)
+        if op == "reshape":
+            _, dims = ins.shape
+            return opv(0).reshape(dims)
+        if op == "transpose":
+            return np.transpose(opv(0), ins.attrs["dimensions"]).copy()
+        if op == "slice":
+            sl = tuple(slice(s, l, st) for (s, l, st) in ins.attrs["slice"])
+            return opv(0)[sl].copy()
+        if op == "pad":
+            return _pad(opv(0), opv(1), ins.attrs["padding"])
+        if op == "concatenate":
+            dim = ins.attrs.get("dimensions", [0])[0]
+            return np.concatenate([opv(i) for i in range(len(ins.operands))], axis=dim)
+        if op == "dot":
+            return _dot(opv(0), opv(1), ins.attrs)
+        if op == "reduce":
+            return self._reduce(opv(0), opv(1), ins.attrs)
+        if op == "iota":
+            dtype, dims = ins.shape
+            dim = ins.attrs.get("iota_dimension", 0)
+            idxs = np.arange(dims[dim] if dims else 1)
+            shape = [1] * len(dims)
+            if dims:
+                shape[dim] = dims[dim]
+            return np.broadcast_to(idxs.reshape(shape), dims or ()).astype(dtype).copy()
+        if op == "tuple":
+            return tuple(opv(i) for i in range(len(ins.operands)))
+        if op == "get-tuple-element":
+            return opv(0)[ins.attrs["index"]]
+        raise NotImplementedError(op)
+
+    def _reduce(self, data, init, attrs):
+        red = attrs["dimensions"]
+        dims = data.shape
+        keep = [d for d in range(len(dims)) if d not in red]
+        out_dims = tuple(dims[d] for d in keep)
+        comp = self.computation(attrs["to_apply"])
+        fast = _fast_binop(comp)
+        flat = data.reshape(-1)
+        # map[in_flat] -> out_flat, identical to program.rs lower_reduce.
+        out_elems = int(np.prod(out_dims)) if out_dims else 1
+        strides = _row_major_strides(dims)
+        out_strides = _row_major_strides(out_dims)
+        acc = np.full(out_elems, init.reshape(()).astype(np.float32), dtype=np.float32)
+        idx = np.arange(flat.size)
+        of = np.zeros(flat.size, dtype=np.int64)
+        for k, d in enumerate(keep):
+            coord = (idx // strides[d]) % dims[d]
+            of += coord * out_strides[k]
+        if fast == "add" and keep and set(red) == {len(dims) - 1}:
+            # Vectorized fast path for trailing-dim sums: per out element
+            # the contributions are the trailing k in ascending order —
+            # identical to the flat walk.
+            r = data.reshape(out_elems, dims[-1])
+            for k in range(dims[-1]):
+                acc = acc + r[:, k]
+            return acc.reshape(out_dims)
+        for i in range(flat.size):
+            o = int(of[i])
+            x = flat[i]
+            if fast == "add":
+                acc[o] = acc[o] + x
+            elif fast == "multiply":
+                acc[o] = acc[o] * x
+            elif fast == "maximum":
+                acc[o] = _scalar_max(acc[o], x)
+            elif fast == "minimum":
+                acc[o] = _scalar_min(acc[o], x)
+            else:
+                acc[o] = _apply_region(self, comp, acc[o], x)
+        return acc.reshape(out_dims)
+
+
+def _row_major_strides(dims):
+    s = [1] * len(dims)
+    for i in range(len(dims) - 2, -1, -1):
+        s[i] = s[i + 1] * dims[i + 1]
+    return s
+
+
+def _fast_binop(comp):
+    if len(comp.instrs) != 3 or len(comp.params) != 2:
+        return None
+    root = comp.instrs[comp.root]
+    if (
+        len(root.operands) == 2
+        and comp.instrs[root.operands[0]].op == "parameter"
+        and comp.instrs[root.operands[1]].op == "parameter"
+    ):
+        return root.op
+    return None
+
+
+def _apply_region(module, comp, acc, x):
+    """Evaluate a reduce region on scalars (acc, x) with f32 semantics —
+    numerically identical to the compiled scalar register program."""
+    env = [None] * len(comp.instrs)
+    args = {comp.params[0]: acc, comp.params[1]: x}
+    for idx, ins in enumerate(comp.instrs):
+        if ins.op == "parameter":
+            env[idx] = args[idx]
+        elif ins.op == "constant":
+            env[idx] = ins.literal.reshape(())
+        elif ins.op in ("reshape", "copy"):
+            env[idx] = env[ins.operands[0]]
+        elif ins.op in _BINARY_F32:
+            env[idx] = _BINARY_F32[ins.op](env[ins.operands[0]], env[ins.operands[1]])
+        elif ins.op in _UNARY_F32:
+            env[idx] = _UNARY_F32[ins.op](env[ins.operands[0]])
+        else:
+            raise NotImplementedError(f"region op {ins.op}")
+    return np.float32(env[comp.root])
+
+
+# ------------------------------------------------------------- op kernels
+
+
+def _f32_max(a, b):
+    # Rust f32::max: NaN-ignoring.
+    with np.errstate(invalid="ignore"):
+        r = np.maximum(a, b)
+    r = np.where(np.isnan(a), b, r)
+    r = np.where(np.isnan(b) & ~np.isnan(a), a, r)
+    return r.astype(np.float32)
+
+
+def _f32_min(a, b):
+    with np.errstate(invalid="ignore"):
+        r = np.minimum(a, b)
+    r = np.where(np.isnan(a), b, r)
+    r = np.where(np.isnan(b) & ~np.isnan(a), a, r)
+    return r.astype(np.float32)
+
+
+def _scalar_max(a, b):
+    return _f32_max(np.float32(a), np.float32(b))
+
+
+def _scalar_min(a, b):
+    return _f32_min(np.float32(a), np.float32(b))
+
+
+def _errwrap(f):
+    def g(*a):
+        with np.errstate(all="ignore"):
+            return f(*a)
+
+    return g
+
+
+_BINARY_F32 = {
+    "add": _errwrap(lambda a, b: a + b),
+    "subtract": _errwrap(lambda a, b: a - b),
+    "multiply": _errwrap(lambda a, b: a * b),
+    "divide": _errwrap(lambda a, b: a / b),
+    "maximum": _f32_max,
+    "minimum": _f32_min,
+    "power": fmath.pow,
+    "remainder": _errwrap(np.fmod),
+    "and": _errwrap(np.logical_and),
+    "or": _errwrap(np.logical_or),
+    "xor": _errwrap(np.logical_xor),
+}
+
+_UNARY_F32 = {
+    "abs": _errwrap(np.abs),
+    "negate": _errwrap(np.negative),
+    "exponential": fmath.exp,
+    "exponential-minus-one": fmath.exp_m1,
+    "log": fmath.ln,
+    "log-plus-one": fmath.ln_1p,
+    "logistic": fmath.logistic,
+    "tanh": fmath.tanh,
+    "sqrt": fmath.sqrt,
+    "rsqrt": fmath.rsqrt,
+    "sign": _errwrap(lambda a: np.sign(a)),
+    "floor": _errwrap(np.floor),
+    "ceil": _errwrap(np.ceil),
+    "cosine": fmath.cos,
+    "sine": fmath.sin,
+    "not": _errwrap(np.logical_not),
+    "copy": lambda a: a.copy(),
+}
+
+
+def _compare(direction, a, b):
+    with np.errstate(invalid="ignore"):
+        if direction == "EQ":
+            return a == b
+        if direction == "NE":
+            return a != b
+        if direction == "LT":
+            return a < b
+        if direction == "GT":
+            return a > b
+        if direction == "LE":
+            return a <= b
+        if direction == "GE":
+            return a >= b
+    raise NotImplementedError(direction)
+
+
+def _convert(a, dtype):
+    if dtype is np.int32 and a.dtype == np.float32:
+        # XLA rounds toward zero with saturation (Rust `as i32`).
+        w = np.trunc(a.astype(np.float64))
+        w = np.where(np.isnan(w), 0.0, np.clip(w, -2147483648.0, 2147483647.0))
+        return w.astype(np.int64).astype(np.int32)
+    if dtype is np.bool_:
+        return a != 0
+    return a.astype(dtype)
+
+
+def _broadcast(a, mapping, out_dims):
+    shape = [1] * len(out_dims)
+    for i, od in enumerate(mapping):
+        shape[od] = a.shape[i]
+    return np.broadcast_to(a.reshape(shape), out_dims).copy()
+
+
+def _pad(a, fill, spec):
+    out_dims = tuple(
+        lo + (0 if n == 0 else n + (n - 1) * interior) + hi
+        for n, (lo, hi, interior) in zip(a.shape, spec)
+    )
+    out = np.full(out_dims, fill.reshape(()), dtype=a.dtype)
+    index = tuple(
+        slice(lo, lo + (n - 1) * (1 + interior) + 1 if n else lo, 1 + interior)
+        for n, (lo, _hi, interior) in zip(a.shape, spec)
+    )
+    if all(n > 0 for n in a.shape):
+        out[index] = a
+    return out
+
+
+def _dot(a, b, attrs):
+    lc = attrs["lhs_contracting"][0]
+    rc = attrs["rhs_contracting"][0]
+    k = a.shape[lc]
+    # Collapse to (M, K) and (K, N) — free dims in original order, which
+    # is exactly the compiled plan's l_base/r_base ordering.
+    lperm = [d for d in range(a.ndim) if d != lc] + [lc]
+    rperm = [rc] + [d for d in range(b.ndim) if d != rc]
+    l2 = np.transpose(a, lperm).reshape(-1, k)
+    r2 = np.transpose(b, rperm).reshape(k, -1)
+    out_dims = tuple(a.shape[d] for d in range(a.ndim) if d != lc) + tuple(
+        b.shape[d] for d in range(b.ndim) if d != rc
+    )
+    acc = np.zeros((l2.shape[0], r2.shape[1]), dtype=np.float32)
+    for kk in range(k):
+        with np.errstate(all="ignore"):
+            acc = acc + l2[:, kk : kk + 1] * r2[kk : kk + 1, :]
+    return acc.reshape(out_dims)
+
+
+# ---------------------------------------------------------- entry wrappers
+
+
+class Executable:
+    """One compiled HLO entry (mirror of runtime Executable numerics)."""
+
+    def __init__(self, path: str):
+        with open(path) as f:
+            self.module = Module(f.read())
+
+    def run(self, args):
+        out = self.module.evaluate([np.asarray(a) for a in args])
+        return out if isinstance(out, tuple) else (out,)

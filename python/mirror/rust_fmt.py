@@ -1,0 +1,98 @@
+"""Mirror of rust/src/util/json.rs serialization for RunRecord JSON.
+
+Two pieces matter for byte equality:
+
+* ``write_num`` (json.rs): finite integers with |n| < 9e15 print via the
+  ``n as i64`` cast (no fraction); everything else prints with Rust's f64
+  ``Display`` — the *shortest* decimal string that round-trips, rendered
+  positionally (Rust Display never uses scientific notation).  Python's
+  ``repr`` produces the same shortest digit string; this module re-renders
+  it positionally.
+* objects serialize with keys in sorted (BTreeMap) order, compact
+  separators, and the same string escaping.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def fmt_f64(n: float) -> str:
+    """Rust `format!("{n}")` for the values write_num's else-branch sees
+    (finite, non-integer or huge)."""
+    s = repr(float(n))
+    if "e" not in s and "E" not in s:
+        return s
+    if "inf" in s or "nan" in s:
+        raise ValueError(f"non-finite {n} reached fmt_f64")
+    mant, exp = s.lower().split("e")
+    e = int(exp)
+    sign = "-" if mant.startswith("-") else ""
+    mant = mant.lstrip("-")
+    if "." in mant:
+        ip, fp = mant.split(".")
+    else:
+        ip, fp = mant, ""
+    digits = ip + fp
+    point = len(ip) + e
+    if point <= 0:
+        return sign + "0." + "0" * (-point) + digits
+    if point >= len(digits):
+        return sign + digits + "0" * (point - len(digits))
+    return sign + digits[:point] + "." + digits[point:]
+
+
+def write_num(n: float) -> str:
+    """json.rs write_num: null for non-finite; i64 rendering for integral
+    values below 9e15; Display otherwise."""
+    n = float(n)
+    if not math.isfinite(n):
+        return "null"
+    if n == math.floor(n) and abs(n) < 9.0e15:
+        return str(int(n))
+    return fmt_f64(n)
+
+
+def _escape(s: str) -> str:
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append(f"\\u{ord(c):04x}")
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def write_json(v) -> str:
+    """Compact serialization matching util/json.rs `Json::to_string`.
+
+    dict -> Obj (sorted keys), list -> Arr, str -> Str, bool -> Bool,
+    None -> Null, int/float -> Num (via write_num).
+    """
+    if v is None:
+        return "null"
+    if v is True:
+        return "true"
+    if v is False:
+        return "false"
+    if isinstance(v, str):
+        return _escape(v)
+    if isinstance(v, (int, float)):
+        return write_num(float(v))
+    if isinstance(v, list):
+        return "[" + ",".join(write_json(x) for x in v) + "]"
+    if isinstance(v, dict):
+        items = (f"{_escape(k)}:{write_json(v[k])}" for k in sorted(v))
+        return "{" + ",".join(items) + "}"
+    raise TypeError(type(v))

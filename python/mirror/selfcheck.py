@@ -1,0 +1,57 @@
+"""Validate the interp mirror against the committed jax goldens.
+
+Replays every entry of rust/tests/fixtures/golden_entry_outputs.json
+through :mod:`mirror.interp` and checks the outputs against the
+jax-evaluated values to the same tolerance the Rust test
+``interpreter_matches_python_golden`` uses (1e-4 * (1 + |want|)).  This
+anchors the mirror to the exact semantics the Rust interpreter is anchored
+to, before the mirror is trusted to mint the golden run record.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from . import interp
+
+
+def run(fixtures_dir: str) -> list[str]:
+    """Returns a list of failure descriptions (empty = all good)."""
+    with open(os.path.join(fixtures_dir, "golden_entry_outputs.json")) as f:
+        doc = json.load(f)
+    model = doc["model"]
+    failures: list[str] = []
+    for key, case in sorted(doc["entries"].items()):
+        path = os.path.join(fixtures_dir, "artifacts", model, f"{key}.hlo.txt")
+        exe = interp.Executable(path)
+        comp = exe.module.computations[exe.module.entry]
+        args = []
+        for j, pidx in zip(case["inputs"], comp.params):
+            _, dims = comp.instrs[pidx].shape
+            args.append(np.array(j, dtype=np.float32).reshape(dims))
+        outs = exe.run(args)
+        wants = case["outputs"]
+        if len(outs) != len(wants):
+            failures.append(f"{key}: arity {len(outs)} vs {len(wants)}")
+            continue
+        for ix, (got, want) in enumerate(zip(outs, wants)):
+            got = np.asarray(got, dtype=np.float32).reshape(-1)
+            want = np.asarray(want, dtype=np.float64).reshape(-1)
+            for j in range(want.size):
+                g, w = float(got[j]), float(want[j])
+                if abs(g - w) > 1e-4 * (1.0 + abs(w)):
+                    failures.append(f"{key} out[{ix}][{j}]: mirror {g} vs jax {w}")
+    return failures
+
+
+if __name__ == "__main__":
+    here = os.path.dirname(__file__)
+    fx = os.path.normpath(os.path.join(here, "..", "..", "rust", "tests", "fixtures"))
+    fails = run(fx)
+    if fails:
+        print("\n".join(fails))
+        raise SystemExit(1)
+    print("interp mirror matches the jax goldens")

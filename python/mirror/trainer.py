@@ -1,0 +1,429 @@
+"""Bit-exact mirror of the Rust golden-run training pipeline.
+
+Every component here reproduces, operation for operation, the Rust code
+named in its docstring: util/rng.rs (xoshiro256++ / SplitMix64 /
+Box-Muller), data/synthetic.rs, data/dataset.rs, coordinator/plan.rs,
+coordinator/optimizer.rs (plain-SGD hot path), coordinator/diversity.rs,
+coordinator/policy/baselines.rs (DiveBatch), coordinator/schedule.rs,
+cluster/mod.rs, metrics/memory.rs, and coordinator/trainer.rs's run loop.
+
+f64 state lives in Python floats (IEEE doubles), f32 state in numpy
+float32 arrays; sequential accumulations keep the Rust iteration order.
+The only libm calls are Box-Muller's log/sqrt/sin/cos — their outputs are
+threshold-consumed (label signs), so last-ulp libm differences across
+hosts cannot change the record.
+
+KEEP IN SYNC with the Rust sources above; re-bless the golden via
+`python -m mirror.golden_run` after any numeric change.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from . import interp
+
+MASK = (1 << 64) - 1
+
+
+def rust_round(x: float) -> float:
+    """f64::round (half away from zero) for non-negative x — the only
+    inputs the golden path produces.  `x - floor(x)` is exact in f64 for
+    the magnitudes involved, so no spurious half-crossing can occur
+    (Python's round() is half-even, hence this helper)."""
+    assert x >= 0.0
+    f = math.floor(x)
+    return f + 1.0 if x - f >= 0.5 else f
+
+
+# ------------------------------------------------------------ util/rng.rs
+
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256++ seeded via SplitMix64 (util/rng.rs)."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare = None
+
+    def fork(self, stream: int) -> "Rng":
+        sm = self.next_u64() ^ ((stream * 0xA24BAED4963EE407) & MASK)
+        return Rng(sm)
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / 9007199254740992.0)
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+    def below(self, n: int) -> int:
+        threshold = ((1 << 64) - n) % n
+        while True:
+            r = self.next_u64()
+            if r >= threshold:
+                return r % n
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        u = 1.0 - self.next_f64()
+        v = self.next_f64()
+        r = math.sqrt(-2.0 * math.log(u))
+        theta = 2.0 * math.pi * v
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def normal_ms(self, mean: float, std: float) -> float:
+        return mean + std * self.normal()
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def permutation(self, n: int) -> list[int]:
+        idx = list(range(n))
+        self.shuffle(idx)
+        return idx
+
+    def fill_uniform_f32(self, out: np.ndarray, lo: float, hi: float) -> None:
+        for i in range(out.size):
+            out[i] = np.float32(self.uniform(lo, hi))
+
+
+# ------------------------------------------------------- data/synthetic.rs
+
+
+class Dataset:
+    def __init__(self, x: np.ndarray, y: np.ndarray, d: int, name: str):
+        self.x = x  # flat row-major float32, n*d
+        self.y = y  # float32 labels
+        self.d = d
+        self.name = name
+
+    def n(self) -> int:
+        return self.y.size
+
+    def split(self, frac: float) -> tuple["Dataset", "Dataset"]:
+        n_train = int(rust_round(self.n() * frac))
+        f = self.d
+        tr = Dataset(self.x[: n_train * f].copy(), self.y[:n_train].copy(), f, self.name)
+        va = Dataset(self.x[n_train * f :].copy(), self.y[n_train:].copy(), f, self.name)
+        return tr, va
+
+    def gather(self, indices: list[int], pad_to: int):
+        """dataset.rs gather_into: padding rows repeat row 0, w = 0."""
+        f = self.d
+        x = np.empty(pad_to * f, dtype=np.float32)
+        w = np.empty(pad_to, dtype=np.float32)
+        for row, i in enumerate(indices):
+            x[row * f : (row + 1) * f] = self.x[i * f : (i + 1) * f]
+            w[row] = 1.0
+        for row in range(len(indices), pad_to):
+            x[row * f : (row + 1) * f] = self.x[0:f]
+            w[row] = 0.0
+        y = np.zeros(pad_to, dtype=np.float32)
+        for row, i in enumerate(indices):
+            y[row] = self.y[i]
+        return x.reshape(pad_to, f), y, w
+
+
+def generate_synthetic(n: int, d: int, noise: float, seed: int) -> Dataset:
+    root = Rng(seed)
+    w_rng = root.fork(1)
+    x_rng = root.fork(2)
+    e_rng = root.fork(3)
+    w_star = [w_rng.normal() for _ in range(d)]
+    x = np.zeros(n * d, dtype=np.float32)
+    y = np.zeros(n, dtype=np.float32)
+    for i in range(n):
+        row = x[i * d : (i + 1) * d]
+        x_rng.fill_uniform_f32(row, -1.0, 1.0)
+        z = 0.0
+        for j in range(d):
+            z += w_star[j] * float(row[j])
+        z += e_rng.normal_ms(0.0, noise)
+        y[i] = np.float32(1.0 if z > 0.0 else 0.0)
+    return Dataset(x, y, d, f"synthetic-d{d}-n{n}-s{seed}")
+
+
+# ----------------------------------------------------- coordinator/plan.rs
+
+
+def micro_plan(m: int, ladder: list[int]) -> list[tuple[int, int]]:
+    """MicroPlan::build with no cap: [(micro, take)] blocks."""
+    usable = list(ladder)
+    blocks = []
+    remaining = m
+    for rung in reversed(usable):
+        while remaining >= rung:
+            blocks.append((rung, rung))
+            remaining -= rung
+    if remaining > 0:
+        rung = next((r for r in usable if r >= remaining), usable[-1])
+        if rung >= remaining:
+            blocks.append((rung, remaining))
+        else:
+            while remaining >= rung:
+                blocks.append((rung, rung))
+                remaining -= rung
+            if remaining > 0:
+                blocks.append((rung, remaining))
+    return blocks
+
+
+# ------------------------------------------------------------- cluster.rs
+
+
+class Cluster:
+    """ClusterModel::a100x4 with the golden run's constants."""
+
+    def __init__(self, param_count: int, flops_per_sample: float):
+        self.workers = 4
+        self.t_launch = 60e-6
+        self.t_sample = flops_per_sample / 120e12
+        self.t_comm_base = 25e-6
+        self.t_per_param = 4.0 / 150e9
+        self.param_count = param_count
+        self.div_overhead = 0.9
+
+    def step_time(self, m: int, instrumented: bool) -> float:
+        shard = -(-m // self.workers)  # div_ceil
+        compute = shard * self.t_sample
+        if instrumented:
+            compute *= 1.0 + self.div_overhead
+        allreduce = (
+            self.t_comm_base
+            + 2.0 * (self.workers - 1) / self.workers * self.param_count * self.t_per_param
+        )
+        return self.t_launch + compute + allreduce
+
+    def epoch_time(self, n: int, m: int, instrumented: bool) -> float:
+        full_steps = n // m
+        tail = n % m
+        t = full_steps * self.step_time(m, instrumented)
+        if tail > 0:
+            t += self.step_time(tail, instrumented)
+        return t
+
+
+# ------------------------------------------------------ metrics/memory.rs
+
+
+def mem_step_mb(param_count: int, feat_len: int, chunk: int, m: int) -> float:
+    """MemoryModel::for_model (dense) + step_mb in DivChunked mode."""
+    act_per_sample = 2 * feat_len + 64
+    f = 4.0
+    fixed = 4.0 * param_count * f
+    batch = m * (float(feat_len) + float(act_per_sample)) * f
+    persample = min(chunk, m) * param_count * f
+    return (fixed + batch + persample) / (1024.0 * 1024.0)
+
+
+# ------------------------------------------------------------ golden run
+
+
+def divebatch_next(m0, delta, m_max, current, n, sqnorm_sum, grad_norm2):
+    """baselines.rs divebatch_next."""
+    delta_hat = math.inf if grad_norm2 <= 0.0 else sqnorm_sum / grad_norm2
+    if not math.isfinite(delta_hat):
+        return min(max(current, min(m0, m_max)), m_max)
+    target = delta * n * delta_hat
+    target = int(max(rust_round(target), 1.0))
+    return min(max(target, m0), min(m_max, max(n, m0)))
+
+
+class GoldenRun:
+    """The pinned run of rust/tests/golden_record.rs, mirrored end to end.
+
+    TrialSpec::execute_profiled sets cfg.seed = trial = 0; the dataset is
+    Synthetic{n:120, d:8, noise:0.05, seed:33}, policy DiveBatch{m0:4,
+    delta:0.5, m_max:8}, LrSchedule::constant(0.3, rescale=true), 6
+    epochs, default ClusterSpec, flops_per_sample 1e3, tinylogreg8.
+    """
+
+    EPOCHS = 6
+    M0 = 4
+    DELTA = 0.5
+    M_MAX = 8
+    LR_BASE = 0.3
+    N_TOTAL = 120
+    D = 8
+    NOISE = 0.05
+    DATA_SEED = 33
+    SEED = 0
+    LADDER = [4, 8]
+    PARAM_COUNT = 9
+    CHUNK = 4
+    FLOPS = 1e3
+
+    def __init__(self, fixtures_dir: str):
+        self.execs = {}
+        for key in ("train_div_b4", "train_div_b8", "eval_b4", "eval_b8"):
+            path = os.path.join(fixtures_dir, "tinylogreg8", f"{key}.hlo.txt")
+            self.execs[key] = interp.Executable(path)
+        with open(os.path.join(fixtures_dir, "tinylogreg8", "init_s0.bin"), "rb") as f:
+            self.init_params = np.frombuffer(f.read(), dtype="<f4").copy()
+
+    def run_train(self, micro: int, params, x, y, w):
+        out = self.execs[f"train_div_b{micro}"].run([params, x, y, w])
+        return (
+            float(out[0].reshape(())),
+            float(out[1].reshape(())),
+            np.asarray(out[2], dtype=np.float32),
+            float(out[3].reshape(())),
+        )
+
+    def run_eval(self, micro: int, params, x, y, w):
+        out = self.execs[f"eval_b{micro}"].run([params, x, y, w])
+        return float(out[0].reshape(())), float(out[1].reshape(()))
+
+    def lr(self, epoch: int, m: int) -> float:
+        # LrSchedule::constant(0.3, true): no decay, Goyal rescale by m/m0.
+        lr = self.LR_BASE
+        lr *= m / float(self.M0)
+        return lr
+
+    def evaluate(self, val: Dataset, params) -> tuple[float, float]:
+        n = val.n()
+        loss = 0.0
+        correct = 0.0
+        pos = 0
+        while pos < n:
+            idx = list(range(pos, min(pos + 8, n)))
+            pos += len(idx)
+            for micro, take in micro_plan(len(idx), self.LADDER):
+                block = idx[:take]
+                idx = idx[take:]
+                x, y, w = val.gather(block, micro)
+                l, c = self.run_eval(micro, params, x, y, w)
+                loss += l
+                correct += c
+        return loss / n, 100.0 * correct / n
+
+    def run(self) -> dict:
+        full = generate_synthetic(self.N_TOTAL, self.D, self.NOISE, self.DATA_SEED)
+        train, val = full.split(0.8)
+        n = train.n()
+        cluster = Cluster(self.PARAM_COUNT, self.FLOPS)
+        params = self.init_params.copy()
+        shuffle_rng = Rng((self.SEED * 0x9E3779B97F4A7C15) & MASK ^ 0xD117E)
+        _sgld_rng = shuffle_rng.fork(0x561D)  # trainer.rs forks it unconditionally
+
+        m_k = self.M0
+        lr_scale = 1.0
+        cum_sim = 0.0
+        epochs_out = []
+        for epoch in range(self.EPOCHS):
+            lr = self.lr(epoch, m_k) * lr_scale
+            div_grad = [0.0] * self.PARAM_COUNT
+            div_sqnorm = 0.0
+            div_samples = 0
+            train_loss_sum = 0.0
+            train_correct = 0.0
+            steps = 0
+            m_cur = m_k
+            m_peak = m_k
+            perm = shuffle_rng.permutation(n)
+            pos = 0
+            while pos < n:
+                indices = perm[pos : pos + m_cur]
+                pos += len(indices)
+                logical = len(indices)
+                grad_accum = np.zeros(self.PARAM_COUNT, dtype=np.float32)
+                offset = 0
+                for micro, take in micro_plan(logical, self.LADDER):
+                    idx = indices[offset : offset + take]
+                    offset += take
+                    x, y, w = train.gather(idx, micro)
+                    loss, correct, grad, sqnorm = self.run_train(micro, params, x, y, w)
+                    grad_accum = grad_accum + grad  # f32 elementwise, like `*a += g`
+                    train_loss_sum += loss
+                    train_correct += correct
+                    for pi in range(self.PARAM_COUNT):
+                        div_grad[pi] += float(grad[pi])
+                    div_sqnorm += sqnorm
+                    div_samples += take
+                # SgdOptimizer::step, plain hot path (mu = wd = 0).
+                inv_m = np.float32(1.0) / np.float32(logical)
+                scale = np.float32(lr) * inv_m
+                params = (params - scale * grad_accum).astype(np.float32)
+                steps += 1
+                cum_sim += cluster.step_time(logical, True)
+
+            grad_norm2 = 0.0
+            for g in div_grad:
+                grad_norm2 += g * g
+            delta_hat = math.inf if grad_norm2 <= 0.0 else div_sqnorm / grad_norm2
+            n_delta = div_samples * delta_hat
+
+            val_loss, val_acc = self.evaluate(val, params)
+            sim_epoch = cluster.epoch_time(n, m_k, True)
+            train_loss = train_loss_sum / n
+            epochs_out.append(
+                {
+                    "epoch": epoch,
+                    "m": m_k,
+                    "lr": lr,
+                    "steps": steps,
+                    "tl": train_loss,
+                    "ta": 100.0 * train_correct / n,
+                    "vl": val_loss,
+                    "va": val_acc,
+                    "dh": delta_hat,
+                    "nd": n_delta,
+                    "xd": None,
+                    "ws": 0.0,
+                    "ss": sim_epoch,
+                    "cw": 0.0,
+                    "cs": cum_sim,
+                    "mm": mem_step_mb(self.PARAM_COUNT, self.D, self.CHUNK, m_peak),
+                }
+            )
+            m_k = max(
+                divebatch_next(
+                    self.M0, self.DELTA, self.M_MAX, m_cur, n, div_sqnorm, grad_norm2
+                ),
+                1,
+            )
+        return {
+            "label": f"DiveBatch ({self.M0} - {self.M_MAX})",
+            "model": "tinylogreg8",
+            "policy": "divebatch",
+            "dataset": train.name,
+            "seed": self.SEED,
+            "epochs": epochs_out,
+        }

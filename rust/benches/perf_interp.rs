@@ -1,0 +1,161 @@
+//! Bench: **P4 (§Perf)** — compiled interpreter vs the retained tree-walk
+//! reference evaluator, on the committed tinylogreg8 fixtures.
+//!
+//! This is the PR-4 accountability bench: it times every fixture entry
+//! (train plain + diversity across the batch ladder, eval ladder, fused
+//! update) through BOTH execution paths of the same compiled object —
+//! [`xla::PjRtLoadedExecutable::execute`] (register program, buffer
+//! arena) and [`xla::PjRtLoadedExecutable::execute_reference`] (the
+//! pre-PR evaluator) — and writes `BENCH_4.json` at the repo root:
+//!
+//! ```text
+//! entries.<key>.ns_per_step      compiled path, mean ns per execution
+//! entries.<key>.steps_per_sec    1e9 / ns_per_step
+//! entries.<key>.ref_ns_per_step  reference path, same inputs, same run
+//! entries.<key>.speedup          ref / compiled
+//! entries.<key>.allocs_proxy     arena allocations observed during the
+//!                                timed loop (arenas created + buffers
+//!                                grown; steady state must be 0)
+//! ```
+//!
+//! Target: `train_div_b8` speedup >= 5x (the ISSUE-4 acceptance bar).
+//! The committed BENCH_4.json is the regression baseline: CI's perf-smoke
+//! step re-runs this bench and fails if any entry's `speedup` drops below
+//! half its committed value (python/mirror/check_bench.py — the speedup
+//! is measured against the reference path in the same process, so the
+//! gate is machine-invariant; raw ns_per_step is recorded for humans).
+//! To re-bless after an intentional change, run the bench and commit the
+//! refreshed BENCH_4.json.
+//!
+//! Env knobs: `BENCH_OUT` overrides the output path;
+//! `DIVEBATCH_PERF_ENFORCE=1` makes the process exit non-zero when the
+//! train_div_b8 target is missed (CI sets it).
+//!
+//! Run: `cargo bench --bench perf_interp`
+
+use divebatch::bench::{bench_header, fmt_time, Bencher};
+use divebatch::runtime::{Dtype, Manifest, TensorSpec};
+use divebatch::util::json::Json;
+use divebatch::util::rng::Rng;
+
+const TARGET_SPEEDUP: f64 = 5.0;
+
+fn fixtures_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/artifacts").to_string()
+}
+
+fn default_out() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_4.json").to_string()
+}
+
+fn input_literal(spec: &TensorSpec, rng: &mut Rng) -> xla::Literal {
+    let n = spec.elements();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    match spec.dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        Dtype::S32 => {
+            let v: Vec<i32> = (0..n).map(|_| rng.range(0, 2) as i32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "perf_interp",
+        "P4: compiled register-program interpreter vs the retained reference \
+         evaluator (tinylogreg8 fixtures); writes BENCH_4.json",
+    );
+    let manifest = Manifest::load(fixtures_dir())?;
+    let model = manifest.model("tinylogreg8")?.clone();
+    let client = xla::PjRtClient::interp();
+    let b = Bencher {
+        warmup_iters: 5,
+        min_iters: 20,
+        max_iters: 20_000,
+        target_s: 0.5,
+    };
+
+    let mut entries: Vec<(&str, Json)> = Vec::new();
+    let mut div_b8_speedup = None;
+    println!(
+        "{:<16} {:>14} {:>14} {:>9} {:>13}",
+        "entry", "compiled", "reference", "speedup", "allocs-proxy"
+    );
+    for (key, info) in &model.entries {
+        let path = manifest.path(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let mut rng = Rng::new(0xBE7C);
+        let inputs: Vec<xla::Literal> = info
+            .inputs
+            .iter()
+            .map(|spec| input_literal(spec, &mut rng))
+            .collect();
+
+        // Warm the arena before counting, so the proxy measures steady
+        // state (the first call legitimately builds one arena).
+        exe.execute(&inputs)?;
+        let (created0, grown0) = exe.interp_arena_stats().unwrap();
+        let compiled = b.run(&format!("{key} compiled"), None, || {
+            exe.execute(&inputs).unwrap();
+        });
+        let (created1, grown1) = exe.interp_arena_stats().unwrap();
+        let allocs_proxy = (created1 - created0) + (grown1 - grown0);
+        let reference = b.run(&format!("{key} reference"), None, || {
+            exe.execute_reference(&inputs).unwrap();
+        });
+
+        let ns = compiled.mean_s * 1e9;
+        let ref_ns = reference.mean_s * 1e9;
+        let speedup = ref_ns / ns;
+        if key == "train_div_b8" {
+            div_b8_speedup = Some(speedup);
+        }
+        println!(
+            "{key:<16} {:>14} {:>14} {:>8.1}x {:>13}",
+            fmt_time(compiled.mean_s),
+            fmt_time(reference.mean_s),
+            speedup,
+            allocs_proxy
+        );
+        entries.push((
+            key.as_str(),
+            Json::obj(vec![
+                ("ns_per_step", Json::Num(ns)),
+                ("steps_per_sec", Json::Num(1e9 / ns)),
+                ("ref_ns_per_step", Json::Num(ref_ns)),
+                ("speedup", Json::Num(speedup)),
+                ("allocs_proxy", Json::Num(allocs_proxy as f64)),
+            ]),
+        ));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_interp".into())),
+        ("model", Json::Str("tinylogreg8".into())),
+        ("target_speedup_train_div_b8", Json::Num(TARGET_SPEEDUP)),
+        ("entries", Json::obj(entries)),
+    ]);
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| default_out());
+    std::fs::write(&out_path, doc.to_string())?;
+    println!();
+    println!("wrote {out_path}");
+
+    let speedup = div_b8_speedup.expect("train_div_b8 entry present in fixtures");
+    if speedup < TARGET_SPEEDUP {
+        eprintln!(
+            "WARNING: train_div_b8 speedup {speedup:.1}x is below the {TARGET_SPEEDUP}x \
+             target (ISSUE-4 acceptance bar)"
+        );
+        if std::env::var("DIVEBATCH_PERF_ENFORCE").is_ok_and(|v| v == "1") {
+            std::process::exit(1);
+        }
+    } else {
+        println!("train_div_b8 speedup {speedup:.1}x (target {TARGET_SPEEDUP}x) — OK");
+    }
+    Ok(())
+}

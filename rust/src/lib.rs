@@ -52,13 +52,22 @@
 //! Compiled entries execute on one of three backend tiers (selected in
 //! rust/vendor/xla — see its crate docs):
 //!
-//! 1. **Interpreter** (default): a pure-Rust HLO-text evaluator.  Every
+//! 1. **Interpreter** (default): a pure-Rust HLO engine split into a
+//!    compile phase (HLO text -> flat SSA register program: typed
+//!    kernels, precomputed gather/dot/reduce plans, fused elementwise
+//!    chains, last-use buffer-slot assignment) and an execute phase (the
+//!    program over a pooled buffer arena — near-zero steady-state
+//!    allocation, borrowed argument literals, deterministic in-crate
+//!    math so results are bit-identical across platforms).  Every
 //!    numeric test — trainer epochs, policy trajectories, the `jobs=1`
-//!    vs `jobs=4` equivalence gate, the golden-record regression — runs
-//!    in plain `cargo test` over the committed fixtures in
-//!    rust/tests/fixtures, on any machine, with zero skips.  Correctness
-//!    is anchored by jax-evaluated goldens
-//!    (`python -m compile.fixtures` regenerates both).
+//!    vs `jobs=4` equivalence gate, the byte-for-byte golden-record
+//!    regression — runs in plain `cargo test` over the committed
+//!    fixtures in rust/tests/fixtures, on any machine, with zero skips.
+//!    Correctness is anchored by jax-evaluated goldens
+//!    (`python -m compile.fixtures` regenerates both) and by the
+//!    differential suite against the retained pre-PR evaluator
+//!    (tests/differential_interp.rs); speed is tracked in BENCH_4.json
+//!    by `cargo bench --bench perf_interp`.
 //! 2. **Stub** (`DIVEBATCH_BACKEND=stub`): compile/cache-only — for
 //!    exercising the runtime plumbing with execution explicitly off.
 //! 3. **Real PJRT**: swap the `xla` dependency in rust/Cargo.toml to the

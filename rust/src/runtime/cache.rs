@@ -17,10 +17,18 @@
 //!   runs under a per-key lock (not the map lock), so two workers racing
 //!   on the same rung serialize on that rung only, while different rungs
 //!   compile concurrently;
-//! * [`RuntimeStats`] and per-executable execution counts stay exact
-//!   (mutex / atomic increments);
+//! * [`RuntimeStats`] are plain atomic counters (no mutex): stats
+//!   bookkeeping never serializes parallel sweeps, and nothing in the
+//!   execute hot path takes a lock — the only locks in this module guard
+//!   compilation (cold path) and the cache map itself;
+//! * per-executable execution counts are atomic too (executable.rs);
 //! * locks are poison-tolerant: a panicking trial (isolated by the
 //!   engine) never wedges the shared cache for the rest of the sweep.
+//!
+//! What a cache hit hands back is the **compiled register program**
+//! (`xla::PjRtLoadedExecutable` wraps `interp::Compiled` — the lowered
+//! slot/plan form, not the HLO text), so a trainer step pays zero
+//! parse/lower cost after first touch of a rung.
 //!
 //! Execution capability depends on the backend tier the `xla` crate
 //! provides (see rust/vendor/xla): the pure-Rust **interpreter** (the
@@ -29,6 +37,7 @@
 //! binding swapped in via rust/Cargo.toml.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 use anyhow::{Context, Result};
@@ -37,11 +46,24 @@ use super::executable::Executable;
 use super::manifest::{Manifest, ModelInfo};
 use crate::util::timer::Timer;
 
-/// Cumulative runtime statistics.
+/// Cumulative runtime statistics.  Snapshots are built from two
+/// independent relaxed atomic loads, so a reader racing a compile may see
+/// `compiles` already bumped while `compile_seconds` has not caught up —
+/// fine for the progress/report consumers this feeds (the old mutex's
+/// pairwise consistency is deliberately traded for a lock-free hot path).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
     pub compiles: usize,
     pub compile_seconds: f64,
+}
+
+/// Lock-free stats storage: parallel sweep workers (`--jobs N`) bump
+/// these without ever contending on a mutex.  Durations are accumulated
+/// in integer nanoseconds so the add is a single atomic op.
+#[derive(Debug, Default)]
+struct StatsCells {
+    compiles: AtomicUsize,
+    compile_nanos: AtomicU64,
 }
 
 /// Lock, recovering from poisoning: the protected state here (cache map,
@@ -60,7 +82,7 @@ pub struct Runtime {
     /// Per-entry compile guards: racing first accesses to one key
     /// serialize here while other keys proceed.
     compiling: Mutex<HashMap<String, Arc<Mutex<()>>>>,
-    stats: Mutex<RuntimeStats>,
+    stats: StatsCells,
 }
 
 impl Runtime {
@@ -73,7 +95,7 @@ impl Runtime {
             manifest,
             cache: RwLock::new(HashMap::new()),
             compiling: Mutex::new(HashMap::new()),
-            stats: Mutex::new(RuntimeStats::default()),
+            stats: StatsCells::default(),
         })
     }
 
@@ -105,7 +127,10 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        lock_unpoisoned(&self.stats).clone()
+        RuntimeStats {
+            compiles: self.stats.compiles.load(Ordering::Relaxed),
+            compile_seconds: self.stats.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
     }
 
     /// Number of distinct compiled executables currently cached.
@@ -154,11 +179,10 @@ impl Runtime {
                 .client
                 .compile(&comp)
                 .with_context(|| format!("compiling {cache_key}"))?;
-            {
-                let mut s = lock_unpoisoned(&self.stats);
-                s.compiles += 1;
-                s.compile_seconds += t.seconds();
-            }
+            self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .compile_nanos
+                .fetch_add((t.seconds() * 1e9) as u64, Ordering::Relaxed);
             let wrapped = Arc::new(Executable::new(cache_key.clone(), info, exe));
             // Publish to the cache BEFORE the guard entry is dropped, so
             // a waiter's re-check always finds it.
@@ -221,9 +245,33 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     // Compilation requires an artifact tree; cache behaviour — reuse,
     // concurrent compile-once, Send + Sync — is covered by
     // rust/tests/engine.rs, and the numeric path by
     // rust/tests/integration_runtime.rs, both over the committed
     // interpreter fixtures (rust/tests/fixtures/artifacts).
+
+    /// Stats bookkeeping is lock-free: concurrent updates from many
+    /// threads go straight to atomics (no mutex to serialize a parallel
+    /// sweep on) and the snapshot sees every increment.  The execute hot
+    /// path itself takes no lock in this module — only `entry()` misses
+    /// (cold compiles) and the cache map do.
+    #[test]
+    fn stats_updates_are_atomic_and_exact() {
+        let cells = StatsCells::default();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        cells.compiles.fetch_add(1, Ordering::Relaxed);
+                        cells.compile_nanos.fetch_add(500, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(cells.compiles.load(Ordering::Relaxed), 8000);
+        assert_eq!(cells.compile_nanos.load(Ordering::Relaxed), 4_000_000);
+    }
 }

@@ -8,7 +8,13 @@
 //!
 //! `Executable` is immutable after construction apart from its execution
 //! counter (an `AtomicU64`), so it is `Send + Sync` and one compiled
-//! entry is shared by every trial-engine worker concurrently.
+//! entry is shared by every trial-engine worker concurrently.  Under the
+//! interp backend the wrapped executable is the **compiled register
+//! program** (lowered at `Runtime::entry` time, cached by the runtime),
+//! and `execute` borrows the input literals built here — the interpreter
+//! never clones them; its per-call scratch comes from a reusable buffer
+//! arena, so the steady-state allocations of a train step are just these
+//! input vectors and the decomposed outputs.
 
 use anyhow::{bail, Context, Result};
 

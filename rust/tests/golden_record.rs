@@ -13,14 +13,19 @@
 //! git add rust/tests/fixtures/golden_run_record.json
 //! ```
 //!
+//! The committed fixture was minted by the bit-exact Python mirror
+//! (`python -m mirror.golden_run` — see python/mirror/), which reproduces
+//! the whole pipeline operation for operation: xoshiro256++ streams,
+//! synthetic data, micro-plans, the compiled interpreter's deterministic
+//! fmath kernels, SGD, DiveBatch decisions, cluster timing, and the
+//! canonical JSON writer.  The interpreter's compiled path deliberately
+//! avoids platform libm (interp/fmath.rs), so this byte pin holds across
+//! machines and libc versions.
+//!
 //! Bootstrap: if the fixture file is absent, the test writes it from
 //! the current run and passes, with a loud note (a GitHub `::warning::`
-//! annotation under CI) demanding the file be committed — the
-//! authoring environment has no Rust toolchain, so the first machine to
-//! run the suite materializes the baseline for review.  Until it is
-//! committed, the cross-checkout pin is inactive and only the
-//! in-process determinism assertion below gates; once committed, any
-//! byte of drift fails.
+//! annotation under CI) demanding the file be committed.  With the
+//! fixture committed, any byte of drift fails.
 
 mod common;
 

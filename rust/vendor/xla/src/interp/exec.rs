@@ -1,0 +1,691 @@
+//! The execute phase: run a compiled [`Program`] over a reusable buffer
+//! arena.
+//!
+//! Per call: pop an [`Arena`] from the program's pool (or build one, once
+//! per concurrent caller), run the steps — each a typed kernel over slot
+//! slices — and hand the arena back.  Slots were sized to their largest
+//! occupant at compile time, so a steady-state training step performs
+//! **zero** buffer allocation; the only per-call allocations are the
+//! output `Literal`s themselves.  Argument `Literal`s are borrowed — their
+//! data feeds kernels directly, never cloned.
+//!
+//! The pool is behind a `Mutex`, taken exactly twice per call (pop/push),
+//! never inside the step loop; concurrent trial-engine workers each end
+//! up with their own arena.  The pool is capped so a burst of workers
+//! cannot pin unbounded memory.
+
+use std::sync::atomic::Ordering;
+
+use super::kernels;
+use super::parse::{err, DType};
+use super::program::{Program, Ref, SlotSpec, Step};
+use crate::{Data, Literal, Result};
+
+/// Max arenas kept for reuse (beyond this, returned arenas are dropped).
+const POOL_CAP: usize = 16;
+
+/// One execution scratch space: a buffer per compiled slot.
+#[derive(Debug)]
+pub(crate) struct Arena {
+    bufs: Vec<ArenaBuf>,
+}
+
+#[derive(Debug)]
+enum ArenaBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Arena {
+    fn for_slots(slots: &[SlotSpec]) -> Arena {
+        Arena {
+            bufs: slots
+                .iter()
+                .map(|s| match s.dtype {
+                    DType::F32 => ArenaBuf::F32(vec![0.0; s.max_elems]),
+                    DType::S32 => ArenaBuf::I32(vec![0; s.max_elems]),
+                    DType::Pred => ArenaBuf::Pred(vec![false; s.max_elems]),
+                })
+                .collect(),
+        }
+    }
+}
+
+fn internal(msg: &str) -> crate::Error {
+    err(format!("interp internal error: {msg} (compile-time typing should prevent this)"))
+}
+
+impl Program {
+    /// Validate `args` against the entry parameters, then run the steps.
+    pub(crate) fn execute(&self, args: &[&Literal]) -> Result<Literal> {
+        if args.len() != self.params.len() {
+            return Err(err(format!(
+                "entry {:?} takes {} parameters, got {} arguments",
+                self.entry_name,
+                self.params.len(),
+                args.len()
+            )));
+        }
+        for (i, (lit, spec)) in args.iter().zip(&self.params).enumerate() {
+            let (data, dims) = lit.dense_parts().ok_or_else(|| {
+                err("tuple arguments are not supported".to_string())
+            })?;
+            let got_dt = match data {
+                Data::F32(_) => DType::F32,
+                Data::I32(_) => DType::S32,
+            };
+            let dims_u: Vec<usize> = dims
+                .iter()
+                .map(|&d| {
+                    if d < 0 {
+                        Err(err(format!("negative dimension {d} in argument")))
+                    } else {
+                        Ok(d as usize)
+                    }
+                })
+                .collect::<Result<_>>()?;
+            if dims_u != spec.dims || got_dt != spec.dtype {
+                let want_dims: Vec<String> = spec.dims.iter().map(|d| d.to_string()).collect();
+                let got_dims: Vec<String> = dims_u.iter().map(|d| d.to_string()).collect();
+                return Err(err(format!(
+                    "argument {i} ({}): expected {}[{}], got {got_dt}[{}]",
+                    spec.name,
+                    spec.dtype,
+                    want_dims.join(","),
+                    got_dims.join(",")
+                )));
+            }
+            let want_elems: usize = spec.dims.iter().product();
+            let got_elems = match data {
+                Data::F32(v) => v.len(),
+                Data::I32(v) => v.len(),
+            };
+            if got_elems != want_elems {
+                return Err(err(format!(
+                    "argument has {got_elems} elements but dims {dims_u:?}"
+                )));
+            }
+        }
+
+        let mut arena = {
+            let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+            pool.pop()
+        };
+        let arena = match arena.take() {
+            Some(a) => a,
+            None => {
+                self.arenas_created.fetch_add(1, Ordering::Relaxed);
+                Arena::for_slots(&self.slots)
+            }
+        };
+        let (result, arena) = self.run(args, arena);
+        {
+            let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+            if pool.len() < POOL_CAP {
+                pool.push(arena);
+            }
+        }
+        result
+    }
+
+    /// (arenas created, buffers grown) — the bench's allocs-proxy.
+    pub(crate) fn arena_stats(&self) -> (u64, u64) {
+        (
+            self.arenas_created.load(Ordering::Relaxed),
+            self.buffers_grown.load(Ordering::Relaxed),
+        )
+    }
+
+    fn run(&self, args: &[&Literal], mut arena: Arena) -> (Result<Literal>, Arena) {
+        // Grow any undersized buffer (only possible if an arena outlived a
+        // recompile — counted as the allocs-proxy's "grow" channel).
+        for (buf, spec) in arena.bufs.iter_mut().zip(&self.slots) {
+            let len = match buf {
+                ArenaBuf::F32(v) => v.len(),
+                ArenaBuf::I32(v) => v.len(),
+                ArenaBuf::Pred(v) => v.len(),
+            };
+            if len < spec.max_elems {
+                self.buffers_grown.fetch_add(1, Ordering::Relaxed);
+                match buf {
+                    ArenaBuf::F32(v) => v.resize(spec.max_elems, 0.0),
+                    ArenaBuf::I32(v) => v.resize(spec.max_elems, 0),
+                    ArenaBuf::Pred(v) => v.resize(spec.max_elems, false),
+                }
+            }
+        }
+        for step in &self.steps {
+            if let Err(e) = self.run_step(step, args, &mut arena) {
+                return (Err(e), arena);
+            }
+        }
+        let out = self.collect_outputs(args, &arena);
+        (out, arena)
+    }
+
+    // ---------------------------------------------------- source views
+
+    fn f32_src<'a>(&'a self, r: Ref, args: &'a [&Literal], arena: &'a Arena) -> Result<&'a [f32]> {
+        match r {
+            Ref::Slot(s) => match &arena.bufs[s as usize] {
+                ArenaBuf::F32(v) => Ok(v),
+                _ => Err(internal("slot dtype mismatch (f32)")),
+            },
+            Ref::Param(p) => match args[p as usize].dense_parts() {
+                Some((Data::F32(v), _)) => Ok(v),
+                _ => Err(internal("param dtype mismatch (f32)")),
+            },
+            Ref::Const(c) => match &self.consts[c as usize] {
+                super::program::ConstBuf::F32(v) => Ok(v),
+                _ => Err(internal("const dtype mismatch (f32)")),
+            },
+        }
+    }
+
+    fn i32_src<'a>(&'a self, r: Ref, args: &'a [&Literal], arena: &'a Arena) -> Result<&'a [i32]> {
+        match r {
+            Ref::Slot(s) => match &arena.bufs[s as usize] {
+                ArenaBuf::I32(v) => Ok(v),
+                _ => Err(internal("slot dtype mismatch (i32)")),
+            },
+            Ref::Param(p) => match args[p as usize].dense_parts() {
+                Some((Data::I32(v), _)) => Ok(v),
+                _ => Err(internal("param dtype mismatch (i32)")),
+            },
+            Ref::Const(c) => match &self.consts[c as usize] {
+                super::program::ConstBuf::I32(v) => Ok(v),
+                _ => Err(internal("const dtype mismatch (i32)")),
+            },
+        }
+    }
+
+    fn pred_src<'a>(
+        &'a self,
+        r: Ref,
+        _args: &'a [&Literal],
+        arena: &'a Arena,
+    ) -> Result<&'a [bool]> {
+        match r {
+            Ref::Slot(s) => match &arena.bufs[s as usize] {
+                ArenaBuf::Pred(v) => Ok(v),
+                _ => Err(internal("slot dtype mismatch (pred)")),
+            },
+            // Literal arguments carry no pred data, so a pred param cannot
+            // pass argument validation.
+            Ref::Param(_) => Err(internal("pred parameters are unsupported")),
+            Ref::Const(c) => match &self.consts[c as usize] {
+                super::program::ConstBuf::Pred(v) => Ok(v),
+                _ => Err(internal("const dtype mismatch (pred)")),
+            },
+        }
+    }
+
+    // ------------------------------------------------------- out buffers
+
+    fn take_f32(&self, arena: &mut Arena, slot: u32) -> Result<Vec<f32>> {
+        match std::mem::replace(&mut arena.bufs[slot as usize], ArenaBuf::F32(Vec::new())) {
+            ArenaBuf::F32(v) => Ok(v),
+            other => {
+                arena.bufs[slot as usize] = other;
+                Err(internal("out slot dtype mismatch (f32)"))
+            }
+        }
+    }
+
+    fn take_i32(&self, arena: &mut Arena, slot: u32) -> Result<Vec<i32>> {
+        match std::mem::replace(&mut arena.bufs[slot as usize], ArenaBuf::I32(Vec::new())) {
+            ArenaBuf::I32(v) => Ok(v),
+            other => {
+                arena.bufs[slot as usize] = other;
+                Err(internal("out slot dtype mismatch (i32)"))
+            }
+        }
+    }
+
+    fn take_pred(&self, arena: &mut Arena, slot: u32) -> Result<Vec<bool>> {
+        match std::mem::replace(&mut arena.bufs[slot as usize], ArenaBuf::Pred(Vec::new())) {
+            ArenaBuf::Pred(v) => Ok(v),
+            other => {
+                arena.bufs[slot as usize] = other;
+                Err(internal("out slot dtype mismatch (pred)"))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ steps
+
+    fn run_step(&self, step: &Step, args: &[&Literal], arena: &mut Arena) -> Result<()> {
+        match step {
+            Step::Fused(f) => {
+                let mut out = self.take_f32(arena, f.out)?;
+                const EMPTY: &[f32] = &[];
+                let mut ins: [&[f32]; super::program::MAX_FUSED_INPUTS] =
+                    [EMPTY; super::program::MAX_FUSED_INPUTS];
+                let mut ok = Ok(());
+                for (slot, &r) in ins.iter_mut().zip(&f.inputs) {
+                    match self.f32_src(r, args, arena) {
+                        Ok(v) => *slot = v,
+                        Err(e) => {
+                            ok = Err(e);
+                            break;
+                        }
+                    }
+                }
+                if ok.is_ok() {
+                    kernels::run_fused(f, &ins[..f.inputs.len()], &mut out[..f.n]);
+                }
+                arena.bufs[f.out as usize] = ArenaBuf::F32(out);
+                ok
+            }
+            Step::IntEw { op, a, b, out, n } => {
+                let mut o = self.take_i32(arena, *out)?;
+                let res = (|| {
+                    let av = self.i32_src(*a, args, arena)?;
+                    match b {
+                        None => kernels::int_unary(*op, &av[..*n], &mut o[..*n]),
+                        Some(b) => {
+                            let bv = self.i32_src(*b, args, arena)?;
+                            kernels::int_binary(*op, &av[..*n], &bv[..*n], &mut o[..*n]);
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                res
+            }
+            Step::PredEw { op, a, b, out, n } => {
+                let mut o = self.take_pred(arena, *out)?;
+                let res = (|| {
+                    let av = self.pred_src(*a, args, arena)?;
+                    match b {
+                        None => kernels::pred_unary(*op, &av[..*n], &mut o[..*n]),
+                        Some(b) => {
+                            let bv = self.pred_src(*b, args, arena)?;
+                            kernels::pred_binary(*op, &av[..*n], &bv[..*n], &mut o[..*n]);
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                res
+            }
+            Step::Compare {
+                dir,
+                dtype,
+                a,
+                b,
+                out,
+                n,
+            } => {
+                let mut o = self.take_pred(arena, *out)?;
+                let res = (|| {
+                    match dtype {
+                        DType::F32 => {
+                            let av = self.f32_src(*a, args, arena)?;
+                            let bv = self.f32_src(*b, args, arena)?;
+                            kernels::compare_f32(*dir, &av[..*n], &bv[..*n], &mut o[..*n]);
+                        }
+                        DType::S32 => {
+                            let av = self.i32_src(*a, args, arena)?;
+                            let bv = self.i32_src(*b, args, arena)?;
+                            kernels::compare_i32(*dir, &av[..*n], &bv[..*n], &mut o[..*n]);
+                        }
+                        DType::Pred => {
+                            let av = self.pred_src(*a, args, arena)?;
+                            let bv = self.pred_src(*b, args, arena)?;
+                            kernels::compare_pred(*dir, &av[..*n], &bv[..*n], &mut o[..*n]);
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                res
+            }
+            Step::Select {
+                dtype,
+                p,
+                t,
+                f,
+                out,
+                n,
+                scalar_pred,
+            } => {
+                let pn = if *scalar_pred { 1 } else { *n };
+                match dtype {
+                    DType::F32 => {
+                        let mut o = self.take_f32(arena, *out)?;
+                        let res = (|| {
+                            let pv = self.pred_src(*p, args, arena)?;
+                            let tv = self.f32_src(*t, args, arena)?;
+                            let fv = self.f32_src(*f, args, arena)?;
+                            kernels::select(
+                                &pv[..pn],
+                                *scalar_pred,
+                                &tv[..*n],
+                                &fv[..*n],
+                                &mut o[..*n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                        res
+                    }
+                    DType::S32 => {
+                        let mut o = self.take_i32(arena, *out)?;
+                        let res = (|| {
+                            let pv = self.pred_src(*p, args, arena)?;
+                            let tv = self.i32_src(*t, args, arena)?;
+                            let fv = self.i32_src(*f, args, arena)?;
+                            kernels::select(
+                                &pv[..pn],
+                                *scalar_pred,
+                                &tv[..*n],
+                                &fv[..*n],
+                                &mut o[..*n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                        res
+                    }
+                    DType::Pred => {
+                        let mut o = self.take_pred(arena, *out)?;
+                        let res = (|| {
+                            let pv = self.pred_src(*p, args, arena)?;
+                            let tv = self.pred_src(*t, args, arena)?;
+                            let fv = self.pred_src(*f, args, arena)?;
+                            kernels::select(
+                                &pv[..pn],
+                                *scalar_pred,
+                                &tv[..*n],
+                                &fv[..*n],
+                                &mut o[..*n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                        res
+                    }
+                }
+            }
+            Step::Convert {
+                from,
+                to,
+                a,
+                out,
+                n,
+            } => self.run_convert(*from, *to, *a, *out, *n, args, arena),
+            Step::Gather {
+                dtype,
+                src,
+                map,
+                out,
+            } => match dtype {
+                DType::F32 => {
+                    let mut o = self.take_f32(arena, *out)?;
+                    let res = self.f32_src(*src, args, arena).map(|s| {
+                        kernels::gather(s, map, &mut o[..map.len()]);
+                    });
+                    arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                    res
+                }
+                DType::S32 => {
+                    let mut o = self.take_i32(arena, *out)?;
+                    let res = self.i32_src(*src, args, arena).map(|s| {
+                        kernels::gather(s, map, &mut o[..map.len()]);
+                    });
+                    arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                    res
+                }
+                DType::Pred => {
+                    let mut o = self.take_pred(arena, *out)?;
+                    let res = self.pred_src(*src, args, arena).map(|s| {
+                        kernels::gather(s, map, &mut o[..map.len()]);
+                    });
+                    arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                    res
+                }
+            },
+            Step::Pad {
+                dtype,
+                src,
+                fill,
+                map,
+                out,
+            } => match dtype {
+                DType::F32 => {
+                    let mut o = self.take_f32(arena, *out)?;
+                    let res = (|| {
+                        let s = self.f32_src(*src, args, arena)?;
+                        let fv = self.f32_src(*fill, args, arena)?[0];
+                        kernels::pad(s, fv, map, &mut o[..map.len()]);
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                    res
+                }
+                DType::S32 => {
+                    let mut o = self.take_i32(arena, *out)?;
+                    let res = (|| {
+                        let s = self.i32_src(*src, args, arena)?;
+                        let fv = self.i32_src(*fill, args, arena)?[0];
+                        kernels::pad(s, fv, map, &mut o[..map.len()]);
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                    res
+                }
+                DType::Pred => {
+                    let mut o = self.take_pred(arena, *out)?;
+                    let res = (|| {
+                        let s = self.pred_src(*src, args, arena)?;
+                        let fv = self.pred_src(*fill, args, arena)?[0];
+                        kernels::pad(s, fv, map, &mut o[..map.len()]);
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                    res
+                }
+            },
+            Step::Concat {
+                dtype,
+                parts,
+                out,
+                n,
+            } => match dtype {
+                DType::F32 => {
+                    let mut o = self.take_f32(arena, *out)?;
+                    let res = (|| {
+                        for (r, place) in parts {
+                            let s = self.f32_src(*r, args, arena)?;
+                            kernels::scatter_part(&s[..place.len()], place, &mut o[..*n]);
+                        }
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                    res
+                }
+                DType::S32 => {
+                    let mut o = self.take_i32(arena, *out)?;
+                    let res = (|| {
+                        for (r, place) in parts {
+                            let s = self.i32_src(*r, args, arena)?;
+                            kernels::scatter_part(&s[..place.len()], place, &mut o[..*n]);
+                        }
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                    res
+                }
+                DType::Pred => {
+                    let mut o = self.take_pred(arena, *out)?;
+                    let res = (|| {
+                        for (r, place) in parts {
+                            let s = self.pred_src(*r, args, arena)?;
+                            kernels::scatter_part(&s[..place.len()], place, &mut o[..*n]);
+                        }
+                        Ok(())
+                    })();
+                    arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                    res
+                }
+            },
+            Step::Dot(p) => {
+                let mut o = self.take_f32(arena, p.out)?;
+                let res = (|| {
+                    let l = self.f32_src(p.lhs, args, arena)?;
+                    let r = self.f32_src(p.rhs, args, arena)?;
+                    kernels::dot(
+                        l,
+                        r,
+                        &p.l_base,
+                        &p.r_base,
+                        p.l_kstride,
+                        p.r_kstride,
+                        p.k,
+                        &mut o[..p.m * p.n],
+                    );
+                    Ok(())
+                })();
+                arena.bufs[p.out as usize] = ArenaBuf::F32(o);
+                res
+            }
+            Step::Reduce(p) => {
+                let mut o = self.take_f32(arena, p.out)?;
+                let res = (|| {
+                    let data = self.f32_src(p.data, args, arena)?;
+                    let init = self.f32_src(p.init, args, arena)?[0];
+                    kernels::reduce(
+                        &data[..p.map.len()],
+                        init,
+                        &p.map,
+                        &p.region,
+                        &mut o[..p.out_elems],
+                    );
+                    Ok(())
+                })();
+                arena.bufs[p.out as usize] = ArenaBuf::F32(o);
+                res
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_convert(
+        &self,
+        from: DType,
+        to: DType,
+        a: Ref,
+        out: u32,
+        n: usize,
+        args: &[&Literal],
+        arena: &mut Arena,
+    ) -> Result<()> {
+        match to {
+            DType::F32 => {
+                let mut o = self.take_f32(arena, out)?;
+                let res = (|| {
+                    match from {
+                        DType::F32 => {
+                            let v = self.f32_src(a, args, arena)?;
+                            o[..n].copy_from_slice(&v[..n]);
+                        }
+                        DType::S32 => {
+                            let v = self.i32_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = x as f32;
+                            }
+                        }
+                        DType::Pred => {
+                            let v = self.pred_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = if x { 1.0 } else { 0.0 };
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[out as usize] = ArenaBuf::F32(o);
+                res
+            }
+            DType::S32 => {
+                let mut o = self.take_i32(arena, out)?;
+                let res = (|| {
+                    match from {
+                        DType::S32 => {
+                            let v = self.i32_src(a, args, arena)?;
+                            o[..n].copy_from_slice(&v[..n]);
+                        }
+                        // XLA convert f32->s32 rounds toward zero.
+                        DType::F32 => {
+                            let v = self.f32_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = x as i32;
+                            }
+                        }
+                        DType::Pred => {
+                            let v = self.pred_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = i32::from(x);
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[out as usize] = ArenaBuf::I32(o);
+                res
+            }
+            DType::Pred => {
+                let mut o = self.take_pred(arena, out)?;
+                let res = (|| {
+                    match from {
+                        DType::Pred => {
+                            let v = self.pred_src(a, args, arena)?;
+                            o[..n].copy_from_slice(&v[..n]);
+                        }
+                        DType::F32 => {
+                            let v = self.f32_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = x != 0.0;
+                            }
+                        }
+                        DType::S32 => {
+                            let v = self.i32_src(a, args, arena)?;
+                            for (d, &x) in o[..n].iter_mut().zip(v) {
+                                *d = x != 0;
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                arena.bufs[out as usize] = ArenaBuf::Pred(o);
+                res
+            }
+        }
+    }
+
+    fn collect_outputs(&self, args: &[&Literal], arena: &Arena) -> Result<Literal> {
+        let mut parts = Vec::with_capacity(self.outputs.len());
+        for o in &self.outputs {
+            let n: i64 = o.dims.iter().product();
+            let n = n as usize;
+            let data = match o.dtype {
+                DType::F32 => Data::F32(self.f32_src(o.r, args, arena)?[..n].to_vec()),
+                DType::S32 => Data::I32(self.i32_src(o.r, args, arena)?[..n].to_vec()),
+                DType::Pred => Data::I32(
+                    self.pred_src(o.r, args, arena)?[..n]
+                        .iter()
+                        .map(|&b| i32::from(b))
+                        .collect(),
+                ),
+            };
+            parts.push(Literal::from_data(data, o.dims.clone()));
+        }
+        if self.tuple_root {
+            Ok(Literal::tuple(parts))
+        } else {
+            Ok(parts.into_iter().next().expect("at least one output"))
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! Typed execution kernels for the compiled register program.
+//!
+//! Every kernel operates on plain slices with all shape logic precomputed
+//! by [`super::program`]: no `f64` boxing, no per-element coordinate
+//! decoding, no allocation.  Elementwise f32 work runs through the fused
+//! block loop ([`run_fused`]) over stack scratch registers; data movement
+//! is a single gather pass over a compile-time index map; `dot` walks
+//! contiguous slices (k-inner when the rhs contraction stride is 1,
+//! k-outer axpy otherwise — both accumulate each output element in
+//! ascending-k order, so the two loop shapes are bit-identical); `reduce`
+//! folds flat-ascending through a compiled region kernel.
+//!
+//! Numeric order is part of the contract: the Python mirror
+//! (python/mirror/interp.py) reproduces these loops bit for bit to
+//! generate the committed golden run record.  Change an iteration order
+//! here and the mirror + golden must follow.
+
+use super::fmath;
+use super::program::{
+    CmpDir, EwOp, FusedLoop, IntOp, Lane, PredOp, RegionFn, ScalarProgram, ScalarSrc,
+};
+
+/// Block width of the fused elementwise loop: big enough to amortize the
+/// per-op dispatch, small enough that the whole scratch file stays in L1.
+pub(crate) const BLOCK: usize = 64;
+
+#[inline]
+fn ew1(op: EwOp, x: f32) -> f32 {
+    match op {
+        EwOp::Abs => x.abs(),
+        EwOp::Neg => -x,
+        EwOp::Exp => fmath::exp(x),
+        EwOp::ExpM1 => fmath::exp_m1(x),
+        EwOp::Log => fmath::ln(x),
+        EwOp::Log1p => fmath::ln_1p(x),
+        EwOp::Logistic => fmath::logistic(x),
+        EwOp::Tanh => fmath::tanh(x),
+        EwOp::Sqrt => fmath::sqrt(x),
+        EwOp::Rsqrt => fmath::rsqrt(x),
+        EwOp::Sign => {
+            if x == 0.0 {
+                0.0
+            } else {
+                x.signum()
+            }
+        }
+        EwOp::Floor => x.floor(),
+        EwOp::Ceil => x.ceil(),
+        EwOp::Cos => fmath::cos(x),
+        EwOp::Sin => fmath::sin(x),
+        EwOp::Copy => x,
+        _ => unreachable!("binary EwOp applied as unary"),
+    }
+}
+
+#[inline]
+fn ew2(op: EwOp, a: f32, b: f32) -> f32 {
+    match op {
+        EwOp::Add => a + b,
+        EwOp::Sub => a - b,
+        EwOp::Mul => a * b,
+        EwOp::Div => a / b,
+        EwOp::Max => a.max(b),
+        EwOp::Min => a.min(b),
+        EwOp::Pow => fmath::pow(a, b),
+        EwOp::Rem => a % b,
+        _ => unreachable!("unary EwOp applied as binary"),
+    }
+}
+
+/// Run one fused f32 group: block-at-a-time over stack scratch registers,
+/// each constituent op a monomorphized tight loop over the block.
+pub(crate) fn run_fused(f: &FusedLoop, inputs: &[&[f32]], out: &mut [f32]) {
+    debug_assert_eq!(inputs.len(), f.inputs.len());
+    let mut regs = [[0f32; BLOCK]; super::program::MAX_FUSED_OPS];
+    let last = f.ops.len() - 1;
+    let mut base = 0usize;
+    while base < f.n {
+        let len = BLOCK.min(f.n - base);
+        for (ri, op) in f.ops.iter().enumerate() {
+            // Split so the destination register can be written while the
+            // earlier registers (all lower-indexed, by SSA order) are read.
+            let (lo, hi) = regs.split_at_mut(ri);
+            let dst = &mut hi[0][..len];
+            match (op.a, op.b) {
+                (a, None) => {
+                    let av = lane(a, inputs, lo, base, len);
+                    unary_block(op.op, av, dst);
+                }
+                (a, Some(b)) => {
+                    let av = lane(a, inputs, lo, base, len);
+                    let bv = lane(b, inputs, lo, base, len);
+                    binary_block(op.op, av, bv, dst);
+                }
+            }
+        }
+        out[base..base + len].copy_from_slice(&regs[last][..len]);
+        base += len;
+    }
+}
+
+#[inline]
+fn lane<'a>(
+    l: Lane,
+    inputs: &[&'a [f32]],
+    regs: &'a [[f32; BLOCK]],
+    base: usize,
+    len: usize,
+) -> &'a [f32] {
+    match l {
+        Lane::In(k) => &inputs[k as usize][base..base + len],
+        Lane::Reg(r) => &regs[r as usize][..len],
+    }
+}
+
+/// Monomorphized per-op unary loops (the match is hoisted out of the
+/// element loop; each arm compiles to a straight-line vectorizable pass).
+fn unary_block(op: EwOp, a: &[f32], dst: &mut [f32]) {
+    macro_rules! lp {
+        ($f:expr) => {
+            for (d, &x) in dst.iter_mut().zip(a) {
+                *d = $f(x);
+            }
+        };
+    }
+    match op {
+        EwOp::Abs => lp!(f32::abs),
+        EwOp::Neg => lp!(|x: f32| -x),
+        EwOp::Exp => lp!(fmath::exp),
+        EwOp::ExpM1 => lp!(fmath::exp_m1),
+        EwOp::Log => lp!(fmath::ln),
+        EwOp::Log1p => lp!(fmath::ln_1p),
+        EwOp::Logistic => lp!(fmath::logistic),
+        EwOp::Tanh => lp!(fmath::tanh),
+        EwOp::Sqrt => lp!(fmath::sqrt),
+        EwOp::Rsqrt => lp!(fmath::rsqrt),
+        EwOp::Floor => lp!(f32::floor),
+        EwOp::Ceil => lp!(f32::ceil),
+        EwOp::Cos => lp!(fmath::cos),
+        EwOp::Sin => lp!(fmath::sin),
+        EwOp::Copy => dst.copy_from_slice(a),
+        other => lp!(|x| ew1(other, x)),
+    }
+}
+
+/// Monomorphized per-op binary loops.
+fn binary_block(op: EwOp, a: &[f32], b: &[f32], dst: &mut [f32]) {
+    macro_rules! lp {
+        ($f:expr) => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = $f(x, y);
+            }
+        };
+    }
+    match op {
+        EwOp::Add => lp!(|x, y| x + y),
+        EwOp::Sub => lp!(|x, y| x - y),
+        EwOp::Mul => lp!(|x, y| x * y),
+        EwOp::Div => lp!(|x, y| x / y),
+        EwOp::Max => lp!(f32::max),
+        EwOp::Min => lp!(f32::min),
+        other => lp!(|x, y| ew2(other, x, y)),
+    }
+}
+
+// -------------------------------------------------------- other dtypes
+
+pub(crate) fn int_unary(op: IntOp, a: &[i32], dst: &mut [i32]) {
+    let f: fn(i32) -> i32 = match op {
+        IntOp::Abs => i32::wrapping_abs,
+        IntOp::Neg => i32::wrapping_neg,
+        IntOp::Sign => i32::signum,
+        IntOp::Copy => |x| x,
+        _ => unreachable!("binary IntOp applied as unary"),
+    };
+    for (d, &x) in dst.iter_mut().zip(a) {
+        *d = f(x);
+    }
+}
+
+pub(crate) fn int_binary(op: IntOp, a: &[i32], b: &[i32], dst: &mut [i32]) {
+    let f: fn(i32, i32) -> i32 = match op {
+        IntOp::Add => i32::wrapping_add,
+        IntOp::Sub => i32::wrapping_sub,
+        IntOp::Mul => i32::wrapping_mul,
+        IntOp::Max => i32::max,
+        IntOp::Min => i32::min,
+        IntOp::And => |x, y| x & y,
+        IntOp::Or => |x, y| x | y,
+        IntOp::Xor => |x, y| x ^ y,
+        _ => unreachable!("unary IntOp applied as binary"),
+    };
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = f(x, y);
+    }
+}
+
+pub(crate) fn pred_unary(op: PredOp, a: &[bool], dst: &mut [bool]) {
+    match op {
+        PredOp::Not => {
+            for (d, &x) in dst.iter_mut().zip(a) {
+                *d = !x;
+            }
+        }
+        PredOp::Copy => dst.copy_from_slice(a),
+        _ => unreachable!("binary PredOp applied as unary"),
+    }
+}
+
+pub(crate) fn pred_binary(op: PredOp, a: &[bool], b: &[bool], dst: &mut [bool]) {
+    let f: fn(bool, bool) -> bool = match op {
+        PredOp::And => |x, y| x && y,
+        PredOp::Or => |x, y| x || y,
+        PredOp::Xor => |x, y| x ^ y,
+        _ => unreachable!("unary PredOp applied as binary"),
+    };
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = f(x, y);
+    }
+}
+
+/// Compare loops.  `ord` is `None` only for NaN: all directions false
+/// except NE (same semantics as the reference evaluator).
+pub(crate) fn compare_f32(dir: CmpDir, a: &[f32], b: &[f32], dst: &mut [bool]) {
+    macro_rules! lp {
+        ($f:expr) => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = $f(x, y);
+            }
+        };
+    }
+    match dir {
+        CmpDir::Eq => lp!(|x, y| x == y),
+        CmpDir::Ne => lp!(|x, y| x != y),
+        CmpDir::Lt => lp!(|x: f32, y: f32| x < y),
+        CmpDir::Gt => lp!(|x: f32, y: f32| x > y),
+        CmpDir::Le => lp!(|x: f32, y: f32| x <= y),
+        CmpDir::Ge => lp!(|x: f32, y: f32| x >= y),
+    }
+}
+
+pub(crate) fn compare_i32(dir: CmpDir, a: &[i32], b: &[i32], dst: &mut [bool]) {
+    let f: fn(i32, i32) -> bool = match dir {
+        CmpDir::Eq => |x, y| x == y,
+        CmpDir::Ne => |x, y| x != y,
+        CmpDir::Lt => |x, y| x < y,
+        CmpDir::Gt => |x, y| x > y,
+        CmpDir::Le => |x, y| x <= y,
+        CmpDir::Ge => |x, y| x >= y,
+    };
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = f(x, y);
+    }
+}
+
+pub(crate) fn compare_pred(dir: CmpDir, a: &[bool], b: &[bool], dst: &mut [bool]) {
+    let f: fn(bool, bool) -> bool = match dir {
+        CmpDir::Eq => |x, y| x == y,
+        CmpDir::Ne => |x, y| x != y,
+        CmpDir::Lt => |x, y| !x & y,
+        CmpDir::Gt => |x, y| x & !y,
+        CmpDir::Le => |x, y| !x | y,
+        CmpDir::Ge => |x, y| x | !y,
+    };
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = f(x, y);
+    }
+}
+
+/// `out[i] = if p { t } else { f }`, with an optional scalar predicate.
+pub(crate) fn select<T: Copy>(
+    p: &[bool],
+    scalar_pred: bool,
+    t: &[T],
+    f: &[T],
+    dst: &mut [T],
+) {
+    if scalar_pred {
+        dst.copy_from_slice(if p[0] { t } else { f });
+    } else {
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = if p[i] { t[i] } else { f[i] };
+        }
+    }
+}
+
+/// `out[i] = src[map[i]]` — broadcast/transpose/slice data movement.
+pub(crate) fn gather<T: Copy>(src: &[T], map: &[u32], dst: &mut [T]) {
+    for (d, &ix) in dst.iter_mut().zip(map) {
+        *d = src[ix as usize];
+    }
+}
+
+/// Pad: map entries of `u32::MAX` take the fill value.
+pub(crate) fn pad<T: Copy>(src: &[T], fill: T, map: &[u32], dst: &mut [T]) {
+    for (d, &ix) in dst.iter_mut().zip(map) {
+        *d = if ix == u32::MAX { fill } else { src[ix as usize] };
+    }
+}
+
+/// Concatenate one part into its precomputed output positions.
+pub(crate) fn scatter_part<T: Copy>(src: &[T], place: &[u32], dst: &mut [T]) {
+    for (&v, &ix) in src.iter().zip(place) {
+        dst[ix as usize] = v;
+    }
+}
+
+/// Single-contraction matmul over the collapsed (M, K) x (K, N) view.
+///
+/// Both loop shapes accumulate each output element in ascending-k order
+/// (mul-then-add, no FMA contraction), so they are bit-identical to each
+/// other and to the reference evaluator's per-element loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot(
+    l: &[f32],
+    r: &[f32],
+    l_base: &[u32],
+    r_base: &[u32],
+    l_kstride: usize,
+    r_kstride: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let m = l_base.len();
+    let n = r_base.len();
+    debug_assert_eq!(out.len(), m * n);
+    if r_kstride == 1 {
+        // rhs contraction is contiguous: k-inner dot over slices.
+        for (i, &lb) in l_base.iter().enumerate() {
+            let lb = lb as usize;
+            let row = &mut out[i * n..(i + 1) * n];
+            if l_kstride == 1 {
+                let ls = &l[lb..lb + k];
+                for (o, &rb) in row.iter_mut().zip(r_base) {
+                    let rs = &r[rb as usize..rb as usize + k];
+                    let mut acc = 0.0f32;
+                    for (&a, &b) in ls.iter().zip(rs) {
+                        acc += a * b;
+                    }
+                    *o = acc;
+                }
+            } else {
+                for (o, &rb) in row.iter_mut().zip(r_base) {
+                    let rb = rb as usize;
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += l[lb + kk * l_kstride] * r[rb + kk];
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    } else {
+        // rhs contraction is strided: k-outer axpy keeps the inner loop
+        // over the output row (ascending-k per element, same bits).
+        for (i, &lb) in l_base.iter().enumerate() {
+            let lb = lb as usize;
+            let row = &mut out[i * n..(i + 1) * n];
+            row.fill(0.0);
+            for kk in 0..k {
+                let a = l[lb + kk * l_kstride];
+                let roff = kk * r_kstride;
+                for (o, &rb) in row.iter_mut().zip(r_base) {
+                    *o += a * r[rb as usize + roff];
+                }
+            }
+        }
+    }
+}
+
+/// Apply a compiled scalar region program to `(acc, x)`.  The register
+/// file is a small stack array (the lowering caps regions at
+/// [`super::program::MAX_REGION_OPS`] ops).
+#[inline]
+pub(crate) fn region_apply(p: &ScalarProgram, acc: f32, x: f32) -> f32 {
+    let mut regs = [0f32; super::program::MAX_REGION_OPS];
+    let read = |s: ScalarSrc, regs: &[f32]| -> f32 {
+        match s {
+            ScalarSrc::Acc => acc,
+            ScalarSrc::X => x,
+            ScalarSrc::Const(c) => p.consts[c as usize],
+            ScalarSrc::Reg(r) => regs[r as usize],
+        }
+    };
+    for (ri, op) in p.ops.iter().enumerate() {
+        let v = match op.b {
+            None => ew1(op.op, read(op.a, &regs)),
+            Some(b) => ew2(op.op, read(op.a, &regs), read(b, &regs)),
+        };
+        regs[ri] = v;
+    }
+    read(p.result, &regs)
+}
+
+/// Flat-ascending reduce through the region kernel (bit-identical order
+/// to the reference evaluator).
+pub(crate) fn reduce(data: &[f32], init: f32, map: &[u32], region: &RegionFn, out: &mut [f32]) {
+    out.fill(init);
+    match region {
+        RegionFn::Add => {
+            for (&x, &of) in data.iter().zip(map) {
+                out[of as usize] += x;
+            }
+        }
+        RegionFn::Mul => {
+            for (&x, &of) in data.iter().zip(map) {
+                out[of as usize] *= x;
+            }
+        }
+        RegionFn::Max => {
+            for (&x, &of) in data.iter().zip(map) {
+                let o = &mut out[of as usize];
+                *o = o.max(x);
+            }
+        }
+        RegionFn::Min => {
+            for (&x, &of) in data.iter().zip(map) {
+                let o = &mut out[of as usize];
+                *o = o.min(x);
+            }
+        }
+        RegionFn::Program(p) => {
+            for (&x, &of) in data.iter().zip(map) {
+                let o = &mut out[of as usize];
+                *o = region_apply(p, *o, x);
+            }
+        }
+    }
+}

@@ -1,0 +1,680 @@
+//! HLO-text parsing: shapes, attributes, instructions, computations.
+//!
+//! Produces the [`Module`] consumed by both execution paths (the compiled
+//! register program in [`super::program`] and the retained tree-walk
+//! [`super::reference`] evaluator).  Anything outside the supported op
+//! subset fails here — at "compile" time — with an error naming the
+//! opcode, so misuse surfaces before any training loop starts.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::{Error, Result};
+
+// ------------------------------------------------------------------ shapes
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::Pred => "pred",
+        })
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct Shape {
+    pub(crate) dtype: DType,
+    pub(crate) dims: Vec<usize>,
+}
+
+impl Shape {
+    pub(crate) fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub(crate) enum ShapeSpec {
+    Dense(Shape),
+    Tuple(Vec<Shape>),
+}
+
+pub(crate) fn err(msg: String) -> Error {
+    Error::Interp(msg)
+}
+
+pub(crate) fn elements(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Row-major strides for `dims`.
+pub(crate) fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Decompose a flat row-major index into coordinates.
+pub(crate) fn coords_of(mut flat: usize, dims: &[usize], st: &[usize]) -> Vec<usize> {
+    let mut c = vec![0usize; dims.len()];
+    for i in 0..dims.len() {
+        c[i] = flat / st[i];
+        flat %= st[i];
+    }
+    c
+}
+
+fn parse_dense_shape(tok: &str) -> Result<Shape> {
+    let tok = tok.trim();
+    let (dt, rest) = tok
+        .split_once('[')
+        .ok_or_else(|| err(format!("malformed shape {tok:?}")))?;
+    let dtype = match dt.trim() {
+        "f32" => DType::F32,
+        "s32" => DType::S32,
+        "pred" => DType::Pred,
+        other => {
+            return Err(err(format!(
+                "unsupported element type {other:?} (interp handles f32/s32/pred)"
+            )))
+        }
+    };
+    let (dims_str, _layout) = rest
+        .split_once(']')
+        .ok_or_else(|| err(format!("malformed shape {tok:?}")))?;
+    let mut dims = Vec::new();
+    if !dims_str.trim().is_empty() {
+        for d in dims_str.split(',') {
+            dims.push(
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad dimension {d:?} in shape {tok:?}")))?,
+            );
+        }
+    }
+    Ok(Shape { dtype, dims })
+}
+
+fn parse_shape_spec(s: &str) -> Result<ShapeSpec> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner
+            .strip_suffix(')')
+            .ok_or_else(|| err(format!("malformed tuple shape {s:?}")))?;
+        let mut parts = Vec::new();
+        for piece in split_top(inner, ',') {
+            parts.push(parse_dense_shape(&piece)?);
+        }
+        Ok(ShapeSpec::Tuple(parts))
+    } else {
+        Ok(ShapeSpec::Dense(parse_dense_shape(s)?))
+    }
+}
+
+/// Split on `sep` at nesting depth 0 w.r.t. `()`, `{}`, `[]`.
+pub(crate) fn split_top(s: &str, sep: char) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            _ => {}
+        }
+        if c == sep && depth == 0 {
+            if !cur.trim().is_empty() {
+                out.push(cur.trim().to_string());
+            }
+            cur.clear();
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+// --------------------------------------------------------------- constants
+
+/// A parsed constant payload (dtype-neutral storage shared by both
+/// execution paths).
+#[derive(Clone, Debug)]
+pub(crate) enum ConstPayload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+/// A constant value with its shape.
+#[derive(Clone, Debug)]
+pub(crate) struct ConstValue {
+    pub(crate) dims: Vec<usize>,
+    pub(crate) payload: ConstPayload,
+}
+
+fn parse_constant_payload(payload: &str, shape: &Shape) -> Result<ConstValue> {
+    let toks: Vec<String> = payload
+        .replace(['{', '}', ','], " ")
+        .split_whitespace()
+        .map(str::to_string)
+        .collect();
+    let want = shape.elements();
+    if toks.len() != want {
+        return Err(err(format!(
+            "constant payload has {} values, shape {shape} wants {want}",
+            toks.len()
+        )));
+    }
+    let payload = match shape.dtype {
+        DType::F32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(
+                    t.parse::<f32>()
+                        .map_err(|_| err(format!("bad f32 constant {t:?}")))?,
+                );
+            }
+            ConstPayload::F32(v)
+        }
+        DType::S32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(
+                    t.parse::<i32>()
+                        .map_err(|_| err(format!("bad s32 constant {t:?}")))?,
+                );
+            }
+            ConstPayload::I32(v)
+        }
+        DType::Pred => {
+            let mut v = Vec::with_capacity(want);
+            for t in &toks {
+                v.push(match t.as_str() {
+                    "true" | "1" => true,
+                    "false" | "0" => false,
+                    _ => return Err(err(format!("bad pred constant {t:?}"))),
+                });
+            }
+            ConstPayload::Pred(v)
+        }
+    };
+    Ok(ConstValue {
+        dims: shape.dims.clone(),
+        payload,
+    })
+}
+
+// ------------------------------------------------------------ instructions
+
+#[derive(Clone, Debug, Default)]
+pub(crate) struct Attrs {
+    pub(crate) dimensions: Vec<usize>,
+    pub(crate) slice: Vec<(i64, i64, i64)>,
+    pub(crate) padding: Vec<(i64, i64, i64)>,
+    pub(crate) direction: Option<String>,
+    pub(crate) to_apply: Option<String>,
+    pub(crate) lhs_contracting: Vec<usize>,
+    pub(crate) rhs_contracting: Vec<usize>,
+    pub(crate) lhs_batch: Vec<usize>,
+    pub(crate) rhs_batch: Vec<usize>,
+    pub(crate) index: Option<usize>,
+    pub(crate) iota_dimension: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) struct Instr {
+    pub(crate) name: String,
+    pub(crate) shape: ShapeSpec,
+    pub(crate) op: String,
+    pub(crate) operands: Vec<usize>,
+    pub(crate) attrs: Attrs,
+    pub(crate) param: Option<usize>,
+    pub(crate) literal: Option<ConstValue>,
+    pub(crate) is_root: bool,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) struct Computation {
+    pub(crate) name: String,
+    pub(crate) instrs: Vec<Instr>,
+    pub(crate) root: usize,
+    /// Instruction index by parameter number.
+    pub(crate) params: Vec<usize>,
+}
+
+/// A parsed, compilable HLO module.
+#[derive(Debug)]
+pub(crate) struct Module {
+    pub(crate) computations: Vec<Computation>,
+    pub(crate) by_name: HashMap<String, usize>,
+    pub(crate) entry: usize,
+}
+
+/// Pre-resolution instruction: operand names instead of indices.
+struct RawInstr {
+    instr: Instr,
+    operand_names: Vec<String>,
+}
+
+fn parse_usize_set(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for piece in inner.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        out.push(
+            piece
+                .parse::<usize>()
+                .map_err(|_| err(format!("bad integer list entry {piece:?}")))?,
+        );
+    }
+    Ok(out)
+}
+
+fn parse_slice_spec(s: &str) -> Result<Vec<(i64, i64, i64)>> {
+    // {[0:8], [1:3:2]}
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut out = Vec::new();
+    for piece in split_top(inner, ',') {
+        let piece = piece.trim().trim_start_matches('[').trim_end_matches(']');
+        let parts: Vec<&str> = piece.split(':').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(err(format!("bad slice spec {piece:?}")));
+        }
+        let p = |i: usize| -> Result<i64> {
+            parts[i]
+                .trim()
+                .parse::<i64>()
+                .map_err(|_| err(format!("bad slice bound {:?}", parts[i])))
+        };
+        let stride = if parts.len() == 3 { p(2)? } else { 1 };
+        out.push((p(0)?, p(1)?, stride));
+    }
+    Ok(out)
+}
+
+fn parse_padding_spec(s: &str) -> Result<Vec<(i64, i64, i64)>> {
+    // 8_0 | 0_1x2_3 | 1_1_2 (lo_hi[_interior] per dim, joined by x)
+    let mut out = Vec::new();
+    for piece in s.trim().split('x') {
+        let parts: Vec<&str> = piece.split('_').collect();
+        if parts.len() != 2 && parts.len() != 3 {
+            return Err(err(format!("bad padding spec {piece:?}")));
+        }
+        let p = |i: usize| -> Result<i64> {
+            parts[i]
+                .trim()
+                .parse::<i64>()
+                .map_err(|_| err(format!("bad padding entry {:?}", parts[i])))
+        };
+        let interior = if parts.len() == 3 { p(2)? } else { 0 };
+        out.push((p(0)?, p(1)?, interior));
+    }
+    Ok(out)
+}
+
+/// Strip an operand token down to its instruction name: the last
+/// whitespace-separated word (drops optional type prefixes in canonical
+/// HLO), minus any leading `%`.
+fn operand_name(tok: &str) -> String {
+    tok.split_whitespace()
+        .last()
+        .unwrap_or("")
+        .trim_start_matches('%')
+        .to_string()
+}
+
+fn parse_instr(line: &str) -> Result<RawInstr> {
+    let (lhs, rhs) = line
+        .split_once(" = ")
+        .ok_or_else(|| err(format!("malformed instruction {line:?}")))?;
+    let lhs = lhs.trim();
+    let is_root = lhs.starts_with("ROOT ");
+    let name = lhs
+        .trim_start_matches("ROOT ")
+        .trim()
+        .trim_start_matches('%')
+        .to_string();
+
+    // Shape: a leading parenthesized tuple type, or the first token.
+    let rhs = rhs.trim();
+    let (shape_str, rest) = if rhs.starts_with('(') {
+        let mut depth = 0i32;
+        let mut cut = None;
+        for (i, c) in rhs.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = Some(i + 1);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let cut = cut.ok_or_else(|| err(format!("unbalanced tuple shape in {line:?}")))?;
+        (&rhs[..cut], rhs[cut..].trim_start())
+    } else {
+        let cut = rhs
+            .find(' ')
+            .ok_or_else(|| err(format!("malformed instruction {line:?}")))?;
+        (&rhs[..cut], rhs[cut..].trim_start())
+    };
+    let shape = parse_shape_spec(shape_str)?;
+
+    // Opcode, then its balanced parenthesized operand list.
+    let open = rest
+        .find('(')
+        .ok_or_else(|| err(format!("missing operand list in {line:?}")))?;
+    let op = rest[..open].trim().to_string();
+    let mut depth = 0i32;
+    let mut close = None;
+    for (i, c) in rest.char_indices().skip(open) {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(i);
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let close = close.ok_or_else(|| err(format!("unbalanced operand list in {line:?}")))?;
+    let payload = &rest[open + 1..close];
+    let attrs_str = rest[close + 1..].trim_start_matches(',').trim();
+
+    let mut attrs = Attrs::default();
+    for piece in split_top(attrs_str, ',') {
+        let Some((key, val)) = piece.split_once('=') else {
+            continue;
+        };
+        match key.trim() {
+            "dimensions" => attrs.dimensions = parse_usize_set(val)?,
+            "slice" => attrs.slice = parse_slice_spec(val)?,
+            "padding" => attrs.padding = parse_padding_spec(val)?,
+            "direction" => attrs.direction = Some(val.trim().to_string()),
+            "to_apply" => attrs.to_apply = Some(val.trim().trim_start_matches('%').to_string()),
+            "lhs_contracting_dims" => attrs.lhs_contracting = parse_usize_set(val)?,
+            "rhs_contracting_dims" => attrs.rhs_contracting = parse_usize_set(val)?,
+            "lhs_batch_dims" => attrs.lhs_batch = parse_usize_set(val)?,
+            "rhs_batch_dims" => attrs.rhs_batch = parse_usize_set(val)?,
+            "index" => {
+                attrs.index = Some(
+                    val.trim()
+                        .parse::<usize>()
+                        .map_err(|_| err(format!("bad get-tuple-element index {val:?}")))?,
+                )
+            }
+            "iota_dimension" => {
+                attrs.iota_dimension = Some(
+                    val.trim()
+                        .parse::<usize>()
+                        .map_err(|_| err(format!("bad iota_dimension {val:?}")))?,
+                )
+            }
+            // metadata / frontend_attributes / backend_config / sharding /
+            // operand_precision … are irrelevant to evaluation.
+            _ => {}
+        }
+    }
+
+    const SUPPORTED: &[&str] = &[
+        "parameter",
+        "constant",
+        "add",
+        "subtract",
+        "multiply",
+        "divide",
+        "maximum",
+        "minimum",
+        "power",
+        "remainder",
+        "and",
+        "or",
+        "xor",
+        "abs",
+        "negate",
+        "exponential",
+        "exponential-minus-one",
+        "log",
+        "log-plus-one",
+        "logistic",
+        "tanh",
+        "sqrt",
+        "rsqrt",
+        "sign",
+        "floor",
+        "ceil",
+        "cosine",
+        "sine",
+        "not",
+        "copy",
+        "compare",
+        "select",
+        "convert",
+        "broadcast",
+        "reshape",
+        "transpose",
+        "slice",
+        "pad",
+        "concatenate",
+        "dot",
+        "reduce",
+        "iota",
+        "tuple",
+        "get-tuple-element",
+    ];
+    if !SUPPORTED.contains(&op.as_str()) {
+        return Err(err(format!(
+            "unsupported HLO opcode {op:?} (instruction {name}) — the interp backend \
+             covers the elementwise/dot/reduce/shape subset only; link the real \
+             xla_extension binding for full HLO"
+        )));
+    }
+
+    let mut param = None;
+    let mut literal = None;
+    let mut operand_names = Vec::new();
+    match op.as_str() {
+        "parameter" => {
+            param = Some(
+                payload
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad parameter number {payload:?}")))?,
+            );
+        }
+        "constant" => {
+            let ShapeSpec::Dense(s) = &shape else {
+                return Err(err(format!("tuple-shaped constant in {line:?}")));
+            };
+            literal = Some(parse_constant_payload(payload, s)?);
+        }
+        _ => {
+            for tok in split_top(payload, ',') {
+                operand_names.push(operand_name(&tok));
+            }
+        }
+    }
+
+    Ok(RawInstr {
+        instr: Instr {
+            name,
+            shape,
+            op,
+            operands: Vec::new(),
+            attrs,
+            param,
+            literal,
+            is_root,
+        },
+        operand_names,
+    })
+}
+
+impl Module {
+    /// Parse an HLO text module.  Unsupported opcodes are rejected here —
+    /// at "compile" time — rather than mid-execution.
+    pub(crate) fn parse(text: &str) -> Result<Module> {
+        let mut computations: Vec<Computation> = Vec::new();
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        let mut entry: Option<usize> = None;
+        let mut cur: Option<(String, bool, Vec<RawInstr>)> = None;
+
+        for raw_line in text.lines() {
+            let line = raw_line.trim();
+            if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
+                continue;
+            }
+            if line == "}" {
+                let (name, is_entry, raws) =
+                    cur.take().ok_or_else(|| err("stray '}' in HLO text".into()))?;
+                let comp = build_computation(name, raws)?;
+                let idx = computations.len();
+                if by_name.insert(comp.name.clone(), idx).is_some() {
+                    return Err(err(format!("duplicate computation {:?}", comp.name)));
+                }
+                if is_entry {
+                    entry = Some(idx);
+                }
+                computations.push(comp);
+                continue;
+            }
+            if line.ends_with('{') && !line.contains(" = ") {
+                if cur.is_some() {
+                    return Err(err("nested computation block in HLO text".into()));
+                }
+                let is_entry = line.starts_with("ENTRY ");
+                let rest = line.strip_prefix("ENTRY ").unwrap_or(line);
+                let tok = rest
+                    .split_whitespace()
+                    .next()
+                    .ok_or_else(|| err("missing computation name".into()))?;
+                let name = tok
+                    .trim_start_matches('%')
+                    .split('(')
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                cur = Some((name, is_entry, Vec::new()));
+                continue;
+            }
+            let Some((_, _, raws)) = cur.as_mut() else {
+                return Err(err(format!("instruction outside computation: {line:?}")));
+            };
+            raws.push(parse_instr(line)?);
+        }
+        if cur.is_some() {
+            return Err(err("unterminated computation block".into()));
+        }
+        let entry = match entry {
+            Some(e) => e,
+            None if computations.len() == 1 => 0,
+            None => return Err(err("no ENTRY computation in HLO text".into())),
+        };
+        Ok(Module {
+            computations,
+            by_name,
+            entry,
+        })
+    }
+
+    pub(crate) fn computation(&self, name: &str) -> Result<&Computation> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.computations[i])
+            .ok_or_else(|| err(format!("unknown computation {name:?}")))
+    }
+
+    pub(crate) fn entry_computation(&self) -> &Computation {
+        &self.computations[self.entry]
+    }
+}
+
+fn build_computation(name: String, raws: Vec<RawInstr>) -> Result<Computation> {
+    let mut index: HashMap<String, usize> = HashMap::new();
+    for (i, r) in raws.iter().enumerate() {
+        if index.insert(r.instr.name.clone(), i).is_some() {
+            return Err(err(format!(
+                "duplicate instruction name {:?} in computation {name:?}",
+                r.instr.name
+            )));
+        }
+    }
+    let mut instrs = Vec::with_capacity(raws.len());
+    let mut params: Vec<(usize, usize)> = Vec::new();
+    let mut root = None;
+    for (i, raw) in raws.into_iter().enumerate() {
+        let mut ins = raw.instr;
+        for on in &raw.operand_names {
+            let oi = *index.get(on).ok_or_else(|| {
+                err(format!(
+                    "unknown operand {on:?} of {:?} in computation {name:?}",
+                    ins.name
+                ))
+            })?;
+            ins.operands.push(oi);
+        }
+        if let Some(p) = ins.param {
+            params.push((p, i));
+        }
+        if ins.is_root {
+            root = Some(i);
+        }
+        instrs.push(ins);
+    }
+    let root = root.unwrap_or(instrs.len().saturating_sub(1));
+    if instrs.is_empty() {
+        return Err(err(format!("empty computation {name:?}")));
+    }
+    params.sort();
+    for (want, &(got, _)) in params.iter().enumerate() {
+        if want != got {
+            return Err(err(format!(
+                "computation {name:?} has non-contiguous parameter numbers"
+            )));
+        }
+    }
+    let params = params.into_iter().map(|(_, i)| i).collect();
+    Ok(Computation {
+        name,
+        instrs,
+        root,
+        params,
+    })
+}
+
+pub(crate) fn declared_dense(ins: &Instr) -> Result<&Shape> {
+    match &ins.shape {
+        ShapeSpec::Dense(s) => Ok(s),
+        ShapeSpec::Tuple(_) => Err(err(format!("{}: unexpected tuple shape", ins.name))),
+    }
+}

@@ -1,0 +1,1558 @@
+//! Lowering: a parsed [`Module`] becomes a flat SSA register [`Program`].
+//!
+//! Everything shape-dependent is resolved **here, at compile time**:
+//!
+//! * operand names -> dense value-slot indices ([`Ref`]);
+//! * broadcast/transpose/slice/pad/concatenate -> precomputed gather maps
+//!   (`out_flat -> in_flat`), so execution is a single tight loop with no
+//!   per-element coordinate decoding;
+//! * `dot` -> a [`DotPlan`] with precomputed row/column base offsets and
+//!   contraction strides;
+//! * `reduce` -> a [`ReducePlan`] with a flat `in -> out` index map and a
+//!   compiled region ([`RegionFn`]): one-op regions become direct
+//!   accumulator kernels, multi-op regions a scalar register program —
+//!   never per-element tree re-evaluation;
+//! * adjacent f32 elementwise instructions whose intermediates have
+//!   exactly one consumer fuse into a [`FusedLoop`] (single pass, block
+//!   scratch registers, no materialized intermediates);
+//! * a last-use liveness analysis assigns every materialized value a
+//!   reusable arena slot ([`SlotSpec`]), sized to its maximum occupant, so
+//!   steady-state execution allocates nothing.
+//!
+//! Slot-reuse safety invariant: a step's output slot is allocated
+//! **before** its dying operands are freed, so an output buffer never
+//! aliases a live (or same-step) input.  `slot_reuse_is_alias_free` in the
+//! tests walks every compiled program and checks the invariant
+//! exhaustively.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Mutex;
+
+use super::exec::Arena;
+use super::parse::{
+    coords_of, declared_dense, elements, err, strides, Computation, ConstPayload, DType, Module,
+    ShapeSpec,
+};
+use crate::Result;
+
+/// Where a value lives at execution time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Ref {
+    /// An arena slot (materialized intermediate).
+    Slot(u32),
+    /// An entry parameter, borrowed straight from the caller's `Literal`.
+    Param(u32),
+    /// An entry in the compile-time constant pool.
+    Const(u32),
+}
+
+/// f32 elementwise op kinds (fused loops + scalar region programs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum EwOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    Rem,
+    Abs,
+    Neg,
+    Exp,
+    ExpM1,
+    Log,
+    Log1p,
+    Logistic,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Sign,
+    Floor,
+    Ceil,
+    Cos,
+    Sin,
+    Copy,
+}
+
+impl EwOp {
+    /// `(op, is_binary)` for an f32-elementwise HLO opcode.
+    fn from_name(op: &str) -> Option<(EwOp, bool)> {
+        Some(match op {
+            "add" => (EwOp::Add, true),
+            "subtract" => (EwOp::Sub, true),
+            "multiply" => (EwOp::Mul, true),
+            "divide" => (EwOp::Div, true),
+            "maximum" => (EwOp::Max, true),
+            "minimum" => (EwOp::Min, true),
+            "power" => (EwOp::Pow, true),
+            "remainder" => (EwOp::Rem, true),
+            "abs" => (EwOp::Abs, false),
+            "negate" => (EwOp::Neg, false),
+            "exponential" => (EwOp::Exp, false),
+            "exponential-minus-one" => (EwOp::ExpM1, false),
+            "log" => (EwOp::Log, false),
+            "log-plus-one" => (EwOp::Log1p, false),
+            "logistic" => (EwOp::Logistic, false),
+            "tanh" => (EwOp::Tanh, false),
+            "sqrt" => (EwOp::Sqrt, false),
+            "rsqrt" => (EwOp::Rsqrt, false),
+            "sign" => (EwOp::Sign, false),
+            "floor" => (EwOp::Floor, false),
+            "ceil" => (EwOp::Ceil, false),
+            "cosine" => (EwOp::Cos, false),
+            "sine" => (EwOp::Sin, false),
+            "copy" => (EwOp::Copy, false),
+            _ => return None,
+        })
+    }
+}
+
+/// i32 elementwise op kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum IntOp {
+    Add,
+    Sub,
+    Mul,
+    Max,
+    Min,
+    And,
+    Or,
+    Xor,
+    Abs,
+    Neg,
+    Sign,
+    Copy,
+}
+
+/// pred elementwise op kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PredOp {
+    And,
+    Or,
+    Xor,
+    Not,
+    Copy,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+/// A lane source inside a fused loop: an external input block or the
+/// result register of an earlier op in the same group.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Lane {
+    In(u8),
+    Reg(u8),
+}
+
+/// One op of a fused loop; its result register index is its position in
+/// [`FusedLoop::ops`].
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LaneOp {
+    pub(crate) op: EwOp,
+    pub(crate) a: Lane,
+    pub(crate) b: Option<Lane>,
+}
+
+/// A fused single-pass f32 elementwise loop (1..=MAX_FUSED_OPS ops).
+#[derive(Clone, Debug)]
+pub(crate) struct FusedLoop {
+    pub(crate) n: usize,
+    pub(crate) inputs: Vec<Ref>,
+    pub(crate) ops: Vec<LaneOp>,
+    pub(crate) out: u32,
+}
+
+pub(crate) const MAX_FUSED_OPS: usize = 12;
+pub(crate) const MAX_FUSED_INPUTS: usize = 12;
+/// Cap on compiled reduce-region ops (sizes the scalar register file).
+pub(crate) const MAX_REGION_OPS: usize = 32;
+
+/// Precompiled `dot`: collapsed (M, K) x (K, N) with base-offset tables.
+#[derive(Clone, Debug)]
+pub(crate) struct DotPlan {
+    pub(crate) lhs: Ref,
+    pub(crate) rhs: Ref,
+    pub(crate) out: u32,
+    pub(crate) m: usize,
+    pub(crate) n: usize,
+    pub(crate) k: usize,
+    pub(crate) l_base: Vec<u32>,
+    pub(crate) r_base: Vec<u32>,
+    pub(crate) l_kstride: usize,
+    pub(crate) r_kstride: usize,
+}
+
+/// A scalar operand of a compiled reduce region.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ScalarSrc {
+    /// Region parameter 0: the running accumulator.
+    Acc,
+    /// Region parameter 1: the incoming element.
+    X,
+    Const(u8),
+    Reg(u8),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ScalarOp {
+    pub(crate) op: EwOp,
+    pub(crate) a: ScalarSrc,
+    pub(crate) b: Option<ScalarSrc>,
+}
+
+/// A multi-op reduce region compiled to scalar register form: applied per
+/// element with zero allocation (satellite: no per-element region
+/// re-evaluation, ever).
+#[derive(Clone, Debug)]
+pub(crate) struct ScalarProgram {
+    pub(crate) ops: Vec<ScalarOp>,
+    pub(crate) consts: Vec<f32>,
+    pub(crate) result: ScalarSrc,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) enum RegionFn {
+    Add,
+    Mul,
+    Max,
+    Min,
+    Program(ScalarProgram),
+}
+
+/// Precompiled `reduce` over f32 data.
+#[derive(Clone, Debug)]
+pub(crate) struct ReducePlan {
+    pub(crate) data: Ref,
+    pub(crate) init: Ref,
+    pub(crate) out: u32,
+    pub(crate) out_elems: usize,
+    /// `map[in_flat] = out_flat`; iteration is flat-ascending, matching
+    /// the reference evaluator bit for bit.
+    pub(crate) map: Vec<u32>,
+    pub(crate) region: RegionFn,
+}
+
+/// One execution step of the register program.
+#[derive(Clone, Debug)]
+pub(crate) enum Step {
+    Fused(FusedLoop),
+    IntEw {
+        op: IntOp,
+        a: Ref,
+        b: Option<Ref>,
+        out: u32,
+        n: usize,
+    },
+    PredEw {
+        op: PredOp,
+        a: Ref,
+        b: Option<Ref>,
+        out: u32,
+        n: usize,
+    },
+    Compare {
+        dir: CmpDir,
+        dtype: DType,
+        a: Ref,
+        b: Ref,
+        out: u32,
+        n: usize,
+    },
+    Select {
+        dtype: DType,
+        p: Ref,
+        t: Ref,
+        f: Ref,
+        out: u32,
+        n: usize,
+        scalar_pred: bool,
+    },
+    Convert {
+        from: DType,
+        to: DType,
+        a: Ref,
+        out: u32,
+        n: usize,
+    },
+    /// broadcast / transpose / slice: `out[i] = src[map[i]]`.
+    Gather {
+        dtype: DType,
+        src: Ref,
+        map: Vec<u32>,
+        out: u32,
+    },
+    /// pad: `out[i] = map[i] == u32::MAX ? fill : src[map[i]]`.
+    Pad {
+        dtype: DType,
+        src: Ref,
+        fill: Ref,
+        map: Vec<u32>,
+        out: u32,
+    },
+    /// concatenate: per part, `out[place[j]] = part[j]`.
+    Concat {
+        dtype: DType,
+        parts: Vec<(Ref, Vec<u32>)>,
+        out: u32,
+        n: usize,
+    },
+    Dot(DotPlan),
+    Reduce(ReducePlan),
+}
+
+/// An arena slot: fixed dtype, sized once to its largest occupant.
+#[derive(Clone, Debug)]
+pub(crate) struct SlotSpec {
+    pub(crate) dtype: DType,
+    pub(crate) max_elems: usize,
+}
+
+/// A declared entry parameter (for argument validation + error messages).
+#[derive(Clone, Debug)]
+pub(crate) struct ParamSpec {
+    pub(crate) name: String,
+    pub(crate) dtype: DType,
+    pub(crate) dims: Vec<usize>,
+}
+
+/// One entry output.
+#[derive(Clone, Debug)]
+pub(crate) struct OutSpec {
+    pub(crate) r: Ref,
+    pub(crate) dtype: DType,
+    pub(crate) dims: Vec<i64>,
+}
+
+/// Constant-pool storage.
+#[derive(Clone, Debug)]
+pub(crate) enum ConstBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+/// The compiled register program for an entry computation.
+#[derive(Debug)]
+pub(crate) struct Program {
+    pub(crate) entry_name: String,
+    pub(crate) steps: Vec<Step>,
+    pub(crate) slots: Vec<SlotSpec>,
+    pub(crate) consts: Vec<ConstBuf>,
+    pub(crate) params: Vec<ParamSpec>,
+    pub(crate) outputs: Vec<OutSpec>,
+    pub(crate) tuple_root: bool,
+    /// Reusable execution arenas (popped per call, pushed back after).
+    pub(crate) pool: Mutex<Vec<Arena>>,
+    /// Allocs-proxy counters: arenas created, buffers (re)grown.
+    pub(crate) arenas_created: AtomicU64,
+    pub(crate) buffers_grown: AtomicU64,
+}
+
+// ------------------------------------------------------------ compilation
+
+/// How each SSA value is realized.
+#[derive(Clone, Debug)]
+enum Kind {
+    Param(u32),
+    Const(u32),
+    /// Materialized into an arena slot (assigned during emission) unless
+    /// fused away.
+    Inst,
+    /// Same flat data as another SSA value (reshape, get-tuple-element).
+    Alias(usize),
+    /// A tuple of SSA values (root, or feeding get-tuple-element only).
+    Tuple(Vec<usize>),
+}
+
+struct Lowering<'m> {
+    module: &'m Module,
+    comp: &'m Computation,
+    kinds: Vec<Kind>,
+    dims: Vec<Vec<usize>>,
+    dtypes: Vec<DType>,
+    consts: Vec<ConstBuf>,
+    params: Vec<ParamSpec>,
+    inlined: Vec<bool>,
+    /// Single consumer index (valid when consumer_count == 1).
+    consumer: Vec<usize>,
+    consumer_count: Vec<usize>,
+    is_output: Vec<bool>,
+}
+
+impl Program {
+    pub(crate) fn compile(module: &Module) -> Result<Program> {
+        let comp = module.entry_computation();
+        let mut lw = Lowering {
+            module,
+            comp,
+            kinds: Vec::with_capacity(comp.instrs.len()),
+            dims: Vec::with_capacity(comp.instrs.len()),
+            dtypes: Vec::with_capacity(comp.instrs.len()),
+            consts: Vec::new(),
+            params: vec![
+                ParamSpec {
+                    name: String::new(),
+                    dtype: DType::F32,
+                    dims: Vec::new(),
+                };
+                comp.params.len()
+            ],
+            inlined: vec![false; comp.instrs.len()],
+            consumer: vec![usize::MAX; comp.instrs.len()],
+            consumer_count: vec![0; comp.instrs.len()],
+            is_output: vec![false; comp.instrs.len()],
+        };
+        lw.classify()?;
+        let outputs_ssa = lw.root_outputs()?;
+        lw.count_consumers(&outputs_ssa)?;
+        lw.mark_fusion();
+        lw.emit(outputs_ssa)
+    }
+}
+
+impl<'m> Lowering<'m> {
+    /// Resolve alias chains to the underlying SSA value.
+    fn resolve(&self, mut i: usize) -> usize {
+        while let Kind::Alias(t) = self.kinds[i] {
+            i = t;
+        }
+        i
+    }
+
+    /// Pass A: classify every instruction; fold constants/iota into the
+    /// pool; resolve reshape/get-tuple-element to aliases; record shapes.
+    fn classify(&mut self) -> Result<()> {
+        for i in 0..self.comp.instrs.len() {
+            let ins = &self.comp.instrs[i];
+            // HLO text lists operands before their uses; the whole
+            // lowering (alias resolution, liveness, slot refs) relies on
+            // that, so enforce it up front.
+            for &o in &ins.operands {
+                if o >= i {
+                    return Err(err(format!(
+                        "{}: operand used before definition",
+                        ins.name
+                    )));
+                }
+            }
+            let (dt, dm): (DType, Vec<usize>) = match &ins.shape {
+                ShapeSpec::Dense(s) => (s.dtype, s.dims.clone()),
+                // Tuples have no single dtype; placeholder never read.
+                ShapeSpec::Tuple(_) => (DType::F32, Vec::new()),
+            };
+            if elements(&dm) >= u32::MAX as usize {
+                return Err(err(format!(
+                    "{}: tensor too large for the interp backend",
+                    ins.name
+                )));
+            }
+            let kind = match ins.op.as_str() {
+                "parameter" => {
+                    let p = ins.param.expect("parameter number");
+                    let s = declared_dense(ins).map_err(|_| {
+                        err(format!("{}: tuple parameters are not supported", ins.name))
+                    })?;
+                    self.params[p] = ParamSpec {
+                        name: ins.name.clone(),
+                        dtype: s.dtype,
+                        dims: s.dims.clone(),
+                    };
+                    Kind::Param(p as u32)
+                }
+                "constant" => {
+                    let c = ins.literal.as_ref().expect("parsed constant");
+                    let buf = match &c.payload {
+                        ConstPayload::F32(v) => ConstBuf::F32(v.clone()),
+                        ConstPayload::I32(v) => ConstBuf::I32(v.clone()),
+                        ConstPayload::Pred(v) => ConstBuf::Pred(v.clone()),
+                    };
+                    self.consts.push(buf);
+                    Kind::Const((self.consts.len() - 1) as u32)
+                }
+                "iota" => {
+                    let want = declared_dense(ins)?;
+                    let dim = ins.attrs.iota_dimension.unwrap_or(0);
+                    if dim >= want.dims.len().max(1) {
+                        return Err(err(format!(
+                            "iota dimension {dim} out of range for {want}"
+                        )));
+                    }
+                    let st = strides(&want.dims);
+                    let n = want.elements();
+                    let vals: Vec<usize> = (0..n)
+                        .map(|flat| {
+                            coords_of(flat, &want.dims, &st)
+                                .get(dim)
+                                .copied()
+                                .unwrap_or(0)
+                        })
+                        .collect();
+                    let buf = match want.dtype {
+                        DType::F32 => ConstBuf::F32(vals.iter().map(|&v| v as f32).collect()),
+                        DType::S32 => ConstBuf::I32(vals.iter().map(|&v| v as i32).collect()),
+                        DType::Pred => ConstBuf::Pred(vals.iter().map(|&v| v != 0).collect()),
+                    };
+                    self.consts.push(buf);
+                    Kind::Const((self.consts.len() - 1) as u32)
+                }
+                "reshape" => {
+                    let &o = ins
+                        .operands
+                        .first()
+                        .ok_or_else(|| err(format!("{}: missing operand 0", ins.name)))?;
+                    let want = declared_dense(ins)?;
+                    if elements(&self.dims[o]) != want.elements() {
+                        return Err(err(format!(
+                            "reshape element count mismatch: {} -> {want}",
+                            elements(&self.dims[o])
+                        )));
+                    }
+                    Kind::Alias(o)
+                }
+                "tuple" => Kind::Tuple(ins.operands.clone()),
+                "get-tuple-element" => {
+                    let &o = ins
+                        .operands
+                        .first()
+                        .ok_or_else(|| err(format!("{}: missing operand 0", ins.name)))?;
+                    let idx = ins.attrs.index.ok_or_else(|| {
+                        err(format!("{}: get-tuple-element without index", ins.name))
+                    })?;
+                    let Kind::Tuple(parts) = &self.kinds[o] else {
+                        return Err(err(format!(
+                            "{}: get-tuple-element of non-tuple",
+                            ins.name
+                        )));
+                    };
+                    let part = *parts.get(idx).ok_or_else(|| {
+                        err(format!("{}: tuple index {idx} out of range", ins.name))
+                    })?;
+                    Kind::Alias(part)
+                }
+                _ => Kind::Inst,
+            };
+            self.kinds.push(kind);
+            self.dims.push(dm);
+            self.dtypes.push(dt);
+        }
+        Ok(())
+    }
+
+    /// The entry's output SSA list — RAW (pre-alias-resolution) indices,
+    /// so each output keeps its declared shape (a reshape feeding the
+    /// root must surface the reshaped dims, not its source's).
+    fn root_outputs(&self) -> Result<Vec<usize>> {
+        let root = self.resolve(self.comp.root);
+        match &self.kinds[root] {
+            Kind::Tuple(parts) => Ok(parts.clone()),
+            _ => Ok(vec![self.comp.root]),
+        }
+    }
+
+    fn root_is_tuple(&self) -> bool {
+        matches!(self.kinds[self.resolve(self.comp.root)], Kind::Tuple(_))
+    }
+
+    /// Pass B: consumer counts on the alias-resolved graph.  Tuples may
+    /// only feed get-tuple-element or be the root.
+    fn count_consumers(&mut self, outputs: &[usize]) -> Result<()> {
+        for i in 0..self.comp.instrs.len() {
+            let ins = &self.comp.instrs[i];
+            if matches!(
+                ins.op.as_str(),
+                "parameter" | "constant" | "iota" | "reshape" | "tuple" | "get-tuple-element"
+            ) {
+                continue;
+            }
+            for &o in &ins.operands {
+                let r = self.resolve(o);
+                if matches!(self.kinds[r], Kind::Tuple(_)) {
+                    return Err(err(format!(
+                        "{}: tuple values may only feed get-tuple-element or the root",
+                        ins.name
+                    )));
+                }
+                if matches!(self.kinds[r], Kind::Inst) {
+                    self.consumer_count[r] += 1;
+                    self.consumer[r] = i;
+                }
+            }
+        }
+        for &o in outputs {
+            let r = self.resolve(o);
+            if matches!(self.kinds[r], Kind::Tuple(_)) {
+                return Err(err("nested tuple outputs are not supported".into()));
+            }
+            if matches!(self.kinds[r], Kind::Inst) {
+                self.is_output[r] = true;
+                self.consumer_count[r] += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Is instruction `i` an f32 elementwise op the fuser understands?
+    fn fusable(&self, i: usize) -> bool {
+        if !matches!(self.kinds[i], Kind::Inst) {
+            return false;
+        }
+        let ins = &self.comp.instrs[i];
+        if self.dtypes[i] != DType::F32 {
+            return false;
+        }
+        let Some((_, binary)) = EwOp::from_name(&ins.op) else {
+            return false;
+        };
+        // Operand dtypes must be f32 too (HLO guarantees it for these
+        // opcodes, but a malformed module should not fuse into nonsense).
+        let arity = if binary { 2 } else { 1 };
+        ins.operands.len() == arity
+            && ins
+                .operands
+                .iter()
+                .all(|&o| self.dtypes[self.resolve(o)] == DType::F32)
+    }
+
+    /// Pass C: mark single-consumer f32 elementwise values as fused into
+    /// their consumer, then demote members of any group that exceeds the
+    /// lane-register / input caps until every group fits.
+    fn mark_fusion(&mut self) {
+        for i in 0..self.comp.instrs.len() {
+            if self.fusable(i)
+                && self.consumer_count[i] == 1
+                && !self.is_output[i]
+                && self.consumer[i] != usize::MAX
+                && self.fusable(self.consumer[i])
+            {
+                self.inlined[i] = true;
+            }
+        }
+        loop {
+            let mut changed = false;
+            for head in 0..self.comp.instrs.len() {
+                if !self.fusable(head) || self.inlined[head] {
+                    continue;
+                }
+                loop {
+                    let (ops, inputs) = self.group_size(head);
+                    if ops <= MAX_FUSED_OPS && inputs <= MAX_FUSED_INPUTS {
+                        break;
+                    }
+                    let demoted = self.demote_one(head);
+                    debug_assert!(demoted, "oversized group with nothing to demote");
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// (op count, distinct external input count) of the group rooted at
+    /// `head`.
+    fn group_size(&self, head: usize) -> (usize, usize) {
+        let mut ops = 0usize;
+        let mut inputs: Vec<usize> = Vec::new();
+        self.walk_group(head, &mut ops, &mut inputs);
+        (ops, inputs.len())
+    }
+
+    /// DFS over the fused group rooted at `i`, counting member ops and
+    /// collecting the distinct external (non-inlined) input SSA values.
+    fn walk_group(&self, i: usize, ops: &mut usize, inputs: &mut Vec<usize>) {
+        *ops += 1;
+        for &o in &self.comp.instrs[i].operands {
+            let r = self.resolve(o);
+            if matches!(self.kinds[r], Kind::Inst) && self.inlined[r] {
+                self.walk_group(r, ops, inputs);
+            } else if !inputs.contains(&r) {
+                inputs.push(r);
+            }
+        }
+    }
+
+    /// Un-inline the first inlined member of `head`'s group (it becomes
+    /// its own group head).  Returns false if there was none.
+    fn demote_one(&mut self, head: usize) -> bool {
+        for &o in &self.comp.instrs[head].operands.clone() {
+            let r = self.resolve(o);
+            if matches!(self.kinds[r], Kind::Inst) && self.inlined[r] {
+                // Prefer demoting a deep subtree first.
+                if !self.demote_one(r) {
+                    self.inlined[r] = false;
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Pass D: emit steps in instruction order with last-use-based slot
+    /// allocation, then package the [`Program`].
+    fn emit(self, outputs_ssa: Vec<usize>) -> Result<Program> {
+        let n_instr = self.comp.instrs.len();
+        // Emission order: every materialized, non-inlined instruction.
+        let emit_list: Vec<usize> = (0..n_instr)
+            .filter(|&i| matches!(self.kinds[i], Kind::Inst) && !self.inlined[i])
+            .collect();
+
+        // Reads per emitted step: the DISTINCT slot-producing SSA values
+        // it consumes (deduplicated — `add(x, x)` reads x once; a
+        // duplicate here would free a slot twice and alias it).
+        let mut reads: Vec<Vec<usize>> = Vec::with_capacity(emit_list.len());
+        for &i in &emit_list {
+            let mut r: Vec<usize> = Vec::new();
+            if self.fusable(i) {
+                let mut ops = 0usize;
+                let mut inputs: Vec<usize> = Vec::new();
+                self.walk_group(i, &mut ops, &mut inputs);
+                for ssa in inputs {
+                    if matches!(self.kinds[ssa], Kind::Inst) {
+                        r.push(ssa);
+                    }
+                }
+            } else {
+                for &o in &self.comp.instrs[i].operands {
+                    let t = self.resolve(o);
+                    if matches!(self.kinds[t], Kind::Inst) && !r.contains(&t) {
+                        r.push(t);
+                    }
+                }
+            }
+            reads.push(r);
+        }
+        let mut last_use = vec![usize::MAX; n_instr];
+        for (e, r) in reads.iter().enumerate() {
+            for &ssa in r {
+                last_use[ssa] = match last_use[ssa] {
+                    usize::MAX => e,
+                    prev => prev.max(e),
+                };
+            }
+        }
+
+        // Slot allocation state.
+        let mut slots: Vec<SlotSpec> = Vec::new();
+        let mut free: Vec<Vec<u32>> = vec![Vec::new(); 3]; // by dtype index
+        let dt_ix = |d: DType| match d {
+            DType::F32 => 0usize,
+            DType::S32 => 1,
+            DType::Pred => 2,
+        };
+        let mut slot_of: Vec<u32> = vec![u32::MAX; n_instr];
+        let mut steps: Vec<Step> = Vec::with_capacity(emit_list.len());
+
+        for (e, &i) in emit_list.iter().enumerate() {
+            let dtype = self.dtypes[i];
+            let n = elements(&self.dims[i]);
+            // Allocate the output slot FIRST (never alias a dying input).
+            let out = match free[dt_ix(dtype)].pop() {
+                Some(s) => {
+                    let spec = &mut slots[s as usize];
+                    spec.max_elems = spec.max_elems.max(n);
+                    s
+                }
+                None => {
+                    slots.push(SlotSpec {
+                        dtype,
+                        max_elems: n,
+                    });
+                    (slots.len() - 1) as u32
+                }
+            };
+            slot_of[i] = out;
+            let step = self.lower_step(i, out, &slot_of)?;
+            steps.push(step);
+            // Free operands whose last use was this step.
+            for &ssa in &reads[e] {
+                if last_use[ssa] == e && !self.is_output[ssa] {
+                    free[dt_ix(self.dtypes[ssa])].push(slot_of[ssa]);
+                }
+            }
+        }
+
+        let tuple_root = self.root_is_tuple();
+        let mut outs = Vec::with_capacity(outputs_ssa.len());
+        for &o in &outputs_ssa {
+            // Shape from the RAW output operand (reshape dims intact),
+            // data from the alias-resolved value.
+            outs.push(OutSpec {
+                r: self.ssa_ref(self.resolve(o), &slot_of),
+                dtype: self.dtypes[o],
+                dims: self.dims[o].iter().map(|&d| d as i64).collect(),
+            });
+        }
+        Ok(Program {
+            entry_name: self.comp.name.clone(),
+            steps,
+            slots,
+            consts: self.consts,
+            params: self.params,
+            outputs: outs,
+            tuple_root,
+            pool: Mutex::new(Vec::new()),
+            arenas_created: AtomicU64::new(0),
+            buffers_grown: AtomicU64::new(0),
+        })
+    }
+
+    /// The execution-time [`Ref`] of an (alias-resolved) SSA value.
+    fn ssa_ref(&self, ssa: usize, slot_of: &[u32]) -> Ref {
+        match &self.kinds[ssa] {
+            Kind::Param(p) => Ref::Param(*p),
+            Kind::Const(c) => Ref::Const(*c),
+            Kind::Inst => Ref::Slot(slot_of[ssa]),
+            Kind::Alias(_) | Kind::Tuple(_) => unreachable!("resolved before ssa_ref"),
+        }
+    }
+
+    fn oref(&self, i: usize, op_ix: usize, slot_of: &[u32]) -> Result<(Ref, usize, DType)> {
+        let ins = &self.comp.instrs[i];
+        let &o = ins.operands.get(op_ix).ok_or_else(|| {
+            err(format!("{}: missing operand {op_ix}", ins.name))
+        })?;
+        let t = self.resolve(o);
+        // Shape/dtype come from the operand as written (reshape may have
+        // changed dims; the flat data is the resolved value's).
+        Ok((self.ssa_ref(t, slot_of), elements(&self.dims[o]), self.dtypes[o]))
+    }
+
+    fn odims(&self, i: usize, op_ix: usize) -> &[usize] {
+        &self.dims[self.comp.instrs[i].operands[op_ix]]
+    }
+
+    /// Build the [`Step`] for instruction `i` writing slot `out`.
+    fn lower_step(&self, i: usize, out: u32, slot_of: &[u32]) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let n = elements(&self.dims[i]);
+        let name = &ins.name;
+
+        if self.fusable(i) {
+            return Ok(Step::Fused(self.collect_group(i, out, slot_of)?));
+        }
+
+        match ins.op.as_str() {
+            "add" | "subtract" | "multiply" | "maximum" | "minimum" | "and" | "or" | "xor"
+                if self.dtypes[i] == DType::S32 =>
+            {
+                let op = match ins.op.as_str() {
+                    "add" => IntOp::Add,
+                    "subtract" => IntOp::Sub,
+                    "multiply" => IntOp::Mul,
+                    "maximum" => IntOp::Max,
+                    "minimum" => IntOp::Min,
+                    "and" => IntOp::And,
+                    "or" => IntOp::Or,
+                    _ => IntOp::Xor,
+                };
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                let (b, nb, db) = self.oref(i, 1, slot_of)?;
+                self.check_binary(name, &ins.op, na, da, nb, db, n, DType::S32)?;
+                Ok(Step::IntEw {
+                    op,
+                    a,
+                    b: Some(b),
+                    out,
+                    n,
+                })
+            }
+            "abs" | "negate" | "sign" | "copy" if self.dtypes[i] == DType::S32 => {
+                let op = match ins.op.as_str() {
+                    "abs" => IntOp::Abs,
+                    "negate" => IntOp::Neg,
+                    "sign" => IntOp::Sign,
+                    _ => IntOp::Copy,
+                };
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                self.check_unary(name, &ins.op, na, da, n, DType::S32)?;
+                Ok(Step::IntEw {
+                    op,
+                    a,
+                    b: None,
+                    out,
+                    n,
+                })
+            }
+            "and" | "or" | "xor" if self.dtypes[i] == DType::Pred => {
+                let op = match ins.op.as_str() {
+                    "and" => PredOp::And,
+                    "or" => PredOp::Or,
+                    _ => PredOp::Xor,
+                };
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                let (b, nb, db) = self.oref(i, 1, slot_of)?;
+                self.check_binary(name, &ins.op, na, da, nb, db, n, DType::Pred)?;
+                Ok(Step::PredEw {
+                    op,
+                    a,
+                    b: Some(b),
+                    out,
+                    n,
+                })
+            }
+            "not" | "copy" if self.dtypes[i] == DType::Pred => {
+                let op = if ins.op == "not" {
+                    PredOp::Not
+                } else {
+                    PredOp::Copy
+                };
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                self.check_unary(name, &ins.op, na, da, n, DType::Pred)?;
+                Ok(Step::PredEw {
+                    op,
+                    a,
+                    b: None,
+                    out,
+                    n,
+                })
+            }
+            "compare" => {
+                let dir = match ins.attrs.direction.as_deref() {
+                    Some("EQ") => CmpDir::Eq,
+                    Some("NE") => CmpDir::Ne,
+                    Some("LT") => CmpDir::Lt,
+                    Some("GT") => CmpDir::Gt,
+                    Some("LE") => CmpDir::Le,
+                    Some("GE") => CmpDir::Ge,
+                    Some(other) => {
+                        return Err(err(format!("unknown compare direction {other:?}")))
+                    }
+                    None => return Err(err(format!("{name}: compare without direction"))),
+                };
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                let (b, nb, db) = self.oref(i, 1, slot_of)?;
+                if da != db || na != nb || na != n {
+                    return Err(err(format!(
+                        "{name}: mixed shapes/types in compare: {da}[{na}] vs {db}[{nb}] \
+                         (result wants {n} elements)"
+                    )));
+                }
+                Ok(Step::Compare {
+                    dir,
+                    dtype: da,
+                    a,
+                    b,
+                    out,
+                    n,
+                })
+            }
+            "select" => {
+                let (p, np, dp) = self.oref(i, 0, slot_of)?;
+                let (t, nt, dt) = self.oref(i, 1, slot_of)?;
+                let (f, nf, df) = self.oref(i, 2, slot_of)?;
+                if dp != DType::Pred {
+                    return Err(err(format!("expected pred data, got {dp}")));
+                }
+                if dt != df || nt != nf || nt != n {
+                    return Err(err(format!(
+                        "{name}: select operands disagree with the result shape \
+                         ({nt}/{nf} elements of {dt}/{df}, result wants {n})"
+                    )));
+                }
+                if np != nt && np != 1 {
+                    return Err(err(format!(
+                        "select predicate has {np} elements, operands have {nt}"
+                    )));
+                }
+                Ok(Step::Select {
+                    dtype: dt,
+                    p,
+                    t,
+                    f,
+                    out,
+                    n,
+                    scalar_pred: np == 1 && nt != 1,
+                })
+            }
+            "convert" => {
+                let (a, na, da) = self.oref(i, 0, slot_of)?;
+                if na != n {
+                    return Err(err(format!(
+                        "{name}: convert changes element count ({na} -> {n})"
+                    )));
+                }
+                Ok(Step::Convert {
+                    from: da,
+                    to: self.dtypes[i],
+                    a,
+                    out,
+                    n,
+                })
+            }
+            "broadcast" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let in_dims = self.odims(i, 0).to_vec();
+                let want = declared_dense(ins)?;
+                let mapping = &ins.attrs.dimensions;
+                if mapping.len() != in_dims.len() {
+                    return Err(err(format!(
+                        "broadcast dimensions {:?} do not cover operand rank {}",
+                        mapping,
+                        in_dims.len()
+                    )));
+                }
+                for (ix, &od) in mapping.iter().enumerate() {
+                    if od >= want.dims.len()
+                        || (want.dims[od] != in_dims[ix] && in_dims[ix] != 1)
+                    {
+                        return Err(err(format!(
+                            "broadcast maps operand dim {ix} (size {}) to output dim {od} of {want}",
+                            in_dims[ix]
+                        )));
+                    }
+                }
+                let out_st = strides(&want.dims);
+                let in_st = strides(&in_dims);
+                let map: Vec<u32> = (0..n)
+                    .map(|flat| {
+                        let c = coords_of(flat, &want.dims, &out_st);
+                        let mut inf = 0usize;
+                        for (ix, &od) in mapping.iter().enumerate() {
+                            let ci = if in_dims[ix] == 1 { 0 } else { c[od] };
+                            inf += ci * in_st[ix];
+                        }
+                        inf as u32
+                    })
+                    .collect();
+                Ok(Step::Gather {
+                    dtype: da,
+                    src,
+                    map,
+                    out,
+                })
+            }
+            "transpose" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let in_dims = self.odims(i, 0).to_vec();
+                let perm = &ins.attrs.dimensions;
+                if perm.len() != in_dims.len() || perm.iter().any(|&p| p >= in_dims.len()) {
+                    return Err(err(format!(
+                        "transpose permutation {:?} is not a permutation of rank {}",
+                        perm,
+                        in_dims.len()
+                    )));
+                }
+                let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+                let out_st = strides(&out_dims);
+                let in_st = strides(&in_dims);
+                let map: Vec<u32> = (0..n)
+                    .map(|flat| {
+                        let c = coords_of(flat, &out_dims, &out_st);
+                        let mut inf = 0usize;
+                        for (ix, &p) in perm.iter().enumerate() {
+                            inf += c[ix] * in_st[p];
+                        }
+                        inf as u32
+                    })
+                    .collect();
+                Ok(Step::Gather {
+                    dtype: da,
+                    src,
+                    map,
+                    out,
+                })
+            }
+            "slice" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let in_dims = self.odims(i, 0).to_vec();
+                let spec = &ins.attrs.slice;
+                if spec.len() != in_dims.len() {
+                    return Err(err(format!(
+                        "slice spec rank {} does not match operand rank {}",
+                        spec.len(),
+                        in_dims.len()
+                    )));
+                }
+                let mut out_dims = Vec::with_capacity(spec.len());
+                for (d, &(start, limit, stride)) in spec.iter().enumerate() {
+                    if stride <= 0 || start < 0 || limit < start || limit as usize > in_dims[d]
+                    {
+                        return Err(err(format!(
+                            "invalid slice [{start}:{limit}:{stride}] for dimension of size {}",
+                            in_dims[d]
+                        )));
+                    }
+                    out_dims.push(((limit - start) as usize).div_ceil(stride as usize));
+                }
+                let out_st = strides(&out_dims);
+                let in_st = strides(&in_dims);
+                let map: Vec<u32> = (0..n)
+                    .map(|flat| {
+                        let c = coords_of(flat, &out_dims, &out_st);
+                        let mut inf = 0usize;
+                        for (d, &(start, _, stride)) in spec.iter().enumerate() {
+                            inf += (start as usize + c[d] * stride as usize) * in_st[d];
+                        }
+                        inf as u32
+                    })
+                    .collect();
+                Ok(Step::Gather {
+                    dtype: da,
+                    src,
+                    map,
+                    out,
+                })
+            }
+            "pad" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let (fill, nf, df) = self.oref(i, 1, slot_of)?;
+                if nf != 1 || !self.odims(i, 1).is_empty() {
+                    return Err(err("pad fill value must be a scalar".into()));
+                }
+                if df != da {
+                    return Err(err("pad fill dtype mismatch".into()));
+                }
+                let in_dims = self.odims(i, 0).to_vec();
+                let spec = &ins.attrs.padding;
+                if spec.len() != in_dims.len() {
+                    return Err(err(format!(
+                        "padding spec rank {} does not match operand rank {}",
+                        spec.len(),
+                        in_dims.len()
+                    )));
+                }
+                let mut out_dims = Vec::with_capacity(spec.len());
+                for (d, &(lo, hi, interior)) in spec.iter().enumerate() {
+                    if interior < 0 {
+                        return Err(err("negative interior padding".into()));
+                    }
+                    let nd = in_dims[d] as i64;
+                    let stretched = if nd == 0 { 0 } else { nd + (nd - 1) * interior };
+                    let total = lo + stretched + hi;
+                    if total < 0 {
+                        return Err(err(format!("padding {lo}_{hi} collapses dimension {d}")));
+                    }
+                    out_dims.push(total as usize);
+                }
+                let in_st = strides(&in_dims);
+                let out_st = strides(&out_dims);
+                let mut map = vec![u32::MAX; elements(&out_dims)];
+                'next: for flat in 0..elements(&in_dims) {
+                    let c = coords_of(flat, &in_dims, &in_st);
+                    let mut of = 0usize;
+                    for (d, &(lo, _, interior)) in spec.iter().enumerate() {
+                        let pos = lo + c[d] as i64 * (1 + interior);
+                        if pos < 0 || pos as usize >= out_dims[d] {
+                            continue 'next; // cropped away by negative padding
+                        }
+                        of += pos as usize * out_st[d];
+                    }
+                    map[of] = flat as u32;
+                }
+                Ok(Step::Pad {
+                    dtype: da,
+                    src,
+                    fill,
+                    map,
+                    out,
+                })
+            }
+            "concatenate" => {
+                if ins.operands.is_empty() {
+                    return Err(err("concatenate with no operands".into()));
+                }
+                let dim = ins.attrs.dimensions.first().copied().unwrap_or(0);
+                let d0 = self.odims(i, 0).to_vec();
+                if dim >= d0.len() {
+                    return Err(err(format!(
+                        "concatenate dimension {dim} out of range for rank {}",
+                        d0.len()
+                    )));
+                }
+                let (_, _, dtype) = self.oref(i, 0, slot_of)?;
+                let out_dims = self.dims[i].clone();
+                let out_st = strides(&out_dims);
+                let mut parts = Vec::with_capacity(ins.operands.len());
+                let mut offset = 0usize;
+                for op_ix in 0..ins.operands.len() {
+                    let (r, _, dt) = self.oref(i, op_ix, slot_of)?;
+                    let d = self.odims(i, op_ix).to_vec();
+                    if d.len() != d0.len() || dt != dtype {
+                        return Err(err("concatenate operand shape/type mismatch".into()));
+                    }
+                    let st = strides(&d);
+                    let place: Vec<u32> = (0..elements(&d))
+                        .map(|flat| {
+                            let mut c = coords_of(flat, &d, &st);
+                            c[dim] += offset;
+                            let of: usize = c.iter().zip(&out_st).map(|(&ci, &si)| ci * si).sum();
+                            of as u32
+                        })
+                        .collect();
+                    offset += d[dim];
+                    parts.push((r, place));
+                }
+                Ok(Step::Concat {
+                    dtype,
+                    parts,
+                    out,
+                    n,
+                })
+            }
+            "dot" => self.lower_dot(i, out, slot_of),
+            "reduce" => self.lower_reduce(i, out, slot_of),
+            // Every dtype-correct elementwise case was consumed above (or
+            // by the fusable() early return); reaching here with a known
+            // elementwise opcode means the dtype does not support it.
+            "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+            | "remainder" | "and" | "or" | "xor" | "abs" | "negate" | "exponential"
+            | "exponential-minus-one" | "log" | "log-plus-one" | "logistic" | "tanh" | "sqrt"
+            | "rsqrt" | "sign" | "floor" | "ceil" | "cosine" | "sine" | "not" | "copy" => {
+                Err(err(format!(
+                    "op {:?} not defined for {}",
+                    ins.op, self.dtypes[i]
+                )))
+            }
+            other => Err(err(format!(
+                "opcode {other:?} (instruction {name}) passed the parse-time allow-list \
+                 but has no compiled lowering — parse.rs SUPPORTED and program.rs are \
+                 out of sync"
+            ))),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_binary(
+        &self,
+        name: &str,
+        op: &str,
+        na: usize,
+        da: DType,
+        nb: usize,
+        db: DType,
+        n: usize,
+        want: DType,
+    ) -> Result<()> {
+        if da != db {
+            return Err(err(format!(
+                "mixed element types in {op:?}: {da} vs {db}"
+            )));
+        }
+        if da != want {
+            return Err(err(format!("op {op:?} not defined for {da}")));
+        }
+        if na != nb || na != n {
+            return Err(err(format!(
+                "{name}: shape mismatch in elementwise op: {na} vs {nb} elements"
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_unary(
+        &self,
+        name: &str,
+        op: &str,
+        na: usize,
+        da: DType,
+        n: usize,
+        want: DType,
+    ) -> Result<()> {
+        if da != want {
+            return Err(err(format!("op {op:?} not defined for {da}")));
+        }
+        if na != n {
+            return Err(err(format!(
+                "{name}: unary operand has {na} elements, result wants {n}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Post-order collection of the fused group rooted at `head`.
+    fn collect_group(&self, head: usize, out: u32, slot_of: &[u32]) -> Result<FusedLoop> {
+        let mut inputs: Vec<Ref> = Vec::new();
+        let mut ops: Vec<LaneOp> = Vec::new();
+        // reg index per inlined/head SSA value.
+        let mut reg_of: Vec<Option<u8>> = vec![None; self.comp.instrs.len()];
+        self.collect_into(head, &mut inputs, &mut ops, &mut reg_of, slot_of)?;
+        let n = elements(&self.dims[head]);
+        debug_assert!(ops.len() <= MAX_FUSED_OPS && inputs.len() <= MAX_FUSED_INPUTS);
+        Ok(FusedLoop {
+            n,
+            inputs,
+            ops,
+            out,
+        })
+    }
+
+    fn collect_into(
+        &self,
+        i: usize,
+        inputs: &mut Vec<Ref>,
+        ops: &mut Vec<LaneOp>,
+        reg_of: &mut Vec<Option<u8>>,
+        slot_of: &[u32],
+    ) -> Result<u8> {
+        let ins = &self.comp.instrs[i];
+        let (op, binary) = EwOp::from_name(&ins.op).expect("fusable op");
+        let mut lanes: Vec<Lane> = Vec::with_capacity(2);
+        let arity = if binary { 2 } else { 1 };
+        for op_ix in 0..arity {
+            let o = ins.operands[op_ix];
+            let r = self.resolve(o);
+            // Elementwise operands must match the result's element count.
+            if elements(&self.dims[o]) != elements(&self.dims[i]) {
+                return Err(err(format!(
+                    "{}: shape mismatch in elementwise op: {} vs {} elements",
+                    ins.name,
+                    elements(&self.dims[o]),
+                    elements(&self.dims[i])
+                )));
+            }
+            let lane = if matches!(self.kinds[r], Kind::Inst) && self.inlined[r] {
+                let reg = match reg_of[r] {
+                    Some(reg) => reg,
+                    None => self.collect_into(r, inputs, ops, reg_of, slot_of)?,
+                };
+                Lane::Reg(reg)
+            } else {
+                let rf = self.ssa_ref(r, slot_of);
+                let ix = match inputs.iter().position(|&x| x == rf) {
+                    Some(ix) => ix,
+                    None => {
+                        inputs.push(rf);
+                        inputs.len() - 1
+                    }
+                };
+                Lane::In(ix as u8)
+            };
+            lanes.push(lane);
+        }
+        ops.push(LaneOp {
+            op,
+            a: lanes[0],
+            b: lanes.get(1).copied(),
+        });
+        let reg = (ops.len() - 1) as u8;
+        reg_of[i] = Some(reg);
+        Ok(reg)
+    }
+
+    fn lower_dot(&self, i: usize, out: u32, slot_of: &[u32]) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let attrs = &ins.attrs;
+        if !attrs.lhs_batch.is_empty() || !attrs.rhs_batch.is_empty() {
+            return Err(err("dot with batch dimensions is not supported".into()));
+        }
+        if attrs.lhs_contracting.len() != 1 || attrs.rhs_contracting.len() != 1 {
+            return Err(err(
+                "dot requires exactly one contracting dimension per side".into(),
+            ));
+        }
+        let (lc, rc) = (attrs.lhs_contracting[0], attrs.rhs_contracting[0]);
+        let (lhs, _, dl) = self.oref(i, 0, slot_of)?;
+        let (rhs, _, dr) = self.oref(i, 1, slot_of)?;
+        if dl != DType::F32 {
+            return Err(err(format!("expected f32 data, got {dl}")));
+        }
+        if dr != DType::F32 {
+            return Err(err(format!("expected f32 data, got {dr}")));
+        }
+        let ld = self.odims(i, 0).to_vec();
+        let rd = self.odims(i, 1).to_vec();
+        if lc >= ld.len() || rc >= rd.len() || ld[lc] != rd[rc] {
+            return Err(err(format!(
+                "dot contraction mismatch: lhs dim {lc} of {ld:?} vs rhs dim {rc} of {rd:?}"
+            )));
+        }
+        let k = ld[lc];
+        let lfree: Vec<usize> = (0..ld.len()).filter(|&d| d != lc).collect();
+        let rfree: Vec<usize> = (0..rd.len()).filter(|&d| d != rc).collect();
+        let l_st = strides(&ld);
+        let r_st = strides(&rd);
+        let lfree_dims: Vec<usize> = lfree.iter().map(|&d| ld[d]).collect();
+        let rfree_dims: Vec<usize> = rfree.iter().map(|&d| rd[d]).collect();
+        let m = elements(&lfree_dims);
+        let n = elements(&rfree_dims);
+        let lf_st = strides(&lfree_dims);
+        let rf_st = strides(&rfree_dims);
+        let l_base: Vec<u32> = (0..m)
+            .map(|flat| {
+                let c = coords_of(flat, &lfree_dims, &lf_st);
+                let mut b = 0usize;
+                for (ix, &d) in lfree.iter().enumerate() {
+                    b += c[ix] * l_st[d];
+                }
+                b as u32
+            })
+            .collect();
+        let r_base: Vec<u32> = (0..n)
+            .map(|flat| {
+                let c = coords_of(flat, &rfree_dims, &rf_st);
+                let mut b = 0usize;
+                for (ix, &d) in rfree.iter().enumerate() {
+                    b += c[ix] * r_st[d];
+                }
+                b as u32
+            })
+            .collect();
+        Ok(Step::Dot(DotPlan {
+            lhs,
+            rhs,
+            out,
+            m,
+            n,
+            k,
+            l_base,
+            r_base,
+            l_kstride: l_st[lc],
+            r_kstride: r_st[rc],
+        }))
+    }
+
+    fn lower_reduce(&self, i: usize, out: u32, slot_of: &[u32]) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let (data, _, dd) = self.oref(i, 0, slot_of)?;
+        let (init, ni, di) = self.oref(i, 1, slot_of)?;
+        if dd != DType::F32 {
+            return Err(err(format!(
+                "reduce over {dd} is not supported by the interp backend"
+            )));
+        }
+        if di != DType::F32 || ni != 1 {
+            return Err(err(format!("expected a scalar, got {ni} elements")));
+        }
+        let dims = self.odims(i, 0).to_vec();
+        let red = &ins.attrs.dimensions;
+        let keep: Vec<usize> = (0..dims.len()).filter(|d| !red.contains(d)).collect();
+        let out_dims: Vec<usize> = keep.iter().map(|&d| dims[d]).collect();
+        let out_elems = elements(&out_dims);
+        let st = strides(&dims);
+        let out_st = strides(&out_dims);
+        let map: Vec<u32> = (0..elements(&dims))
+            .map(|flat| {
+                let c = coords_of(flat, &dims, &st);
+                let mut of = 0usize;
+                for (kx, &d) in keep.iter().enumerate() {
+                    of += c[d] * out_st[kx];
+                }
+                of as u32
+            })
+            .collect();
+        let comp_name = ins
+            .attrs
+            .to_apply
+            .as_deref()
+            .ok_or_else(|| err("reduce without to_apply".into()))?;
+        let region = compile_region(self.module.computation(comp_name)?)?;
+        Ok(Step::Reduce(ReducePlan {
+            data,
+            init,
+            out,
+            out_elems,
+            map,
+            region,
+        }))
+    }
+}
+
+/// Compile a reduce region computation into a [`RegionFn`]: the one-op
+/// commutative cases get direct kernels, everything else a scalar register
+/// program (the satellite: multi-op regions never fall back to tree
+/// re-evaluation).
+fn compile_region(comp: &Computation) -> Result<RegionFn> {
+    if comp.params.len() != 2 {
+        return Err(err(format!(
+            "reduce region {:?} takes {} parameters, expected 2",
+            comp.name,
+            comp.params.len()
+        )));
+    }
+    // One-op fast path (jax emits these): root is a commutative binop over
+    // the two parameters.
+    if comp.instrs.len() == 3 {
+        let root = &comp.instrs[comp.root];
+        if root.operands.len() == 2
+            && comp.instrs[root.operands[0]].op == "parameter"
+            && comp.instrs[root.operands[1]].op == "parameter"
+        {
+            match root.op.as_str() {
+                "add" => return Ok(RegionFn::Add),
+                "multiply" => return Ok(RegionFn::Mul),
+                "maximum" => return Ok(RegionFn::Max),
+                "minimum" => return Ok(RegionFn::Min),
+                _ => {}
+            }
+        }
+    }
+    // General scalar register program.
+    let mut consts: Vec<f32> = Vec::new();
+    let mut ops: Vec<ScalarOp> = Vec::new();
+    let mut src_of: Vec<Option<ScalarSrc>> = vec![None; comp.instrs.len()];
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        let s = declared_dense(ins)?;
+        if s.dtype != DType::F32 || !s.dims.is_empty() {
+            return Err(err(format!(
+                "reduce region {:?}: {} is not a scalar f32 (regions are compiled to \
+                 scalar register programs)",
+                comp.name, ins.name
+            )));
+        }
+        let src = match ins.op.as_str() {
+            "parameter" => match ins.param.expect("parameter number") {
+                0 => ScalarSrc::Acc,
+                1 => ScalarSrc::X,
+                p => return Err(err(format!("region parameter {p} out of range"))),
+            },
+            "constant" => {
+                let c = ins.literal.as_ref().expect("parsed constant");
+                let ConstPayload::F32(v) = &c.payload else {
+                    return Err(err(format!(
+                        "reduce region {:?}: non-f32 constant",
+                        comp.name
+                    )));
+                };
+                if consts.len() >= MAX_REGION_OPS {
+                    return Err(err("reduce region has too many constants".into()));
+                }
+                consts.push(v[0]);
+                ScalarSrc::Const((consts.len() - 1) as u8)
+            }
+            "reshape" | "copy" => src_of[ins.operands[0]]
+                .ok_or_else(|| err(format!("{}: operand used before definition", ins.name)))?,
+            opname => {
+                let Some((op, binary)) = EwOp::from_name(opname) else {
+                    return Err(err(format!(
+                        "reduce region {:?}: op {opname:?} is outside the scalar-region \
+                         subset",
+                        comp.name
+                    )));
+                };
+                let get = |ix: usize| -> Result<ScalarSrc> {
+                    let o = *ins
+                        .operands
+                        .get(ix)
+                        .ok_or_else(|| err(format!("{}: missing operand {ix}", ins.name)))?;
+                    src_of[o].ok_or_else(|| {
+                        err(format!("{}: operand used before definition", ins.name))
+                    })
+                };
+                let a = get(0)?;
+                let b = if binary { Some(get(1)?) } else { None };
+                if ops.len() >= MAX_REGION_OPS {
+                    return Err(err("reduce region has too many ops".into()));
+                }
+                ops.push(ScalarOp { op, a, b });
+                ScalarSrc::Reg((ops.len() - 1) as u8)
+            }
+        };
+        src_of[i] = Some(src);
+    }
+    let result = src_of[comp.root].expect("root lowered");
+    Ok(RegionFn::Program(ScalarProgram {
+        ops,
+        consts,
+        result,
+    }))
+}

@@ -1,0 +1,919 @@
+//! The pre-PR tree-walk evaluator, retained as the correctness baseline.
+//!
+//! This is the PR 3 interpreter unchanged in semantics: per-instruction
+//! `Value` allocation, `f64`-boxed element access for structural ops,
+//! per-element coordinate decoding, per-element region re-evaluation for
+//! reduce (beyond the one-op fast path), and platform-libm transcendental
+//! math.  It exists for two purposes:
+//!
+//! * the **differential suite** (rust/tests/differential_interp.rs)
+//!   replays every fixture entry plus randomized inputs through both this
+//!   path and the compiled register program, under a 1e-6 tolerance (the
+//!   compiled path swaps libm for [`super::fmath`], so the two agree to
+//!   ~1 ulp rather than bitwise);
+//! * the **perf baseline**: `cargo bench --bench perf_interp` measures the
+//!   compiled path's speedup against this evaluator in the same process
+//!   and records it in BENCH_4.json.
+//!
+//! Do not optimize this module — its cost profile IS the baseline.
+
+use super::parse::{
+    coords_of, declared_dense, elements, err, strides, Attrs, Computation, ConstPayload,
+    ConstValue, DType, Module, Shape, ShapeSpec,
+};
+use crate::{Data, Literal, Result};
+
+// ------------------------------------------------------------------ values
+
+#[derive(Clone, Debug)]
+enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::Pred(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Buf::F32(_) => DType::F32,
+            Buf::I32(_) => DType::S32,
+            Buf::Pred(_) => DType::Pred,
+        }
+    }
+
+    /// Lossless-for-our-dtypes scalar view (f32 and i32 embed exactly in
+    /// f64; pred maps to 0/1) — used by structural ops only, which write
+    /// the values straight back into the same dtype.
+    fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Buf::F32(v) => v[i] as f64,
+            Buf::I32(v) => v[i] as f64,
+            Buf::Pred(v) => {
+                if v[i] {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    fn build(dtype: DType, vals: Vec<f64>) -> Buf {
+        match dtype {
+            DType::F32 => Buf::F32(vals.into_iter().map(|v| v as f32).collect()),
+            DType::S32 => Buf::I32(vals.into_iter().map(|v| v as i32).collect()),
+            DType::Pred => Buf::Pred(vals.into_iter().map(|v| v != 0.0).collect()),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Value {
+    Dense { dims: Vec<usize>, buf: Buf },
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    fn dense(&self) -> Result<(&[usize], &Buf)> {
+        match self {
+            Value::Dense { dims, buf } => Ok((dims, buf)),
+            Value::Tuple(_) => Err(err("expected a dense (non-tuple) value".into())),
+        }
+    }
+
+    fn f32s(&self) -> Result<&[f32]> {
+        match self.dense()?.1 {
+            Buf::F32(v) => Ok(v),
+            other => Err(err(format!("expected f32 data, got {}", other.dtype()))),
+        }
+    }
+
+    fn preds(&self) -> Result<&[bool]> {
+        match self.dense()?.1 {
+            Buf::Pred(v) => Ok(v),
+            other => Err(err(format!("expected pred data, got {}", other.dtype()))),
+        }
+    }
+
+    fn scalar_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            return Err(err(format!("expected a scalar, got {} elements", v.len())));
+        }
+        Ok(v[0])
+    }
+
+    fn from_const(c: &ConstValue) -> Value {
+        let buf = match &c.payload {
+            ConstPayload::F32(v) => Buf::F32(v.clone()),
+            ConstPayload::I32(v) => Buf::I32(v.clone()),
+            ConstPayload::Pred(v) => Buf::Pred(v.clone()),
+        };
+        Value::Dense {
+            dims: c.dims.clone(),
+            buf,
+        }
+    }
+}
+
+// ------------------------------------------------------------- evaluation
+
+/// Execute the entry computation over argument literals (the pre-PR
+/// `Module::evaluate`).
+pub(crate) fn evaluate(module: &Module, args: &[&Literal]) -> Result<Literal> {
+    let comp = module.entry_computation();
+    if args.len() != comp.params.len() {
+        return Err(err(format!(
+            "entry {:?} takes {} parameters, got {} arguments",
+            comp.name,
+            comp.params.len(),
+            args.len()
+        )));
+    }
+    let mut vals = Vec::with_capacity(args.len());
+    for (i, lit) in args.iter().enumerate() {
+        let v = value_from_literal(lit)?;
+        let pins = &comp.instrs[comp.params[i]];
+        if let ShapeSpec::Dense(want) = &pins.shape {
+            let (dims, buf) = v.dense()?;
+            if dims != want.dims.as_slice() || buf.dtype() != want.dtype {
+                return Err(err(format!(
+                    "argument {i} ({}): expected {want}, got {}[{}]",
+                    pins.name,
+                    buf.dtype(),
+                    dims.iter()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )));
+            }
+        }
+        vals.push(v);
+    }
+    let out = eval_computation(module, comp, &vals)?;
+    literal_from_value(out)
+}
+
+fn eval_computation(module: &Module, comp: &Computation, args: &[Value]) -> Result<Value> {
+    let mut env: Vec<Option<Value>> = vec![None; comp.instrs.len()];
+    for idx in 0..comp.instrs.len() {
+        let v = eval_instr(module, comp, idx, &env, args)?;
+        env[idx] = Some(v);
+    }
+    Ok(env[comp.root].take().expect("root evaluated"))
+}
+
+fn eval_instr(
+    module: &Module,
+    comp: &Computation,
+    idx: usize,
+    env: &[Option<Value>],
+    args: &[Value],
+) -> Result<Value> {
+    let ins = &comp.instrs[idx];
+    let opv = |i: usize| -> Result<&Value> {
+        let oi = *ins
+            .operands
+            .get(i)
+            .ok_or_else(|| err(format!("{}: missing operand {i}", ins.name)))?;
+        env[oi]
+            .as_ref()
+            .ok_or_else(|| err(format!("{}: operand used before definition", ins.name)))
+    };
+    let out = match ins.op.as_str() {
+        "parameter" => {
+            let p = ins.param.expect("parameter number");
+            args.get(p)
+                .ok_or_else(|| {
+                    err(format!(
+                        "{}: parameter({p}) exceeds the {} arguments supplied",
+                        ins.name,
+                        args.len()
+                    ))
+                })?
+                .clone()
+        }
+        "constant" => Value::from_const(ins.literal.as_ref().expect("parsed constant")),
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+        | "remainder" | "and" | "or" | "xor" => binary_elementwise(&ins.op, opv(0)?, opv(1)?)?,
+        "abs" | "negate" | "exponential" | "exponential-minus-one" | "log" | "log-plus-one"
+        | "logistic" | "tanh" | "sqrt" | "rsqrt" | "sign" | "floor" | "ceil" | "cosine"
+        | "sine" | "not" | "copy" => unary_elementwise(&ins.op, opv(0)?)?,
+        "compare" => compare(
+            ins.attrs
+                .direction
+                .as_deref()
+                .ok_or_else(|| err(format!("{}: compare without direction", ins.name)))?,
+            opv(0)?,
+            opv(1)?,
+        )?,
+        "select" => select(opv(0)?, opv(1)?, opv(2)?)?,
+        "convert" => convert(opv(0)?, declared_dense(ins)?)?,
+        "broadcast" => broadcast(opv(0)?, &ins.attrs.dimensions, declared_dense(ins)?)?,
+        "reshape" => reshape(opv(0)?, declared_dense(ins)?)?,
+        "transpose" => transpose(opv(0)?, &ins.attrs.dimensions)?,
+        "slice" => slice(opv(0)?, &ins.attrs.slice)?,
+        "pad" => pad(opv(0)?, opv(1)?, &ins.attrs.padding)?,
+        "concatenate" => {
+            let mut parts = Vec::with_capacity(ins.operands.len());
+            for i in 0..ins.operands.len() {
+                parts.push(opv(i)?);
+            }
+            concatenate(&parts, ins.attrs.dimensions.first().copied().unwrap_or(0))?
+        }
+        "dot" => dot(opv(0)?, opv(1)?, &ins.attrs)?,
+        "reduce" => reduce(module, opv(0)?, opv(1)?, &ins.attrs)?,
+        "iota" => iota(declared_dense(ins)?, ins.attrs.iota_dimension.unwrap_or(0))?,
+        "tuple" => {
+            let mut parts = Vec::with_capacity(ins.operands.len());
+            for i in 0..ins.operands.len() {
+                parts.push(opv(i)?.clone());
+            }
+            Value::Tuple(parts)
+        }
+        "get-tuple-element" => {
+            let i = ins
+                .attrs
+                .index
+                .ok_or_else(|| err(format!("{}: get-tuple-element without index", ins.name)))?;
+            match opv(0)? {
+                Value::Tuple(parts) => parts
+                    .get(i)
+                    .cloned()
+                    .ok_or_else(|| err(format!("{}: tuple index {i} out of range", ins.name)))?,
+                Value::Dense { .. } => {
+                    return Err(err(format!("{}: get-tuple-element of non-tuple", ins.name)))
+                }
+            }
+        }
+        // Unreachable for modules from Module::parse (its SUPPORTED
+        // allow-list screens opcodes); reachable only if that list and
+        // these arms drift apart — report it as the bug it is.
+        other => {
+            return Err(err(format!(
+                "opcode {other:?} (instruction {}) passed the parse-time allow-list \
+                 but has no evaluator — parse.rs SUPPORTED and reference.rs are out \
+                 of sync",
+                ins.name
+            )))
+        }
+    };
+    // Self-check against the declared result shape: a mismatch means an
+    // interpreter bug, better caught here than as silent numerics.
+    if let (ShapeSpec::Dense(want), Value::Dense { dims, buf }) = (&ins.shape, &out) {
+        if dims != &want.dims || buf.dtype() != want.dtype {
+            return Err(err(format!(
+                "{}: interpreter produced {}[{}], HLO declares {want}",
+                ins.name,
+                buf.dtype(),
+                dims.iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )));
+        }
+    }
+    Ok(out)
+}
+
+fn reduce(module: &Module, data: &Value, init: &Value, attrs: &Attrs) -> Result<Value> {
+    let (dims, buf) = data.dense()?;
+    let red = &attrs.dimensions;
+    let keep: Vec<usize> = (0..dims.len()).filter(|d| !red.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| dims[d]).collect();
+    let out_elems = elements(&out_dims);
+    let comp_name = attrs
+        .to_apply
+        .as_deref()
+        .ok_or_else(|| err("reduce without to_apply".into()))?;
+    let comp = module.computation(comp_name)?;
+    if comp.params.len() != 2 {
+        return Err(err(format!(
+            "reduce region {comp_name:?} takes {} parameters, expected 2",
+            comp.params.len()
+        )));
+    }
+    let fast = fast_binop(comp);
+    let st = strides(dims);
+    let out_st = strides(&out_dims);
+
+    match buf {
+        Buf::F32(v) => {
+            let init = init.scalar_f32()?;
+            let mut acc = vec![init; out_elems];
+            for (flat, &x) in v.iter().enumerate() {
+                let c = coords_of(flat, dims, &st);
+                let mut of = 0usize;
+                for (k, &d) in keep.iter().enumerate() {
+                    of += c[d] * out_st[k];
+                }
+                acc[of] = match fast {
+                    Some("add") => acc[of] + x,
+                    Some("multiply") => acc[of] * x,
+                    Some("maximum") => acc[of].max(x),
+                    Some("minimum") => acc[of].min(x),
+                    _ => {
+                        let a = Value::Dense {
+                            dims: vec![],
+                            buf: Buf::F32(vec![acc[of]]),
+                        };
+                        let b = Value::Dense {
+                            dims: vec![],
+                            buf: Buf::F32(vec![x]),
+                        };
+                        eval_computation(module, comp, &[a, b])?.scalar_f32()?
+                    }
+                };
+            }
+            Ok(Value::Dense {
+                dims: out_dims,
+                buf: Buf::F32(acc),
+            })
+        }
+        other => Err(err(format!(
+            "reduce over {} is not supported by the interp backend",
+            other.dtype()
+        ))),
+    }
+}
+
+/// If `comp` is a single binary op over its two parameters, return the op
+/// name (fast-path for reduce regions, which jax emits as one-op adds).
+fn fast_binop(comp: &Computation) -> Option<&str> {
+    if comp.instrs.len() != 3 || comp.params.len() != 2 {
+        return None;
+    }
+    let root = &comp.instrs[comp.root];
+    if root.operands.len() == 2
+        && comp.instrs[root.operands[0]].op == "parameter"
+        && comp.instrs[root.operands[1]].op == "parameter"
+    {
+        Some(root.op.as_str())
+    } else {
+        None
+    }
+}
+
+// -------------------------------------------------------------- op kernels
+
+fn same_dims<'v>(a: &'v Value, b: &'v Value) -> Result<(&'v [usize], &'v Buf, &'v Buf)> {
+    let (da, ba) = a.dense()?;
+    let (db, bb) = b.dense()?;
+    if da != db {
+        return Err(err(format!(
+            "shape mismatch in elementwise op: [{}] vs [{}]",
+            da.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+            db.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+        )));
+    }
+    Ok((da, ba, bb))
+}
+
+fn binary_elementwise(op: &str, a: &Value, b: &Value) -> Result<Value> {
+    let (dims, ba, bb) = same_dims(a, b)?;
+    let buf = match (ba, bb) {
+        (Buf::F32(x), Buf::F32(y)) => {
+            let f: fn(f32, f32) -> f32 = match op {
+                "add" => |a, b| a + b,
+                "subtract" => |a, b| a - b,
+                "multiply" => |a, b| a * b,
+                "divide" => |a, b| a / b,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                "power" => f32::powf,
+                "remainder" => |a, b| a % b,
+                _ => return Err(err(format!("op {op:?} not defined for f32"))),
+            };
+            Buf::F32(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        (Buf::I32(x), Buf::I32(y)) => {
+            let f: fn(i32, i32) -> i32 = match op {
+                "add" => i32::wrapping_add,
+                "subtract" => i32::wrapping_sub,
+                "multiply" => i32::wrapping_mul,
+                "maximum" => i32::max,
+                "minimum" => i32::min,
+                "and" => |a, b| a & b,
+                "or" => |a, b| a | b,
+                "xor" => |a, b| a ^ b,
+                _ => return Err(err(format!("op {op:?} not defined for s32"))),
+            };
+            Buf::I32(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        (Buf::Pred(x), Buf::Pred(y)) => {
+            let f: fn(bool, bool) -> bool = match op {
+                "and" => |a, b| a && b,
+                "or" => |a, b| a || b,
+                "xor" => |a, b| a ^ b,
+                _ => return Err(err(format!("op {op:?} not defined for pred"))),
+            };
+            Buf::Pred(x.iter().zip(y).map(|(&a, &b)| f(a, b)).collect())
+        }
+        _ => {
+            return Err(err(format!(
+                "mixed element types in {op:?}: {} vs {}",
+                ba.dtype(),
+                bb.dtype()
+            )))
+        }
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf,
+    })
+}
+
+fn unary_elementwise(op: &str, a: &Value) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    let out = match buf {
+        Buf::F32(v) => {
+            let f: fn(f32) -> f32 = match op {
+                "abs" => f32::abs,
+                "negate" => |x| -x,
+                "exponential" => f32::exp,
+                "exponential-minus-one" => f32::exp_m1,
+                "log" => f32::ln,
+                "log-plus-one" => f32::ln_1p,
+                "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
+                "tanh" => f32::tanh,
+                "sqrt" => f32::sqrt,
+                "rsqrt" => |x| 1.0 / x.sqrt(),
+                "sign" => |x| {
+                    if x == 0.0 {
+                        0.0
+                    } else {
+                        x.signum()
+                    }
+                },
+                "floor" => f32::floor,
+                "ceil" => f32::ceil,
+                "cosine" => f32::cos,
+                "sine" => f32::sin,
+                "copy" => |x| x,
+                _ => return Err(err(format!("op {op:?} not defined for f32"))),
+            };
+            Buf::F32(v.iter().map(|&x| f(x)).collect())
+        }
+        Buf::I32(v) => {
+            let f: fn(i32) -> i32 = match op {
+                "abs" => i32::wrapping_abs,
+                "negate" => i32::wrapping_neg,
+                "sign" => i32::signum,
+                "copy" => |x| x,
+                _ => return Err(err(format!("op {op:?} not defined for s32"))),
+            };
+            Buf::I32(v.iter().map(|&x| f(x)).collect())
+        }
+        Buf::Pred(v) => match op {
+            "not" => Buf::Pred(v.iter().map(|&x| !x).collect()),
+            "copy" => Buf::Pred(v.clone()),
+            _ => return Err(err(format!("op {op:?} not defined for pred"))),
+        },
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: out,
+    })
+}
+
+fn compare(direction: &str, a: &Value, b: &Value) -> Result<Value> {
+    let (dims, ba, bb) = same_dims(a, b)?;
+    let n = ba.len();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let ord = match (ba, bb) {
+            (Buf::F32(x), Buf::F32(y)) => x[i].partial_cmp(&y[i]),
+            (Buf::I32(x), Buf::I32(y)) => Some(x[i].cmp(&y[i])),
+            (Buf::Pred(x), Buf::Pred(y)) => Some(x[i].cmp(&y[i])),
+            _ => {
+                return Err(err(format!(
+                    "mixed element types in compare: {} vs {}",
+                    ba.dtype(),
+                    bb.dtype()
+                )))
+            }
+        };
+        // `ord` is None only for NaN: all comparisons false except NE.
+        let r = match direction {
+            "EQ" => ord == Some(std::cmp::Ordering::Equal),
+            "NE" => ord != Some(std::cmp::Ordering::Equal),
+            "LT" => ord == Some(std::cmp::Ordering::Less),
+            "GT" => ord == Some(std::cmp::Ordering::Greater),
+            "LE" => matches!(
+                ord,
+                Some(std::cmp::Ordering::Less | std::cmp::Ordering::Equal)
+            ),
+            "GE" => matches!(
+                ord,
+                Some(std::cmp::Ordering::Greater | std::cmp::Ordering::Equal)
+            ),
+            other => return Err(err(format!("unknown compare direction {other:?}"))),
+        };
+        out.push(r);
+    }
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: Buf::Pred(out),
+    })
+}
+
+fn select(pred: &Value, on_true: &Value, on_false: &Value) -> Result<Value> {
+    let p = pred.preds()?;
+    let (dims, bt, bf) = same_dims(on_true, on_false)?;
+    let n = bt.len();
+    if p.len() != n && p.len() != 1 {
+        return Err(err(format!(
+            "select predicate has {} elements, operands have {n}",
+            p.len()
+        )));
+    }
+    let pick = |i: usize| -> bool {
+        if p.len() == 1 {
+            p[0]
+        } else {
+            p[i]
+        }
+    };
+    let buf = match (bt, bf) {
+        (Buf::F32(t), Buf::F32(f)) => {
+            Buf::F32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Buf::I32(t), Buf::I32(f)) => {
+            Buf::I32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Buf::Pred(t), Buf::Pred(f)) => {
+            Buf::Pred((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        _ => return Err(err("mixed element types in select".into())),
+    };
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf,
+    })
+}
+
+fn convert(a: &Value, want: &Shape) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    let n = buf.len();
+    let out = match (buf, want.dtype) {
+        (Buf::F32(v), DType::F32) => Buf::F32(v.clone()),
+        (Buf::I32(v), DType::S32) => Buf::I32(v.clone()),
+        (Buf::Pred(v), DType::Pred) => Buf::Pred(v.clone()),
+        (Buf::Pred(v), DType::F32) => {
+            Buf::F32(v.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect())
+        }
+        (Buf::Pred(v), DType::S32) => Buf::I32(v.iter().map(|&b| b as i32).collect()),
+        (Buf::I32(v), DType::F32) => Buf::F32(v.iter().map(|&x| x as f32).collect()),
+        (Buf::F32(v), DType::S32) => {
+            // XLA convert f32->s32 rounds toward zero.
+            Buf::I32(v.iter().map(|&x| x as i32).collect())
+        }
+        (Buf::F32(v), DType::Pred) => Buf::Pred(v.iter().map(|&x| x != 0.0).collect()),
+        (Buf::I32(v), DType::Pred) => Buf::Pred(v.iter().map(|&x| x != 0).collect()),
+    };
+    debug_assert_eq!(out.len(), n);
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: out,
+    })
+}
+
+fn broadcast(a: &Value, mapping: &[usize], want: &Shape) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if mapping.len() != in_dims.len() {
+        return Err(err(format!(
+            "broadcast dimensions {:?} do not cover operand rank {}",
+            mapping,
+            in_dims.len()
+        )));
+    }
+    for (i, &od) in mapping.iter().enumerate() {
+        // A mapped dim must match the output dim or be degenerate (1).
+        if od >= want.dims.len() || (want.dims[od] != in_dims[i] && in_dims[i] != 1) {
+            return Err(err(format!(
+                "broadcast maps operand dim {i} (size {}) to output dim {od} of {want}",
+                in_dims[i]
+            )));
+        }
+    }
+    let out_dims = want.dims.clone();
+    let out_elems = elements(&out_dims);
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let mut vals = Vec::with_capacity(out_elems);
+    for flat in 0..out_elems {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (i, &od) in mapping.iter().enumerate() {
+            let ci = if in_dims[i] == 1 { 0 } else { c[od] };
+            inf += ci * in_st[i];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn reshape(a: &Value, want: &Shape) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if elements(in_dims) != want.elements() {
+        return Err(err(format!(
+            "reshape element count mismatch: {} -> {want}",
+            elements(in_dims)
+        )));
+    }
+    Ok(Value::Dense {
+        dims: want.dims.clone(),
+        buf: buf.clone(),
+    })
+}
+
+fn transpose(a: &Value, perm: &[usize]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if perm.len() != in_dims.len() || perm.iter().any(|&p| p >= in_dims.len()) {
+        return Err(err(format!(
+            "transpose permutation {:?} is not a permutation of rank {}",
+            perm,
+            in_dims.len()
+        )));
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            inf += c[i] * in_st[p];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn slice(a: &Value, spec: &[(i64, i64, i64)]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    if spec.len() != in_dims.len() {
+        return Err(err(format!(
+            "slice spec rank {} does not match operand rank {}",
+            spec.len(),
+            in_dims.len()
+        )));
+    }
+    let mut out_dims = Vec::with_capacity(spec.len());
+    for (d, &(start, limit, stride)) in spec.iter().enumerate() {
+        if stride <= 0 || start < 0 || limit < start || limit as usize > in_dims[d] {
+            return Err(err(format!(
+                "invalid slice [{start}:{limit}:{stride}] for dimension of size {}",
+                in_dims[d]
+            )));
+        }
+        out_dims.push(((limit - start) as usize).div_ceil(stride as usize));
+    }
+    let out_st = strides(&out_dims);
+    let in_st = strides(in_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut inf = 0usize;
+        for (d, &(start, _, stride)) in spec.iter().enumerate() {
+            inf += (start as usize + c[d] * stride as usize) * in_st[d];
+        }
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn pad(a: &Value, fill: &Value, spec: &[(i64, i64, i64)]) -> Result<Value> {
+    let (in_dims, buf) = a.dense()?;
+    let (fdims, fbuf) = fill.dense()?;
+    if !fdims.is_empty() || fbuf.len() != 1 {
+        return Err(err("pad fill value must be a scalar".into()));
+    }
+    if spec.len() != in_dims.len() {
+        return Err(err(format!(
+            "padding spec rank {} does not match operand rank {}",
+            spec.len(),
+            in_dims.len()
+        )));
+    }
+    let mut out_dims = Vec::with_capacity(spec.len());
+    for (d, &(lo, hi, interior)) in spec.iter().enumerate() {
+        if interior < 0 {
+            return Err(err("negative interior padding".into()));
+        }
+        let n = in_dims[d] as i64;
+        let stretched = if n == 0 { 0 } else { n + (n - 1) * interior };
+        let total = lo + stretched + hi;
+        if total < 0 {
+            return Err(err(format!("padding {lo}_{hi} collapses dimension {d}")));
+        }
+        out_dims.push(total as usize);
+    }
+    let out_elems = elements(&out_dims);
+    let fill_v = fbuf.get_f64(0);
+    let mut vals = vec![fill_v; out_elems];
+    let in_st = strides(in_dims);
+    let out_st = strides(&out_dims);
+    let in_elems = elements(in_dims);
+    'next: for flat in 0..in_elems {
+        let c = coords_of(flat, in_dims, &in_st);
+        let mut of = 0usize;
+        for (d, &(lo, _, interior)) in spec.iter().enumerate() {
+            let pos = lo + c[d] as i64 * (1 + interior);
+            if pos < 0 || pos as usize >= out_dims[d] {
+                continue 'next; // cropped away by negative padding
+            }
+            of += pos as usize * out_st[d];
+        }
+        vals[of] = buf.get_f64(flat);
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn concatenate(parts: &[&Value], dim: usize) -> Result<Value> {
+    if parts.is_empty() {
+        return Err(err("concatenate with no operands".into()));
+    }
+    let (d0, b0) = parts[0].dense()?;
+    if dim >= d0.len() {
+        return Err(err(format!(
+            "concatenate dimension {dim} out of range for rank {}",
+            d0.len()
+        )));
+    }
+    let dtype = b0.dtype();
+    let mut out_dims = d0.to_vec();
+    out_dims[dim] = 0;
+    for p in parts {
+        let (d, b) = p.dense()?;
+        if d.len() != d0.len() || b.dtype() != dtype {
+            return Err(err("concatenate operand shape/type mismatch".into()));
+        }
+        out_dims[dim] += d[dim];
+    }
+    let out_st = strides(&out_dims);
+    let n = elements(&out_dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let mut c = coords_of(flat, &out_dims, &out_st);
+        let mut k = c[dim];
+        let mut src = None;
+        for p in parts {
+            let (d, b) = p.dense()?;
+            if k < d[dim] {
+                c[dim] = k;
+                let st = strides(d);
+                let inf: usize = c.iter().zip(&st).map(|(&ci, &si)| ci * si).sum();
+                src = Some(b.get_f64(inf));
+                break;
+            }
+            k -= d[dim];
+        }
+        vals.push(src.expect("concatenate source found"));
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::build(dtype, vals),
+    })
+}
+
+fn dot(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
+    if !attrs.lhs_batch.is_empty() || !attrs.rhs_batch.is_empty() {
+        return Err(err("dot with batch dimensions is not supported".into()));
+    }
+    if attrs.lhs_contracting.len() != 1 || attrs.rhs_contracting.len() != 1 {
+        return Err(err(
+            "dot requires exactly one contracting dimension per side".into(),
+        ));
+    }
+    let (lc, rc) = (attrs.lhs_contracting[0], attrs.rhs_contracting[0]);
+    let la = a.f32s()?;
+    let rb = b.f32s()?;
+    let (ld, _) = a.dense()?;
+    let (rd, _) = b.dense()?;
+    if lc >= ld.len() || rc >= rd.len() || ld[lc] != rd[rc] {
+        return Err(err(format!(
+            "dot contraction mismatch: lhs dim {lc} of {ld:?} vs rhs dim {rc} of {rd:?}"
+        )));
+    }
+    let k = ld[lc];
+    let lfree: Vec<usize> = (0..ld.len()).filter(|&d| d != lc).collect();
+    let rfree: Vec<usize> = (0..rd.len()).filter(|&d| d != rc).collect();
+    let out_dims: Vec<usize> = lfree
+        .iter()
+        .map(|&d| ld[d])
+        .chain(rfree.iter().map(|&d| rd[d]))
+        .collect();
+    let l_st = strides(ld);
+    let r_st = strides(rd);
+    let out_st = strides(&out_dims);
+    let n = elements(&out_dims);
+    let mut out = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let mut lbase = 0usize;
+        for (i, &d) in lfree.iter().enumerate() {
+            lbase += c[i] * l_st[d];
+        }
+        let mut rbase = 0usize;
+        for (i, &d) in rfree.iter().enumerate() {
+            rbase += c[lfree.len() + i] * r_st[d];
+        }
+        let mut acc = 0.0f32;
+        for kk in 0..k {
+            acc += la[lbase + kk * l_st[lc]] * rb[rbase + kk * r_st[rc]];
+        }
+        out.push(acc);
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::F32(out),
+    })
+}
+
+fn iota(want: &Shape, dim: usize) -> Result<Value> {
+    if dim >= want.dims.len().max(1) {
+        return Err(err(format!("iota dimension {dim} out of range for {want}")));
+    }
+    let st = strides(&want.dims);
+    let n = want.elements();
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &want.dims, &st);
+        vals.push(c.get(dim).copied().unwrap_or(0) as f64);
+    }
+    Ok(Value::Dense {
+        dims: want.dims.clone(),
+        buf: Buf::build(want.dtype, vals),
+    })
+}
+
+// ----------------------------------------------------- literal conversion
+
+fn value_from_literal(l: &Literal) -> Result<Value> {
+    let (data, dims) = l
+        .dense_parts()
+        .ok_or_else(|| err("tuple arguments are not supported".into()))?;
+    let mut ud = Vec::with_capacity(dims.len());
+    for &d in dims {
+        if d < 0 {
+            return Err(err(format!("negative dimension {d} in argument")));
+        }
+        ud.push(d as usize);
+    }
+    let buf = match data {
+        Data::F32(v) => Buf::F32(v.clone()),
+        Data::I32(v) => Buf::I32(v.clone()),
+    };
+    if buf.len() != elements(&ud) {
+        return Err(err(format!(
+            "argument has {} elements but dims {ud:?}",
+            buf.len()
+        )));
+    }
+    Ok(Value::Dense { dims: ud, buf })
+}
+
+fn literal_from_value(v: Value) -> Result<Literal> {
+    match v {
+        Value::Dense { dims, buf } => {
+            let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let data = match buf {
+                Buf::F32(v) => Data::F32(v),
+                Buf::I32(v) => Data::I32(v),
+                Buf::Pred(v) => Data::I32(v.into_iter().map(i32::from).collect()),
+            };
+            Ok(Literal::from_data(data, dims))
+        }
+        Value::Tuple(parts) => {
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(literal_from_value(p)?);
+            }
+            Ok(Literal::tuple(out))
+        }
+    }
+}

@@ -9,10 +9,20 @@
 //! with the backend selected by `DIVEBATCH_BACKEND` at client creation:
 //!
 //! * **`interp`** (the default): a pure-Rust HLO-text interpreter
-//!   (the `interp` module).  [`PjRtClient::compile`] parses the module (rejecting
-//!   anything outside the supported op subset with an error naming the
-//!   opcode) and [`PjRtLoadedExecutable::execute`] evaluates it on the
-//!   host.  This is the reference backend the numeric test suite runs on
+//!   (the `interp` module) with a **compile phase and an execute phase**.
+//!   [`PjRtClient::compile`] parses the module (rejecting anything outside
+//!   the supported op subset with an error naming the opcode) and lowers
+//!   it into a flat SSA register program: typed f32/i32/pred kernels,
+//!   precomputed gather maps and dot/reduce plans, fused elementwise
+//!   loops, and a last-use buffer arena reused across calls — so
+//!   [`PjRtLoadedExecutable::execute`] does near-zero allocation in steady
+//!   state and borrows its argument [`Literal`]s rather than cloning them.
+//!   Transcendentals use in-crate deterministic kernels (interp/fmath.rs),
+//!   so compiled results are bit-identical across platforms.  The pre-PR
+//!   tree-walk evaluator is retained as
+//!   [`PjRtLoadedExecutable::execute_reference`] for differential tests
+//!   and the `perf_interp` bench baseline (see BENCH_4.json at the repo
+//!   root).  This is the backend the numeric test suite runs on
 //!   everywhere — no AOT artifacts beyond the committed fixtures, no
 //!   native XLA.  Platform name: [`INTERP_PLATFORM`].
 //! * **`stub`** (`DIVEBATCH_BACKEND=stub`): compile/link stub.  Parsing
@@ -311,14 +321,16 @@ impl PjRtClient {
     }
 
     /// Compile a computation.  Under `interp` this parses the HLO text
-    /// into an executable program (clear error on anything outside the
-    /// supported op subset); under `stub` it succeeds unconditionally so
+    /// AND lowers it into the register program executed by
+    /// [`PjRtLoadedExecutable::execute`] (clear error on anything outside
+    /// the supported op subset — both phases happen here, so nothing
+    /// fails mid-training); under `stub` it succeeds unconditionally so
     /// the executable cache is exercisable, and the product refuses to
     /// execute.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         let program = match self.backend {
             Backend::Stub => None,
-            Backend::Interp => Some(Arc::new(interp::Module::parse(&comp.module.text)?)),
+            Backend::Interp => Some(Arc::new(interp::Compiled::compile(&comp.module.text)?)),
         };
         Ok(PjRtLoadedExecutable {
             hlo_bytes: comp.module.text.len(),
@@ -345,22 +357,47 @@ impl PjRtBuffer {
 pub struct PjRtLoadedExecutable {
     /// Size of the HLO text this was compiled from (debug visibility).
     pub hlo_bytes: usize,
-    /// The interpreter program; `None` under the compile-only stub.
-    program: Option<Arc<interp::Module>>,
+    /// The compiled interpreter program (register program + retained
+    /// parsed module); `None` under the compile-only stub.
+    program: Option<Arc<interp::Compiled>>,
 }
 
 impl PjRtLoadedExecutable {
-    /// Run the program.  Mirrors the real binding's return shape:
-    /// `result[replica][output]`, with the entry's tuple result in
-    /// `result[0][0]` (fetch with `to_literal_sync`, then
+    /// Run the compiled register program.  Mirrors the real binding's
+    /// return shape: `result[replica][output]`, with the entry's tuple
+    /// result in `result[0][0]` (fetch with `to_literal_sync`, then
     /// `decompose_tuple`).
     pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let Some(program) = &self.program else {
             return Err(Error::StubBackend("cannot execute compiled HLO".into()));
         };
         let lits: Vec<&Literal> = args.iter().map(Borrow::borrow).collect();
-        let value = program.evaluate(&lits)?;
+        let value = program.execute(&lits)?;
         Ok(vec![vec![PjRtBuffer { value }]])
+    }
+
+    /// Run through the retained pre-PR tree-walk evaluator instead of the
+    /// compiled register program.  Exists for the differential test suite
+    /// and the `perf_interp` bench's speedup baseline — production code
+    /// paths must use [`PjRtLoadedExecutable::execute`].
+    pub fn execute_reference<L: Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let Some(program) = &self.program else {
+            return Err(Error::StubBackend("cannot execute compiled HLO".into()));
+        };
+        let lits: Vec<&Literal> = args.iter().map(Borrow::borrow).collect();
+        let value = program.execute_reference(&lits)?;
+        Ok(vec![vec![PjRtBuffer { value }]])
+    }
+
+    /// Allocs-proxy counters of the compiled program's buffer arena:
+    /// `(arenas created, buffers grown)`.  Steady-state execution keeps
+    /// both flat — the `perf_interp` bench records them in BENCH_4.json.
+    /// `None` under the compile-only stub.
+    pub fn interp_arena_stats(&self) -> Option<(u64, u64)> {
+        self.program.as_ref().map(|p| p.arena_stats())
     }
 }
 
