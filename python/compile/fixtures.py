@@ -7,16 +7,23 @@ model (``tinylogreg8``).  This script generates those artifacts once, at
 authoring time; the files it writes are checked in, so `cargo test` never
 needs Python.
 
+Two fixture models are emitted: ``tinylogreg8`` (the (4, 8) ladder the
+trainer/golden-record suites pin) and ``steplogreg8`` (a (8, 64) ladder
+whose 64-row rung feeds the sharded step executor's speedup bench and
+``--step-jobs`` equivalence tests with multi-block plans).
+
 Two outputs:
 
 * ``rust/tests/fixtures/artifacts/`` — a regular artifact tree (same layout
-  as ``python -m compile.aot``): ``manifest.json``, per-entry HLO text for
-  the (4, 8) ladder, and seeded ``init_s<k>.bin`` parameter files.
-* ``rust/tests/fixtures/golden_entry_outputs.json`` — for every entry, a
-  deterministic set of inputs and the jax-evaluated outputs.  The Rust
+  as ``python -m compile.aot``): ``manifest.json``, per-entry HLO text per
+  model ladder, and seeded ``init_s<k>.bin`` parameter files.
+* ``rust/tests/fixtures/golden_entry_outputs.json`` — for every model and
+  entry, a deterministic set of inputs and the jax-evaluated outputs
+  (``{"models": {<name>: {<entry>: {inputs, outputs}}}}``).  The Rust
   test ``integration_runtime::interpreter_matches_python_golden`` replays
   these through the interpreter, anchoring it to the Python reference
-  (the same traced functions the HLO was lowered from).
+  (the same traced functions the HLO was lowered from); the bit-exact
+  record mirror validates itself the same way (python/mirror/selfcheck.py).
 
 The Pallas kernels are swapped for their pure-jnp references
 (:mod:`compile.kernels.ref`, semantics enforced identical by
@@ -55,7 +62,7 @@ from compile import aot  # noqa: E402  (must import after the patch)
 from compile import model as step_builders  # noqa: E402
 from compile.models import REGISTRY  # noqa: E402
 
-FIXTURE_MODEL = "tinylogreg8"
+FIXTURE_MODELS = ("tinylogreg8", "steplogreg8")
 
 
 def golden_inputs(m: int, d: int) -> tuple[np.ndarray, ...]:
@@ -124,16 +131,19 @@ def main() -> None:
     artifacts = fixture_root / "artifacts"
     artifacts.mkdir(parents=True, exist_ok=True)
 
-    entry = REGISTRY[FIXTURE_MODEL]
-    model = entry.factory()
+    sections = {}
+    goldens = {}
+    for name in FIXTURE_MODELS:
+        entry = REGISTRY[name]
+        model = entry.factory()
+        sections[name] = aot.build_model_artifacts(name, entry, artifacts, force=True)
+        goldens[name] = build_golden(model, entry)
 
-    section = aot.build_model_artifacts(FIXTURE_MODEL, entry, artifacts, force=True)
-    manifest = {"version": aot.MANIFEST_VERSION, "models": {FIXTURE_MODEL: section}}
+    manifest = {"version": aot.MANIFEST_VERSION, "models": sections}
     (artifacts / "manifest.json").write_text(json.dumps(manifest, indent=1, sort_keys=True))
 
-    golden = {"model": FIXTURE_MODEL, "entries": build_golden(model, entry)}
     golden_path = fixture_root / "golden_entry_outputs.json"
-    golden_path.write_text(json.dumps(golden, indent=1, sort_keys=True))
+    golden_path.write_text(json.dumps({"models": goldens}, indent=1, sort_keys=True))
     print(f"wrote {artifacts}/manifest.json and {golden_path}")
 
 

@@ -42,6 +42,14 @@ REGISTRY: dict[str, ModelEntry] = {
     "tinylogreg8": ModelEntry(
         lambda: make_logreg(8, "tinylogreg8"), (4, 8), 4, n_init_seeds=3, tags=("tiny",)
     ),
+    # Wide-ladder variant of the convex fixture model for the sharded
+    # step executor: a 64-row rung gives multi-block plans with real
+    # per-block work, so the step-parallel speedup bench (perf_step /
+    # BENCH_5.json) and the --step-jobs equivalence tests have something
+    # to shard.  Same logreg-d8 semantics as tinylogreg8.
+    "steplogreg8": ModelEntry(
+        lambda: make_logreg(8, "steplogreg8"), (8, 64), 8, n_init_seeds=1, tags=("tiny", "step")
+    ),
     "tinymlp8": ModelEntry(
         lambda: make_mlp(8, 4, "tinymlp8"), (4, 8), 4, n_init_seeds=3, tags=("tiny",)
     ),

@@ -1,22 +1,25 @@
-"""CI perf-smoke gate: compare a fresh perf_interp result to the baseline.
+"""CI perf-smoke gate: compare a fresh perf bench result to its baseline.
 
 Usage: check_bench.py NEW_BENCH_JSON COMMITTED_BENCH_JSON
 
-Fails (exit 1) if any entry regressed more than 2x against the committed
-BENCH_4.json.  The comparison uses each entry's **speedup** (compiled vs
-the reference evaluator, measured in the same process) rather than raw
-ns/step: speedup is machine-invariant, so a baseline blessed on faster or
-slower hardware than the CI runner cannot spuriously trip the gate.  Raw
-ns/step stays in the file for humans.  While the committed file is still
-the bootstrap marker (``"bootstrap": true`` — the PR-4 authoring
-environment had no Rust toolchain to measure a baseline), the comparison
-is skipped with a ``::warning::`` asking for the measured artifact to be
-committed.
+Works for any bench emitting the ``{"entries": {key: {"speedup": x}}}``
+schema — today ``perf_interp`` (BENCH_4.json: compiled interpreter vs
+the reference evaluator) and ``perf_step`` (BENCH_5.json: sharded step
+executor vs the serial loop).  Fails (exit 1) if any baseline entry's
+speedup regressed more than 2x.  The comparison uses **speedup** (two
+paths measured in the same process) rather than raw ns/step: the ratio
+is machine-invariant, so a baseline blessed on faster or slower hardware
+than the CI runner cannot spuriously trip the gate.  Raw ns/step stays
+in the files for humans.  While a committed file is still its bootstrap
+marker (``"bootstrap": true`` — the authoring environment had no Rust
+toolchain to measure a baseline), the comparison is skipped with a
+``::warning::`` asking for the measured artifact to be committed.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 REGRESSION_FACTOR = 2.0
@@ -28,9 +31,10 @@ def main(argv: list[str]) -> int:
         return 2
     new = json.load(open(argv[1]))
     old = json.load(open(argv[2]))
+    baseline_name = os.path.basename(argv[2])
     if old.get("bootstrap"):
         print(
-            "::warning file=BENCH_4.json::perf baseline is the bootstrap marker"
+            f"::warning file={baseline_name}::perf baseline is the bootstrap marker"
             " - commit the perf-smoke artifact to arm the 2x regression gate"
         )
         return 0
@@ -46,10 +50,10 @@ def main(argv: list[str]) -> int:
         elif want and got < want / REGRESSION_FACTOR:
             bad.append(f"{key}: speedup {got:.1f}x vs baseline {want:.1f}x")
     if bad:
-        print("perf regression >2x vs committed BENCH_4.json (speedup ratio):")
+        print(f"perf regression >2x vs committed {baseline_name} (speedup ratio):")
         print("\n".join(bad))
         return 1
-    print("perf-smoke: within 2x of the committed baseline")
+    print(f"perf-smoke: within 2x of the committed {baseline_name} baseline")
     return 0
 
 

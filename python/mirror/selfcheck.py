@@ -1,11 +1,13 @@
 """Validate the interp mirror against the committed jax goldens.
 
-Replays every entry of rust/tests/fixtures/golden_entry_outputs.json
-through :mod:`mirror.interp` and checks the outputs against the
-jax-evaluated values to the same tolerance the Rust test
-``interpreter_matches_python_golden`` uses (1e-4 * (1 + |want|)).  This
-anchors the mirror to the exact semantics the Rust interpreter is anchored
-to, before the mirror is trusted to mint the golden run record.
+Replays every entry of every model in
+rust/tests/fixtures/golden_entry_outputs.json (``{"models": {name:
+{entry: {inputs, outputs}}}}``) through :mod:`mirror.interp` and checks
+the outputs against the jax-evaluated values to the same tolerance the
+Rust test ``interpreter_matches_python_golden`` uses
+(1e-4 * (1 + |want|)).  This anchors the mirror to the exact semantics
+the Rust interpreter is anchored to, before the mirror is trusted to
+mint the golden run record.
 """
 
 from __future__ import annotations
@@ -22,9 +24,13 @@ def run(fixtures_dir: str) -> list[str]:
     """Returns a list of failure descriptions (empty = all good)."""
     with open(os.path.join(fixtures_dir, "golden_entry_outputs.json")) as f:
         doc = json.load(f)
-    model = doc["model"]
     failures: list[str] = []
-    for key, case in sorted(doc["entries"].items()):
+    cases = [
+        (model, key, case)
+        for model, entries in sorted(doc["models"].items())
+        for key, case in sorted(entries.items())
+    ]
+    for model, key, case in cases:
         path = os.path.join(fixtures_dir, "artifacts", model, f"{key}.hlo.txt")
         exe = interp.Executable(path)
         comp = exe.module.computations[exe.module.entry]
@@ -35,7 +41,7 @@ def run(fixtures_dir: str) -> list[str]:
         outs = exe.run(args)
         wants = case["outputs"]
         if len(outs) != len(wants):
-            failures.append(f"{key}: arity {len(outs)} vs {len(wants)}")
+            failures.append(f"{model}/{key}: arity {len(outs)} vs {len(wants)}")
             continue
         for ix, (got, want) in enumerate(zip(outs, wants)):
             got = np.asarray(got, dtype=np.float32).reshape(-1)
@@ -43,7 +49,7 @@ def run(fixtures_dir: str) -> list[str]:
             for j in range(want.size):
                 g, w = float(got[j]), float(want[j])
                 if abs(g - w) > 1e-4 * (1.0 + abs(w)):
-                    failures.append(f"{key} out[{ix}][{j}]: mirror {g} vs jax {w}")
+                    failures.append(f"{model}/{key} out[{ix}][{j}]: mirror {g} vs jax {w}")
     return failures
 
 

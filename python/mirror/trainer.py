@@ -355,6 +355,13 @@ class GoldenRun:
             train_loss_sum = 0.0
             train_correct = 0.0
             steps = 0
+            # Dispatch accounting (trainer.rs): executable dispatches and
+            # padding waste are plan-derived — jobs-invariant — while the
+            # lane-utilization field is masked to 0.0 in canonical JSON
+            # (it depends on --step-jobs, which the record must not).
+            dispatches = 0
+            padded_rows = 0
+            covered_rows = 0
             m_cur = m_k
             m_peak = m_k
             perm = shuffle_rng.permutation(n)
@@ -364,8 +371,12 @@ class GoldenRun:
                 pos += len(indices)
                 logical = len(indices)
                 grad_accum = np.zeros(self.PARAM_COUNT, dtype=np.float32)
+                plan = micro_plan(logical, self.LADDER)
+                dispatches += len(plan)
+                padded_rows += sum(micro for micro, _ in plan)
+                covered_rows += sum(take for _, take in plan)
                 offset = 0
-                for micro, take in micro_plan(logical, self.LADDER):
+                for micro, take in plan:
                     idx = indices[offset : offset + take]
                     offset += take
                     x, y, w = train.gather(idx, micro)
@@ -411,6 +422,9 @@ class GoldenRun:
                     "cw": 0.0,
                     "cs": cum_sim,
                     "mm": mem_step_mb(self.PARAM_COUNT, self.D, self.CHUNK, m_peak),
+                    "dp": dispatches,
+                    "pw": 0.0 if padded_rows == 0 else 1.0 - covered_rows / padded_rows,
+                    "pu": 0.0,  # canonical mask (lane-count dependent)
                 }
             )
             m_k = max(

@@ -24,8 +24,7 @@ fn main() -> anyhow::Result<()> {
     // Pre-compile everything a logreg512 run can touch — both train
     // variants, the eval ladder, AND the fused `update` entry — so no
     // JIT compile lands inside a measured region below.
-    rt.warmup("logreg512", true)?;
-    rt.warmup("logreg512", false)?;
+    rt.warmup("logreg512")?;
 
     // ---------------- logreg512: dispatch cost per ladder rung ----------
     let info = rt.model("logreg512")?.clone();

@@ -1,0 +1,273 @@
+//! Bench: **P5 (§Perf)** — sharded step execution: `--step-jobs` lanes
+//! vs the serial loop, on the committed steplogreg8 fixtures.
+//!
+//! This is the PR-5 accountability bench.  It measures the step
+//! executor exactly as the trainer drives it — per-lane gather into a
+//! reused buffer, `train_div_b64` execution per block, then the
+//! deterministic block-order fold — for one logical batch decomposed
+//! into 64-row blocks, at 1 lane and at 4 lanes, and writes
+//! `BENCH_5.json` at the repo root:
+//!
+//! ```text
+//! entries.train_div_b64.ns_per_step         4-lane time per logical batch
+//! entries.train_div_b64.ns_per_step_serial  1-lane time, same work
+//! entries.train_div_b64.speedup             serial / parallel
+//! entries.trainer_epoch.*                   same, end-to-end Trainer::run
+//! ```
+//!
+//! Target: `train_div_b64` speedup >= 2x at 4 lanes (the ISSUE-5
+//! acceptance bar).  The committed BENCH_5.json is the regression
+//! baseline: CI re-runs this bench and compares each entry's speedup via
+//! python/mirror/check_bench.py (fail on >2x regression) — the ratio is
+//! machine-invariant, unlike raw ns/step.
+//!
+//! Measured vs simulated, side by side: the run's wall-clock speedup is
+//! printed next to the prediction of the simulated-cluster cost model
+//! calibrated to this machine's measured per-sample cost
+//! ([`ClusterSpec::local`] — a `--step-jobs N` testbed IS an N-worker
+//! synchronous data-parallel cluster), so the paper's simulated columns
+//! and our measured columns can finally be read against each other.
+//!
+//! Env knobs: `BENCH_OUT` overrides the output path;
+//! `DIVEBATCH_PERF_ENFORCE=1` makes the process exit non-zero when the
+//! 2x target is missed (CI sets it).
+//!
+//! Run: `cargo bench --bench perf_step`
+
+use std::sync::Mutex;
+
+use divebatch::bench::{bench_header, fmt_time, Bencher};
+use divebatch::cluster::{ClusterModel, ClusterSpec};
+use divebatch::coordinator::{LrSchedule, MicroPlan, Policy, StepExecutor, TrainConfig, Trainer};
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::runtime::ExecCache;
+use divebatch::util::json::Json;
+use divebatch::{Batch, Runtime};
+
+const MODEL: &str = "steplogreg8";
+const TARGET_SPEEDUP: f64 = 2.0;
+const LANES: usize = 4;
+/// Logical batch for the raw step measurement: 64 blocks of 64 rows.
+const LOGICAL_M: usize = 4096;
+
+fn fixtures_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/artifacts").to_string()
+}
+
+fn default_out() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_5.json").to_string()
+}
+
+struct Lane {
+    buf: Batch,
+    execs: ExecCache,
+}
+
+/// The trainer-shaped step workload: scatter the plan's blocks (gather
+/// + train_div execute per block) and fold the outputs in block order.
+struct StepWork<'a> {
+    rt: &'a Runtime,
+    ds: &'a divebatch::Dataset,
+    params: &'a [f32],
+    indices: &'a [u32],
+    spans: &'a [(usize, divebatch::coordinator::MicroBlock)],
+}
+
+impl StepWork<'_> {
+    /// Run one logical-batch step; returns the folded loss so the work
+    /// cannot be optimized away.
+    fn run(&self, step: &StepExecutor, lanes: &[Mutex<Lane>], grad: &mut [f32]) -> f64 {
+        let outs = step
+            .run_blocks(self.spans.len(), |lane, bi| {
+                let (off, block) = self.spans[bi];
+                let mut s = lanes[lane].lock().unwrap();
+                self.ds
+                    .gather_into(&self.indices[off..off + block.take], block.micro, &mut s.buf);
+                let exec = s.execs.train(self.rt, MODEL, true, block.micro)?;
+                exec.run_train(self.params, &s.buf)
+            })
+            .expect("bench step failed");
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss = 0.0;
+        for out in &outs {
+            for (a, g) in grad.iter_mut().zip(&out.grad_sum) {
+                *a += g;
+            }
+            loss += out.loss_sum;
+        }
+        loss
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "perf_step",
+        "P5: sharded step executor (train_div_b64 blocks, 4 lanes vs serial) \
+         on the steplogreg8 fixtures; writes BENCH_5.json",
+    );
+    let rt = Runtime::load(fixtures_dir())?;
+    let info = rt.model(MODEL)?.clone();
+    rt.warmup(MODEL)?;
+    let params = rt.manifest.load_init_params(MODEL, 0)?;
+    let ds = synthetic::generate(&SyntheticSpec {
+        n: LOGICAL_M,
+        d: 8,
+        noise: 0.05,
+        seed: 9,
+    });
+
+    // ---- raw sharded step: one logical batch of LOGICAL_M rows ----
+    let indices: Vec<u32> = (0..LOGICAL_M as u32).collect();
+    let plan = MicroPlan::build(LOGICAL_M, &info.ladder, None);
+    let mut spans = Vec::with_capacity(plan.blocks.len());
+    let mut off = 0usize;
+    for b in &plan.blocks {
+        spans.push((off, *b));
+        off += b.take;
+    }
+    println!(
+        "logical batch {LOGICAL_M} -> {} blocks (ladder {:?}), plan utilization at {LANES} lanes: {:.2}",
+        plan.dispatches(),
+        info.ladder,
+        plan.utilization(LANES)
+    );
+
+    let b = Bencher {
+        warmup_iters: 5,
+        min_iters: 30,
+        max_iters: 20_000,
+        target_s: 1.0,
+    };
+    let mut grad = vec![0.0f32; info.param_count];
+    let mut results: Vec<(&str, f64, f64)> = Vec::new(); // (entry, serial_ns, par_ns)
+
+    let mk_lanes = |k: usize| -> Vec<Mutex<Lane>> {
+        (0..k)
+            .map(|_| {
+                Mutex::new(Lane {
+                    buf: Batch::empty(),
+                    execs: ExecCache::new(),
+                })
+            })
+            .collect()
+    };
+
+    let work = StepWork {
+        rt: &rt,
+        ds: &ds,
+        params: &params,
+        indices: &indices,
+        spans: &spans,
+    };
+    let serial_exec = StepExecutor::new(1);
+    let serial_lanes = mk_lanes(1);
+    let serial = b.run("train_div_b64 serial", Some(LOGICAL_M as f64), || {
+        work.run(&serial_exec, &serial_lanes, &mut grad);
+    });
+    let par_exec = StepExecutor::new(LANES);
+    let par_lanes = mk_lanes(LANES);
+    let par = b.run(&format!("train_div_b64 x{LANES}"), Some(LOGICAL_M as f64), || {
+        work.run(&par_exec, &par_lanes, &mut grad);
+    });
+    println!("  {}", serial.line());
+    println!("  {}", par.line());
+    results.push(("train_div_b64", serial.mean_s * 1e9, par.mean_s * 1e9));
+
+    // Measured vs simulated, side by side: calibrate the cluster cost
+    // model to this machine's measured per-sample cost and compare its
+    // predicted step-time ratio with the measured one.
+    let per_sample_s = serial.mean_s / LOGICAL_M as f64;
+    let sim1 = ClusterModel::calibrated(1, per_sample_s, info.param_count)
+        .step_time(LOGICAL_M, true);
+    let sim4 = ClusterModel::calibrated(LANES, per_sample_s, info.param_count)
+        .step_time(LOGICAL_M, true);
+    println!();
+    println!(
+        "step time, measured vs simulated ({} workers = ClusterSpec::local({LANES})):",
+        LANES
+    );
+    println!(
+        "  measured:  {:>12} -> {:>12}   speedup {:.2}x",
+        fmt_time(serial.mean_s),
+        fmt_time(par.mean_s),
+        serial.mean_s / par.mean_s
+    );
+    println!(
+        "  simulated: {:>12} -> {:>12}   speedup {:.2}x",
+        fmt_time(sim1),
+        fmt_time(sim4),
+        sim1 / sim4
+    );
+
+    // ---- end-to-end: Trainer::run wall clock at step-jobs 1 vs 4 ----
+    let eb = Bencher {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_iters: 200,
+        target_s: 1.5,
+    };
+    let mut epoch_ns = [0.0f64; 2];
+    for (slot, lanes) in [(0usize, 1usize), (1, LANES)] {
+        let mut cfg = TrainConfig::new(
+            MODEL,
+            Policy::Fixed { m: 2048 },
+            LrSchedule::constant(0.1, false),
+            2,
+        );
+        cfg.step_jobs = lanes;
+        let (train, val) = ds.split(0.8);
+        let trainer = Trainer::new(
+            &rt,
+            cfg,
+            train,
+            val,
+            ClusterSpec::local(lanes).model(info.param_count, 1e3),
+        )?;
+        let r = eb.run(&format!("trainer 2 epochs, step-jobs {lanes}"), None, || {
+            trainer.run().expect("bench trainer run failed");
+        });
+        println!("  {}", r.line());
+        epoch_ns[slot] = r.mean_s * 1e9;
+    }
+    results.push(("trainer_epoch", epoch_ns[0], epoch_ns[1]));
+
+    // ---- BENCH_5.json ----
+    let entries: Vec<(&str, Json)> = results
+        .iter()
+        .map(|&(key, serial_ns, par_ns)| {
+            (
+                key,
+                Json::obj(vec![
+                    ("ns_per_step", Json::Num(par_ns)),
+                    ("ns_per_step_serial", Json::Num(serial_ns)),
+                    ("speedup", Json::Num(serial_ns / par_ns)),
+                ]),
+            )
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_step".into())),
+        ("model", Json::Str(MODEL.into())),
+        ("lanes", Json::Num(LANES as f64)),
+        ("target_speedup_train_div_b64", Json::Num(TARGET_SPEEDUP)),
+        ("entries", Json::obj(entries)),
+    ]);
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| default_out());
+    std::fs::write(&out_path, doc.to_string())?;
+    println!();
+    println!("wrote {out_path}");
+
+    let speedup = results[0].1 / results[0].2;
+    if speedup < TARGET_SPEEDUP {
+        eprintln!(
+            "WARNING: train_div_b64 step speedup {speedup:.2}x at {LANES} lanes is below \
+             the {TARGET_SPEEDUP}x target (ISSUE-5 acceptance bar)"
+        );
+        if std::env::var("DIVEBATCH_PERF_ENFORCE").is_ok_and(|v| v == "1") {
+            std::process::exit(1);
+        }
+    } else {
+        println!("train_div_b64 step speedup {speedup:.2}x (target {TARGET_SPEEDUP}x) — OK");
+    }
+    Ok(())
+}

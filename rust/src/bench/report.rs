@@ -76,7 +76,7 @@ pub struct ExperimentResult {
 /// wall-clock columns (`t±1% wall(s)`) measure contended time under
 /// parallel trials — set `DIVEBATCH_JOBS=1` when those columns matter.
 /// Parallel results are cached in a jobs-segregated subdirectory
-/// ([`crate::config::RunSpec::cache_dir_for_jobs`]) so a later
+/// ([`crate::config::RunSpec::cache_dir_for_run`]) so a later
 /// `DIVEBATCH_JOBS=1` run never silently reuses contention-inflated
 /// wall times.
 pub fn run_experiment(rt: &Runtime, exp: &Experiment, verbose: bool) -> Result<ExperimentResult> {
@@ -94,7 +94,6 @@ pub fn run_experiment_jobs(
     let base_dir = std::path::PathBuf::from(
         std::env::var("DIVEBATCH_RESULTS").unwrap_or_else(|_| "results/cache".into()),
     );
-    let cache_dir = crate::config::RunSpec::cache_dir_for_jobs(&base_dir, jobs);
     let use_cache = std::env::var("DIVEBATCH_NO_CACHE").is_err();
 
     // Resolve cache hits first; everything else becomes engine work.
@@ -103,7 +102,19 @@ pub fn run_experiment_jobs(
     for (i, run) in exp.runs.iter().enumerate() {
         let mut r = run.clone();
         r.cfg.verbose = verbose;
-        let cached = if use_cache { r.load_cached(&cache_dir) } else { None };
+        // Pin the step-lane count to explicit/env-or-serial (never the
+        // engine's pending-count-dependent auto allowance): cached
+        // wall-clock columns must come from a lane regime derivable
+        // from the spec + environment alone, and the per-run
+        // `jobs<N>[-step<M>]` cache tag (cache_dir_for_run) reflects
+        // exactly that regime, so entries from different regimes can
+        // never be confused.
+        r.cfg.step_jobs = crate::pool::resolve_step_jobs(r.cfg.step_jobs, 1);
+        let cached = if use_cache {
+            r.load_cached(&r.cache_dir_for_run(&base_dir, jobs))
+        } else {
+            None
+        };
         let hit = cached.is_some();
         arm_records.push(cached);
         if !hit {
@@ -156,7 +167,7 @@ pub fn run_experiment_jobs(
                 continue; // incomplete arm (some trial failed)
             }
             if use_cache {
-                r.store_cached(&cache_dir, &recs)?;
+                r.store_cached(&r.cache_dir_for_run(&base_dir, jobs), &recs)?;
             }
             arm_records[*i] = Some(recs);
         }
@@ -326,6 +337,9 @@ mod tests {
                 cum_wall_s: (i + 1) as f64,
                 cum_sim_s: sim_per_epoch * (i + 1) as f64,
                 mem_mb: 1.0,
+                dispatches: 1,
+                pad_waste: 0.0,
+                par_util: 1.0,
             });
         }
         ArmResult {

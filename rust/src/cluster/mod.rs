@@ -54,6 +54,20 @@ impl ClusterSpec {
         *self == ClusterSpec::default()
     }
 
+    /// The scenario matching THIS testbed's sharded step executor: a
+    /// `--step-jobs N` run really is an N-worker synchronous
+    /// data-parallel cluster (each lane computes a shard of the logical
+    /// batch; the main thread plays the allreduce).  `perf_step` uses
+    /// this to print the model's *predicted* step/epoch speedup next to
+    /// the *measured* one — the paper's simulated columns and our
+    /// wall-clock columns, side by side, from the same cost structure.
+    pub fn local(step_jobs: usize) -> ClusterSpec {
+        ClusterSpec {
+            workers: step_jobs.max(1),
+            ..ClusterSpec::default()
+        }
+    }
+
     /// Instantiate the timing model for a concrete workload.  A zero
     /// worker count is clamped to 1 (the CLI rejects it earlier).
     pub fn model(&self, param_count: usize, flops_per_sample: f64) -> ClusterModel {
@@ -246,6 +260,17 @@ mod tests {
             div_overhead: 0.9,
         };
         assert_eq!(z.model(10, 1.0).workers, 1);
+    }
+
+    #[test]
+    fn local_spec_matches_step_lanes() {
+        let s = ClusterSpec::local(4);
+        assert_eq!(s.workers, 4);
+        assert!(s.is_default()); // 4 lanes == the paper's 4 workers
+        let wide = ClusterSpec::local(16);
+        assert_eq!(wide.workers, 16);
+        assert!(!wide.is_default());
+        assert_eq!(ClusterSpec::local(0).workers, 1); // serial clamps
     }
 
     #[test]

@@ -156,19 +156,36 @@ impl RunSpec {
         cache_dir.join(format!("{}.json", self.fingerprint()))
     }
 
-    /// Cache directory for results produced at a given trial-engine jobs
-    /// level.  Parallel trials contend for the CPU, inflating the REAL
-    /// wall-clock columns of the records they produce; segregating their
-    /// cache under `jobs<N>/` guarantees a later `--jobs 1` run never
-    /// silently reuses contention-inflated wall times (the simulated
-    /// columns are identical at every jobs level).  Serial runs keep the
-    /// base directory, so pre-existing caches stay valid.
-    pub fn cache_dir_for_jobs(base: &std::path::Path, jobs: usize) -> std::path::PathBuf {
+    /// Cache directory for this spec's results at a given trial-engine
+    /// jobs level.  Parallel trials contend for the CPU, inflating the
+    /// REAL wall-clock columns of the records they produce — and a
+    /// parallel step executor *deflates* them; segregating the cache
+    /// under `jobs<N>[-step<M>]/` (with `M` = this spec's RESOLVED lane
+    /// count: explicit `cfg.step_jobs`, else `DIVEBATCH_STEP_JOBS`, else
+    /// serial) guarantees a later run in a different parallelism regime
+    /// never silently reuses the wall times (the simulated columns are
+    /// identical at every level).  Fully serial runs keep the base
+    /// directory, so pre-existing caches stay valid.  This is the single
+    /// owner of the tag derivation — the cached run paths pin
+    /// `step_jobs` to the same resolution before executing, so the tag
+    /// always names the regime that produced the records.
+    pub fn cache_dir_for_run(&self, base: &std::path::Path, jobs: usize) -> std::path::PathBuf {
         let workers = crate::engine::effective_jobs(jobs);
-        if workers <= 1 {
+        let step = crate::pool::resolve_step_jobs(self.cfg.step_jobs, 1);
+        let mut tag = String::new();
+        if workers > 1 {
+            tag.push_str(&format!("jobs{workers}"));
+        }
+        if step > 1 {
+            if !tag.is_empty() {
+                tag.push('-');
+            }
+            tag.push_str(&format!("step{step}"));
+        }
+        if tag.is_empty() {
             base.to_path_buf()
         } else {
-            base.join(format!("jobs{workers}"))
+            base.join(tag)
         }
     }
 
@@ -203,18 +220,30 @@ impl RunSpec {
 
     /// [`run_cached`] with the trial engine's jobs knob (0 = all cores).
     /// Parallel results land in a jobs-segregated cache subdirectory —
-    /// see [`RunSpec::cache_dir_for_jobs`].
+    /// see [`RunSpec::cache_dir_for_run`].
+    ///
+    /// Cached runs PIN the step-executor lane count to
+    /// explicit-`step_jobs` > `DIVEBATCH_STEP_JOBS` > serial — never the
+    /// engine's pending-count-dependent auto allowance, which varies
+    /// with how many trials happen to be uncached — and the cache
+    /// directory is tagged with the RESOLVED lane count
+    /// ([`RunSpec::cache_dir_for_run`]), so wall-clock columns measured
+    /// under different lane regimes can never share one cache entry
+    /// (including an explicit `cfg.step_jobs` that the fingerprint
+    /// deliberately omits).
     pub fn run_cached_jobs(
         &self,
         rt: &Runtime,
         cache_dir: &std::path::Path,
         jobs: usize,
     ) -> Result<Vec<RunRecord>> {
-        let dir = Self::cache_dir_for_jobs(cache_dir, jobs);
+        let mut pinned = self.clone();
+        pinned.cfg.step_jobs = crate::pool::resolve_step_jobs(self.cfg.step_jobs, 1);
+        let dir = pinned.cache_dir_for_run(cache_dir, jobs);
         if let Some(recs) = self.load_cached(&dir) {
             return Ok(recs);
         }
-        let records = self.run_jobs(rt, jobs)?;
+        let records = pinned.run_jobs(rt, jobs)?;
         self.store_cached(&dir, &records)?;
         Ok(records)
     }

@@ -9,6 +9,9 @@
 //! * [`schedule`]  — LR step decay + Goyal linear batch rescaling
 //! * [`optimizer`] — reference SGD(+momentum,+wd) on the flat params
 //! * [`diversity`] — Definition-2 epoch accumulators (f64)
+//! * [`step`]      — the sharded step executor: micro-batch blocks
+//!   dispatched across a persistent worker pool with deterministic
+//!   block-order reduction (`--step-jobs`)
 //! * [`trainer`]   — the epoch event loop driving a boxed [`BatchPolicy`]
 //!   through `on_epoch_start` / `on_step` / `on_epoch_end`
 
@@ -18,11 +21,13 @@ pub mod plan;
 pub mod policy;
 pub mod schedule;
 pub mod sgld;
+pub mod step;
 pub mod trainer;
 
 pub use diversity::DiversityAccum;
 pub use optimizer::{AdamOptimizer, Optim, SgdOptimizer};
 pub use plan::{MicroBlock, MicroPlan};
+pub use step::StepExecutor;
 pub use policy::{
     AdaptContext, BatchPolicy, Decision, DiversityNeed, DiversityStats, HistoryPoint, Policy,
     PolicyEntry, PolicyError, PolicyHandle, PolicyRegistry,

@@ -122,6 +122,47 @@ impl MicroPlan {
     pub fn build_smallest_only(m: usize, ladder: &[usize]) -> MicroPlan {
         Self::build(m, &ladder[..1], None)
     }
+
+    // ------------------------------------- block -> worker scheduling
+
+    /// Makespan (in padded rows — the cost proxy of one dispatch) of
+    /// this plan's blocks spread over `workers` parallel lanes, using
+    /// the deterministic longest-processing-time greedy: blocks are
+    /// already ordered largest-first by `build`, and each is assigned
+    /// to the least-loaded lane (lowest index on ties).
+    pub fn makespan_rows(&self, workers: usize) -> usize {
+        if self.blocks.is_empty() {
+            return 0;
+        }
+        let lanes = workers.max(1).min(self.blocks.len());
+        let mut load = vec![0usize; lanes];
+        for b in &self.blocks {
+            let lane = (0..lanes).min_by_key(|&i| (load[i], i)).unwrap();
+            load[lane] += b.micro;
+        }
+        load.into_iter().max().unwrap()
+    }
+
+    /// Dispatch utilization of the plan over `workers` step-executor
+    /// lanes: the fraction of configured lane capacity doing dispatch
+    /// work, `padded / (workers * makespan)`.  1.0 for a serial
+    /// executor or a perfectly balanced decomposition; below 1.0 when a
+    /// straggler block — or too few blocks for the lane count — leaves
+    /// lanes idle (a 2-block plan on 4 lanes reads 0.5, not 1.0: half
+    /// the configured lanes do nothing).  Purely a function of plan
+    /// shape — it does not depend on measured time, so it is
+    /// deterministic and cheap enough to record per step.
+    pub fn utilization(&self, workers: usize) -> f64 {
+        let workers = workers.max(1);
+        if workers <= 1 {
+            return 1.0;
+        }
+        let makespan = self.makespan_rows(workers);
+        if makespan == 0 {
+            return 1.0;
+        }
+        self.padded() as f64 / (workers * makespan) as f64
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +265,61 @@ mod tests {
                 // Padding never exceeds one smallest rung's worth.
                 let waste_ok = p.padded() - p.covered() < ladder[0];
                 covered_ok && block_ok && waste_ok
+            },
+        );
+    }
+
+    #[test]
+    fn makespan_and_utilization_balanced_plan() {
+        // 8 equal blocks of 64 over 4 lanes: 2 rounds, perfect balance.
+        let p = MicroPlan::build(512, &[64], None);
+        assert_eq!(p.dispatches(), 8);
+        assert_eq!(p.makespan_rows(4), 128);
+        assert_eq!(p.utilization(4), 1.0);
+        // Serial lane count is always fully utilized by definition.
+        assert_eq!(p.utilization(1), 1.0);
+        assert_eq!(p.makespan_rows(1), 512);
+    }
+
+    #[test]
+    fn utilization_sees_stragglers_and_sparse_plans() {
+        // 3 blocks of 64 over 4 lanes: one configured lane idles -> 3/4.
+        let p = MicroPlan::build(192, &[64], None);
+        assert!((p.utilization(4) - 0.75).abs() < 1e-12);
+        // 5 blocks over 4 lanes: makespan 2 rounds, 5/8 busy.
+        let p = MicroPlan::build(320, &[64], None);
+        assert!((p.utilization(4) - 5.0 / 8.0).abs() < 1e-12);
+        // Mixed rungs: 1x1024 + 1x64-tail over 2 lanes — the big block
+        // dominates the makespan.
+        let p = MicroPlan::build(1040, LADDER, None);
+        assert_eq!(p.makespan_rows(2), 1024);
+        assert!((p.utilization(2) - (1024.0 + 64.0) / 2048.0).abs() < 1e-12);
+        // A single block cannot parallelize at all: 7 of 8 lanes idle.
+        let p = MicroPlan::build(64, &[64], None);
+        assert!((p.utilization(8) - 1.0 / 8.0).abs() < 1e-12);
+        assert_eq!(p.makespan_rows(8), 64);
+    }
+
+    #[test]
+    fn property_utilization_bounds_and_determinism() {
+        forall(
+            200,
+            |r: &mut Rng| {
+                (
+                    r.below(8192) as usize + 1,
+                    r.below(7) as usize + 2, // 2..=8 lanes
+                )
+            },
+            |&(m, lanes)| {
+                let p = MicroPlan::build(m, LADDER, None);
+                let u = p.utilization(lanes);
+                let bounded = (0.0..=1.0).contains(&u) && u > 0.0;
+                // Deterministic + consistent with the makespan identity
+                // over the CONFIGURED lane count (idle lanes count).
+                let again = p.utilization(lanes);
+                let want = p.padded() as f64 / (lanes * p.makespan_rows(lanes)) as f64;
+                let identity = (u - want).abs() < 1e-15;
+                bounded && u == again && identity
             },
         );
     }

@@ -5,36 +5,50 @@
 //!
 //! 1. shuffle the training set; iterate `ceil(n/m_k)` logical batches;
 //! 2. decompose each logical batch into compiled micro-batches
-//!    ([`MicroPlan`]), execute the train entry (diversity-instrumented iff
-//!    the policy needs it), and accumulate the sample-sum outputs;
+//!    ([`MicroPlan`]) and dispatch the blocks across the sharded step
+//!    executor ([`StepExecutor`], `--step-jobs N` lanes; each lane owns
+//!    its input buffer and executable handles); fold the per-block
+//!    sample-sum outputs **in block order** — whatever lane finished
+//!    first — so the reduction is byte-identical to the serial loop;
 //! 3. apply one optimizer update per logical batch
 //!    (`theta -= eta_k/m_k * sum_grad`, + momentum/wd for image runs);
 //! 4. push `(grad_sum, sqnorm_sum)` into the epoch's [`DiversityAccum`];
 //!    step-level policies (`wants_step_decisions`) may resize the
 //!    remaining logical batches mid-epoch via `on_step`;
-//! 5. at the epoch boundary: evaluate on the validation set, optionally
-//!    recompute the exact diversity (Oracle), hand the policy an
-//!    [`AdaptContext`] and apply its [`Decision`] (next batch size, next
-//!    epoch's instrumentation, optional lr rescale), then the LR schedule
-//!    (incl. Goyal rescaling).
+//! 5. at the epoch boundary: evaluate on the validation set (streamed
+//!    through the same executor), optionally recompute the exact
+//!    diversity (Oracle), hand the policy an [`AdaptContext`] and apply
+//!    its [`Decision`] (next batch size, next epoch's instrumentation,
+//!    optional lr rescale), then the LR schedule (incl. Goyal rescaling).
+//!
+//! Step-level parallelism is what finally makes batch-size adaptation
+//! move *measured* wall-clock, not just the simulated cluster columns: a
+//! logical batch grown 8x decomposes into 8x the blocks, which now
+//! execute concurrently.  Parameter updates stay strictly sequential
+//! across logical batches (SGD's data dependence); the speedup comes
+//! from inside each batch — exactly the data-parallel mechanism the
+//! paper's section 2.1 argues for.
 //!
 //! The trainer is generic over any boxed [`BatchPolicy`]: it builds a
 //! fresh stateful instance from the config's [`PolicyHandle`] per run,
 //! so trials never share controller state.  Python never runs here:
 //! every numeric kernel is a compiled artifact.
 
+use std::sync::{Mutex, MutexGuard};
+
 use anyhow::{bail, Result};
 
 use super::diversity::DiversityAccum;
 use super::optimizer::{AdamOptimizer, Optim, SgdOptimizer};
-use super::plan::MicroPlan;
+use super::plan::{MicroBlock, MicroPlan};
 use super::policy::{AdaptContext, DiversityNeed, DiversityStats, HistoryPoint, PolicyHandle};
 use super::schedule::LrSchedule;
 use super::sgld::SgldConfig;
+use super::step::StepExecutor;
 use crate::cluster::ClusterModel;
 use crate::data::{Batch, Dataset, EpochBatches};
 use crate::metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};
-use crate::runtime::Runtime;
+use crate::runtime::{ExecCache, Runtime};
 use crate::util::rng::Rng;
 use crate::util::timer::{Profiler, Timer};
 
@@ -70,6 +84,12 @@ pub struct TrainConfig {
     /// a100x4 constants; the `train`/`sweep` CLI exposes it as
     /// `--sim-workers` / `--sim-div-overhead`.
     pub cluster: crate::cluster::ClusterSpec,
+    /// Step-executor lanes for sharding each logical batch's
+    /// micro-blocks (`--step-jobs`).  `0` = auto: `DIVEBATCH_STEP_JOBS`
+    /// if set, else this trial's share of the engine's jobs budget
+    /// (serial for a directly-constructed [`Trainer`]).  Records are
+    /// byte-identical at every level; only real wall-clock moves.
+    pub step_jobs: usize,
     /// Print per-epoch progress lines.
     pub verbose: bool,
 }
@@ -97,6 +117,7 @@ impl TrainConfig {
             use_adam: false,
             sgld: SgldConfig::disabled(),
             cluster: crate::cluster::ClusterSpec::default(),
+            step_jobs: 0,
             verbose: false,
         }
     }
@@ -108,6 +129,91 @@ pub struct TrainOutcome {
     pub profile: Profiler,
     /// Final parameters (for checkpoint-style chaining).
     pub params: Vec<f32>,
+}
+
+/// Per-lane scratch of the sharded step executor: one gathered input
+/// buffer and one executable-handle cache per lane, plus timing totals
+/// merged into the run profile at the end.  A lane never runs two
+/// blocks concurrently (the [`StepExecutor`] contract), so the mutex
+/// that wraps this is uncontended — it exists to move mutable state
+/// across the dispatch closure, not for real sharing.
+struct LaneScratch {
+    buf: Batch,
+    execs: ExecCache,
+    gather_s: f64,
+    gather_n: u64,
+    exec_s: f64,
+    exec_n: u64,
+    /// First-touch JIT compiles resolved through this lane's handle
+    /// cache (serial runs compile lazily here; parallel runs warm up
+    /// front so these stay 0).
+    compile_s: f64,
+    compile_n: u64,
+}
+
+impl LaneScratch {
+    fn new() -> LaneScratch {
+        LaneScratch {
+            buf: Batch::empty(),
+            execs: ExecCache::new(),
+            gather_s: 0.0,
+            gather_n: 0,
+            exec_s: 0.0,
+            exec_n: 0,
+            compile_s: 0.0,
+            compile_n: 0,
+        }
+    }
+
+    fn lock(slot: &Mutex<LaneScratch>) -> MutexGuard<'_, LaneScratch> {
+        slot.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Resolve a train executable through the lane cache, attributing a
+    /// handle-cache miss (= first-touch fetch, possibly a JIT compile)
+    /// to the "compile" profile section.
+    fn train_exec(
+        &mut self,
+        rt: &Runtime,
+        model: &str,
+        instrumented: bool,
+        micro: usize,
+    ) -> Result<std::sync::Arc<crate::runtime::Executable>> {
+        let before = self.execs.len();
+        let t = Timer::start();
+        let exec = self.execs.train(rt, model, instrumented, micro)?;
+        if self.execs.len() > before {
+            self.compile_s += t.seconds();
+            self.compile_n += 1;
+        }
+        Ok(exec)
+    }
+}
+
+/// Decompose a sequential streaming pass over `n` rows (validation /
+/// Oracle full-dataset scans) into one flat index vector (`0..n` — a
+/// sequential pass visits rows in order) plus zero-copy
+/// `(offset, block)` spans into it, for dispatch through the step
+/// executor with block-order folding.
+fn stream_blocks(
+    n: usize,
+    info: &crate::runtime::ModelInfo,
+    cap: Option<usize>,
+) -> (Vec<u32>, Vec<(usize, MicroBlock)>) {
+    let indices: Vec<u32> = (0..n as u32).collect();
+    let mut spans = Vec::new();
+    let mut base = 0usize;
+    for chunk in EpochBatches::sequential(n, info.max_micro()) {
+        let plan = MicroPlan::build(chunk.len(), &info.ladder, cap);
+        let mut offset = 0usize;
+        for block in &plan.blocks {
+            spans.push((base + offset, *block));
+            offset += block.take;
+        }
+        base += chunk.len();
+    }
+    debug_assert_eq!(base, n);
+    (indices, spans)
 }
 
 /// Orchestrates one training run over a [`Runtime`].
@@ -196,6 +302,29 @@ impl<'rt> Trainer<'rt> {
         );
         let mut profile = Profiler::new();
 
+        // The sharded step executor: `--step-jobs` lanes (0 = auto; see
+        // TrainConfig::step_jobs).  Block results are always folded in
+        // block order below, so every lane count yields byte-identical
+        // records — only measured wall-clock changes.
+        let step = StepExecutor::new(crate::pool::resolve_step_jobs(cfg.step_jobs, 1));
+        if step.lanes() > 1 {
+            // Parallel lanes racing a cold entry would serialize on the
+            // per-key first-compile guard at step one; precompile the
+            // whole train/eval surface instead (see Runtime::warmup).
+            self.rt.warmup(&cfg.model)?;
+        }
+        let scratch: Vec<Mutex<LaneScratch>> = (0..step.lanes())
+            .map(|_| Mutex::new(LaneScratch::new()))
+            .collect();
+
+        // Reusable per-batch buffers.  The remaining per-block
+        // allocations inside the epoch loop are the executables' owned
+        // outputs (run_train returns its grad_sum vector — true before
+        // this refactor too) and, in parallel mode, the scatter's result
+        // slots — amortized over a whole logical batch of blocks.
+        let mut grad_accum = vec![0.0f32; info.param_count];
+        let mut spans: Vec<(usize, MicroBlock)> = Vec::new();
+
         let m0 = policy.initial();
         // Goyal rescaling reference: the base policy's m0 even under
         // wrappers (a warmup batch must not inflate the rescaled lr).
@@ -206,18 +335,6 @@ impl<'rt> Trainer<'rt> {
         let mut cum_wall = 0.0;
         let mut cum_sim = 0.0;
         let mut history: Vec<HistoryPoint> = Vec::new();
-
-        // Reusable buffers (no allocation inside the epoch loop — §Perf).
-        let mut batch_buf = Batch::empty();
-        let mut grad_accum = vec![0.0f32; info.param_count];
-        // Per-run executable handles: the runtime cache is keyed by a
-        // formatted string (alloc + hash per lookup) behind a lock; the
-        // ladder has <= 4 rungs, so a linear-scan Vec of Arc handles makes
-        // the per-block lookup free and lock-free (§Perf L3 iteration 1).
-        // Keyed by (micro, instrumented) because dynamic-need policies may
-        // flip the executable variant between epochs.
-        let mut exec_handles: Vec<((usize, bool), std::sync::Arc<crate::runtime::Executable>)> =
-            Vec::new();
 
         for epoch in 0..cfg.epochs {
             let epoch_timer = Timer::start();
@@ -232,6 +349,13 @@ impl<'rt> Trainer<'rt> {
             let mut train_loss_sum = 0.0;
             let mut train_correct = 0.0;
             let mut steps = 0usize;
+            // Dispatch accounting for the epoch record: executable
+            // dispatches, padding waste, and the plan-shape utilization
+            // of the step-executor lanes (1.0 when serial).
+            let mut dispatches = 0usize;
+            let mut padded_rows = 0usize;
+            let mut covered_rows = 0usize;
+            let mut util_sum = 0.0f64;
 
             policy.on_epoch_start(&AdaptContext {
                 epoch,
@@ -254,31 +378,47 @@ impl<'rt> Trainer<'rt> {
             while let Some(indices) = batches.next() {
                 let logical = indices.len();
                 let plan = MicroPlan::build(logical, &info.ladder, cfg.max_micro);
-                grad_accum.iter_mut().for_each(|g| *g = 0.0);
+                // Block spans: (offset into `indices`, block).
+                spans.clear();
                 let mut offset = 0usize;
                 for block in &plan.blocks {
-                    let idx = &indices[offset..offset + block.take];
+                    spans.push((offset, *block));
                     offset += block.take;
-                    {
-                        let _g = profile.section("gather");
-                        self.train.gather_into(idx, block.micro, &mut batch_buf);
-                    }
-                    let key = (block.micro, instrumented);
-                    let exec = match exec_handles.iter().find(|(k, _)| *k == key) {
-                        Some((_, e)) => e.clone(),
-                        None => {
-                            let _g = profile.section("compile");
-                            let e = self.rt.train_exec(&cfg.model, instrumented, block.micro)?;
-                            exec_handles.push((key, e.clone()));
-                            e
-                        }
-                    };
-                    let out = {
-                        let _g = profile.section("execute");
-                        exec.run_train(&params, &batch_buf)?
-                    };
-                    {
-                        let _g = profile.section("accumulate");
+                }
+                debug_assert_eq!(offset, logical);
+                dispatches += plan.dispatches();
+                padded_rows += plan.padded();
+                covered_rows += plan.covered();
+                util_sum += plan.utilization(step.lanes());
+
+                // Execute every block of this logical batch — across
+                // the worker lanes when step-parallel, inline when
+                // serial.  Each lane gathers into its own buffer and
+                // resolves executables from its own handle cache.
+                let outs = step.run_blocks(spans.len(), |lane, bi| {
+                    let (off, block) = spans[bi];
+                    let mut s = LaneScratch::lock(&scratch[lane]);
+                    let t = Timer::start();
+                    self.train
+                        .gather_into(&indices[off..off + block.take], block.micro, &mut s.buf);
+                    s.gather_s += t.seconds();
+                    s.gather_n += 1;
+                    let exec = s.train_exec(self.rt, &cfg.model, instrumented, block.micro)?;
+                    let t = Timer::start();
+                    let out = exec.run_train(&params, &s.buf)?;
+                    s.exec_s += t.seconds();
+                    s.exec_n += 1;
+                    Ok(out)
+                })?;
+
+                // Deterministic reduction: fold the block outputs in
+                // block-index order regardless of which lane finished
+                // first — bit-identical to the serial loop's
+                // interleaved accumulation.
+                grad_accum.iter_mut().for_each(|g| *g = 0.0);
+                {
+                    let _g = profile.section("accumulate");
+                    for (out, (_, block)) in outs.iter().zip(&spans) {
                         for (a, g) in grad_accum.iter_mut().zip(&out.grad_sum) {
                             *a += g;
                         }
@@ -289,7 +429,6 @@ impl<'rt> Trainer<'rt> {
                         }
                     }
                 }
-                debug_assert_eq!(offset, logical);
                 // SGLD: inject per-sample-equivalent noise into the sum
                 // gradient (diversity stats are adjusted analytically at
                 // the epoch boundary; see coordinator/sgld.rs).
@@ -380,7 +519,7 @@ impl<'rt> Trainer<'rt> {
                 }
                 DiversityNeed::Exact => {
                     let _g = profile.section("oracle");
-                    let s = self.exact_diversity(&params, &info, &mut batch_buf)?;
+                    let s = self.exact_diversity(&params, &info, &step, &scratch)?;
                     // Oracle pays a full instrumented pass over the data.
                     cum_sim += self.cluster.epoch_time(n, info.max_micro(), true);
                     (
@@ -395,7 +534,7 @@ impl<'rt> Trainer<'rt> {
             // Validation.
             let (val_loss, val_acc) = {
                 let _g = profile.section("eval");
-                self.evaluate(&params, &info, &mut batch_buf)?
+                self.evaluate(&params, &info, &step, &scratch)?
             };
 
             let wall = epoch_timer.seconds();
@@ -430,6 +569,17 @@ impl<'rt> Trainer<'rt> {
                 // Peak batch size of the epoch (== m_k unless a
                 // step-level policy grew it mid-epoch).
                 mem_mb: mem_model.step_mb(m_peak, mem_mode),
+                dispatches,
+                pad_waste: if padded_rows == 0 {
+                    0.0
+                } else {
+                    1.0 - covered_rows as f64 / padded_rows as f64
+                },
+                par_util: if steps == 0 {
+                    1.0
+                } else {
+                    util_sum / steps as f64
+                },
             });
             history.push(HistoryPoint {
                 epoch,
@@ -440,7 +590,7 @@ impl<'rt> Trainer<'rt> {
             });
             if cfg.verbose {
                 eprintln!(
-                    "[{}] epoch {epoch:>3}  m={m_k:<5} lr={lr:<8.4} train_loss={:.4} val_acc={val_acc:.2}%{}",
+                    "[{}] epoch {epoch:>3}  m={m_k:<5} lr={lr:<8.4} train_loss={:.4} val_acc={val_acc:.2}%{} wall={wall:.3}s sim={sim_epoch:.3}s",
                     cfg.policy.kind(),
                     train_loss,
                     delta_hat
@@ -469,6 +619,21 @@ impl<'rt> Trainer<'rt> {
             }
         }
 
+        // Fold the lane-local timings into the run profile (gather /
+        // execute attribution survives the move into worker closures).
+        for slot in scratch {
+            let s = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+            if s.gather_n > 0 {
+                profile.add_n("gather", s.gather_s, s.gather_n);
+            }
+            if s.exec_n > 0 {
+                profile.add_n("execute", s.exec_s, s.exec_n);
+            }
+            if s.compile_n > 0 {
+                profile.add_n("compile", s.compile_s, s.compile_n);
+            }
+        }
+
         Ok(TrainOutcome {
             record,
             profile,
@@ -476,52 +641,66 @@ impl<'rt> Trainer<'rt> {
         })
     }
 
-    /// Mean val loss + accuracy % over the validation set.
+    /// Mean val loss + accuracy % over the validation set, streamed
+    /// through the step executor as one block dispatch and folded in
+    /// block order (byte-identical at every lane count).
     fn evaluate(
         &self,
         params: &[f32],
         info: &crate::runtime::ModelInfo,
-        buf: &mut Batch,
+        step: &StepExecutor,
+        scratch: &[Mutex<LaneScratch>],
     ) -> Result<(f64, f64)> {
         let n = self.val.n();
+        let (indices, spans) = stream_blocks(n, info, None);
+        let outs = step.run_blocks(spans.len(), |lane, bi| {
+            let (off, block) = spans[bi];
+            let mut s = LaneScratch::lock(&scratch[lane]);
+            self.val.gather_into(&indices[off..off + block.take], block.micro, &mut s.buf);
+            let exec = s.execs.eval(self.rt, &self.cfg.model, block.micro)?;
+            exec.run_eval(params, &s.buf)
+        })?;
         let mut loss = 0.0;
         let mut correct = 0.0;
-        for indices in EpochBatches::sequential(n, info.max_micro()) {
-            let plan = MicroPlan::build(indices.len(), &info.ladder, None);
-            let mut offset = 0;
-            for block in &plan.blocks {
-                let idx = &indices[offset..offset + block.take];
-                offset += block.take;
-                self.val.gather_into(idx, block.micro, buf);
-                let exec = self.rt.eval_exec(&self.cfg.model, block.micro)?;
-                let out = exec.run_eval(params, buf)?;
-                loss += out.loss_sum;
-                correct += out.correct;
-            }
+        for out in &outs {
+            loss += out.loss_sum;
+            correct += out.correct;
         }
         Ok((loss / n as f64, 100.0 * correct / n as f64))
     }
 
     /// Exact Definition-1 gradient diversity over the FULL training set at
     /// fixed `params` (Oracle policy) — streams instrumented micro-batches
-    /// without applying updates.
+    /// through the step executor without applying updates, pushing the
+    /// block outputs into the accumulator in block order.  The stream is
+    /// dispatched in bounded chunks so peak memory stays at
+    /// O(chunk x param_count) — a full-dataset scan must not hold every
+    /// block's gradient vector alive at once.
     fn exact_diversity(
         &self,
         params: &[f32],
         info: &crate::runtime::ModelInfo,
-        buf: &mut Batch,
+        step: &StepExecutor,
+        scratch: &[Mutex<LaneScratch>],
     ) -> Result<DiversityStats> {
+        // Blocks in flight per dispatch: enough to keep every lane busy
+        // across several rounds, small enough to bound the resident
+        // grad_sum vectors.
+        let chunk_blocks = (step.lanes() * 16).max(64);
         let n = self.train.n();
+        let (indices, spans) = stream_blocks(n, info, self.cfg.max_micro);
         let mut acc = DiversityAccum::new(info.param_count);
-        for indices in EpochBatches::sequential(n, info.max_micro()) {
-            let plan = MicroPlan::build(indices.len(), &info.ladder, self.cfg.max_micro);
-            let mut offset = 0;
-            for block in &plan.blocks {
-                let idx = &indices[offset..offset + block.take];
-                offset += block.take;
-                self.train.gather_into(idx, block.micro, buf);
-                let exec = self.rt.train_exec(&self.cfg.model, true, block.micro)?;
-                let out = exec.run_train(params, buf)?;
+        for chunk in spans.chunks(chunk_blocks) {
+            let outs = step.run_blocks(chunk.len(), |lane, bi| {
+                let (off, block) = chunk[bi];
+                let mut s = LaneScratch::lock(&scratch[lane]);
+                self.train.gather_into(&indices[off..off + block.take], block.micro, &mut s.buf);
+                let exec = s.execs.train(self.rt, &self.cfg.model, true, block.micro)?;
+                exec.run_train(params, &s.buf)
+            })?;
+            // Fold each chunk in block order before the next dispatch:
+            // the overall push sequence is identical to the serial scan.
+            for (out, (_, block)) in outs.iter().zip(chunk) {
                 acc.push(&out.grad_sum, out.sqnorm_sum, block.take);
             }
         }
@@ -534,7 +713,8 @@ mod tests {
     // Trainer requires a Runtime with compiled artifacts; end-to-end
     // behaviour (loss decreases, policies adapt, oracle matches estimate
     // on quadratic-like problems, registry-parsed specs match enum-built
-    // configs, step-level policies resize mid-epoch) is covered by
-    // rust/tests/integration_trainer.rs and integration_policies.rs over
-    // the tiny artifacts.
+    // configs, step-level policies resize mid-epoch, and the step-jobs
+    // byte-equality + panic-isolation gates) is covered by
+    // rust/tests/integration_trainer.rs, integration_policies.rs, and
+    // step_parallel.rs over the committed interpreter fixtures.
 }

@@ -1,9 +1,14 @@
 //! The parallel trial engine: fan a set of independent training trials
-//! across a scoped worker pool sharing one thread-safe [`Runtime`].
+//! across a worker pool sharing one thread-safe [`Runtime`].
 //!
 //! The paper's headline claim is established by multi-seed, multi-policy
 //! sweeps; this module is what makes those sweeps run as fast as the
-//! hardware allows.  Design contract:
+//! hardware allows.  The generic scheduling/ordering/isolation core
+//! lives in the shared pool layer ([`crate::pool`], re-exported here
+//! under its historical names) so trial-level and step-level parallelism
+//! ([`crate::coordinator::StepExecutor`]) compose under **one** jobs
+//! budget; this module specializes it to `TrialSpec -> RunRecord` over a
+//! shared `&Runtime`.  Design contract:
 //!
 //! * **Unit of work** — a [`TrialSpec`]: one `(TrainConfig, dataset,
 //!   seed)` triple.  Trials are fully independent: each builds its own
@@ -17,21 +22,21 @@
 //!   available cores).  Workers pull trial indices from an atomic
 //!   counter; results land in per-index slots, so the returned vector is
 //!   always in **spec order** regardless of completion order.
+//! * **Budget composition** — `jobs` is the budget for the whole sweep:
+//!   when fewer trials than budget run concurrently, the spare cores are
+//!   handed to each trial's step executor (`step allowance =
+//!   budget / trial workers`), so `train --trials 1 --jobs 8` runs one
+//!   trial with 8 step lanes while `sweep` with 16 trials runs 8 serial
+//!   trials — never 8 x 8 threads.  An explicit `TrainConfig::step_jobs`
+//!   or `DIVEBATCH_STEP_JOBS` overrides the allowance
+//!   ([`crate::pool::resolve_step_jobs`]).
 //! * **Isolation** — each trial runs under `catch_unwind`: a panicking
 //!   trial reports [`TrialError::Panicked`] and the rest of the sweep
 //!   completes (the runtime's locks are poison-tolerant for the same
 //!   reason).  Trial errors are captured as [`TrialError::Failed`].
 //!
-//! The generic core ([`run_indexed`]) is independent of training so the
-//! scheduling/ordering/isolation contract is testable without artifacts;
-//! [`TrialRunner`] specializes it to `TrialSpec -> RunRecord` over a
-//! shared `&Runtime`.  `RunSpec::run_jobs`, the figure/table bench
-//! harness, the sweep examples, and the `divebatch train/sweep` CLI all
-//! route through here.
-
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+//! `RunSpec::run_jobs`, the figure/table bench harness, the sweep
+//! examples, and the `divebatch train/sweep` CLI all route through here.
 
 use anyhow::Result;
 
@@ -41,128 +46,10 @@ use crate::metrics::RunRecord;
 use crate::runtime::Runtime;
 use crate::util::timer::Profiler;
 
-/// Why one trial of a sweep produced no record.
-#[derive(Clone, Debug, PartialEq)]
-pub enum TrialError {
-    /// The trial returned an error (message carries the anyhow chain).
-    Failed(String),
-    /// The trial panicked; the payload is the panic message.
-    Panicked(String),
-}
-
-impl std::fmt::Display for TrialError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            TrialError::Failed(m) => write!(f, "trial failed: {m}"),
-            TrialError::Panicked(m) => write!(f, "trial panicked: {m}"),
-        }
-    }
-}
-
-impl std::error::Error for TrialError {}
-
-/// Number of worker threads the platform offers (>= 1).
-pub fn available_jobs() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-}
-
-/// Resolve a user-facing jobs knob: 0 means "all available cores".
-pub fn effective_jobs(jobs: usize) -> usize {
-    if jobs == 0 {
-        available_jobs()
-    } else {
-        jobs
-    }
-}
-
-/// Jobs level from the `DIVEBATCH_JOBS` environment variable, used by
-/// the bench harnesses (which have no CLI): unset/invalid = 0 = auto.
-pub fn jobs_from_env() -> usize {
-    std::env::var("DIVEBATCH_JOBS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0)
-}
-
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = payload.downcast_ref::<&'static str>() {
-        (*s).to_string()
-    } else if let Some(s) = payload.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// Run `f` over every item of `items` on up to `jobs` worker threads
-/// (0 = all cores), returning results **in item order**.  Each call is
-/// panic-isolated; `on_done` fires from worker threads in completion
-/// order (progress reporting — item index identifies the trial).
-pub fn run_indexed_with<T, R, F, C>(
-    items: &[T],
-    jobs: usize,
-    f: F,
-    on_done: C,
-) -> Vec<std::result::Result<R, TrialError>>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(usize, &T) -> Result<R> + Sync,
-    C: Fn(usize, &std::result::Result<R, TrialError>) + Sync,
-{
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = effective_jobs(jobs).min(n).max(1);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<std::result::Result<R, TrialError>>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = catch_unwind(AssertUnwindSafe(|| f(i, &items[i])));
-                let res = match out {
-                    Ok(Ok(r)) => Ok(r),
-                    Ok(Err(e)) => Err(TrialError::Failed(format!("{e:#}"))),
-                    Err(payload) => Err(TrialError::Panicked(panic_message(payload.as_ref()))),
-                };
-                on_done(i, &res);
-                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
-            });
-        }
-    });
-
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap_or_else(|e| e.into_inner())
-                .expect("every index was claimed by a worker")
-        })
-        .collect()
-}
-
-/// [`run_indexed_with`] without a progress callback.
-pub fn run_indexed<T, R, F>(
-    items: &[T],
-    jobs: usize,
-    f: F,
-) -> Vec<std::result::Result<R, TrialError>>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(usize, &T) -> Result<R> + Sync,
-{
-    run_indexed_with(items, jobs, f, |_, _| {})
-}
+pub use crate::pool::JobError as TrialError;
+pub use crate::pool::{
+    available_jobs, effective_jobs, jobs_from_env, run_indexed, run_indexed_with,
+};
 
 /// One schedulable training trial: a configuration over a dataset draw
 /// at one seed.  `trial` selects both the dataset generator offset and
@@ -202,7 +89,14 @@ impl TrialSpec {
     }
 
     /// Execute this trial on `rt`; returns the record and stage profile.
-    pub fn execute_profiled(&self, rt: &Runtime) -> Result<(RunRecord, Profiler)> {
+    /// `step_allowance` is this trial's share of the engine's jobs
+    /// budget, applied only when the config leaves `step_jobs` on auto
+    /// (see [`crate::pool::resolve_step_jobs`]).
+    pub fn execute_profiled_with(
+        &self,
+        rt: &Runtime,
+        step_allowance: usize,
+    ) -> Result<(RunRecord, Profiler)> {
         let (train, val) = self.dataset.build(self.trial);
         let info = rt.model(&self.cfg.model)?;
         let cluster = self
@@ -211,9 +105,17 @@ impl TrialSpec {
             .model(info.param_count, self.flops_per_sample);
         let mut cfg = self.cfg.clone();
         cfg.seed = self.trial;
+        if cfg.step_jobs == 0 {
+            cfg.step_jobs = crate::pool::resolve_step_jobs(0, step_allowance);
+        }
         let trainer = Trainer::new(rt, cfg, train, val, cluster)?;
         let out = trainer.run()?;
         Ok((out.record, out.profile))
+    }
+
+    /// [`TrialSpec::execute_profiled_with`] with a serial step allowance.
+    pub fn execute_profiled(&self, rt: &Runtime) -> Result<(RunRecord, Profiler)> {
+        self.execute_profiled_with(rt, 1)
     }
 
     /// Execute this trial on `rt`.
@@ -239,6 +141,14 @@ impl TrialRunner {
         effective_jobs(self.jobs).min(n.max(1))
     }
 
+    /// Per-trial step-executor allowance for `n` trials: the cores of
+    /// the jobs budget left over once `jobs_for(n)` trials run
+    /// concurrently (>= 1).  Applies only to configs with `step_jobs`
+    /// on auto.
+    pub fn step_allowance(&self, n: usize) -> usize {
+        (effective_jobs(self.jobs) / self.jobs_for(n)).max(1)
+    }
+
     /// Run every spec; results are in spec order, one per spec, with
     /// per-trial errors/panics captured rather than aborting the sweep.
     pub fn run(
@@ -260,10 +170,11 @@ impl TrialRunner {
     where
         C: Fn(&TrialSpec, &std::result::Result<RunRecord, TrialError>) + Sync,
     {
+        let allowance = self.step_allowance(specs.len());
         run_indexed_with(
             specs,
             self.jobs,
-            |_, spec| spec.execute(rt),
+            |_, spec| Ok(spec.execute_profiled_with(rt, allowance)?.0),
             |i, res| on_done(&specs[i], res),
         )
     }
@@ -272,85 +183,6 @@ impl TrialRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn results_come_back_in_item_order() {
-        // Work sized inversely to index so later items finish first.
-        let items: Vec<u64> = (0..16).collect();
-        let out = run_indexed(&items, 4, |i, &v| {
-            std::thread::sleep(std::time::Duration::from_millis(16 - v));
-            Ok(i as u64 * 100 + v)
-        });
-        let got: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
-        let want: Vec<u64> = (0..16).map(|v| v * 100 + v).collect();
-        assert_eq!(got, want);
-    }
-
-    #[test]
-    fn jobs_level_does_not_change_results() {
-        let items: Vec<u64> = (0..40).collect();
-        let work = |_: usize, &v: &u64| -> Result<u64> {
-            // Deterministic pseudo-work (splitmix-style scramble).
-            let mut x = v.wrapping_mul(0x9E3779B97F4A7C15);
-            x ^= x >> 30;
-            Ok(x)
-        };
-        let serial: Vec<_> = run_indexed(&items, 1, work);
-        for jobs in [2, 4, 8, 0] {
-            assert_eq!(run_indexed(&items, jobs, work), serial, "jobs={jobs}");
-        }
-    }
-
-    #[test]
-    fn panics_and_errors_are_isolated_per_item() {
-        let items: Vec<usize> = (0..8).collect();
-        let out = run_indexed(&items, 4, |_, &v| -> Result<usize> {
-            match v {
-                3 => panic!("boom at {v}"),
-                5 => anyhow::bail!("bad input {v}"),
-                _ => Ok(v * 2),
-            }
-        });
-        assert_eq!(out.len(), 8);
-        for (i, r) in out.iter().enumerate() {
-            match i {
-                3 => assert_eq!(*r, Err(TrialError::Panicked("boom at 3".into()))),
-                5 => match r {
-                    Err(TrialError::Failed(m)) => assert!(m.contains("bad input 5"), "{m}"),
-                    other => panic!("expected Failed, got {other:?}"),
-                },
-                _ => assert_eq!(*r, Ok(i * 2)),
-            }
-        }
-    }
-
-    #[test]
-    fn completion_callback_sees_every_item_once() {
-        let items: Vec<usize> = (0..10).collect();
-        let seen = Mutex::new(vec![0usize; 10]);
-        let _ = run_indexed_with(
-            &items,
-            3,
-            |_, &v| Ok(v),
-            |i, res| {
-                assert!(res.is_ok());
-                seen.lock().unwrap()[i] += 1;
-            },
-        );
-        assert_eq!(*seen.lock().unwrap(), vec![1; 10]);
-    }
-
-    #[test]
-    fn empty_and_degenerate_inputs() {
-        let none: Vec<u8> = Vec::new();
-        assert!(run_indexed(&none, 4, |_, _| Ok(())).is_empty());
-        let one = [7u8];
-        let out = run_indexed(&one, 0, |_, &v| Ok(v));
-        assert_eq!(out, vec![Ok(7)]);
-        assert!(available_jobs() >= 1);
-        assert_eq!(effective_jobs(3), 3);
-        assert!(effective_jobs(0) >= 1);
-    }
 
     #[test]
     fn trial_error_display() {
@@ -365,5 +197,17 @@ mod tests {
         assert_eq!(TrialRunner::new(4).jobs_for(2), 2);
         assert_eq!(TrialRunner::new(2).jobs_for(100), 2);
         assert!(TrialRunner::new(0).jobs_for(64) >= 1);
+    }
+
+    #[test]
+    fn step_allowance_shares_the_budget() {
+        // 8-core budget over 2 trials: 2 workers x 4 step lanes.
+        assert_eq!(TrialRunner::new(8).step_allowance(2), 4);
+        // Saturated by trials: serial steps.
+        assert_eq!(TrialRunner::new(4).step_allowance(16), 1);
+        // Single trial gets the whole budget.
+        assert_eq!(TrialRunner::new(6).step_allowance(1), 6);
+        // Degenerate inputs stay >= 1.
+        assert!(TrialRunner::new(0).step_allowance(0) >= 1);
     }
 }

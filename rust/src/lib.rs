@@ -30,22 +30,51 @@
 //! DIVEBATCH_JOBS=0 cargo bench --bench fig1_synthetic
 //! ```
 //!
-//! ## The runtime + trial engine
+//! ## The pool layer: two levels of parallelism, one budget
 //!
-//! The runtime layer ([`runtime`]) is `Send + Sync` end to end: one
-//! [`Runtime`] — PJRT client, manifest, and executable cache — is shared
-//! by every worker thread, with concurrent first access to an entry
-//! compiling it exactly once and execution counts kept exact.  On top of
-//! it, the trial engine ([`engine`]) schedules `(config, dataset, seed)`
-//! trials ([`TrialSpec`]) across a scoped pool ([`TrialRunner`], `--jobs
-//! N`, 0 = all cores), streaming records back **in spec order** with
-//! per-trial panic isolation: a poisoned trial reports an error and the
-//! rest of the sweep completes.  Trial records are identical at every
-//! jobs level (each trial owns its RNG streams and policy instance);
-//! only the real wall-clock columns vary under CPU contention —
-//! `RunRecord::to_canonical_json` is the determinism-comparable view.
-//! The `train`/`sweep`/`preset` subcommands, the figure/table benches
-//! (`DIVEBATCH_JOBS`), and the sweep examples all route through it.
+//! All parallel execution sits on one shared pool layer ([`pool`]):
+//!
+//! * **Trial-level** — the trial engine ([`engine`]) schedules
+//!   `(config, dataset, seed)` trials ([`TrialSpec`]) across a scoped
+//!   fan-out ([`TrialRunner`], `--jobs N`, 0 = all cores), streaming
+//!   records back **in spec order** with per-trial panic isolation: a
+//!   poisoned trial reports an error and the rest of the sweep
+//!   completes.
+//! * **Step-level** — inside each trial, the sharded step executor
+//!   ([`StepExecutor`], `--step-jobs N` / `DIVEBATCH_STEP_JOBS`)
+//!   dispatches the micro-batch blocks of every logical batch across a
+//!   persistent [`pool::WorkerPool`] (workers park between steps — no
+//!   per-step thread spawns).  Each lane owns its gather buffer and
+//!   executable handles; block outputs are folded **in block order**,
+//!   so the gradient reduction is byte-identical to the serial loop.
+//!   This is what makes batch-size adaptation bend *measured*
+//!   wall-clock, not just the simulated cluster columns: a batch grown
+//!   8x yields 8x the blocks, executing concurrently.
+//!
+//! The two levels compose under **one** jobs budget instead of
+//! multiplying: the engine hands each concurrent trial a step allowance
+//! of `budget / trial_workers` lanes (`train --trials 1 --jobs 8` = 1
+//! trial x 8 lanes; a 16-trial sweep on 8 cores = 8 serial trials), and
+//! an explicit `--step-jobs` / `DIVEBATCH_STEP_JOBS` overrides the
+//! allowance ([`pool::resolve_step_jobs`]).
+//!
+//! Records are identical at every `--jobs` x `--step-jobs` combination
+//! (each trial owns its RNG streams and policy instance; each step
+//! folds deterministically); only the real wall-clock columns — and the
+//! step-lane utilization field `pu` — vary, and
+//! `RunRecord::to_canonical_json` masks exactly those.  The
+//! `train`/`sweep`/`preset` subcommands, the figure/table benches
+//! (`DIVEBATCH_JOBS`), and the sweep examples all route through the
+//! engine.
+//!
+//! The runtime layer ([`runtime`]) underpinning this is `Send + Sync`
+//! end to end: one [`Runtime`] — PJRT client, manifest, and executable
+//! cache — is shared by every worker thread, with concurrent first
+//! access to an entry compiling it exactly once (and `Runtime::warmup`
+//! precompiling the whole train/eval surface so parallel step lanes
+//! never serialize on first-compile guards), execution counts kept
+//! exact, and per-lane [`runtime::ExecCache`] handle caches making the
+//! per-block executable lookup allocation- and lock-free.
 //!
 //! ## Execution backends
 //!
@@ -143,6 +172,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod runtime;
 pub mod util;
 
@@ -152,7 +182,7 @@ pub use engine::{TrialError, TrialRunner, TrialSpec};
 pub use coordinator::{
     AdaptContext, BatchPolicy, Decision, DiversityAccum, DiversityNeed, DiversityStats,
     HistoryPoint, LrSchedule, MicroPlan, Policy, PolicyError, PolicyHandle, PolicyRegistry,
-    SgdOptimizer, TrainConfig, Trainer,
+    SgdOptimizer, StepExecutor, TrainConfig, Trainer,
 };
 pub use data::{Batch, Dataset, EpochBatches, ImageSpec, Labels, SyntheticSpec};
 pub use metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};

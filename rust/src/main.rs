@@ -123,6 +123,11 @@ fn run_opts(s: ArgSpec) -> ArgSpec {
         .opt("clip", Some("0"), "global-norm grad clipping (0 = off)")
         .opt("max-micro", Some("0"), "cap planner micro-batch rung (0 = whole ladder)")
         .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
+        .opt(
+            "step-jobs",
+            Some("0"),
+            "step-executor lanes per trial (0 = auto: split the --jobs budget; DIVEBATCH_STEP_JOBS overrides auto)",
+        )
         .opt("sim-workers", Some("4"), "simulated cluster: data-parallel workers")
         .opt("sim-div-overhead", Some("0.9"), "simulated cluster: per-sample diversity surcharge")
         .opt("out", Some(""), "write per-trial CSVs under this directory")
@@ -206,6 +211,7 @@ fn cfg_from_args(a: &Args, model: &str, policy: PolicyHandle) -> Result<TrainCon
         workers,
         div_overhead,
     };
+    cfg.step_jobs = a.usize("step-jobs");
     cfg.verbose = !a.flag("quiet");
     Ok(cfg)
 }
@@ -388,6 +394,11 @@ fn preset_spec() -> ArgSpec {
         .pos("id", "preset id (divebatch list)")
         .opt("scale", Some("quick"), "quick | bench | paper")
         .opt("jobs", Some("0"), "trial-engine worker threads (0 = all cores)")
+        .opt(
+            "step-jobs",
+            Some("0"),
+            "step-executor lanes per trial (0 = auto: split the --jobs budget)",
+        )
         .opt("out", Some(""), "write per-trial CSVs under this directory")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .flag("quiet", "suppress per-epoch progress")
@@ -417,6 +428,7 @@ fn cmd_preset(tokens: &[String]) -> Result<()> {
     let mut all_records = Vec::new();
     for mut run in exp.runs {
         run.cfg.verbose = !a.flag("quiet");
+        run.cfg.step_jobs = a.usize("step-jobs");
         let records = run.run_jobs(&rt, a.usize("jobs"))?;
         let curve = stats::mean_curve(
             &records.iter().map(|r| r.val_acc_curve()).collect::<Vec<_>>(),
@@ -440,30 +452,48 @@ fn cmd_preset(tokens: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Per-arm summary table.  The time-to-±1% columns report the simulated
+/// cluster clock AND the measured wall clock side by side: with a
+/// parallel step executor (`--step-jobs`) the measured column now bends
+/// with batch size the same way the simulation predicts (run with
+/// `--jobs 1` if the wall column matters — contended trials inflate it).
 fn print_run_summary(records: &[divebatch::RunRecord]) {
     if records.is_empty() {
         return;
     }
     let mut t = Table::new(
         &records[0].label,
-        &["metric", "25%", "50%", "75%", "100%", "time-to-±1% (sim s)", "end m"],
+        &[
+            "metric",
+            "25%",
+            "50%",
+            "75%",
+            "100%",
+            "t±1% sim(s)",
+            "t±1% wall(s)",
+            "end m",
+        ],
     );
     let at = |f: f64| -> Vec<f64> { records.iter().map(|r| r.val_acc_at_frac(f)).collect() };
-    let times: Vec<f64> = records
-        .iter()
-        .filter_map(|r| r.time_within_final(1.0, true))
-        .collect();
+    let time_col = |simulated: bool| -> String {
+        let times: Vec<f64> = records
+            .iter()
+            .filter_map(|r| r.time_within_final(1.0, simulated))
+            .collect();
+        if times.is_empty() {
+            "-".into()
+        } else {
+            format!("{:.2}", stats::mean(&times))
+        }
+    };
     t.row(vec![
         "val acc".into(),
         pm(stats::mean(&at(0.25)), stats::stderr(&at(0.25))),
         pm(stats::mean(&at(0.5)), stats::stderr(&at(0.5))),
         pm(stats::mean(&at(0.75)), stats::stderr(&at(0.75))),
         pm(stats::mean(&at(1.0)), stats::stderr(&at(1.0))),
-        if times.is_empty() {
-            "-".into()
-        } else {
-            format!("{:.2}", stats::mean(&times))
-        },
+        time_col(true),
+        time_col(false),
         format!("{}", records[0].end_batch_size()),
     ]);
     println!("{}", t.render());

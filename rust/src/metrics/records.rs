@@ -38,6 +38,17 @@ pub struct EpochRecord {
     pub cum_sim_s: f64,
     /// Analytic peak training memory at this epoch's batch size (MB).
     pub mem_mb: f64,
+    /// Executable dispatches across this epoch's training steps (the
+    /// micro-plan block count — the fixed-cost driver the planner
+    /// minimizes).  Plan-derived, so jobs-invariant.
+    pub dispatches: usize,
+    /// Fraction of executed training rows that were padding
+    /// (`1 - covered/padded` over the epoch's plans; 0 = perfect fit).
+    pub pad_waste: f64,
+    /// Mean step-executor dispatch utilization of this epoch's plans at
+    /// the run's `--step-jobs` lane count (1.0 when serial).  Depends on
+    /// the lane count, so it is masked in the canonical JSON.
+    pub par_util: f64,
 }
 
 /// One complete training run (one trial).
@@ -53,7 +64,8 @@ pub struct RunRecord {
 }
 
 pub const CSV_HEADER: &str = "epoch,batch_size,lr,steps,train_loss,train_acc,val_loss,val_acc,\
-delta_hat,n_delta,exact_delta,wall_s,sim_s,cum_wall_s,cum_sim_s,mem_mb";
+delta_hat,n_delta,exact_delta,wall_s,sim_s,cum_wall_s,cum_sim_s,mem_mb,dispatches,pad_waste,\
+par_util";
 
 fn opt(v: Option<f64>) -> String {
     v.map(|x| format!("{x:.6e}")).unwrap_or_default()
@@ -170,6 +182,29 @@ impl RunRecord {
         self.epochs.iter().map(|e| e.batch_size).max().unwrap_or(0)
     }
 
+    /// Total executable dispatches across the run's training steps.
+    pub fn total_dispatches(&self) -> usize {
+        self.epochs.iter().map(|e| e.dispatches).sum()
+    }
+
+    /// Mean per-epoch padding-waste fraction (0 = every plan fit its
+    /// rungs exactly).
+    pub fn mean_pad_waste(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.pad_waste).sum::<f64>() / self.epochs.len() as f64
+    }
+
+    /// Mean per-epoch step-dispatch utilization at the run's lane count
+    /// (1.0 for serial runs).
+    pub fn mean_par_util(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 1.0;
+        }
+        self.epochs.iter().map(|e| e.par_util).sum::<f64>() / self.epochs.len() as f64
+    }
+
     // -------------------------------------------------------------- io
 
     pub fn to_csv(&self) -> String {
@@ -177,7 +212,7 @@ impl RunRecord {
         out.push('\n');
         for e in &self.epochs {
             out.push_str(&format!(
-                "{},{},{:.6e},{},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.2}\n",
+                "{},{},{:.6e},{},{:.6},{:.6},{:.6},{:.6},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.2},{},{:.4},{:.4}\n",
                 e.epoch,
                 e.batch_size,
                 e.lr,
@@ -194,6 +229,9 @@ impl RunRecord {
                 e.cum_wall_s,
                 e.cum_sim_s,
                 e.mem_mb,
+                e.dispatches,
+                e.pad_waste,
+                e.par_util,
             ));
         }
         out
@@ -241,6 +279,9 @@ impl RunRecord {
                                 ("cw", num(e.cum_wall_s)),
                                 ("cs", num(e.cum_sim_s)),
                                 ("mm", num(e.mem_mb)),
+                                ("dp", num(e.dispatches as f64)),
+                                ("pw", num(e.pad_waste)),
+                                ("pu", num(e.par_util)),
                             ])
                         })
                         .collect(),
@@ -250,17 +291,21 @@ impl RunRecord {
     }
 
     /// Determinism-comparable JSON: identical across reruns and across
-    /// trial-engine `--jobs` levels.  Wall-clock fields (`ws`, `cw`) are
-    /// zeroed because they measure this testbed's real elapsed time —
-    /// which varies run to run and under CPU contention — not the run's
-    /// outcome; every other field is bit-deterministic given the spec.
-    /// The serial-vs-parallel equivalence tests compare these strings
-    /// byte for byte.
+    /// trial-engine `--jobs` AND step-executor `--step-jobs` levels.
+    /// Wall-clock fields (`ws`, `cw`) are zeroed because they measure
+    /// this testbed's real elapsed time — which varies run to run and
+    /// under CPU contention — and the dispatch-utilization field (`pu`)
+    /// is zeroed because it is a function of the step-executor lane
+    /// count, not of the run's outcome; every other field (including
+    /// `dp`/`pw`, which derive from the plans alone) is
+    /// bit-deterministic given the spec.  The serial-vs-parallel
+    /// equivalence tests compare these strings byte for byte.
     pub fn to_canonical_json(&self) -> Json {
         let mut canon = self.clone();
         for e in &mut canon.epochs {
             e.wall_s = 0.0;
             e.cum_wall_s = 0.0;
+            e.par_util = 0.0;
         }
         canon.to_json()
     }
@@ -298,6 +343,11 @@ impl RunRecord {
                 cum_wall_s: get_f(e, "cw")?,
                 cum_sim_s: get_f(e, "cs")?,
                 mem_mb: get_f(e, "mm")?,
+                // Dispatch fields default when absent so result caches
+                // written before they existed keep loading.
+                dispatches: e.get("dp").and_then(|v| v.as_usize()).unwrap_or(0),
+                pad_waste: get_opt(e, "pw").unwrap_or(0.0),
+                par_util: get_opt(e, "pu").unwrap_or(1.0),
             });
         }
         Ok(rec)
@@ -326,6 +376,9 @@ impl RunRecord {
                 Json::Num(self.epochs.last().map(|e| e.cum_sim_s).unwrap_or(0.0)),
             ),
             ("peak_mem_mb", Json::Num(self.peak_mem_mb())),
+            ("dispatches", Json::Num(self.total_dispatches() as f64)),
+            ("mean_pad_waste", Json::Num(self.mean_pad_waste())),
+            ("mean_par_util", Json::Num(self.mean_par_util())),
         ])
     }
 
@@ -366,6 +419,9 @@ mod tests {
             cum_wall_s: (epoch + 1) as f64,
             cum_sim_s: 0.5 * (epoch + 1) as f64,
             mem_mb: 10.0 + m as f64,
+            dispatches: 4 * (epoch + 1),
+            pad_waste: 0.125,
+            par_util: 0.75,
         }
     }
 
@@ -419,6 +475,22 @@ mod tests {
         assert!(j.contains("\"final_val_acc\":3"));
         assert!(j.contains("\"end_batch_size\":384"));
         assert!(j.contains("\"epochs\":3"));
+        // Dispatch accounting flows into the sweep JSONL summary.
+        assert!(j.contains("\"dispatches\":24"), "{j}"); // 4 + 8 + 12
+        assert!(j.contains("\"mean_pad_waste\":0.125"), "{j}");
+        assert!(j.contains("\"mean_par_util\":0.75"), "{j}");
+    }
+
+    #[test]
+    fn dispatch_summaries() {
+        let r = run_with_accs(&[1.0, 2.0]);
+        assert_eq!(r.total_dispatches(), 12);
+        assert!((r.mean_pad_waste() - 0.125).abs() < 1e-12);
+        assert!((r.mean_par_util() - 0.75).abs() < 1e-12);
+        let empty = RunRecord::new("t", "m", "sgd", "d", 0);
+        assert_eq!(empty.total_dispatches(), 0);
+        assert_eq!(empty.mean_pad_waste(), 0.0);
+        assert_eq!(empty.mean_par_util(), 1.0);
     }
 
     #[test]
@@ -443,23 +515,49 @@ mod tests {
         assert_eq!(back.epochs[0].exact_delta, None);
         assert_eq!(back.epochs[1].exact_delta, Some(3.5));
         assert_eq!(back.epochs[1].cum_sim_s, r.epochs[1].cum_sim_s);
+        assert_eq!(back.epochs[1].dispatches, 8);
+        assert_eq!(back.epochs[1].pad_waste, 0.125);
+        assert_eq!(back.epochs[1].par_util, 0.75);
     }
 
     #[test]
-    fn canonical_json_masks_wall_clock_only() {
+    fn from_json_defaults_dispatch_fields_for_old_caches() {
+        // A record serialized before dp/pw/pu existed must still load.
+        let r = run_with_accs(&[5.0]);
+        let mut j = r.to_json().to_string();
+        for k in ["\"dp\":4,", "\"pw\":0.125,", "\"pu\":0.75,"] {
+            j = j.replace(k, "");
+        }
+        let back = RunRecord::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.epochs[0].dispatches, 0);
+        assert_eq!(back.epochs[0].pad_waste, 0.0);
+        assert_eq!(back.epochs[0].par_util, 1.0);
+    }
+
+    #[test]
+    fn canonical_json_masks_wall_clock_and_lane_utilization_only() {
         let mut a = run_with_accs(&[10.0, 20.0]);
         let mut b = run_with_accs(&[10.0, 20.0]);
-        // Same outcome, different testbed timing.
+        // Same outcome, different testbed timing and step-lane count.
         a.epochs[0].wall_s = 1.25;
         a.epochs[0].cum_wall_s = 1.25;
+        a.epochs[0].par_util = 1.0;
         b.epochs[0].wall_s = 9.75;
         b.epochs[0].cum_wall_s = 9.75;
+        b.epochs[0].par_util = 0.5;
         assert_ne!(a.to_json().to_string(), b.to_json().to_string());
         assert_eq!(
             a.to_canonical_json().to_string(),
             b.to_canonical_json().to_string()
         );
-        // Outcome changes still show through.
+        // Outcome changes still show through — including the
+        // plan-derived dispatch fields, which are NOT masked.
+        let mut c = run_with_accs(&[10.0, 20.0]);
+        c.epochs[1].dispatches += 1;
+        assert_ne!(
+            a.to_canonical_json().to_string(),
+            c.to_canonical_json().to_string()
+        );
         b.epochs[1].val_acc += 1.0;
         assert_ne!(
             a.to_canonical_json().to_string(),

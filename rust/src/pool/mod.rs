@@ -1,0 +1,649 @@
+//! The shared worker-pool layer: one work-stealing core for **both**
+//! levels of parallelism in this crate.
+//!
+//! Two schedulers live here, sharing the jobs-budget arithmetic and the
+//! panic-isolation contract:
+//!
+//! * [`run_indexed`] / [`run_indexed_with`] — a scoped, spawn-per-call
+//!   fan-out for **coarse** work items (training trials: seconds each,
+//!   spawn cost irrelevant).  The trial engine ([`crate::engine`])
+//!   specializes it to `TrialSpec -> RunRecord`.
+//! * [`WorkerPool`] — a **persistent** pool for fine-grained repeated
+//!   dispatch (the step executor: micro-batch blocks of one logical
+//!   batch, microseconds each, dispatched thousands of times per run).
+//!   Workers park between scatters instead of being respawned, so the
+//!   per-step overhead is one condvar wake, not N thread spawns.
+//!
+//! Both return results **in item order** regardless of completion order
+//! — the foundation of the crate-wide determinism guarantee (records are
+//! byte-identical at any `--jobs` / `--step-jobs` level) — and both
+//! capture per-item panics as [`JobError::Panicked`] instead of
+//! propagating or hanging.
+//!
+//! ## One jobs budget, two levels
+//!
+//! Trial-level (`--jobs`) and step-level (`--step-jobs`) parallelism
+//! compose under a single core budget instead of multiplying: the trial
+//! engine hands each concurrently-running trial a step allowance of
+//! `effective_jobs(jobs) / trial_workers` lanes (so `--jobs 8` over 2
+//! trials = 2 trials x 4 step lanes = 8 busy cores, never 16), and
+//! [`resolve_step_jobs`] arbitrates the per-trial knob: an explicit
+//! `TrainConfig::step_jobs` wins, then the `DIVEBATCH_STEP_JOBS`
+//! environment variable, then the engine's allowance.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+/// Why one work item of a pool dispatch produced no result.
+///
+/// The trial engine re-exports this as `TrialError` (its historical
+/// name), and `Display` keeps that consumer's historical wording
+/// (`trial failed: ...` / `trial panicked: ...`): the only path that
+/// surfaces this type to users IS the trial level — the step executor
+/// never displays it, mapping the variants into block-named `anyhow`
+/// errors instead (`step block 3 of 8 ...`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// The item returned an error (message carries the anyhow chain).
+    Failed(String),
+    /// The item panicked; the payload is the panic message.
+    Panicked(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Failed(m) => write!(f, "trial failed: {m}"),
+            JobError::Panicked(m) => write!(f, "trial panicked: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Number of worker threads the platform offers (>= 1).
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a user-facing jobs knob: 0 means "all available cores".
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        available_jobs()
+    } else {
+        jobs
+    }
+}
+
+/// Trial-engine jobs level from the `DIVEBATCH_JOBS` environment
+/// variable, used by the bench harnesses (which have no CLI):
+/// unset/invalid = 0 = auto.
+pub fn jobs_from_env() -> usize {
+    std::env::var("DIVEBATCH_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Step-executor lanes from the `DIVEBATCH_STEP_JOBS` environment
+/// variable (integration suites / benches): unset/invalid = 0 = defer
+/// to the caller's fallback.
+pub fn step_jobs_from_env() -> usize {
+    std::env::var("DIVEBATCH_STEP_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Arbitrate the step-executor lane count for one trial: an explicit
+/// `TrainConfig::step_jobs` wins, then `DIVEBATCH_STEP_JOBS`, then
+/// `fallback` (the trial engine's per-trial share of the jobs budget;
+/// 1 for a directly-constructed `Trainer`).  Always >= 1.
+pub fn resolve_step_jobs(explicit: usize, fallback: usize) -> usize {
+    if explicit > 0 {
+        return explicit;
+    }
+    let env = step_jobs_from_env();
+    if env > 0 {
+        env
+    } else {
+        fallback.max(1)
+    }
+}
+
+/// Lock, recovering from poisoning: pool bookkeeping is always left
+/// consistent (writers never panic mid-update — item panics are caught
+/// before they reach pool state), so a panicking worker must not wedge
+/// the pool for the rest of the run.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ------------------------------------------------- scoped coarse fan-out
+
+/// Run `f` over every item of `items` on up to `jobs` worker threads
+/// (0 = all cores), returning results **in item order**.  Each call is
+/// panic-isolated; `on_done` fires from worker threads in completion
+/// order (progress reporting — item index identifies the work item).
+///
+/// Threads are spawned per call (scoped), which is the right trade for
+/// coarse items like training trials; for microsecond-scale repeated
+/// dispatch use [`WorkerPool`] instead.
+pub fn run_indexed_with<T, R, F, C>(
+    items: &[T],
+    jobs: usize,
+    f: F,
+    on_done: C,
+) -> Vec<std::result::Result<R, JobError>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R> + Sync,
+    C: Fn(usize, &std::result::Result<R, JobError>) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = effective_jobs(jobs).min(n).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<std::result::Result<R, JobError>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, &items[i])));
+                let res = match out {
+                    Ok(Ok(r)) => Ok(r),
+                    Ok(Err(e)) => Err(JobError::Failed(format!("{e:#}"))),
+                    Err(payload) => Err(JobError::Panicked(panic_message(payload.as_ref()))),
+                };
+                on_done(i, &res);
+                *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("every index was claimed by a worker")
+        })
+        .collect()
+}
+
+/// [`run_indexed_with`] without a progress callback.
+pub fn run_indexed<T, R, F>(
+    items: &[T],
+    jobs: usize,
+    f: F,
+) -> Vec<std::result::Result<R, JobError>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R> + Sync,
+{
+    run_indexed_with(items, jobs, f, |_, _| {})
+}
+
+// --------------------------------------------- persistent scatter pool
+
+/// One published scatter: a type-erased item runner plus the claim /
+/// completion counters.  `ctx` points into the scattering caller's
+/// stack; soundness argument in [`WorkerPool::scatter`].
+struct ScatterJob {
+    /// Monomorphized trampoline: runs item `i` on lane `lane`, storing
+    /// the result into the caller's slot.  Only called for `i < n`.
+    run: unsafe fn(*const (), usize, usize),
+    ctx: *const (),
+    next: AtomicUsize,
+    n: usize,
+    /// Items not yet completed; the caller returns only once this is 0.
+    pending: AtomicUsize,
+}
+
+// The raw ctx pointer is only dereferenced through `run` for claimed
+// item indices, all of which complete before the owning `scatter` call
+// returns; see the soundness note on `scatter`.
+unsafe impl Send for ScatterJob {}
+unsafe impl Sync for ScatterJob {}
+
+struct PoolState {
+    job: Option<Arc<ScatterJob>>,
+    /// Bumped per scatter so a worker never re-enters a job it already
+    /// drained.
+    generation: u64,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between scatters.
+    work: Condvar,
+    /// The scattering caller parks here until `pending` reaches 0.
+    done: Condvar,
+}
+
+/// Trampoline for [`WorkerPool::scatter`]: recover the typed context,
+/// run the user closure under `catch_unwind`, store the result.
+///
+/// # Safety
+/// `ctx` must point at a live `(&F, &[Mutex<Option<Result<R, JobError>>>])`
+/// for the duration of the call, and `i` must be in-bounds and claimed
+/// exactly once.  `scatter` upholds both.
+unsafe fn scatter_run_one<R, F>(ctx: *const (), lane: usize, i: usize)
+where
+    R: Send,
+    F: Fn(usize, usize) -> Result<R> + Sync,
+{
+    type Slots<R> = [Mutex<Option<std::result::Result<R, JobError>>>];
+    let (f, slots) = unsafe { &*(ctx as *const (&F, &Slots<R>)) };
+    let out = catch_unwind(AssertUnwindSafe(|| f(lane, i)));
+    let res = match out {
+        Ok(Ok(r)) => Ok(r),
+        Ok(Err(e)) => Err(JobError::Failed(format!("{e:#}"))),
+        Err(payload) => Err(JobError::Panicked(panic_message(payload.as_ref()))),
+    };
+    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
+}
+
+fn worker_loop(shared: Arc<PoolShared>, lane: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job: Arc<ScatterJob> = {
+            let mut st = lock_unpoisoned(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match &st.job {
+                    Some(j) if st.generation != seen_gen => {
+                        seen_gen = st.generation;
+                        break j.clone();
+                    }
+                    _ => {}
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                break;
+            }
+            // Safety: i was claimed exactly once and is < n; the caller
+            // blocks until `pending` hits 0, keeping ctx alive.
+            unsafe { (job.run)(job.ctx, lane, i) };
+            if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // Last item: wake the caller.  Lock the state mutex so
+                // the notify cannot slip between the caller's pending
+                // check and its wait.
+                let _st = lock_unpoisoned(&shared.state);
+                shared.done.notify_all();
+            }
+        }
+    }
+}
+
+/// A persistent pool of parked worker threads for repeated fine-grained
+/// scatters (the step executor's micro-batch blocks).
+///
+/// `lanes` counts the **caller's thread too**: a pool with `lanes = 4`
+/// spawns 3 workers and the scattering thread works alongside them as
+/// lane 0, so `--step-jobs N` means N busy cores, not N+1.  Results come
+/// back in item order; per-item panics are captured as
+/// [`JobError::Panicked`].  Dropping the pool parks-then-joins every
+/// worker.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    lanes: usize,
+    /// Serializes scatters from different threads sharing one pool (the
+    /// trainer never does this, but the type stays safe if a caller
+    /// does).
+    dispatch: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `lanes` total lanes (>= 1); `lanes - 1` threads
+    /// are spawned, parked until the first scatter.
+    pub fn new(lanes: usize) -> WorkerPool {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..lanes)
+            .map(|lane| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("divebatch-step-{lane}"))
+                    .spawn(move || worker_loop(sh, lane))
+                    .expect("spawning step-pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            lanes,
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// Total parallel lanes including the scattering caller.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(lane, i)` for every `i in 0..n` across the pool (the
+    /// caller participates as lane 0), returning results **in item
+    /// order**.  Lane ids are `< lanes()` and each lane runs at most one
+    /// item at a time, so callers may keep per-lane scratch state.
+    ///
+    /// Soundness of the lifetime erasure: the closure and result slots
+    /// live on this call's stack and are reached by workers through a
+    /// raw pointer.  Every claimed item (`i < n`) finishes — and
+    /// decrements `pending` — before this call observes `pending == 0`
+    /// and returns; a straggler worker that wakes late only touches the
+    /// job's own atomics (held alive by its `Arc`), never the caller's
+    /// stack, because every index it claims is `>= n`.
+    pub fn scatter<R, F>(&self, n: usize, f: F) -> Vec<std::result::Result<R, JobError>>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> Result<R> + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let _serialize = lock_unpoisoned(&self.dispatch);
+        let slots: Vec<Mutex<Option<std::result::Result<R, JobError>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let ctx: (&F, &[Mutex<Option<std::result::Result<R, JobError>>>]) = (&f, &slots);
+        let job = Arc::new(ScatterJob {
+            run: scatter_run_one::<R, F>,
+            ctx: &ctx as *const _ as *const (),
+            next: AtomicUsize::new(0),
+            n,
+            pending: AtomicUsize::new(n),
+        });
+
+        if self.lanes > 1 {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            st.job = Some(job.clone());
+            st.generation = st.generation.wrapping_add(1);
+            drop(st);
+            self.shared.work.notify_all();
+        }
+
+        // The caller is lane 0.
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                break;
+            }
+            // Safety: same contract as the worker side.
+            unsafe { (job.run)(job.ctx, 0, i) };
+            job.pending.fetch_sub(1, Ordering::AcqRel);
+        }
+
+        if self.lanes > 1 {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            while job.pending.load(Ordering::Acquire) > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+        }
+        debug_assert_eq!(job.pending.load(Ordering::Acquire), 0);
+
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .expect("every item index was claimed")
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_unpoisoned(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ------------------------------------------------ run_indexed core
+
+    #[test]
+    fn results_come_back_in_item_order() {
+        // Work sized inversely to index so later items finish first.
+        let items: Vec<u64> = (0..16).collect();
+        let out = run_indexed(&items, 4, |i, &v| {
+            std::thread::sleep(std::time::Duration::from_millis(16 - v));
+            Ok(i as u64 * 100 + v)
+        });
+        let got: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        let want: Vec<u64> = (0..16).map(|v| v * 100 + v).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn jobs_level_does_not_change_results() {
+        let items: Vec<u64> = (0..40).collect();
+        let work = |_: usize, &v: &u64| -> Result<u64> {
+            // Deterministic pseudo-work (splitmix-style scramble).
+            let mut x = v.wrapping_mul(0x9E3779B97F4A7C15);
+            x ^= x >> 30;
+            Ok(x)
+        };
+        let serial: Vec<_> = run_indexed(&items, 1, work);
+        for jobs in [2, 4, 8, 0] {
+            assert_eq!(run_indexed(&items, jobs, work), serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn panics_and_errors_are_isolated_per_item() {
+        let items: Vec<usize> = (0..8).collect();
+        let out = run_indexed(&items, 4, |_, &v| -> Result<usize> {
+            match v {
+                3 => panic!("boom at {v}"),
+                5 => anyhow::bail!("bad input {v}"),
+                _ => Ok(v * 2),
+            }
+        });
+        assert_eq!(out.len(), 8);
+        for (i, r) in out.iter().enumerate() {
+            match i {
+                3 => assert_eq!(*r, Err(JobError::Panicked("boom at 3".into()))),
+                5 => match r {
+                    Err(JobError::Failed(m)) => assert!(m.contains("bad input 5"), "{m}"),
+                    other => panic!("expected Failed, got {other:?}"),
+                },
+                _ => assert_eq!(*r, Ok(i * 2)),
+            }
+        }
+    }
+
+    #[test]
+    fn completion_callback_sees_every_item_once() {
+        let items: Vec<usize> = (0..10).collect();
+        let seen = Mutex::new(vec![0usize; 10]);
+        let _ = run_indexed_with(
+            &items,
+            3,
+            |_, &v| Ok(v),
+            |i, res| {
+                assert!(res.is_ok());
+                seen.lock().unwrap()[i] += 1;
+            },
+        );
+        assert_eq!(*seen.lock().unwrap(), vec![1; 10]);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let none: Vec<u8> = Vec::new();
+        assert!(run_indexed(&none, 4, |_, _| Ok(())).is_empty());
+        let one = [7u8];
+        let out = run_indexed(&one, 0, |_, &v| Ok(v));
+        assert_eq!(out, vec![Ok(7)]);
+        assert!(available_jobs() >= 1);
+        assert_eq!(effective_jobs(3), 3);
+        assert!(effective_jobs(0) >= 1);
+    }
+
+    #[test]
+    fn job_error_display_keeps_trial_wording() {
+        // Pinned exactly: this is the user-visible sweep failure text
+        // (via the engine's TrialError re-export), unchanged since PR 2.
+        assert_eq!(JobError::Failed("x".into()).to_string(), "trial failed: x");
+        assert_eq!(
+            JobError::Panicked("y".into()).to_string(),
+            "trial panicked: y"
+        );
+    }
+
+    #[test]
+    fn step_jobs_resolution_precedence() {
+        // Explicit beats everything (env is not set in-process here;
+        // the env branch is covered by the CI DIVEBATCH_STEP_JOBS pass).
+        assert_eq!(resolve_step_jobs(3, 8), 3);
+        assert_eq!(resolve_step_jobs(1, 8), 1);
+        // Fallback applies when explicit is 0 and clamps to >= 1.
+        if step_jobs_from_env() == 0 {
+            assert_eq!(resolve_step_jobs(0, 6), 6);
+            assert_eq!(resolve_step_jobs(0, 0), 1);
+        }
+    }
+
+    // ------------------------------------------------ persistent pool
+
+    #[test]
+    fn scatter_returns_results_in_item_order() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.lanes(), 4);
+        let out = pool.scatter(33, |_, i| Ok(i * 3));
+        let got: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, (0..33).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_is_reusable_and_matches_serial() {
+        // The same pool dispatches many scatters (the per-step usage
+        // pattern) and every one matches the single-lane result.
+        let pool = WorkerPool::new(4);
+        let serial = WorkerPool::new(1);
+        let f = |_: usize, i: usize| -> Result<u64> {
+            let mut x = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            x ^= x >> 29;
+            Ok(x)
+        };
+        for n in [1usize, 2, 3, 7, 16, 64] {
+            let a: Vec<_> = pool.scatter(n, f).into_iter().map(|r| r.unwrap()).collect();
+            let b: Vec<_> = serial.scatter(n, f).into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scatter_lane_ids_are_in_range_and_exclusive() {
+        // Each lane id must only ever run one item at a time (per-lane
+        // scratch safety) and stay < lanes().
+        let lanes = 4;
+        let pool = WorkerPool::new(lanes);
+        let busy: Vec<AtomicUsize> = (0..lanes).map(|_| AtomicUsize::new(0)).collect();
+        let results = pool.scatter(200, |lane, i| {
+            assert!(lane < lanes, "lane {lane}");
+            let was = busy[lane].fetch_add(1, Ordering::SeqCst);
+            assert_eq!(was, 0, "lane {lane} ran two items concurrently");
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            busy[lane].fetch_sub(1, Ordering::SeqCst);
+            Ok(i)
+        });
+        assert_eq!(results.len(), 200);
+        // Any in-closure assertion failure surfaces as a Panicked item.
+        for (i, r) in results.into_iter().enumerate() {
+            assert_eq!(r, Ok(i));
+        }
+    }
+
+    #[test]
+    fn scatter_captures_panics_per_item() {
+        let pool = WorkerPool::new(4);
+        let out = pool.scatter(8, |_, i| -> Result<usize> {
+            if i == 5 {
+                panic!("block {i} poisoned");
+            }
+            Ok(i)
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 5 {
+                assert_eq!(*r, Err(JobError::Panicked("block 5 poisoned".into())));
+            } else {
+                assert_eq!(*r, Ok(i));
+            }
+        }
+        // The pool survives the panic and keeps dispatching.
+        let again = pool.scatter(4, |_, i| Ok(i + 1));
+        assert!(again.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn scatter_empty_and_single_lane() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.scatter(0, |_, i| Ok(i)).is_empty());
+        let out = pool.scatter(5, |lane, i| {
+            assert_eq!(lane, 0);
+            Ok(i)
+        });
+        assert_eq!(out.len(), 5);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        // Dropping must not hang even right after a scatter.
+        let pool = WorkerPool::new(8);
+        let _ = pool.scatter(3, |_, i| Ok(i));
+        drop(pool);
+    }
+}

@@ -214,16 +214,21 @@ impl Runtime {
         self.entry(model, "update")
     }
 
-    /// Pre-compile every entry a run can touch for a model: the full
-    /// train (both variants) + eval ladder, and — when the model ships
-    /// one — the fused `update` entry, so `--device-update` runs never
-    /// pay JIT compilation inside a measured bench region.
-    pub fn warmup(&self, model: &str, diversity: bool) -> Result<()> {
+    /// Pre-compile every entry a run can touch for a model: **both**
+    /// train variants (plain + diversity-instrumented) at every ladder
+    /// rung, the eval ladder, and — when the model ships one — the fused
+    /// `update` entry.  Benches call this so no JIT compile lands inside
+    /// a measured region, and the trainer calls it before spinning up a
+    /// parallel step executor so its worker lanes never serialize on the
+    /// per-entry first-compile guards at step one (a dynamic-need policy
+    /// can flip the train variant mid-run, hence both).
+    pub fn warmup(&self, model: &str) -> Result<()> {
         let info = self.model(model)?;
         let ladder = info.ladder.clone();
         let has_update = info.entries.contains_key("update");
         for m in ladder {
-            self.train_exec(model, diversity, m)?;
+            self.train_exec(model, true, m)?;
+            self.train_exec(model, false, m)?;
             self.eval_exec(model, m)?;
         }
         if has_update {

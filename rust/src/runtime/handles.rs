@@ -1,0 +1,79 @@
+//! Per-worker executable-handle caches.
+//!
+//! The runtime's central cache ([`Runtime::entry`]) is keyed by a
+//! formatted string behind an `RwLock` — cheap, but not free: a lookup
+//! allocates the key and takes the read lock.  A training run touches at
+//! most a handful of entries (the ladder x {train, eval} x {plain,
+//! instrumented}), so each step-executor lane owns an [`ExecCache`]: a
+//! linear-scan `Vec` of `Arc<Executable>` handles making the per-block
+//! lookup allocation- and lock-free after first touch.  Lanes never
+//! share one (that is the point), which also means a dynamic-need policy
+//! flipping the instrumentation variant between epochs just adds a
+//! second entry per rung rather than invalidating anything.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::cache::Runtime;
+use super::executable::Executable;
+
+/// Lane-local handle cache over the shared [`Runtime`] compile cache.
+#[derive(Default)]
+pub struct ExecCache {
+    /// Train entries keyed by (micro, instrumented).
+    train: Vec<((usize, bool), Arc<Executable>)>,
+    /// Eval entries keyed by micro.
+    eval: Vec<(usize, Arc<Executable>)>,
+}
+
+impl ExecCache {
+    pub fn new() -> ExecCache {
+        ExecCache::default()
+    }
+
+    /// Train-step executable for (model, instrumented, micro), fetched
+    /// from the runtime once and linear-scanned afterwards.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        model: &str,
+        instrumented: bool,
+        micro: usize,
+    ) -> Result<Arc<Executable>> {
+        let key = (micro, instrumented);
+        if let Some((_, e)) = self.train.iter().find(|(k, _)| *k == key) {
+            return Ok(e.clone());
+        }
+        let e = rt.train_exec(model, instrumented, micro)?;
+        self.train.push((key, e.clone()));
+        Ok(e)
+    }
+
+    /// Eval-step executable for (model, micro).
+    pub fn eval(&mut self, rt: &Runtime, model: &str, micro: usize) -> Result<Arc<Executable>> {
+        if let Some((_, e)) = self.eval.iter().find(|(k, _)| *k == micro) {
+            return Ok(e.clone());
+        }
+        let e = rt.eval_exec(model, micro)?;
+        self.eval.push((micro, e.clone()));
+        Ok(e)
+    }
+
+    /// Distinct handles held (test/introspection aid).
+    pub fn len(&self) -> usize {
+        self.train.len() + self.eval.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end (hit/miss behaviour over the fixture runtime,
+    // shared-Arc identity with the central cache) in
+    // rust/tests/step_parallel.rs, which runs everywhere over the
+    // committed interpreter fixtures.
+}

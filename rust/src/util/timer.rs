@@ -59,9 +59,16 @@ impl Profiler {
     }
 
     pub fn add(&mut self, name: &'static str, seconds: f64) {
+        self.add_n(name, seconds, 1);
+    }
+
+    /// Fold externally-accumulated totals into a section — e.g. per-lane
+    /// timings merged after a parallel region, where per-call
+    /// `section()` guards cannot reach the `&mut` profiler.
+    pub fn add_n(&mut self, name: &'static str, seconds: f64, calls: u64) {
         let e = self.totals.entry(name).or_insert((0.0, 0));
         e.0 += seconds;
-        e.1 += 1;
+        e.1 += calls;
     }
 
     pub fn total(&self, name: &str) -> f64 {
@@ -124,9 +131,11 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         p.add("manual", 1.5);
+        p.add_n("manual", 0.5, 4);
         assert_eq!(p.count("work"), 3);
         assert!(p.total("work") >= 0.005);
-        assert_eq!(p.total("manual"), 1.5);
+        assert_eq!(p.total("manual"), 2.0);
+        assert_eq!(p.count("manual"), 5);
         let rep = p.report();
         assert!(rep.contains("work"));
         assert!(rep.contains("manual"));

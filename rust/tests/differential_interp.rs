@@ -88,67 +88,79 @@ fn random_input(spec: &TensorSpec, rng: &mut Rng) -> xla::Literal {
     }
 }
 
-/// Every fixture entry, on the committed jax golden inputs: compiled path
-/// == reference path.
+/// Every entry of every fixture model, on the committed jax golden
+/// inputs: compiled path == reference path.
 #[test]
 fn compiled_matches_reference_on_golden_inputs() {
     let manifest = fixtures_manifest();
-    let model = manifest.model("tinylogreg8").unwrap();
     let path = concat!(
         env!("CARGO_MANIFEST_DIR"),
         "/tests/fixtures/golden_entry_outputs.json"
     );
     let doc = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
-    let entries = doc.req("entries").unwrap().as_obj().unwrap();
-    assert!(entries.len() >= 7, "expected all fixture entries covered");
-    for (key, case) in entries {
-        let info = model.entry(key).unwrap();
-        let exe = compile(&manifest, &info.file);
-        let inputs: Vec<xla::Literal> = case
-            .req_arr("inputs")
-            .unwrap()
-            .iter()
-            .zip(&info.inputs)
-            .map(|(j, spec)| {
-                let v: Vec<f32> = j
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|x| x.as_f64().unwrap() as f32)
-                    .collect();
-                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&v).reshape(&dims).unwrap()
-            })
-            .collect();
-        let compiled_out = decompose(exe.execute(&inputs).unwrap());
-        let reference_out = decompose(exe.execute_reference(&inputs).unwrap());
-        assert_close(&compiled_out, &reference_out, GOLDEN_TOL, key);
-    }
-}
-
-/// Property test: randomized inputs (16 draws per entry, seeded) through
-/// both paths.
-#[test]
-fn compiled_matches_reference_on_randomized_inputs() {
-    let manifest = fixtures_manifest();
-    let model = manifest.model("tinylogreg8").unwrap();
-    let mut rng = Rng::new(0xD1FF);
-    for (key, info) in &model.entries {
-        let exe = compile(&manifest, &info.file);
-        for trial in 0..16 {
-            let inputs: Vec<xla::Literal> = info
-                .inputs
+    let models = doc.req("models").unwrap().as_obj().unwrap();
+    assert!(models.len() >= 2, "expected goldens for both fixture models");
+    for (model_name, model_doc) in models {
+        let model = manifest.model(model_name).unwrap();
+        let entries = model_doc.as_obj().unwrap();
+        assert!(entries.len() >= 7, "{model_name}: expected all entries covered");
+        for (key, case) in entries {
+            let info = model.entry(key).unwrap();
+            let exe = compile(&manifest, &info.file);
+            let inputs: Vec<xla::Literal> = case
+                .req_arr("inputs")
+                .unwrap()
                 .iter()
-                .map(|spec| random_input(spec, &mut rng))
+                .zip(&info.inputs)
+                .map(|(j, spec)| {
+                    let v: Vec<f32> = j
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_f64().unwrap() as f32)
+                        .collect();
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&v).reshape(&dims).unwrap()
+                })
                 .collect();
             let compiled_out = decompose(exe.execute(&inputs).unwrap());
             let reference_out = decompose(exe.execute_reference(&inputs).unwrap());
             assert_close(
                 &compiled_out,
                 &reference_out,
-                RANDOM_TOL,
-                &format!("{key}#{trial}"),
+                GOLDEN_TOL,
+                &format!("{model_name}/{key}"),
             );
+        }
+    }
+}
+
+/// Property test: randomized inputs (16 draws per entry, seeded) through
+/// both paths, on every fixture model (steplogreg8's 64-row entries are
+/// the step-parallel bench's workload).
+#[test]
+fn compiled_matches_reference_on_randomized_inputs() {
+    let manifest = fixtures_manifest();
+    let mut rng = Rng::new(0xD1FF);
+    for model_name in ["tinylogreg8", "steplogreg8"] {
+        let model = manifest.model(model_name).unwrap();
+        for (key, info) in &model.entries {
+            let exe = compile(&manifest, &info.file);
+            for trial in 0..16 {
+                let inputs: Vec<xla::Literal> = info
+                    .inputs
+                    .iter()
+                    .map(|spec| random_input(spec, &mut rng))
+                    .collect();
+                let compiled_out = decompose(exe.execute(&inputs).unwrap());
+                let reference_out = decompose(exe.execute_reference(&inputs).unwrap());
+                assert_close(
+                    &compiled_out,
+                    &reference_out,
+                    RANDOM_TOL,
+                    &format!("{model_name}/{key}#{trial}"),
+                );
+            }
         }
     }
 }

@@ -326,8 +326,8 @@ fn numerical_gradient_check_through_interpreter() {
     }
 }
 
-/// The anchor for the interpreter backend: every fixture entry, replayed
-/// over the committed jax-evaluated inputs/outputs
+/// The anchor for the interpreter backend: every entry of every fixture
+/// model, replayed over the committed jax-evaluated inputs/outputs
 /// (rust/tests/fixtures/golden_entry_outputs.json, regenerated by
 /// `python -m compile.fixtures`).  A numeric divergence between the
 /// interpreter and the Python reference fails here, entry by entry.
@@ -340,9 +340,20 @@ fn interpreter_matches_python_golden() {
     );
     let text = std::fs::read_to_string(path).expect("committed golden file");
     let doc = json::parse(&text).unwrap();
-    let model = doc.req_str("model").unwrap();
-    let entries = doc.req("entries").unwrap().as_obj().unwrap();
-    assert!(entries.len() >= 7, "expected all fixture entries covered");
+    let models = doc.req("models").unwrap().as_obj().unwrap();
+    assert!(
+        models.contains_key("tinylogreg8") && models.contains_key("steplogreg8"),
+        "expected goldens for both fixture models"
+    );
+    let entries: Vec<(&String, &String, &json::Json)> = models
+        .iter()
+        .flat_map(|(model, doc)| {
+            let e = doc.as_obj().expect("model goldens are an object");
+            assert!(e.len() >= 7, "{model}: expected all entries covered");
+            e.iter().map(move |(key, case)| (model, key, case))
+        })
+        .collect();
+    assert!(entries.len() >= 14, "expected every fixture entry covered");
 
     let to_f32 = |j: &json::Json| -> Vec<f32> {
         j.as_arr()
@@ -358,7 +369,7 @@ fn interpreter_matches_python_golden() {
         );
     };
 
-    for (key, case) in entries {
+    for (model, key, case) in entries {
         let inputs: Vec<Vec<f32>> = case.req_arr("inputs").unwrap().iter().map(to_f32).collect();
         let outputs: Vec<Vec<f32>> = case
             .req_arr("outputs")
@@ -373,10 +384,10 @@ fn interpreter_matches_python_golden() {
                 .run_update(&inputs[0], &inputs[1], &inputs[2], s[0], s[1], s[2], s[3])
                 .unwrap();
             for (i, (&got, &want)) in p.iter().zip(&outputs[0]).enumerate() {
-                close(got as f64, want as f64, &format!("update p[{i}]"));
+                close(got as f64, want as f64, &format!("{model} update p[{i}]"));
             }
             for (i, (&got, &want)) in v.iter().zip(&outputs[1]).enumerate() {
-                close(got as f64, want as f64, &format!("update v[{i}]"));
+                close(got as f64, want as f64, &format!("{model} update v[{i}]"));
             }
             continue;
         }
@@ -392,19 +403,19 @@ fn interpreter_matches_python_golden() {
         let exec = rt.entry(model, key).unwrap();
         if key.starts_with("eval") {
             let out = exec.run_eval(&inputs[0], &batch).unwrap();
-            close(out.loss_sum, outputs[0][0] as f64, &format!("{key} loss"));
-            close(out.correct, outputs[1][0] as f64, &format!("{key} correct"));
+            close(out.loss_sum, outputs[0][0] as f64, &format!("{model}/{key} loss"));
+            close(out.correct, outputs[1][0] as f64, &format!("{model}/{key} correct"));
         } else {
             let out = exec.run_train(&inputs[0], &batch).unwrap();
-            close(out.loss_sum, outputs[0][0] as f64, &format!("{key} loss"));
-            close(out.correct, outputs[1][0] as f64, &format!("{key} correct"));
+            close(out.loss_sum, outputs[0][0] as f64, &format!("{model}/{key} loss"));
+            close(out.correct, outputs[1][0] as f64, &format!("{model}/{key} correct"));
             for (i, (&got, &want)) in out.grad_sum.iter().zip(&outputs[2]).enumerate() {
-                close(got as f64, want as f64, &format!("{key} grad[{i}]"));
+                close(got as f64, want as f64, &format!("{model}/{key} grad[{i}]"));
             }
             close(
                 out.sqnorm_sum,
                 outputs[3][0] as f64,
-                &format!("{key} sqnorm"),
+                &format!("{model}/{key} sqnorm"),
             );
         }
     }

@@ -1,0 +1,398 @@
+//! Sharded-step-executor acceptance tests over the committed interpreter
+//! fixtures — the `--step-jobs` analogue of the trial-engine gates in
+//! tests/engine.rs, running everywhere with zero skips:
+//!
+//! 1. **Byte equality** — the same trial produces byte-identical
+//!    canonical run records at `step_jobs = 1` and `step_jobs = 4`
+//!    (deterministic block-order reduction), on both fixture models and
+//!    under mid-plan block mixes (multi-rung ladders, padded tails,
+//!    Oracle full-dataset scans, device updates).
+//! 2. **Isolation** — a poisoned worker fails the *trial* with an error
+//!    naming the block, instead of hanging or corrupting siblings.
+//! 3. **Composition** — the engine's budget split: trial workers x step
+//!    allowance never oversubscribes, and explicit `step_jobs` passes
+//!    through the engine untouched.
+
+mod common;
+
+use divebatch::cluster::ClusterModel;
+use divebatch::config::{DatasetSpec, RunSpec};
+use divebatch::coordinator::{LrSchedule, Policy, StepExecutor, TrainConfig, Trainer};
+use divebatch::data::{synthetic, SyntheticSpec};
+use divebatch::engine::TrialRunner;
+use divebatch::runtime::ExecCache;
+
+fn synth_split(n: usize, seed: u64) -> (divebatch::Dataset, divebatch::Dataset) {
+    synthetic::generate(&SyntheticSpec {
+        n,
+        d: 8,
+        noise: 0.05,
+        seed,
+    })
+    .split(0.8)
+}
+
+/// Run one config at an explicit step-jobs level; returns the canonical
+/// record JSON.
+fn canonical_at_step_jobs(mut cfg: TrainConfig, step_jobs: usize, n: usize, seed: u64) -> String {
+    let rt = common::runtime();
+    cfg.step_jobs = step_jobs;
+    let (train, val) = synth_split(n, seed);
+    let rec = Trainer::new(&rt, cfg, train, val, ClusterModel::a100x4(9, 1e3))
+        .unwrap()
+        .run()
+        .unwrap()
+        .record;
+    rec.to_canonical_json().to_string()
+}
+
+/// The headline determinism gate: `--step-jobs 1` vs `--step-jobs 4`
+/// byte-identical canonical records, across policies that exercise
+/// multi-block plans (batches above the largest rung), instrumented and
+/// plain epochs, and padded tails.
+#[test]
+fn step_jobs_records_byte_identical_1_vs_4() {
+    let cases: Vec<(&str, TrainConfig)> = vec![
+        (
+            // Fixed batch 32 over ladder [4, 8]: 4 blocks of 8 per step.
+            "fixed-multiblock",
+            TrainConfig::new(
+                "tinylogreg8",
+                Policy::Fixed { m: 32 },
+                LrSchedule::constant(0.3, false),
+                4,
+            ),
+        ),
+        (
+            // DiveBatch growing past the ladder: plans go 1 -> many
+            // blocks as the batch grows, instrumented every epoch.
+            "divebatch-growing",
+            TrainConfig::new(
+                "tinylogreg8",
+                Policy::DiveBatch {
+                    m0: 4,
+                    delta: 0.5,
+                    m_max: 48,
+                },
+                LrSchedule::constant(0.3, true),
+                5,
+            ),
+        ),
+        (
+            // Oracle: plain training steps + a full instrumented scan
+            // through the same executor at every boundary.
+            "oracle-scan",
+            TrainConfig::new(
+                "tinylogreg8",
+                Policy::Oracle {
+                    m0: 8,
+                    delta: 0.5,
+                    m_max: 32,
+                },
+                LrSchedule::constant(0.2, false),
+                3,
+            ),
+        ),
+        (
+            // Wide-ladder fixture model: 64-row blocks + padded tails
+            // (100 % 64 != 0), the perf_step bench's shape.
+            "steplogreg-wide",
+            TrainConfig::new(
+                "steplogreg8",
+                Policy::Fixed { m: 100 },
+                LrSchedule::constant(0.1, false),
+                3,
+            ),
+        ),
+    ];
+    for (tag, cfg) in cases {
+        let serial = canonical_at_step_jobs(cfg.clone(), 1, 240, 17);
+        let parallel = canonical_at_step_jobs(cfg, 4, 240, 17);
+        assert_eq!(serial, parallel, "{tag}: records diverged across step-jobs levels");
+    }
+}
+
+/// Device-update path under a parallel step executor: the fused update
+/// consumes the folded gradient, so it must see the identical reduction.
+#[test]
+fn step_jobs_device_update_byte_identical() {
+    let mut cfg = TrainConfig::new(
+        "tinylogreg8",
+        Policy::Fixed { m: 24 },
+        LrSchedule::constant(0.2, false),
+        3,
+    );
+    cfg.device_update = true;
+    let serial = canonical_at_step_jobs(cfg.clone(), 1, 160, 5);
+    let parallel = canonical_at_step_jobs(cfg, 4, 160, 5);
+    assert_eq!(serial, parallel);
+}
+
+/// Lane counts that do not divide the block count (and exceed it) still
+/// reduce identically.
+#[test]
+fn step_jobs_odd_lane_counts_agree() {
+    let cfg = TrainConfig::new(
+        "tinylogreg8",
+        Policy::Fixed { m: 40 }, // 5 blocks of 8
+        LrSchedule::constant(0.3, false),
+        3,
+    );
+    let base = canonical_at_step_jobs(cfg.clone(), 1, 200, 23);
+    for lanes in [2usize, 3, 8] {
+        assert_eq!(
+            base,
+            canonical_at_step_jobs(cfg.clone(), lanes, 200, 23),
+            "lanes={lanes}"
+        );
+    }
+}
+
+/// The canonical JSON carries the dispatch accounting (dp/pw) while
+/// masking the lane-dependent utilization (pu) — so the fields exist
+/// without breaking the byte-equality above.
+#[test]
+fn dispatch_fields_recorded_and_lane_utilization_masked() {
+    let rt = common::runtime();
+    let mut cfg = TrainConfig::new(
+        "steplogreg8",
+        Policy::Fixed { m: 100 }, // 1x64 + 4x8 + tail 4->8: waste > 0
+        LrSchedule::constant(0.1, false),
+        2,
+    );
+    cfg.step_jobs = 4;
+    let (train, val) = synth_split(250, 31);
+    let rec = Trainer::new(&rt, cfg, train, val, ClusterModel::a100x4(9, 1e3))
+        .unwrap()
+        .run()
+        .unwrap()
+        .record;
+    for e in &rec.epochs {
+        assert!(e.dispatches > 0);
+        assert!((0.0..1.0).contains(&e.pad_waste), "{}", e.pad_waste);
+        assert!(e.par_util > 0.0 && e.par_util <= 1.0, "{}", e.par_util);
+    }
+    assert!(rec.total_dispatches() > 0);
+    // 200 train rows at m=100 over ladder [8, 64] pads the 36-row
+    // remainder: waste must be visible.
+    assert!(rec.mean_pad_waste() > 0.0);
+    let canon = rec.to_canonical_json().to_string();
+    assert!(canon.contains("\"dp\":"), "{canon}");
+    assert!(canon.contains("\"pu\":0,"), "pu must be masked: {canon}");
+    let summary = rec.summary_json().to_string();
+    assert!(summary.contains("\"dispatches\":"), "{summary}");
+    assert!(summary.contains("\"mean_pad_waste\":"), "{summary}");
+}
+
+/// Panic isolation at the trainer level: a worker poisoned mid-plan
+/// (panicking executable path) fails the run with an error naming the
+/// block — no hang, no torn parameter update — and the runtime stays
+/// usable.  The panic is injected through the step executor directly
+/// (the trainer's block closure runs arbitrary runtime calls; anything
+/// in it may panic).
+#[test]
+fn poisoned_worker_fails_with_named_block_not_a_hang() {
+    let step = StepExecutor::new(4);
+    let err = step
+        .run_blocks(6, |_, i| -> anyhow::Result<u64> {
+            if i == 4 {
+                panic!("interpreter exploded");
+            }
+            Ok(i as u64)
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("step block 4 of 6") && msg.contains("panicked"),
+        "{msg}"
+    );
+
+}
+
+/// A policy that panics mid-run — the trial-level poisoning case: the
+/// panic unwinds through an ACTIVE parallel step executor (its worker
+/// pool must join, not deadlock), the engine captures it as a per-trial
+/// error, the sibling trial completes, and the shared runtime survives.
+#[derive(Clone, Copy, Debug)]
+struct PanicAtEpoch(usize);
+
+impl divebatch::BatchPolicy for PanicAtEpoch {
+    fn kind(&self) -> &'static str {
+        "panic-test"
+    }
+    fn label(&self) -> String {
+        "PanicAtEpoch".into()
+    }
+    fn initial(&self) -> usize {
+        16
+    }
+    fn on_epoch_end(
+        &mut self,
+        ctx: &divebatch::AdaptContext,
+    ) -> Result<divebatch::Decision, divebatch::PolicyError> {
+        if ctx.epoch >= self.0 {
+            panic!("policy poisoned at epoch {}", ctx.epoch);
+        }
+        Ok(divebatch::Decision::new(16, divebatch::DiversityNeed::None))
+    }
+    fn render_spec(&self) -> String {
+        "panic-test".into()
+    }
+    fn clone_box(&self) -> Box<dyn divebatch::BatchPolicy> {
+        Box::new(*self)
+    }
+}
+
+#[test]
+fn poisoned_trial_is_isolated_with_step_pool_active() {
+    let rt = common::runtime();
+    let dataset = DatasetSpec::Synthetic(SyntheticSpec {
+        n: 120,
+        d: 8,
+        noise: 0.05,
+        seed: 3,
+    });
+    let mut poisoned = TrainConfig::new(
+        "tinylogreg8",
+        Box::new(PanicAtEpoch(1)) as Box<dyn divebatch::BatchPolicy>,
+        LrSchedule::constant(0.2, false),
+        4,
+    );
+    poisoned.step_jobs = 4; // the pool is live when the panic unwinds
+    let healthy = TrainConfig::new(
+        "tinylogreg8",
+        Policy::Fixed { m: 16 },
+        LrSchedule::constant(0.2, false),
+        2,
+    );
+    let specs = vec![
+        divebatch::TrialSpec {
+            cfg: poisoned,
+            dataset: dataset.clone(),
+            flops_per_sample: 1e3,
+            trial: 0,
+        },
+        divebatch::TrialSpec {
+            cfg: healthy,
+            dataset,
+            flops_per_sample: 1e3,
+            trial: 0,
+        },
+    ];
+    let results = TrialRunner::new(2).run(&rt, &specs);
+    assert_eq!(results.len(), 2);
+    match &results[0] {
+        Err(divebatch::TrialError::Panicked(m)) => {
+            assert!(m.contains("policy poisoned"), "{m}")
+        }
+        other => panic!("expected a captured panic, got {other:?}"),
+    }
+    assert!(results[1].is_ok(), "sibling trial must complete");
+    // Runtime survives for subsequent work.
+    assert!(rt.eval_exec("tinylogreg8", 4).is_ok());
+}
+
+/// Block failures surface deterministically: the lowest-index failing
+/// block is reported at every lane count.
+#[test]
+fn block_errors_are_deterministic_across_lane_counts() {
+    for lanes in [1usize, 2, 4] {
+        let step = StepExecutor::new(lanes);
+        let err = step
+            .run_blocks(10, |_, i| -> anyhow::Result<()> {
+                if i % 3 == 2 {
+                    anyhow::bail!("bad block");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("step block 2 of 10"),
+            "lanes={lanes}: {err:#}"
+        );
+    }
+}
+
+/// Engine x executor composition: explicit step_jobs passes through the
+/// engine, and the auto allowance divides the budget.
+#[test]
+fn engine_passes_step_budget_through() {
+    // Budget arithmetic (pure).
+    let r = TrialRunner::new(8);
+    assert_eq!(r.step_allowance(2), 4);
+    assert_eq!(r.step_allowance(8), 1);
+    assert_eq!(TrialRunner::new(3).step_allowance(1), 3);
+
+    // Explicit step_jobs through the engine matches a direct Trainer
+    // run at the same level, byte for byte.
+    let rt = common::runtime();
+    let mut cfg = TrainConfig::new(
+        "tinylogreg8",
+        Policy::Fixed { m: 32 },
+        LrSchedule::constant(0.3, false),
+        3,
+    );
+    cfg.step_jobs = 4;
+    let run = RunSpec {
+        cfg: cfg.clone(),
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 150,
+            d: 8,
+            noise: 0.05,
+            seed: 11,
+        }),
+        trials: 2,
+        flops_per_sample: 1e3,
+    };
+    let via_engine: Vec<String> = run
+        .run_jobs(&rt, 2)
+        .unwrap()
+        .iter()
+        .map(|r| r.to_canonical_json().to_string())
+        .collect();
+    let serial: Vec<String> = run
+        .run_jobs(&rt, 1)
+        .unwrap()
+        .iter()
+        .map(|r| r.to_canonical_json().to_string())
+        .collect();
+    assert_eq!(via_engine, serial);
+}
+
+/// The per-lane ExecCache hands out the SAME compiled object as the
+/// central runtime cache (shared Arc), and caches the handle.
+#[test]
+fn exec_cache_shares_runtime_executables() {
+    let rt = common::runtime();
+    let mut cache = ExecCache::new();
+    assert!(cache.is_empty());
+    let a = cache.train(&rt, "tinylogreg8", true, 8).unwrap();
+    let b = cache.train(&rt, "tinylogreg8", true, 8).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    let central = rt.train_exec("tinylogreg8", true, 8).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &central));
+    let e = cache.eval(&rt, "tinylogreg8", 4).unwrap();
+    assert!(std::sync::Arc::ptr_eq(
+        &e,
+        &rt.eval_exec("tinylogreg8", 4).unwrap()
+    ));
+    assert_eq!(cache.len(), 2);
+    // Distinct variants get distinct entries.
+    let plain = cache.train(&rt, "tinylogreg8", false, 8).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &plain));
+    assert_eq!(cache.len(), 3);
+}
+
+/// Warmup precompiles the full train/eval surface (both variants), so
+/// parallel lanes never hit a first-compile guard mid-step.
+#[test]
+fn warmup_precompiles_both_train_variants() {
+    let rt = common::runtime();
+    assert_eq!(rt.stats().compiles, 0);
+    rt.warmup("steplogreg8").unwrap();
+    // ladder [8, 64] x {train_div, train_plain, eval} + update = 7.
+    assert_eq!(rt.stats().compiles, 7);
+    // Re-warmup is free (cache hits only).
+    rt.warmup("steplogreg8").unwrap();
+    assert_eq!(rt.stats().compiles, 7);
+}
