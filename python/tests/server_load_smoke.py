@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Load smoke for `divebatch serve` — stdlib only, run by CI.
+
+Usage: server_load_smoke.py <divebatch-binary> <artifacts-dir>
+
+Boots the server on an ephemeral port, fires a few hundred concurrent
+requests at it (valid trials, cache-hitting repeats, and a sprinkling of
+invalid requests that must come back as structured 400s), checks every
+response is valid JSONL (a canonical RunRecord line or a typed error
+object), sanity-checks /stats, then sends SIGTERM and requires a clean
+graceful exit (status 0) with no connections left serviced afterwards.
+"""
+
+import http.client
+import json
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+TOTAL_REQUESTS = 240
+THREADS = 32
+DISTINCT_SEEDS = 8
+
+TRIAL = {
+    "model": "tinylogreg8",
+    "policy": "sgd:m=4",
+    "epochs": 1,
+    "dataset": {"kind": "synthetic", "n": 40, "d": 8, "noise": 0.1, "seed": 1000},
+}
+BAD_BODIES = [
+    '{"model":"tinylogreg8","policy":"sgd:m=4","epochz":3}',  # unknown field
+    '{"model":"tinylogreg8","policy":"sdg:m=4"}',  # bad policy
+    "{not json",
+]
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def post(addr, path, body, timeout=60):
+    host, port = addr
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request(
+            "POST", path, body=body, headers={"Content-Type": "application/json"}
+        )
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8", "replace")
+    finally:
+        conn.close()
+
+
+def get(addr, path, timeout=30):
+    host, port = addr
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, resp.read().decode("utf-8", "replace")
+    finally:
+        conn.close()
+
+
+def main():
+    if len(sys.argv) != 3:
+        fail(f"usage: {sys.argv[0]} <divebatch-binary> <artifacts-dir>")
+    binary, artifacts = sys.argv[1], sys.argv[2]
+
+    proc = subprocess.Popen(
+        [
+            binary,
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--jobs",
+            "2",
+            "--max-clients",
+            "128",
+            "--max-queue",
+            "512",
+            "--artifacts",
+            artifacts,
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        run(proc)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+def run(proc):
+    # The server announces "serving on IP:PORT" on stdout once bound.
+    line = proc.stdout.readline().strip()
+    if not line.startswith("serving on "):
+        proc.kill()
+        fail(f"expected 'serving on ADDR' banner, got {line!r}")
+    host, _, port = line[len("serving on ") :].rpartition(":")
+    addr = (host, int(port))
+    print(f"serve up on {addr[0]}:{addr[1]}")
+
+    status, body = get(addr, "/healthz")
+    if status != 200:
+        fail(f"/healthz -> {status}: {body}")
+
+    # ---- concurrent load -------------------------------------------------
+    results = []  # (index, kind, status, body)
+    lock = threading.Lock()
+    next_index = iter(range(TOTAL_REQUESTS))
+
+    def worker():
+        while True:
+            with lock:
+                i = next(next_index, None)
+            if i is None:
+                return
+            if i % 12 == 11:  # every 12th request is deliberately invalid
+                kind = "invalid"
+                status, body = post(addr, "/trial", BAD_BODIES[i % len(BAD_BODIES)])
+            else:
+                kind = "trial"
+                req = dict(TRIAL)
+                req["seed"] = i % DISTINCT_SEEDS
+                status, body = post(addr, "/trial", json.dumps(req))
+            with lock:
+                results.append((i, kind, status, body))
+
+    threads = [threading.Thread(target=worker) for _ in range(THREADS)]
+    start = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    print(f"{TOTAL_REQUESTS} requests in {time.time() - start:.1f}s")
+
+    if len(results) != TOTAL_REQUESTS:
+        fail(f"expected {TOTAL_REQUESTS} responses, got {len(results)}")
+
+    # Every response is one valid JSON line: a record for valid trials
+    # (identical bytes per seed), a typed error object for invalid ones.
+    per_seed = {}
+    for i, kind, status, body in results:
+        lines = [l for l in body.splitlines() if l.strip()]
+        if len(lines) != 1:
+            fail(f"request {i}: expected one JSONL line, got {len(lines)}: {body!r}")
+        try:
+            doc = json.loads(lines[0])
+        except json.JSONDecodeError as e:
+            fail(f"request {i}: response not JSON ({e}): {lines[0]!r}")
+        if kind == "trial":
+            if status != 200:
+                fail(f"trial {i} -> {status}: {body}")
+            if "epochs" not in doc:
+                fail(f"trial {i}: not a RunRecord line: {lines[0]!r}")
+            prev = per_seed.setdefault(i % DISTINCT_SEEDS, lines[0])
+            if prev != lines[0]:
+                fail(f"trial {i}: same seed produced different bytes")
+        else:
+            if status != 400:
+                fail(f"invalid request {i} -> {status} (want 400): {body}")
+            err = doc.get("error", {})
+            if not err.get("code") or not err.get("field"):
+                fail(f"invalid request {i}: untyped error: {lines[0]!r}")
+
+    # ---- stats sanity ----------------------------------------------------
+    status, body = get(addr, "/stats")
+    if status != 200:
+        fail(f"/stats -> {status}: {body}")
+    stats = json.loads(body)
+    adm = stats.get("admission", {})
+    valid_requests = sum(1 for _, kind, _, _ in results if kind == "trial")
+    if adm.get("submitted", 0) < valid_requests:
+        fail(f"stats: submitted {adm.get('submitted')} < {valid_requests}")
+    if adm.get("trials_failed", 0) != 0:
+        fail(f"stats: {adm.get('trials_failed')} trials failed under load")
+    if adm.get("batch_size_max_seen", 0) < 2:
+        fail(f"stats: admission batching never adapted above 1: {adm}")
+    if stats.get("exec_cache", {}).get("entries", 0) < 1:
+        fail(f"stats: exec cache empty after load: {stats.get('exec_cache')}")
+    print(f"stats ok: {json.dumps(adm)}")
+
+    # ---- graceful shutdown ----------------------------------------------
+    proc.send_signal(signal.SIGTERM)
+    try:
+        code = proc.wait(timeout=60)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        fail("server did not exit within 60s of SIGTERM")
+    if code != 0:
+        fail(f"server exited {code} on SIGTERM (want 0): {proc.stderr.read()}")
+
+    # The drained server must no longer take connections.
+    try:
+        with socket.create_connection(addr, timeout=5) as s:
+            s.sendall(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+            data = s.recv(1024)
+        if data and b" 503 " not in data.split(b"\r\n", 1)[0]:
+            fail(f"post-SIGTERM connection was serviced: {data!r}")
+    except OSError:
+        pass  # connection refused: exactly right
+
+    print("server load smoke passed")
+
+
+if __name__ == "__main__":
+    main()

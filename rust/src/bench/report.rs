@@ -111,7 +111,13 @@ pub fn run_experiment_jobs(
         // never be confused.
         r.cfg.step_jobs = crate::pool::resolve_step_jobs(r.cfg.step_jobs, 1);
         let cached = if use_cache {
-            r.load_cached(&r.cache_dir_for_run(&base_dir, jobs))
+            let cache =
+                crate::config::rescache::ResultsCache::from_env(r.cache_dir_for_run(&base_dir, jobs));
+            let hit = cache.load(&r.fingerprint(), r.trials);
+            if hit.is_some() {
+                eprintln!("  (cache hit: {})", cache.path_for(&r.fingerprint()).display());
+            }
+            hit
         } else {
             None
         };
@@ -167,7 +173,21 @@ pub fn run_experiment_jobs(
                 continue; // incomplete arm (some trial failed)
             }
             if use_cache {
-                r.store_cached(&r.cache_dir_for_run(&base_dir, jobs), &recs)?;
+                // Stores go through the bounded results-cache service:
+                // single-writer locked, atomic publish, LRU-evicted when
+                // DIVEBATCH_RESULTS_MAX_ENTRIES/_MAX_BYTES are set.
+                let cache = crate::config::rescache::ResultsCache::from_env(
+                    r.cache_dir_for_run(&base_dir, jobs),
+                );
+                cache.store(&r.fingerprint(), &recs)?;
+                let st = cache.stats();
+                if st.evictions > 0 {
+                    eprintln!(
+                        "  (results cache evicted {} entr{} to stay within bounds)",
+                        st.evictions,
+                        if st.evictions == 1 { "y" } else { "ies" }
+                    );
+                }
             }
             arm_records[*i] = Some(recs);
         }

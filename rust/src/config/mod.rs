@@ -3,6 +3,7 @@
 //! (DESIGN.md §5).
 
 pub mod presets;
+pub mod rescache;
 
 use anyhow::Result;
 
@@ -190,25 +191,21 @@ impl RunSpec {
     }
 
     /// Load this spec's complete trial set from the results cache, if a
-    /// valid entry exists.
+    /// valid entry exists.  (Routes through the bounded
+    /// [`rescache::ResultsCache`] service — the single owner of entry
+    /// format, locking, and eviction.)
     pub fn load_cached(&self, cache_dir: &std::path::Path) -> Option<Vec<RunRecord>> {
-        let path = self.cache_path(cache_dir);
-        let text = std::fs::read_to_string(&path).ok()?;
-        let json = crate::util::json::parse(&text).ok()?;
-        let recs: Result<Vec<RunRecord>> = json.as_arr()?.iter().map(RunRecord::from_json).collect();
-        let recs = recs.ok()?;
-        (recs.len() == self.trials).then(|| {
-            eprintln!("  (cache hit: {})", path.display());
-            recs
-        })
+        let recs = rescache::ResultsCache::from_env(cache_dir).load(&self.fingerprint(), self.trials)?;
+        eprintln!("  (cache hit: {})", self.cache_path(cache_dir).display());
+        Some(recs)
     }
 
-    /// Store a completed trial set in the results cache.
+    /// Store a completed trial set in the results cache (atomic
+    /// tmp+rename under the directory's single-writer lock; honors the
+    /// `DIVEBATCH_RESULTS_MAX_ENTRIES` / `DIVEBATCH_RESULTS_MAX_BYTES`
+    /// eviction bounds — unset = unbounded, the historical behaviour).
     pub fn store_cached(&self, cache_dir: &std::path::Path, records: &[RunRecord]) -> Result<()> {
-        std::fs::create_dir_all(cache_dir)?;
-        let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
-        std::fs::write(self.cache_path(cache_dir), json.to_string())?;
-        Ok(())
+        rescache::ResultsCache::from_env(cache_dir).store(&self.fingerprint(), records)
     }
 
     /// Like [`run`], but memoized on disk: results land in

@@ -1,0 +1,421 @@
+//! Bounded, single-writer filesystem results cache.
+//!
+//! PR 3 introduced plain `read`/`write` results memoization on
+//! [`crate::config::RunSpec`]; that was fine for a CLI process that
+//! writes a handful of entries and exits.  A long-running `divebatch
+//! serve` process is different: thousands of distinct trial requests
+//! would grow the directory without bound, and concurrent admission
+//! batches could interleave writes.  This module makes the results cache
+//! a shared service with the same shape as the executable cache
+//! ([`crate::runtime::Runtime::set_exec_cache_limits`]):
+//!
+//! * **Eviction bounds** — entry-count and byte caps (0 = unbounded, the
+//!   CLI default via [`ResultsCache::from_env`]).  After every store,
+//!   least-recently-used entries (by file mtime; loads touch their entry
+//!   so hits refresh recency) are removed until the bounds hold.  The
+//!   just-stored entry is never evicted.
+//! * **Single-writer locking** — stores serialize on a `.lock` file
+//!   (created with `create_new`, removed on drop, stale locks from a
+//!   crashed writer reclaimed after [`STALE_LOCK`]), so two processes —
+//!   or two admission batches — can never interleave a store/evict pass.
+//! * **Counters** — hit/miss/store/eviction counts, surfaced by the
+//!   serve `/stats` endpoint and asserted by the cache-bound tests.
+//!
+//! Entries are JSON arrays of [`RunRecord`]s keyed by a caller-supplied
+//! fingerprint ([`crate::config::RunSpec::fingerprint`] /
+//! [`crate::engine::TrialSpec::fingerprint`]); a load only hits when the
+//! entry parses and holds the expected record count, so truncated or
+//! foreign files degrade to a miss, never an error.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, SystemTime};
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::RunRecord;
+
+/// A lock older than this is treated as left behind by a crashed writer
+/// and reclaimed (writers hold it for milliseconds).
+const STALE_LOCK: Duration = Duration::from_secs(10);
+
+/// How long a writer waits for the lock before giving up.
+const LOCK_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Snapshot of the results cache's bound/usage counters.
+#[derive(Clone, Debug, Default)]
+pub struct ResultsCacheStats {
+    /// Current `*.json` entries / total bytes under the directory.
+    pub entries: usize,
+    pub bytes: u64,
+    pub hits: usize,
+    pub misses: usize,
+    pub stores: usize,
+    pub evictions: usize,
+    /// Configured caps; 0 = unbounded.
+    pub max_entries: usize,
+    pub max_bytes: u64,
+}
+
+/// One results-cache directory with eviction bounds and store locking.
+pub struct ResultsCache {
+    dir: PathBuf,
+    max_entries: usize,
+    max_bytes: u64,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    stores: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl ResultsCache {
+    /// Unbounded cache over `dir` (entries still store under the lock).
+    pub fn new(dir: impl Into<PathBuf>) -> ResultsCache {
+        ResultsCache::with_limits(dir, 0, 0)
+    }
+
+    /// Cache over `dir` keeping at most `max_entries` entries /
+    /// `max_bytes` bytes (0 = unbounded).
+    pub fn with_limits(dir: impl Into<PathBuf>, max_entries: usize, max_bytes: u64) -> ResultsCache {
+        ResultsCache {
+            dir: dir.into(),
+            max_entries,
+            max_bytes,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            stores: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cache over `dir` with bounds from `DIVEBATCH_RESULTS_MAX_ENTRIES`
+    /// / `DIVEBATCH_RESULTS_MAX_BYTES` (unset/invalid/0 = unbounded —
+    /// existing CLI and bench behaviour is unchanged unless asked for).
+    pub fn from_env(dir: impl Into<PathBuf>) -> ResultsCache {
+        let env_n = |k: &str| -> usize {
+            std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+        };
+        ResultsCache::with_limits(
+            dir,
+            env_n("DIVEBATCH_RESULTS_MAX_ENTRIES"),
+            env_n("DIVEBATCH_RESULTS_MAX_BYTES") as u64,
+        )
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of `key`'s entry file.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Load `key`'s records if a valid entry with `expected` records
+    /// exists.  A hit refreshes the entry's recency (mtime touch).
+    pub fn load(&self, key: &str, expected: usize) -> Option<Vec<RunRecord>> {
+        let path = self.path_for(key);
+        let recs = (|| {
+            let text = std::fs::read_to_string(&path).ok()?;
+            let json = crate::util::json::parse(&text).ok()?;
+            let recs: Result<Vec<RunRecord>> =
+                json.as_arr()?.iter().map(RunRecord::from_json).collect();
+            let recs = recs.ok()?;
+            (recs.len() == expected).then_some(recs)
+        })();
+        match recs {
+            Some(recs) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // Best-effort LRU touch so eviction favours cold entries.
+                if let Ok(f) = std::fs::OpenOptions::new().append(true).open(&path) {
+                    let _ = f.set_modified(SystemTime::now());
+                }
+                Some(recs)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store `records` under `key` (atomic tmp+rename, serialized on the
+    /// directory lock), then evict LRU entries down to the bounds.
+    pub fn store(&self, key: &str, records: &[RunRecord]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating results cache dir {}", self.dir.display()))?;
+        let _lock = DirLock::acquire(&self.dir)?;
+        let path = self.path_for(key);
+        let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
+        // tmp+rename: a concurrent reader never observes a half-written
+        // entry (it would degrade to a miss anyway, but why risk it).
+        let tmp = self.dir.join(format!(".{key}.tmp"));
+        std::fs::write(&tmp, json.to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        self.stores.fetch_add(1, Ordering::Relaxed);
+        self.evict_over_caps(&path);
+        Ok(())
+    }
+
+    /// Remove oldest-mtime entries until the bounds hold; never removes
+    /// `keep`.  Ties break on filename so eviction order is stable even
+    /// on filesystems with coarse mtimes.
+    fn evict_over_caps(&self, keep: &Path) {
+        if self.max_entries == 0 && self.max_bytes == 0 {
+            return;
+        }
+        let mut entries = self.scan();
+        loop {
+            let total: u64 = entries.iter().map(|e| e.1).sum();
+            let over_entries = self.max_entries > 0 && entries.len() > self.max_entries;
+            let over_bytes = self.max_bytes > 0 && total > self.max_bytes;
+            if !over_entries && !over_bytes {
+                return;
+            }
+            let Some(idx) = entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.0 != keep)
+                .min_by(|(_, a), (_, b)| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)))
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            let (path, _, _) = entries.swap_remove(idx);
+            if std::fs::remove_file(&path).is_ok() {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// All `*.json` entries as (path, len, mtime).
+    fn scan(&self) -> Vec<(PathBuf, u64, SystemTime)> {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for e in rd.flatten() {
+            let path = e.path();
+            if path.extension().and_then(|s| s.to_str()) != Some("json") {
+                continue;
+            }
+            if let Ok(md) = e.metadata() {
+                let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push((path, md.len(), mtime));
+            }
+        }
+        out
+    }
+
+    pub fn stats(&self) -> ResultsCacheStats {
+        let entries = self.scan();
+        ResultsCacheStats {
+            entries: entries.len(),
+            bytes: entries.iter().map(|e| e.1).sum(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            max_entries: self.max_entries,
+            max_bytes: self.max_bytes,
+        }
+    }
+}
+
+/// Exclusive advisory lock on a cache directory, held for the duration
+/// of one store+evict pass.  `create_new` is atomic on every platform we
+/// care about; the lock file is removed on drop, and a lock older than
+/// [`STALE_LOCK`] is reclaimed (writers hold it for milliseconds, so age
+/// means a crashed owner).
+struct DirLock {
+    path: PathBuf,
+}
+
+impl DirLock {
+    fn acquire(dir: &Path) -> Result<DirLock> {
+        let path = dir.join(".lock");
+        let deadline = SystemTime::now() + LOCK_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(_) => return Ok(DirLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .map(|m| m.elapsed().map(|d| d > STALE_LOCK).unwrap_or(false))
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    if SystemTime::now() > deadline {
+                        bail!("results cache lock busy: {}", path.display());
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("locking {}", path.display()));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochRecord;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "divebatch-rescache-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn record(seed: u64, epochs: usize) -> RunRecord {
+        let mut r = RunRecord::new("t", "m", "sgd", "d", seed);
+        for e in 0..epochs {
+            r.epochs.push(EpochRecord {
+                epoch: e,
+                batch_size: 8,
+                lr: 0.1,
+                steps: 4,
+                train_loss: 1.0,
+                train_acc: 0.5,
+                val_loss: 1.0,
+                val_acc: 0.5,
+                delta_hat: None,
+                n_delta: None,
+                exact_delta: None,
+                wall_s: 0.0,
+                sim_s: 0.1,
+                cum_wall_s: 0.0,
+                cum_sim_s: 0.1,
+                mem_mb: 1.0,
+                dispatches: 1,
+                pad_waste: 0.0,
+                par_util: 1.0,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_counters() {
+        let dir = tmpdir("roundtrip");
+        let cache = ResultsCache::new(&dir);
+        assert!(cache.load("k", 1).is_none());
+        cache.store("k", &[record(0, 2)]).unwrap();
+        let back = cache.load("k", 1).expect("stored entry loads");
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].epochs.len(), 2);
+        // Wrong expected count is a miss, not an error.
+        assert!(cache.load("k", 2).is_none());
+        let st = cache.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.stores, 1);
+        assert_eq!(st.entries, 1);
+        assert!(st.bytes > 0);
+        // The lock is released after the store.
+        assert!(!dir.join(".lock").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_entries_degrade_to_miss() {
+        let dir = tmpdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad.json"), "{not json").unwrap();
+        let cache = ResultsCache::new(&dir);
+        assert!(cache.load("bad", 1).is_none());
+        assert_eq!(cache.stats().misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn entry_cap_evicts_down_to_bound_keeping_newest() {
+        let dir = tmpdir("bound");
+        let cache = ResultsCache::with_limits(&dir, 2, 0);
+        for (i, key) in ["a", "b", "c", "d"].iter().enumerate() {
+            cache.store(key, &[record(i as u64, 1)]).unwrap();
+            // Distinct mtimes even on coarse-granularity filesystems.
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let st = cache.stats();
+        assert!(st.entries <= 2, "entries {} > cap 2", st.entries);
+        assert!(st.evictions >= 2, "evictions {}", st.evictions);
+        // The just-stored entry always survives its own store.
+        assert!(cache.load("d", 1).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_cap_evicts() {
+        let dir = tmpdir("bytes");
+        // Far below one entry's size: every store evicts all others.
+        let cache = ResultsCache::with_limits(&dir, 0, 16);
+        cache.store("a", &[record(0, 1)]).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+        cache.store("b", &[record(1, 1)]).unwrap();
+        let st = cache.stats();
+        assert_eq!(st.entries, 1, "byte cap must evict older entries");
+        assert!(cache.load("b", 1).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_stores_serialize_on_the_lock() {
+        let dir = tmpdir("lock");
+        let cache = ResultsCache::new(&dir);
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let cache = &cache;
+                s.spawn(move || {
+                    for i in 0..5 {
+                        cache
+                            .store(&format!("k{t}-{i}"), &[record(t, 1)])
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.stats().entries, 40);
+        assert!(!dir.join(".lock").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_lock_is_reclaimed() {
+        let dir = tmpdir("stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        let lock = dir.join(".lock");
+        std::fs::write(&lock, "").unwrap();
+        // Age the lock past the stale threshold.
+        let old = SystemTime::now() - (STALE_LOCK + Duration::from_secs(5));
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(&lock)
+            .unwrap()
+            .set_modified(old)
+            .unwrap();
+        let cache = ResultsCache::new(&dir);
+        cache.store("k", &[record(0, 1)]).unwrap();
+        assert!(cache.load("k", 1).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

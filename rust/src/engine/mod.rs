@@ -88,6 +88,20 @@ impl TrialSpec {
         format!("{} [seed {}]", self.cfg.policy.label(), self.trial)
     }
 
+    /// Stable per-trial results-cache key: the single-trial
+    /// [`RunSpec::fingerprint`] of this spec's configuration plus the
+    /// trial index (which selects the dataset draw and run seed).  The
+    /// serve admission layer memoizes individual trials under this key.
+    pub fn fingerprint(&self) -> String {
+        let run = RunSpec {
+            cfg: self.cfg.clone(),
+            dataset: self.dataset.clone(),
+            trials: 1,
+            flops_per_sample: self.flops_per_sample,
+        };
+        format!("{}-t{}", run.fingerprint(), self.trial)
+    }
+
     /// Execute this trial on `rt`; returns the record and stage profile.
     /// `step_allowance` is this trial's share of the engine's jobs
     /// budget, applied only when the config leaves `step_jobs` on auto

@@ -162,6 +162,21 @@
 //! // policy directly.  See examples/custom_policy.rs for the full flow.
 //! ```
 //!
+//! ## Training as a service
+//!
+//! `divebatch serve` ([`server`]) exposes the trial engine over a
+//! std-only HTTP/1.1 server: clients POST trial/sweep requests as JSON
+//! and read canonical [`RunRecord`] JSONL back — byte-identical to
+//! offline `train` output for the same spec.  An adaptive admission
+//! layer coalesces queued requests into engine dispatches sized to the
+//! observed queue depth (the serving-side analogue of batch-size
+//! adaptation), and both shared caches — the runtime's compiled
+//! executable cache and the on-disk results cache — run
+//! eviction-bounded with hit/miss/eviction counters at `GET /stats`.
+//! Validation is strict end to end: unknown fields, bad types and
+//! out-of-range values come back as structured 400s with "did you
+//! mean" suggestions, never 500s.  SIGTERM drains gracefully.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
@@ -174,6 +189,7 @@ pub mod engine;
 pub mod metrics;
 pub mod pool;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 pub use cluster::{ClusterModel, ClusterSpec};
@@ -187,3 +203,4 @@ pub use coordinator::{
 pub use data::{Batch, Dataset, EpochBatches, ImageSpec, Labels, SyntheticSpec};
 pub use metrics::{EpochRecord, MemMode, MemoryModel, RunRecord};
 pub use runtime::{Manifest, ModelInfo, Runtime};
+pub use server::{ServeConfig, Server, ServerHandle};

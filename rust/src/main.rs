@@ -58,6 +58,7 @@ fn main() {
         Some("train") => cmd_train(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("preset") => cmd_preset(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{}", usage());
             Ok(())
@@ -81,7 +82,8 @@ fn usage() -> String {
      policies             list batch-size policies, wrappers, and the spec grammar\n  \
      train <model>        run one training configuration (see train --help)\n  \
      sweep <model>        cross policies x seeds on the parallel trial engine (see sweep --help)\n  \
-     preset <id>          run a paper experiment preset (see preset --help)\n"
+     preset <id>          run a paper experiment preset (see preset --help)\n  \
+     serve                run the trial server: POST /trial and /sweep, canonical JSONL back (see serve --help)\n"
         .to_string()
 }
 
@@ -386,6 +388,66 @@ fn cmd_sweep(tokens: &[String]) -> Result<()> {
             trial_specs.len()
         );
     }
+    Ok(())
+}
+
+fn serve_spec() -> ArgSpec {
+    ArgSpec::new(
+        "divebatch serve",
+        "training as a service: an HTTP trial server with adaptive request batching",
+    )
+    .opt("addr", Some("127.0.0.1:8080"), "bind address (port 0 picks a free port)")
+    .opt(
+        "jobs",
+        Some("0"),
+        "engine worker threads per admission dispatch (0 = all cores; DIVEBATCH_STEP_JOBS still applies inside trials)",
+    )
+    .opt("max-clients", Some("64"), "concurrent connection cap (excess connections get 503)")
+    .opt("max-queue", Some("256"), "admitted-request queue cap (excess submissions get 503)")
+    .opt("batch-max", Some("32"), "adaptive admission batch-size ceiling")
+    .opt("exec-cache-entries", Some("64"), "executable-cache entry cap (0 = unbounded)")
+    .opt("exec-cache-bytes", Some("0"), "executable-cache approx-bytes cap (0 = unbounded)")
+    .opt("results-dir", Some(""), "results-cache directory (empty = no trial memoization)")
+    .opt("results-max-entries", Some("256"), "results-cache entry cap (0 = unbounded)")
+    .opt("results-max-bytes", Some("0"), "results-cache byte cap (0 = unbounded)")
+    .opt("artifacts", Some("artifacts"), "artifacts directory")
+}
+
+/// `divebatch serve`: bind, announce the resolved address on stdout
+/// (load tests parse that line), then serve until SIGTERM/SIGINT —
+/// which drains admitted work before exiting 0.
+fn cmd_serve(tokens: &[String]) -> Result<()> {
+    let a = match serve_spec().parse_tokens(tokens) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = divebatch::ServeConfig::new(a.str("addr"), a.str("artifacts"));
+    cfg.jobs = a.usize("jobs");
+    cfg.max_clients = a.usize("max-clients");
+    cfg.max_queue = a.usize("max-queue");
+    cfg.batch_max = a.usize("batch-max");
+    cfg.exec_cache_entries = a.usize("exec-cache-entries");
+    cfg.exec_cache_bytes = a.usize("exec-cache-bytes");
+    let results_dir = a.str("results-dir");
+    cfg.results_dir = if results_dir.is_empty() {
+        None
+    } else {
+        Some(results_dir.to_string())
+    };
+    cfg.results_max_entries = a.usize("results-max-entries");
+    cfg.results_max_bytes = a.usize("results-max-bytes") as u64;
+
+    divebatch::server::install_signal_handlers();
+    let server = divebatch::Server::bind(cfg)?;
+    let addr = server.local_addr()?;
+    println!("serving on {addr}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.run()?;
+    eprintln!("serve: drained, exiting");
     Ok(())
 }
 

@@ -121,7 +121,7 @@ pub fn resolve_step_jobs(explicit: usize, fallback: usize) -> usize {
 /// consistent (writers never panic mid-update — item panics are caught
 /// before they reach pool state), so a panicking worker must not wedge
 /// the pool for the rest of the run.
-fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
@@ -434,6 +434,103 @@ impl WorkerPool {
     }
 }
 
+// ------------------------------------------------- counting semaphore
+
+/// A counting semaphore with RAII permits (std has none; no deps).
+///
+/// The serve subsystem bounds its thread-per-connection model with one
+/// of these: `try_acquire` either hands back a [`SemaphorePermit`] or
+/// fails immediately (the server turns that into a 503 instead of
+/// queueing unbounded connection threads).  Dropping the permit releases
+/// the slot and wakes one blocked `acquire` waiter.
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    released: Condvar,
+    capacity: usize,
+}
+
+/// RAII permit: the slot is held until this is dropped.
+pub struct SemaphorePermit<'a> {
+    sem: &'a Semaphore,
+}
+
+/// [`SemaphorePermit`] without the borrow: holds its semaphore by `Arc`
+/// so the permit can move into a spawned thread (the serve subsystem
+/// hands one to each connection thread).
+pub struct OwnedSemaphorePermit {
+    sem: Arc<Semaphore>,
+}
+
+impl Semaphore {
+    /// A semaphore with `capacity` slots (>= 1).
+    pub fn new(capacity: usize) -> Semaphore {
+        let capacity = capacity.max(1);
+        Semaphore {
+            permits: Mutex::new(capacity),
+            released: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Slots currently free.
+    pub fn available(&self) -> usize {
+        *lock_unpoisoned(&self.permits)
+    }
+
+    /// Take a slot if one is free; `None` means the semaphore is full.
+    pub fn try_acquire(&self) -> Option<SemaphorePermit<'_>> {
+        let mut n = lock_unpoisoned(&self.permits);
+        if *n == 0 {
+            return None;
+        }
+        *n -= 1;
+        Some(SemaphorePermit { sem: self })
+    }
+
+    /// Block until a slot is free, then take it.
+    pub fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut n = lock_unpoisoned(&self.permits);
+        while *n == 0 {
+            n = self.released.wait(n).unwrap_or_else(|e| e.into_inner());
+        }
+        *n -= 1;
+        SemaphorePermit { sem: self }
+    }
+
+    /// [`Semaphore::try_acquire`], but the permit owns an `Arc` to the
+    /// semaphore instead of borrowing it, so it can cross thread spawns.
+    pub fn try_acquire_owned(self: &Arc<Self>) -> Option<OwnedSemaphorePermit> {
+        let mut n = lock_unpoisoned(&self.permits);
+        if *n == 0 {
+            return None;
+        }
+        *n -= 1;
+        Some(OwnedSemaphorePermit { sem: self.clone() })
+    }
+}
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        let mut n = lock_unpoisoned(&self.sem.permits);
+        *n += 1;
+        drop(n);
+        self.sem.released.notify_one();
+    }
+}
+
+impl Drop for OwnedSemaphorePermit {
+    fn drop(&mut self) {
+        let mut n = lock_unpoisoned(&self.sem.permits);
+        *n += 1;
+        drop(n);
+        self.sem.released.notify_one();
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
@@ -637,6 +734,75 @@ mod tests {
             Ok(i)
         });
         assert_eq!(out.len(), 5);
+    }
+
+    // ------------------------------------------------------ semaphore
+
+    #[test]
+    fn semaphore_try_acquire_bounds_and_releases() {
+        let sem = Semaphore::new(2);
+        assert_eq!(sem.capacity(), 2);
+        assert_eq!(sem.available(), 2);
+        let a = sem.try_acquire().expect("slot 1");
+        let b = sem.try_acquire().expect("slot 2");
+        assert_eq!(sem.available(), 0);
+        assert!(sem.try_acquire().is_none(), "full semaphore must refuse");
+        drop(a);
+        assert_eq!(sem.available(), 1);
+        let c = sem.try_acquire().expect("released slot is reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(sem.available(), 2);
+    }
+
+    #[test]
+    fn semaphore_owned_permit_crosses_threads() {
+        let sem = Arc::new(Semaphore::new(1));
+        let permit = sem.try_acquire_owned().expect("slot");
+        assert!(sem.try_acquire_owned().is_none(), "full must refuse");
+        let handle = std::thread::spawn(move || drop(permit));
+        handle.join().unwrap();
+        assert_eq!(sem.available(), 1, "drop on another thread releases");
+    }
+
+    #[test]
+    fn semaphore_acquire_blocks_until_release() {
+        let sem = Arc::new(Semaphore::new(1));
+        let held = sem.try_acquire().unwrap();
+        let entered = Arc::new(AtomicUsize::new(0));
+        let (s2, e2) = (sem.clone(), entered.clone());
+        let waiter = std::thread::spawn(move || {
+            let _p = s2.acquire();
+            e2.fetch_add(1, Ordering::SeqCst);
+        });
+        // The waiter cannot get in while we hold the only permit.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(entered.load(Ordering::SeqCst), 0);
+        drop(held);
+        waiter.join().unwrap();
+        assert_eq!(entered.load(Ordering::SeqCst), 1);
+        assert_eq!(sem.available(), 1);
+    }
+
+    #[test]
+    fn semaphore_never_exceeds_capacity_under_contention() {
+        let sem = Semaphore::new(3);
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let _p = sem.acquire();
+                        let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 3);
+        assert_eq!(sem.available(), 3);
     }
 
     #[test]

@@ -64,6 +64,38 @@ pub struct RuntimeStats {
 struct StatsCells {
     compiles: AtomicUsize,
     compile_nanos: AtomicU64,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+    /// Sum of `approx_bytes` over currently-cached executables,
+    /// maintained on insert/evict (both under the write lock).
+    cached_bytes: AtomicUsize,
+    /// Monotonic recency clock: every cache hit/insert stamps its entry
+    /// with the next tick, so eviction can pick the least-recently-used
+    /// entry without taking the write lock on the hit path.
+    tick: AtomicU64,
+}
+
+/// One cached compiled entry plus its LRU recency stamp.  The stamp is
+/// atomic so hits (under the map's **read** lock) can refresh it without
+/// write-locking the map — the hot path stays read-scalable.
+struct CacheSlot {
+    exe: Arc<Executable>,
+    stamp: AtomicU64,
+}
+
+/// Snapshot of the executable cache's bound/usage counters, surfaced by
+/// the serve `/stats` endpoint and asserted by the cache-bound tests.
+#[derive(Clone, Debug, Default)]
+pub struct ExecCacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    /// Configured caps; 0 = unbounded (the CLI default).
+    pub max_entries: usize,
+    pub max_bytes: usize,
 }
 
 /// Lock, recovering from poisoning: the protected state here (cache map,
@@ -75,14 +107,29 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 }
 
 /// PJRT client + manifest + compile cache.
+///
+/// The cache is **eviction-bounded**: `set_exec_cache_limits` installs
+/// an entry-count and/or byte cap (both default 0 = unbounded, the CLI
+/// behaviour since PR 1), and every insert evicts least-recently-used
+/// entries until the bounds hold again.  A long-running `divebatch
+/// serve` process sets the caps so multi-tenant traffic across many
+/// models/rungs cannot grow the cache without bound.  Eviction is safe
+/// by construction: in-flight users (including the step executor's
+/// per-lane [`super::ExecCache`] handle caches) hold `Arc`s, so an
+/// evicted entry stays alive until its last user drops it — eviction
+/// only forfeits reuse (a later request recompiles).
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RwLock<HashMap<String, Arc<Executable>>>,
+    cache: RwLock<HashMap<String, CacheSlot>>,
     /// Per-entry compile guards: racing first accesses to one key
     /// serialize here while other keys proceed.
     compiling: Mutex<HashMap<String, Arc<Mutex<()>>>>,
     stats: StatsCells,
+    /// Eviction bounds (0 = unbounded).  Atomics so a server can install
+    /// caps on a shared runtime without exclusive access.
+    max_entries: AtomicUsize,
+    max_bytes: AtomicUsize,
 }
 
 impl Runtime {
@@ -96,6 +143,8 @@ impl Runtime {
             cache: RwLock::new(HashMap::new()),
             compiling: Mutex::new(HashMap::new()),
             stats: StatsCells::default(),
+            max_entries: AtomicUsize::new(0),
+            max_bytes: AtomicUsize::new(0),
         })
     }
 
@@ -133,21 +182,78 @@ impl Runtime {
         }
     }
 
+    /// Install executable-cache eviction bounds: keep at most
+    /// `max_entries` compiled entries / `max_bytes` approximate bytes
+    /// (0 = unbounded).  At least one entry is always retained so the
+    /// entry just compiled for a caller can never be evicted before the
+    /// caller's own insert returns.
+    pub fn set_exec_cache_limits(&self, max_entries: usize, max_bytes: usize) {
+        self.max_entries.store(max_entries, Ordering::Relaxed);
+        self.max_bytes.store(max_bytes, Ordering::Relaxed);
+    }
+
+    /// Bound/usage counters of the executable cache (serve `/stats`).
+    pub fn exec_cache_stats(&self) -> ExecCacheStats {
+        ExecCacheStats {
+            entries: self.cached_executables(),
+            bytes: self.stats.cached_bytes.load(Ordering::Relaxed),
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            max_entries: self.max_entries.load(Ordering::Relaxed),
+            max_bytes: self.max_bytes.load(Ordering::Relaxed),
+        }
+    }
+
     /// Number of distinct compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
         self.cache.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
+    /// Read-locked lookup; refreshes the entry's LRU stamp on hit.
+    fn lookup(&self, cache_key: &str) -> Option<Arc<Executable>> {
+        let map = self.cache.read().unwrap_or_else(|e| e.into_inner());
+        map.get(cache_key).map(|slot| {
+            slot.stamp
+                .store(self.stats.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+            slot.exe.clone()
+        })
+    }
+
+    /// Evict least-recently-used entries until the configured bounds
+    /// hold, never touching `keep` (the entry being inserted) and never
+    /// dropping below one retained entry.  Caller holds the write lock.
+    fn evict_over_caps(&self, map: &mut HashMap<String, CacheSlot>, keep: &str) {
+        let max_entries = self.max_entries.load(Ordering::Relaxed);
+        let max_bytes = self.max_bytes.load(Ordering::Relaxed);
+        loop {
+            let over_entries = max_entries > 0 && map.len() > max_entries;
+            let over_bytes =
+                max_bytes > 0 && self.stats.cached_bytes.load(Ordering::Relaxed) > max_bytes;
+            if (!over_entries && !over_bytes) || map.len() <= 1 {
+                return;
+            }
+            let victim = map
+                .iter()
+                .filter(|(k, _)| k.as_str() != keep)
+                .min_by_key(|(_, slot)| slot.stamp.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { return };
+            if let Some(slot) = map.remove(&victim) {
+                self.stats
+                    .cached_bytes
+                    .fetch_sub(slot.exe.approx_bytes, Ordering::Relaxed);
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// Fetch (compiling on first use) the executable for `model/entry_key`.
     pub fn entry(&self, model: &str, entry_key: &str) -> Result<Arc<Executable>> {
         let cache_key = format!("{model}/{entry_key}");
-        if let Some(e) = self
-            .cache
-            .read()
-            .unwrap_or_else(|e| e.into_inner())
-            .get(&cache_key)
-        {
-            return Ok(e.clone());
+        if let Some(e) = self.lookup(&cache_key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(e);
         }
         // Miss: take this entry's compile guard so concurrent first
         // accesses compile exactly once (other entries stay unblocked).
@@ -156,15 +262,13 @@ impl Runtime {
             .or_default()
             .clone();
         let _compiling = lock_unpoisoned(&guard);
-        // A racing worker may have compiled while we waited for the guard.
-        if let Some(e) = self
-            .cache
-            .read()
-            .unwrap_or_else(|e| e.into_inner())
-            .get(&cache_key)
-        {
-            return Ok(e.clone());
+        // A racing worker may have compiled while we waited for the
+        // guard; that still counts as a hit (served without compiling).
+        if let Some(e) = self.lookup(&cache_key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(e);
         }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
         let compiled = (|| -> Result<Arc<Executable>> {
             let info = self.manifest.model(model)?.entry(entry_key)?.clone();
             let path = self.manifest.path(&info.file);
@@ -185,11 +289,20 @@ impl Runtime {
                 .fetch_add((t.seconds() * 1e9) as u64, Ordering::Relaxed);
             let wrapped = Arc::new(Executable::new(cache_key.clone(), info, exe));
             // Publish to the cache BEFORE the guard entry is dropped, so
-            // a waiter's re-check always finds it.
-            self.cache
-                .write()
-                .unwrap_or_else(|e| e.into_inner())
-                .insert(cache_key.clone(), wrapped.clone());
+            // a waiter's re-check always finds it; then evict down to the
+            // configured bounds (LRU, never the entry just inserted).
+            let mut map = self.cache.write().unwrap_or_else(|e| e.into_inner());
+            self.stats
+                .cached_bytes
+                .fetch_add(wrapped.approx_bytes, Ordering::Relaxed);
+            map.insert(
+                cache_key.clone(),
+                CacheSlot {
+                    exe: wrapped.clone(),
+                    stamp: AtomicU64::new(self.stats.tick.fetch_add(1, Ordering::Relaxed)),
+                },
+            );
+            self.evict_over_caps(&mut map, &cache_key);
             Ok(wrapped)
         })();
         // Drop the guard entry on success AND failure — later lookups hit
@@ -243,7 +356,7 @@ impl Runtime {
             .read()
             .unwrap_or_else(|e| e.into_inner())
             .values()
-            .map(|e| e.executions())
+            .map(|s| s.exe.executions())
             .sum()
     }
 }

@@ -44,6 +44,13 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     /// Static batch dimension (rows) for batch entries; 0 for `update`.
     pub micro: usize,
+    /// Approximate resident footprint of this compiled entry, used for
+    /// the executable cache's byte-bound accounting: 4 bytes per tensor
+    /// element across the declared inputs and outputs (the interpreter's
+    /// buffer arena is sized by these) plus a fixed program overhead.
+    /// An approximation on purpose — cache bounding needs a stable
+    /// relative ordering, not exact heap profiling.
+    pub approx_bytes: usize,
     /// Cumulative execute() invocations (runtime stats / perf accounting);
     /// atomic so concurrent trials keep the count exact.
     executions: std::sync::atomic::AtomicU64,
@@ -58,11 +65,19 @@ impl Executable {
             .find(|t| t.name == "x")
             .map(|t| t.shape[0])
             .unwrap_or(0);
+        let approx_bytes = 1024
+            + 4 * info
+                .inputs
+                .iter()
+                .chain(info.outputs.iter())
+                .map(|t| t.elements())
+                .sum::<usize>();
         Executable {
             key,
             info,
             exe,
             micro,
+            approx_bytes,
             executions: std::sync::atomic::AtomicU64::new(0),
         }
     }

@@ -30,7 +30,7 @@ pub mod executable;
 pub mod handles;
 pub mod manifest;
 
-pub use cache::{Runtime, RuntimeStats};
+pub use cache::{ExecCacheStats, Runtime, RuntimeStats};
 pub use executable::{EvalOut, Executable, TrainOut};
 pub use handles::ExecCache;
 pub use manifest::{Dtype, EntryInfo, Manifest, ModelInfo, ParamSpec, TensorSpec};

@@ -1,0 +1,397 @@
+//! Adaptive request admission: coalesce queued trial requests into
+//! batches sized to the observed queue depth, and dispatch them onto
+//! the parallel trial engine.
+//!
+//! The shape mirrors the batch-size adaptation the *training* side of
+//! this repo is about, applied to serving: a lone request should not
+//! wait for peers (batch of 1, lowest latency), while a burst should be
+//! swept into one engine dispatch so trials share the worker pool and
+//! the compile cache warm-up instead of queueing head-to-tail
+//! (throughput).  The [`BatchController`] adapts multiplicatively —
+//! double toward the backlog when the queue runs ahead of the current
+//! batch size, halve when it falls behind — the same grow/shrink
+//! discipline as AdaBatch-style schedules, bounded by `batch_max`.
+//!
+//! One dispatcher thread owns the queue: it sleeps until work arrives,
+//! adapts the batch size to the depth it wakes to, drains up to one
+//! batch, answers cache hits from the (optional) shared
+//! [`ResultsCache`], and runs the misses through a [`TrialRunner`] over
+//! the shared [`Runtime`].  Each accepted request holds an mpsc sender;
+//! connection threads block on their receiver, so slow trials never
+//! block the accept loop.  Every counter a load test needs to *observe*
+//! the adaptation (batch sizes, adapt events, hits/misses) is exported
+//! via [`Admission::stats`] and served at `/stats`.
+//!
+//! Shutdown is graceful by contract: [`Admission::shutdown`] flips the
+//! queue into draining mode — new submissions are rejected (the server
+//! answers 503) while everything already admitted runs to completion
+//! before the dispatcher exits.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::config::rescache::ResultsCache;
+use crate::engine::{TrialRunner, TrialSpec};
+use crate::metrics::RunRecord;
+use crate::pool::lock_unpoisoned;
+use crate::runtime::Runtime;
+
+/// Multiplicative queue-depth tracker deciding how many queued requests
+/// to coalesce per engine dispatch.
+#[derive(Debug)]
+pub struct BatchController {
+    current: usize,
+    max: usize,
+    /// Number of times `adapt` actually changed the batch size.
+    adapt_events: usize,
+    /// Largest batch size ever reached — the load test's witness that
+    /// adaptation responded to queue depth.
+    max_seen: usize,
+}
+
+impl BatchController {
+    /// Start at batch size 1 (latency-optimal for an idle service).
+    pub fn new(max: usize) -> BatchController {
+        BatchController {
+            current: 1,
+            max: max.max(1),
+            adapt_events: 0,
+            max_seen: 1,
+        }
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn max_seen(&self) -> usize {
+        self.max_seen
+    }
+
+    pub fn adapt_events(&self) -> usize {
+        self.adapt_events
+    }
+
+    /// Adapt to an observed queue depth, then return the number of
+    /// requests to dispatch now: grow (double, jumping straight to the
+    /// backlog if it is even deeper) while the queue runs at least 2x
+    /// ahead of the batch size; shrink (halve) when the queue falls
+    /// below it.  Depth swings therefore move the batch size in a few
+    /// dispatches rather than one request at a time.
+    pub fn adapt(&mut self, depth: usize) -> usize {
+        let before = self.current;
+        if depth >= self.current.saturating_mul(2) {
+            self.current = depth.min(self.max);
+        } else if depth < self.current {
+            self.current = (self.current / 2).max(depth).max(1);
+        }
+        if self.current != before {
+            self.adapt_events += 1;
+        }
+        self.max_seen = self.max_seen.max(self.current);
+        depth.min(self.current)
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is at `max_queue` — back off and retry.
+    QueueFull,
+    /// The service is shutting down; no new work is admitted.
+    Draining,
+}
+
+/// Counter snapshot for `/stats`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionStats {
+    pub queue_depth: usize,
+    pub batch_size: usize,
+    pub batch_size_max_seen: usize,
+    pub adapt_events: usize,
+    pub batches_dispatched: usize,
+    pub submitted: usize,
+    pub rejected: usize,
+    pub trials_completed: usize,
+    pub trials_failed: usize,
+    pub results_hits: usize,
+}
+
+type TrialResult = Result<RunRecord, String>;
+
+struct Pending {
+    spec: TrialSpec,
+    tx: mpsc::Sender<TrialResult>,
+}
+
+struct QueueState {
+    pending: VecDeque<Pending>,
+    controller: BatchController,
+    draining: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    wake: Condvar,
+    rt: Arc<Runtime>,
+    results: Option<ResultsCache>,
+    jobs: usize,
+    max_queue: usize,
+    // Monotonic counters (relaxed: they are diagnostics, not fences).
+    batches_dispatched: AtomicUsize,
+    submitted: AtomicUsize,
+    rejected: AtomicUsize,
+    trials_completed: AtomicUsize,
+    trials_failed: AtomicUsize,
+    results_hits: AtomicUsize,
+}
+
+/// The admission queue + its dispatcher thread.
+pub struct Admission {
+    shared: Arc<Shared>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Admission {
+    /// Start the dispatcher.  `jobs` is the engine budget per dispatch
+    /// (0 = all cores), `max_queue` bounds admitted-but-unstarted
+    /// requests, `batch_max` caps the adaptive batch size, and
+    /// `results` (optional) memoizes finished trials by fingerprint.
+    pub fn start(
+        rt: Arc<Runtime>,
+        jobs: usize,
+        max_queue: usize,
+        batch_max: usize,
+        results: Option<ResultsCache>,
+    ) -> Admission {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                controller: BatchController::new(batch_max),
+                draining: false,
+            }),
+            wake: Condvar::new(),
+            rt,
+            results,
+            jobs,
+            max_queue: max_queue.max(1),
+            batches_dispatched: AtomicUsize::new(0),
+            submitted: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            trials_completed: AtomicUsize::new(0),
+            trials_failed: AtomicUsize::new(0),
+            results_hits: AtomicUsize::new(0),
+        });
+        let worker = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("divebatch-admission".into())
+            .spawn(move || dispatcher_loop(&worker))
+            .expect("spawning admission dispatcher");
+        Admission {
+            shared,
+            dispatcher: Mutex::new(Some(handle)),
+        }
+    }
+
+    /// Queue one trial.  On success the caller blocks on the returned
+    /// receiver; the result arrives when the trial's batch completes.
+    pub fn submit(&self, spec: TrialSpec) -> Result<mpsc::Receiver<TrialResult>, SubmitError> {
+        let mut q = lock_unpoisoned(&self.shared.queue);
+        if q.draining {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Draining);
+        }
+        if q.pending.len() >= self.shared.max_queue {
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull);
+        }
+        let (tx, rx) = mpsc::channel();
+        q.pending.push_back(Pending { spec, tx });
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.shared.wake.notify_one();
+        Ok(rx)
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        let q = lock_unpoisoned(&self.shared.queue);
+        AdmissionStats {
+            queue_depth: q.pending.len(),
+            batch_size: q.controller.current(),
+            batch_size_max_seen: q.controller.max_seen(),
+            adapt_events: q.controller.adapt_events(),
+            batches_dispatched: self.shared.batches_dispatched.load(Ordering::Relaxed),
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            trials_completed: self.shared.trials_completed.load(Ordering::Relaxed),
+            trials_failed: self.shared.trials_failed.load(Ordering::Relaxed),
+            results_hits: self.shared.results_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bound/usage counters of the shared results cache, if one is
+    /// configured.
+    pub fn results_stats(&self) -> Option<crate::config::rescache::ResultsCacheStats> {
+        self.shared.results.as_ref().map(|c| c.stats())
+    }
+
+    /// Graceful drain: refuse new work, let everything already admitted
+    /// finish, then stop the dispatcher.  Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = lock_unpoisoned(&self.shared.queue);
+            q.draining = true;
+        }
+        self.shared.wake.notify_all();
+        if let Some(handle) = lock_unpoisoned(&self.dispatcher).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Admission {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn dispatcher_loop(shared: &Shared) {
+    loop {
+        // Sleep until there is work (or we are draining an empty queue,
+        // which is the exit condition).
+        let batch: Vec<Pending> = {
+            let mut q = lock_unpoisoned(&shared.queue);
+            loop {
+                if !q.pending.is_empty() {
+                    break;
+                }
+                if q.draining {
+                    return;
+                }
+                q = shared.wake.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+            let depth = q.pending.len();
+            let take = q.controller.adapt(depth);
+            q.pending.drain(..take).collect()
+        };
+        shared.batches_dispatched.fetch_add(1, Ordering::Relaxed);
+        run_batch(shared, batch);
+    }
+}
+
+/// Answer one coalesced batch: cache hits immediately, misses through
+/// one engine dispatch sharing the jobs budget.
+fn run_batch(shared: &Shared, batch: Vec<Pending>) {
+    let mut answers: Vec<Option<TrialResult>> = Vec::with_capacity(batch.len());
+    let mut miss_idx: Vec<usize> = Vec::new();
+    for (i, p) in batch.iter().enumerate() {
+        let cached = shared
+            .results
+            .as_ref()
+            .and_then(|c| c.load(&p.spec.fingerprint(), 1))
+            .and_then(|mut recs| if recs.is_empty() { None } else { Some(recs.remove(0)) });
+        match cached {
+            Some(rec) => {
+                shared.results_hits.fetch_add(1, Ordering::Relaxed);
+                answers.push(Some(Ok(rec)));
+            }
+            None => {
+                miss_idx.push(i);
+                answers.push(None);
+            }
+        }
+    }
+
+    if !miss_idx.is_empty() {
+        let specs: Vec<TrialSpec> = miss_idx.iter().map(|&i| batch[i].spec.clone()).collect();
+        let results = TrialRunner::new(shared.jobs).run(&shared.rt, &specs);
+        for (&i, res) in miss_idx.iter().zip(results) {
+            let answer = match res {
+                Ok(rec) => {
+                    if let Some(cache) = &shared.results {
+                        store_masked(cache, &batch[i].spec, &rec);
+                    }
+                    Ok(rec)
+                }
+                Err(e) => Err(e.to_string()),
+            };
+            answers[i] = Some(answer);
+        }
+    }
+
+    for (p, answer) in batch.into_iter().zip(answers) {
+        let answer = answer.expect("every slot answered");
+        match &answer {
+            Ok(_) => shared.trials_completed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => shared.trials_failed.fetch_add(1, Ordering::Relaxed),
+        };
+        // A receiver gone away (client hung up) is not an error.
+        let _ = p.tx.send(answer);
+    }
+}
+
+/// Store the wall-clock-masked form of a record (the canonical JSON
+/// round-tripped back through `from_json`): serve responses are
+/// canonical, so a record served from cache tomorrow must be
+/// byte-identical to the one computed today — which its real wall-clock
+/// columns would break.
+fn store_masked(cache: &ResultsCache, spec: &TrialSpec, rec: &RunRecord) {
+    let Ok(masked) = RunRecord::from_json(&rec.to_canonical_json()) else {
+        return;
+    };
+    if let Err(e) = cache.store(&spec.fingerprint(), &[masked]) {
+        eprintln!("serve: results cache store failed (serving anyway): {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn controller_grows_toward_backlog_and_caps() {
+        let mut c = BatchController::new(32);
+        assert_eq!(c.current(), 1);
+        // Burst: depth 8 >= 2*1 -> jump to 8, dispatch all 8.
+        assert_eq!(c.adapt(8), 8);
+        assert_eq!(c.current(), 8);
+        // Deeper burst caps at batch_max.
+        assert_eq!(c.adapt(100), 32);
+        assert_eq!(c.current(), 32);
+        assert_eq!(c.max_seen(), 32);
+    }
+
+    #[test]
+    fn controller_shrinks_when_the_queue_drains() {
+        let mut c = BatchController::new(32);
+        c.adapt(32);
+        assert_eq!(c.current(), 32);
+        // Queue fell to 3: halve (floored at the depth itself).
+        assert_eq!(c.adapt(3), 3);
+        assert_eq!(c.current(), 16);
+        assert_eq!(c.adapt(1), 1);
+        assert_eq!(c.current(), 8);
+        // Repeated single requests decay back to 1.
+        for _ in 0..4 {
+            c.adapt(1);
+        }
+        assert_eq!(c.current(), 1);
+        // Depth 1 at size 1: steady state, no event.
+        let before = c.adapt_events();
+        c.adapt(1);
+        assert_eq!(c.adapt_events(), before);
+    }
+
+    #[test]
+    fn controller_holds_steady_in_band() {
+        // Depth within [current, 2*current) neither grows nor shrinks.
+        let mut c = BatchController::new(32);
+        c.adapt(8);
+        let before = c.adapt_events();
+        assert_eq!(c.adapt(11), 8, "dispatch is capped by current size");
+        assert_eq!(c.current(), 8);
+        assert_eq!(c.adapt_events(), before);
+    }
+}

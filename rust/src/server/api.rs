@@ -1,0 +1,474 @@
+//! Request schema + strict validation for the `divebatch serve` API.
+//!
+//! Turns a POSTed JSON body into [`TrialSpec`]s or a typed
+//! [`ApiError`].  Validation is strict in the same way the CLI's policy
+//! parser is: **unknown fields are rejected** (with a "did you mean"
+//! suggestion reusing the policy registry's edit-distance machinery),
+//! wrong JSON types and out-of-range values name the offending field,
+//! and unknown models/policies suggest the closest known name.  A
+//! malformed request can never panic the server or surface as a 500 —
+//! every rejection is a structured 400 the client can act on:
+//!
+//! ```json
+//! {"error":{"code":"unknown_field","field":"epochz","message":"...","did_you_mean":"epochs"}}
+//! ```
+//!
+//! Field names deliberately mirror the CLI flags (`decay_every` <->
+//! `--decay-every`), and defaults match the CLI defaults, so a request
+//! `{}` plus `model`/`policy` behaves like a bare `divebatch train`
+//! invocation — with one exception: the default synthetic dataset is
+//! the bounded `n = 2000` draw (a service should not synthesize 20k
+//! samples because a client sent the empty object).
+
+use crate::config::{flops_per_sample, DatasetSpec};
+use crate::coordinator::policy::registry::suggest;
+use crate::coordinator::{LrSchedule, PolicyHandle, PolicyRegistry, SgldConfig, TrainConfig};
+use crate::data::{ImageSpec, SyntheticSpec};
+use crate::engine::TrialSpec;
+use crate::runtime::Runtime;
+use crate::util::json::{self, Json};
+use crate::ClusterSpec;
+
+/// Top-level fields shared by `/trial` and `/sweep` requests.
+const SHARED_KEYS: &[&str] = &[
+    "model",
+    "dataset",
+    "epochs",
+    "lr",
+    "decay",
+    "decay_every",
+    "rescale_lr",
+    "momentum",
+    "weight_decay",
+    "clip_norm",
+    "max_micro",
+    "device_update",
+    "adam",
+    "sgld_sigma",
+    "sim_workers",
+    "sim_div_overhead",
+    "step_jobs",
+];
+
+const TRIAL_ONLY_KEYS: &[&str] = &["policy", "seed"];
+const SWEEP_ONLY_KEYS: &[&str] = &["policies", "seeds"];
+
+const SYNTH_KEYS: &[&str] = &["kind", "n", "d", "noise", "seed"];
+const IMAGE_KEYS: &[&str] = &["kind", "per_class"];
+
+/// Resource caps — generous for every legitimate experiment in
+/// DESIGN.md, small enough that one request cannot occupy the service.
+const MAX_EPOCHS: usize = 1000;
+const MAX_SYNTH_N: usize = 100_000;
+const MAX_SYNTH_D: usize = 4096;
+const MAX_PER_CLASS: usize = 1000;
+const MAX_SEEDS: usize = 64;
+const MAX_POLICIES: usize = 16;
+const MAX_SIM_WORKERS: usize = 4096;
+const MAX_STEP_JOBS: usize = 256;
+
+/// A structured request rejection: HTTP status + machine-readable code
+/// + the field at fault + optionally the name the client probably meant.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub field: String,
+    pub message: String,
+    pub did_you_mean: Option<String>,
+}
+
+impl ApiError {
+    pub fn new(code: &'static str, field: &str, message: impl Into<String>) -> ApiError {
+        ApiError {
+            status: 400,
+            code,
+            field: field.to_string(),
+            message: message.into(),
+            did_you_mean: None,
+        }
+    }
+
+    pub fn with_status(mut self, status: u16) -> ApiError {
+        self.status = status;
+        self
+    }
+
+    pub fn with_suggestion(mut self, s: Option<String>) -> ApiError {
+        self.did_you_mean = s;
+        self
+    }
+
+    /// `{"error":{...}}` — the wire shape for both full responses and
+    /// per-trial JSONL error lines.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("field", Json::Str(self.field.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ];
+        if let Some(s) = &self.did_you_mean {
+            fields.push(("did_you_mean", Json::Str(s.clone())));
+        }
+        Json::obj(vec![("error", Json::obj(fields))])
+    }
+}
+
+/// Decode a request body: UTF-8, then strict JSON (the parser enforces
+/// its own depth bound, so deeply nested bodies land here as a parse
+/// error, not a stack overflow), then require a top-level object.
+pub fn parse_body(bytes: &[u8]) -> Result<Json, ApiError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| ApiError::new("bad_json", "(body)", format!("body is not UTF-8: {e}")))?;
+    let parsed = json::parse(text)
+        .map_err(|e| ApiError::new("bad_json", "(body)", format!("invalid JSON: {e}")))?;
+    if parsed.as_obj().is_none() {
+        return Err(ApiError::new(
+            "bad_type",
+            "(body)",
+            "request body must be a JSON object",
+        ));
+    }
+    Ok(parsed)
+}
+
+/// `/trial`: one model + one policy spec + one seed -> one [`TrialSpec`].
+pub fn parse_trial(body: &Json, rt: &Runtime) -> Result<TrialSpec, ApiError> {
+    let allowed: Vec<&str> = SHARED_KEYS.iter().chain(TRIAL_ONLY_KEYS).copied().collect();
+    check_keys(body, &allowed)?;
+    let model = model_of(body, rt)?;
+    let policy = policy_of(req_str(body, "policy")?)?;
+    let seed = get_usize(body, "seed", 0)?;
+    let cfg = cfg_from_obj(body, &model, policy)?;
+    let dataset = dataset_from_obj(body)?;
+    Ok(TrialSpec {
+        flops_per_sample: flops_per_sample(&model),
+        cfg,
+        dataset,
+        trial: seed as u64,
+    })
+}
+
+/// `/sweep`: policies x seeds -> specs in (policy-major, seed-minor)
+/// order — the same order `divebatch sweep` expands trials in, and the
+/// order result lines stream back in.
+pub fn parse_sweep(body: &Json, rt: &Runtime) -> Result<Vec<TrialSpec>, ApiError> {
+    let allowed: Vec<&str> = SHARED_KEYS.iter().chain(SWEEP_ONLY_KEYS).copied().collect();
+    check_keys(body, &allowed)?;
+    let model = model_of(body, rt)?;
+    let seeds = get_usize(body, "seeds", 3)?;
+    in_range(seeds, 1, MAX_SEEDS, "seeds")?;
+    let specs_json = body
+        .get("policies")
+        .ok_or_else(|| ApiError::new("missing_field", "policies", "field \"policies\" is required"))?;
+    let Some(arr) = specs_json.as_arr() else {
+        return Err(ApiError::new(
+            "bad_type",
+            "policies",
+            "\"policies\" must be an array of policy-spec strings",
+        ));
+    };
+    in_range(arr.len(), 1, MAX_POLICIES, "policies")?;
+    let dataset = dataset_from_obj(body)?;
+
+    let mut out = Vec::with_capacity(arr.len() * seeds);
+    for (i, p) in arr.iter().enumerate() {
+        let Some(spec) = p.as_str() else {
+            return Err(ApiError::new(
+                "bad_type",
+                "policies",
+                format!("policies[{i}] must be a string"),
+            ));
+        };
+        let policy = policy_of(spec)?;
+        let cfg = cfg_from_obj(body, &model, policy)?;
+        for seed in 0..seeds {
+            out.push(TrialSpec {
+                flops_per_sample: flops_per_sample(&model),
+                cfg: cfg.clone(),
+                dataset: dataset.clone(),
+                trial: seed as u64,
+            });
+        }
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------ pieces
+
+/// Reject any key outside `allowed`, suggesting the closest known one.
+fn check_keys(obj: &Json, allowed: &[&str]) -> Result<(), ApiError> {
+    let map = obj.as_obj().expect("parse_body guarantees an object");
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(ApiError::new(
+                "unknown_field",
+                key,
+                format!("unknown field {key:?}"),
+            )
+            .with_suggestion(suggest(key, allowed.iter().copied())));
+        }
+    }
+    Ok(())
+}
+
+fn model_of(body: &Json, rt: &Runtime) -> Result<String, ApiError> {
+    let name = req_str(body, "model")?;
+    if rt.model(name).is_err() {
+        let known = rt.manifest.names();
+        return Err(ApiError::new(
+            "unknown_model",
+            "model",
+            format!("unknown model {name:?} (known: {})", known.join(", ")),
+        )
+        .with_suggestion(suggest(name, known.into_iter())));
+    }
+    Ok(name.to_string())
+}
+
+/// Parse a policy spec through the strict registry; its errors already
+/// carry their own "did you mean" text.
+fn policy_of(spec: &str) -> Result<PolicyHandle, ApiError> {
+    PolicyRegistry::builtin()
+        .parse(spec)
+        .map_err(|e| ApiError::new("bad_policy", "policy", e.to_string()))
+}
+
+fn cfg_from_obj(obj: &Json, model: &str, policy: PolicyHandle) -> Result<TrainConfig, ApiError> {
+    let epochs = get_usize(obj, "epochs", 40)?;
+    in_range(epochs, 1, MAX_EPOCHS, "epochs")?;
+    let schedule = LrSchedule {
+        base: pos_f64(obj, "lr", 0.1)?,
+        decay: pos_f64(obj, "decay", 0.75)?,
+        every: in_range(get_usize(obj, "decay_every", 20)?, 1, MAX_EPOCHS, "decay_every")?,
+        rescale_with_batch: get_bool(obj, "rescale_lr", false)?,
+    };
+    let mut cfg = TrainConfig::new(model, policy, schedule, epochs);
+    cfg.momentum = nonneg_f64(obj, "momentum", 0.0)?;
+    cfg.weight_decay = nonneg_f64(obj, "weight_decay", 0.0)?;
+    let clip = nonneg_f64(obj, "clip_norm", 0.0)?;
+    cfg.clip_norm = if clip > 0.0 { Some(clip) } else { None };
+    let max_micro = get_usize(obj, "max_micro", 0)?;
+    cfg.max_micro = if max_micro > 0 { Some(max_micro) } else { None };
+    cfg.use_adam = get_bool(obj, "adam", false)?;
+    cfg.device_update = get_bool(obj, "device_update", false)?;
+    cfg.sgld = SgldConfig {
+        sigma: nonneg_f64(obj, "sgld_sigma", 0.0)?,
+    };
+    cfg.cluster = ClusterSpec {
+        workers: in_range(get_usize(obj, "sim_workers", 4)?, 1, MAX_SIM_WORKERS, "sim_workers")?,
+        div_overhead: nonneg_f64(obj, "sim_div_overhead", 0.9)?,
+    };
+    cfg.step_jobs = in_range(get_usize(obj, "step_jobs", 0)?, 0, MAX_STEP_JOBS, "step_jobs")?;
+    // A service must not write per-epoch progress to its own stderr.
+    cfg.verbose = false;
+    Ok(cfg)
+}
+
+fn dataset_from_obj(body: &Json) -> Result<DatasetSpec, ApiError> {
+    let Some(ds) = body.get("dataset") else {
+        return Ok(DatasetSpec::Synthetic(SyntheticSpec {
+            n: 2000,
+            d: 512,
+            noise: 0.1,
+            seed: 1000,
+        }));
+    };
+    if ds.as_obj().is_none() {
+        return Err(ApiError::new(
+            "bad_type",
+            "dataset",
+            "\"dataset\" must be an object with a \"kind\" field",
+        ));
+    }
+    let kind = req_str_at(ds, "dataset.kind", "kind")?;
+    match kind {
+        "synthetic" => {
+            check_keys_at(ds, SYNTH_KEYS, "dataset")?;
+            Ok(DatasetSpec::Synthetic(SyntheticSpec {
+                n: in_range(get_usize(ds, "n", 2000)?, 1, MAX_SYNTH_N, "dataset.n")?,
+                d: in_range(get_usize(ds, "d", 512)?, 1, MAX_SYNTH_D, "dataset.d")?,
+                noise: nonneg_f64(ds, "noise", 0.1)?,
+                seed: get_usize(ds, "seed", 1000)? as u64,
+            }))
+        }
+        "cifar10" | "cifar100" | "tin" => {
+            check_keys_at(ds, IMAGE_KEYS, "dataset")?;
+            let per_class =
+                in_range(get_usize(ds, "per_class", 100)?, 1, MAX_PER_CLASS, "dataset.per_class")?;
+            Ok(DatasetSpec::Images(match kind {
+                "cifar10" => ImageSpec::cifar10_like(per_class, 2000),
+                "cifar100" => ImageSpec::cifar100_like(per_class, 3000),
+                _ => ImageSpec::tiny_imagenet_like(per_class, 4000),
+            }))
+        }
+        other => Err(ApiError::new(
+            "out_of_range",
+            "dataset.kind",
+            format!("unknown dataset kind {other:?} (synthetic | cifar10 | cifar100 | tin)"),
+        )
+        .with_suggestion(suggest(other, ["synthetic", "cifar10", "cifar100", "tin"].into_iter()))),
+    }
+}
+
+fn check_keys_at(obj: &Json, allowed: &[&str], prefix: &str) -> Result<(), ApiError> {
+    let map = obj.as_obj().expect("caller checked");
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(ApiError::new(
+                "unknown_field",
+                &format!("{prefix}.{key}"),
+                format!("unknown field {key:?} in {prefix:?}"),
+            )
+            .with_suggestion(suggest(key, allowed.iter().copied())));
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------- typed field accessors
+
+fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str, ApiError> {
+    req_str_at(obj, key, key)
+}
+
+fn req_str_at<'a>(obj: &'a Json, field: &str, key: &str) -> Result<&'a str, ApiError> {
+    let Some(v) = obj.get(key) else {
+        return Err(ApiError::new(
+            "missing_field",
+            field,
+            format!("field {field:?} is required"),
+        ));
+    };
+    v.as_str().ok_or_else(|| {
+        ApiError::new("bad_type", field, format!("field {field:?} must be a string"))
+    })
+}
+
+fn get_usize(obj: &Json, key: &str, default: usize) -> Result<usize, ApiError> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| {
+            ApiError::new(
+                "bad_type",
+                key,
+                format!("field {key:?} must be a non-negative integer"),
+            )
+        }),
+    }
+}
+
+fn get_f64(obj: &Json, key: &str, default: f64) -> Result<f64, ApiError> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| ApiError::new("bad_type", key, format!("field {key:?} must be a number"))),
+    }
+}
+
+fn get_bool(obj: &Json, key: &str, default: bool) -> Result<bool, ApiError> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| {
+            ApiError::new("bad_type", key, format!("field {key:?} must be a boolean"))
+        }),
+    }
+}
+
+/// Finite and > 0.
+fn pos_f64(obj: &Json, key: &str, default: f64) -> Result<f64, ApiError> {
+    let v = get_f64(obj, key, default)?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(ApiError::new(
+            "out_of_range",
+            key,
+            format!("field {key:?} must be a finite number > 0, got {v}"),
+        ));
+    }
+    Ok(v)
+}
+
+/// Finite and >= 0.
+fn nonneg_f64(obj: &Json, key: &str, default: f64) -> Result<f64, ApiError> {
+    let v = get_f64(obj, key, default)?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(ApiError::new(
+            "out_of_range",
+            key,
+            format!("field {key:?} must be a finite number >= 0, got {v}"),
+        ));
+    }
+    Ok(v)
+}
+
+fn in_range(v: usize, lo: usize, hi: usize, field: &str) -> Result<usize, ApiError> {
+    if v < lo || v > hi {
+        return Err(ApiError::new(
+            "out_of_range",
+            field,
+            format!("field {field:?} must be in {lo}..={hi}, got {v}"),
+        ));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(text: &str) -> Json {
+        json::parse(text).expect("test JSON")
+    }
+
+    #[test]
+    fn unknown_field_suggests_the_near_miss() {
+        let e = check_keys(&obj(r#"{"epochz": 3}"#), SHARED_KEYS).unwrap_err();
+        assert_eq!(e.code, "unknown_field");
+        assert_eq!(e.field, "epochz");
+        assert_eq!(e.did_you_mean.as_deref(), Some("epochs"));
+    }
+
+    #[test]
+    fn error_json_shape_is_stable() {
+        let e = ApiError::new("out_of_range", "epochs", "too big").with_suggestion(None);
+        let j = e.to_json();
+        let inner = j.get("error").expect("error envelope");
+        assert_eq!(inner.get("code").unwrap().as_str(), Some("out_of_range"));
+        assert_eq!(inner.get("field").unwrap().as_str(), Some("epochs"));
+        assert!(inner.get("did_you_mean").is_none(), "absent when None");
+    }
+
+    #[test]
+    fn body_must_be_an_object() {
+        assert!(parse_body(b"[1,2,3]").is_err());
+        assert!(parse_body(b"not json at all").is_err());
+        assert!(parse_body(&[0xff, 0xfe]).is_err());
+        assert!(parse_body(b"{}").is_ok());
+    }
+
+    #[test]
+    fn numeric_fields_reject_wrong_types_and_ranges() {
+        let o = obj(r#"{"epochs": "forty"}"#);
+        assert_eq!(get_usize(&o, "epochs", 1).unwrap_err().code, "bad_type");
+        let o = obj(r#"{"lr": -0.5}"#);
+        assert_eq!(pos_f64(&o, "lr", 0.1).unwrap_err().code, "out_of_range");
+        assert_eq!(in_range(0, 1, 10, "seeds").unwrap_err().code, "out_of_range");
+        assert_eq!(in_range(5, 1, 10, "seeds").unwrap(), 5);
+    }
+
+    #[test]
+    fn dataset_defaults_and_validation() {
+        let ds = dataset_from_obj(&obj("{}")).expect("default dataset");
+        match ds {
+            DatasetSpec::Synthetic(s) => {
+                assert_eq!((s.n, s.d, s.seed), (2000, 512, 1000));
+            }
+            _ => panic!("default must be synthetic"),
+        }
+        let e = dataset_from_obj(&obj(r#"{"dataset":{"kind":"synthetik"}}"#)).unwrap_err();
+        assert_eq!(e.did_you_mean.as_deref(), Some("synthetic"));
+        let e = dataset_from_obj(&obj(r#"{"dataset":{"kind":"synthetic","n":0}}"#)).unwrap_err();
+        assert_eq!(e.code, "out_of_range");
+    }
+}

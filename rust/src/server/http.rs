@@ -1,0 +1,234 @@
+//! Minimal HTTP/1.1 framing for `divebatch serve` — std only.
+//!
+//! This is deliberately not a general web server: it implements exactly
+//! the slice of HTTP/1.1 the trial API needs (request-line + headers +
+//! `Content-Length` bodies in; fixed responses or close-delimited JSONL
+//! streams out), with hard caps everywhere a client could make us
+//! allocate:
+//!
+//! * request head (request-line + headers) is capped at
+//!   [`MAX_HEAD_BYTES`] — longer heads are a 431;
+//! * bodies require `Content-Length` and are capped at
+//!   [`MAX_BODY_BYTES`] — larger declared or actual bodies are a 413;
+//! * `Transfer-Encoding: chunked` is rejected (411) rather than parsed;
+//! * every connection gets read/write timeouts so a stalled client
+//!   cannot pin a connection slot forever.
+//!
+//! Responses always send `Connection: close`: one request per
+//! connection keeps framing trivial and matches the trial-submission
+//! usage pattern (a client POSTs work and reads results to EOF).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cap on the request head (request-line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Cap on request bodies — far above any legitimate sweep request.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Per-connection socket timeout (both directions).
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A parsed request: method + path + lowercased headers + raw body.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name, if present.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.  `status` is what we answer with.
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            message: message.into(),
+        }
+    }
+}
+
+/// Read and frame one request from `stream`.
+///
+/// `Err` carries the status to answer with; an `Err` with status 0
+/// means the peer vanished (nothing useful to write back).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request, HttpError> {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+
+    // Accumulate until the blank line ending the head; bytes past it
+    // are the start of the body.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::new(431, "request head too large"));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(0, format!("read: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(0, "connection closed mid-request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(HttpError::new(400, "malformed request line"));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header {line:?}")));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    if headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(HttpError::new(411, "chunked bodies unsupported; send Content-Length"));
+    }
+
+    let content_length = match headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.as_str())
+    {
+        None => 0usize,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::new(400, format!("bad Content-Length {v:?}")))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::new(413, "request body too large"));
+    }
+
+    // Body: whatever followed the head in `buf`, then read the rest.
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    if body.len() > content_length {
+        return Err(HttpError::new(400, "body longer than Content-Length"));
+    }
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(0, format!("read body: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(400, "connection closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+        if body.len() > content_length {
+            return Err(HttpError::new(400, "body longer than Content-Length"));
+        }
+    }
+
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+/// Offset of the `\r\n\r\n` head terminator, if complete.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Reason phrase for the statuses this server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response and flush it.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Start a close-delimited streaming response (no `Content-Length`):
+/// the caller writes body lines and signals the end by closing the
+/// connection.  Used for sweep JSONL streams, where results are written
+/// as trials finish.
+pub fn write_stream_head(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nConnection: close\r\n\r\n",
+        status_text(status),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(16));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn status_texts_cover_emitted_codes() {
+        for s in [200, 400, 404, 405, 411, 413, 431, 500, 503] {
+            assert_ne!(status_text(s), "Unknown", "status {s} needs a phrase");
+        }
+    }
+}

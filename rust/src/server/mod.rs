@@ -1,0 +1,461 @@
+//! Training as a service: the `divebatch serve` subsystem.
+//!
+//! A std-only HTTP/1.1 trial server over the existing engine — no web
+//! framework, no async runtime, no new dependencies.  Clients POST
+//! trial and sweep requests as JSON; an adaptive admission layer
+//! ([`admission`]) coalesces queued requests into engine dispatches
+//! sized to the observed queue depth; results stream back as JSONL —
+//! one **canonical** [`crate::metrics::RunRecord`] line per trial
+//! (byte-identical to what an offline `divebatch train` of the same
+//! spec produces, at any `--jobs`/`--step-jobs` level), with typed
+//! error objects for failures.  The layers:
+//!
+//! * [`http`] — request framing with hard caps (head/body size,
+//!   timeouts); one request per connection, `Connection: close`.
+//! * [`api`] — strict validation: unknown fields get did-you-mean
+//!   suggestions, bad values get structured 400s naming the field.
+//! * [`admission`] — the adaptive batcher + dispatcher thread feeding
+//!   [`crate::engine::TrialRunner`], with an optional shared
+//!   [`crate::config::rescache::ResultsCache`] memoizing trials.
+//!
+//! Concurrency model: the accept loop is single-threaded and
+//! non-blocking; each accepted connection takes an
+//! [`crate::pool::OwnedSemaphorePermit`] from a `--max-clients`
+//! semaphore (or is answered 503 inline) and runs on its own thread,
+//! which blocks on its trial's result channel — so slow trials consume
+//! connection slots, never the accept loop.  Both shared caches (the
+//! runtime's compiled-executable cache and the results cache) are
+//! eviction-bounded with hit/miss/eviction counters, all exported at
+//! `GET /stats`.
+//!
+//! Endpoints:
+//!
+//! * `POST /trial`  — one spec -> one JSONL line (200), or a structured
+//!   400/503, or a `trial_failed` error body (500).
+//! * `POST /sweep`  — policies x seeds -> a close-delimited JSONL
+//!   stream in policy-major, seed-minor order.
+//! * `GET /stats`   — admission + cache + server gauges.
+//! * `GET /healthz` — liveness.
+//!
+//! Shutdown is graceful: SIGTERM/SIGINT (or [`ServerHandle::stop`])
+//! stops the accept loop, new submissions are refused with 503 while
+//! every admitted trial runs to completion, then the process exits 0.
+
+pub mod admission;
+pub mod api;
+pub mod http;
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::rescache::ResultsCache;
+use crate::pool::Semaphore;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use admission::{Admission, SubmitError};
+use api::ApiError;
+
+/// Process-wide stop flag, set by the SIGTERM/SIGINT handlers.
+pub static STOP: AtomicBool = AtomicBool::new(false);
+
+/// Accept-loop poll period while idle (and stop-flag latency bound).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Everything `divebatch serve` is configured by.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port).
+    pub addr: String,
+    /// Artifacts directory (manifest + compiled entries).
+    pub artifacts: String,
+    /// Engine jobs budget per admission dispatch (0 = all cores).
+    pub jobs: usize,
+    /// Concurrent connection cap; excess connections are answered 503.
+    pub max_clients: usize,
+    /// Admitted-but-unstarted request cap; excess submissions get 503.
+    pub max_queue: usize,
+    /// Upper bound for the adaptive admission batch size.
+    pub batch_max: usize,
+    /// Executable-cache entry cap (0 = unbounded).
+    pub exec_cache_entries: usize,
+    /// Executable-cache approximate-bytes cap (0 = unbounded).
+    pub exec_cache_bytes: usize,
+    /// Results-cache directory; `None` disables trial memoization.
+    pub results_dir: Option<String>,
+    /// Results-cache entry cap (0 = unbounded).
+    pub results_max_entries: usize,
+    /// Results-cache byte cap (0 = unbounded).
+    pub results_max_bytes: u64,
+}
+
+impl ServeConfig {
+    /// Defaults matching the `divebatch serve` CLI defaults.
+    pub fn new(addr: impl Into<String>, artifacts: impl Into<String>) -> ServeConfig {
+        ServeConfig {
+            addr: addr.into(),
+            artifacts: artifacts.into(),
+            jobs: 0,
+            max_clients: 64,
+            max_queue: 256,
+            batch_max: 32,
+            exec_cache_entries: 64,
+            exec_cache_bytes: 0,
+            results_dir: None,
+            results_max_entries: 256,
+            results_max_bytes: 0,
+        }
+    }
+}
+
+/// Shared state every connection thread sees.
+struct Ctx {
+    rt: Arc<Runtime>,
+    admission: Admission,
+    clients: Arc<Semaphore>,
+}
+
+/// A bound-but-not-yet-running server.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<Ctx>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle to a server running on a background thread (tests, mostly).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Trigger graceful shutdown and wait for the drain to finish.
+    pub fn stop(self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))?
+    }
+}
+
+impl Server {
+    /// Load the runtime, install cache bounds, start the admission
+    /// dispatcher, and bind the listener.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let rt = Arc::new(Runtime::load(&cfg.artifacts)?);
+        rt.set_exec_cache_limits(cfg.exec_cache_entries, cfg.exec_cache_bytes);
+        let results = cfg.results_dir.as_ref().map(|dir| {
+            ResultsCache::with_limits(dir, cfg.results_max_entries, cfg.results_max_bytes)
+        });
+        let admission = Admission::start(
+            rt.clone(),
+            cfg.jobs,
+            cfg.max_queue,
+            cfg.batch_max,
+            results,
+        );
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        Ok(Server {
+            listener,
+            ctx: Arc::new(Ctx {
+                rt,
+                admission,
+                clients: Arc::new(Semaphore::new(cfg.max_clients)),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// This server's stop flag: setting it makes [`Server::run`] drain
+    /// and return within one poll period.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop.  Returns after a graceful drain once the stop flag
+    /// (or the process-wide [`STOP`]) is set.
+    pub fn run(self) -> Result<()> {
+        self.listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) && !STOP.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // Connection sockets must not inherit O_NONBLOCK.
+                    let _ = stream.set_nonblocking(false);
+                    match self.ctx.clients.try_acquire_owned() {
+                        Some(permit) => {
+                            let ctx = self.ctx.clone();
+                            let mut stream = stream;
+                            conns.push(std::thread::spawn(move || {
+                                handle_connection(&mut stream, &ctx);
+                                drop(permit);
+                            }));
+                        }
+                        None => {
+                            let mut stream = stream;
+                            let body = ApiError::new(
+                                "too_many_clients",
+                                "(server)",
+                                "connection limit reached; retry",
+                            )
+                            .to_json()
+                            .to_string();
+                            let _ = http::write_response(
+                                &mut stream,
+                                503,
+                                "application/json",
+                                body.as_bytes(),
+                            );
+                        }
+                    }
+                    conns.retain(|h| !h.is_finished());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    conns.retain(|h| !h.is_finished());
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+            }
+        }
+        // Graceful drain: stop accepting, refuse new submissions while
+        // everything already admitted runs to completion, then wait for
+        // connection threads to finish writing their responses.
+        drop(self.listener);
+        self.ctx.admission.shutdown();
+        for h in conns {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Bind + run on a background thread; returns once the listener is
+    /// accepting.  In-process integration tests drive the server
+    /// through this.
+    pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle> {
+        let server = Server::bind(cfg)?;
+        let addr = server.local_addr()?;
+        let stop = server.stop_flag();
+        let thread = std::thread::Builder::new()
+            .name("divebatch-serve".into())
+            .spawn(move || server.run())
+            .context("spawning server thread")?;
+        Ok(ServerHandle { addr, stop, thread })
+    }
+}
+
+/// Install SIGTERM/SIGINT handlers that set [`STOP`], so `divebatch
+/// serve` drains instead of dying mid-trial.  Raw `signal(2)` through
+/// one extern declaration — this repo links no libc crate.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+    extern "C" fn on_signal(_signum: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGINT, on_signal);
+        let _ = signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+// ------------------------------------------------------------ routing
+
+fn handle_connection(stream: &mut TcpStream, ctx: &Ctx) {
+    let req = match http::read_request(stream) {
+        Ok(req) => req,
+        Err(e) => {
+            if e.status != 0 {
+                respond_error(
+                    stream,
+                    &ApiError::new("bad_request", "(http)", e.message).with_status(e.status),
+                );
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![("ok", Json::Bool(true))]).to_string();
+            let _ = http::write_response(stream, 200, "application/json", body.as_bytes());
+        }
+        ("GET", "/stats") => {
+            let body = stats_json(ctx).to_string();
+            let _ = http::write_response(stream, 200, "application/json", body.as_bytes());
+        }
+        ("POST", "/trial") => handle_trial(stream, ctx, &req.body),
+        ("POST", "/sweep") => handle_sweep(stream, ctx, &req.body),
+        (_, "/healthz" | "/stats" | "/trial" | "/sweep") => respond_error(
+            stream,
+            &ApiError::new(
+                "method_not_allowed",
+                "(http)",
+                format!("method {} not allowed on {}", req.method, req.path),
+            )
+            .with_status(405),
+        ),
+        (_, path) => respond_error(
+            stream,
+            &ApiError::new("not_found", "(http)", format!("no route {path:?}"))
+                .with_status(404),
+        ),
+    }
+}
+
+fn respond_error(stream: &mut TcpStream, err: &ApiError) {
+    let mut body = err.to_json().to_string();
+    body.push('\n');
+    let _ = http::write_response(stream, err.status, "application/json", body.as_bytes());
+}
+
+fn submit_error(kind: SubmitError) -> ApiError {
+    match kind {
+        SubmitError::QueueFull => {
+            ApiError::new("queue_full", "(server)", "admission queue full; retry")
+                .with_status(503)
+        }
+        SubmitError::Draining => {
+            ApiError::new("draining", "(server)", "server is shutting down").with_status(503)
+        }
+    }
+}
+
+fn handle_trial(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
+    let spec = match api::parse_body(body).and_then(|j| api::parse_trial(&j, &ctx.rt)) {
+        Ok(spec) => spec,
+        Err(e) => return respond_error(stream, &e),
+    };
+    let rx = match ctx.admission.submit(spec) {
+        Ok(rx) => rx,
+        Err(kind) => return respond_error(stream, &submit_error(kind)),
+    };
+    match rx.recv() {
+        Ok(Ok(rec)) => {
+            let mut line = rec.to_canonical_json().to_string();
+            line.push('\n');
+            let _ = http::write_response(stream, 200, "application/x-ndjson", line.as_bytes());
+        }
+        Ok(Err(msg)) => respond_error(
+            stream,
+            &ApiError::new("trial_failed", "(trial)", msg).with_status(500),
+        ),
+        Err(_) => respond_error(
+            stream,
+            &ApiError::new("internal", "(server)", "dispatcher unavailable").with_status(500),
+        ),
+    }
+}
+
+fn handle_sweep(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
+    let specs = match api::parse_body(body).and_then(|j| api::parse_sweep(&j, &ctx.rt)) {
+        Ok(specs) => specs,
+        Err(e) => return respond_error(stream, &e),
+    };
+    // Admit the whole sweep up front: a partial admission would answer
+    // with a JSONL stream missing trials, which no client could tell
+    // apart from success.  (Receivers of already-admitted trials are
+    // simply dropped on failure; the dispatcher's sends go nowhere.)
+    let mut rxs = Vec::with_capacity(specs.len());
+    for spec in specs {
+        match ctx.admission.submit(spec) {
+            Ok(rx) => rxs.push(rx),
+            Err(kind) => return respond_error(stream, &submit_error(kind)),
+        }
+    }
+    if http::write_stream_head(stream, 200, "application/x-ndjson").is_err() {
+        return;
+    }
+    for rx in rxs {
+        let line = match rx.recv() {
+            Ok(Ok(rec)) => rec.to_canonical_json().to_string(),
+            Ok(Err(msg)) => ApiError::new("trial_failed", "(trial)", msg).to_json().to_string(),
+            Err(_) => ApiError::new("internal", "(server)", "dispatcher unavailable")
+                .to_json()
+                .to_string(),
+        };
+        if stream.write_all(line.as_bytes()).is_err() || stream.write_all(b"\n").is_err() {
+            return; // client hung up; remaining results are dropped
+        }
+        let _ = stream.flush();
+    }
+}
+
+/// The `/stats` document: server gauges + admission counters + both
+/// cache services' bound/usage counters.
+fn stats_json(ctx: &Ctx) -> Json {
+    let n = |v: usize| Json::Num(v as f64);
+    let a = ctx.admission.stats();
+    let e = ctx.rt.exec_cache_stats();
+    let server = Json::obj(vec![
+        ("max_clients", n(ctx.clients.capacity())),
+        (
+            "active_clients",
+            n(ctx.clients.capacity() - ctx.clients.available()),
+        ),
+    ]);
+    let admission = Json::obj(vec![
+        ("queue_depth", n(a.queue_depth)),
+        ("batch_size", n(a.batch_size)),
+        ("batch_size_max_seen", n(a.batch_size_max_seen)),
+        ("adapt_events", n(a.adapt_events)),
+        ("batches_dispatched", n(a.batches_dispatched)),
+        ("submitted", n(a.submitted)),
+        ("rejected", n(a.rejected)),
+        ("trials_completed", n(a.trials_completed)),
+        ("trials_failed", n(a.trials_failed)),
+        ("results_hits", n(a.results_hits)),
+    ]);
+    let exec_cache = Json::obj(vec![
+        ("entries", n(e.entries)),
+        ("bytes", n(e.bytes)),
+        ("hits", n(e.hits)),
+        ("misses", n(e.misses)),
+        ("evictions", n(e.evictions)),
+        ("max_entries", n(e.max_entries)),
+        ("max_bytes", n(e.max_bytes)),
+    ]);
+    let results_cache = match ctx.admission.results_stats() {
+        None => Json::Null,
+        Some(r) => Json::obj(vec![
+            ("entries", n(r.entries)),
+            ("bytes", Json::Num(r.bytes as f64)),
+            ("hits", n(r.hits)),
+            ("misses", n(r.misses)),
+            ("stores", n(r.stores)),
+            ("evictions", n(r.evictions)),
+            ("max_entries", n(r.max_entries)),
+            ("max_bytes", Json::Num(r.max_bytes as f64)),
+        ]),
+    };
+    Json::obj(vec![
+        ("server", server),
+        ("admission", admission),
+        ("exec_cache", exec_cache),
+        ("results_cache", results_cache),
+    ])
+}

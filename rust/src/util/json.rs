@@ -199,16 +199,29 @@ fn write_escaped(s: &str, out: &mut String) {
 
 // ---------------------------------------------------------------- parsing
 
+/// Maximum container nesting the parser accepts.  The parser recurses
+/// per nesting level, so without a cap a hostile document (`"[[[[..."`)
+/// overflows the stack; 128 levels is far beyond anything this crate
+/// reads or writes (the artifacts manifest nests ~6 deep, run records
+/// 3) while keeping worst-case stack use trivially bounded.  This is a
+/// hard requirement for the server, which parses network-supplied bytes.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 /// Parse a complete JSON document (trailing whitespace allowed).
+///
+/// Total: every input either parses or yields a typed [`JsonError`] —
+/// never a panic, and never unbounded recursion (see [`MAX_DEPTH`]).
 pub fn parse(text: &str) -> Result<Json, JsonError> {
     let mut p = Parser {
         bytes: text.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.skip_ws();
     let v = p.value()?;
@@ -269,12 +282,25 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the container depth, rejecting documents nested deeper than
+    /// [`MAX_DEPTH`].  Paired with a manual decrement on container exit
+    /// so siblings don't accumulate depth.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -290,6 +316,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 _ => return Err(self.err("expected ',' or '}' in object")),
@@ -298,11 +325,13 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -313,6 +342,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
                 _ => return Err(self.err("expected ',' or ']' in array")),
@@ -486,6 +516,33 @@ mod tests {
         assert!(v.req_str("a").is_err());
         assert!(v.req("missing").is_err());
         assert_eq!(v.req_usize("a").unwrap(), 1);
+    }
+
+    #[test]
+    fn nesting_depth_is_capped_not_stack_overflowed() {
+        // Deeply nested documents get a typed error, not a blown stack:
+        // the first-nesting-over-the-cap is rejected before recursing
+        // further, so even a megabyte of '[' returns quickly.
+        for n in [MAX_DEPTH + 1, 10_000, 1_000_000] {
+            let e = parse(&"[".repeat(n)).unwrap_err();
+            assert!(e.message.contains("nesting"), "{e}");
+            let e = parse(&"{\"k\":".repeat(n)).unwrap_err();
+            assert!(e.message.contains("nesting"), "{e}");
+        }
+    }
+
+    #[test]
+    fn nesting_below_cap_parses_and_siblings_do_not_accumulate() {
+        // Exactly MAX_DEPTH levels is accepted.
+        let deep = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&deep).is_ok());
+        // One more is not.
+        let over = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&over).is_err());
+        // Depth is per-branch, not cumulative: thousands of shallow
+        // siblings are fine.
+        let wide = format!("[{}{{}}]", "{},".repeat(5000));
+        assert!(parse(&wide).is_ok());
     }
 
     #[test]

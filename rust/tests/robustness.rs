@@ -1,0 +1,206 @@
+//! Robustness suite for the two parsers a `divebatch serve` process
+//! exposes to untrusted bytes: the in-tree JSON parser
+//! ([`divebatch::util::json`], every request body) and the vendored HLO
+//! text parser (`vendor/xla`, every artifact a server operator points
+//! the runtime at).  Property-tested via the in-tree mini-proptest
+//! ([`divebatch::util::prop::forall`], seeded by `DIVEBATCH_PROP_SEED`):
+//! arbitrary bytes, truncations and point mutations must come back as
+//! typed errors — never a panic, never unbounded recursion or
+//! allocation.
+//!
+//! Each property wraps the parse in `catch_unwind`, so a regression
+//! shows up as a shrunk counterexample input, not a test harness abort.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use divebatch::util::json;
+use divebatch::util::prop::forall;
+
+/// A committed HLO fixture — real parser input to truncate and mutate.
+const HLO_FIXTURE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/fixtures/artifacts/tinylogreg8/train_plain_b4.hlo.txt"
+);
+
+/// True iff `f` returns (any result) without panicking.
+fn no_panic<F: FnOnce()>(f: F) -> bool {
+    catch_unwind(AssertUnwindSafe(f)).is_ok()
+}
+
+/// Largest char-boundary cut point <= `at`.
+fn boundary_cut(text: &str, at: usize) -> usize {
+    let mut cut = at.min(text.len());
+    while !text.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    cut
+}
+
+/// Compile `text` through the full serve-side HLO path: wrap the text,
+/// build the computation, compile on the interpreter backend.  Ok and
+/// Err are both acceptable; the property under test is "no panic".
+fn compile_hlo(text: &str) {
+    let proto = xla::HloModuleProto::from_text(text);
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let _ = xla::PjRtClient::interp().compile(&comp);
+}
+
+// --------------------------------------------------------------- JSON
+
+#[test]
+fn json_parse_survives_arbitrary_bytes() {
+    forall(
+        300,
+        |r| {
+            let len = r.below(64) as usize;
+            (0..len).map(|_| r.below(256)).collect::<Vec<u64>>()
+        },
+        |bytes| {
+            let raw: Vec<u8> = bytes.iter().map(|&b| b as u8).collect();
+            let text = String::from_utf8_lossy(&raw).into_owned();
+            no_panic(|| {
+                let _ = json::parse(&text);
+            })
+        },
+    );
+}
+
+#[test]
+fn json_parse_survives_truncations_of_valid_documents() {
+    // A document exercising every construct: nesting, escapes, numbers
+    // in exotic shapes, unicode.
+    let doc = r#"{"a":[1,-2.5e-3,true,null,"x\nyé"],"b":{"c":{"d":[{"e":1e308}]}},"f":"ümlaut"}"#;
+    assert!(json::parse(doc).is_ok(), "base document must parse");
+    forall(
+        200,
+        |r| r.below(doc.len() as u64 + 1) as usize,
+        |&at| {
+            let cut = boundary_cut(doc, at);
+            no_panic(|| {
+                let _ = json::parse(&doc[..cut]);
+            })
+        },
+    );
+}
+
+#[test]
+fn json_parse_survives_point_mutations_of_valid_documents() {
+    let doc = r#"{"model":"tinylogreg8","policy":"sgd:m=4","epochs":2,"dataset":{"kind":"synthetic","n":40,"d":8}}"#;
+    forall(
+        300,
+        |r| (r.below(doc.len() as u64), 32 + r.below(95)),
+        |&(pos, ch)| {
+            let mut bytes = doc.as_bytes().to_vec();
+            bytes[pos as usize] = ch as u8; // printable ASCII substitution
+            let text = String::from_utf8(bytes).expect("ascii stays utf-8");
+            no_panic(|| {
+                let _ = json::parse(&text);
+            })
+        },
+    );
+}
+
+#[test]
+fn json_depth_bound_is_an_error_not_a_stack_overflow() {
+    // 100k opens: must come back as a typed depth error immediately.
+    let deep = "[".repeat(100_000);
+    match json::parse(&deep) {
+        Err(e) => assert!(
+            e.message.contains("depth") || e.message.contains("nest"),
+            "depth rejection should say so: {e}"
+        ),
+        Ok(_) => panic!("unterminated 100k-deep array cannot be valid"),
+    }
+    // Mixed nesting with bodies, beyond the bound.
+    let deep = format!("{}1{}", "[{\"k\":".repeat(500), "}]".repeat(500));
+    assert!(json::parse(&deep).is_err(), "beyond MAX_DEPTH must error");
+    // ...and a comfortably-deep valid document still parses.
+    let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+    assert!(json::parse(&ok).is_ok(), "depth 100 is within bounds");
+}
+
+// ---------------------------------------------------------------- HLO
+
+#[test]
+fn hlo_compile_survives_truncations_of_a_real_module() {
+    let text = std::fs::read_to_string(HLO_FIXTURE).expect("committed fixture");
+    // Whole-file sanity: the untruncated module must still compile.
+    assert!(
+        catch_unwind(AssertUnwindSafe(|| {
+            let proto = xla::HloModuleProto::from_text(&text);
+            let comp = xla::XlaComputation::from_proto(&proto);
+            xla::PjRtClient::interp().compile(&comp).is_ok()
+        }))
+        .unwrap_or(false),
+        "fixture module must compile cleanly"
+    );
+    forall(
+        150,
+        |r| r.below(text.len() as u64 + 1) as usize,
+        |&at| {
+            let cut = boundary_cut(&text, at);
+            no_panic(|| compile_hlo(&text[..cut]))
+        },
+    );
+}
+
+#[test]
+fn hlo_compile_survives_point_mutations_of_a_real_module() {
+    let text = std::fs::read_to_string(HLO_FIXTURE).expect("committed fixture");
+    forall(
+        200,
+        |r| (r.below(text.len() as u64), 32 + r.below(95)),
+        |&(pos, ch)| {
+            let mut bytes = text.as_bytes().to_vec();
+            bytes[pos as usize] = ch as u8;
+            let mutated = String::from_utf8(bytes).expect("ascii fixture stays utf-8");
+            no_panic(|| compile_hlo(&mutated))
+        },
+    );
+}
+
+#[test]
+fn hlo_compile_rejects_hostile_modules_with_errors_not_panics() {
+    // Hand-picked adversarial inputs: each historically a panic class
+    // (slicing, indexing, or arithmetic overflow) somewhere in a naive
+    // HLO text parser.
+    // (text, must_reject): every entry must not panic; the flagged ones
+    // must additionally come back as typed compile errors.
+    let hostile: &[(&str, bool)] = &[
+        ("", true),
+        ("HloModule", true),
+        ("HloModule x", true),
+        ("ENTRY main {", true),
+        ("HloModule x\n\nENTRY main {\n}", true),
+        // Shape element-count overflow: usize::MAX x 2 elements — the
+        // parse-time checked_mul guard must catch this, not a debug
+        // overflow panic in `Shape::elements`.
+        (
+            "HloModule x\n\nENTRY main.1 {\n  ROOT c.1 = f32[18446744073709551615,2] constant(0)\n}",
+            true,
+        ),
+        // Huge-but-individually-parseable dims whose product explodes.
+        (
+            "HloModule x\n\nENTRY main.1 {\n  ROOT c.1 = f32[4294967295,4294967295] constant(0)\n}",
+            true,
+        ),
+        // Unbalanced/garbled operator syntax: no panic required; typed
+        // rejection expected but the exact error path may vary.
+        ("HloModule x\n\nENTRY main.1 {\n  ROOT a.1 = f32[] add(\n}", false),
+        ("HloModule x\n\nENTRY main.1 {\n  = = =\n}", false),
+        // Parameter index out of range (may be deferred to execution).
+        ("HloModule x\n\nENTRY main.1 {\n  ROOT p.1 = f32[2] parameter(99)\n}", false),
+    ];
+    for &(text, must_reject) in hostile {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let proto = xla::HloModuleProto::from_text(text);
+            let comp = xla::XlaComputation::from_proto(&proto);
+            xla::PjRtClient::interp().compile(&comp).err()
+        }));
+        match outcome {
+            Err(_) => panic!("hostile module panicked the compiler: {text:?}"),
+            Ok(Some(_err)) => {} // typed rejection
+            Ok(None) => assert!(!must_reject, "hostile module compiled: {text:?}"),
+        }
+    }
+}

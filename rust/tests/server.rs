@@ -1,0 +1,358 @@
+//! Integration suite for `divebatch serve`: serving equivalence,
+//! concurrent load with observable batch adaptation, strict request
+//! validation, cache bounds, sweep streaming, graceful shutdown.
+//!
+//! Everything runs in-process against [`divebatch::Server::spawn`] on
+//! the committed fixtures — no network assumptions beyond loopback, no
+//! external process (CI's load smoke covers the spawned-binary path).
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use divebatch::config::{flops_per_sample, DatasetSpec};
+use divebatch::coordinator::{LrSchedule, PolicyRegistry, TrainConfig};
+use divebatch::data::SyntheticSpec;
+use divebatch::engine::TrialSpec;
+use divebatch::util::json::{self, Json};
+use divebatch::{ClusterSpec, ServeConfig, Server};
+
+// ------------------------------------------------------------ helpers
+
+/// One-shot HTTP client: send a request, read to EOF (the server is
+/// `Connection: close`), return (status, body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    s.write_all(head.as_bytes()).expect("write head");
+    s.write_all(body.as_bytes()).expect("write body");
+    s.flush().expect("flush");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response: {raw:?}"));
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn post_trial(addr: SocketAddr, body: &str) -> (u16, String) {
+    request(addr, "POST", "/trial", body)
+}
+
+fn get_stats(addr: SocketAddr) -> Json {
+    let (status, body) = request(addr, "GET", "/stats", "");
+    assert_eq!(status, 200, "stats must serve: {body}");
+    json::parse(&body).expect("stats is valid JSON")
+}
+
+fn stat(j: &Json, section: &str, key: &str) -> f64 {
+    j.get(section)
+        .and_then(|s| s.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing /stats field {section}.{key}"))
+}
+
+/// The error envelope of a rejection body.
+fn error_of(body: &str) -> Json {
+    json::parse(body.trim())
+        .unwrap_or_else(|e| panic!("error body must be JSON ({e}): {body:?}"))
+        .get("error")
+        .cloned()
+        .expect("error envelope")
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig::new("127.0.0.1:0", common::fixtures_dir())
+}
+
+/// The request body all equivalence tests use, parameterized by seed.
+/// tinylogreg8 is the committed d=8 fixture model; the dataset matches.
+fn trial_body(seed: usize, epochs: usize) -> String {
+    format!(
+        r#"{{"model":"tinylogreg8","policy":"sgd:m=4","seed":{seed},"epochs":{epochs},
+            "dataset":{{"kind":"synthetic","n":40,"d":8,"noise":0.1,"seed":1000}}}}"#
+    )
+}
+
+/// The offline twin of [`trial_body`]: same spec through the engine
+/// directly, no server involved.
+fn offline_spec(seed: u64, epochs: usize) -> TrialSpec {
+    let policy = PolicyRegistry::builtin().parse("sgd:m=4").expect("policy");
+    let schedule = LrSchedule {
+        base: 0.1,
+        decay: 0.75,
+        every: 20,
+        rescale_with_batch: false,
+    };
+    let mut cfg = TrainConfig::new("tinylogreg8", policy, schedule, epochs);
+    cfg.cluster = ClusterSpec {
+        workers: 4,
+        div_overhead: 0.9,
+    };
+    cfg.verbose = false;
+    TrialSpec {
+        cfg,
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 40,
+            d: 8,
+            noise: 0.1,
+            seed: 1000,
+        }),
+        flops_per_sample: flops_per_sample("tinylogreg8"),
+        trial: seed,
+    }
+}
+
+fn offline_canonical(seed: u64, epochs: usize) -> String {
+    let rt = common::runtime();
+    let rec = offline_spec(seed, epochs).execute(&rt).expect("offline trial");
+    rec.to_canonical_json().to_string()
+}
+
+// -------------------------------------------------------------- tests
+
+/// Satellite 3 (single-client half): a trial served over HTTP is
+/// byte-identical to the offline engine's canonical record.
+#[test]
+fn served_trial_matches_offline_canonical_record() {
+    let handle = Server::spawn(serve_cfg()).expect("spawn");
+    let (status, body) = post_trial(handle.addr(), &trial_body(0, 2));
+    assert_eq!(status, 200, "trial must succeed: {body}");
+    assert_eq!(body.trim_end(), offline_canonical(0, 2), "served != offline");
+    handle.stop().expect("graceful stop");
+}
+
+/// The acceptance-criteria load test: >= 64 concurrent clients against
+/// a live server — every response is a valid canonical record, served
+/// bytes still match offline bytes under load, and `/stats` shows the
+/// admission batch size actually adapted to queue depth.
+#[test]
+fn concurrent_load_valid_adapting_and_equivalent() {
+    let mut cfg = serve_cfg();
+    cfg.max_clients = 128;
+    cfg.max_queue = 512;
+    cfg.jobs = 2;
+    let handle = Server::spawn(cfg).expect("spawn");
+    let addr = handle.addr();
+
+    const CLIENTS: usize = 64;
+    let responses: Vec<(usize, u16, String)> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for i in 0..CLIENTS {
+            joins.push(s.spawn(move || {
+                let (status, body) = post_trial(addr, &trial_body(i % 8, 1));
+                (i, status, body)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client")).collect()
+    });
+
+    // Every response is a 200 carrying one parseable record line, and
+    // all clients that asked for the same seed got identical bytes.
+    let mut by_seed: Vec<Option<String>> = vec![None; 8];
+    for (i, status, body) in &responses {
+        assert_eq!(*status, 200, "client {i} failed: {body}");
+        let line = body.trim_end();
+        let rec = json::parse(line).expect("record line parses");
+        assert!(rec.get("epochs").is_some(), "client {i}: not a record: {line}");
+        match &by_seed[i % 8] {
+            None => by_seed[i % 8] = Some(line.to_string()),
+            Some(prev) => assert_eq!(prev, line, "same seed, different bytes"),
+        }
+    }
+    // ...and under-load bytes equal offline bytes.
+    assert_eq!(
+        by_seed[0].as_deref().expect("seed 0 served"),
+        offline_canonical(0, 1),
+        "served-under-load != offline"
+    );
+
+    let stats = get_stats(addr);
+    assert!(stat(&stats, "admission", "submitted") >= CLIENTS as f64);
+    assert_eq!(stat(&stats, "admission", "trials_failed"), 0.0);
+    assert!(
+        stat(&stats, "admission", "batch_size_max_seen") >= 2.0,
+        "64 concurrent clients must force the admission batch above 1: {stats:?}",
+    );
+    assert!(stat(&stats, "admission", "adapt_events") >= 1.0);
+    assert!(stat(&stats, "admission", "batches_dispatched") >= 1.0);
+    // The exec cache saw real traffic and reports it.
+    assert!(stat(&stats, "exec_cache", "hits") >= 1.0);
+    assert!(stat(&stats, "exec_cache", "entries") >= 1.0);
+    handle.stop().expect("graceful stop");
+}
+
+/// Satellite 1: the strict-validation error matrix — every rejection is
+/// a structured 400-class answer naming the field, never a 500.
+#[test]
+fn validation_rejections_are_typed() {
+    let handle = Server::spawn(serve_cfg()).expect("spawn");
+    let addr = handle.addr();
+
+    // Unknown field, with a did-you-mean from the registry machinery.
+    let (status, body) =
+        post_trial(addr, r#"{"model":"tinylogreg8","policy":"sgd:m=4","epochz":3}"#);
+    assert_eq!(status, 400);
+    let e = error_of(&body);
+    assert_eq!(e.get("code").unwrap().as_str(), Some("unknown_field"));
+    assert_eq!(e.get("field").unwrap().as_str(), Some("epochz"));
+    assert_eq!(e.get("did_you_mean").unwrap().as_str(), Some("epochs"));
+
+    // Malformed policy spec: the registry's own did-you-mean flows through.
+    let (status, body) = post_trial(addr, r#"{"model":"tinylogreg8","policy":"sdg:m=4"}"#);
+    assert_eq!(status, 400);
+    let e = error_of(&body);
+    assert_eq!(e.get("code").unwrap().as_str(), Some("bad_policy"));
+    let msg = e.get("message").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("sgd"), "policy error should suggest sgd: {msg}");
+
+    // Unknown model, suggesting the fixture model.
+    let (status, body) = post_trial(addr, r#"{"model":"tinylogreg","policy":"sgd:m=4"}"#);
+    assert_eq!(status, 400);
+    let e = error_of(&body);
+    assert_eq!(e.get("code").unwrap().as_str(), Some("unknown_model"));
+    assert_eq!(e.get("did_you_mean").unwrap().as_str(), Some("tinylogreg8"));
+
+    // Out-of-range value names the field.
+    let (status, body) =
+        post_trial(addr, r#"{"model":"tinylogreg8","policy":"sgd:m=4","epochs":0}"#);
+    assert_eq!(status, 400);
+    let e = error_of(&body);
+    assert_eq!(e.get("code").unwrap().as_str(), Some("out_of_range"));
+    assert_eq!(e.get("field").unwrap().as_str(), Some("epochs"));
+
+    // Wrong type.
+    let (status, body) =
+        post_trial(addr, r#"{"model":"tinylogreg8","policy":"sgd:m=4","epochs":"many"}"#);
+    assert_eq!(status, 400);
+    assert_eq!(error_of(&body).get("code").unwrap().as_str(), Some("bad_type"));
+
+    // Missing required field.
+    let (status, body) = post_trial(addr, r#"{"model":"tinylogreg8"}"#);
+    assert_eq!(status, 400);
+    let e = error_of(&body);
+    assert_eq!(e.get("code").unwrap().as_str(), Some("missing_field"));
+    assert_eq!(e.get("field").unwrap().as_str(), Some("policy"));
+
+    // Malformed JSON, non-object JSON, and pathological nesting.
+    let deep = "[".repeat(4000) + &"]".repeat(4000);
+    for bad in ["{not json", "[1,2]", deep.as_str()] {
+        let (status, body) = post_trial(addr, bad);
+        assert_eq!(status, 400, "body {:?} must 400: {body}", &bad[..bad.len().min(20)]);
+        let code = error_of(&body).get("code").unwrap().as_str().unwrap().to_string();
+        assert!(code == "bad_json" || code == "bad_type", "typed code, got {code}");
+    }
+
+    // Routing errors are typed too.
+    let (status, body) = request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    assert_eq!(error_of(&body).get("code").unwrap().as_str(), Some("not_found"));
+    let (status, body) = request(addr, "GET", "/trial", "");
+    assert_eq!(status, 405);
+    assert_eq!(
+        error_of(&body).get("code").unwrap().as_str(),
+        Some("method_not_allowed")
+    );
+
+    handle.stop().expect("graceful stop");
+}
+
+/// Tentpole: both shared caches respect their bounds under serve
+/// traffic — entry counts stay at/below the caps, evictions are
+/// observed, and the results cache demonstrably answers repeats.
+#[test]
+fn shared_caches_stay_bounded_and_memoize() {
+    let results_dir: PathBuf = std::env::temp_dir().join(format!(
+        "divebatch-serve-cache-test-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&results_dir);
+
+    let mut cfg = serve_cfg();
+    // tinylogreg8's warmup surface alone is ~6 executables, so a cap of
+    // 2 forces evictions on the very first trial.
+    cfg.exec_cache_entries = 2;
+    cfg.results_dir = Some(results_dir.to_string_lossy().into_owned());
+    cfg.results_max_entries = 2;
+    let handle = Server::spawn(cfg).expect("spawn");
+    let addr = handle.addr();
+
+    // Three distinct specs -> three results-cache stores under a cap of 2.
+    for seed in 0..3 {
+        let (status, body) = post_trial(addr, &trial_body(seed, 1));
+        assert_eq!(status, 200, "seed {seed}: {body}");
+    }
+    // A repeat of the last spec must come back from the results cache,
+    // byte-identical to the first serving.
+    let (_, first) = post_trial(addr, &trial_body(2, 1));
+    let (status, again) = post_trial(addr, &trial_body(2, 1));
+    assert_eq!(status, 200);
+    assert_eq!(first, again, "cache hit must serve identical bytes");
+
+    let stats = get_stats(addr);
+    assert!(
+        stat(&stats, "exec_cache", "entries") <= 2.0,
+        "exec cache over cap: {stats:?}"
+    );
+    assert!(stat(&stats, "exec_cache", "evictions") >= 1.0);
+    assert!(stat(&stats, "results_cache", "entries") <= 2.0);
+    assert!(stat(&stats, "results_cache", "evictions") >= 1.0);
+    assert!(stat(&stats, "results_cache", "stores") >= 3.0);
+    assert!(stat(&stats, "results_cache", "hits") >= 1.0);
+    assert!(stat(&stats, "admission", "results_hits") >= 1.0);
+
+    handle.stop().expect("graceful stop");
+    let _ = std::fs::remove_dir_all(&results_dir);
+}
+
+/// Satellite 3 (sweep half): a sweep streams one canonical line per
+/// trial in policy-major, seed-minor order — the offline expansion
+/// order — and each line equals its offline twin.
+#[test]
+fn sweep_streams_offline_identical_lines_in_order() {
+    let handle = Server::spawn(serve_cfg()).expect("spawn");
+    let body = r#"{"model":"tinylogreg8","policies":["sgd:m=4","sgd:m=8"],"seeds":2,
+                   "epochs":1,"dataset":{"kind":"synthetic","n":40,"d":8,"noise":0.1,"seed":1000}}"#;
+    let (status, out) = request(handle.addr(), "POST", "/sweep", body);
+    assert_eq!(status, 200, "sweep failed: {out}");
+    let lines: Vec<&str> = out.trim_end().lines().collect();
+    assert_eq!(lines.len(), 4, "2 policies x 2 seeds = 4 lines: {out}");
+
+    let rt = common::runtime();
+    let mut expected = Vec::new();
+    for policy in ["sgd:m=4", "sgd:m=8"] {
+        for seed in 0..2u64 {
+            let mut spec = offline_spec(seed, 1);
+            spec.cfg.policy = PolicyRegistry::builtin().parse(policy).expect("policy");
+            expected.push(spec.execute(&rt).expect("offline").to_canonical_json().to_string());
+        }
+    }
+    assert_eq!(lines, expected, "sweep stream != offline expansion");
+    handle.stop().expect("graceful stop");
+}
+
+/// Satellite 5's in-process half: a stopping server drains (the stop
+/// call returns cleanly) and then refuses new connections.
+#[test]
+fn graceful_stop_drains_then_refuses() {
+    let handle = Server::spawn(serve_cfg()).expect("spawn");
+    let addr = handle.addr();
+    let (status, _) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    handle.stop().expect("graceful stop");
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "stopped server must refuse connections"
+    );
+}

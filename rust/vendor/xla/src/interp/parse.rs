@@ -82,6 +82,12 @@ pub(crate) fn coords_of(mut flat: usize, dims: &[usize], st: &[usize]) -> Vec<us
     c
 }
 
+/// Cap on declared shape element counts: large enough for any model this
+/// interpreter will ever see (the fixtures are tiny; real use is bounded
+/// by host memory anyway), small enough that `dims.iter().product()`
+/// can never overflow once a shape has parsed.
+const MAX_SHAPE_ELEMENTS: usize = 1 << 33;
+
 fn parse_dense_shape(tok: &str) -> Result<Shape> {
     let tok = tok.trim();
     let (dt, rest) = tok
@@ -109,6 +115,20 @@ fn parse_dense_shape(tok: &str) -> Result<Shape> {
                     .map_err(|_| err(format!("bad dimension {d:?} in shape {tok:?}")))?,
             );
         }
+    }
+    // Reject element counts that overflow (or would plausibly exhaust
+    // memory) here at parse time, so `Shape::elements()` and downstream
+    // buffer sizing stay panic-free on hostile input.
+    let mut elems: usize = 1;
+    for &d in &dims {
+        elems = elems
+            .checked_mul(d)
+            .filter(|&e| e <= MAX_SHAPE_ELEMENTS)
+            .ok_or_else(|| {
+                err(format!(
+                    "shape {tok:?} exceeds {MAX_SHAPE_ELEMENTS} elements"
+                ))
+            })?;
     }
     Ok(Shape { dtype, dims })
 }

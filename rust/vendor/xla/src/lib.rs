@@ -258,6 +258,16 @@ impl HloModuleProto {
             text: Arc::new(text),
         })
     }
+
+    /// Wrap in-memory HLO text.  Like [`HloModuleProto::from_text_file`],
+    /// this performs no validation — op-level validation happens at
+    /// [`PjRtClient::compile`].  Exists for callers (and the robustness
+    /// test suite) that already hold the text.
+    pub fn from_text(text: &str) -> HloModuleProto {
+        HloModuleProto {
+            text: Arc::new(text.to_string()),
+        }
+    }
 }
 
 /// An XLA computation wrapping a parsed module.
