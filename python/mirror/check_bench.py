@@ -4,8 +4,10 @@ Usage: check_bench.py NEW_BENCH_JSON COMMITTED_BENCH_JSON
 
 Works for any bench emitting the ``{"entries": {key: {"speedup": x}}}``
 schema — today ``perf_interp`` (BENCH_4.json: compiled interpreter vs
-the reference evaluator) and ``perf_step`` (BENCH_5.json: sharded step
-executor vs the serial loop).  Fails (exit 1) if any baseline entry's
+the reference evaluator), ``perf_step`` (BENCH_5.json: sharded step
+executor vs the serial loop), and ``perf_interp_simd`` (BENCH_6.json:
+SIMD tier vs scalar tier of the compiled interpreter, both bit-identical
+by the pinned-lanes contract).  Fails (exit 1) if any baseline entry's
 speedup regressed more than 2x.  The comparison uses **speedup** (two
 paths measured in the same process) rather than raw ns/step: the ratio
 is machine-invariant, so a baseline blessed on faster or slower hardware

@@ -10,11 +10,18 @@ numeric semantics as the compiled register program
 * transcendentals go through :mod:`mirror.fmath` (the bit-exact mirror of
   interp/fmath.rs) — never numpy's own exp/log;
 * ``maximum``/``minimum`` mirror Rust ``f32::max``/``min`` (NaN-ignoring);
-* ``dot`` accumulates each output element in ascending-k order
-  (mul-then-add, no FMA), exactly like kernels::dot;
-* ``reduce`` folds flat-ascending per output element, exactly like
-  kernels::reduce; multi-op regions are evaluated per element with f32
-  scalar semantics (the scalar register program's arithmetic).
+* ``dot`` accumulates each output element into 8 pinned lanes —
+  contribution ``kk`` lands in lane ``kk % 8``, ascending ``kk`` within
+  each lane, mul-then-add (no FMA) — then folds all 8 lanes in the fixed
+  order ``((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))``.  This is the single
+  lanes contract every kernels::dot variant implements in both the SIMD
+  and scalar interpreter tiers, so the mirror needs exactly one dot;
+* ``reduce``: add-reductions whose output map is grouped
+  (``map[i] == i // group``, e.g. trailing-dim sums) use the same 8-lane
+  pinned accumulation with ``out = init + fold``; every other reduce
+  folds flat-ascending per output element, exactly like kernels::reduce;
+  multi-op regions are evaluated per element with f32 scalar semantics
+  (the scalar register program's arithmetic).
 
 Data movement (broadcast/transpose/slice/pad/concatenate) is exact in any
 implementation, so numpy indexing is used directly.
@@ -326,13 +333,25 @@ class Module:
         for k, d in enumerate(keep):
             coord = (idx // strides[d]) % dims[d]
             of += coord * out_strides[k]
-        if fast == "add" and keep and set(red) == {len(dims) - 1}:
-            # Vectorized fast path for trailing-dim sums: per out element
-            # the contributions are the trailing k in ascending order —
-            # identical to the flat walk.
-            r = data.reshape(out_elems, dims[-1])
-            for k in range(dims[-1]):
-                acc = acc + r[:, k]
+        grouped = (
+            fast == "add"
+            and flat.size > 0
+            and out_elems > 0
+            and flat.size % out_elems == 0
+            and np.array_equal(of, idx // (flat.size // out_elems))
+        )
+        if grouped:
+            # Grouped add reduction (map[i] == i // group, e.g. trailing-dim
+            # sums): mirror of kernels::reduce_grouped_lanes.  Contribution
+            # kk goes to lane kk % 8 in ascending order; all 8 lanes are
+            # folded ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7)); out = init+fold.
+            group = flat.size // out_elems
+            r = flat.reshape(out_elems, group)
+            lanes = [np.zeros(out_elems, dtype=np.float32) for _ in range(8)]
+            with np.errstate(all="ignore"):
+                for kk in range(group):
+                    lanes[kk % 8] = lanes[kk % 8] + r[:, kk]
+                acc = acc + _fold8(lanes)
             return acc.reshape(out_dims)
         for i in range(flat.size):
             o = int(of[i])
@@ -525,11 +544,22 @@ def _dot(a, b, attrs):
     out_dims = tuple(a.shape[d] for d in range(a.ndim) if d != lc) + tuple(
         b.shape[d] for d in range(b.ndim) if d != rc
     )
-    acc = np.zeros((l2.shape[0], r2.shape[1]), dtype=np.float32)
-    for kk in range(k):
-        with np.errstate(all="ignore"):
-            acc = acc + l2[:, kk : kk + 1] * r2[kk : kk + 1, :]
+    # Pinned 8-lane accumulation (the contract shared by every compiled
+    # dot variant): contribution kk lands in lane kk % 8, ascending kk,
+    # mul then add (no FMA), then the fixed hfold8 tree fold.
+    lanes = [np.zeros((l2.shape[0], r2.shape[1]), dtype=np.float32) for _ in range(8)]
+    with np.errstate(all="ignore"):
+        for kk in range(k):
+            lanes[kk % 8] = lanes[kk % 8] + l2[:, kk : kk + 1] * r2[kk : kk + 1, :]
+        acc = _fold8(lanes)
     return acc.reshape(out_dims)
+
+
+def _fold8(lanes):
+    # KEEP IN SYNC with kernels::hfold8: ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7)).
+    return ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3])) + (
+        (lanes[4] + lanes[5]) + (lanes[6] + lanes[7])
+    )
 
 
 # ---------------------------------------------------------- entry wrappers

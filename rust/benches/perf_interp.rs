@@ -9,7 +9,9 @@
 //! pre-PR evaluator) — and writes `BENCH_4.json` at the repo root:
 //!
 //! ```text
-//! entries.<key>.ns_per_step      compiled path, mean ns per execution
+//! entries.<key>.ns_per_step      compiled path, median ns per execution
+//!                                (median-of-N, N >= 20 after 5 warm-up
+//!                                iterations — robust to runner hiccups)
 //! entries.<key>.steps_per_sec    1e9 / ns_per_step
 //! entries.<key>.ref_ns_per_step  reference path, same inputs, same run
 //! entries.<key>.speedup          ref / compiled
@@ -109,16 +111,16 @@ fn main() -> anyhow::Result<()> {
             exe.execute_reference(&inputs).unwrap();
         });
 
-        let ns = compiled.mean_s * 1e9;
-        let ref_ns = reference.mean_s * 1e9;
+        let ns = compiled.median_s * 1e9;
+        let ref_ns = reference.median_s * 1e9;
         let speedup = ref_ns / ns;
         if key == "train_div_b8" {
             div_b8_speedup = Some(speedup);
         }
         println!(
             "{key:<16} {:>14} {:>14} {:>8.1}x {:>13}",
-            fmt_time(compiled.mean_s),
-            fmt_time(reference.mean_s),
+            fmt_time(compiled.median_s),
+            fmt_time(reference.median_s),
             speedup,
             allocs_proxy
         );

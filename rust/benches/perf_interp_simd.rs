@@ -1,0 +1,156 @@
+//! Bench: **P6 (§Perf)** — the SIMD execution tier vs the scalar tier of
+//! the compiled interpreter, on the committed steplogreg8 fixtures.
+//!
+//! This is the PR-7 accountability bench.  Both tiers run the SAME
+//! compiled register program ([`xla::PjRtLoadedExecutable`]) — the tier
+//! only swaps kernel strategy (8-lane blocked loops, cost-model-selected
+//! dot variants, AVX where the CPU has it, vs plain scalar loops over
+//! the identical pinned-lanes contract) — so the ratio isolates exactly
+//! what this PR added, and both numerators produce bit-identical outputs
+//! (the `differential_interp` suite enforces that).  Every steplogreg8
+//! entry is timed at both tiers and `BENCH_6.json` is written at the
+//! repo root:
+//!
+//! ```text
+//! entries.<key>.ns_per_step         SIMD tier, median ns per execution
+//!                                   (median-of-N, N >= 20 after 5
+//!                                   warm-up iterations)
+//! entries.<key>.ns_per_step_scalar  scalar tier, same inputs, same run
+//! entries.<key>.speedup             scalar / simd
+//! ```
+//!
+//! Target: `train_div_b64` speedup >= 4x (the ISSUE-7 acceptance bar).
+//! The committed BENCH_6.json is the regression baseline: CI's perf-smoke
+//! step re-runs this bench and fails via python/mirror/check_bench.py if
+//! any entry's `speedup` drops below half its committed value.  The
+//! ratio compares two in-process code paths on the same machine, so the
+//! gate is machine-invariant; raw ns_per_step is recorded for humans.
+//! To re-bless after an intentional change, run the bench and commit the
+//! refreshed BENCH_6.json.
+//!
+//! Env knobs: `BENCH_OUT` overrides the output path;
+//! `DIVEBATCH_PERF_ENFORCE=1` makes the process exit non-zero when the
+//! train_div_b64 target is missed (CI sets it).  `DIVEBATCH_INTERP_TIER`
+//! is deliberately ignored here — the bench pins each side's tier
+//! explicitly through [`xla::PjRtLoadedExecutable::execute_with_tier`].
+//!
+//! Run: `cargo bench --bench perf_interp_simd`
+
+use divebatch::bench::{bench_header, fmt_time, Bencher};
+use divebatch::runtime::{Dtype, Manifest, TensorSpec};
+use divebatch::util::json::Json;
+use divebatch::util::rng::Rng;
+
+const TARGET_SPEEDUP: f64 = 4.0;
+
+fn fixtures_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/artifacts").to_string()
+}
+
+fn default_out() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_6.json").to_string()
+}
+
+fn input_literal(spec: &TensorSpec, rng: &mut Rng) -> xla::Literal {
+    let n = spec.elements();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    match spec.dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        Dtype::S32 => {
+            let v: Vec<i32> = (0..n).map(|_| rng.range(0, 2) as i32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_header(
+        "perf_interp_simd",
+        "P6: SIMD tier vs scalar tier of the compiled interpreter \
+         (steplogreg8 fixtures); writes BENCH_6.json",
+    );
+    let manifest = Manifest::load(fixtures_dir())?;
+    let model = manifest.model("steplogreg8")?.clone();
+    let client = xla::PjRtClient::interp();
+    let b = Bencher {
+        warmup_iters: 5,
+        min_iters: 20,
+        max_iters: 20_000,
+        target_s: 0.5,
+    };
+
+    let mut entries: Vec<(&str, Json)> = Vec::new();
+    let mut div_b64_speedup = None;
+    println!(
+        "{:<16} {:>14} {:>14} {:>9}",
+        "entry", "simd", "scalar", "speedup"
+    );
+    for (key, info) in &model.entries {
+        let path = manifest.path(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let mut rng = Rng::new(0x51D6);
+        let inputs: Vec<xla::Literal> = info
+            .inputs
+            .iter()
+            .map(|spec| input_literal(spec, &mut rng))
+            .collect();
+
+        let simd = b.run(&format!("{key} simd"), None, || {
+            exe.execute_with_tier(&inputs, xla::InterpTier::Simd).unwrap();
+        });
+        let scalar = b.run(&format!("{key} scalar"), None, || {
+            exe.execute_with_tier(&inputs, xla::InterpTier::Scalar)
+                .unwrap();
+        });
+
+        let ns = simd.median_s * 1e9;
+        let scalar_ns = scalar.median_s * 1e9;
+        let speedup = scalar_ns / ns;
+        if key == "train_div_b64" {
+            div_b64_speedup = Some(speedup);
+        }
+        println!(
+            "{key:<16} {:>14} {:>14} {:>8.1}x",
+            fmt_time(simd.median_s),
+            fmt_time(scalar.median_s),
+            speedup
+        );
+        entries.push((
+            key.as_str(),
+            Json::obj(vec![
+                ("ns_per_step", Json::Num(ns)),
+                ("ns_per_step_scalar", Json::Num(scalar_ns)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_interp_simd".into())),
+        ("model", Json::Str("steplogreg8".into())),
+        ("target_speedup_train_div_b64", Json::Num(TARGET_SPEEDUP)),
+        ("entries", Json::obj(entries)),
+    ]);
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| default_out());
+    std::fs::write(&out_path, doc.to_string())?;
+    println!();
+    println!("wrote {out_path}");
+
+    let speedup = div_b64_speedup.expect("train_div_b64 entry present in fixtures");
+    if speedup < TARGET_SPEEDUP {
+        eprintln!(
+            "WARNING: train_div_b64 SIMD-over-scalar speedup {speedup:.1}x is below \
+             the {TARGET_SPEEDUP}x target (ISSUE-7 acceptance bar)"
+        );
+        if std::env::var("DIVEBATCH_PERF_ENFORCE").is_ok_and(|v| v == "1") {
+            std::process::exit(1);
+        }
+    } else {
+        println!("train_div_b64 SIMD speedup {speedup:.1}x (target {TARGET_SPEEDUP}x) — OK");
+    }
+    Ok(())
+}

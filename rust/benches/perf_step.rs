@@ -10,6 +10,8 @@
 //!
 //! ```text
 //! entries.train_div_b64.ns_per_step         4-lane time per logical batch
+//!                                           (median-of-N, N >= 30 after
+//!                                           5 warm-up iterations)
 //! entries.train_div_b64.ns_per_step_serial  1-lane time, same work
 //! entries.train_div_b64.speedup             serial / parallel
 //! entries.trainer_epoch.*                   same, end-to-end Trainer::run
@@ -171,12 +173,12 @@ fn main() -> anyhow::Result<()> {
     });
     println!("  {}", serial.line());
     println!("  {}", par.line());
-    results.push(("train_div_b64", serial.mean_s * 1e9, par.mean_s * 1e9));
+    results.push(("train_div_b64", serial.median_s * 1e9, par.median_s * 1e9));
 
     // Measured vs simulated, side by side: calibrate the cluster cost
     // model to this machine's measured per-sample cost and compare its
     // predicted step-time ratio with the measured one.
-    let per_sample_s = serial.mean_s / LOGICAL_M as f64;
+    let per_sample_s = serial.median_s / LOGICAL_M as f64;
     let sim1 = ClusterModel::calibrated(1, per_sample_s, info.param_count)
         .step_time(LOGICAL_M, true);
     let sim4 = ClusterModel::calibrated(LANES, per_sample_s, info.param_count)
@@ -188,9 +190,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "  measured:  {:>12} -> {:>12}   speedup {:.2}x",
-        fmt_time(serial.mean_s),
-        fmt_time(par.mean_s),
-        serial.mean_s / par.mean_s
+        fmt_time(serial.median_s),
+        fmt_time(par.median_s),
+        serial.median_s / par.median_s
     );
     println!(
         "  simulated: {:>12} -> {:>12}   speedup {:.2}x",
@@ -227,7 +229,7 @@ fn main() -> anyhow::Result<()> {
             trainer.run().expect("bench trainer run failed");
         });
         println!("  {}", r.line());
-        epoch_ns[slot] = r.mean_s * 1e9;
+        epoch_ns[slot] = r.median_s * 1e9;
     }
     results.push(("trainer_epoch", epoch_ns[0], epoch_ns[1]));
 

@@ -1,9 +1,14 @@
 //! In-tree micro-benchmark harness (criterion is not vendored).
 //!
-//! Provides warmup + timed iterations with mean/stddev/min and throughput
-//! reporting for the `perf_*` benches, plus a tiny runner for "experiment
-//! benches" (the figure/table reproductions) that mostly care about
-//! printing paper-style outputs rather than ns-level timing.
+//! Provides warmup + timed iterations with mean/median/stddev/min and
+//! throughput reporting for the `perf_*` benches, plus a tiny runner for
+//! "experiment benches" (the figure/table reproductions) that mostly care
+//! about printing paper-style outputs rather than ns-level timing.
+//!
+//! The `perf_*` speedup gates compare **medians** (`median_s`), not
+//! means: a single scheduler hiccup in a 20-iteration run can move the
+//! mean by double digits but leaves the median untouched, and the CI
+//! perf-smoke runs on shared runners where that matters.
 
 pub mod report;
 
@@ -18,6 +23,9 @@ pub struct BenchResult {
     pub name: String,
     pub iters: u64,
     pub mean_s: f64,
+    /// Median of the per-iteration samples (midpoint average for even N).
+    /// Use this for speedup ratios — it is robust to scheduler outliers.
+    pub median_s: f64,
     pub std_s: f64,
     pub min_s: f64,
     /// Optional items-per-iteration for throughput reporting.
@@ -35,9 +43,10 @@ impl BenchResult {
             .map(|t| format!("  ({t:.0} items/s)"))
             .unwrap_or_default();
         format!(
-            "{:<40} {:>12}  ± {:>10}  min {:>10}  x{}{}",
+            "{:<40} {:>12}  med {:>10}  ± {:>10}  min {:>10}  x{}{}",
             self.name,
             fmt_time(self.mean_s),
+            fmt_time(self.median_s),
             fmt_time(self.std_s),
             fmt_time(self.min_s),
             self.iters,
@@ -97,6 +106,7 @@ impl Bencher {
             f();
         }
         let mut stats = Running::new();
+        let mut samples = Vec::new();
         let total = Timer::start();
         let mut iters = 0u64;
         while iters < self.min_iters
@@ -104,17 +114,34 @@ impl Bencher {
         {
             let t = Timer::start();
             f();
-            stats.push(t.seconds());
+            let s = t.seconds();
+            stats.push(s);
+            samples.push(s);
             iters += 1;
         }
         BenchResult {
             name: name.to_string(),
             iters,
             mean_s: stats.mean(),
+            median_s: median(&mut samples),
             std_s: stats.std(),
             min_s: stats.min(),
             items,
         }
+    }
+}
+
+/// Median of a sample set (sorts in place; midpoint average for even N).
+fn median(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        (samples[n / 2 - 1] + samples[n / 2]) / 2.0
     }
 }
 
@@ -143,6 +170,18 @@ mod tests {
         assert_eq!(count as u64, r.iters + 1); // + warmup
         assert!(r.mean_s >= 0.0);
         assert!(r.min_s <= r.mean_s);
+        assert!(r.min_s <= r.median_s);
+    }
+
+    #[test]
+    fn median_is_robust_to_outliers() {
+        assert_eq!(median(&mut []), 0.0);
+        assert_eq!(median(&mut [3.0]), 3.0);
+        assert_eq!(median(&mut [1.0, 2.0, 1000.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        // A single huge outlier moves the mean but not the median.
+        let mut v = [1.0, 1.0, 1.0, 1.0, 500.0];
+        assert_eq!(median(&mut v), 1.0);
     }
 
     #[test]

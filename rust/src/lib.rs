@@ -92,11 +92,18 @@
 //!    vs `jobs=4` equivalence gate, the byte-for-byte golden-record
 //!    regression — runs in plain `cargo test` over the committed
 //!    fixtures in rust/tests/fixtures, on any machine, with zero skips.
-//!    Correctness is anchored by jax-evaluated goldens
+//!    Execution runs in one of two bit-identical tiers — the default
+//!    SIMD tier (8-lane kernels, cost-model-selected dot variants, AVX
+//!    where available) and a scalar escape hatch
+//!    (`DIVEBATCH_INTERP_TIER=scalar`); both implement one pinned
+//!    8-lane accumulation contract, so the tier never changes a byte of
+//!    output.  Correctness is anchored by jax-evaluated goldens
 //!    (`python -m compile.fixtures` regenerates both) and by the
-//!    differential suite against the retained pre-PR evaluator
-//!    (tests/differential_interp.rs); speed is tracked in BENCH_4.json
-//!    by `cargo bench --bench perf_interp`.
+//!    three-way differential suite — SIMD vs scalar bitwise, both vs
+//!    the retained tree-walk evaluator (tests/differential_interp.rs);
+//!    speed is tracked in BENCH_4.json by `cargo bench --bench
+//!    perf_interp` and the SIMD-over-scalar win in BENCH_6.json by
+//!    `cargo bench --bench perf_interp_simd`.
 //! 2. **Stub** (`DIVEBATCH_BACKEND=stub`): compile/cache-only — for
 //!    exercising the runtime plumbing with execution explicitly off.
 //! 3. **Real PJRT**: swap the `xla` dependency in rust/Cargo.toml to the

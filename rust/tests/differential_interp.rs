@@ -1,14 +1,25 @@
-//! Differential gate for the compiled interpreter: the register-program
-//! path must agree with the retained tree-walk reference evaluator on
-//! every committed fixture entry — over the jax golden inputs AND over
-//! randomized inputs — to 1e-6 (mixed absolute/relative).
+//! Three-way differential gate for the compiled interpreter.  Every
+//! committed fixture entry — over the jax golden inputs AND over
+//! randomized inputs — is run through all three execution paths:
 //!
-//! The two paths intentionally differ in transcendental math (compiled:
-//! deterministic in-crate fmath kernels; reference: platform libm), so
-//! bitwise equality is not expected — agreement within ~1 ulp of f32 is.
-//! A real lowering bug (wrong stride map, bad slot reuse, broken fusion,
-//! mis-ordered reduce) produces errors orders of magnitude above the
-//! tolerance and fails here entry by entry.
+//! 1. the compiled SIMD tier (8-lane kernels, cost-model dot plans),
+//! 2. the compiled scalar tier (`InterpTier::Scalar`, the
+//!    `DIVEBATCH_INTERP_TIER=scalar` escape hatch), and
+//! 3. the retained tree-walk reference evaluator.
+//!
+//! The two compiled tiers implement the same pinned 8-lane accumulation
+//! contract and must agree **bit for bit** (`to_bits` equality) — any
+//! divergence means a tier broke the contract.  Compiled-vs-reference is
+//! compared to 1e-6/1e-5 (mixed absolute/relative): the paths
+//! intentionally differ in transcendental math (compiled: deterministic
+//! in-crate fmath kernels; reference: platform libm) and in dot/reduce
+//! association order, so bitwise equality is not expected there —
+//! agreement within a few ulps of f32 is.  A real lowering bug (wrong
+//! stride map, bad slot reuse, broken fusion, mis-ordered reduce)
+//! produces errors orders of magnitude above the tolerance and fails
+//! here entry by entry.  Odd, non-multiple-of-8 shapes get a dedicated
+//! inline-HLO case so lane-tail handling is exercised even if every
+//! fixture model keeps 8-aligned dims.
 
 mod common;
 
@@ -61,6 +72,40 @@ fn assert_close(compiled: &[xla::Literal], reference: &[xla::Literal], tol: f64,
     }
 }
 
+/// The two compiled tiers share one numeric contract: equality is exact,
+/// bit for bit, including NaN payloads.
+fn assert_bitwise(simd: &[xla::Literal], scalar: &[xla::Literal], tag: &str) {
+    assert_eq!(simd.len(), scalar.len(), "{tag}: tier output arity");
+    for (ix, (a, b)) in simd.iter().zip(scalar).enumerate() {
+        if let (Ok(av), Ok(bv)) = (a.to_vec::<f32>(), b.to_vec::<f32>()) {
+            assert_eq!(av.len(), bv.len(), "{tag}[{ix}] length");
+            for (j, (x, y)) in av.iter().zip(&bv).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{tag}[{ix}][{j}]: simd {x} vs scalar {y}"
+                );
+            }
+        } else {
+            let av = a.to_vec::<i32>().unwrap();
+            let bv = b.to_vec::<i32>().unwrap();
+            assert_eq!(av, bv, "{tag}[{ix}] (i32)");
+        }
+    }
+}
+
+/// Run one input set through all three paths and apply both gates.
+fn assert_three_way(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal], tol: f64, tag: &str) {
+    let simd = decompose(exe.execute_with_tier(inputs, xla::InterpTier::Simd).unwrap());
+    let scalar = decompose(
+        exe.execute_with_tier(inputs, xla::InterpTier::Scalar)
+            .unwrap(),
+    );
+    let reference = decompose(exe.execute_reference(inputs).unwrap());
+    assert_bitwise(&simd, &scalar, tag);
+    assert_close(&simd, &reference, tol, tag);
+}
+
 /// Tolerance for the committed jax golden inputs (the ISSUE-4 acceptance
 /// bar).
 const GOLDEN_TOL: f64 = 1e-6;
@@ -89,7 +134,7 @@ fn random_input(spec: &TensorSpec, rng: &mut Rng) -> xla::Literal {
 }
 
 /// Every entry of every fixture model, on the committed jax golden
-/// inputs: compiled path == reference path.
+/// inputs: SIMD == scalar bitwise, compiled == reference within tol.
 #[test]
 fn compiled_matches_reference_on_golden_inputs() {
     let manifest = fixtures_manifest();
@@ -123,21 +168,14 @@ fn compiled_matches_reference_on_golden_inputs() {
                     xla::Literal::vec1(&v).reshape(&dims).unwrap()
                 })
                 .collect();
-            let compiled_out = decompose(exe.execute(&inputs).unwrap());
-            let reference_out = decompose(exe.execute_reference(&inputs).unwrap());
-            assert_close(
-                &compiled_out,
-                &reference_out,
-                GOLDEN_TOL,
-                &format!("{model_name}/{key}"),
-            );
+            assert_three_way(&exe, &inputs, GOLDEN_TOL, &format!("{model_name}/{key}"));
         }
     }
 }
 
 /// Property test: randomized inputs (16 draws per entry, seeded) through
-/// both paths, on every fixture model (steplogreg8's 64-row entries are
-/// the step-parallel bench's workload).
+/// all three paths, on every fixture model (steplogreg8's 64-row entries
+/// are the step-parallel bench's workload).
 #[test]
 fn compiled_matches_reference_on_randomized_inputs() {
     let manifest = fixtures_manifest();
@@ -152,16 +190,57 @@ fn compiled_matches_reference_on_randomized_inputs() {
                     .iter()
                     .map(|spec| random_input(spec, &mut rng))
                     .collect();
-                let compiled_out = decompose(exe.execute(&inputs).unwrap());
-                let reference_out = decompose(exe.execute_reference(&inputs).unwrap());
-                assert_close(
-                    &compiled_out,
-                    &reference_out,
-                    RANDOM_TOL,
-                    &format!("{model_name}/{key}#{trial}"),
-                );
+                assert_three_way(&exe, &inputs, RANDOM_TOL, &format!("{model_name}/{key}#{trial}"));
             }
         }
+    }
+}
+
+/// Odd, non-multiple-of-8 shapes (k=11, n=13, m=3): every fixture model
+/// keeps 8-aligned dims, so this inline module is what actually drives
+/// the lane-tail paths of every dot variant and the grouped-reduce
+/// remainder loop through the integration-level three-way gate.
+#[test]
+fn three_way_agreement_on_odd_shapes() {
+    let text = r#"
+HloModule odd
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.14 {
+  Arg_0.1 = f32[3,11]{1,0} parameter(0)
+  Arg_1.2 = f32[11]{0} parameter(1)
+  Arg_2.3 = f32[3,13]{1,0} parameter(2)
+  dot.4 = f32[3]{0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  exponential.5 = f32[3]{0} exponential(dot.4)
+  constant.6 = f32[] constant(0.5)
+  reduce.7 = f32[] reduce(exponential.5, constant.6), dimensions={0}, to_apply=region_0.1
+  reduce.8 = f32[3]{0} reduce(Arg_2.3, constant.6), dimensions={1}, to_apply=region_0.1
+  reduce.9 = f32[13]{0} reduce(Arg_2.3, constant.6), dimensions={0}, to_apply=region_0.1
+  dot.10 = f32[11,13]{1,0} dot(Arg_0.1, Arg_2.3), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT tuple.11 = (f32[3]{0}, f32[], f32[3]{0}, f32[13]{0}, f32[11,13]{1,0}) tuple(dot.4, reduce.7, reduce.8, reduce.9, dot.10)
+}
+"#;
+    let proto = xla::HloModuleProto::from_text(text);
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = xla::PjRtClient::interp().compile(&comp).unwrap();
+    let spec = |shape: &[usize]| TensorSpec {
+        name: String::new(),
+        dtype: Dtype::F32,
+        shape: shape.to_vec(),
+    };
+    let mut rng = Rng::new(0x0DD5);
+    for trial in 0..8 {
+        let inputs = vec![
+            random_input(&spec(&[3, 11]), &mut rng),
+            random_input(&spec(&[11]), &mut rng),
+            random_input(&spec(&[3, 13]), &mut rng),
+        ];
+        assert_three_way(&exe, &inputs, RANDOM_TOL, &format!("odd#{trial}"));
     }
 }
 

@@ -1,0 +1,189 @@
+//! Compile-time cost model: picks the execution *strategy* for each
+//! lowered op — never its *numerics*.
+//!
+//! Every dot algorithm in [`super::kernels`] implements one pinned
+//! lane-accumulation contract (8 lane accumulators indexed `kk % 8`,
+//! ascending `kk` within each lane, pairwise horizontal fold — see the
+//! kernels module docs), so the selection made here affects wall-clock
+//! only.  Canonical run records are byte-identical whichever variant runs,
+//! at either interpreter tier, and the Python mirror needs exactly one dot
+//! implementation.  The same holds for reduce: the grouped-lanes layout is
+//! a detected property of the index map, and the lane walk is pinned.
+//!
+//! The inputs are the classic roofline terms available at compile time:
+//! FLOPs (`2*m*n*k` for dot), bytes moved (operand + output traffic), and
+//! the contiguity of the contraction strides (`l_kstride` / `r_kstride`)
+//! plus the shape of the rhs free-index table (`r_base`).
+
+/// Dot execution strategies.  All four produce bit-identical output (the
+/// pinned lanes contract); they differ in traversal order and locality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DotAlgo {
+    /// `r_kstride == 1`: per output element, 8-lane accumulation over
+    /// contiguous k-slices of both operands (lhs slice gathered when
+    /// `l_kstride != 1`).
+    LanesContig,
+    /// `l_kstride == 1 && r_kstride == 1` and enough columns: register
+    /// block of [`super::kernels::NR`] output columns sharing each lhs
+    /// load, one 8-lane accumulator file per column.
+    LanesTiled,
+    /// rhs free indices are exactly `0..n` (contiguous output columns,
+    /// any `r_kstride`): k-outer pass, each k contributing an
+    /// autovectorizable axpy into per-column lane scratch, columns tiled
+    /// by [`super::kernels::TJ`] so the scratch stays in L1.
+    AxpyLanes,
+    /// Fully generic gather fallback (strided everything).  Also the only
+    /// shape the scalar tier runs, for every plan.
+    LanesGather,
+}
+
+/// Pick the dot strategy from compile-time layout facts.
+///
+/// `r_base_is_iota` means `r_base[j] == j` for all j — the rhs free
+/// dimension walks contiguous columns, which is what lets an axpy pass
+/// write `lanes[t][0..n]` with unit stride.
+pub(crate) fn select_dot_algo(
+    m: usize,
+    n: usize,
+    k: usize,
+    l_kstride: usize,
+    r_kstride: usize,
+    r_base_is_iota: bool,
+) -> DotAlgo {
+    let flops = 2 * m * n * k;
+    if r_kstride == 1 {
+        // Contiguous rhs contraction: k-inner forms win — the k loop
+        // streams both operands.  Tile only when the register block can
+        // actually be refilled a useful number of times.
+        if l_kstride == 1 && n >= super::kernels::NR && flops >= 2 * super::kernels::NR * 8 {
+            DotAlgo::LanesTiled
+        } else {
+            DotAlgo::LanesContig
+        }
+    } else if r_base_is_iota && n > 1 {
+        // Strided contraction but contiguous output columns: bytes moved
+        // per k element are minimized by the k-outer axpy (one lhs scalar
+        // broadcast against a unit-stride rhs row segment).
+        DotAlgo::AxpyLanes
+    } else {
+        DotAlgo::LanesGather
+    }
+}
+
+/// Reduce execution strategies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ReduceAlgo {
+    /// Add region whose index map is grouped-contiguous
+    /// (`map[i] == i / group` for all i): per output element, 8-lane
+    /// accumulation over its `group` consecutive inputs with the pinned
+    /// fold.  This is the only reduce shape whose numeric order differs
+    /// from the flat walk, and both tiers + the mirror implement it.
+    GroupedLanes { group: usize },
+    /// Everything else: the original flat-ascending walk (bit-identical
+    /// to the tree-walk reference evaluator).
+    Flat,
+}
+
+/// Detect the grouped-contiguous layout.  `is_add` gates the lanes path
+/// to the commutative-friendly Add region; Mul/Max/Min/Program regions
+/// keep the reference-order flat walk unchanged.
+pub(crate) fn select_reduce_algo(map: &[u32], out_elems: usize, is_add: bool) -> ReduceAlgo {
+    if !is_add || out_elems == 0 || map.is_empty() || !map.len().is_multiple_of(out_elems) {
+        return ReduceAlgo::Flat;
+    }
+    let group = map.len() / out_elems;
+    let grouped = map
+        .iter()
+        .enumerate()
+        .all(|(i, &of)| of as usize == i / group);
+    if grouped {
+        ReduceAlgo::GroupedLanes { group }
+    } else {
+        ReduceAlgo::Flat
+    }
+}
+
+/// Fusion caps for a fused loop over `n` elements: `(max ops, max
+/// inputs)`.  Derived from an L1 scratch budget — each fused op owns a
+/// `BLOCK`-wide f32 scratch register, and the whole register file plus one
+/// cache line per distinct input stream should sit in L1 while the loop
+/// runs.  Fusing is numerics-free (elementwise, same per-element order),
+/// so these caps are pure strategy; they can never exceed the structural
+/// ceilings [`super::program::MAX_FUSED_OPS`] /
+/// [`super::program::MAX_FUSED_INPUTS`] that size the stack register file.
+pub(crate) fn fusion_caps(n: usize) -> (usize, usize) {
+    // Budget half of a typical 32 KiB L1d for the op scratch file
+    // (BLOCK f32s per fused op), the other half for streamed inputs.
+    const L1D_BYTES: usize = 32 * 1024;
+    let per_reg = super::kernels::BLOCK * core::mem::size_of::<f32>();
+    let ops = ((L1D_BYTES / 2) / per_reg).min(super::program::MAX_FUSED_OPS);
+    // A loop that fits in one block (n <= BLOCK) never streams, so only
+    // the structural ceiling applies; longer loops get one resident block
+    // per distinct input plus one for the output.
+    let inputs = if n <= super::kernels::BLOCK {
+        super::program::MAX_FUSED_INPUTS
+    } else {
+        ((L1D_BYTES / 2) / per_reg - 1).min(super::program::MAX_FUSED_INPUTS)
+    };
+    (ops, inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_selection_matches_layout() {
+        // steplogreg8 train_div_b64 forward dots: f32[64,8] x f32[8].
+        assert_eq!(select_dot_algo(64, 1, 8, 1, 1, true), DotAlgo::LanesContig);
+        // Gradient dot: f32[64] x f32[64,8] contracting dim 0 of both —
+        // r_kstride = 8, r_base = 0..8.
+        assert_eq!(select_dot_algo(1, 8, 64, 1, 8, true), DotAlgo::AxpyLanes);
+        // Wide contiguous matmul: register-blocked tiles.
+        assert_eq!(select_dot_algo(16, 16, 32, 1, 1, true), DotAlgo::LanesTiled);
+        // Strided rhs with a non-iota base table: generic gather.
+        assert_eq!(
+            select_dot_algo(4, 4, 16, 2, 3, false),
+            DotAlgo::LanesGather
+        );
+        // Single strided column: axpy has nothing to vectorize over.
+        assert_eq!(select_dot_algo(8, 1, 16, 1, 4, true), DotAlgo::LanesGather);
+    }
+
+    #[test]
+    fn reduce_selection_requires_grouped_add() {
+        // [64,8] -> [64] over the trailing dim: map[i] = i / 8.
+        let map: Vec<u32> = (0..512).map(|i| i / 8).collect();
+        assert_eq!(
+            select_reduce_algo(&map, 64, true),
+            ReduceAlgo::GroupedLanes { group: 8 }
+        );
+        // Same map, non-Add region: flat.
+        assert_eq!(select_reduce_algo(&map, 64, false), ReduceAlgo::Flat);
+        // Full reduction to a scalar is grouped with group = len.
+        let all: Vec<u32> = vec![0; 64];
+        assert_eq!(
+            select_reduce_algo(&all, 1, true),
+            ReduceAlgo::GroupedLanes { group: 64 }
+        );
+        // Leading-dim reduction interleaves outputs: flat.
+        let interleaved: Vec<u32> = (0..512).map(|i| i % 8).collect();
+        assert_eq!(select_reduce_algo(&interleaved, 8, true), ReduceAlgo::Flat);
+        // Degenerate group size 1 is still grouped (identity sum).
+        let ident: Vec<u32> = (0..64).collect();
+        assert_eq!(
+            select_reduce_algo(&ident, 64, true),
+            ReduceAlgo::GroupedLanes { group: 1 }
+        );
+        assert_eq!(select_reduce_algo(&[], 0, true), ReduceAlgo::Flat);
+    }
+
+    #[test]
+    fn fusion_caps_stay_within_structural_ceilings() {
+        for n in [0, 1, 63, 64, 65, 4096] {
+            let (ops, inputs) = fusion_caps(n);
+            assert!(ops >= 1 && ops <= crate::interp::program::MAX_FUSED_OPS);
+            assert!(inputs >= 1 && inputs <= crate::interp::program::MAX_FUSED_INPUTS);
+        }
+    }
+}

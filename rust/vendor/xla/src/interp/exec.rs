@@ -19,10 +19,60 @@ use std::sync::atomic::Ordering;
 use super::kernels;
 use super::parse::{err, DType};
 use super::program::{Program, Ref, SlotSpec, Step};
-use crate::{Data, Literal, Result};
+use crate::{Data, InterpTier, Literal, Result};
 
 /// Max arenas kept for reuse (beyond this, returned arenas are dropped).
 const POOL_CAP: usize = 16;
+
+/// One 32-byte-aligned group of 8 f32 lanes (size 32, no padding): the
+/// allocation unit of f32 slot buffers, so an 8-wide lane load starting
+/// at a slot base never straddles a cache-line boundary.
+#[repr(C, align(32))]
+#[derive(Clone, Copy, Debug)]
+struct Lane8([f32; kernels::LANES]);
+
+/// An f32 slot buffer backed by [`Lane8`] groups.  Derefs to `[f32]` of
+/// the logical length, so kernels and call sites see a plain slice; the
+/// backing allocation is always 32-byte aligned and a whole number of
+/// lane groups.
+#[derive(Debug)]
+pub(crate) struct AlignedF32 {
+    lanes: Vec<Lane8>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    fn zeroed(len: usize) -> AlignedF32 {
+        AlignedF32 {
+            lanes: vec![Lane8([0.0; kernels::LANES]); len.div_ceil(kernels::LANES)],
+            len,
+        }
+    }
+
+    fn grow(&mut self, len: usize) {
+        self.lanes
+            .resize(len.div_ceil(kernels::LANES), Lane8([0.0; kernels::LANES]));
+        self.len = len;
+    }
+}
+
+impl std::ops::Deref for AlignedF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: Lane8 is repr(C, align(32)) over [f32; 8] — size 32, no
+        // padding — so `lanes` is a contiguous run of at least `len` f32s.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as in `deref`.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr().cast::<f32>(), self.len)
+        }
+    }
+}
 
 /// One execution scratch space: a buffer per compiled slot.
 #[derive(Debug)]
@@ -32,7 +82,7 @@ pub(crate) struct Arena {
 
 #[derive(Debug)]
 enum ArenaBuf {
-    F32(Vec<f32>),
+    F32(AlignedF32),
     I32(Vec<i32>),
     Pred(Vec<bool>),
 }
@@ -43,7 +93,7 @@ impl Arena {
             bufs: slots
                 .iter()
                 .map(|s| match s.dtype {
-                    DType::F32 => ArenaBuf::F32(vec![0.0; s.max_elems]),
+                    DType::F32 => ArenaBuf::F32(AlignedF32::zeroed(s.max_elems)),
                     DType::S32 => ArenaBuf::I32(vec![0; s.max_elems]),
                     DType::Pred => ArenaBuf::Pred(vec![false; s.max_elems]),
                 })
@@ -57,8 +107,17 @@ fn internal(msg: &str) -> crate::Error {
 }
 
 impl Program {
-    /// Validate `args` against the entry parameters, then run the steps.
+    /// [`Program::execute_with_tier`] at the process-default tier
+    /// (`DIVEBATCH_INTERP_TIER`, read once).
     pub(crate) fn execute(&self, args: &[&Literal]) -> Result<Literal> {
+        self.execute_with_tier(args, InterpTier::from_env())
+    }
+
+    /// Validate `args` against the entry parameters, then run the steps
+    /// at an explicit tier.  Both tiers produce identical bits (the
+    /// pinned lanes contract — see [`super::kernels`]); the tier picks
+    /// the execution strategy only.
+    pub(crate) fn execute_with_tier(&self, args: &[&Literal], tier: InterpTier) -> Result<Literal> {
         if args.len() != self.params.len() {
             return Err(err(format!(
                 "entry {:?} takes {} parameters, got {} arguments",
@@ -119,7 +178,7 @@ impl Program {
                 Arena::for_slots(&self.slots)
             }
         };
-        let (result, arena) = self.run(args, arena);
+        let (result, arena) = self.run(args, arena, tier);
         {
             let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
             if pool.len() < POOL_CAP {
@@ -137,7 +196,12 @@ impl Program {
         )
     }
 
-    fn run(&self, args: &[&Literal], mut arena: Arena) -> (Result<Literal>, Arena) {
+    fn run(
+        &self,
+        args: &[&Literal],
+        mut arena: Arena,
+        tier: InterpTier,
+    ) -> (Result<Literal>, Arena) {
         // Grow any undersized buffer (only possible if an arena outlived a
         // recompile — counted as the allocs-proxy's "grow" channel).
         for (buf, spec) in arena.bufs.iter_mut().zip(&self.slots) {
@@ -149,14 +213,14 @@ impl Program {
             if len < spec.max_elems {
                 self.buffers_grown.fetch_add(1, Ordering::Relaxed);
                 match buf {
-                    ArenaBuf::F32(v) => v.resize(spec.max_elems, 0.0),
+                    ArenaBuf::F32(v) => v.grow(spec.max_elems),
                     ArenaBuf::I32(v) => v.resize(spec.max_elems, 0),
                     ArenaBuf::Pred(v) => v.resize(spec.max_elems, false),
                 }
             }
         }
         for step in &self.steps {
-            if let Err(e) = self.run_step(step, args, &mut arena) {
+            if let Err(e) = self.run_step(step, args, &mut arena, tier) {
                 return (Err(e), arena);
             }
         }
@@ -169,7 +233,7 @@ impl Program {
     fn f32_src<'a>(&'a self, r: Ref, args: &'a [&Literal], arena: &'a Arena) -> Result<&'a [f32]> {
         match r {
             Ref::Slot(s) => match &arena.bufs[s as usize] {
-                ArenaBuf::F32(v) => Ok(v),
+                ArenaBuf::F32(v) => Ok(&v[..]),
                 _ => Err(internal("slot dtype mismatch (f32)")),
             },
             Ref::Param(p) => match args[p as usize].dense_parts() {
@@ -223,8 +287,11 @@ impl Program {
 
     // ------------------------------------------------------- out buffers
 
-    fn take_f32(&self, arena: &mut Arena, slot: u32) -> Result<Vec<f32>> {
-        match std::mem::replace(&mut arena.bufs[slot as usize], ArenaBuf::F32(Vec::new())) {
+    fn take_f32(&self, arena: &mut Arena, slot: u32) -> Result<AlignedF32> {
+        match std::mem::replace(
+            &mut arena.bufs[slot as usize],
+            ArenaBuf::F32(AlignedF32::zeroed(0)),
+        ) {
             ArenaBuf::F32(v) => Ok(v),
             other => {
                 arena.bufs[slot as usize] = other;
@@ -255,7 +322,13 @@ impl Program {
 
     // ------------------------------------------------------------ steps
 
-    fn run_step(&self, step: &Step, args: &[&Literal], arena: &mut Arena) -> Result<()> {
+    fn run_step(
+        &self,
+        step: &Step,
+        args: &[&Literal],
+        arena: &mut Arena,
+        tier: InterpTier,
+    ) -> Result<()> {
         match step {
             Step::Fused(f) => {
                 let mut out = self.take_f32(arena, f.out)?;
@@ -273,7 +346,7 @@ impl Program {
                     }
                 }
                 if ok.is_ok() {
-                    kernels::run_fused(f, &ins[..f.inputs.len()], &mut out[..f.n]);
+                    kernels::run_fused(f, &ins[..f.inputs.len()], &mut out[..f.n], tier);
                 }
                 arena.bufs[f.out as usize] = ArenaBuf::F32(out);
                 ok
@@ -537,6 +610,8 @@ impl Program {
                     let l = self.f32_src(p.lhs, args, arena)?;
                     let r = self.f32_src(p.rhs, args, arena)?;
                     kernels::dot(
+                        tier,
+                        p.algo,
                         l,
                         r,
                         &p.l_base,
@@ -557,6 +632,8 @@ impl Program {
                     let data = self.f32_src(p.data, args, arena)?;
                     let init = self.f32_src(p.init, args, arena)?[0];
                     kernels::reduce(
+                        tier,
+                        p.algo,
                         &data[..p.map.len()],
                         init,
                         &p.map,
@@ -686,6 +763,51 @@ impl Program {
             Ok(Literal::tuple(parts))
         } else {
             Ok(parts.into_iter().next().expect("at least one output"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_slot_buffers_are_32_byte_aligned() {
+        assert_eq!(std::mem::size_of::<Lane8>(), 32);
+        assert_eq!(std::mem::align_of::<Lane8>(), 32);
+        for len in [0usize, 1, 7, 8, 9, 64, 1000] {
+            let mut b = AlignedF32::zeroed(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_ptr() as usize % 32, 0, "len {len}");
+            assert!(b.iter().all(|&x| x == 0.0));
+            b.grow(len + 13);
+            assert_eq!(b.len(), len + 13);
+            assert_eq!(b.as_ptr() as usize % 32, 0, "grown from {len}");
+            // Newly exposed elements are zeroed — growth is deterministic.
+            assert!(b.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn arena_f32_slots_honor_alignment() {
+        let arena = Arena::for_slots(&[
+            SlotSpec {
+                dtype: DType::F32,
+                max_elems: 5,
+            },
+            SlotSpec {
+                dtype: DType::F32,
+                max_elems: 64,
+            },
+            SlotSpec {
+                dtype: DType::S32,
+                max_elems: 3,
+            },
+        ]);
+        for buf in &arena.bufs {
+            if let ArenaBuf::F32(v) = buf {
+                assert_eq!(v.as_ptr() as usize % 32, 0);
+            }
         }
     }
 }

@@ -4,25 +4,56 @@
 //! by [`super::program`]: no `f64` boxing, no per-element coordinate
 //! decoding, no allocation.  Elementwise f32 work runs through the fused
 //! block loop ([`run_fused`]) over stack scratch registers; data movement
-//! is a single gather pass over a compile-time index map; `dot` walks
-//! contiguous slices (k-inner when the rhs contraction stride is 1,
-//! k-outer axpy otherwise — both accumulate each output element in
-//! ascending-k order, so the two loop shapes are bit-identical); `reduce`
-//! folds flat-ascending through a compiled region kernel.
+//! is a single gather pass over a compile-time index map.
 //!
-//! Numeric order is part of the contract: the Python mirror
-//! (python/mirror/interp.py) reproduces these loops bit for bit to
-//! generate the committed golden run record.  Change an iteration order
-//! here and the mirror + golden must follow.
+//! # The pinned lanes contract (dot + grouped reduce)
+//!
+//! Accumulating kernels use **8 lane accumulators with a pinned fold**,
+//! and the order is part of the numeric contract:
+//!
+//! * per accumulated output element, 8 `f32` lanes start at `0.0`;
+//! * contraction index `kk` contributes to lane `kk % 8`, ascending `kk`
+//!   within each lane, as `lane += a * b` (mul then add, never FMA);
+//! * all 8 lanes are always folded — zero lanes included — by the pinned
+//!   pairwise tree [`hfold8`]:
+//!   `((l0+l1) + (l2+l3)) + ((l4+l5) + (l6+l7))`;
+//! * `dot` output is the fold; grouped-`reduce` output is `init + fold`.
+//!
+//! Every [`DotAlgo`] variant and both interpreter tiers implement this
+//! one contract, so the cost model's plan selection and the
+//! `DIVEBATCH_INTERP_TIER` switch change wall-clock only, never bits; the
+//! Python mirror (python/mirror/interp.py) carries a single lanes
+//! implementation that reproduces all of them.  Reduces whose index map
+//! is not grouped-contiguous-Add keep the flat-ascending walk of the
+//! tree-walk reference evaluator, bit for bit.  Change any order here and
+//! the mirror + golden record must follow.
 
+use super::cost::{DotAlgo, ReduceAlgo};
 use super::fmath;
 use super::program::{
     CmpDir, EwOp, FusedLoop, IntOp, Lane, PredOp, RegionFn, ScalarProgram, ScalarSrc,
 };
+use crate::InterpTier;
 
 /// Block width of the fused elementwise loop: big enough to amortize the
 /// per-op dispatch, small enough that the whole scratch file stays in L1.
 pub(crate) const BLOCK: usize = 64;
+
+/// Lane width of the SIMD tier (one AVX ymm register of f32s).
+pub(crate) const LANES: usize = 8;
+
+/// Register-block width (output columns) of the tiled dot variant.
+pub(crate) const NR: usize = 4;
+
+/// Column-tile width of the k-outer axpy dot variant (8 lane rows of TJ
+/// f32s = 2 KiB of stack scratch).
+pub(crate) const TJ: usize = 64;
+
+/// The pinned pairwise horizontal fold of the 8 lane accumulators.
+#[inline]
+pub(crate) fn hfold8(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
 
 #[inline]
 fn ew1(op: EwOp, x: f32) -> f32 {
@@ -69,11 +100,15 @@ fn ew2(op: EwOp, a: f32, b: f32) -> f32 {
 }
 
 /// Run one fused f32 group: block-at-a-time over stack scratch registers,
-/// each constituent op a monomorphized tight loop over the block.
-pub(crate) fn run_fused(f: &FusedLoop, inputs: &[&[f32]], out: &mut [f32]) {
+/// each constituent op a monomorphized tight loop over the block.  The
+/// SIMD tier runs arithmetic ops through explicit 8-wide inner loops
+/// ([`binary_block_wide`]); elementwise math is order-free per element, so
+/// both tiers produce identical bits.
+pub(crate) fn run_fused(f: &FusedLoop, inputs: &[&[f32]], out: &mut [f32], tier: InterpTier) {
     debug_assert_eq!(inputs.len(), f.inputs.len());
     let mut regs = [[0f32; BLOCK]; super::program::MAX_FUSED_OPS];
     let last = f.ops.len() - 1;
+    let wide = tier == InterpTier::Simd;
     let mut base = 0usize;
     while base < f.n {
         let len = BLOCK.min(f.n - base);
@@ -90,7 +125,11 @@ pub(crate) fn run_fused(f: &FusedLoop, inputs: &[&[f32]], out: &mut [f32]) {
                 (a, Some(b)) => {
                     let av = lane(a, inputs, lo, base, len);
                     let bv = lane(b, inputs, lo, base, len);
-                    binary_block(op.op, av, bv, dst);
+                    if wide {
+                        binary_block_wide(op.op, av, bv, dst);
+                    } else {
+                        binary_block(op.op, av, bv, dst);
+                    }
                 }
             }
         }
@@ -143,7 +182,7 @@ fn unary_block(op: EwOp, a: &[f32], dst: &mut [f32]) {
     }
 }
 
-/// Monomorphized per-op binary loops.
+/// Monomorphized per-op binary loops (the scalar tier's form).
 fn binary_block(op: EwOp, a: &[f32], b: &[f32], dst: &mut [f32]) {
     macro_rules! lp {
         ($f:expr) => {
@@ -160,6 +199,40 @@ fn binary_block(op: EwOp, a: &[f32], b: &[f32], dst: &mut [f32]) {
         EwOp::Max => lp!(f32::max),
         EwOp::Min => lp!(f32::min),
         other => lp!(|x, y| ew2(other, x, y)),
+    }
+}
+
+/// SIMD-tier binary loops: arithmetic ops run 8 lanes per iteration with a
+/// scalar tail.  Per-element results are identical to [`binary_block`] —
+/// the widening only removes loop-carried bookkeeping so the
+/// autovectorizer can emit packed instructions.
+fn binary_block_wide(op: EwOp, a: &[f32], b: &[f32], dst: &mut [f32]) {
+    macro_rules! lp8 {
+        ($f:expr) => {{
+            let n = dst.len();
+            let mut i = 0usize;
+            while i + LANES <= n {
+                let (aa, bb) = (&a[i..i + LANES], &b[i..i + LANES]);
+                let d = &mut dst[i..i + LANES];
+                for t in 0..LANES {
+                    d[t] = $f(aa[t], bb[t]);
+                }
+                i += LANES;
+            }
+            while i < n {
+                dst[i] = $f(a[i], b[i]);
+                i += 1;
+            }
+        }};
+    }
+    match op {
+        EwOp::Add => lp8!(|x: f32, y: f32| x + y),
+        EwOp::Sub => lp8!(|x: f32, y: f32| x - y),
+        EwOp::Mul => lp8!(|x: f32, y: f32| x * y),
+        EwOp::Div => lp8!(|x: f32, y: f32| x / y),
+        EwOp::Max => lp8!(f32::max),
+        EwOp::Min => lp8!(f32::min),
+        other => binary_block(other, a, b, dst),
     }
 }
 
@@ -305,13 +378,18 @@ pub(crate) fn scatter_part<T: Copy>(src: &[T], place: &[u32], dst: &mut [T]) {
     }
 }
 
+// ------------------------------------------------------------------ dot
+
 /// Single-contraction matmul over the collapsed (M, K) x (K, N) view.
 ///
-/// Both loop shapes accumulate each output element in ascending-k order
-/// (mul-then-add, no FMA contraction), so they are bit-identical to each
-/// other and to the reference evaluator's per-element loop.
+/// The compile-time cost model picked `algo`; the scalar tier ignores it
+/// and runs the generic gather form for every plan.  All paths follow the
+/// pinned lanes contract (module docs), so every `(algo, tier)` pair
+/// yields identical bits.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn dot(
+    tier: InterpTier,
+    algo: DotAlgo,
     l: &[f32],
     r: &[f32],
     l_base: &[u32],
@@ -321,52 +399,232 @@ pub(crate) fn dot(
     k: usize,
     out: &mut [f32],
 ) {
-    let m = l_base.len();
-    let n = r_base.len();
-    debug_assert_eq!(out.len(), m * n);
-    if r_kstride == 1 {
-        // rhs contraction is contiguous: k-inner dot over slices.
-        for (i, &lb) in l_base.iter().enumerate() {
-            let lb = lb as usize;
-            let row = &mut out[i * n..(i + 1) * n];
-            if l_kstride == 1 {
-                let ls = &l[lb..lb + k];
-                for (o, &rb) in row.iter_mut().zip(r_base) {
-                    let rs = &r[rb as usize..rb as usize + k];
-                    let mut acc = 0.0f32;
-                    for (&a, &b) in ls.iter().zip(rs) {
-                        acc += a * b;
-                    }
-                    *o = acc;
-                }
-            } else {
-                for (o, &rb) in row.iter_mut().zip(r_base) {
-                    let rb = rb as usize;
-                    let mut acc = 0.0f32;
-                    for kk in 0..k {
-                        acc += l[lb + kk * l_kstride] * r[rb + kk];
-                    }
-                    *o = acc;
-                }
-            }
+    debug_assert_eq!(out.len(), l_base.len() * r_base.len());
+    if tier == InterpTier::Scalar {
+        return dot_lanes_gather(l, r, l_base, r_base, l_kstride, r_kstride, k, out);
+    }
+    match algo {
+        DotAlgo::LanesContig => dot_lanes_contig(l, r, l_base, r_base, l_kstride, k, out),
+        DotAlgo::LanesTiled => dot_lanes_tiled(l, r, l_base, r_base, k, out),
+        DotAlgo::AxpyLanes => {
+            dot_axpy_lanes(l, r, l_base, r_base.len(), l_kstride, r_kstride, k, out)
         }
-    } else {
-        // rhs contraction is strided: k-outer axpy keeps the inner loop
-        // over the output row (ascending-k per element, same bits).
-        for (i, &lb) in l_base.iter().enumerate() {
-            let lb = lb as usize;
-            let row = &mut out[i * n..(i + 1) * n];
-            row.fill(0.0);
+        DotAlgo::LanesGather => {
+            dot_lanes_gather(l, r, l_base, r_base, l_kstride, r_kstride, k, out)
+        }
+    }
+}
+
+/// Generic gather form: per output element, lane `kk % 8` accumulates the
+/// strided product stream.  The scalar tier's only dot; the SIMD tier's
+/// fallback for fully strided layouts.
+#[allow(clippy::too_many_arguments)]
+fn dot_lanes_gather(
+    l: &[f32],
+    r: &[f32],
+    l_base: &[u32],
+    r_base: &[u32],
+    l_kstride: usize,
+    r_kstride: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let n = r_base.len();
+    for (i, &lb) in l_base.iter().enumerate() {
+        let lb = lb as usize;
+        let row = &mut out[i * n..(i + 1) * n];
+        for (o, &rb) in row.iter_mut().zip(r_base) {
+            let rb = rb as usize;
+            let mut lanes = [0f32; LANES];
             for kk in 0..k {
-                let a = l[lb + kk * l_kstride];
-                let roff = kk * r_kstride;
-                for (o, &rb) in row.iter_mut().zip(r_base) {
-                    *o += a * r[rb as usize + roff];
+                lanes[kk % LANES] += l[lb + kk * l_kstride] * r[rb + kk * r_kstride];
+            }
+            *o = hfold8(lanes);
+        }
+    }
+}
+
+/// `r_kstride == 1`: per output element, 8-lane accumulation over
+/// contiguous k-slices (contiguous lhs slice too when `l_kstride == 1`).
+fn dot_lanes_contig(
+    l: &[f32],
+    r: &[f32],
+    l_base: &[u32],
+    r_base: &[u32],
+    l_kstride: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let n = r_base.len();
+    for (i, &lb) in l_base.iter().enumerate() {
+        let lb = lb as usize;
+        let row = &mut out[i * n..(i + 1) * n];
+        if l_kstride == 1 {
+            let ls = &l[lb..lb + k];
+            for (o, &rb) in row.iter_mut().zip(r_base) {
+                let rb = rb as usize;
+                *o = lanes_accum_contig(ls, &r[rb..rb + k], k);
+            }
+        } else {
+            for (o, &rb) in row.iter_mut().zip(r_base) {
+                let rb = rb as usize;
+                let mut lanes = [0f32; LANES];
+                for kk in 0..k {
+                    lanes[kk % LANES] += l[lb + kk * l_kstride] * r[rb + kk];
                 }
+                *o = hfold8(lanes);
             }
         }
     }
 }
+
+/// Fully contiguous, `n >= NR`: register block of NR output columns
+/// sharing each 8-wide lhs load, one lane file per column.
+fn dot_lanes_tiled(
+    l: &[f32],
+    r: &[f32],
+    l_base: &[u32],
+    r_base: &[u32],
+    k: usize,
+    out: &mut [f32],
+) {
+    let n = r_base.len();
+    let nc = k / LANES;
+    for (i, &lb) in l_base.iter().enumerate() {
+        let lb = lb as usize;
+        let ls = &l[lb..lb + k];
+        let row = &mut out[i * n..(i + 1) * n];
+        let mut j = 0usize;
+        while j + NR <= n {
+            let mut acc = [[0f32; LANES]; NR];
+            for c in 0..nc {
+                let la = &ls[c * LANES..c * LANES + LANES];
+                for (jj, accj) in acc.iter_mut().enumerate() {
+                    let rb = r_base[j + jj] as usize;
+                    let rs = &r[rb + c * LANES..rb + c * LANES + LANES];
+                    for t in 0..LANES {
+                        accj[t] += la[t] * rs[t];
+                    }
+                }
+            }
+            for t in 0..k - nc * LANES {
+                let a = ls[nc * LANES + t];
+                for (jj, accj) in acc.iter_mut().enumerate() {
+                    accj[t] += a * r[r_base[j + jj] as usize + nc * LANES + t];
+                }
+            }
+            for (jj, accj) in acc.iter().enumerate() {
+                row[j + jj] = hfold8(*accj);
+            }
+            j += NR;
+        }
+        for jj in j..n {
+            let rb = r_base[jj] as usize;
+            row[jj] = lanes_accum_contig(ls, &r[rb..rb + k], k);
+        }
+    }
+}
+
+/// rhs free indices are exactly `0..n`: k-outer pass where each `kk`
+/// broadcasts one lhs scalar against a unit-stride rhs row segment into
+/// lane scratch row `kk % 8` — the inner loop is a pure axpy the
+/// autovectorizer lowers to packed mul/add.  Columns are tiled by `TJ` so
+/// the 8 x TJ scratch stays in L1.
+#[allow(clippy::too_many_arguments)]
+fn dot_axpy_lanes(
+    l: &[f32],
+    r: &[f32],
+    l_base: &[u32],
+    n: usize,
+    l_kstride: usize,
+    r_kstride: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    for (i, &lb) in l_base.iter().enumerate() {
+        let lb = lb as usize;
+        let row = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0usize;
+        while j0 < n {
+            let tj = TJ.min(n - j0);
+            let mut lanes = [[0f32; TJ]; LANES];
+            for kk in 0..k {
+                let a = l[lb + kk * l_kstride];
+                let rrow = &r[kk * r_kstride + j0..kk * r_kstride + j0 + tj];
+                let lt = &mut lanes[kk % LANES][..tj];
+                for (o, &b) in lt.iter_mut().zip(rrow) {
+                    *o += a * b;
+                }
+            }
+            for (jj, o) in row[j0..j0 + tj].iter_mut().enumerate() {
+                let mut v = [0f32; LANES];
+                for t in 0..LANES {
+                    v[t] = lanes[t][jj];
+                }
+                *o = hfold8(v);
+            }
+            j0 += tj;
+        }
+    }
+}
+
+/// 8-lane accumulation over two contiguous k-slices (the lanes contract
+/// on unit strides).  Dispatches to the AVX form when the CPU has it —
+/// `_mm256_mul_ps`/`_mm256_add_ps` are per-lane IEEE-exact, so the bits
+/// are identical to the portable loop.
+#[inline]
+fn lanes_accum_contig(ls: &[f32], rs: &[f32], k: usize) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if k >= 2 * LANES && std::arch::is_x86_feature_detected!("avx") {
+            // SAFETY: guarded by the runtime AVX check above.
+            return unsafe { lanes_accum_contig_avx(ls, rs, k) };
+        }
+    }
+    lanes_accum_contig_portable(ls, rs, k)
+}
+
+fn lanes_accum_contig_portable(ls: &[f32], rs: &[f32], k: usize) -> f32 {
+    let mut lanes = [0f32; LANES];
+    let mut ch_l = ls[..k].chunks_exact(LANES);
+    let mut ch_r = rs[..k].chunks_exact(LANES);
+    for (cl, cr) in (&mut ch_l).zip(&mut ch_r) {
+        for t in 0..LANES {
+            lanes[t] += cl[t] * cr[t];
+        }
+    }
+    for (t, (&a, &b)) in ch_l.remainder().iter().zip(ch_r.remainder()).enumerate() {
+        lanes[t] += a * b;
+    }
+    hfold8(lanes)
+}
+
+/// AVX twin of [`lanes_accum_contig_portable`]: one ymm register is
+/// exactly the 8-lane accumulator file, updated in the same ascending
+/// chunk order with separate mul and add (no FMA), then stored and folded
+/// by the same pinned tree.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn lanes_accum_contig_avx(ls: &[f32], rs: &[f32], k: usize) -> f32 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+    };
+    let nc = k / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..nc {
+        let a = _mm256_loadu_ps(ls.as_ptr().add(c * LANES));
+        let b = _mm256_loadu_ps(rs.as_ptr().add(c * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, b));
+    }
+    let mut lanes = [0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for t in 0..k - nc * LANES {
+        lanes[t] += ls[nc * LANES + t] * rs[nc * LANES + t];
+    }
+    hfold8(lanes)
+}
+
+// --------------------------------------------------------------- reduce
 
 /// Apply a compiled scalar region program to `(acc, x)`.  The register
 /// file is a small stack array (the lowering caps regions at
@@ -392,9 +650,28 @@ pub(crate) fn region_apply(p: &ScalarProgram, acc: f32, x: f32) -> f32 {
     read(p.result, &regs)
 }
 
-/// Flat-ascending reduce through the region kernel (bit-identical order
-/// to the reference evaluator).
-pub(crate) fn reduce(data: &[f32], init: f32, map: &[u32], region: &RegionFn, out: &mut [f32]) {
+/// Reduce through the region kernel.  Grouped-contiguous Add plans (the
+/// cost model detected `map[i] == i / group`) run the pinned lanes
+/// contract per output element; everything else keeps the flat-ascending
+/// walk, bit-identical to the reference evaluator.
+pub(crate) fn reduce(
+    tier: InterpTier,
+    algo: ReduceAlgo,
+    data: &[f32],
+    init: f32,
+    map: &[u32],
+    region: &RegionFn,
+    out: &mut [f32],
+) {
+    if let ReduceAlgo::GroupedLanes { group } = algo {
+        debug_assert!(matches!(region, RegionFn::Add));
+        if tier == InterpTier::Simd {
+            reduce_grouped_lanes(data, init, group, out);
+        } else {
+            reduce_grouped_lanes_scalar(data, init, group, out);
+        }
+        return;
+    }
     out.fill(init);
     match region {
         RegionFn::Add => {
@@ -423,6 +700,159 @@ pub(crate) fn reduce(data: &[f32], init: f32, map: &[u32], region: &RegionFn, ou
             for (&x, &of) in data.iter().zip(map) {
                 let o = &mut out[of as usize];
                 *o = region_apply(p, *o, x);
+            }
+        }
+    }
+}
+
+/// SIMD-tier grouped-Add: per output element, 8-wide chunked lane
+/// accumulation over its `group` consecutive inputs, scalar tail, pinned
+/// fold, `init` added once after the fold.
+fn reduce_grouped_lanes(data: &[f32], init: f32, group: usize, out: &mut [f32]) {
+    for (o, grp) in out.iter_mut().zip(data.chunks_exact(group)) {
+        let mut lanes = [0f32; LANES];
+        let mut ch = grp.chunks_exact(LANES);
+        for c in &mut ch {
+            for t in 0..LANES {
+                lanes[t] += c[t];
+            }
+        }
+        for (t, &x) in ch.remainder().iter().enumerate() {
+            lanes[t] += x;
+        }
+        *o = init + hfold8(lanes);
+    }
+}
+
+/// Scalar-tier twin of [`reduce_grouped_lanes`]: same lane indexing
+/// (`kk % 8`, ascending), same fold, written as a plain scalar loop —
+/// identical bits by construction.
+fn reduce_grouped_lanes_scalar(data: &[f32], init: f32, group: usize, out: &mut [f32]) {
+    for (o, grp) in out.iter_mut().zip(data.chunks_exact(group)) {
+        let mut lanes = [0f32; LANES];
+        for (kk, &x) in grp.iter().enumerate() {
+            lanes[kk % LANES] += x;
+        }
+        *o = init + hfold8(lanes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lanes_ref(vals: &[(f32, f32)]) -> f32 {
+        // The contract, written the slow obvious way.
+        let mut lanes = [0f32; LANES];
+        for (kk, &(a, b)) in vals.iter().enumerate() {
+            lanes[kk % LANES] += a * b;
+        }
+        hfold8(lanes)
+    }
+
+    #[test]
+    fn all_dot_variants_agree_bitwise() {
+        // m=3, n=5, k=11 (odd k exercises the tail), fully contiguous
+        // lhs [3,11] / rhs [11,5] with iota-style base tables so every
+        // variant's precondition holds and all can be compared.
+        let (m, n, k) = (3usize, 5usize, 11usize);
+        let l: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin() + 0.01).collect();
+        let r: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.21).cos() - 0.02).collect();
+        // lhs [m,k] strides: row base i*k, kstride 1.
+        let l_base: Vec<u32> = (0..m).map(|i| (i * k) as u32).collect();
+        // rhs [k,n] strides: col base j, kstride n.
+        let r_base_strided: Vec<u32> = (0..n as u32).collect();
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let vals: Vec<(f32, f32)> =
+                    (0..k).map(|kk| (l[i * k + kk], r[kk * n + j])).collect();
+                want[i * n + j] = lanes_ref(&vals);
+            }
+        }
+        // AxpyLanes + LanesGather on the strided rhs layout, both tiers.
+        for algo in [DotAlgo::AxpyLanes, DotAlgo::LanesGather] {
+            for tier in [InterpTier::Simd, InterpTier::Scalar] {
+                let mut got = vec![0f32; m * n];
+                dot(tier, algo, &l, &r, &l_base, &r_base_strided, 1, n, k, &mut got);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{algo:?} {tier:?}"
+                );
+            }
+        }
+        // Contig variants on the transposed rhs layout [n,k] (r_kstride=1).
+        let rt: Vec<f32> = {
+            let mut v = vec![0f32; n * k];
+            for j in 0..n {
+                for kk in 0..k {
+                    v[j * k + kk] = r[kk * n + j];
+                }
+            }
+            v
+        };
+        let r_base_contig: Vec<u32> = (0..n).map(|j| (j * k) as u32).collect();
+        for algo in [DotAlgo::LanesContig, DotAlgo::LanesTiled, DotAlgo::LanesGather] {
+            for tier in [InterpTier::Simd, InterpTier::Scalar] {
+                let mut got = vec![0f32; m * n];
+                dot(tier, algo, &l, &rt, &l_base, &r_base_contig, 1, 1, k, &mut got);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{algo:?} {tier:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_reduce_tiers_agree_bitwise() {
+        for group in [1usize, 3, 8, 13, 64] {
+            let out_elems = 7usize;
+            let data: Vec<f32> = (0..group * out_elems)
+                .map(|i| (i as f32 * 0.13).sin() * 3.0)
+                .collect();
+            let mut a = vec![0f32; out_elems];
+            let mut b = vec![0f32; out_elems];
+            reduce_grouped_lanes(&data, 0.5, group, &mut a);
+            reduce_grouped_lanes_scalar(&data, 0.5, group, &mut b);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "group {group}"
+            );
+        }
+    }
+
+    #[test]
+    fn contig_accum_avx_matches_portable() {
+        // Exercises the AVX dispatch when the host has it; on other hosts
+        // this still pins the portable path against the contract.
+        for k in [1usize, 7, 8, 9, 16, 31, 64, 129] {
+            let a: Vec<f32> = (0..k).map(|i| (i as f32 * 0.7).sin()).collect();
+            let b: Vec<f32> = (0..k).map(|i| (i as f32 * 0.3).cos()).collect();
+            let got = lanes_accum_contig(&a, &b, k);
+            let want = lanes_ref(&a.iter().copied().zip(b.iter().copied()).collect::<Vec<_>>());
+            assert_eq!(got.to_bits(), want.to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn wide_binary_block_matches_scalar() {
+        for n in [1usize, 7, 8, 9, 63, 64] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 - i as f32 * 0.25).collect();
+            for op in [EwOp::Add, EwOp::Sub, EwOp::Mul, EwOp::Div, EwOp::Max, EwOp::Min] {
+                let mut x = vec![0f32; n];
+                let mut y = vec![0f32; n];
+                binary_block(op, &a, &b, &mut x);
+                binary_block_wide(op, &a, &b, &mut y);
+                assert_eq!(
+                    x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{op:?} n={n}"
+                );
             }
         }
     }

@@ -16,15 +16,24 @@
 //!   elementwise instructions whose intermediates have a single consumer
 //!   are fused into single-pass loops, and a last-use liveness analysis
 //!   assigns every materialized value a reusable buffer slot.
-//! * [`kernels`] — the typed execution kernels: stride-free elementwise
-//!   loops (no `f64` boxing, no per-element coordinate decoding), a
-//!   cache-friendly `dot` over contiguous slices, single-pass reduce over a
-//!   precomputed index map, and gather-map data movement for
-//!   broadcast/transpose/slice/pad/concatenate.
+//! * [`cost`] — the compile-time cost model: picks each dot plan's
+//!   execution variant, the grouped-reduce strategy, and the fusion caps
+//!   from FLOPs / bytes-moved / stride-contiguity facts.  Strategy only:
+//!   every variant implements the same pinned numeric contract, so the
+//!   selection never changes bits.
+//! * [`kernels`] — the typed execution kernels, in two tiers
+//!   (`DIVEBATCH_INTERP_TIER`, default `simd`): 8-lane blocked f32 loops
+//!   with scalar tails (AVX where the CPU has it), register-blocked /
+//!   k-outer-axpy dot variants, grouped-lanes reduce, and gather-map data
+//!   movement for broadcast/transpose/slice/pad/concatenate.  Both tiers
+//!   and all dot variants follow one pinned 8-lane accumulation contract
+//!   (see the kernels module docs), so tier and plan choice are
+//!   bit-invisible.
 //! * [`exec`] — the executor: runs a [`program::Program`] over a reusable
-//!   per-call buffer arena (slot-indexed, sized once at first call), so
-//!   steady-state training steps do near-zero allocation.  `Literal`
-//!   arguments are borrowed, never cloned.
+//!   per-call buffer arena (slot-indexed, sized once at first call, f32
+//!   slots 32-byte aligned for straddle-free lane loads), so steady-state
+//!   training steps do near-zero allocation.  `Literal` arguments are
+//!   borrowed, never cloned.
 //! * [`fmath`] — deterministic `f32` math kernels (exp, log1p, logistic,
 //!   tanh, ...) computed via fixed `f64` polynomial evaluation, so compiled
 //!   results are bit-identical across platforms and libm versions (the
@@ -34,12 +43,16 @@
 //!   speedup reference.  It still uses the platform libm; the differential
 //!   suite compares the two paths under a 1e-6 tolerance.
 //!
-//! Numerics: elementwise math and dot/reduce accumulation are performed in
-//! `f32` with a fixed evaluation order, mirroring the XLA CPU backend
-//! closely enough that the committed jax goldens agree to ~1e-5 relative;
-//! results are bit-identical across runs, across engine workers, and (for
-//! the compiled path) across platforms.
+//! Numerics: elementwise math is performed in `f32` with a fixed
+//! per-element order; dot and grouped-Add reduce accumulate through the
+//! pinned 8-lane contract (lane `k % 8`, ascending within lane, pairwise
+//! fold — the [`kernels`] module docs spell it out), mirroring the XLA
+//! CPU backend closely enough that the committed jax goldens agree to
+//! ~1e-5 relative.  Results are bit-identical across runs, across engine
+//! workers, across tiers and dot-plan variants, and (for the compiled
+//! path) across platforms.
 
+pub(crate) mod cost;
 pub(crate) mod exec;
 pub(crate) mod fmath;
 pub(crate) mod kernels;
@@ -69,9 +82,20 @@ impl Compiled {
         Ok(Compiled { module, program })
     }
 
-    /// Execute the compiled register program (the default path).
+    /// Execute the compiled register program (the default path, at the
+    /// `DIVEBATCH_INTERP_TIER` process-default tier).
     pub(crate) fn execute(&self, args: &[&Literal]) -> Result<Literal> {
         self.program.execute(args)
+    }
+
+    /// Execute at an explicit tier (bit-identical across tiers; used by
+    /// the differential suite and the `perf_interp_simd` bench).
+    pub(crate) fn execute_with_tier(
+        &self,
+        args: &[&Literal],
+        tier: crate::InterpTier,
+    ) -> Result<Literal> {
+        self.program.execute_with_tier(args, tier)
     }
 
     /// Execute through the retained tree-walk reference evaluator.
@@ -572,5 +596,164 @@ ENTRY main.20 {
             .unwrap();
         let b = Literal::vec1(&[0.5f32, -1.0, 2.0, 0.0]);
         eval(text, &[&a, &b]);
+    }
+
+    /// Execute at both tiers and require byte-identical outputs (the
+    /// pinned lanes contract makes tier choice bit-invisible).
+    fn assert_tiers_bitwise(text: &str, args: &[&Literal]) {
+        let compiled = Compiled::compile(text).unwrap();
+        let mut simd = compiled
+            .execute_with_tier(args, crate::InterpTier::Simd)
+            .unwrap();
+        let mut scalar = compiled
+            .execute_with_tier(args, crate::InterpTier::Scalar)
+            .unwrap();
+        let sp = match simd.decompose_tuple() {
+            Ok(parts) => parts,
+            Err(_) => vec![simd],
+        };
+        let cp = match scalar.decompose_tuple() {
+            Ok(parts) => parts,
+            Err(_) => vec![scalar],
+        };
+        assert_eq!(sp.len(), cp.len());
+        for (p, q) in sp.iter().zip(&cp) {
+            if let (Ok(pv), Ok(qv)) = (p.to_vec::<f32>(), q.to_vec::<f32>()) {
+                assert_eq!(
+                    pv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    qv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "SIMD and scalar tiers diverged"
+                );
+            }
+            if let (Ok(pv), Ok(qv)) = (p.to_vec::<i32>(), q.to_vec::<i32>()) {
+                assert_eq!(pv, qv);
+            }
+        }
+    }
+
+    #[test]
+    fn tiers_agree_bitwise_on_odd_shapes() {
+        // k=11 and length-13 vectors exercise every scalar tail; the
+        // reduce shapes cover grouped (trailing), flat (leading), and
+        // full-to-scalar layouts.
+        let text = r#"
+HloModule t
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.14 {
+  Arg_0.1 = f32[3,11]{1,0} parameter(0)
+  Arg_1.2 = f32[11]{0} parameter(1)
+  Arg_2.3 = f32[3,13]{1,0} parameter(2)
+  dot.4 = f32[3]{0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  exponential.5 = f32[3]{0} exponential(dot.4)
+  constant.6 = f32[] constant(0.5)
+  reduce.7 = f32[] reduce(exponential.5, constant.6), dimensions={0}, to_apply=region_0.1
+  reduce.8 = f32[3]{0} reduce(Arg_2.3, constant.6), dimensions={1}, to_apply=region_0.1
+  reduce.9 = f32[13]{0} reduce(Arg_2.3, constant.6), dimensions={0}, to_apply=region_0.1
+  dot.10 = f32[11,13]{1,0} dot(Arg_0.1, Arg_2.3), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+  ROOT tuple.11 = (f32[3]{0}, f32[], f32[3]{0}, f32[13]{0}, f32[11,13]{1,0}) tuple(dot.4, reduce.7, reduce.8, reduce.9, dot.10)
+}
+"#;
+        let a = Literal::vec1(
+            &(0..33)
+                .map(|i| ((i * 37 % 17) as f32) * 0.21 - 1.7)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[3, 11])
+        .unwrap();
+        let b = Literal::vec1(
+            &(0..11)
+                .map(|i| ((i * 29 % 13) as f32) * 0.33 - 2.1)
+                .collect::<Vec<f32>>(),
+        );
+        let c = Literal::vec1(
+            &(0..39)
+                .map(|i| ((i * 53 % 19) as f32) * 0.17 - 1.3)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[3, 13])
+        .unwrap();
+        assert_tiers_bitwise(text, &[&a, &b, &c]);
+        // And both stay within the differential tolerance of the
+        // tree-walk reference.
+        eval(text, &[&a, &b, &c]);
+    }
+
+    #[test]
+    fn cost_model_selects_expected_plans() {
+        use super::cost::{DotAlgo, ReduceAlgo};
+        let text = r#"
+HloModule t
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+ENTRY main.12 {
+  Arg_0.1 = f32[4,6]{1,0} parameter(0)
+  Arg_1.2 = f32[6,5]{1,0} parameter(1)
+  Arg_2.3 = f32[5,6]{1,0} parameter(2)
+  Arg_3.4 = f32[6]{0} parameter(3)
+  dot.5 = f32[4,5]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  dot.6 = f32[4,5]{1,0} dot(Arg_0.1, Arg_2.3), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  dot.7 = f32[4]{0} dot(Arg_0.1, Arg_3.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.8 = f32[] constant(0)
+  reduce.9 = f32[4]{0} reduce(dot.5, constant.8), dimensions={1}, to_apply=region_0.1
+  reduce.10 = f32[5]{0} reduce(dot.6, constant.8), dimensions={0}, to_apply=region_0.1
+  ROOT tuple.11 = (f32[4]{0}, f32[4]{0}, f32[5]{0}) tuple(dot.7, reduce.9, reduce.10)
+}
+"#;
+        let compiled = Compiled::compile(text).unwrap();
+        let dot_algos: Vec<DotAlgo> = compiled
+            .program
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Dot(p) => Some(p.algo),
+                _ => None,
+            })
+            .collect();
+        // dot.5: rhs [6,5] contracting dim 0 -> r_kstride=5, iota columns.
+        // dot.6: rhs [5,6] contracting dim 1 -> fully contiguous, n=5>=NR.
+        // dot.7: rhs [6] vector -> contiguous, single column.
+        assert_eq!(
+            dot_algos,
+            vec![DotAlgo::AxpyLanes, DotAlgo::LanesTiled, DotAlgo::LanesContig]
+        );
+        let reduce_algos: Vec<ReduceAlgo> = compiled
+            .program
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Reduce(p) => Some(p.algo),
+                _ => None,
+            })
+            .collect();
+        // reduce.9 folds the trailing dim (grouped); reduce.10 the
+        // leading dim (interleaved -> flat walk).
+        assert_eq!(
+            reduce_algos,
+            vec![ReduceAlgo::GroupedLanes { group: 5 }, ReduceAlgo::Flat]
+        );
+        // Numerics still match the reference on this module.
+        let a = Literal::vec1(&(0..24).map(|i| i as f32 * 0.1).collect::<Vec<f32>>())
+            .reshape(&[4, 6])
+            .unwrap();
+        let b = Literal::vec1(&(0..30).map(|i| 1.0 - i as f32 * 0.05).collect::<Vec<f32>>())
+            .reshape(&[6, 5])
+            .unwrap();
+        let c = Literal::vec1(&(0..30).map(|i| (i as f32 * 0.07) - 0.9).collect::<Vec<f32>>())
+            .reshape(&[5, 6])
+            .unwrap();
+        let d = Literal::vec1(&(0..6).map(|i| i as f32 * 0.4 - 1.0).collect::<Vec<f32>>());
+        assert_tiers_bitwise(text, &[&a, &b, &c, &d]);
+        eval(text, &[&a, &b, &c, &d]);
     }
 }

@@ -28,6 +28,7 @@
 use std::sync::atomic::AtomicU64;
 use std::sync::Mutex;
 
+use super::cost;
 use super::exec::Arena;
 use super::parse::{
     coords_of, declared_dense, elements, err, strides, Computation, ConstPayload, DType, Module,
@@ -189,6 +190,10 @@ pub(crate) struct DotPlan {
     pub(crate) r_base: Vec<u32>,
     pub(crate) l_kstride: usize,
     pub(crate) r_kstride: usize,
+    /// Execution strategy picked by the compile-time cost model
+    /// ([`super::cost::select_dot_algo`]).  Strategy only: every variant
+    /// follows the pinned lanes contract, so this never affects bits.
+    pub(crate) algo: cost::DotAlgo,
 }
 
 /// A scalar operand of a compiled reduce region.
@@ -235,10 +240,15 @@ pub(crate) struct ReducePlan {
     pub(crate) init: Ref,
     pub(crate) out: u32,
     pub(crate) out_elems: usize,
-    /// `map[in_flat] = out_flat`; iteration is flat-ascending, matching
-    /// the reference evaluator bit for bit.
+    /// `map[in_flat] = out_flat`; flat-ascending iteration order for the
+    /// [`super::cost::ReduceAlgo::Flat`] strategy (matching the reference
+    /// evaluator bit for bit).
     pub(crate) map: Vec<u32>,
     pub(crate) region: RegionFn,
+    /// Execution strategy picked by the compile-time cost model: the
+    /// grouped-contiguous-Add layout runs the pinned lanes contract,
+    /// everything else the flat walk.
+    pub(crate) algo: cost::ReduceAlgo,
 }
 
 /// One execution step of the register program.
@@ -642,9 +652,11 @@ impl<'m> Lowering<'m> {
                 if !self.fusable(head) || self.inlined[head] {
                     continue;
                 }
+                let (max_ops, max_inputs) = cost::fusion_caps(elements(&self.dims[head]));
+                debug_assert!(max_ops <= MAX_FUSED_OPS && max_inputs <= MAX_FUSED_INPUTS);
                 loop {
                     let (ops, inputs) = self.group_size(head);
-                    if ops <= MAX_FUSED_OPS && inputs <= MAX_FUSED_INPUTS {
+                    if ops <= max_ops && inputs <= max_inputs {
                         break;
                     }
                     let demoted = self.demote_one(head);
@@ -1397,6 +1409,8 @@ impl<'m> Lowering<'m> {
                 b as u32
             })
             .collect();
+        let r_base_is_iota = r_base.iter().enumerate().all(|(j, &b)| b as usize == j);
+        let algo = cost::select_dot_algo(m, n, k, l_st[lc], r_st[rc], r_base_is_iota);
         Ok(Step::Dot(DotPlan {
             lhs,
             rhs,
@@ -1408,6 +1422,7 @@ impl<'m> Lowering<'m> {
             r_base,
             l_kstride: l_st[lc],
             r_kstride: r_st[rc],
+            algo,
         }))
     }
 
@@ -1446,6 +1461,8 @@ impl<'m> Lowering<'m> {
             .as_deref()
             .ok_or_else(|| err("reduce without to_apply".into()))?;
         let region = compile_region(self.module.computation(comp_name)?)?;
+        let algo =
+            cost::select_reduce_algo(&map, out_elems, matches!(region, RegionFn::Add));
         Ok(Step::Reduce(ReducePlan {
             data,
             init,
@@ -1453,6 +1470,7 @@ impl<'m> Lowering<'m> {
             out_elems,
             map,
             region,
+            algo,
         }))
     }
 }

@@ -18,8 +18,14 @@
 //!   [`PjRtLoadedExecutable::execute`] does near-zero allocation in steady
 //!   state and borrows its argument [`Literal`]s rather than cloning them.
 //!   Transcendentals use in-crate deterministic kernels (interp/fmath.rs),
-//!   so compiled results are bit-identical across platforms.  The pre-PR
-//!   tree-walk evaluator is retained as
+//!   so compiled results are bit-identical across platforms.  Compiled
+//!   execution runs in one of two tiers ([`InterpTier`]): the default
+//!   SIMD tier (8-lane blocked kernels, cost-model-selected dot variants,
+//!   AVX where available) and a scalar tier selectable at runtime with
+//!   `DIVEBATCH_INTERP_TIER=scalar`.  Both tiers implement the same
+//!   pinned 8-lane accumulation contract, so they are bit-identical —
+//!   the tier is a pure speed knob (`perf_interp_simd` / BENCH_6.json
+//!   gates the win).  The pre-PR tree-walk evaluator is retained as
 //!   [`PjRtLoadedExecutable::execute_reference`] for differential tests
 //!   and the `perf_interp` bench baseline (see BENCH_4.json at the repo
 //!   root).  This is the backend the numeric test suite runs on
@@ -43,7 +49,7 @@
 
 use std::borrow::Borrow;
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 mod interp;
 
@@ -53,6 +59,40 @@ pub const STUB_PLATFORM: &str = "stub";
 
 /// Platform name reported by the pure-Rust HLO interpreter backend.
 pub const INTERP_PLATFORM: &str = "interp";
+
+/// Execution tier of the compiled interpreter.
+///
+/// The tier selects the kernel *strategy*, never the numerics: both tiers
+/// implement the same pinned 8-lane accumulation contract (see
+/// `interp/kernels.rs`), so results — including canonical run records and
+/// the golden byte pin — are identical bit for bit.  `Scalar` exists as a
+/// runtime escape hatch (`DIVEBATCH_INTERP_TIER=scalar`) and as the
+/// baseline the `perf_interp_simd` bench measures the SIMD tier against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InterpTier {
+    /// 8-lane blocked kernels, tiled/axpy dot variants, AVX where the CPU
+    /// has it (the default).
+    #[default]
+    Simd,
+    /// Plain scalar loops implementing the identical lane contract.
+    Scalar,
+}
+
+impl InterpTier {
+    /// The process-default tier: `DIVEBATCH_INTERP_TIER=scalar` forces
+    /// the scalar tier; anything else (including unset) selects SIMD.
+    /// Read once and cached — tests and benches that need a specific tier
+    /// pass it explicitly instead of racing on process-global env state.
+    pub fn from_env() -> InterpTier {
+        static TIER: OnceLock<InterpTier> = OnceLock::new();
+        *TIER.get_or_init(|| {
+            match std::env::var("DIVEBATCH_INTERP_TIER").as_deref() {
+                Ok("scalar") => InterpTier::Scalar,
+                _ => InterpTier::Simd,
+            }
+        })
+    }
+}
 
 /// Error type mirroring the real binding's (anyhow-compatible: it is a
 /// `std::error::Error` and `Send + Sync`).
@@ -383,6 +423,24 @@ impl PjRtLoadedExecutable {
         };
         let lits: Vec<&Literal> = args.iter().map(Borrow::borrow).collect();
         let value = program.execute(&lits)?;
+        Ok(vec![vec![PjRtBuffer { value }]])
+    }
+
+    /// [`PjRtLoadedExecutable::execute`] at an explicit [`InterpTier`]
+    /// instead of the `DIVEBATCH_INTERP_TIER` process default.  Both
+    /// tiers return identical bits; the differential suite and the
+    /// `perf_interp_simd` bench use this to compare them without mutating
+    /// process-global env state.
+    pub fn execute_with_tier<L: Borrow<Literal>>(
+        &self,
+        args: &[L],
+        tier: InterpTier,
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let Some(program) = &self.program else {
+            return Err(Error::StubBackend("cannot execute compiled HLO".into()));
+        };
+        let lits: Vec<&Literal> = args.iter().map(Borrow::borrow).collect();
+        let value = program.execute_with_tier(&lits, tier)?;
         Ok(vec![vec![PjRtBuffer { value }]])
     }
 
