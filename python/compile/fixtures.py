@@ -7,10 +7,15 @@ model (``tinylogreg8``).  This script generates those artifacts once, at
 authoring time; the files it writes are checked in, so `cargo test` never
 needs Python.
 
-Two fixture models are emitted: ``tinylogreg8`` (the (4, 8) ladder the
-trainer/golden-record suites pin) and ``steplogreg8`` (a (8, 64) ladder
-whose 64-row rung feeds the sharded step executor's speedup bench and
-``--step-jobs`` equivalence tests with multi-block plans).
+Four fixture models are emitted — the interpreter's "model zoo ladder":
+``tinylogreg8`` (the (4, 8) ladder the trainer/golden-record suites pin),
+``steplogreg8`` (a (8, 64) ladder whose 64-row rung feeds the sharded step
+executor's speedup bench and ``--step-jobs`` equivalence tests with
+multi-block plans), ``tinymlp8`` (the paper's nonconvex MLP with the
+closed-form dense-trick sqnorm path), and ``tinyresnet4`` (the CIFAR-like
+conv net: its HLO exercises ``convolution`` forward/filter/input-grad
+forms, the chunked vmap(grad) ``while`` loop with dynamic slices, and
+``call``/``reverse`` — the ops the interpreter grew to run the real zoo).
 
 Two outputs:
 
@@ -62,16 +67,29 @@ from compile import aot  # noqa: E402  (must import after the patch)
 from compile import model as step_builders  # noqa: E402
 from compile.models import REGISTRY  # noqa: E402
 
-FIXTURE_MODELS = ("tinylogreg8", "steplogreg8")
+FIXTURE_MODELS = ("tinylogreg8", "steplogreg8", "tinymlp8", "tinyresnet4")
 
 
-def golden_inputs(m: int, d: int) -> tuple[np.ndarray, ...]:
-    """Deterministic batch inputs (mirrors the Rust toy_dataset pattern)."""
-    params = np.array(
-        [0.3, -0.2, 0.05, 0.7, -0.4, 0.11, -0.09, 0.25, 0.02], dtype=np.float32
-    )
-    x = np.sin(np.arange(m * d, dtype=np.float32) * 0.37).reshape(m, d)
-    y = np.array([(i * 7) % 2 for i in range(m)], dtype=np.float32)
+def golden_inputs(model, m: int) -> tuple[np.ndarray, ...]:
+    """Deterministic batch inputs (mirrors the Rust toy_dataset pattern).
+
+    Shapes and label dtype come from the model; the d=8 logreg param
+    vector is pinned to its historical literal so the committed logreg
+    goldens stay bit-identical across regenerations.
+    """
+    p = model.param_count
+    if p == 9:
+        params = np.array(
+            [0.3, -0.2, 0.05, 0.7, -0.4, 0.11, -0.09, 0.25, 0.02], dtype=np.float32
+        )
+    else:
+        params = (np.sin(np.arange(p, dtype=np.float32) * 0.13) * 0.1).astype(np.float32)
+    n = m * int(np.prod(model.input_shape))
+    x = np.sin(np.arange(n, dtype=np.float32) * 0.37).reshape((m, *model.input_shape))
+    if model.label_dtype == "s32":
+        y = np.array([(i * 7) % model.num_classes for i in range(m)], dtype=np.int32)
+    else:
+        y = np.array([(i * 7) % 2 for i in range(m)], dtype=np.float32)
     # One padding row (w = 0) when m > 4 so the goldens pin the padding
     # no-op behaviour too.
     w = np.ones(m, dtype=np.float32)
@@ -95,10 +113,9 @@ def flat(a) -> list[float]:
 
 def build_golden(model, entry) -> dict:
     """Evaluate every entry's step function on the deterministic inputs."""
-    d = model.input_shape[0]
     out: dict[str, dict] = {}
     for m in entry.ladder:
-        args = tuple(jnp.asarray(a) for a in golden_inputs(m, d))
+        args = tuple(jnp.asarray(a) for a in golden_inputs(model, m))
         for key, fn in (
             (f"train_div_b{m}", step_builders.make_train_div(model, entry.chunk)),
             (f"train_plain_b{m}", step_builders.make_train_plain(model)),

@@ -64,9 +64,22 @@ def softmax_ce(logits: jax.Array, y: jax.Array) -> jax.Array:
     """Per-sample softmax cross-entropy with integer labels.
 
     ``logits``: ``(m, k)``; ``y``: int32 labels ``(m,)``.
+
+    Written as a shifted explicit log-sum-exp plus an iota/one-hot label
+    pick instead of ``logsumexp`` + ``take_along_axis``: the values and
+    gradients are identical (the shift is under ``stop_gradient``), but
+    this form lowers to HLO the interp backend executes directly —
+    reduce/exp/log/iota/compare — with no gather and no reduce-max VJP
+    (select-and-scatter).
     """
-    lse = jax.scipy.special.logsumexp(logits, axis=-1)
-    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[:, 0]
+    k = logits.shape[-1]
+    onehot = (jax.lax.iota(jnp.int32, k)[None, :] == y[:, None].astype(jnp.int32)).astype(
+        jnp.float32
+    )
+    picked = jnp.sum(logits * onehot, axis=-1)
     return lse - picked
 
 

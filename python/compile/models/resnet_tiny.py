@@ -88,9 +88,16 @@ def make_resnet_tiny(
         return h @ p["head_w"] + p["head_b"]
 
     def correct(logits: jax.Array, y: jax.Array) -> jax.Array:
-        return (jnp.argmax(logits, axis=-1).astype(jnp.int32) == y.astype(jnp.int32)).astype(
+        # "Picked logit >= row max" instead of argmax == y: lowers to
+        # reduce/compare HLO the interp backend executes (argmax lowers
+        # to a variadic reduce it rejects).  Deviation: exact ties on the
+        # max logit count as correct; measure-zero for float logits.
+        k = logits.shape[-1]
+        onehot = (jax.lax.iota(jnp.int32, k)[None, :] == y[:, None].astype(jnp.int32)).astype(
             jnp.float32
         )
+        picked = jnp.sum(logits * onehot, axis=-1)
+        return (picked >= jnp.max(logits, axis=-1)).astype(jnp.float32)
 
     return Model(
         name=name or f"resnet{num_classes}",

@@ -1,6 +1,8 @@
 """CI perf-smoke gate: compare a fresh perf bench result to its baseline.
 
-Usage: check_bench.py NEW_BENCH_JSON COMMITTED_BENCH_JSON
+Usage:
+    check_bench.py NEW_BENCH_JSON COMMITTED_BENCH_JSON
+    check_bench.py --bless ARTIFACT_JSON COMMITTED_BENCH_JSON
 
 Works for any bench emitting the ``{"entries": {key: {"speedup": x}}}``
 schema — today ``perf_interp`` (BENCH_4.json: compiled interpreter vs
@@ -16,6 +18,17 @@ in the files for humans.  While a committed file is still its bootstrap
 marker (``"bootstrap": true`` — the authoring environment had no Rust
 toolchain to measure a baseline), the comparison is skipped with a
 ``::warning::`` asking for the measured artifact to be committed.
+
+``--bless`` turns a green CI run's uploaded perf artifact into the
+committed baseline in one command: download the ``perf-bench-results``
+artifact, then e.g. ``check_bench.py --bless /tmp/BENCH_4.json
+BENCH_4.json``.  Blessing refuses to launder a bad run — the artifact
+must name the same bench, contain every entry the committed file gates,
+and clear every ``target_speedup_<entry>`` floor recorded in the
+committed file (the floors are the in-process DIVEBATCH_PERF_ENFORCE
+targets and are carried into the blessed file unchanged).  The rewritten
+baseline keeps the single-line sorted-key JSON form and records its
+provenance in ``note``.
 """
 
 from __future__ import annotations
@@ -26,8 +39,59 @@ import sys
 
 REGRESSION_FACTOR = 2.0
 
+TARGET_PREFIX = "target_speedup_"
+
+
+def bless(artifact_path: str, committed_path: str) -> int:
+    art = json.load(open(artifact_path))
+    committed = json.load(open(committed_path))
+    name = os.path.basename(committed_path)
+    problems = []
+    if art.get("bench") != committed.get("bench"):
+        problems.append(
+            f"bench name mismatch: artifact {art.get('bench')!r}"
+            f" vs committed {committed.get('bench')!r}"
+        )
+    entries = art.get("entries") or {}
+    if not entries:
+        problems.append("artifact has no entries — refusing to bless an empty run")
+    for key in committed.get("entries", {}):
+        if key not in entries:
+            problems.append(f"entry {key!r} gated by {name} is missing from the artifact")
+    floors = {k: v for k, v in committed.items() if k.startswith(TARGET_PREFIX)}
+    summary = []
+    for k, floor in sorted(floors.items()):
+        entry = k[len(TARGET_PREFIX) :]
+        got = entries.get(entry, {}).get("speedup")
+        if got is None:
+            problems.append(f"floor {k} has no measured speedup for {entry!r} in the artifact")
+        elif got < float(floor):
+            problems.append(f"{entry}: measured {got:.2f}x is below the {floor}x floor")
+        else:
+            summary.append(f"  {entry}: floor {floor}x -> measured {got:.2f}x")
+    if problems:
+        print(f"refusing to bless {name}:")
+        print("\n".join(f"  {p}" for p in problems))
+        return 1
+    blessed = dict(art)
+    blessed.update(floors)  # keep the enforce-target floors on record
+    blessed["bootstrap"] = False
+    blessed["note"] = (
+        "Measured baseline blessed from a green CI run's perf-smoke artifact"
+        " via check_bench.py --bless; the target_speedup_* floors are the"
+        " in-process DIVEBATCH_PERF_ENFORCE targets the artifact cleared."
+    )
+    with open(committed_path, "w") as f:
+        json.dump(blessed, f, sort_keys=True, separators=(",", ":"))
+        f.write("\n")
+    print(f"blessed {name} from {os.path.basename(artifact_path)}:")
+    print("\n".join(summary))
+    return 0
+
 
 def main(argv: list[str]) -> int:
+    if len(argv) == 4 and argv[1] == "--bless":
+        return bless(argv[2], argv[3])
     if len(argv) != 3:
         print(__doc__)
         return 2

@@ -107,6 +107,73 @@ def _operand_name(tok: str) -> str:
     return tok.split()[-1].lstrip("%")
 
 
+def _strip_comments(s: str) -> str:
+    """Drop ``/* ... */`` comments (mirror of parse.rs strip_comments):
+    jax annotates long tuple types with ``/*index=N*/``.  An unterminated
+    comment drops the tail."""
+    out, i = [], 0
+    while True:
+        j = s.find("/*", i)
+        if j < 0:
+            out.append(s[i:])
+            break
+        out.append(s[i:j])
+        e = s.find("*/", j + 2)
+        if e < 0:
+            break
+        i = e + 2
+    return "".join(out)
+
+
+def _parse_window_spec(s: str):
+    """``window={size=3x3 stride=2x2 pad=1_1x1_1 rhs_dilate=2x2}`` →
+    per-dimension dicts, same defaulting as parse.rs parse_window_spec."""
+    fields = {}
+    for tok in s.strip().lstrip("{").rstrip("}").split():
+        key, val = tok.split("=", 1)
+        if key not in ("size", "stride", "pad", "lhs_dilate", "rhs_dilate"):
+            raise NotImplementedError(f"unsupported window key {key!r}")
+        fields[key] = val
+    size = [int(v) for v in fields["size"].split("x")]
+
+    def nums(key):
+        if key not in fields:
+            return [1] * len(size)
+        return [int(v) for v in fields[key].split("x")]
+
+    stride, lhs_d, rhs_d = nums("stride"), nums("lhs_dilate"), nums("rhs_dilate")
+    if "pad" in fields:
+        pad = [tuple(int(x) for x in p.split("_")) for p in fields["pad"].split("x")]
+    else:
+        pad = [(0, 0)] * len(size)
+    return [
+        {
+            "size": size[d],
+            "stride": stride[d],
+            "pad_lo": pad[d][0],
+            "pad_hi": pad[d][1],
+            "base_dilation": lhs_d[d],
+            "window_dilation": rhs_d[d],
+        }
+        for d in range(len(size))
+    ]
+
+
+def _dim_order(seg: str, bc: str, fc: str):
+    """One dim_labels segment → (batch pos, feature pos, spatial positions
+    sorted by digit) — mirror of program.rs parse_dim_order."""
+    b = f = None
+    sp: dict[int, int] = {}
+    for i, c in enumerate(seg):
+        if c == bc:
+            b = i
+        elif c == fc:
+            f = i
+        else:
+            sp[int(c)] = i
+    return b, f, [sp[d] for d in sorted(sp)]
+
+
 class Instr:
     __slots__ = ("name", "shape", "op", "operands", "attrs", "param", "literal", "is_root")
 
@@ -180,10 +247,28 @@ def _parse_instr(line: str) -> tuple[Instr, list[str]]:
             attrs["lhs_contracting"] = _parse_usize_set(val)
         elif key == "rhs_contracting_dims":
             attrs["rhs_contracting"] = _parse_usize_set(val)
+        elif key == "lhs_batch_dims":
+            attrs["lhs_batch"] = _parse_usize_set(val)
+        elif key == "rhs_batch_dims":
+            attrs["rhs_batch"] = _parse_usize_set(val)
         elif key == "index":
             attrs["index"] = int(val.strip())
         elif key == "iota_dimension":
             attrs["iota_dimension"] = int(val.strip())
+        elif key == "window":
+            attrs["window"] = _parse_window_spec(val)
+        elif key == "dim_labels":
+            attrs["dim_labels"] = val.strip()
+        elif key == "feature_group_count":
+            attrs["feature_group_count"] = int(val.strip())
+        elif key == "batch_group_count":
+            attrs["batch_group_count"] = int(val.strip())
+        elif key == "condition":
+            attrs["condition"] = val.strip().lstrip("%")
+        elif key == "body":
+            attrs["body"] = val.strip().lstrip("%")
+        elif key == "dynamic_slice_sizes":
+            attrs["dynamic_slice_sizes"] = _parse_usize_set(val)
     ins.attrs = attrs
 
     ins.param = None
@@ -226,7 +311,7 @@ class Module:
         self.entry = None
         cur = None
         for raw in text.splitlines():
-            line = raw.strip()
+            line = _strip_comments(raw).strip()
             if not line or line.startswith("HloModule") or line.startswith("//"):
                 continue
             if line == "}":
@@ -257,6 +342,9 @@ class Module:
     def evaluate(self, args):
         comp = self.computations[self.entry]
         assert len(args) == len(comp.params), "argument arity"
+        return self._eval_computation(comp, args)
+
+    def _eval_computation(self, comp, args):
         env = [None] * len(comp.instrs)
         for idx in range(len(comp.instrs)):
             env[idx] = self._eval(comp, idx, env, args)
@@ -267,7 +355,8 @@ class Module:
         op = ins.op
         opv = lambda i: env[ins.operands[i]]  # noqa: E731
         if op == "parameter":
-            return np.asarray(args[ins.param])
+            a = args[ins.param]
+            return a if isinstance(a, tuple) else np.asarray(a)
         if op == "constant":
             return ins.literal
         if op in _BINARY_F32:
@@ -313,6 +402,38 @@ class Module:
             return tuple(opv(i) for i in range(len(ins.operands)))
         if op == "get-tuple-element":
             return opv(0)[ins.attrs["index"]]
+        if op == "reverse":
+            dims = ins.attrs.get("dimensions", [])
+            return np.flip(opv(0), axis=tuple(dims)).copy() if dims else opv(0).copy()
+        if op == "convolution":
+            return _convolution(opv(0), opv(1), ins.attrs)
+        if op == "dynamic-slice":
+            src = opv(0)
+            sizes = ins.attrs["dynamic_slice_sizes"]
+            offs = [
+                _clamp_start(opv(1 + d), src.shape[d], sizes[d]) for d in range(src.ndim)
+            ]
+            index = tuple(slice(o, o + sz) for o, sz in zip(offs, sizes))
+            return src[index].copy()
+        if op == "dynamic-update-slice":
+            src, upd = opv(0), opv(1)
+            offs = [
+                _clamp_start(opv(2 + d), src.shape[d], upd.shape[d])
+                for d in range(src.ndim)
+            ]
+            out = src.copy()
+            out[tuple(slice(o, o + sz) for o, sz in zip(offs, upd.shape))] = upd
+            return out
+        if op == "call":
+            callee = self.computation(ins.attrs["to_apply"])
+            return self._eval_computation(callee, [opv(i) for i in range(len(ins.operands))])
+        if op == "while":
+            cond = self.computation(ins.attrs["condition"])
+            body = self.computation(ins.attrs["body"])
+            state = opv(0)
+            while bool(np.asarray(self._eval_computation(cond, [state])).reshape(())):
+                state = self._eval_computation(body, [state])
+            return state
         raise NotImplementedError(op)
 
     def _reduce(self, data, init, attrs):
@@ -534,25 +655,104 @@ def _pad(a, fill, spec):
 def _dot(a, b, attrs):
     lc = attrs["lhs_contracting"][0]
     rc = attrs["rhs_contracting"][0]
+    lbd = attrs.get("lhs_batch", [])
+    rbd = attrs.get("rhs_batch", [])
     k = a.shape[lc]
-    # Collapse to (M, K) and (K, N) — free dims in original order, which
-    # is exactly the compiled plan's l_base/r_base ordering.
-    lperm = [d for d in range(a.ndim) if d != lc] + [lc]
-    rperm = [rc] + [d for d in range(b.ndim) if d != rc]
-    l2 = np.transpose(a, lperm).reshape(-1, k)
-    r2 = np.transpose(b, rperm).reshape(k, -1)
-    out_dims = tuple(a.shape[d] for d in range(a.ndim) if d != lc) + tuple(
-        b.shape[d] for d in range(b.ndim) if d != rc
+    # Collapse to (B, M, K) and (B, K, N) — batch dims first, free dims in
+    # original order, which is exactly the compiled plan's per-slice
+    # l_base/r_base ordering (b=1 for an unbatched dot).
+    lfree = [d for d in range(a.ndim) if d != lc and d not in lbd]
+    rfree = [d for d in range(b.ndim) if d != rc and d not in rbd]
+    l3 = np.transpose(a, lbd + lfree + [lc]).reshape(-1, int(np.prod([a.shape[d] for d in lfree], dtype=np.int64)), k)
+    r3 = np.transpose(b, rbd + [rc] + rfree).reshape(l3.shape[0], k, -1)
+    out_dims = (
+        tuple(a.shape[d] for d in lbd)
+        + tuple(a.shape[d] for d in lfree)
+        + tuple(b.shape[d] for d in rfree)
     )
-    # Pinned 8-lane accumulation (the contract shared by every compiled
-    # dot variant): contribution kk lands in lane kk % 8, ascending kk,
-    # mul then add (no FMA), then the fixed hfold8 tree fold.
+    slices = [_lanes_matmul(l3[bx], r3[bx]) for bx in range(l3.shape[0])]
+    return np.stack(slices).reshape(out_dims)
+
+
+def _lanes_matmul(l2, r2):
+    """(M, K) x (K, N) under the pinned 8-lane accumulation contract
+    shared by every compiled dot variant: contribution kk lands in lane
+    kk % 8, ascending kk, mul then add (no FMA), then the fixed hfold8
+    tree fold."""
+    k = l2.shape[1]
     lanes = [np.zeros((l2.shape[0], r2.shape[1]), dtype=np.float32) for _ in range(8)]
     with np.errstate(all="ignore"):
         for kk in range(k):
             lanes[kk % 8] = lanes[kk % 8] + l2[:, kk : kk + 1] * r2[kk : kk + 1, :]
-        acc = _fold8(lanes)
-    return acc.reshape(out_dims)
+        return _fold8(lanes)
+
+
+def _clamp_start(v, dim: int, size: int) -> int:
+    # HLO dynamic-slice start clamp: start.clamp(0, dim - size), exactly
+    # like exec.rs start_offsets / reference.rs dynamic_slice.
+    return max(0, min(int(np.asarray(v).reshape(())), dim - size))
+
+
+def _convolution(a, b, attrs):
+    """Mirror of the compiled im2col convolution (program.rs lower_conv +
+    the Conv step in exec.rs): per feature group, gather the input patch
+    matrix (M, K) with K ordered kernel-spatial-outer / group-local input
+    feature fastest (zero fill outside the padded extent), gather the
+    kernel matrix (K, Ng), multiply under the pinned-lanes contract, and
+    scatter into the declared output layout.  Bit-identical to both Rust
+    tiers because the lane assignment depends only on the shared K order."""
+    in_seg, rest = attrs["dim_labels"].split("_", 1)
+    ker_seg, out_seg = rest.split("->", 1)
+    ib, if_, isp = _dim_order(in_seg, "b", "f")
+    ki_, ko_, ksp = _dim_order(ker_seg, "i", "o")
+    ob, of_, osp = _dim_order(out_seg, "b", "f")
+    window = attrs["window"]
+    groups = attrs.get("feature_group_count", 1)
+    batch, ci = a.shape[ib], a.shape[if_]
+    ki, ko = b.shape[ki_], b.shape[ko_]
+    assert ci == groups * ki and ko % groups == 0, "feature_group_count partition"
+    ng = ko // groups
+    in_sp = [a.shape[p] for p in isp]
+    ker_sp = [b.shape[p] for p in ksp]
+    s = len(isp)
+    out_sp = []
+    for d in range(s):
+        w = window[d]
+        assert w["base_dilation"] == 1, "lhs_dilate unsupported (as in Rust)"
+        extent = (w["size"] - 1) * w["window_dilation"] + 1
+        out_sp.append((in_sp[d] + w["pad_lo"] + w["pad_hi"] - extent) // w["stride"] + 1)
+    # Canonical layouts: input (B, CI, spatial-flat), kernel (KI, KO,
+    # kernel-spatial-flat).
+    lt = np.transpose(a, [ib, if_] + isp).reshape(batch, ci, -1)
+    kt = np.transpose(b, [ki_, ko_] + ksp).reshape(ki, ko, -1)
+    osp_elems = int(np.prod(out_sp)) if out_sp else 1
+    ksp_elems = int(np.prod(ker_sp)) if ker_sp else 1
+    oc = np.indices(out_sp).reshape(s, -1) if s else np.zeros((0, 1), dtype=np.int64)
+    kc = np.indices(ker_sp).reshape(s, -1) if s else np.zeros((0, 1), dtype=np.int64)
+    in_st = _row_major_strides(in_sp)
+    flat = np.zeros((osp_elems, ksp_elems), dtype=np.int64)
+    inside = np.ones((osp_elems, ksp_elems), dtype=bool)
+    for d in range(s):
+        w = window[d]
+        iy = oc[d][:, None] * w["stride"] - w["pad_lo"] + kc[d][None, :] * w["window_dilation"]
+        inside &= (iy >= 0) & (iy < in_sp[d])
+        flat += np.clip(iy, 0, in_sp[d] - 1) * in_st[d]
+    out = np.zeros((batch, ko, osp_elems), dtype=np.float32)
+    for gx in range(groups):
+        # patch[r, c]: r = b*osp + ospi, c = kspi*ki + fi — kernels::pad
+        # with the compiled patch_map (u32::MAX cells -> 0.0 fill).
+        patch = lt[:, gx * ki : (gx + 1) * ki, :][:, :, flat]  # (B, ki, osp, ksp)
+        patch = np.where(inside[None, None], patch, np.float32(0))
+        patch = patch.transpose(0, 2, 3, 1).reshape(batch * osp_elems, ksp_elems * ki)
+        w2 = kt[:, gx * ng : (gx + 1) * ng, :].transpose(2, 0, 1).reshape(ksp_elems * ki, ng)
+        acc = _lanes_matmul(patch, w2)  # (M, ng)
+        out[:, gx * ng : (gx + 1) * ng, :] = acc.reshape(batch, osp_elems, ng).transpose(
+            0, 2, 1
+        )
+    out = out.reshape([batch, ko] + out_sp)
+    # Inverse-permute the canonical (b, f, spatial...) axes back to the
+    # declared output layout.
+    return np.transpose(out, np.argsort([ob, of_] + osp)).copy()
 
 
 def _fold8(lanes):

@@ -36,8 +36,10 @@ def run(fixtures_dir: str) -> list[str]:
         comp = exe.module.computations[exe.module.entry]
         args = []
         for j, pidx in zip(case["inputs"], comp.params):
-            _, dims = comp.instrs[pidx].shape
-            args.append(np.array(j, dtype=np.float32).reshape(dims))
+            dtype, dims = comp.instrs[pidx].shape
+            # The golden json stores every input as floats; build each arg
+            # in the entry's declared parameter dtype (s32 labels etc.).
+            args.append(np.array(j, dtype=np.float64).astype(dtype).reshape(dims))
         outs = exe.run(args)
         wants = case["outputs"]
         if len(outs) != len(wants):

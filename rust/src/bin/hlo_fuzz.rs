@@ -1,0 +1,347 @@
+//! Deterministic mutation fuzzer for the HLO text parser and lowerer.
+//!
+//! Seeds from the committed fixture corpus (`tests/fixtures/artifacts/`),
+//! applies small textual mutations, and feeds each result to the interp
+//! backend's compile path.  The invariant under test: malformed input may
+//! be *rejected* (`Err`) but must never panic.  Compilation only — a
+//! mutated `while` body need not terminate, so nothing is executed.
+//!
+//! No external fuzzing dependency: the mutation engine is the crate's own
+//! deterministic [`Rng`], so any failure reproduces exactly from
+//! `--seed`/`--iters`.  On startup the unmutated corpus must compile, so
+//! the binary doubles as a fixture-validity check.
+//!
+//! Usage: `hlo_fuzz [--iters N] [--seed S] [--verbose]`
+
+use divebatch::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Grammar fragments spliced into mutated modules so the parser's attribute
+/// paths (conv windows, while bodies, slices, batched dots) see adversarial
+/// input even when a byte flip alone would miss them.
+const DICT: &[&str] = &[
+    "f32[",
+    "s32[",
+    "pred[]",
+    "while(",
+    "condition=region_0.1",
+    "body=region_0.1",
+    "convolution(",
+    "window={size=3x3 pad=1_1x1_1}",
+    "dim_labels=b01f_01io->b01f",
+    "feature_group_count=3",
+    "batch_group_count=2",
+    "dynamic_slice_sizes={1,4}",
+    "lhs_batch_dims={0}",
+    "rhs_contracting_dims={1}",
+    "slice={[0:4],[1:3:2]}",
+    "padding=1_1x0_2",
+    "to_apply=",
+    "/*index=7*/",
+    "ROOT ",
+    "tuple(",
+    "->",
+    "%",
+];
+
+/// Skip mutants whose declared shapes multiply out past this many elements.
+/// Lowering allocates index maps proportional to declared shape sizes; the
+/// guard keeps a lucky digit merge from turning the fuzz loop into an OOM
+/// test.  Everything under the cap must still compile or reject cleanly.
+const MAX_FUZZ_ELEMENTS: u64 = 1 << 22;
+
+struct FuzzStats {
+    compiled: u64,
+    rejected: u64,
+    skipped: u64,
+}
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/artifacts"
+    ))
+}
+
+/// Every `.hlo.txt` under the fixture artifact tree, sorted by path so the
+/// fuzz sequence is independent of directory iteration order.
+fn load_corpus() -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut stack = vec![corpus_dir()];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&dir) else {
+            continue;
+        };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.to_string_lossy().ends_with(".hlo.txt") {
+                if let Ok(text) = std::fs::read_to_string(&path) {
+                    out.push((path.display().to_string(), text));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Textual pre-filter: scan `[dims]` groups (pure digits/commas/spaces) and
+/// reject the mutant if any declared shape exceeds [`MAX_FUZZ_ELEMENTS`].
+/// Groups containing anything else (slice specs, layouts) are left to the
+/// real parser.
+fn declared_elements_ok(bytes: &[u8]) -> bool {
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != b'[' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut prod: u64 = 1;
+        let mut cur: u64 = 0;
+        let mut any_digit = false;
+        let mut dims_only = true;
+        while j < bytes.len() && bytes[j] != b']' {
+            match bytes[j] {
+                b'0'..=b'9' => {
+                    cur = cur.saturating_mul(10).saturating_add(u64::from(bytes[j] - b'0'));
+                    any_digit = true;
+                }
+                b',' => {
+                    if any_digit {
+                        prod = prod.saturating_mul(cur.max(1));
+                    }
+                    cur = 0;
+                    any_digit = false;
+                }
+                b' ' => {}
+                _ => {
+                    dims_only = false;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        if dims_only {
+            if any_digit {
+                prod = prod.saturating_mul(cur.max(1));
+            }
+            if prod > MAX_FUZZ_ELEMENTS {
+                return false;
+            }
+        }
+        i = j + 1;
+    }
+    true
+}
+
+fn printable(rng: &mut Rng) -> u8 {
+    b' ' + rng.below(95) as u8
+}
+
+/// One line-level mutation: delete, duplicate, or swap lines, or splice in
+/// a random line from a donor module.
+fn mutate_lines(lines: &mut Vec<String>, donor: &str, rng: &mut Rng) {
+    if lines.is_empty() {
+        return;
+    }
+    let n = lines.len() as u64;
+    match rng.below(4) {
+        0 => {
+            lines.remove(rng.below(n) as usize);
+        }
+        1 => {
+            let i = rng.below(n) as usize;
+            let dup = lines[i].clone();
+            lines.insert(i, dup);
+        }
+        2 => {
+            let i = rng.below(n) as usize;
+            let j = rng.below(n) as usize;
+            lines.swap(i, j);
+        }
+        _ => {
+            let donor_lines: Vec<&str> = donor.lines().collect();
+            if !donor_lines.is_empty() {
+                let src = donor_lines[rng.below(donor_lines.len() as u64) as usize];
+                lines[rng.below(n) as usize] = src.to_string();
+            }
+        }
+    }
+}
+
+/// One byte-level mutation: flip a byte to a printable, tweak a digit in
+/// place, insert a dictionary token, or truncate the tail.
+fn mutate_bytes(bytes: &mut Vec<u8>, rng: &mut Rng) {
+    if bytes.is_empty() {
+        return;
+    }
+    let n = bytes.len() as u64;
+    match rng.below(5) {
+        0 => {
+            let i = rng.below(n) as usize;
+            bytes[i] = printable(rng);
+        }
+        1 => {
+            let digits: Vec<usize> = bytes
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.is_ascii_digit())
+                .map(|(i, _)| i)
+                .collect();
+            if !digits.is_empty() {
+                let i = digits[rng.below(digits.len() as u64) as usize];
+                bytes[i] = b'0' + rng.below(10) as u8;
+            }
+        }
+        2 | 3 => {
+            let tok = DICT[rng.below(DICT.len() as u64) as usize].as_bytes();
+            let at = rng.below(n + 1) as usize;
+            bytes.splice(at..at, tok.iter().copied());
+        }
+        _ => {
+            bytes.truncate(rng.below(n) as usize);
+        }
+    }
+}
+
+fn mutant(corpus: &[(String, String)], rng: &mut Rng) -> (usize, Vec<u8>) {
+    let pick = rng.below(corpus.len() as u64) as usize;
+    let donor = &corpus[rng.below(corpus.len() as u64) as usize].1;
+    let mut lines: Vec<String> = corpus[pick].1.lines().map(str::to_string).collect();
+    for _ in 0..rng.below(3) {
+        mutate_lines(&mut lines, donor, rng);
+    }
+    let mut bytes = lines.join("\n").into_bytes();
+    for _ in 0..=rng.below(3) {
+        mutate_bytes(&mut bytes, rng);
+    }
+    (pick, bytes)
+}
+
+fn run_fuzz(corpus: &[(String, String)], iters: u64, seed: u64, verbose: bool) -> FuzzStats {
+    let client = xla::PjRtClient::interp();
+    let mut rng = Rng::new(seed);
+    let mut stats = FuzzStats {
+        compiled: 0,
+        rejected: 0,
+        skipped: 0,
+    };
+    for it in 0..iters {
+        let (pick, bytes) = mutant(corpus, &mut rng);
+        if !declared_elements_ok(&bytes) {
+            stats.skipped += 1;
+            if verbose {
+                println!("iter {it}: {} -> skipped (oversize shape)", corpus[pick].0);
+            }
+            continue;
+        }
+        let text = String::from_utf8_lossy(&bytes);
+        let proto = xla::HloModuleProto::from_text(&text);
+        let comp = xla::XlaComputation::from_proto(&proto);
+        match client.compile(&comp) {
+            Ok(_) => {
+                stats.compiled += 1;
+                if verbose {
+                    println!("iter {it}: {} -> compiled", corpus[pick].0);
+                }
+            }
+            Err(e) => {
+                stats.rejected += 1;
+                if verbose {
+                    println!("iter {it}: {} -> rejected: {e}", corpus[pick].0);
+                }
+            }
+        }
+    }
+    stats
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("hlo_fuzz: {msg}");
+    std::process::exit(2)
+}
+
+fn main() {
+    let mut iters: u64 = 500;
+    let mut seed: u64 = 0xD1EB;
+    let mut verbose = false;
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--iters" => match argv.next().and_then(|v| v.parse().ok()) {
+                Some(v) => iters = v,
+                None => die("--iters needs an integer"),
+            },
+            "--seed" => match argv.next().and_then(|v| v.parse().ok()) {
+                Some(v) => seed = v,
+                None => die("--seed needs an integer"),
+            },
+            "--verbose" => verbose = true,
+            other => die(&format!(
+                "unknown argument {other:?} (usage: hlo_fuzz [--iters N] [--seed S] [--verbose])"
+            )),
+        }
+    }
+
+    let corpus = load_corpus();
+    if corpus.is_empty() {
+        die(&format!("no .hlo.txt corpus under {:?}", corpus_dir()));
+    }
+
+    // The pristine corpus must compile — a failure here is a broken fixture,
+    // not a fuzz finding.
+    let client = xla::PjRtClient::interp();
+    for (name, text) in &corpus {
+        let comp = xla::XlaComputation::from_proto(&xla::HloModuleProto::from_text(text));
+        if let Err(e) = client.compile(&comp) {
+            die(&format!("seed corpus entry {name} fails to compile: {e}"));
+        }
+    }
+
+    let stats = run_fuzz(&corpus, iters, seed, verbose);
+    println!(
+        "hlo_fuzz: corpus {} files, {iters} iters, seed {seed}: {} compiled, {} rejected, {} skipped (oversize guard)",
+        corpus.len(),
+        stats.compiled,
+        stats.rejected,
+        stats.skipped
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The committed fixtures are the seed corpus; all of them must parse
+    /// and lower, and a short deterministic fuzz run must come back without
+    /// panicking.  CI runs a longer sweep via the release binary.
+    #[test]
+    fn corpus_compiles_and_short_fuzz_run_is_panic_free() {
+        let corpus = load_corpus();
+        assert!(
+            corpus.len() >= 20,
+            "expected the full fixture zoo as seed corpus, got {} files",
+            corpus.len()
+        );
+        let client = xla::PjRtClient::interp();
+        for (name, text) in &corpus {
+            let comp = xla::XlaComputation::from_proto(&xla::HloModuleProto::from_text(text));
+            client
+                .compile(&comp)
+                .unwrap_or_else(|e| panic!("seed corpus entry {name} fails to compile: {e}"));
+        }
+        let stats = run_fuzz(&corpus, 64, 7, false);
+        assert_eq!(stats.compiled + stats.rejected + stats.skipped, 64);
+    }
+
+    #[test]
+    fn oversize_guard_trips_on_merged_digit_runs() {
+        assert!(declared_elements_ok(b"x = f32[8,16] parameter(0)"));
+        assert!(declared_elements_ok(b"slice={[0:99999999]}"));
+        assert!(!declared_elements_ok(b"x = f32[99999,99999] parameter(0)"));
+        assert!(declared_elements_ok(b"tail = f32[4"));
+    }
+}

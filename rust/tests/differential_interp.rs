@@ -144,7 +144,7 @@ fn compiled_matches_reference_on_golden_inputs() {
     );
     let doc = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
     let models = doc.req("models").unwrap().as_obj().unwrap();
-    assert!(models.len() >= 2, "expected goldens for both fixture models");
+    assert!(models.len() >= 4, "expected goldens for the full model zoo");
     for (model_name, model_doc) in models {
         let model = manifest.model(model_name).unwrap();
         let entries = model_doc.as_obj().unwrap();
@@ -157,34 +157,50 @@ fn compiled_matches_reference_on_golden_inputs() {
                 .unwrap()
                 .iter()
                 .zip(&info.inputs)
-                .map(|(j, spec)| {
-                    let v: Vec<f32> = j
-                        .as_arr()
-                        .unwrap()
-                        .iter()
-                        .map(|x| x.as_f64().unwrap() as f32)
-                        .collect();
-                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&v).reshape(&dims).unwrap()
-                })
+                .map(|(j, spec)| golden_literal(j, spec))
                 .collect();
             assert_three_way(&exe, &inputs, GOLDEN_TOL, &format!("{model_name}/{key}"));
         }
     }
 }
 
-/// Property test: randomized inputs (16 draws per entry, seeded) through
-/// all three paths, on every fixture model (steplogreg8's 64-row entries
-/// are the step-parallel bench's workload).
+/// Build one golden input literal in the entry's declared dtype (the
+/// golden json stores every input as floats; tinyresnet4 labels are s32).
+fn golden_literal(j: &json::Json, spec: &TensorSpec) -> xla::Literal {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let vals = j.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap());
+    match spec.dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = vals.map(|x| x as f32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        Dtype::S32 => {
+            let v: Vec<i32> = vals.map(|x| x as i32).collect();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+    }
+}
+
+/// Property test: randomized inputs (seeded draws per entry) through all
+/// three paths, on every fixture model — the logreg pair (steplogreg8's
+/// 64-row entries are the step-parallel bench's workload), the MLP, and
+/// the conv resnet (fewer draws: its reference-path convolutions are the
+/// slow leg, and each draw already covers every conv/while/dynamic-slice
+/// site in the entry).
 #[test]
 fn compiled_matches_reference_on_randomized_inputs() {
     let manifest = fixtures_manifest();
     let mut rng = Rng::new(0xD1FF);
-    for model_name in ["tinylogreg8", "steplogreg8"] {
+    for (model_name, draws) in [
+        ("tinylogreg8", 16),
+        ("steplogreg8", 16),
+        ("tinymlp8", 16),
+        ("tinyresnet4", 4),
+    ] {
         let model = manifest.model(model_name).unwrap();
         for (key, info) in &model.entries {
             let exe = compile(&manifest, &info.file);
-            for trial in 0..16 {
+            for trial in 0..draws {
                 let inputs: Vec<xla::Literal> = info
                     .inputs
                     .iter()

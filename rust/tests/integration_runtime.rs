@@ -7,7 +7,9 @@
 //!
 //! With `DIVEBATCH_TEST_ARTIFACTS=<dir>` (and the real xla_extension
 //! binding linked), the `real_backend_*` tests additionally exercise the
-//! full tiny-artifact set (MLP, resnet) on a real PJRT backend.
+//! tiny-artifact set (MLP, resnet) on a real PJRT backend as a
+//! cross-check; the committed fixtures cover the same models on the
+//! interpreter, so no model in the zoo depends on the real backend.
 
 mod common;
 
@@ -341,10 +343,12 @@ fn interpreter_matches_python_golden() {
     let text = std::fs::read_to_string(path).expect("committed golden file");
     let doc = json::parse(&text).unwrap();
     let models = doc.req("models").unwrap().as_obj().unwrap();
-    assert!(
-        models.contains_key("tinylogreg8") && models.contains_key("steplogreg8"),
-        "expected goldens for both fixture models"
-    );
+    for required in ["tinylogreg8", "steplogreg8", "tinymlp8", "tinyresnet4"] {
+        assert!(
+            models.contains_key(required),
+            "expected goldens for fixture model {required}"
+        );
+    }
     let entries: Vec<(&String, &String, &json::Json)> = models
         .iter()
         .flat_map(|(model, doc)| {
@@ -353,7 +357,7 @@ fn interpreter_matches_python_golden() {
             e.iter().map(move |(key, case)| (model, key, case))
         })
         .collect();
-    assert!(entries.len() >= 14, "expected every fixture entry covered");
+    assert!(entries.len() >= 28, "expected every fixture entry covered");
 
     let to_f32 = |j: &json::Json| -> Vec<f32> {
         j.as_arr()
@@ -392,10 +396,18 @@ fn interpreter_matches_python_golden() {
             continue;
         }
         let m = inputs[2].len();
+        // Labels ride in the batch field matching the entry's declared
+        // parameter dtype (tinyresnet4 takes s32 class ids, the rest f32).
+        let spec = rt.manifest.model(model).unwrap().entry(key).unwrap();
+        let (y_f32, y_i32) = if spec.inputs[2].dtype == divebatch::runtime::Dtype::S32 {
+            (Vec::new(), inputs[2].iter().map(|&v| v as i32).collect())
+        } else {
+            (inputs[2].clone(), Vec::new())
+        };
         let batch = divebatch::Batch {
             x: inputs[1].clone(),
-            y_f32: inputs[2].clone(),
-            y_i32: Vec::new(),
+            y_f32,
+            y_i32,
             w: inputs[3].clone(),
             real: inputs[3].iter().filter(|&&w| w > 0.0).count(),
             pad_to: m,
@@ -423,8 +435,9 @@ fn interpreter_matches_python_golden() {
 
 // ---------------------------------------------------------------- opt-in
 // Real-backend extras: run only with DIVEBATCH_TEST_ARTIFACTS=<dir> (and
-// the real xla_extension binding linked), covering the models the
-// interpreter fixtures do not ship (MLP, conv resnet).
+// the real xla_extension binding linked).  The interpreter fixtures now
+// ship the full tiny model zoo (logreg, MLP, conv resnet); these extras
+// re-run the resnet path against a real PJRT backend as a cross-check.
 
 #[test]
 fn real_backend_manifest_lists_tiny_models() {

@@ -17,9 +17,37 @@
 use std::sync::atomic::Ordering;
 
 use super::kernels;
-use super::parse::{err, DType};
-use super::program::{Program, Ref, SlotSpec, Step};
+use super::parse::{elements, err, DType};
+use super::program::{ParamSpec, Program, Ref, SlotSpec, Step};
 use crate::{Data, InterpTier, Literal, Result};
+
+/// A borrowed argument buffer: entry `Literal` data, or a sub-program's
+/// call-site / loop-carried view.  Pred arguments exist only on the
+/// sub-program path (entry pred parameters are rejected at compile time).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum ArgView<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Pred(&'a [bool]),
+}
+
+/// An owned result buffer (sub-program outputs, loop-carried state).
+#[derive(Clone, Debug)]
+pub(crate) enum OwnBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl OwnBuf {
+    fn view(&self) -> ArgView<'_> {
+        match self {
+            OwnBuf::F32(v) => ArgView::F32(v),
+            OwnBuf::I32(v) => ArgView::I32(v),
+            OwnBuf::Pred(v) => ArgView::Pred(v),
+        }
+    }
+}
 
 /// Max arenas kept for reuse (beyond this, returned arenas are dropped).
 const POOL_CAP: usize = 16;
@@ -167,25 +195,55 @@ impl Program {
             }
         }
 
-        let mut arena = {
+        let views: Vec<ArgView> = args
+            .iter()
+            .map(|lit| match lit.dense_parts() {
+                Some((Data::F32(v), _)) => ArgView::F32(v),
+                Some((Data::I32(v), _)) => ArgView::I32(v),
+                None => unreachable!("validated above"),
+            })
+            .collect();
+        let mut arena = self.pop_arena();
+        let result = self
+            .run_steps(&views, &mut arena, tier)
+            .and_then(|()| self.collect_outputs(&views, &arena));
+        self.push_arena(arena);
+        result
+    }
+
+    /// Run over already-validated raw argument views and return owned
+    /// output buffers — the sub-program path (`call`, `while`).  Argument
+    /// shapes were checked against the callee's parameters at compile
+    /// time, so no per-call `Literal` validation happens here.
+    pub(crate) fn execute_raw(&self, args: &[ArgView], tier: InterpTier) -> Result<Vec<OwnBuf>> {
+        debug_assert_eq!(args.len(), self.params.len());
+        let mut arena = self.pop_arena();
+        let result = self
+            .run_steps(args, &mut arena, tier)
+            .and_then(|()| self.collect_raw(args, &arena));
+        self.push_arena(arena);
+        result
+    }
+
+    fn pop_arena(&self) -> Arena {
+        let popped = {
             let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
             pool.pop()
         };
-        let arena = match arena.take() {
+        match popped {
             Some(a) => a,
             None => {
                 self.arenas_created.fetch_add(1, Ordering::Relaxed);
                 Arena::for_slots(&self.slots)
             }
-        };
-        let (result, arena) = self.run(args, arena, tier);
-        {
-            let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
-            if pool.len() < POOL_CAP {
-                pool.push(arena);
-            }
         }
-        result
+    }
+
+    fn push_arena(&self, arena: Arena) {
+        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < POOL_CAP {
+            pool.push(arena);
+        }
     }
 
     /// (arenas created, buffers grown) — the bench's allocs-proxy.
@@ -196,12 +254,7 @@ impl Program {
         )
     }
 
-    fn run(
-        &self,
-        args: &[&Literal],
-        mut arena: Arena,
-        tier: InterpTier,
-    ) -> (Result<Literal>, Arena) {
+    fn run_steps(&self, args: &[ArgView], arena: &mut Arena, tier: InterpTier) -> Result<()> {
         // Grow any undersized buffer (only possible if an arena outlived a
         // recompile — counted as the allocs-proxy's "grow" channel).
         for (buf, spec) in arena.bufs.iter_mut().zip(&self.slots) {
@@ -220,24 +273,26 @@ impl Program {
             }
         }
         for step in &self.steps {
-            if let Err(e) = self.run_step(step, args, &mut arena, tier) {
-                return (Err(e), arena);
-            }
+            self.run_step(step, args, arena, tier)?;
         }
-        let out = self.collect_outputs(args, &arena);
-        (out, arena)
+        Ok(())
     }
 
     // ---------------------------------------------------- source views
 
-    fn f32_src<'a>(&'a self, r: Ref, args: &'a [&Literal], arena: &'a Arena) -> Result<&'a [f32]> {
+    fn f32_src<'a>(
+        &'a self,
+        r: Ref,
+        args: &'a [ArgView<'a>],
+        arena: &'a Arena,
+    ) -> Result<&'a [f32]> {
         match r {
             Ref::Slot(s) => match &arena.bufs[s as usize] {
                 ArenaBuf::F32(v) => Ok(&v[..]),
                 _ => Err(internal("slot dtype mismatch (f32)")),
             },
-            Ref::Param(p) => match args[p as usize].dense_parts() {
-                Some((Data::F32(v), _)) => Ok(v),
+            Ref::Param(p) => match args[p as usize] {
+                ArgView::F32(v) => Ok(v),
                 _ => Err(internal("param dtype mismatch (f32)")),
             },
             Ref::Const(c) => match &self.consts[c as usize] {
@@ -247,14 +302,19 @@ impl Program {
         }
     }
 
-    fn i32_src<'a>(&'a self, r: Ref, args: &'a [&Literal], arena: &'a Arena) -> Result<&'a [i32]> {
+    fn i32_src<'a>(
+        &'a self,
+        r: Ref,
+        args: &'a [ArgView<'a>],
+        arena: &'a Arena,
+    ) -> Result<&'a [i32]> {
         match r {
             Ref::Slot(s) => match &arena.bufs[s as usize] {
                 ArenaBuf::I32(v) => Ok(v),
                 _ => Err(internal("slot dtype mismatch (i32)")),
             },
-            Ref::Param(p) => match args[p as usize].dense_parts() {
-                Some((Data::I32(v), _)) => Ok(v),
+            Ref::Param(p) => match args[p as usize] {
+                ArgView::I32(v) => Ok(v),
                 _ => Err(internal("param dtype mismatch (i32)")),
             },
             Ref::Const(c) => match &self.consts[c as usize] {
@@ -267,7 +327,7 @@ impl Program {
     fn pred_src<'a>(
         &'a self,
         r: Ref,
-        _args: &'a [&Literal],
+        args: &'a [ArgView<'a>],
         arena: &'a Arena,
     ) -> Result<&'a [bool]> {
         match r {
@@ -275,14 +335,87 @@ impl Program {
                 ArenaBuf::Pred(v) => Ok(v),
                 _ => Err(internal("slot dtype mismatch (pred)")),
             },
-            // Literal arguments carry no pred data, so a pred param cannot
-            // pass argument validation.
-            Ref::Param(_) => Err(internal("pred parameters are unsupported")),
+            // Entry pred parameters are rejected at compile time; this arm
+            // serves sub-programs (while state, call operands).
+            Ref::Param(p) => match args[p as usize] {
+                ArgView::Pred(v) => Ok(v),
+                _ => Err(internal("param dtype mismatch (pred)")),
+            },
             Ref::Const(c) => match &self.consts[c as usize] {
                 super::program::ConstBuf::Pred(v) => Ok(v),
                 _ => Err(internal("const dtype mismatch (pred)")),
             },
         }
+    }
+
+    /// Borrow `r` as an [`ArgView`] of `spec`'s dtype, sliced to the
+    /// callee parameter's exact element count (slot buffers can be wider
+    /// than the logical value they currently hold).
+    fn view_of<'a>(
+        &'a self,
+        r: Ref,
+        spec: &ParamSpec,
+        args: &'a [ArgView<'a>],
+        arena: &'a Arena,
+    ) -> Result<ArgView<'a>> {
+        let n = elements(&spec.dims);
+        Ok(match spec.dtype {
+            DType::F32 => ArgView::F32(&self.f32_src(r, args, arena)?[..n]),
+            DType::S32 => ArgView::I32(&self.i32_src(r, args, arena)?[..n]),
+            DType::Pred => ArgView::Pred(&self.pred_src(r, args, arena)?[..n]),
+        })
+    }
+
+    /// Copy `r` into an owned buffer of `spec`'s dtype (initial while
+    /// state, which must outlive mutations of the parent arena).
+    fn own_of(
+        &self,
+        r: Ref,
+        spec: &ParamSpec,
+        args: &[ArgView],
+        arena: &Arena,
+    ) -> Result<OwnBuf> {
+        let n = elements(&spec.dims);
+        Ok(match spec.dtype {
+            DType::F32 => OwnBuf::F32(self.f32_src(r, args, arena)?[..n].to_vec()),
+            DType::S32 => OwnBuf::I32(self.i32_src(r, args, arena)?[..n].to_vec()),
+            DType::Pred => OwnBuf::Pred(self.pred_src(r, args, arena)?[..n].to_vec()),
+        })
+    }
+
+    /// Write a sub-program's owned results into this program's slots.
+    fn store_results(&self, results: Vec<OwnBuf>, outs: &[u32], arena: &mut Arena) -> Result<()> {
+        if results.len() != outs.len() {
+            return Err(internal("sub-program output arity mismatch"));
+        }
+        for (buf, &slot) in results.into_iter().zip(outs) {
+            match (buf, &mut arena.bufs[slot as usize]) {
+                (OwnBuf::F32(v), ArenaBuf::F32(dst)) => dst[..v.len()].copy_from_slice(&v),
+                (OwnBuf::I32(v), ArenaBuf::I32(dst)) => dst[..v.len()].copy_from_slice(&v),
+                (OwnBuf::Pred(v), ArenaBuf::Pred(dst)) => dst[..v.len()].copy_from_slice(&v),
+                _ => return Err(internal("sub-program output dtype mismatch")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Read the scalar s32 start indices of a dynamic-slice/-update and
+    /// clamp each to `[0, src_dim - window_dim]` (the HLO contract).
+    fn start_offsets(
+        &self,
+        starts: &[Ref],
+        src_dims: &[usize],
+        window: &[usize],
+        args: &[ArgView],
+        arena: &Arena,
+    ) -> Result<Vec<usize>> {
+        let mut offs = Vec::with_capacity(starts.len());
+        for (d, &r) in starts.iter().enumerate() {
+            let v = i64::from(self.i32_src(r, args, arena)?[0]);
+            let max = (src_dims[d] - window[d]) as i64;
+            offs.push(v.clamp(0, max) as usize);
+        }
+        Ok(offs)
     }
 
     // ------------------------------------------------------- out buffers
@@ -325,7 +458,7 @@ impl Program {
     fn run_step(
         &self,
         step: &Step,
-        args: &[&Literal],
+        args: &[ArgView],
         arena: &mut Arena,
         tier: InterpTier,
     ) -> Result<()> {
@@ -609,18 +742,20 @@ impl Program {
                 let res = (|| {
                     let l = self.f32_src(p.lhs, args, arena)?;
                     let r = self.f32_src(p.rhs, args, arena)?;
-                    kernels::dot(
-                        tier,
-                        p.algo,
-                        l,
-                        r,
-                        &p.l_base,
-                        &p.r_base,
-                        p.l_kstride,
-                        p.r_kstride,
-                        p.k,
-                        &mut o[..p.m * p.n],
-                    );
+                    for bx in 0..p.b {
+                        kernels::dot(
+                            tier,
+                            p.algo,
+                            l,
+                            r,
+                            &p.l_base[bx * p.m..][..p.m],
+                            &p.r_base[bx * p.n..][..p.n],
+                            p.l_kstride,
+                            p.r_kstride,
+                            p.k,
+                            &mut o[bx * p.m * p.n..][..p.m * p.n],
+                        );
+                    }
                     Ok(())
                 })();
                 arena.bufs[p.out as usize] = ArenaBuf::F32(o);
@@ -645,6 +780,206 @@ impl Program {
                 arena.bufs[p.out as usize] = ArenaBuf::F32(o);
                 res
             }
+            Step::Conv(p) => {
+                // im2col per feature group: pad builds the [m, k] patch
+                // matrix (u32::MAX map entries fill the halo with zeros),
+                // gather builds the [k, ng] group weight matrix, then the
+                // cost-model-picked dot runs under the pinned lanes
+                // contract and scatter_part places the [m, ng] group
+                // result into the output layout.
+                let mut patch = self.take_f32(arena, p.scratch[0])?;
+                let mut w = self.take_f32(arena, p.scratch[1])?;
+                let mut acc = self.take_f32(arena, p.scratch[2])?;
+                let mut o = self.take_f32(arena, p.out)?;
+                let res = (|| {
+                    let l = self.f32_src(p.lhs, args, arena)?;
+                    let r = self.f32_src(p.rhs, args, arena)?;
+                    for g in &p.groups {
+                        kernels::pad(l, 0.0, &g.patch_map, &mut patch[..p.m * p.k]);
+                        kernels::gather(r, &g.w_map, &mut w[..p.k * p.ng]);
+                        kernels::dot(
+                            tier,
+                            p.algo,
+                            &patch[..p.m * p.k],
+                            &w[..p.k * p.ng],
+                            &p.l_base,
+                            &p.r_base,
+                            1,
+                            p.ng,
+                            p.k,
+                            &mut acc[..p.m * p.ng],
+                        );
+                        kernels::scatter_part(&acc[..p.m * p.ng], &g.place, &mut o[..]);
+                    }
+                    Ok(())
+                })();
+                arena.bufs[p.scratch[0] as usize] = ArenaBuf::F32(patch);
+                arena.bufs[p.scratch[1] as usize] = ArenaBuf::F32(w);
+                arena.bufs[p.scratch[2] as usize] = ArenaBuf::F32(acc);
+                arena.bufs[p.out as usize] = ArenaBuf::F32(o);
+                res
+            }
+            Step::DynSlice {
+                dtype,
+                src,
+                starts,
+                src_dims,
+                sizes,
+                out,
+            } => {
+                let offs = self.start_offsets(starts, src_dims, sizes, args, arena)?;
+                let n: usize = sizes.iter().product();
+                match dtype {
+                    DType::F32 => {
+                        let mut o = self.take_f32(arena, *out)?;
+                        let res = self.f32_src(*src, args, arena).map(|s| {
+                            kernels::dyn_slice(s, src_dims, &offs, sizes, &mut o[..n]);
+                        });
+                        arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                        res
+                    }
+                    DType::S32 => {
+                        let mut o = self.take_i32(arena, *out)?;
+                        let res = self.i32_src(*src, args, arena).map(|s| {
+                            kernels::dyn_slice(s, src_dims, &offs, sizes, &mut o[..n]);
+                        });
+                        arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                        res
+                    }
+                    DType::Pred => {
+                        let mut o = self.take_pred(arena, *out)?;
+                        let res = self.pred_src(*src, args, arena).map(|s| {
+                            kernels::dyn_slice(s, src_dims, &offs, sizes, &mut o[..n]);
+                        });
+                        arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                        res
+                    }
+                }
+            }
+            Step::DynUpdate {
+                dtype,
+                src,
+                upd,
+                starts,
+                src_dims,
+                upd_dims,
+                out,
+            } => {
+                let offs = self.start_offsets(starts, src_dims, upd_dims, args, arena)?;
+                let n: usize = src_dims.iter().product();
+                let un: usize = upd_dims.iter().product();
+                match dtype {
+                    DType::F32 => {
+                        let mut o = self.take_f32(arena, *out)?;
+                        let res = (|| {
+                            let s = self.f32_src(*src, args, arena)?;
+                            let u = self.f32_src(*upd, args, arena)?;
+                            kernels::dyn_update(
+                                &s[..n],
+                                &u[..un],
+                                src_dims,
+                                &offs,
+                                upd_dims,
+                                &mut o[..n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::F32(o);
+                        res
+                    }
+                    DType::S32 => {
+                        let mut o = self.take_i32(arena, *out)?;
+                        let res = (|| {
+                            let s = self.i32_src(*src, args, arena)?;
+                            let u = self.i32_src(*upd, args, arena)?;
+                            kernels::dyn_update(
+                                &s[..n],
+                                &u[..un],
+                                src_dims,
+                                &offs,
+                                upd_dims,
+                                &mut o[..n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::I32(o);
+                        res
+                    }
+                    DType::Pred => {
+                        let mut o = self.take_pred(arena, *out)?;
+                        let res = (|| {
+                            let s = self.pred_src(*src, args, arena)?;
+                            let u = self.pred_src(*upd, args, arena)?;
+                            kernels::dyn_update(
+                                &s[..n],
+                                &u[..un],
+                                src_dims,
+                                &offs,
+                                upd_dims,
+                                &mut o[..n],
+                            );
+                            Ok(())
+                        })();
+                        arena.bufs[*out as usize] = ArenaBuf::Pred(o);
+                        res
+                    }
+                }
+            }
+            Step::Call {
+                callee,
+                args: cargs,
+                outs,
+            } => {
+                let results = {
+                    let mut views = Vec::with_capacity(cargs.len());
+                    for (&r, spec) in cargs.iter().zip(&callee.params) {
+                        views.push(self.view_of(r, spec, args, arena)?);
+                    }
+                    callee.execute_raw(&views, tier)?
+                };
+                self.store_results(results, outs, arena)
+            }
+            Step::While {
+                cond,
+                body,
+                init,
+                outs,
+            } => {
+                // Loop-carried state lives in owned buffers so the parent
+                // arena is only borrowed immutably while a sub-program
+                // runs; the body's results become the next state without
+                // touching parent slots until the loop exits (zero-trip
+                // then stores the initial state unchanged).
+                let mut state: Vec<OwnBuf> = Vec::with_capacity(init.len());
+                for (&r, spec) in init.iter().zip(&body.params) {
+                    state.push(self.own_of(r, spec, args, arena)?);
+                }
+                loop {
+                    let go = {
+                        let views: Vec<ArgView> = state.iter().map(OwnBuf::view).collect();
+                        match cond.execute_raw(&views, tier)?.first() {
+                            Some(OwnBuf::Pred(v)) if !v.is_empty() => v[0],
+                            _ => {
+                                return Err(internal(
+                                    "while condition must produce a scalar pred",
+                                ))
+                            }
+                        }
+                    };
+                    if !go {
+                        break;
+                    }
+                    let next = {
+                        let views: Vec<ArgView> = state.iter().map(OwnBuf::view).collect();
+                        body.execute_raw(&views, tier)?
+                    };
+                    if next.len() != state.len() {
+                        return Err(internal("while body arity mismatch"));
+                    }
+                    state = next;
+                }
+                self.store_results(state, outs, arena)
+            }
         }
     }
 
@@ -656,7 +991,7 @@ impl Program {
         a: Ref,
         out: u32,
         n: usize,
-        args: &[&Literal],
+        args: &[ArgView],
         arena: &mut Arena,
     ) -> Result<()> {
         match to {
@@ -742,7 +1077,21 @@ impl Program {
         }
     }
 
-    fn collect_outputs(&self, args: &[&Literal], arena: &Arena) -> Result<Literal> {
+    fn collect_raw(&self, args: &[ArgView], arena: &Arena) -> Result<Vec<OwnBuf>> {
+        let mut out = Vec::with_capacity(self.outputs.len());
+        for o in &self.outputs {
+            let n: i64 = o.dims.iter().product();
+            let n = n as usize;
+            out.push(match o.dtype {
+                DType::F32 => OwnBuf::F32(self.f32_src(o.r, args, arena)?[..n].to_vec()),
+                DType::S32 => OwnBuf::I32(self.i32_src(o.r, args, arena)?[..n].to_vec()),
+                DType::Pred => OwnBuf::Pred(self.pred_src(o.r, args, arena)?[..n].to_vec()),
+            });
+        }
+        Ok(out)
+    }
+
+    fn collect_outputs(&self, args: &[ArgView], arena: &Arena) -> Result<Literal> {
         let mut parts = Vec::with_capacity(self.outputs.len());
         for o in &self.outputs {
             let n: i64 = o.dims.iter().product();

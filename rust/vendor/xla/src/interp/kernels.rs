@@ -378,6 +378,52 @@ pub(crate) fn scatter_part<T: Copy>(src: &[T], place: &[u32], dst: &mut [T]) {
     }
 }
 
+/// Dynamic-slice: copy the `sizes` window of `src` starting at the
+/// (already clamped) per-dimension offsets `offs` into `dst`.  Start
+/// indices are runtime values, so no precomputed map exists; the copy is
+/// plain nested address arithmetic on both tiers.
+pub(crate) fn dyn_slice<T: Copy>(
+    src: &[T],
+    src_dims: &[usize],
+    offs: &[usize],
+    sizes: &[usize],
+    dst: &mut [T],
+) {
+    let src_st = super::parse::strides(src_dims);
+    let out_st = super::parse::strides(sizes);
+    for (flat, d) in dst.iter_mut().enumerate() {
+        let c = super::parse::coords_of(flat, sizes, &out_st);
+        let mut at = 0usize;
+        for (dim, &ci) in c.iter().enumerate() {
+            at += (offs[dim] + ci) * src_st[dim];
+        }
+        *d = src[at];
+    }
+}
+
+/// Dynamic-update-slice: `dst` is `src` with the `upd_dims` window at
+/// the (already clamped) offsets `offs` overwritten by `upd`.
+pub(crate) fn dyn_update<T: Copy>(
+    src: &[T],
+    upd: &[T],
+    src_dims: &[usize],
+    offs: &[usize],
+    upd_dims: &[usize],
+    dst: &mut [T],
+) {
+    dst.copy_from_slice(src);
+    let src_st = super::parse::strides(src_dims);
+    let upd_st = super::parse::strides(upd_dims);
+    for (flat, &v) in upd.iter().enumerate() {
+        let c = super::parse::coords_of(flat, upd_dims, &upd_st);
+        let mut at = 0usize;
+        for (dim, &ci) in c.iter().enumerate() {
+            at += (offs[dim] + ci) * src_st[dim];
+        }
+        dst[at] = v;
+    }
+}
+
 // ------------------------------------------------------------------ dot
 
 /// Single-contraction matmul over the collapsed (M, K) x (K, N) view.

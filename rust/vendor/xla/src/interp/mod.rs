@@ -472,10 +472,108 @@ ENTRY main.4 {
         assert_eq!(grown, 0, "slots are sized at compile time");
     }
 
-    /// Last-use analysis correctness: walking every compiled program's
-    /// steps, a slot assigned to a new value must not still be live for an
-    /// earlier value (the arena must never alias live slots).  Uses the
-    /// fixture-like HLO below plus the unit-test modules above.
+    /// Last-use analysis correctness: walking a compiled program's steps,
+    /// a slot assigned to a new value must not still be live for an
+    /// earlier value (the arena must never alias live slots).
+    fn assert_alias_free(prog: &program::Program) {
+        // Reconstruct per-step writes/reads from the plan structs.
+        let step_writes = |s: &Step| -> Vec<u32> {
+            match s {
+                Step::Fused(f) => vec![f.out],
+                Step::IntEw { out, .. }
+                | Step::PredEw { out, .. }
+                | Step::Compare { out, .. }
+                | Step::Select { out, .. }
+                | Step::Convert { out, .. }
+                | Step::Gather { out, .. }
+                | Step::Pad { out, .. }
+                | Step::Concat { out, .. }
+                | Step::DynSlice { out, .. }
+                | Step::DynUpdate { out, .. } => vec![*out],
+                Step::Dot(p) => vec![p.out],
+                Step::Reduce(p) => vec![p.out],
+                Step::Conv(p) => {
+                    let mut v = p.scratch.to_vec();
+                    v.push(p.out);
+                    v
+                }
+                Step::Call { outs, .. } | Step::While { outs, .. } => outs.clone(),
+            }
+        };
+        let step_reads = |s: &Step| -> Vec<u32> {
+            fn slot(r: Ref) -> Option<u32> {
+                match r {
+                    Ref::Slot(s) => Some(s),
+                    _ => None,
+                }
+            }
+            let refs: Vec<Ref> = match s {
+                Step::Fused(f) => f.inputs.clone(),
+                Step::IntEw { a, b, .. } | Step::PredEw { a, b, .. } => {
+                    let mut v = vec![*a];
+                    v.extend(*b);
+                    v
+                }
+                Step::Compare { a, b, .. } => vec![*a, *b],
+                Step::Select { p, t, f, .. } => vec![*p, *t, *f],
+                Step::Convert { a, .. } => vec![*a],
+                Step::Gather { src, .. } => vec![*src],
+                Step::Pad { src, fill, .. } => vec![*src, *fill],
+                Step::Concat { parts, .. } => parts.iter().map(|(r, _)| *r).collect(),
+                Step::Dot(p) => vec![p.lhs, p.rhs],
+                Step::Reduce(p) => vec![p.data, p.init],
+                Step::Conv(p) => vec![p.lhs, p.rhs],
+                Step::DynSlice { src, starts, .. } => {
+                    let mut v = vec![*src];
+                    v.extend(starts);
+                    v
+                }
+                Step::DynUpdate {
+                    src, upd, starts, ..
+                } => {
+                    let mut v = vec![*src, *upd];
+                    v.extend(starts);
+                    v
+                }
+                Step::Call { args, .. } => args.clone(),
+                Step::While { init, .. } => init.clone(),
+            };
+            refs.into_iter().filter_map(slot).collect()
+        };
+
+        // Liveness check: value v born at step i in slot s is live until
+        // its last read (or program end if it is an output); no other step
+        // in that span may write slot s.
+        let n_steps = prog.steps.len();
+        let out_slots: Vec<u32> = prog
+            .outputs
+            .iter()
+            .filter_map(|o| match o.r {
+                Ref::Slot(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        for i in 0..n_steps {
+            for &s in &step_writes(&prog.steps[i]) {
+                let mut last = i;
+                for (j, sj) in prog.steps.iter().enumerate().skip(i + 1) {
+                    if step_reads(sj).contains(&s) {
+                        last = j;
+                    }
+                }
+                if out_slots.contains(&s) {
+                    last = n_steps - 1;
+                }
+                for (j, sj) in prog.steps.iter().enumerate().take(last + 1).skip(i + 1) {
+                    assert!(
+                        !step_writes(sj).contains(&s),
+                        "step {j} overwrites slot {s} while step {i}'s value is still live"
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn slot_reuse_is_alias_free() {
         let text = r#"
@@ -506,88 +604,15 @@ ENTRY main.20 {
 "#;
         let compiled = Compiled::compile(text).unwrap();
         let prog = &compiled.program;
-
-        // Reconstruct per-step writes/reads from the plan structs.
-        let step_out = |s: &Step| -> u32 {
-            match s {
-                Step::Fused(f) => f.out,
-                Step::IntEw { out, .. }
-                | Step::PredEw { out, .. }
-                | Step::Compare { out, .. }
-                | Step::Select { out, .. }
-                | Step::Convert { out, .. }
-                | Step::Gather { out, .. }
-                | Step::Pad { out, .. }
-                | Step::Concat { out, .. } => *out,
-                Step::Dot(p) => p.out,
-                Step::Reduce(p) => p.out,
-            }
-        };
-        let step_reads = |s: &Step| -> Vec<u32> {
-            fn slot(r: Ref) -> Option<u32> {
-                match r {
-                    Ref::Slot(s) => Some(s),
-                    _ => None,
-                }
-            }
-            let refs: Vec<Ref> = match s {
-                Step::Fused(f) => f.inputs.clone(),
-                Step::IntEw { a, b, .. } | Step::PredEw { a, b, .. } => {
-                    let mut v = vec![*a];
-                    v.extend(*b);
-                    v
-                }
-                Step::Compare { a, b, .. } => vec![*a, *b],
-                Step::Select { p, t, f, .. } => vec![*p, *t, *f],
-                Step::Convert { a, .. } => vec![*a],
-                Step::Gather { src, .. } => vec![*src],
-                Step::Pad { src, fill, .. } => vec![*src, *fill],
-                Step::Concat { parts, .. } => parts.iter().map(|(r, _)| *r).collect(),
-                Step::Dot(p) => vec![p.lhs, p.rhs],
-                Step::Reduce(p) => vec![p.data, p.init],
-            };
-            refs.into_iter().filter_map(slot).collect()
-        };
-
-        // Liveness check: value v born at step i in slot s is live until
-        // its last read (or program end if it is an output); no other step
-        // in that span may write slot s.
-        let n_steps = prog.steps.len();
-        let out_slots: Vec<u32> = prog
-            .outputs
-            .iter()
-            .filter_map(|o| match o.r {
-                Ref::Slot(s) => Some(s),
-                _ => None,
-            })
-            .collect();
-        for i in 0..n_steps {
-            let s = step_out(&prog.steps[i]);
-            let mut last = i;
-            for (j, sj) in prog.steps.iter().enumerate().skip(i + 1) {
-                if step_reads(sj).contains(&s) {
-                    last = j;
-                }
-            }
-            if out_slots.contains(&s) {
-                last = n_steps - 1;
-            }
-            for (j, sj) in prog.steps.iter().enumerate().take(last + 1).skip(i + 1) {
-                assert_ne!(
-                    step_out(sj),
-                    s,
-                    "step {j} overwrites slot {s} while step {i}'s value is still live"
-                );
-            }
-        }
+        assert_alias_free(prog);
 
         // And the program must actually reuse slots (fewer slots than
         // materialized steps), otherwise the arena is doing nothing.
         assert!(
-            prog.slots.len() < n_steps,
+            prog.slots.len() < prog.steps.len(),
             "no slot reuse: {} slots for {} steps",
             prog.slots.len(),
-            n_steps
+            prog.steps.len()
         );
 
         // Finally: numerics agree with the reference evaluator.
@@ -755,5 +780,339 @@ ENTRY main.12 {
         let d = Literal::vec1(&(0..6).map(|i| i as f32 * 0.4 - 1.0).collect::<Vec<f32>>());
         assert_tiers_bitwise(text, &[&a, &b, &c, &d]);
         eval(text, &[&a, &b, &c, &d]);
+    }
+
+    #[test]
+    fn pred_entry_parameters_rejected_at_compile_time() {
+        let text = r#"
+HloModule t
+
+ENTRY main.3 {
+  Arg_0.1 = pred[2]{0} parameter(0)
+  ROOT tuple.2 = (pred[2]{0}) tuple(Arg_0.1)
+}
+"#;
+        // The crate contract: unsupported constructs fail at compile time,
+        // before a train loop starts — not with an opaque internal error
+        // deep in execute.
+        let e = Compiled::compile(text).unwrap_err().to_string();
+        assert!(
+            e.contains("pred entry parameters are not supported"),
+            "{e}"
+        );
+        assert!(e.contains("Arg_0.1") && e.contains("main.3"), "{e}");
+    }
+
+    #[test]
+    fn negative_edge_padding_crops_on_both_paths() {
+        // Negative edge padding (legal HLO, produced by conv input-grad
+        // lowerings) crops: pad=-1_-1 over [6] keeps the middle 4.
+        let text = r#"
+HloModule t
+
+ENTRY main.5 {
+  Arg_0.1 = f32[6]{0} parameter(0)
+  constant.2 = f32[] constant(0)
+  pad.3 = f32[4]{0} pad(Arg_0.1, constant.2), padding=-1_-1
+  mixed.4 = f32[7]{0} pad(Arg_0.1, constant.2), padding=2_-1
+  ROOT tuple.5 = (f32[4]{0}, f32[7]{0}) tuple(pad.3, mixed.4)
+}
+"#;
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = eval(text, &[&x]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![2.0, 3.0, 4.0, 5.0]);
+        // Mixed padding: 2 zeros in front, the last element cropped.
+        assert_eq!(
+            out[1].to_vec::<f32>().unwrap(),
+            vec![0.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+        );
+        assert_tiers_bitwise(text, &[&x]);
+    }
+
+    #[test]
+    fn while_loop_matches_reference_and_tiers() {
+        // Three iterations of (i += 1, v *= 2); the initial argument is
+        // also consumed after the loop, so loop-carried slots must not
+        // alias still-live values.
+        let text = r#"
+HloModule t
+
+cond_c.1 {
+  arg_tuple.2 = (s32[], f32[2]{0}) parameter(0)
+  get-tuple-element.3 = s32[] get-tuple-element(arg_tuple.2), index=0
+  constant.4 = s32[] constant(3)
+  ROOT compare.5 = pred[] compare(get-tuple-element.3, constant.4), direction=LT
+}
+
+body_c.6 {
+  arg_tuple.7 = (s32[], f32[2]{0}) parameter(0)
+  get-tuple-element.8 = s32[] get-tuple-element(arg_tuple.7), index=0
+  constant.9 = s32[] constant(1)
+  add.10 = s32[] add(get-tuple-element.8, constant.9)
+  get-tuple-element.11 = f32[2]{0} get-tuple-element(arg_tuple.7), index=1
+  add.12 = f32[2]{0} add(get-tuple-element.11, get-tuple-element.11)
+  ROOT tuple.13 = (s32[], f32[2]{0}) tuple(add.10, add.12)
+}
+
+ENTRY main.20 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = s32[] constant(0)
+  tuple.3 = (s32[], f32[2]{0}) tuple(constant.2, Arg_0.1)
+  while.4 = (s32[], f32[2]{0}) while(tuple.3), condition=cond_c.1, body=body_c.6
+  get-tuple-element.5 = s32[] get-tuple-element(while.4), index=0
+  get-tuple-element.6 = f32[2]{0} get-tuple-element(while.4), index=1
+  add.7 = f32[2]{0} add(get-tuple-element.6, Arg_0.1)
+  ROOT tuple.8 = (s32[], f32[2]{0}, f32[2]{0}) tuple(get-tuple-element.5, get-tuple-element.6, add.7)
+}
+"#;
+        let compiled = Compiled::compile(text).unwrap();
+        assert!(
+            compiled
+                .program
+                .steps
+                .iter()
+                .any(|s| matches!(s, Step::While { .. })),
+            "while must lower to a compiled loop step"
+        );
+        assert_alias_free(&compiled.program);
+        let x = Literal::vec1(&[1.5f32, -2.0]);
+        let out = eval(text, &[&x]);
+        assert_eq!(out[0].get_first_element::<i32>().unwrap(), 3);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![12.0, -16.0]);
+        assert_eq!(out[2].to_vec::<f32>().unwrap(), vec![13.5, -18.0]);
+        assert_tiers_bitwise(text, &[&x]);
+    }
+
+    #[test]
+    fn while_zero_trip_returns_initial_state() {
+        let text = r#"
+HloModule t
+
+cond_c.1 {
+  arg_tuple.2 = (s32[], f32[2]{0}) parameter(0)
+  get-tuple-element.3 = s32[] get-tuple-element(arg_tuple.2), index=0
+  constant.4 = s32[] constant(3)
+  ROOT compare.5 = pred[] compare(get-tuple-element.3, constant.4), direction=LT
+}
+
+body_c.6 {
+  arg_tuple.7 = (s32[], f32[2]{0}) parameter(0)
+  get-tuple-element.8 = s32[] get-tuple-element(arg_tuple.7), index=0
+  constant.9 = s32[] constant(1)
+  add.10 = s32[] add(get-tuple-element.8, constant.9)
+  get-tuple-element.11 = f32[2]{0} get-tuple-element(arg_tuple.7), index=1
+  add.12 = f32[2]{0} add(get-tuple-element.11, get-tuple-element.11)
+  ROOT tuple.13 = (s32[], f32[2]{0}) tuple(add.10, add.12)
+}
+
+ENTRY main.20 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = s32[] constant(7)
+  tuple.3 = (s32[], f32[2]{0}) tuple(constant.2, Arg_0.1)
+  while.4 = (s32[], f32[2]{0}) while(tuple.3), condition=cond_c.1, body=body_c.6
+  get-tuple-element.5 = s32[] get-tuple-element(while.4), index=0
+  get-tuple-element.6 = f32[2]{0} get-tuple-element(while.4), index=1
+  ROOT tuple.7 = (s32[], f32[2]{0}) tuple(get-tuple-element.5, get-tuple-element.6)
+}
+"#;
+        // 7 < 3 is false on entry: zero iterations, state passes through.
+        let x = Literal::vec1(&[0.25f32, 4.0]);
+        let out = eval(text, &[&x]);
+        assert_eq!(out[0].get_first_element::<i32>().unwrap(), 7);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![0.25, 4.0]);
+        assert_tiers_bitwise(text, &[&x]);
+    }
+
+    #[test]
+    fn while_non_pred_condition_rejected_at_compile_time() {
+        let text = r#"
+HloModule t
+
+cond_c.1 {
+  arg_tuple.2 = (s32[], f32[2]{0}) parameter(0)
+  ROOT get-tuple-element.3 = s32[] get-tuple-element(arg_tuple.2), index=0
+}
+
+body_c.4 {
+  arg_tuple.5 = (s32[], f32[2]{0}) parameter(0)
+  get-tuple-element.6 = s32[] get-tuple-element(arg_tuple.5), index=0
+  get-tuple-element.7 = f32[2]{0} get-tuple-element(arg_tuple.5), index=1
+  ROOT tuple.8 = (s32[], f32[2]{0}) tuple(get-tuple-element.6, get-tuple-element.7)
+}
+
+ENTRY main.10 {
+  Arg_0.1 = f32[2]{0} parameter(0)
+  constant.2 = s32[] constant(0)
+  tuple.3 = (s32[], f32[2]{0}) tuple(constant.2, Arg_0.1)
+  while.4 = (s32[], f32[2]{0}) while(tuple.3), condition=cond_c.1, body=body_c.4
+  ROOT get-tuple-element.5 = f32[2]{0} get-tuple-element(while.4), index=1
+}
+"#;
+        let e = Compiled::compile(text).unwrap_err().to_string();
+        assert!(e.contains("must return a scalar pred"), "{e}");
+        assert!(e.contains("cond_c.1"), "{e}");
+    }
+
+    #[test]
+    fn conv_basic_matches_reference_on_both_tiers() {
+        // The model zoo's forward shape: 3x3 window, pad 1, channels not a
+        // multiple of 8 (ci=3), NHWC / HWIO dim labels.
+        let text = r#"
+HloModule t
+
+ENTRY main.4 {
+  Arg_0.1 = f32[1,4,4,3]{3,2,1,0} parameter(0)
+  Arg_1.2 = f32[3,3,3,5]{3,2,1,0} parameter(1)
+  convolution.3 = f32[1,4,4,5]{3,2,1,0} convolution(Arg_0.1, Arg_1.2), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  ROOT tuple.4 = (f32[1,4,4,5]{3,2,1,0}) tuple(convolution.3)
+}
+"#;
+        let compiled = Compiled::compile(text).unwrap();
+        assert!(
+            compiled
+                .program
+                .steps
+                .iter()
+                .any(|s| matches!(s, Step::Conv(_))),
+            "convolution must lower to an im2col conv step"
+        );
+        assert_alias_free(&compiled.program);
+        let x = Literal::vec1(
+            &(0..48)
+                .map(|i| ((i * 31 % 23) as f32) * 0.13 - 1.4)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[1, 4, 4, 3])
+        .unwrap();
+        let w = Literal::vec1(
+            &(0..135)
+                .map(|i| ((i * 17 % 29) as f32) * 0.09 - 1.2)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[3, 3, 3, 5])
+        .unwrap();
+        eval(text, &[&x, &w]);
+        assert_tiers_bitwise(text, &[&x, &w]);
+    }
+
+    #[test]
+    fn conv_stride_asymmetric_padding_and_groups() {
+        // Odd shapes: stride 2 with asymmetric padding (0_1 x 1_0), plus a
+        // grouped conv fed by an explicitly reversed kernel (the zoo's
+        // input-grad idiom) with feature_group_count=2.
+        let text = r#"
+HloModule t
+
+ENTRY main.8 {
+  Arg_0.1 = f32[1,5,5,3]{3,2,1,0} parameter(0)
+  Arg_1.2 = f32[3,3,3,4]{3,2,1,0} parameter(1)
+  Arg_2.3 = f32[1,4,4,4]{3,2,1,0} parameter(2)
+  Arg_3.4 = f32[3,3,2,6]{3,2,1,0} parameter(3)
+  convolution.5 = f32[1,2,2,4]{3,2,1,0} convolution(Arg_0.1, Arg_1.2), window={size=3x3 stride=2x2 pad=0_1x1_0}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  reverse.6 = f32[3,3,2,6]{3,2,1,0} reverse(Arg_3.4), dimensions={0,1}
+  convolution.7 = f32[1,4,4,6]{3,2,1,0} convolution(Arg_2.3, reverse.6), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=2
+  ROOT tuple.8 = (f32[1,2,2,4]{3,2,1,0}, f32[1,4,4,6]{3,2,1,0}) tuple(convolution.5, convolution.7)
+}
+"#;
+        let mk = |n: usize, mul: usize, md: usize, scale: f32, off: f32| {
+            Literal::vec1(
+                &(0..n)
+                    .map(|i| ((i * mul % md) as f32) * scale - off)
+                    .collect::<Vec<f32>>(),
+            )
+        };
+        let a = mk(75, 41, 31, 0.11, 1.6).reshape(&[1, 5, 5, 3]).unwrap();
+        let b = mk(108, 23, 19, 0.15, 1.1).reshape(&[3, 3, 3, 4]).unwrap();
+        let c = mk(64, 13, 37, 0.07, 1.3).reshape(&[1, 4, 4, 4]).unwrap();
+        let d = mk(108, 29, 17, 0.12, 0.9).reshape(&[3, 3, 2, 6]).unwrap();
+        let compiled = Compiled::compile(text).unwrap();
+        assert_alias_free(&compiled.program);
+        eval(text, &[&a, &b, &c, &d]);
+        assert_tiers_bitwise(text, &[&a, &b, &c, &d]);
+    }
+
+    #[test]
+    fn conv_weight_grad_dim_labels() {
+        // The zoo's weight-gradient conv: activations as f01b, grads as
+        // i01o, output 01bf, grouped over input features.
+        let text = r#"
+HloModule t
+
+ENTRY main.4 {
+  Arg_0.1 = f32[4,4,4,1]{3,2,1,0} parameter(0)
+  Arg_1.2 = f32[1,3,3,4]{3,2,1,0} parameter(1)
+  convolution.3 = f32[4,4,1,4]{3,2,1,0} convolution(Arg_0.1, Arg_1.2), window={size=3x3 pad=1_1x1_1}, dim_labels=f01b_i01o->01bf, feature_group_count=4
+  ROOT tuple.4 = (f32[4,4,1,4]{3,2,1,0}) tuple(convolution.3)
+}
+"#;
+        let a = Literal::vec1(
+            &(0..64)
+                .map(|i| ((i * 19 % 27) as f32) * 0.14 - 1.7)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[4, 4, 4, 1])
+        .unwrap();
+        let g = Literal::vec1(
+            &(0..36)
+                .map(|i| ((i * 11 % 13) as f32) * 0.21 - 1.0)
+                .collect::<Vec<f32>>(),
+        )
+        .reshape(&[1, 3, 3, 4])
+        .unwrap();
+        eval(text, &[&a, &g]);
+        assert_tiers_bitwise(text, &[&a, &g]);
+    }
+
+    #[test]
+    fn dynamic_slice_update_clamp_and_calls() {
+        // dynamic-slice/-update with runtime starts that clamp at both
+        // ends, a dense call, and a tuple-returning call.
+        let text = r#"
+HloModule t
+
+add_one.1 {
+  p.2 = f32[3]{0} parameter(0)
+  c.3 = f32[] constant(1)
+  b.4 = f32[3]{0} broadcast(c.3), dimensions={}
+  ROOT add.5 = f32[3]{0} add(p.2, b.4)
+}
+
+pair.6 {
+  p.7 = f32[3]{0} parameter(0)
+  negate.8 = f32[3]{0} negate(p.7)
+  ROOT tuple.9 = (f32[3]{0}, f32[3]{0}) tuple(p.7, negate.8)
+}
+
+ENTRY main.20 {
+  Arg_0.1 = f32[6]{0} parameter(0)
+  Arg_1.2 = s32[] parameter(1)
+  dynamic-slice.3 = f32[3]{0} dynamic-slice(Arg_0.1, Arg_1.2), dynamic_slice_sizes={3}
+  call.4 = f32[3]{0} call(dynamic-slice.3), to_apply=add_one.1
+  call.5 = (f32[3]{0}, f32[3]{0}) call(call.4), to_apply=pair.6
+  get-tuple-element.6 = f32[3]{0} get-tuple-element(call.5), index=0
+  get-tuple-element.7 = f32[3]{0} get-tuple-element(call.5), index=1
+  dynamic-update-slice.8 = f32[6]{0} dynamic-update-slice(Arg_0.1, get-tuple-element.7, Arg_1.2)
+  ROOT tuple.9 = (f32[3]{0}, f32[3]{0}, f32[6]{0}) tuple(get-tuple-element.6, get-tuple-element.7, dynamic-update-slice.8)
+}
+"#;
+        let x = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // start=10 clamps to 3 (= 6 - 3): the window is x[3..6].
+        let hi = Literal::from_data(crate::Data::I32(vec![10]), vec![]);
+        let out = eval(text, &[&x, &hi]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![5.0, 6.0, 7.0]);
+        assert_eq!(out[1].to_vec::<f32>().unwrap(), vec![-5.0, -6.0, -7.0]);
+        assert_eq!(
+            out[2].to_vec::<f32>().unwrap(),
+            vec![1.0, 2.0, 3.0, -5.0, -6.0, -7.0]
+        );
+        // start=-2 clamps to 0.
+        let lo = Literal::from_data(crate::Data::I32(vec![-2]), vec![]);
+        let out = eval(text, &[&x, &lo]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(
+            out[2].to_vec::<f32>().unwrap(),
+            vec![-2.0, -3.0, -4.0, 4.0, 5.0, 6.0]
+        );
+        assert_tiers_bitwise(text, &[&x, &hi]);
     }
 }

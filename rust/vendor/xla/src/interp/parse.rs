@@ -247,6 +247,19 @@ fn parse_constant_payload(payload: &str, shape: &Shape) -> Result<ConstValue> {
 
 // ------------------------------------------------------------ instructions
 
+/// One spatial dimension of a convolution window (`window={...}`).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct WindowDim {
+    pub(crate) size: usize,
+    pub(crate) stride: usize,
+    pub(crate) pad_lo: i64,
+    pub(crate) pad_hi: i64,
+    /// `lhs_dilate` (input dilation — transposed convs).
+    pub(crate) base_dilation: usize,
+    /// `rhs_dilate` (kernel dilation — atrous convs).
+    pub(crate) window_dilation: usize,
+}
+
 #[derive(Clone, Debug, Default)]
 pub(crate) struct Attrs {
     pub(crate) dimensions: Vec<usize>,
@@ -260,6 +273,99 @@ pub(crate) struct Attrs {
     pub(crate) rhs_batch: Vec<usize>,
     pub(crate) index: Option<usize>,
     pub(crate) iota_dimension: Option<usize>,
+    pub(crate) window: Vec<WindowDim>,
+    pub(crate) dim_labels: Option<String>,
+    pub(crate) feature_group_count: Option<usize>,
+    pub(crate) batch_group_count: Option<usize>,
+    pub(crate) condition: Option<String>,
+    pub(crate) body: Option<String>,
+    pub(crate) dynamic_slice_sizes: Vec<usize>,
+}
+
+/// Parse `{size=3x3 stride=2x2 pad=1_1x1_1 ...}` into per-dimension specs.
+/// `size` is required and sets the rank; every other key must match it.
+fn parse_window_spec(s: &str) -> Result<Vec<WindowDim>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    let mut size: Option<Vec<usize>> = None;
+    let mut stride: Option<Vec<usize>> = None;
+    let mut base_dil: Option<Vec<usize>> = None;
+    let mut win_dil: Option<Vec<usize>> = None;
+    let mut pad: Option<Vec<(i64, i64, i64)>> = None;
+    let usizes = |v: &str| -> Result<Vec<usize>> {
+        v.split('x')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad window entry {t:?}")))
+            })
+            .collect()
+    };
+    for tok in inner.split_whitespace() {
+        let Some((key, val)) = tok.split_once('=') else {
+            return Err(err(format!("bad window token {tok:?}")));
+        };
+        match key {
+            "size" => size = Some(usizes(val)?),
+            "stride" => stride = Some(usizes(val)?),
+            "lhs_dilate" => base_dil = Some(usizes(val)?),
+            "rhs_dilate" => win_dil = Some(usizes(val)?),
+            "pad" => pad = Some(parse_padding_spec(val)?),
+            // rarely-emitted keys (window_reversal) are rejected so the
+            // lowering can't silently ignore semantics it doesn't model.
+            other => return Err(err(format!("unsupported window key {other:?}"))),
+        }
+    }
+    let size = size.ok_or_else(|| err("window spec without size".into()))?;
+    let rank = size.len();
+    let check = |name: &str, len: usize| -> Result<()> {
+        if len != rank {
+            return Err(err(format!(
+                "window {name} rank {len} does not match size rank {rank}"
+            )));
+        }
+        Ok(())
+    };
+    if let Some(v) = &stride {
+        check("stride", v.len())?;
+    }
+    if let Some(v) = &base_dil {
+        check("lhs_dilate", v.len())?;
+    }
+    if let Some(v) = &win_dil {
+        check("rhs_dilate", v.len())?;
+    }
+    if let Some(v) = &pad {
+        check("pad", v.len())?;
+    }
+    Ok((0..rank)
+        .map(|d| {
+            let (pad_lo, pad_hi, _) = pad.as_ref().map(|v| v[d]).unwrap_or((0, 0, 0));
+            WindowDim {
+                size: size[d],
+                stride: stride.as_ref().map(|v| v[d]).unwrap_or(1),
+                pad_lo,
+                pad_hi,
+                base_dilation: base_dil.as_ref().map(|v| v[d]).unwrap_or(1),
+                window_dilation: win_dil.as_ref().map(|v| v[d]).unwrap_or(1),
+            }
+        })
+        .collect())
+}
+
+/// Drop `/* ... */` comments (jax annotates long tuple types and operand
+/// lists with `/*index=N*/`).  An unterminated comment drops the tail.
+pub(crate) fn strip_comments(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(i) = rest.find("/*") {
+        out.push_str(&rest[..i]);
+        match rest[i + 2..].find("*/") {
+            Some(j) => rest = &rest[i + 2 + j + 2..],
+            None => return out,
+        }
+    }
+    out.push_str(rest);
+    out
 }
 
 #[derive(Clone, Debug)]
@@ -460,6 +566,27 @@ fn parse_instr(line: &str) -> Result<RawInstr> {
                         .map_err(|_| err(format!("bad iota_dimension {val:?}")))?,
                 )
             }
+            "window" => attrs.window = parse_window_spec(val)?,
+            "dim_labels" => attrs.dim_labels = Some(val.trim().to_string()),
+            "feature_group_count" => {
+                attrs.feature_group_count = Some(
+                    val.trim()
+                        .parse::<usize>()
+                        .map_err(|_| err(format!("bad feature_group_count {val:?}")))?,
+                )
+            }
+            "batch_group_count" => {
+                attrs.batch_group_count = Some(
+                    val.trim()
+                        .parse::<usize>()
+                        .map_err(|_| err(format!("bad batch_group_count {val:?}")))?,
+                )
+            }
+            "condition" => {
+                attrs.condition = Some(val.trim().trim_start_matches('%').to_string())
+            }
+            "body" => attrs.body = Some(val.trim().trim_start_matches('%').to_string()),
+            "dynamic_slice_sizes" => attrs.dynamic_slice_sizes = parse_usize_set(val)?,
             // metadata / frontend_attributes / backend_config / sharding /
             // operand_precision … are irrelevant to evaluation.
             _ => {}
@@ -511,12 +638,18 @@ fn parse_instr(line: &str) -> Result<RawInstr> {
         "iota",
         "tuple",
         "get-tuple-element",
+        "convolution",
+        "reverse",
+        "while",
+        "call",
+        "dynamic-slice",
+        "dynamic-update-slice",
     ];
     if !SUPPORTED.contains(&op.as_str()) {
         return Err(err(format!(
             "unsupported HLO opcode {op:?} (instruction {name}) — the interp backend \
-             covers the elementwise/dot/reduce/shape subset only; link the real \
-             xla_extension binding for full HLO"
+             covers the elementwise/dot/reduce/conv/while/shape subset only; link the \
+             real xla_extension binding for full HLO"
         )));
     }
 
@@ -570,7 +703,15 @@ impl Module {
         let mut cur: Option<(String, bool, Vec<RawInstr>)> = None;
 
         for raw_line in text.lines() {
-            let line = raw_line.trim();
+            // jax annotates long tuple types / operand lists with
+            // `/*index=N*/` comments; strip them before tokenizing.
+            let stripped;
+            let line = if raw_line.contains("/*") {
+                stripped = strip_comments(raw_line);
+                stripped.trim()
+            } else {
+                raw_line.trim()
+            };
             if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
                 continue;
             }

@@ -25,14 +25,15 @@
 //! tests walks every compiled program and checks the invariant
 //! exhaustively.
 
+use std::collections::HashMap;
 use std::sync::atomic::AtomicU64;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::cost;
 use super::exec::Arena;
 use super::parse::{
     coords_of, declared_dense, elements, err, strides, Computation, ConstPayload, DType, Module,
-    ShapeSpec,
+    Shape, ShapeSpec,
 };
 use crate::Result;
 
@@ -178,15 +179,25 @@ pub(crate) const MAX_FUSED_INPUTS: usize = 12;
 pub(crate) const MAX_REGION_OPS: usize = 32;
 
 /// Precompiled `dot`: collapsed (M, K) x (K, N) with base-offset tables.
+///
+/// Batched dots (`lhs_batch_dims`/`rhs_batch_dims`, the shape jax vmap
+/// gradients emit) lower to `b` consecutive per-slice base tables over
+/// the same geometry; execution runs the kernel once per slice into
+/// `out[slice * m * n ..]`, matching the XLA output layout (batch dims
+/// first, then lhs free, then rhs free).
 #[derive(Clone, Debug)]
 pub(crate) struct DotPlan {
     pub(crate) lhs: Ref,
     pub(crate) rhs: Ref,
     pub(crate) out: u32,
+    /// Batch slices; 1 for an unbatched dot.
+    pub(crate) b: usize,
     pub(crate) m: usize,
     pub(crate) n: usize,
     pub(crate) k: usize,
+    /// `b * m` row bases (absolute, batch offset folded in).
     pub(crate) l_base: Vec<u32>,
+    /// `b * n` column bases (absolute, batch offset folded in).
     pub(crate) r_base: Vec<u32>,
     pub(crate) l_kstride: usize,
     pub(crate) r_kstride: usize,
@@ -249,6 +260,46 @@ pub(crate) struct ReducePlan {
     /// grouped-contiguous-Add layout runs the pinned lanes contract,
     /// everything else the flat walk.
     pub(crate) algo: cost::ReduceAlgo,
+}
+
+/// One feature group of a precompiled convolution.
+#[derive(Clone, Debug)]
+pub(crate) struct ConvGroup {
+    /// Patch gather `patch[r*k + c] <- lhs[map]` (`u32::MAX` -> 0.0 where
+    /// the window hangs into padding).
+    pub(crate) patch_map: Vec<u32>,
+    /// Weight gather `w[c*ng + j] <- rhs[map]` (matches the patch column
+    /// order).
+    pub(crate) w_map: Vec<u32>,
+    /// Output scatter `out[place[r*ng + j]] = acc[r*ng + j]`.
+    pub(crate) place: Vec<u32>,
+}
+
+/// Precompiled `convolution`: im2col onto the existing dot machinery, one
+/// [`ConvGroup`] per feature group.  Three shared scratch slots hold the
+/// patch matrix `[m, k]`, the gathered weights `[k, ng]` and the dot
+/// result `[m, ng]`; the dot itself runs the pinned 8-lane accumulation
+/// contract, so both tiers stay bit-identical by construction.
+#[derive(Clone, Debug)]
+pub(crate) struct ConvPlan {
+    pub(crate) lhs: Ref,
+    pub(crate) rhs: Ref,
+    pub(crate) out: u32,
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    /// Output features per group (the `n` of the per-group dot).
+    pub(crate) ng: usize,
+    pub(crate) groups: Vec<ConvGroup>,
+    /// `[patch, weights, acc]` scratch slots (shared by every conv in the
+    /// program; reserved outside the free lists).
+    pub(crate) scratch: [u32; 3],
+    /// Row bases `0, k, 2k, ...` of the row-major patch matrix.
+    pub(crate) l_base: Vec<u32>,
+    /// Column bases `0..ng` of the row-major weight matrix.
+    pub(crate) r_base: Vec<u32>,
+    /// Dot strategy from the compile-time cost model (strategy only — the
+    /// lanes contract means it never affects bits).
+    pub(crate) algo: cost::DotAlgo,
 }
 
 /// One execution step of the register program.
@@ -317,6 +368,43 @@ pub(crate) enum Step {
     },
     Dot(DotPlan),
     Reduce(ReducePlan),
+    Conv(ConvPlan),
+    /// dynamic-slice: runtime scalar s32 starts, clamped per HLO to
+    /// `0 <= start <= dim - size`.
+    DynSlice {
+        dtype: DType,
+        src: Ref,
+        starts: Vec<Ref>,
+        src_dims: Vec<usize>,
+        sizes: Vec<usize>,
+        out: u32,
+    },
+    /// dynamic-update-slice: copy the operand, overwrite the clamped
+    /// window with the update.
+    DynUpdate {
+        dtype: DType,
+        src: Ref,
+        upd: Ref,
+        starts: Vec<Ref>,
+        src_dims: Vec<usize>,
+        upd_dims: Vec<usize>,
+        out: u32,
+    },
+    /// call: run the compiled callee on borrowed argument views; one
+    /// output slot per callee output.
+    Call {
+        callee: Arc<Program>,
+        args: Vec<Ref>,
+        outs: Vec<u32>,
+    },
+    /// while: compiled condition/body sub-programs over slot-stable
+    /// loop-carried state (one arena slot per state tuple element).
+    While {
+        cond: Arc<Program>,
+        body: Arc<Program>,
+        init: Vec<Ref>,
+        outs: Vec<u32>,
+    },
 }
 
 /// An arena slot: fixed dtype, sized once to its largest occupant.
@@ -374,6 +462,10 @@ pub(crate) struct Program {
 enum Kind {
     Param(u32),
     Const(u32),
+    /// A tuple-shaped sub-computation parameter, flattened into dense
+    /// params `start .. start + arity` (addressable via get-tuple-element
+    /// only).
+    ParamTuple { start: u32, arity: usize },
     /// Materialized into an arena slot (assigned during emission) unless
     /// fused away.
     Inst,
@@ -381,16 +473,36 @@ enum Kind {
     Alias(usize),
     /// A tuple of SSA values (root, or feeding get-tuple-element only).
     Tuple(Vec<usize>),
+    /// Element `idx` of a multi-output instruction (`while`, tuple-shaped
+    /// `call`): liveness and slot assignment treat it like [`Kind::Inst`],
+    /// but the owner's step writes it — the canonical get-tuple-element
+    /// emits nothing itself.
+    MultiPart { owner: usize, idx: usize },
 }
+
+/// Sub-computation nesting cap (while/call bodies); generous for real
+/// modules, small enough to bound hostile self-referential input.
+const MAX_SUB_DEPTH: usize = 32;
 
 struct Lowering<'m> {
     module: &'m Module,
     comp: &'m Computation,
+    /// Entry computations face host-argument restrictions (no tuple or
+    /// pred parameters); sub-programs flatten tuple params instead.
+    is_entry: bool,
+    depth: usize,
     kinds: Vec<Kind>,
     dims: Vec<Vec<usize>>,
     dtypes: Vec<DType>,
     consts: Vec<ConstBuf>,
     params: Vec<ParamSpec>,
+    /// Flat parameter offset per parameter number (tuple params occupy
+    /// one flat slot per element).
+    param_offset: Vec<usize>,
+    /// Tuple element shapes of multi-output instructions, by index.
+    multi_shapes: HashMap<usize, Vec<Shape>>,
+    /// Canonical get-tuple-element per (owner, element index).
+    multi_canon: HashMap<(usize, usize), usize>,
     inlined: Vec<bool>,
     /// Single consumer index (valid when consumer_count == 1).
     consumer: Vec<usize>,
@@ -400,10 +512,35 @@ struct Lowering<'m> {
 
 impl Program {
     pub(crate) fn compile(module: &Module) -> Result<Program> {
-        let comp = module.entry_computation();
+        Self::compile_computation(module, module.entry_computation(), true, 0)
+    }
+
+    fn compile_computation(
+        module: &Module,
+        comp: &Computation,
+        is_entry: bool,
+        depth: usize,
+    ) -> Result<Program> {
+        if depth > MAX_SUB_DEPTH {
+            return Err(err(format!(
+                "computation {:?} exceeds nesting depth {MAX_SUB_DEPTH} (while/call cycle?)",
+                comp.name
+            )));
+        }
+        let mut param_offset = vec![0usize; comp.params.len()];
+        let mut flat_params = 0usize;
+        for (p, &pi) in comp.params.iter().enumerate() {
+            param_offset[p] = flat_params;
+            flat_params += match &comp.instrs[pi].shape {
+                ShapeSpec::Tuple(parts) => parts.len(),
+                ShapeSpec::Dense(_) => 1,
+            };
+        }
         let mut lw = Lowering {
             module,
             comp,
+            is_entry,
+            depth,
             kinds: Vec::with_capacity(comp.instrs.len()),
             dims: Vec::with_capacity(comp.instrs.len()),
             dtypes: Vec::with_capacity(comp.instrs.len()),
@@ -414,8 +551,11 @@ impl Program {
                     dtype: DType::F32,
                     dims: Vec::new(),
                 };
-                comp.params.len()
+                flat_params
             ],
+            param_offset,
+            multi_shapes: HashMap::new(),
+            multi_canon: HashMap::new(),
             inlined: vec![false; comp.instrs.len()],
             consumer: vec![usize::MAX; comp.instrs.len()],
             consumer_count: vec![0; comp.instrs.len()],
@@ -468,15 +608,44 @@ impl<'m> Lowering<'m> {
             let kind = match ins.op.as_str() {
                 "parameter" => {
                     let p = ins.param.expect("parameter number");
-                    let s = declared_dense(ins).map_err(|_| {
-                        err(format!("{}: tuple parameters are not supported", ins.name))
-                    })?;
-                    self.params[p] = ParamSpec {
-                        name: ins.name.clone(),
-                        dtype: s.dtype,
-                        dims: s.dims.clone(),
-                    };
-                    Kind::Param(p as u32)
+                    let off = self.param_offset[p];
+                    match &ins.shape {
+                        ShapeSpec::Dense(s) => {
+                            if self.is_entry && s.dtype == DType::Pred {
+                                return Err(err(format!(
+                                    "entry {:?}: parameter {:?} is pred-typed; pred entry \
+                                     parameters are not supported by the interp backend \
+                                     (pass s32/f32 and compare inside the computation)",
+                                    self.comp.name, ins.name
+                                )));
+                            }
+                            self.params[off] = ParamSpec {
+                                name: ins.name.clone(),
+                                dtype: s.dtype,
+                                dims: s.dims.clone(),
+                            };
+                            Kind::Param(off as u32)
+                        }
+                        ShapeSpec::Tuple(parts) => {
+                            if self.is_entry {
+                                return Err(err(format!(
+                                    "{}: tuple parameters are not supported",
+                                    ins.name
+                                )));
+                            }
+                            for (kx, s) in parts.iter().enumerate() {
+                                self.params[off + kx] = ParamSpec {
+                                    name: format!("{}.{kx}", ins.name),
+                                    dtype: s.dtype,
+                                    dims: s.dims.clone(),
+                                };
+                            }
+                            Kind::ParamTuple {
+                                start: off as u32,
+                                arity: parts.len(),
+                            }
+                        }
+                    }
                 }
                 "constant" => {
                     let c = ins.literal.as_ref().expect("parsed constant");
@@ -537,16 +706,51 @@ impl<'m> Lowering<'m> {
                     let idx = ins.attrs.index.ok_or_else(|| {
                         err(format!("{}: get-tuple-element without index", ins.name))
                     })?;
-                    let Kind::Tuple(parts) = &self.kinds[o] else {
-                        return Err(err(format!(
-                            "{}: get-tuple-element of non-tuple",
-                            ins.name
-                        )));
+                    match &self.kinds[o] {
+                        Kind::Tuple(parts) => {
+                            let part = *parts.get(idx).ok_or_else(|| {
+                                err(format!("{}: tuple index {idx} out of range", ins.name))
+                            })?;
+                            Kind::Alias(part)
+                        }
+                        Kind::ParamTuple { start, arity } => {
+                            if idx >= *arity {
+                                return Err(err(format!(
+                                    "{}: tuple index {idx} out of range",
+                                    ins.name
+                                )));
+                            }
+                            Kind::Param(*start + idx as u32)
+                        }
+                        _ if self.multi_shapes.contains_key(&o) => {
+                            if idx >= self.multi_shapes[&o].len() {
+                                return Err(err(format!(
+                                    "{}: tuple index {idx} out of range",
+                                    ins.name
+                                )));
+                            }
+                            match self.multi_canon.get(&(o, idx)) {
+                                Some(&c) => Kind::Alias(c),
+                                None => {
+                                    self.multi_canon.insert((o, idx), i);
+                                    Kind::MultiPart { owner: o, idx }
+                                }
+                            }
+                        }
+                        _ => {
+                            return Err(err(format!(
+                                "{}: get-tuple-element of non-tuple",
+                                ins.name
+                            )));
+                        }
+                    }
+                }
+                "while" | "call" if matches!(ins.shape, ShapeSpec::Tuple(_)) => {
+                    let ShapeSpec::Tuple(parts) = &ins.shape else {
+                        unreachable!("guarded by the match arm");
                     };
-                    let part = *parts.get(idx).ok_or_else(|| {
-                        err(format!("{}: tuple index {idx} out of range", ins.name))
-                    })?;
-                    Kind::Alias(part)
+                    self.multi_shapes.insert(i, parts.clone());
+                    Kind::Inst
                 }
                 _ => Kind::Inst,
             };
@@ -572,8 +776,41 @@ impl<'m> Lowering<'m> {
         matches!(self.kinds[self.resolve(self.comp.root)], Kind::Tuple(_))
     }
 
+    /// Values that occupy an arena slot when materialized: real
+    /// instructions and elements of multi-output instructions.
+    fn is_slot_value(&self, i: usize) -> bool {
+        matches!(self.kinds[i], Kind::Inst | Kind::MultiPart { .. })
+    }
+
+    /// A value no dense operand may consume directly: tuples, flattened
+    /// tuple parameters, and whole multi-output results.
+    fn is_tuple_like(&self, r: usize) -> bool {
+        matches!(self.kinds[r], Kind::Tuple(_) | Kind::ParamTuple { .. })
+            || self.multi_shapes.contains_key(&r)
+    }
+
+    /// The RAW (pre-alias-resolution) SSA values of a while's state tuple.
+    fn while_init_parts(&self, i: usize) -> Result<Vec<usize>> {
+        let ins = &self.comp.instrs[i];
+        if ins.operands.len() != 1 {
+            return Err(err(format!(
+                "{}: while takes exactly one operand",
+                ins.name
+            )));
+        }
+        let t = self.resolve(ins.operands[0]);
+        let Kind::Tuple(parts) = &self.kinds[t] else {
+            return Err(err(format!(
+                "{}: while state must be built by a tuple instruction",
+                ins.name
+            )));
+        };
+        Ok(parts.clone())
+    }
+
     /// Pass B: consumer counts on the alias-resolved graph.  Tuples may
-    /// only feed get-tuple-element or be the root.
+    /// only feed get-tuple-element or be the root — except `while`, which
+    /// consumes its state tuple whole (credited per element).
     fn count_consumers(&mut self, outputs: &[usize]) -> Result<()> {
         for i in 0..self.comp.instrs.len() {
             let ins = &self.comp.instrs[i];
@@ -583,15 +820,31 @@ impl<'m> Lowering<'m> {
             ) {
                 continue;
             }
+            if ins.op == "while" {
+                for p in self.while_init_parts(i)? {
+                    let r = self.resolve(p);
+                    if self.is_tuple_like(r) {
+                        return Err(err(format!(
+                            "{}: nested tuples in while state are not supported",
+                            ins.name
+                        )));
+                    }
+                    if self.is_slot_value(r) {
+                        self.consumer_count[r] += 1;
+                        self.consumer[r] = i;
+                    }
+                }
+                continue;
+            }
             for &o in &ins.operands {
                 let r = self.resolve(o);
-                if matches!(self.kinds[r], Kind::Tuple(_)) {
+                if self.is_tuple_like(r) {
                     return Err(err(format!(
                         "{}: tuple values may only feed get-tuple-element or the root",
                         ins.name
                     )));
                 }
-                if matches!(self.kinds[r], Kind::Inst) {
+                if self.is_slot_value(r) {
                     self.consumer_count[r] += 1;
                     self.consumer[r] = i;
                 }
@@ -599,10 +852,10 @@ impl<'m> Lowering<'m> {
         }
         for &o in outputs {
             let r = self.resolve(o);
-            if matches!(self.kinds[r], Kind::Tuple(_)) {
+            if self.is_tuple_like(r) {
                 return Err(err("nested tuple outputs are not supported".into()));
             }
-            if matches!(self.kinds[r], Kind::Inst) {
+            if self.is_slot_value(r) {
                 self.is_output[r] = true;
                 self.consumer_count[r] += 1;
             }
@@ -729,14 +982,23 @@ impl<'m> Lowering<'m> {
                 let mut inputs: Vec<usize> = Vec::new();
                 self.walk_group(i, &mut ops, &mut inputs);
                 for ssa in inputs {
-                    if matches!(self.kinds[ssa], Kind::Inst) {
+                    if self.is_slot_value(ssa) {
                         r.push(ssa);
+                    }
+                }
+            } else if self.comp.instrs[i].op == "while" {
+                // The state tuple is consumed whole: the step reads each
+                // element (the tuple itself never materializes).
+                for p in self.while_init_parts(i)? {
+                    let t = self.resolve(p);
+                    if self.is_slot_value(t) && !r.contains(&t) {
+                        r.push(t);
                     }
                 }
             } else {
                 for &o in &self.comp.instrs[i].operands {
                     let t = self.resolve(o);
-                    if matches!(self.kinds[t], Kind::Inst) && !r.contains(&t) {
+                    if self.is_slot_value(t) && !r.contains(&t) {
                         r.push(t);
                     }
                 }
@@ -754,21 +1016,20 @@ impl<'m> Lowering<'m> {
         }
 
         // Slot allocation state.
-        let mut slots: Vec<SlotSpec> = Vec::new();
-        let mut free: Vec<Vec<u32>> = vec![Vec::new(); 3]; // by dtype index
-        let dt_ix = |d: DType| match d {
-            DType::F32 => 0usize,
-            DType::S32 => 1,
-            DType::Pred => 2,
-        };
-        let mut slot_of: Vec<u32> = vec![u32::MAX; n_instr];
-        let mut steps: Vec<Step> = Vec::with_capacity(emit_list.len());
-
-        for (e, &i) in emit_list.iter().enumerate() {
-            let dtype = self.dtypes[i];
-            let n = elements(&self.dims[i]);
-            // Allocate the output slot FIRST (never alias a dying input).
-            let out = match free[dt_ix(dtype)].pop() {
+        fn dt_ix(d: DType) -> usize {
+            match d {
+                DType::F32 => 0usize,
+                DType::S32 => 1,
+                DType::Pred => 2,
+            }
+        }
+        fn alloc_slot(
+            slots: &mut Vec<SlotSpec>,
+            free: &mut [Vec<u32>],
+            dtype: DType,
+            n: usize,
+        ) -> u32 {
+            match free[dt_ix(dtype)].pop() {
                 Some(s) => {
                     let spec = &mut slots[s as usize];
                     spec.max_elems = spec.max_elems.max(n);
@@ -781,9 +1042,64 @@ impl<'m> Lowering<'m> {
                     });
                     (slots.len() - 1) as u32
                 }
+            }
+        }
+        let mut slots: Vec<SlotSpec> = Vec::new();
+        let mut free: Vec<Vec<u32>> = vec![Vec::new(); 3]; // by dtype index
+        let mut slot_of: Vec<u32> = vec![u32::MAX; n_instr];
+        let mut steps: Vec<Step> = Vec::with_capacity(emit_list.len());
+
+        // Shared conv scratch: three f32 slots (patch, weights, dot acc)
+        // sized to the largest convolution in the program.  Reserved up
+        // front and never entered into the free lists, so they can't
+        // alias any value slot.
+        let mut conv_scratch: Option<[u32; 3]> = None;
+        {
+            let (mut mk, mut kn, mut mn) = (0usize, 0usize, 0usize);
+            for &i in &emit_list {
+                if self.comp.instrs[i].op == "convolution" {
+                    let g = self.conv_geometry(i)?;
+                    mk = mk.max(g.m * g.k);
+                    kn = kn.max(g.k * g.ng);
+                    mn = mn.max(g.m * g.ng);
+                }
+            }
+            if mk > 0 {
+                let base = slots.len() as u32;
+                for elems in [mk, kn, mn] {
+                    slots.push(SlotSpec {
+                        dtype: DType::F32,
+                        max_elems: elems,
+                    });
+                }
+                conv_scratch = Some([base, base + 1, base + 2]);
+            }
+        }
+
+        for (e, &i) in emit_list.iter().enumerate() {
+            let step = if let Some(parts) = self.multi_shapes.get(&i) {
+                // Multi-output (`while`, tuple `call`): one slot per
+                // state/result element, ALL allocated before any dying
+                // operand is freed (the alias-safety invariant extends
+                // element-wise).
+                let mut outs = Vec::with_capacity(parts.len());
+                for (kx, s) in parts.iter().enumerate() {
+                    let slot = alloc_slot(&mut slots, &mut free, s.dtype, s.elements());
+                    if let Some(&c) = self.multi_canon.get(&(i, kx)) {
+                        slot_of[c] = slot;
+                    }
+                    outs.push(slot);
+                }
+                self.lower_multi(i, outs, &slot_of)?
+            } else {
+                let dtype = self.dtypes[i];
+                let n = elements(&self.dims[i]);
+                // Allocate the output slot FIRST (never alias a dying
+                // input).
+                let out = alloc_slot(&mut slots, &mut free, dtype, n);
+                slot_of[i] = out;
+                self.lower_step(i, out, &slot_of, conv_scratch)?
             };
-            slot_of[i] = out;
-            let step = self.lower_step(i, out, &slot_of)?;
             steps.push(step);
             // Free operands whose last use was this step.
             for &ssa in &reads[e] {
@@ -823,8 +1139,10 @@ impl<'m> Lowering<'m> {
         match &self.kinds[ssa] {
             Kind::Param(p) => Ref::Param(*p),
             Kind::Const(c) => Ref::Const(*c),
-            Kind::Inst => Ref::Slot(slot_of[ssa]),
-            Kind::Alias(_) | Kind::Tuple(_) => unreachable!("resolved before ssa_ref"),
+            Kind::Inst | Kind::MultiPart { .. } => Ref::Slot(slot_of[ssa]),
+            Kind::Alias(_) | Kind::Tuple(_) | Kind::ParamTuple { .. } => {
+                unreachable!("resolved before ssa_ref")
+            }
         }
     }
 
@@ -844,7 +1162,13 @@ impl<'m> Lowering<'m> {
     }
 
     /// Build the [`Step`] for instruction `i` writing slot `out`.
-    fn lower_step(&self, i: usize, out: u32, slot_of: &[u32]) -> Result<Step> {
+    fn lower_step(
+        &self,
+        i: usize,
+        out: u32,
+        slot_of: &[u32],
+        conv_scratch: Option<[u32; 3]>,
+    ) -> Result<Step> {
         let ins = &self.comp.instrs[i];
         let n = elements(&self.dims[i]);
         let name = &ins.name;
@@ -1211,6 +1535,123 @@ impl<'m> Lowering<'m> {
                     n,
                 })
             }
+            "reverse" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let in_dims = self.odims(i, 0).to_vec();
+                let dims_attr = &ins.attrs.dimensions;
+                if dims_attr.iter().any(|&d| d >= in_dims.len()) {
+                    return Err(err(format!(
+                        "{name}: reverse dimensions {dims_attr:?} out of range for rank {}",
+                        in_dims.len()
+                    )));
+                }
+                if elements(&in_dims) != n {
+                    return Err(err(format!(
+                        "{name}: reverse operand has {} elements, result wants {n}",
+                        elements(&in_dims)
+                    )));
+                }
+                let st = strides(&in_dims);
+                let map: Vec<u32> = (0..n)
+                    .map(|flat| {
+                        let mut c = coords_of(flat, &in_dims, &st);
+                        for &d in dims_attr {
+                            c[d] = in_dims[d] - 1 - c[d];
+                        }
+                        let inf: usize = c.iter().zip(&st).map(|(&ci, &si)| ci * si).sum();
+                        inf as u32
+                    })
+                    .collect();
+                Ok(Step::Gather {
+                    dtype: da,
+                    src,
+                    map,
+                    out,
+                })
+            }
+            "dynamic-slice" => {
+                let (src, _, da) = self.oref(i, 0, slot_of)?;
+                let src_dims = self.odims(i, 0).to_vec();
+                let sizes = ins.attrs.dynamic_slice_sizes.clone();
+                if sizes.len() != src_dims.len() {
+                    return Err(err(format!(
+                        "{name}: dynamic_slice_sizes {sizes:?} do not match operand rank {}",
+                        src_dims.len()
+                    )));
+                }
+                if sizes.iter().zip(&src_dims).any(|(&s, &d)| s > d) {
+                    return Err(err(format!(
+                        "{name}: dynamic-slice sizes {sizes:?} exceed operand dims {src_dims:?}"
+                    )));
+                }
+                if elements(&sizes) != n {
+                    return Err(err(format!(
+                        "{name}: dynamic-slice sizes {sizes:?} disagree with the result \
+                         ({n} elements)"
+                    )));
+                }
+                let starts = self.start_indices(i, 1, src_dims.len(), slot_of)?;
+                Ok(Step::DynSlice {
+                    dtype: da,
+                    src,
+                    starts,
+                    src_dims,
+                    sizes,
+                    out,
+                })
+            }
+            "dynamic-update-slice" => {
+                let (src, ns, da) = self.oref(i, 0, slot_of)?;
+                let (upd, _, du) = self.oref(i, 1, slot_of)?;
+                let src_dims = self.odims(i, 0).to_vec();
+                let upd_dims = self.odims(i, 1).to_vec();
+                if du != da {
+                    return Err(err(format!(
+                        "{name}: dynamic-update-slice update dtype {du} does not match \
+                         operand {da}"
+                    )));
+                }
+                if upd_dims.len() != src_dims.len()
+                    || upd_dims.iter().zip(&src_dims).any(|(&u, &s)| u > s)
+                {
+                    return Err(err(format!(
+                        "{name}: update shape {upd_dims:?} does not fit operand {src_dims:?}"
+                    )));
+                }
+                if ns != n {
+                    return Err(err(format!(
+                        "{name}: dynamic-update-slice result wants {n} elements, operand \
+                         has {ns}"
+                    )));
+                }
+                let starts = self.start_indices(i, 2, src_dims.len(), slot_of)?;
+                Ok(Step::DynUpdate {
+                    dtype: da,
+                    src,
+                    upd,
+                    starts,
+                    src_dims,
+                    upd_dims,
+                    out,
+                })
+            }
+            "call" => {
+                let (callee, args) = self.lower_call_common(i, slot_of)?;
+                let want = Shape {
+                    dtype: self.dtypes[i],
+                    dims: self.dims[i].clone(),
+                };
+                check_sub_outputs(name, "call target", &callee, std::slice::from_ref(&want))?;
+                Ok(Step::Call {
+                    callee,
+                    args,
+                    outs: vec![out],
+                })
+            }
+            "while" => Err(err(format!(
+                "{name}: while with non-tuple state is not supported"
+            ))),
+            "convolution" => self.lower_conv(i, out, slot_of, conv_scratch),
             "dot" => self.lower_dot(i, out, slot_of),
             "reduce" => self.lower_reduce(i, out, slot_of),
             // Every dtype-correct elementwise case was consumed above (or
@@ -1354,9 +1795,6 @@ impl<'m> Lowering<'m> {
     fn lower_dot(&self, i: usize, out: u32, slot_of: &[u32]) -> Result<Step> {
         let ins = &self.comp.instrs[i];
         let attrs = &ins.attrs;
-        if !attrs.lhs_batch.is_empty() || !attrs.rhs_batch.is_empty() {
-            return Err(err("dot with batch dimensions is not supported".into()));
-        }
         if attrs.lhs_contracting.len() != 1 || attrs.rhs_contracting.len() != 1 {
             return Err(err(
                 "dot requires exactly one contracting dimension per side".into(),
@@ -1378,9 +1816,28 @@ impl<'m> Lowering<'m> {
                 "dot contraction mismatch: lhs dim {lc} of {ld:?} vs rhs dim {rc} of {rd:?}"
             )));
         }
+        let lb = &attrs.lhs_batch;
+        let rb = &attrs.rhs_batch;
+        if lb.len() != rb.len() {
+            return Err(err("dot batch dimension ranks disagree".into()));
+        }
+        for (&a, &c) in lb.iter().zip(rb.iter()) {
+            if a >= ld.len() || c >= rd.len() || ld[a] != rd[c] || a == lc || c == rc {
+                return Err(err(format!(
+                    "dot batch dimension mismatch: lhs dim {a} of {ld:?} vs rhs dim {c} of {rd:?}"
+                )));
+            }
+        }
         let k = ld[lc];
-        let lfree: Vec<usize> = (0..ld.len()).filter(|&d| d != lc).collect();
-        let rfree: Vec<usize> = (0..rd.len()).filter(|&d| d != rc).collect();
+        let batch_dims: Vec<usize> = lb.iter().map(|&d| ld[d]).collect();
+        let b = elements(&batch_dims);
+        let b_st = strides(&batch_dims);
+        let lfree: Vec<usize> = (0..ld.len())
+            .filter(|&d| d != lc && !lb.contains(&d))
+            .collect();
+        let rfree: Vec<usize> = (0..rd.len())
+            .filter(|&d| d != rc && !rb.contains(&d))
+            .collect();
         let l_st = strides(&ld);
         let r_st = strides(&rd);
         let lfree_dims: Vec<usize> = lfree.iter().map(|&d| ld[d]).collect();
@@ -1389,32 +1846,51 @@ impl<'m> Lowering<'m> {
         let n = elements(&rfree_dims);
         let lf_st = strides(&lfree_dims);
         let rf_st = strides(&rfree_dims);
-        let l_base: Vec<u32> = (0..m)
-            .map(|flat| {
+        if elements(&self.dims[i]) != b * m * n {
+            return Err(err(format!(
+                "dot output {:?} disagrees with its batch/free geometry",
+                self.dims[i]
+            )));
+        }
+        let mut l_base = Vec::with_capacity(b * m);
+        let mut r_base = Vec::with_capacity(b * n);
+        for bx in 0..b {
+            let bc = coords_of(bx, &batch_dims, &b_st);
+            let mut l_off = 0usize;
+            let mut r_off = 0usize;
+            for (ix, (&a, &c)) in lb.iter().zip(rb.iter()).enumerate() {
+                l_off += bc[ix] * l_st[a];
+                r_off += bc[ix] * r_st[c];
+            }
+            for flat in 0..m {
                 let c = coords_of(flat, &lfree_dims, &lf_st);
-                let mut b = 0usize;
+                let mut base = l_off;
                 for (ix, &d) in lfree.iter().enumerate() {
-                    b += c[ix] * l_st[d];
+                    base += c[ix] * l_st[d];
                 }
-                b as u32
-            })
-            .collect();
-        let r_base: Vec<u32> = (0..n)
-            .map(|flat| {
+                l_base.push(base as u32);
+            }
+            for flat in 0..n {
                 let c = coords_of(flat, &rfree_dims, &rf_st);
-                let mut b = 0usize;
+                let mut base = r_off;
                 for (ix, &d) in rfree.iter().enumerate() {
-                    b += c[ix] * r_st[d];
+                    base += c[ix] * r_st[d];
                 }
-                b as u32
-            })
-            .collect();
-        let r_base_is_iota = r_base.iter().enumerate().all(|(j, &b)| b as usize == j);
+                r_base.push(base as u32);
+            }
+        }
+        // Iota only if EVERY batch slice's column bases are the identity
+        // (algorithms the picker gates on this assume contiguous rhs rows).
+        let r_base_is_iota = r_base
+            .iter()
+            .enumerate()
+            .all(|(j, &v)| v as usize == j % n.max(1));
         let algo = cost::select_dot_algo(m, n, k, l_st[lc], r_st[rc], r_base_is_iota);
         Ok(Step::Dot(DotPlan {
             lhs,
             rhs,
             out,
+            b,
             m,
             n,
             k,
@@ -1473,6 +1949,502 @@ impl<'m> Lowering<'m> {
             algo,
         }))
     }
+
+    /// Compile a sub-computation (while condition/body, call target) into
+    /// its own [`Program`].
+    fn compile_sub(&self, name: &str) -> Result<Arc<Program>> {
+        let comp = self.module.computation(name)?;
+        Ok(Arc::new(Program::compile_computation(
+            self.module,
+            comp,
+            false,
+            self.depth + 1,
+        )?))
+    }
+
+    /// Validate and resolve the scalar s32 start-index operands of
+    /// dynamic-slice / dynamic-update-slice.
+    fn start_indices(
+        &self,
+        i: usize,
+        first: usize,
+        rank: usize,
+        slot_of: &[u32],
+    ) -> Result<Vec<Ref>> {
+        let ins = &self.comp.instrs[i];
+        if ins.operands.len() != first + rank {
+            return Err(err(format!(
+                "{}: expected {rank} start indices, got {}",
+                ins.name,
+                ins.operands.len().saturating_sub(first)
+            )));
+        }
+        let mut starts = Vec::with_capacity(rank);
+        for ox in first..first + rank {
+            let (r, nn, dt) = self.oref(i, ox, slot_of)?;
+            if dt != DType::S32 || nn != 1 {
+                return Err(err(format!(
+                    "{}: start index {} must be a scalar s32, got {dt}[{nn}]",
+                    ins.name,
+                    ox - first
+                )));
+            }
+            starts.push(r);
+        }
+        Ok(starts)
+    }
+
+    /// Compile a call target and resolve its argument refs (shared by the
+    /// dense and tuple-result lowerings).
+    fn lower_call_common(&self, i: usize, slot_of: &[u32]) -> Result<(Arc<Program>, Vec<Ref>)> {
+        let ins = &self.comp.instrs[i];
+        let name = &ins.name;
+        let target = ins
+            .attrs
+            .to_apply
+            .as_deref()
+            .ok_or_else(|| err(format!("{name}: call without to_apply")))?;
+        let callee = self.compile_sub(target)?;
+        if callee.params.len() != ins.operands.len() {
+            return Err(err(format!(
+                "{name}: call target {target:?} takes {} parameters, got {} operands",
+                callee.params.len(),
+                ins.operands.len()
+            )));
+        }
+        let mut args = Vec::with_capacity(ins.operands.len());
+        for (ox, p) in callee.params.iter().enumerate() {
+            let (r, nn, dt) = self.oref(i, ox, slot_of)?;
+            if dt != p.dtype || nn != elements(&p.dims) {
+                return Err(err(format!(
+                    "{name}: call argument {ox} is {dt}[{nn}], target {target:?} wants \
+                     {}[{}]",
+                    p.dtype,
+                    elements(&p.dims)
+                )));
+            }
+            args.push(r);
+        }
+        Ok((callee, args))
+    }
+
+    /// Build the step for a multi-output instruction (`while`, tuple
+    /// `call`) writing one slot per tuple element.
+    fn lower_multi(&self, i: usize, outs: Vec<u32>, slot_of: &[u32]) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let parts = self.multi_shapes[&i].clone();
+        match ins.op.as_str() {
+            "while" => self.lower_while(i, &parts, outs, slot_of),
+            "call" => {
+                let (callee, args) = self.lower_call_common(i, slot_of)?;
+                check_sub_outputs(&ins.name, "call target", &callee, &parts)?;
+                Ok(Step::Call { callee, args, outs })
+            }
+            other => Err(err(format!(
+                "{}: tuple-shaped {other:?} is not supported",
+                ins.name
+            ))),
+        }
+    }
+
+    fn lower_while(
+        &self,
+        i: usize,
+        parts: &[Shape],
+        outs: Vec<u32>,
+        slot_of: &[u32],
+    ) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let name = &ins.name;
+        let cond_name = ins
+            .attrs
+            .condition
+            .as_deref()
+            .ok_or_else(|| err(format!("{name}: while without condition")))?;
+        let body_name = ins
+            .attrs
+            .body
+            .as_deref()
+            .ok_or_else(|| err(format!("{name}: while without body")))?;
+        let cond = self.compile_sub(cond_name)?;
+        let body = self.compile_sub(body_name)?;
+        let raw = self.while_init_parts(i)?;
+        if raw.len() != parts.len() {
+            return Err(err(format!(
+                "{name}: while state has {} elements, result declares {}",
+                raw.len(),
+                parts.len()
+            )));
+        }
+        let mut init = Vec::with_capacity(raw.len());
+        for (kx, (&p, want)) in raw.iter().zip(parts).enumerate() {
+            let (dt, nn) = (self.dtypes[p], elements(&self.dims[p]));
+            if dt != want.dtype || nn != want.elements() {
+                return Err(err(format!(
+                    "{name}: while state element {kx} is {dt}[{nn}], result declares {want}"
+                )));
+            }
+            init.push(self.ssa_ref(self.resolve(p), slot_of));
+        }
+        check_sub_params(name, "while condition", &cond, parts)?;
+        check_sub_params(name, "while body", &body, parts)?;
+        let co = &cond.outputs;
+        if co.len() != 1 || co[0].dtype != DType::Pred || !co[0].dims.is_empty() {
+            return Err(err(format!(
+                "{name}: while condition {cond_name:?} must return a scalar pred"
+            )));
+        }
+        check_sub_outputs(name, "while body", &body, parts)?;
+        Ok(Step::While {
+            cond,
+            body,
+            init,
+            outs,
+        })
+    }
+
+    /// Validated compile-time geometry of a convolution (shared by the
+    /// scratch-slot sizing pass and the full lowering).
+    fn conv_geometry(&self, i: usize) -> Result<ConvGeom> {
+        let ins = &self.comp.instrs[i];
+        let name = &ins.name;
+        let attrs = &ins.attrs;
+        if ins.operands.len() != 2 {
+            return Err(err(format!(
+                "{name}: convolution takes exactly two operands"
+            )));
+        }
+        let dl = attrs
+            .dim_labels
+            .as_deref()
+            .ok_or_else(|| err(format!("{name}: convolution without dim_labels")))?;
+        let (in_seg, rest) = dl
+            .split_once('_')
+            .ok_or_else(|| err(format!("{name}: malformed dim_labels {dl:?}")))?;
+        let (ker_seg, out_seg) = rest
+            .split_once("->")
+            .ok_or_else(|| err(format!("{name}: malformed dim_labels {dl:?}")))?;
+        let in_ord = parse_dim_order(in_seg, 'b', 'f', "input")?;
+        let ker_ord = parse_dim_order(ker_seg, 'i', 'o', "kernel")?;
+        let out_ord = parse_dim_order(out_seg, 'b', 'f', "output")?;
+        let in_dims = self.odims(i, 0);
+        let ker_dims = self.odims(i, 1);
+        let out_dims = &self.dims[i];
+        let s = in_ord.sp.len();
+        if ker_ord.sp.len() != s || out_ord.sp.len() != s {
+            return Err(err(format!(
+                "{name}: dim_labels {dl:?} spatial ranks disagree"
+            )));
+        }
+        if in_dims.len() != s + 2 || ker_dims.len() != s + 2 || out_dims.len() != s + 2 {
+            return Err(err(format!(
+                "{name}: dim_labels {dl:?} do not match operand/result ranks"
+            )));
+        }
+        if attrs.window.len() != s {
+            return Err(err(format!(
+                "{name}: window has {} dimensions, dim_labels {dl:?} want {s}",
+                attrs.window.len()
+            )));
+        }
+        if attrs.batch_group_count.unwrap_or(1) != 1 {
+            return Err(err(format!(
+                "{name}: batch_group_count > 1 is not supported"
+            )));
+        }
+        let groups = attrs.feature_group_count.unwrap_or(1).max(1);
+        let batch = in_dims[in_ord.b];
+        let ci = in_dims[in_ord.f];
+        let ki = ker_dims[ker_ord.b];
+        let ko = ker_dims[ker_ord.f];
+        if ci != groups * ki || ko % groups != 0 {
+            return Err(err(format!(
+                "{name}: feature_group_count {groups} does not partition input features \
+                 {ci} (kernel wants {ki} per group) / output features {ko}"
+            )));
+        }
+        if out_dims[out_ord.b] != batch || out_dims[out_ord.f] != ko {
+            return Err(err(format!(
+                "{name}: declared output batch/features disagree with the operands"
+            )));
+        }
+        let in_spatial: Vec<usize> = in_ord.sp.iter().map(|&p| in_dims[p]).collect();
+        let ker_spatial: Vec<usize> = ker_ord.sp.iter().map(|&p| ker_dims[p]).collect();
+        let mut out_spatial = Vec::with_capacity(s);
+        for d in 0..s {
+            let w = &attrs.window[d];
+            if w.base_dilation != 1 {
+                return Err(err(format!(
+                    "{name}: lhs_dilate (transposed convolution) is not supported"
+                )));
+            }
+            if w.stride == 0 {
+                return Err(err(format!("{name}: window stride 0")));
+            }
+            if w.size == 0 || w.window_dilation == 0 {
+                return Err(err(format!(
+                    "{name}: window size/dilation 0 in spatial dim {d}"
+                )));
+            }
+            if w.size != ker_spatial[d] {
+                return Err(err(format!(
+                    "{name}: window size {} disagrees with kernel spatial dim {}",
+                    w.size, ker_spatial[d]
+                )));
+            }
+            let extent = ((w.size - 1) * w.window_dilation + 1) as i64;
+            let padded = in_spatial[d] as i64 + w.pad_lo + w.pad_hi;
+            if padded < extent {
+                return Err(err(format!(
+                    "{name}: window does not fit padded spatial dim {d} \
+                     ({padded} < {extent})"
+                )));
+            }
+            let o = ((padded - extent) / w.stride as i64 + 1) as usize;
+            if out_dims[out_ord.sp[d]] != o {
+                return Err(err(format!(
+                    "{name}: declared output spatial dim {d} is {}, window math gives {o}",
+                    out_dims[out_ord.sp[d]]
+                )));
+            }
+            out_spatial.push(o);
+        }
+        Ok(ConvGeom {
+            in_ord,
+            ker_ord,
+            out_ord,
+            groups,
+            ki,
+            ng: ko / groups,
+            in_spatial,
+            ker_spatial,
+            m: batch * elements(&out_spatial),
+            k: elements(&ker_spatial) * ki,
+            out_spatial,
+        })
+    }
+
+    fn lower_conv(
+        &self,
+        i: usize,
+        out: u32,
+        slot_of: &[u32],
+        scratch: Option<[u32; 3]>,
+    ) -> Result<Step> {
+        let ins = &self.comp.instrs[i];
+        let name = &ins.name;
+        let (lhs, _, dl) = self.oref(i, 0, slot_of)?;
+        let (rhs, _, dr) = self.oref(i, 1, slot_of)?;
+        if dl != DType::F32 || dr != DType::F32 {
+            return Err(err(format!(
+                "{name}: convolution is f32-only on the interp backend"
+            )));
+        }
+        let g = self.conv_geometry(i)?;
+        let scratch = scratch.expect("conv scratch reserved for convolution programs");
+        let in_st = strides(self.odims(i, 0));
+        let ker_st = strides(self.odims(i, 1));
+        let out_st = strides(&self.dims[i]);
+        let osp_st = strides(&g.out_spatial);
+        let ksp_st = strides(&g.ker_spatial);
+        let osp_elems = elements(&g.out_spatial);
+        let window = &ins.attrs.window;
+        let s = g.out_spatial.len();
+        let (m, k, ng) = (g.m, g.k, g.ng);
+        let mut groups = Vec::with_capacity(g.groups);
+        for gx in 0..g.groups {
+            // Patch column order: kernel spatial coords, then the
+            // group-local input feature (fastest).
+            let mut patch_map = vec![u32::MAX; m * k];
+            for r in 0..m {
+                let b = r / osp_elems;
+                let oc = coords_of(r % osp_elems, &g.out_spatial, &osp_st);
+                for c in 0..k {
+                    let kc = coords_of(c / g.ki, &g.ker_spatial, &ksp_st);
+                    let fi = c % g.ki;
+                    let mut flat =
+                        b * in_st[g.in_ord.b] + (gx * g.ki + fi) * in_st[g.in_ord.f];
+                    let mut inside = true;
+                    for d in 0..s {
+                        let w = &window[d];
+                        let iy = oc[d] as i64 * w.stride as i64 - w.pad_lo
+                            + kc[d] as i64 * w.window_dilation as i64;
+                        if iy < 0 || iy as usize >= g.in_spatial[d] {
+                            inside = false;
+                            break;
+                        }
+                        flat += iy as usize * in_st[g.in_ord.sp[d]];
+                    }
+                    if inside {
+                        patch_map[r * k + c] = flat as u32;
+                    }
+                }
+            }
+            let mut w_map = vec![0u32; k * ng];
+            for c in 0..k {
+                let kc = coords_of(c / g.ki, &g.ker_spatial, &ksp_st);
+                let fi = c % g.ki;
+                for j in 0..ng {
+                    let mut flat =
+                        fi * ker_st[g.ker_ord.b] + (gx * ng + j) * ker_st[g.ker_ord.f];
+                    for d in 0..s {
+                        flat += kc[d] * ker_st[g.ker_ord.sp[d]];
+                    }
+                    w_map[c * ng + j] = flat as u32;
+                }
+            }
+            let mut place = vec![0u32; m * ng];
+            for r in 0..m {
+                let b = r / osp_elems;
+                let oc = coords_of(r % osp_elems, &g.out_spatial, &osp_st);
+                for j in 0..ng {
+                    let mut flat =
+                        b * out_st[g.out_ord.b] + (gx * ng + j) * out_st[g.out_ord.f];
+                    for d in 0..s {
+                        flat += oc[d] * out_st[g.out_ord.sp[d]];
+                    }
+                    place[r * ng + j] = flat as u32;
+                }
+            }
+            groups.push(ConvGroup {
+                patch_map,
+                w_map,
+                place,
+            });
+        }
+        // The im2col dot is row-major [m,k] x [k,ng]: contiguous k on the
+        // left (stride 1), iota column bases on the right (stride ng).
+        let l_base: Vec<u32> = (0..m).map(|r| (r * k) as u32).collect();
+        let r_base: Vec<u32> = (0..ng).map(|j| j as u32).collect();
+        let algo = cost::select_dot_algo(m, ng, k, 1, ng, true);
+        Ok(Step::Conv(ConvPlan {
+            lhs,
+            rhs,
+            out,
+            m,
+            k,
+            ng,
+            groups,
+            scratch,
+            l_base,
+            r_base,
+            algo,
+        }))
+    }
+}
+
+/// Positions of the batch/feature/spatial dims in one `dim_labels`
+/// segment (`b01f`-style; the kernel segment maps `i`/`o` to b/f here).
+struct DimOrder {
+    b: usize,
+    f: usize,
+    /// Spatial digit -> dim position.
+    sp: Vec<usize>,
+}
+
+/// Compile-time geometry of a convolution.
+struct ConvGeom {
+    in_ord: DimOrder,
+    ker_ord: DimOrder,
+    out_ord: DimOrder,
+    groups: usize,
+    /// Input features per group (the kernel's input-feature dim).
+    ki: usize,
+    /// Output features per group.
+    ng: usize,
+    in_spatial: Vec<usize>,
+    ker_spatial: Vec<usize>,
+    out_spatial: Vec<usize>,
+    /// Patch rows: batch x output spatial positions.
+    m: usize,
+    /// Patch columns: kernel spatial positions x input features per group.
+    k: usize,
+}
+
+fn parse_dim_order(seg: &str, bc: char, fc: char, what: &str) -> Result<DimOrder> {
+    let mut b = None;
+    let mut f = None;
+    let mut sp: Vec<Option<usize>> = Vec::new();
+    for (pos, c) in seg.chars().enumerate() {
+        if c == bc {
+            if b.replace(pos).is_some() {
+                return Err(err(format!("dim_labels {what} segment repeats {bc:?}")));
+            }
+        } else if c == fc {
+            if f.replace(pos).is_some() {
+                return Err(err(format!("dim_labels {what} segment repeats {fc:?}")));
+            }
+        } else if let Some(d) = c.to_digit(10) {
+            let d = d as usize;
+            if sp.len() <= d {
+                sp.resize(d + 1, None);
+            }
+            if sp[d].replace(pos).is_some() {
+                return Err(err(format!("dim_labels {what} segment repeats digit {d}")));
+            }
+        } else {
+            return Err(err(format!(
+                "bad dim_labels character {c:?} in the {what} segment"
+            )));
+        }
+    }
+    let b = b.ok_or_else(|| err(format!("dim_labels {what} segment missing {bc:?}")))?;
+    let f = f.ok_or_else(|| err(format!("dim_labels {what} segment missing {fc:?}")))?;
+    let sp: Vec<usize> = sp
+        .into_iter()
+        .map(|o| {
+            o.ok_or_else(|| {
+                err(format!(
+                    "dim_labels {what} segment has a gap in its spatial digits"
+                ))
+            })
+        })
+        .collect::<Result<_>>()?;
+    Ok(DimOrder { b, f, sp })
+}
+
+/// Check a sub-program's flattened parameters against expected shapes.
+fn check_sub_params(name: &str, what: &str, sub: &Program, want: &[Shape]) -> Result<()> {
+    if sub.params.len() != want.len() {
+        return Err(err(format!(
+            "{name}: {what} {:?} takes {} values, the state has {}",
+            sub.entry_name,
+            sub.params.len(),
+            want.len()
+        )));
+    }
+    for (kx, (p, w)) in sub.params.iter().zip(want).enumerate() {
+        if p.dtype != w.dtype || elements(&p.dims) != w.elements() {
+            return Err(err(format!(
+                "{name}: {what} parameter {kx} is {}[{}], expected {w}",
+                p.dtype,
+                elements(&p.dims)
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Check a sub-program's outputs against expected shapes.
+fn check_sub_outputs(name: &str, what: &str, sub: &Program, want: &[Shape]) -> Result<()> {
+    if sub.outputs.len() != want.len() {
+        return Err(err(format!(
+            "{name}: {what} {:?} returns {} values, expected {}",
+            sub.entry_name,
+            sub.outputs.len(),
+            want.len()
+        )));
+    }
+    for (kx, (o, w)) in sub.outputs.iter().zip(want).enumerate() {
+        let oe: usize = o.dims.iter().map(|&d| d as usize).product();
+        if o.dtype != w.dtype || oe != w.elements() {
+            return Err(err(format!(
+                "{name}: {what} output {kx} is {}[{oe}], expected {w}",
+                o.dtype
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Compile a reduce region computation into a [`RegionFn`]: the one-op

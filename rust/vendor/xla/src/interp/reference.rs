@@ -232,6 +232,65 @@ fn eval_instr(
         "dot" => dot(opv(0)?, opv(1)?, &ins.attrs)?,
         "reduce" => reduce(module, opv(0)?, opv(1)?, &ins.attrs)?,
         "iota" => iota(declared_dense(ins)?, ins.attrs.iota_dimension.unwrap_or(0))?,
+        "reverse" => reverse(opv(0)?, &ins.attrs.dimensions)?,
+        "convolution" => convolution(opv(0)?, opv(1)?, &ins.attrs)?,
+        "dynamic-slice" => {
+            let mut starts = Vec::with_capacity(ins.operands.len().saturating_sub(1));
+            for i in 1..ins.operands.len() {
+                starts.push(scalar_start(opv(i)?)?);
+            }
+            dynamic_slice(opv(0)?, &starts, &ins.attrs.dynamic_slice_sizes)?
+        }
+        "dynamic-update-slice" => {
+            let mut starts = Vec::with_capacity(ins.operands.len().saturating_sub(2));
+            for i in 2..ins.operands.len() {
+                starts.push(scalar_start(opv(i)?)?);
+            }
+            dynamic_update(opv(0)?, opv(1)?, &starts)?
+        }
+        "call" => {
+            let callee_name = ins
+                .attrs
+                .to_apply
+                .as_deref()
+                .ok_or_else(|| err(format!("{}: call without to_apply", ins.name)))?;
+            let callee = module.computation(callee_name)?;
+            let mut cargs = Vec::with_capacity(ins.operands.len());
+            for i in 0..ins.operands.len() {
+                cargs.push(opv(i)?.clone());
+            }
+            eval_computation(module, callee, &cargs)?
+        }
+        "while" => {
+            let cond_name = ins
+                .attrs
+                .condition
+                .as_deref()
+                .ok_or_else(|| err(format!("{}: while without condition", ins.name)))?;
+            let body_name = ins
+                .attrs
+                .body
+                .as_deref()
+                .ok_or_else(|| err(format!("{}: while without body", ins.name)))?;
+            let cond = module.computation(cond_name)?;
+            let body = module.computation(body_name)?;
+            let mut state = opv(0)?.clone();
+            loop {
+                let c = eval_computation(module, cond, std::slice::from_ref(&state))?;
+                let p = c.preds()?;
+                if p.len() != 1 {
+                    return Err(err(format!(
+                        "{}: while condition must produce a scalar pred",
+                        ins.name
+                    )));
+                }
+                if !p[0] {
+                    break;
+                }
+                state = eval_computation(module, body, std::slice::from_ref(&state))?;
+            }
+            state
+        }
         "tuple" => {
             let mut parts = Vec::with_capacity(ins.operands.len());
             for i in 0..ins.operands.len() {
@@ -801,9 +860,6 @@ fn concatenate(parts: &[&Value], dim: usize) -> Result<Value> {
 }
 
 fn dot(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
-    if !attrs.lhs_batch.is_empty() || !attrs.rhs_batch.is_empty() {
-        return Err(err("dot with batch dimensions is not supported".into()));
-    }
     if attrs.lhs_contracting.len() != 1 || attrs.rhs_contracting.len() != 1 {
         return Err(err(
             "dot requires exactly one contracting dimension per side".into(),
@@ -819,12 +875,30 @@ fn dot(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
             "dot contraction mismatch: lhs dim {lc} of {ld:?} vs rhs dim {rc} of {rd:?}"
         )));
     }
+    let lbd = &attrs.lhs_batch;
+    let rbd = &attrs.rhs_batch;
+    if lbd.len() != rbd.len() {
+        return Err(err("dot batch dimension ranks disagree".into()));
+    }
+    for (&x, &y) in lbd.iter().zip(rbd.iter()) {
+        if x >= ld.len() || y >= rd.len() || ld[x] != rd[y] || x == lc || y == rc {
+            return Err(err(format!(
+                "dot batch dimension mismatch: lhs dim {x} of {ld:?} vs rhs dim {y} of {rd:?}"
+            )));
+        }
+    }
     let k = ld[lc];
-    let lfree: Vec<usize> = (0..ld.len()).filter(|&d| d != lc).collect();
-    let rfree: Vec<usize> = (0..rd.len()).filter(|&d| d != rc).collect();
-    let out_dims: Vec<usize> = lfree
+    let lfree: Vec<usize> = (0..ld.len())
+        .filter(|&d| d != lc && !lbd.contains(&d))
+        .collect();
+    let rfree: Vec<usize> = (0..rd.len())
+        .filter(|&d| d != rc && !rbd.contains(&d))
+        .collect();
+    // XLA layout: batch dims (lhs order), then lhs free, then rhs free.
+    let out_dims: Vec<usize> = lbd
         .iter()
         .map(|&d| ld[d])
+        .chain(lfree.iter().map(|&d| ld[d]))
         .chain(rfree.iter().map(|&d| rd[d]))
         .collect();
     let l_st = strides(ld);
@@ -835,12 +909,16 @@ fn dot(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
     for flat in 0..n {
         let c = coords_of(flat, &out_dims, &out_st);
         let mut lbase = 0usize;
-        for (i, &d) in lfree.iter().enumerate() {
-            lbase += c[i] * l_st[d];
-        }
         let mut rbase = 0usize;
+        for (i, (&x, &y)) in lbd.iter().zip(rbd.iter()).enumerate() {
+            lbase += c[i] * l_st[x];
+            rbase += c[i] * r_st[y];
+        }
+        for (i, &d) in lfree.iter().enumerate() {
+            lbase += c[lbd.len() + i] * l_st[d];
+        }
         for (i, &d) in rfree.iter().enumerate() {
-            rbase += c[lfree.len() + i] * r_st[d];
+            rbase += c[lbd.len() + lfree.len() + i] * r_st[d];
         }
         let mut acc = 0.0f32;
         for kk in 0..k {
@@ -868,6 +946,276 @@ fn iota(want: &Shape, dim: usize) -> Result<Value> {
     Ok(Value::Dense {
         dims: want.dims.clone(),
         buf: Buf::build(want.dtype, vals),
+    })
+}
+
+fn reverse(a: &Value, rev: &[usize]) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    if rev.iter().any(|&d| d >= dims.len()) {
+        return Err(err(format!(
+            "reverse dimensions {rev:?} out of range for rank {}",
+            dims.len()
+        )));
+    }
+    let st = strides(dims);
+    let n = elements(dims);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let mut c = coords_of(flat, dims, &st);
+        for &d in rev {
+            c[d] = dims[d] - 1 - c[d];
+        }
+        let inf: usize = c.iter().zip(&st).map(|(&ci, &si)| ci * si).sum();
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn scalar_start(v: &Value) -> Result<i64> {
+    match v.dense()?.1 {
+        Buf::I32(x) if x.len() == 1 => Ok(i64::from(x[0])),
+        other => Err(err(format!(
+            "dynamic start index must be a scalar s32, got {}[{}]",
+            other.dtype(),
+            other.len()
+        ))),
+    }
+}
+
+fn dynamic_slice(a: &Value, starts: &[i64], sizes: &[usize]) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    if starts.len() != dims.len() || sizes.len() != dims.len() {
+        return Err(err(format!(
+            "dynamic-slice expects {} start indices and sizes, got {} and {}",
+            dims.len(),
+            starts.len(),
+            sizes.len()
+        )));
+    }
+    let mut offs = Vec::with_capacity(dims.len());
+    for (d, (&sz, &start)) in sizes.iter().zip(starts).enumerate() {
+        if sz > dims[d] {
+            return Err(err(format!(
+                "dynamic-slice size {sz} exceeds dimension {d} of size {}",
+                dims[d]
+            )));
+        }
+        // The HLO contract: starts clamp to [0, dim - size].
+        offs.push(start.clamp(0, (dims[d] - sz) as i64) as usize);
+    }
+    let st = strides(dims);
+    let out_st = strides(sizes);
+    let n = elements(sizes);
+    let mut vals = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, sizes, &out_st);
+        let inf: usize = c
+            .iter()
+            .enumerate()
+            .map(|(d, &ci)| (offs[d] + ci) * st[d])
+            .sum();
+        vals.push(buf.get_f64(inf));
+    }
+    Ok(Value::Dense {
+        dims: sizes.to_vec(),
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+fn dynamic_update(a: &Value, u: &Value, starts: &[i64]) -> Result<Value> {
+    let (dims, buf) = a.dense()?;
+    let (udims, ubuf) = u.dense()?;
+    if ubuf.dtype() != buf.dtype() {
+        return Err(err(format!(
+            "dynamic-update-slice update dtype {} does not match operand dtype {}",
+            ubuf.dtype(),
+            buf.dtype()
+        )));
+    }
+    if starts.len() != dims.len() || udims.len() != dims.len() {
+        return Err(err(format!(
+            "dynamic-update-slice expects {} start indices and an update of the same \
+             rank, got {} and rank {}",
+            dims.len(),
+            starts.len(),
+            udims.len()
+        )));
+    }
+    let mut offs = Vec::with_capacity(dims.len());
+    for (d, (&ud, &start)) in udims.iter().zip(starts).enumerate() {
+        if ud > dims[d] {
+            return Err(err(format!(
+                "dynamic-update-slice update dim {d} of size {ud} exceeds operand \
+                 dimension of size {}",
+                dims[d]
+            )));
+        }
+        offs.push(start.clamp(0, (dims[d] - ud) as i64) as usize);
+    }
+    let n = elements(dims);
+    let mut vals: Vec<f64> = (0..n).map(|i| buf.get_f64(i)).collect();
+    let st = strides(dims);
+    let ust = strides(udims);
+    for flat in 0..elements(udims) {
+        let c = coords_of(flat, udims, &ust);
+        let of: usize = c
+            .iter()
+            .enumerate()
+            .map(|(d, &ci)| (offs[d] + ci) * st[d])
+            .sum();
+        vals[of] = ubuf.get_f64(flat);
+    }
+    Ok(Value::Dense {
+        dims: dims.to_vec(),
+        buf: Buf::build(buf.dtype(), vals),
+    })
+}
+
+/// Dimension positions of one `dim_labels` segment: batch/feature (or
+/// input/output feature for the kernel segment) plus spatial positions in
+/// spatial-number order.
+fn conv_order(seg: &str, bc: char, fc: char) -> Result<(usize, usize, Vec<usize>)> {
+    let mut b = None;
+    let mut f = None;
+    let mut sp: Vec<(usize, usize)> = Vec::new();
+    for (pos, ch) in seg.chars().enumerate() {
+        if ch == bc {
+            b = Some(pos);
+        } else if ch == fc {
+            f = Some(pos);
+        } else if let Some(d) = ch.to_digit(10) {
+            sp.push((d as usize, pos));
+        } else {
+            return Err(err(format!(
+                "unknown character {ch:?} in convolution dim_labels segment {seg:?}"
+            )));
+        }
+    }
+    sp.sort_unstable();
+    let spatial = sp.into_iter().map(|(_, p)| p).collect();
+    let b = b.ok_or_else(|| err(format!("dim_labels segment {seg:?} lacks {bc:?}")))?;
+    let f = f.ok_or_else(|| err(format!("dim_labels segment {seg:?} lacks {fc:?}")))?;
+    Ok((b, f, spatial))
+}
+
+/// Direct (non-im2col) convolution — deliberately a different algorithm
+/// from the compiled path so the differential suite cross-checks the
+/// im2col lowering rather than replaying it.
+fn convolution(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
+    let labels = attrs
+        .dim_labels
+        .as_deref()
+        .ok_or_else(|| err("convolution without dim_labels".into()))?;
+    let (in_seg, rest) = labels
+        .split_once('_')
+        .ok_or_else(|| err(format!("bad convolution dim_labels {labels:?}")))?;
+    let (ker_seg, out_seg) = rest
+        .split_once("->")
+        .ok_or_else(|| err(format!("bad convolution dim_labels {labels:?}")))?;
+    let (in_b, in_f, in_sp) = conv_order(in_seg, 'b', 'f')?;
+    let (ker_i, ker_o, ker_sp) = conv_order(ker_seg, 'i', 'o')?;
+    let (out_b, out_f, out_sp) = conv_order(out_seg, 'b', 'f')?;
+
+    let lhs = a.f32s()?;
+    let ker = b.f32s()?;
+    let (ld, _) = a.dense()?;
+    let (rd, _) = b.dense()?;
+    let srank = in_sp.len();
+    let window = &attrs.window;
+    if window.len() != srank || ker_sp.len() != srank || out_sp.len() != srank {
+        return Err(err(format!(
+            "convolution window rank {} does not match spatial rank {srank}",
+            window.len()
+        )));
+    }
+    if attrs.batch_group_count.unwrap_or(1) != 1 {
+        return Err(err("convolution batch_group_count > 1 is not supported".into()));
+    }
+    let groups = attrs.feature_group_count.unwrap_or(1);
+    let (batch, ci) = (ld[in_b], ld[in_f]);
+    let (ki, ko) = (rd[ker_i], rd[ker_o]);
+    if groups == 0 || ci != groups * ki || ko % groups != 0 {
+        return Err(err(format!(
+            "convolution feature grouping mismatch: input features {ci}, kernel input \
+             features {ki}, groups {groups}, output features {ko}"
+        )));
+    }
+    let ng = ko / groups;
+
+    let mut out_dims = vec![0usize; srank + 2];
+    out_dims[out_b] = batch;
+    out_dims[out_f] = ko;
+    for d in 0..srank {
+        let w = &window[d];
+        if w.base_dilation != 1 {
+            return Err(err(
+                "convolution lhs_dilate (transposed convolution) is not supported".into(),
+            ));
+        }
+        if w.size != rd[ker_sp[d]] {
+            return Err(err(format!(
+                "convolution window size {} does not match kernel dimension {}",
+                w.size,
+                rd[ker_sp[d]]
+            )));
+        }
+        let padded = ld[in_sp[d]] as i64 + w.pad_lo + w.pad_hi;
+        let extent = (w.window_dilation * (w.size - 1) + 1) as i64;
+        if w.stride == 0 || padded < extent {
+            return Err(err(format!(
+                "convolution window does not fit dimension {d} (padded {padded}, \
+                 extent {extent})"
+            )));
+        }
+        out_dims[out_sp[d]] = ((padded - extent) / w.stride as i64 + 1) as usize;
+    }
+
+    let l_st = strides(ld);
+    let r_st = strides(rd);
+    let out_st = strides(&out_dims);
+    let n = elements(&out_dims);
+    let ker_dims: Vec<usize> = window.iter().map(|w| w.size).collect();
+    let ker_elems = elements(&ker_dims);
+    let ker_st = strides(&ker_dims);
+    let mut out = Vec::with_capacity(n);
+    for flat in 0..n {
+        let c = coords_of(flat, &out_dims, &out_st);
+        let of = c[out_f];
+        let g = of / ng;
+        let mut acc = 0.0f32;
+        for kflat in 0..ker_elems {
+            let kc = coords_of(kflat, &ker_dims, &ker_st);
+            let mut lbase = c[out_b] * l_st[in_b];
+            let mut in_range = true;
+            for d in 0..srank {
+                let w = &window[d];
+                let iy = c[out_sp[d]] as i64 * w.stride as i64 - w.pad_lo
+                    + kc[d] as i64 * w.window_dilation as i64;
+                if iy < 0 || iy as usize >= ld[in_sp[d]] {
+                    in_range = false;
+                    break;
+                }
+                lbase += iy as usize * l_st[in_sp[d]];
+            }
+            if !in_range {
+                continue;
+            }
+            let mut rbase = of * r_st[ker_o];
+            for d in 0..srank {
+                rbase += kc[d] * r_st[ker_sp[d]];
+            }
+            for ic in 0..ki {
+                acc += lhs[lbase + (g * ki + ic) * l_st[in_f]] * ker[rbase + ic * r_st[ker_i]];
+            }
+        }
+        out.push(acc);
+    }
+    Ok(Value::Dense {
+        dims: out_dims,
+        buf: Buf::F32(out),
     })
 }
 
