@@ -23,6 +23,7 @@ import time
 TOTAL_REQUESTS = 240
 THREADS = 32
 DISTINCT_SEEDS = 8
+MAX_CLIENTS = 128
 
 TRIAL = {
     "model": "tinylogreg8",
@@ -55,6 +56,29 @@ def post(addr, path, body, timeout=60):
         conn.close()
 
 
+def raw_head(addr, timeout=10):
+    """GET /healthz over a raw socket; returns the response head (for
+    asserting on status line + headers of rejection paths)."""
+    with socket.create_connection(addr, timeout=timeout) as s:
+        s.sendall(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+        data = b""
+        while b"\r\n\r\n" not in data:
+            chunk = s.recv(4096)
+            if not chunk:
+                break
+            data += chunk
+    return data.split(b"\r\n\r\n", 1)[0].decode("utf-8", "replace")
+
+
+def header_value(head, name):
+    for line in head.split("\r\n")[1:]:
+        if ":" in line:
+            k, v = line.split(":", 1)
+            if k.strip().lower() == name:
+                return v.strip()
+    return None
+
+
 def get(addr, path, timeout=30):
     host, port = addr
     conn = http.client.HTTPConnection(host, port, timeout=timeout)
@@ -80,7 +104,7 @@ def main():
             "--jobs",
             "2",
             "--max-clients",
-            "128",
+            str(MAX_CLIENTS),
             "--max-queue",
             "512",
             "--artifacts",
@@ -188,6 +212,32 @@ def run(proc):
         fail(f"stats: exec cache empty after load: {stats.get('exec_cache')}")
     print(f"stats ok: {json.dumps(adm)}")
 
+    # ---- backpressure: every 503 must carry Retry-After ------------------
+    # Saturate the connection cap with idle sockets (each held connection
+    # keeps its permit while the server waits for a request), then the
+    # next connection must be refused with a 503 that tells the client
+    # when to come back.  Accepts are asynchronous, so retry briefly.
+    idle = []
+    try:
+        for _ in range(MAX_CLIENTS):
+            idle.append(socket.create_connection(addr, timeout=10))
+        head = ""
+        for _ in range(50):
+            time.sleep(0.1)  # let the server accept the idle connections
+            head = raw_head(addr)
+            if " 503 " in head.split("\r\n", 1)[0] + " ":
+                break
+        status_line = head.split("\r\n", 1)[0]
+        if " 503 " not in status_line + " ":
+            fail(f"over-cap connection -> {status_line!r} (want 503)")
+        retry_after = header_value(head, "retry-after")
+        if retry_after is None or not retry_after.isdigit():
+            fail(f"503 without a usable Retry-After: {head!r}")
+        print(f"backpressure ok: 503 with Retry-After {retry_after}")
+    finally:
+        for s in idle:
+            s.close()
+
     # ---- graceful shutdown ----------------------------------------------
     proc.send_signal(signal.SIGTERM)
     try:
@@ -198,13 +248,18 @@ def run(proc):
     if code != 0:
         fail(f"server exited {code} on SIGTERM (want 0): {proc.stderr.read()}")
 
-    # The drained server must no longer take connections.
+    # The drained server must no longer take connections; if it still
+    # answers (drain window), the refusal is a 503 with Retry-After.
     try:
         with socket.create_connection(addr, timeout=5) as s:
             s.sendall(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
             data = s.recv(1024)
-        if data and b" 503 " not in data.split(b"\r\n", 1)[0]:
-            fail(f"post-SIGTERM connection was serviced: {data!r}")
+        if data:
+            head = data.decode("utf-8", "replace")
+            if " 503 " not in head.split("\r\n", 1)[0] + " ":
+                fail(f"post-SIGTERM connection was serviced: {data!r}")
+            if header_value(head, "retry-after") is None:
+                fail(f"draining 503 without Retry-After: {data!r}")
     except OSError:
         pass  # connection refused: exactly right
 

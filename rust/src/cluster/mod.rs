@@ -21,6 +21,18 @@
 //! overhead in the paper; the dense-trick/chunked-vmap overhead here).
 //! Constants default to A100-class magnitudes and can be calibrated from
 //! measured CPU per-sample costs via [`ClusterModel::calibrated`].
+//!
+//! **Failure regimes** (PR 9): [`ClusterSpec`] optionally describes an
+//! *imperfect* cluster — per-worker speed heterogeneity, occasional
+//! stragglers, and preemption/recompute events.  All regime draws are
+//! pure hashes of `(fault_seed, step, worker)` via
+//! [`splitmix64`](crate::util::rng::splitmix64), so simulated seconds
+//! stay byte-deterministic for a given spec and contribute to run
+//! fingerprints exactly when non-default.  With regimes inactive (the
+//! default), [`ClusterModel::step_time_at`] is float-identical to
+//! [`ClusterModel::step_time`].
+
+use crate::util::rng::splitmix64;
 
 /// Per-run overrides of the simulated cluster shape — the knobs a
 /// scenario varies (worker count, instrumentation surcharge) without
@@ -35,6 +47,23 @@ pub struct ClusterSpec {
     /// Multiplicative per-sample surcharge of diversity-instrumented
     /// steps (paper's BackPACK regime: ~0.9, i.e. ~1.9x per sample).
     pub div_overhead: f64,
+    /// Per-worker speed spread in `[0, 1)`: worker `w` of `W` runs at
+    /// relative speed `1 - heterogeneity * (2w/(W-1) - 1)` (clamped to
+    /// ≥ 0.05), so `0.2` means the slowest (last) worker is 20% slower
+    /// than nominal.  `0.0` (default) disables heterogeneity.
+    pub heterogeneity: f64,
+    /// Compute-time multiplier applied to a worker's shard on a
+    /// straggler step (paper-adjacent transient slowdowns; ≥ 1).
+    pub straggler_factor: f64,
+    /// Per-(step, worker) probability of a straggler event.  `0.0`
+    /// (default) disables stragglers.
+    pub straggler_prob: f64,
+    /// Per-(step, worker) probability of a preemption: the worker loses
+    /// its shard mid-step and recomputes it once.  `0.0` disables.
+    pub preempt_prob: f64,
+    /// Seed for the regime draws; part of the fingerprint, so two runs
+    /// with different fault seeds never share cached results.
+    pub fault_seed: u64,
 }
 
 impl Default for ClusterSpec {
@@ -42,6 +71,11 @@ impl Default for ClusterSpec {
         ClusterSpec {
             workers: 4,
             div_overhead: 0.9,
+            heterogeneity: 0.0,
+            straggler_factor: 1.0,
+            straggler_prob: 0.0,
+            preempt_prob: 0.0,
+            fault_seed: 0,
         }
     }
 }
@@ -52,6 +86,14 @@ impl ClusterSpec {
     /// from different scenarios never collide.
     pub fn is_default(&self) -> bool {
         *self == ClusterSpec::default()
+    }
+
+    /// True when any failure regime is active (heterogeneity,
+    /// stragglers, or preemptions).  The trainer switches from the
+    /// closed-form epoch time to per-step accumulation exactly when
+    /// this holds.
+    pub fn has_regimes(&self) -> bool {
+        self.heterogeneity != 0.0 || self.straggler_prob > 0.0 || self.preempt_prob > 0.0
     }
 
     /// The scenario matching THIS testbed's sharded step executor: a
@@ -74,6 +116,11 @@ impl ClusterSpec {
         let mut m = ClusterModel::a100x4(param_count, flops_per_sample);
         m.workers = self.workers.max(1);
         m.div_overhead = self.div_overhead;
+        m.heterogeneity = self.heterogeneity;
+        m.straggler_factor = self.straggler_factor.max(1.0);
+        m.straggler_prob = self.straggler_prob;
+        m.preempt_prob = self.preempt_prob;
+        m.fault_seed = self.fault_seed;
         m
     }
 }
@@ -96,6 +143,16 @@ pub struct ClusterModel {
     /// Multiplicative per-sample surcharge when the step is
     /// diversity-instrumented (paper: BackPACK roughly doubles cost).
     pub div_overhead: f64,
+    /// Per-worker speed spread (see [`ClusterSpec::heterogeneity`]).
+    pub heterogeneity: f64,
+    /// Straggler compute multiplier (see [`ClusterSpec::straggler_factor`]).
+    pub straggler_factor: f64,
+    /// Per-(step, worker) straggler probability.
+    pub straggler_prob: f64,
+    /// Per-(step, worker) preemption/recompute probability.
+    pub preempt_prob: f64,
+    /// Seed for the deterministic regime draws.
+    pub fault_seed: u64,
 }
 
 impl ClusterModel {
@@ -116,6 +173,11 @@ impl ClusterModel {
             t_per_param: 4.0 / 150e9, // bytes / (bytes/sec)
             param_count,
             div_overhead: 0.9,
+            heterogeneity: 0.0,
+            straggler_factor: 1.0,
+            straggler_prob: 0.0,
+            preempt_prob: 0.0,
+            fault_seed: 0,
         }
     }
 
@@ -135,7 +197,17 @@ impl ClusterModel {
             t_per_param: 4.0 / 150e9,
             param_count,
             div_overhead: 0.9,
+            heterogeneity: 0.0,
+            straggler_factor: 1.0,
+            straggler_prob: 0.0,
+            preempt_prob: 0.0,
+            fault_seed: 0,
         }
+    }
+
+    /// True when any failure regime is active on this model.
+    pub fn has_regimes(&self) -> bool {
+        self.heterogeneity != 0.0 || self.straggler_prob > 0.0 || self.preempt_prob > 0.0
     }
 
     /// Time of one optimizer step at logical batch `m`.
@@ -151,6 +223,61 @@ impl ClusterModel {
                 * self.param_count as f64
                 * self.t_per_param;
         self.t_launch + compute + allreduce
+    }
+
+    /// Time of the optimizer step with global index `step_idx` at
+    /// logical batch `m`, under the configured failure regimes.
+    ///
+    /// With no regime active this is *float-identical* to
+    /// [`ClusterModel::step_time`] (the closed-form epoch totals keep
+    /// matching the per-step sums bit for bit).  With regimes active,
+    /// each worker computes its shard at its heterogeneous speed and
+    /// may independently straggle (compute × `straggler_factor`) or be
+    /// preempted (recompute the shard once); the synchronous step waits
+    /// for the slowest worker.  All draws are pure hashes of
+    /// `(fault_seed, step_idx, worker)` — no RNG state, so times are
+    /// reproducible regardless of evaluation order.
+    pub fn step_time_at(&self, step_idx: u64, m: usize, instrumented: bool) -> f64 {
+        if !self.has_regimes() {
+            return self.step_time(m, instrumented);
+        }
+        assert!(m > 0);
+        let shard = m.div_ceil(self.workers);
+        let mut per_sample = self.t_sample;
+        if instrumented {
+            per_sample *= 1.0 + self.div_overhead;
+        }
+        let w_count = self.workers;
+        let mut slowest = 0.0f64;
+        for w in 0..w_count {
+            // Workers are spread evenly across [-1, +1] of the
+            // heterogeneity band; the last worker is the slow end.
+            let spread = if w_count > 1 {
+                2.0 * w as f64 / (w_count - 1) as f64 - 1.0
+            } else {
+                0.0
+            };
+            let speed = (1.0 - self.heterogeneity * spread).max(0.05);
+            let mut t = shard as f64 * per_sample / speed;
+            if self.straggler_prob > 0.0
+                && regime_draw(self.fault_seed, step_idx, w as u64, 1) < self.straggler_prob
+            {
+                t *= self.straggler_factor;
+            }
+            if self.preempt_prob > 0.0
+                && regime_draw(self.fault_seed, step_idx, w as u64, 2) < self.preempt_prob
+            {
+                // The preempted worker loses its shard and recomputes
+                // it once before the allreduce can start.
+                t += shard as f64 * per_sample / speed;
+            }
+            slowest = slowest.max(t);
+        }
+        let allreduce = self.t_comm_base
+            + 2.0 * (self.workers - 1) as f64 / self.workers as f64
+                * self.param_count as f64
+                * self.t_per_param;
+        self.t_launch + slowest + allreduce
     }
 
     /// Time of one epoch (`ceil(n/m)` steps, last one partial).
@@ -170,6 +297,17 @@ impl ClusterModel {
     pub fn throughput(&self, m: usize, instrumented: bool) -> f64 {
         m as f64 / self.step_time(m, instrumented)
     }
+}
+
+/// Uniform draw in `[0, 1)` from a pure hash of
+/// `(seed, step, worker, salt)` — stateless, so regime events are
+/// deterministic for a given spec no matter the evaluation order.
+fn regime_draw(seed: u64, step: u64, worker: u64, salt: u64) -> f64 {
+    let mut s = seed
+        ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ worker.wrapping_mul(0xD6E8_FEB8_6659_FD93)
+        ^ salt.wrapping_mul(0xA24B_AED4_963E_E407);
+    (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64
 }
 
 #[cfg(test)]
@@ -244,6 +382,7 @@ mod tests {
         let wide = ClusterSpec {
             workers: 16,
             div_overhead: 0.2,
+            ..ClusterSpec::default()
         };
         assert!(!wide.is_default());
         let m = wide.model(272_000, 250e6);
@@ -257,7 +396,7 @@ mod tests {
         // Degenerate worker count clamps instead of dividing by zero.
         let z = ClusterSpec {
             workers: 0,
-            div_overhead: 0.9,
+            ..ClusterSpec::default()
         };
         assert_eq!(z.model(10, 1.0).workers, 1);
     }
@@ -271,6 +410,75 @@ mod tests {
         assert_eq!(wide.workers, 16);
         assert!(!wide.is_default());
         assert_eq!(ClusterSpec::local(0).workers, 1); // serial clamps
+    }
+
+    #[test]
+    fn inactive_regimes_are_float_identical_to_step_time() {
+        let m = model();
+        assert!(!m.has_regimes());
+        for (step, batch, inst) in [(0u64, 64usize, false), (7, 1024, true), (123, 1, false)] {
+            let a = m.step_time_at(step, batch, inst);
+            let b = m.step_time(batch, inst);
+            assert_eq!(a.to_bits(), b.to_bits(), "step={step} m={batch}");
+        }
+    }
+
+    #[test]
+    fn regime_draws_are_seed_deterministic() {
+        let spec = ClusterSpec {
+            heterogeneity: 0.3,
+            straggler_factor: 4.0,
+            straggler_prob: 0.2,
+            preempt_prob: 0.05,
+            fault_seed: 42,
+            ..ClusterSpec::default()
+        };
+        assert!(spec.has_regimes());
+        assert!(!spec.is_default());
+        let a = spec.model(272_000, 250e6);
+        let b = spec.model(272_000, 250e6);
+        // Same seed → identical per-step times; and at least one step in
+        // a short horizon actually hits a straggler (prob 0.2 x 4 workers).
+        let mut saw_slow = false;
+        let baseline = ClusterSpec {
+            straggler_prob: 0.0,
+            preempt_prob: 0.0,
+            ..spec
+        }
+        .model(272_000, 250e6);
+        for step in 0..50u64 {
+            let ta = a.step_time_at(step, 256, false);
+            let tb = b.step_time_at(step, 256, false);
+            assert_eq!(ta.to_bits(), tb.to_bits(), "step={step}");
+            if ta > baseline.step_time_at(step, 256, false) * 1.5 {
+                saw_slow = true;
+            }
+        }
+        assert!(saw_slow, "expected at least one straggler in 50 steps");
+        // A different fault seed changes the event schedule.
+        let other = ClusterSpec {
+            fault_seed: 43,
+            ..spec
+        }
+        .model(272_000, 250e6);
+        let differs = (0..50u64)
+            .any(|s| other.step_time_at(s, 256, false) != a.step_time_at(s, 256, false));
+        assert!(differs, "fault seed should reshuffle regime events");
+    }
+
+    #[test]
+    fn heterogeneity_waits_for_the_slowest_worker() {
+        let spec = ClusterSpec {
+            heterogeneity: 0.4,
+            ..ClusterSpec::default()
+        };
+        let m = spec.model(272_000, 250e6);
+        let uniform = ClusterSpec::default().model(272_000, 250e6);
+        // The sync step waits for the slow end of the band, so every
+        // step is strictly slower than the uniform cluster.
+        for step in 0..5u64 {
+            assert!(m.step_time_at(step, 1024, false) > uniform.step_time(1024, false));
+        }
     }
 
     #[test]

@@ -123,6 +123,19 @@ impl RunSpec {
                 "|cw{}do{}",
                 c.cluster.workers, c.cluster.div_overhead
             ));
+            // Failure regimes reshape the simulated columns, so they key
+            // distinct entries too — but only when actually enabled, so
+            // plain non-default clusters keep their existing entries.
+            if c.cluster.has_regimes() {
+                ext.push_str(&format!(
+                    "|rh{}sf{}sp{}pp{}fs{}",
+                    c.cluster.heterogeneity,
+                    c.cluster.straggler_factor,
+                    c.cluster.straggler_prob,
+                    c.cluster.preempt_prob,
+                    c.cluster.fault_seed
+                ));
+            }
         }
         // v3: the policy component is the canonical registry spec
         // (PolicyHandle's Debug), not the old enum Debug format.
@@ -377,16 +390,26 @@ mod tests {
         let mut wide = base.clone();
         wide.cfg.cluster = ClusterSpec {
             workers: 8,
-            div_overhead: 0.9,
+            ..ClusterSpec::default()
         };
         assert_ne!(a, wide.fingerprint());
         let mut cheap = base.clone();
         cheap.cfg.cluster = ClusterSpec {
-            workers: 4,
             div_overhead: 0.1,
+            ..ClusterSpec::default()
         };
         assert_ne!(a, cheap.fingerprint());
         assert_ne!(wide.fingerprint(), cheap.fingerprint());
+        // Failure regimes key further entries: same worker shape, but a
+        // straggler schedule (or a different fault seed) must not share
+        // cached sim columns with the calm cluster.
+        let mut faulty = wide.clone();
+        faulty.cfg.cluster.straggler_prob = 0.1;
+        faulty.cfg.cluster.straggler_factor = 4.0;
+        assert_ne!(wide.fingerprint(), faulty.fingerprint());
+        let mut reseeded = faulty.clone();
+        reseeded.cfg.cluster.fault_seed = 7;
+        assert_ne!(faulty.fingerprint(), reseeded.fingerprint());
     }
 
     #[test]

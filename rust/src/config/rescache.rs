@@ -14,10 +14,15 @@
 //!   least-recently-used entries (by file mtime; loads touch their entry
 //!   so hits refresh recency) are removed until the bounds hold.  The
 //!   just-stored entry is never evicted.
-//! * **Single-writer locking** — stores serialize on a `.lock` file
-//!   (created with `create_new`, removed on drop, stale locks from a
-//!   crashed writer reclaimed after [`STALE_LOCK`]), so two processes —
-//!   or two admission batches — can never interleave a store/evict pass.
+//! * **Single-writer locking** — stores serialize on the shared
+//!   directory lock ([`crate::util::fslock::DirLock`]: `create_new`
+//!   `.lock` file, removed on drop, stale locks from a crashed writer
+//!   reclaimed via single-winner tomb rename), so two processes — or
+//!   two admission batches — can never interleave a store/evict pass.
+//! * **Fault hooks** — [`crate::fault::check`] guards both I/O paths:
+//!   an injected load fault degrades to a counted miss, and an injected
+//!   store fault is retried up to `STORE_ATTEMPTS` times (tmp file
+//!   cleaned up between attempts) before surfacing.
 //! * **Counters** — hit/miss/store/eviction counts, surfaced by the
 //!   serve `/stats` endpoint and asserted by the cache-bound tests.
 //!
@@ -31,16 +36,16 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, SystemTime};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
+use crate::fault::{self, FaultPoint, IoOp};
 use crate::metrics::RunRecord;
+use crate::util::fslock::DirLock;
 
-/// A lock older than this is treated as left behind by a crashed writer
-/// and reclaimed (writers hold it for milliseconds).
-const STALE_LOCK: Duration = Duration::from_secs(10);
-
-/// How long a writer waits for the lock before giving up.
-const LOCK_TIMEOUT: Duration = Duration::from_secs(30);
+/// Store attempts under injected I/O faults: a transient failure from
+/// the fault layer is retried (with the tmp file cleaned up between
+/// attempts) before surfacing; real I/O errors fail on first sight.
+const STORE_ATTEMPTS: usize = 3;
 
 /// Snapshot of the results cache's bound/usage counters.
 #[derive(Clone, Debug, Default)]
@@ -114,6 +119,12 @@ impl ResultsCache {
     /// Load `key`'s records if a valid entry with `expected` records
     /// exists.  A hit refreshes the entry's recency (mtime touch).
     pub fn load(&self, key: &str, expected: usize) -> Option<Vec<RunRecord>> {
+        // An injected load fault degrades to a counted miss — the
+        // caller recomputes, exactly as with a truncated entry.
+        if fault::check(FaultPoint::Io { op: IoOp::Load }).is_err() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let path = self.path_for(key);
         let recs = (|| {
             let text = std::fs::read_to_string(&path).ok()?;
@@ -147,15 +158,39 @@ impl ResultsCache {
         let _lock = DirLock::acquire(&self.dir)?;
         let path = self.path_for(key);
         let json = crate::util::json::Json::Arr(records.iter().map(|r| r.to_json()).collect());
-        // tmp+rename: a concurrent reader never observes a half-written
-        // entry (it would degrade to a miss anyway, but why risk it).
+        let text = json.to_string();
         let tmp = self.dir.join(format!(".{key}.tmp"));
-        std::fs::write(&tmp, json.to_string())
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
+        let mut last_err = None;
+        for attempt in 1..=STORE_ATTEMPTS {
+            match self.try_store(&tmp, &path, &text) {
+                Ok(()) => {
+                    self.stores.fetch_add(1, Ordering::Relaxed);
+                    self.evict_over_caps(&path);
+                    return Ok(());
+                }
+                Err(e) => {
+                    // Never leave a half-written tmp file behind.
+                    let _ = std::fs::remove_file(&tmp);
+                    let transient = fault::is_injected(&e);
+                    last_err = Some(e);
+                    if !transient || attempt == STORE_ATTEMPTS {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+        Err(last_err.expect("loop ran at least once"))
+    }
+
+    /// One store attempt: fault hook, then atomic tmp+rename — a
+    /// concurrent reader never observes a half-written entry (it would
+    /// degrade to a miss anyway, but why risk it).
+    fn try_store(&self, tmp: &Path, path: &Path, text: &str) -> Result<()> {
+        fault::check(FaultPoint::Io { op: IoOp::Store }).map_err(anyhow::Error::new)?;
+        std::fs::write(tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(tmp, path)
             .with_context(|| format!("publishing {}", path.display()))?;
-        self.stores.fetch_add(1, Ordering::Relaxed);
-        self.evict_over_caps(&path);
         Ok(())
     }
 
@@ -224,58 +259,11 @@ impl ResultsCache {
     }
 }
 
-/// Exclusive advisory lock on a cache directory, held for the duration
-/// of one store+evict pass.  `create_new` is atomic on every platform we
-/// care about; the lock file is removed on drop, and a lock older than
-/// [`STALE_LOCK`] is reclaimed (writers hold it for milliseconds, so age
-/// means a crashed owner).
-struct DirLock {
-    path: PathBuf,
-}
-
-impl DirLock {
-    fn acquire(dir: &Path) -> Result<DirLock> {
-        let path = dir.join(".lock");
-        let deadline = SystemTime::now() + LOCK_TIMEOUT;
-        loop {
-            match std::fs::OpenOptions::new()
-                .write(true)
-                .create_new(true)
-                .open(&path)
-            {
-                Ok(_) => return Ok(DirLock { path }),
-                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let stale = std::fs::metadata(&path)
-                        .and_then(|md| md.modified())
-                        .map(|m| m.elapsed().map(|d| d > STALE_LOCK).unwrap_or(false))
-                        .unwrap_or(false);
-                    if stale {
-                        let _ = std::fs::remove_file(&path);
-                        continue;
-                    }
-                    if SystemTime::now() > deadline {
-                        bail!("results cache lock busy: {}", path.display());
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => {
-                    return Err(e).with_context(|| format!("locking {}", path.display()));
-                }
-            }
-        }
-    }
-}
-
-impl Drop for DirLock {
-    fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::metrics::EpochRecord;
+    use crate::util::fslock::STALE_LOCK;
 
     fn tmpdir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!(

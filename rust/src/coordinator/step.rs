@@ -27,12 +27,16 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::fault::{self, FaultPoint};
 use crate::pool::{JobError, WorkerPool};
 
 /// Executes the blocks of micro-plans across a reusable worker pool.
 pub struct StepExecutor {
     pool: Option<WorkerPool>,
     lanes: usize,
+    /// Trial id for the step-block fault-injection scope; `None`
+    /// disables the hook (directly-constructed executors in tests).
+    trial: Option<u64>,
 }
 
 impl StepExecutor {
@@ -47,7 +51,18 @@ impl StepExecutor {
                 None
             },
             lanes,
+            trial: None,
         }
+    }
+
+    /// [`StepExecutor::new`], tagged with the owning trial so
+    /// `step-panic@tN:bM` fault rules can target this executor's block
+    /// dispatches.  The trainer uses this; the hook costs one relaxed
+    /// atomic load per block when no plan is installed.
+    pub fn for_trial(jobs: usize, trial: u64) -> StepExecutor {
+        let mut ex = StepExecutor::new(jobs);
+        ex.trial = Some(trial);
+        ex
     }
 
     /// Total parallel lanes (1 = serial).
@@ -64,6 +79,21 @@ impl StepExecutor {
         R: Send,
         F: Fn(usize, usize) -> Result<R> + Sync,
     {
+        // Step-block injection scope: a `step-panic@tN:bM` rule panics
+        // here, inside the per-item catch on the scatter path (the
+        // block fails typed, the pool survives) or unwinding to the
+        // trial-level catch on the serial path — never a hang.
+        let trial = self.trial;
+        let f = move |lane: usize, i: usize| -> Result<R> {
+            if let Some(t) = trial {
+                fault::check(FaultPoint::StepBlock {
+                    trial: t,
+                    block: i as u64,
+                })
+                .map_err(anyhow::Error::new)?;
+            }
+            f(lane, i)
+        };
         match &self.pool {
             Some(pool) if n > 1 => {
                 let results = pool.scatter(n, f);
@@ -91,6 +121,9 @@ fn annotate_block(i: usize, n: usize, e: JobError) -> anyhow::Error {
     match e {
         JobError::Failed(m) => anyhow!("step block {i} of {n}: {m}"),
         JobError::Panicked(m) => anyhow!("step block {i} of {n} panicked in a worker: {m}"),
+        // Blocks are never retried (retry lives at the trial level),
+        // but the match stays exhaustive for the shared error type.
+        e @ JobError::Exhausted(_) => anyhow!("step block {i} of {n}: {e}"),
     }
 }
 

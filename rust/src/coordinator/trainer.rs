@@ -306,7 +306,7 @@ impl<'rt> Trainer<'rt> {
         // TrainConfig::step_jobs).  Block results are always folded in
         // block order below, so every lane count yields byte-identical
         // records — only measured wall-clock changes.
-        let step = StepExecutor::new(crate::pool::resolve_step_jobs(cfg.step_jobs, 1));
+        let step = StepExecutor::for_trial(crate::pool::resolve_step_jobs(cfg.step_jobs, 1), cfg.seed);
         if step.lanes() > 1 {
             // Parallel lanes racing a cold entry would serialize on the
             // per-key first-compile guard at step one; precompile the
@@ -334,6 +334,9 @@ impl<'rt> Trainer<'rt> {
         let mut lr_scale = 1.0f64;
         let mut cum_wall = 0.0;
         let mut cum_sim = 0.0;
+        // Global optimizer-step index across epochs — the key for the
+        // cluster model's deterministic failure-regime draws.
+        let mut global_step: u64 = 0;
         let mut history: Vec<HistoryPoint> = Vec::new();
 
         for epoch in 0..cfg.epochs {
@@ -460,7 +463,8 @@ impl<'rt> Trainer<'rt> {
                     }
                 }
                 steps += 1;
-                cum_sim += self.cluster.step_time(logical, instrumented);
+                cum_sim += self.cluster.step_time_at(global_step, logical, instrumented);
+                global_step += 1;
 
                 // Step-level adaptation (opt-in): the policy may resize
                 // the remaining logical batches of this epoch.  Only
@@ -521,6 +525,9 @@ impl<'rt> Trainer<'rt> {
                     let _g = profile.section("oracle");
                     let s = self.exact_diversity(&params, &info, &step, &scratch)?;
                     // Oracle pays a full instrumented pass over the data.
+                    // Stays closed-form even under failure regimes: the
+                    // oracle pass is a diagnostic sweep, not optimizer
+                    // steps, so it has no global step indices to draw on.
                     cum_sim += self.cluster.epoch_time(n, info.max_micro(), true);
                     (
                         Some(s),
@@ -540,9 +547,12 @@ impl<'rt> Trainer<'rt> {
             let wall = epoch_timer.seconds();
             cum_wall += wall;
             // Epoch-granular policies keep the paper's closed-form epoch
-            // estimate (byte-identical records); step-level policies get
-            // the per-step accumulation, which reflects mid-epoch sizes.
-            let sim_epoch = if step_decisions {
+            // estimate (byte-identical records); step-level policies —
+            // and any active failure regime, whose per-step event draws
+            // the closed form cannot see — get the per-step
+            // accumulation, which reflects mid-epoch sizes and
+            // straggler/preemption events.
+            let sim_epoch = if step_decisions || self.cluster.has_regimes() {
                 sim_steps
             } else {
                 self.cluster.epoch_time(n, m_k, instrumented)

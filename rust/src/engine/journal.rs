@@ -1,0 +1,381 @@
+//! Crash-safe sweep journal: every completed trial's canonical record,
+//! one JSONL line each, surviving SIGKILL at any instant.
+//!
+//! Layout (strictly index-ordered after the header):
+//!
+//! ```text
+//! {"fingerprint":"<sweep fp>","kind":"header","total":N,"version":1}
+//! {"index":0,"kind":"trial","record":{...canonical RunRecord...}}
+//! {"index":2,"kind":"trial","record":{...}}
+//! ```
+//!
+//! The journal is append-only in content — entries are only ever added
+//! — but each append publishes a complete new snapshot via atomic
+//! tmp+rename under the shared directory lock
+//! ([`crate::util::fslock::DirLock`], the same single-writer discipline
+//! the results cache uses).  Two consequences do all the crash-safety
+//! work:
+//!
+//! * **No torn lines, ever.**  A reader (or a resume) sees either the
+//!   previous snapshot or the new one, never a half-written line; a
+//!   SIGKILL between tmp-write and rename leaves only a stale `.tmp`
+//!   that the next writer ignores and replaces.
+//! * **Byte-determinism.**  Lines are kept in trial-index order (not
+//!   completion order, which varies with `--jobs`), so a journal from a
+//!   killed-then-resumed sweep is byte-identical to one from an
+//!   uninterrupted run — the property `tests/chaos.rs` gates.
+//!
+//! Records are journaled in canonical form
+//! ([`RunRecord::to_canonical_json`]: wall-clock columns masked), which
+//! is exactly what `sweep --jsonl` emits and what the resume path
+//! replays — machine-varying timings never enter the byte comparison.
+//!
+//! `sweep --resume <journal>` validates the header's sweep fingerprint
+//! (FNV-1a over every [`TrialSpec`] fingerprint, so any change to the
+//! spec grid, policies, seeds, dataset, or cluster regime is caught)
+//! and the trial count, then skips completed indices.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::TrialSpec;
+use crate::metrics::RunRecord;
+use crate::util::fslock::DirLock;
+use crate::util::json::{self, Json};
+
+/// Journal format version; bumped on any layout change.
+const VERSION: usize = 1;
+
+/// Fingerprint of an entire sweep: FNV-1a over every trial's own
+/// fingerprint (which covers config, dataset, cluster spec, and trial
+/// id), in spec order.  Resume refuses a journal whose fingerprint does
+/// not match the invocation's expanded specs.
+pub fn sweep_fingerprint(specs: &[TrialSpec]) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |b: u8| h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    for s in specs {
+        for b in s.fingerprint().bytes() {
+            mix(b);
+        }
+        mix(b'|');
+    }
+    format!("{h:016x}")
+}
+
+/// An on-disk sweep journal plus its in-memory completed-record state.
+pub struct SweepJournal {
+    path: PathBuf,
+    fingerprint: String,
+    total: usize,
+    records: Vec<Option<RunRecord>>,
+}
+
+impl SweepJournal {
+    /// Start a fresh journal at `path` (truncating any existing file)
+    /// and persist the header immediately.
+    pub fn create(path: impl Into<PathBuf>, fingerprint: &str, total: usize) -> Result<SweepJournal> {
+        let mut j = SweepJournal {
+            path: path.into(),
+            fingerprint: fingerprint.to_string(),
+            total,
+            records: vec![None; total],
+        };
+        j.persist()?;
+        Ok(j)
+    }
+
+    /// Resume from `path`: load and validate an existing journal, or
+    /// start fresh if the file does not exist yet.
+    pub fn resume(path: impl Into<PathBuf>, fingerprint: &str, total: usize) -> Result<SweepJournal> {
+        let path = path.into();
+        if !path.exists() {
+            return SweepJournal::create(path, fingerprint, total);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("journal {} is empty", path.display()))?;
+        let header = json::parse(header)
+            .map_err(|e| anyhow::anyhow!("journal {} header: {e}", path.display()))?;
+        if header.get("kind").and_then(|k| k.as_str()) != Some("header") {
+            bail!("journal {}: first line is not a header", path.display());
+        }
+        let version = header.req_usize("version")?;
+        if version != VERSION {
+            bail!(
+                "journal {}: version {version} (this binary writes {VERSION})",
+                path.display()
+            );
+        }
+        let got_fp = header.req_str("fingerprint")?;
+        if got_fp != fingerprint {
+            bail!(
+                "journal {}: sweep fingerprint {got_fp} does not match this \
+                 invocation's {fingerprint} — the spec grid changed; refusing to resume",
+                path.display()
+            );
+        }
+        let got_total = header.req_usize("total")?;
+        if got_total != total {
+            bail!(
+                "journal {}: {got_total} trials recorded, invocation expands to {total}",
+                path.display()
+            );
+        }
+        let mut records: Vec<Option<RunRecord>> = vec![None; total];
+        for (lineno, line) in lines.enumerate() {
+            let entry = json::parse(line)
+                .map_err(|e| anyhow::anyhow!("journal {} line {}: {e}", path.display(), lineno + 2))?;
+            if entry.get("kind").and_then(|k| k.as_str()) != Some("trial") {
+                bail!("journal {} line {}: unknown kind", path.display(), lineno + 2);
+            }
+            let index = entry.req_usize("index")?;
+            if index >= total {
+                bail!(
+                    "journal {} line {}: index {index} out of range 0..{total}",
+                    path.display(),
+                    lineno + 2
+                );
+            }
+            let rec = RunRecord::from_json(entry.req("record")?)
+                .with_context(|| format!("journal {} line {}", path.display(), lineno + 2))?;
+            records[index] = Some(rec);
+        }
+        Ok(SweepJournal {
+            path,
+            fingerprint: fingerprint.to_string(),
+            total,
+            records,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The completed record at `index`, if journaled.
+    pub fn record(&self, index: usize) -> Option<&RunRecord> {
+        self.records.get(index).and_then(|r| r.as_ref())
+    }
+
+    /// How many trials have completed.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Indices still to run, in order.
+    pub fn pending(&self) -> Vec<usize> {
+        self.records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Record trial `index` as completed and publish a new snapshot.
+    pub fn append(&mut self, index: usize, record: &RunRecord) -> Result<()> {
+        anyhow::ensure!(
+            index < self.total,
+            "journal append index {index} out of range 0..{}",
+            self.total
+        );
+        self.records[index] = Some(record.clone());
+        self.persist()
+    }
+
+    /// Render the full journal: header, then completed trials in index
+    /// order, canonical records only.
+    fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &Json::obj(vec![
+                ("fingerprint", Json::Str(self.fingerprint.clone())),
+                ("kind", Json::Str("header".to_string())),
+                ("total", Json::Num(self.total as f64)),
+                ("version", Json::Num(VERSION as f64)),
+            ])
+            .to_string(),
+        );
+        out.push('\n');
+        for (i, rec) in self.records.iter().enumerate() {
+            if let Some(r) = rec {
+                out.push_str(
+                    &Json::obj(vec![
+                        ("index", Json::Num(i as f64)),
+                        ("kind", Json::Str("trial".to_string())),
+                        ("record", r.to_canonical_json()),
+                    ])
+                    .to_string(),
+                );
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Atomic snapshot publish: tmp+rename under the directory lock.
+    fn persist(&self) -> Result<()> {
+        let dir = self
+            .path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .unwrap_or_else(|| Path::new("."))
+            .to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let _lock = DirLock::acquire(&dir)?;
+        let name = self
+            .path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("sweep.journal");
+        let tmp = dir.join(format!(".{name}.tmp"));
+        std::fs::write(&tmp, self.render())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochRecord;
+
+    fn tmppath(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("divebatch-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.join("sweep.journal")
+    }
+
+    fn record(seed: u64) -> RunRecord {
+        let mut r = RunRecord::new("t", "m", "sgd", "d", seed);
+        r.epochs.push(EpochRecord {
+            epoch: 0,
+            batch_size: 8,
+            lr: 0.1,
+            steps: 4,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            val_loss: 1.0,
+            val_acc: 0.5,
+            delta_hat: None,
+            n_delta: None,
+            exact_delta: None,
+            wall_s: 7.0, // masked by canonicalization
+            sim_s: 0.1,
+            cum_wall_s: 7.0,
+            cum_sim_s: 0.1,
+            mem_mb: 1.0,
+            dispatches: 1,
+            pad_waste: 0.0,
+            par_util: 1.0,
+        });
+        r
+    }
+
+    #[test]
+    fn create_append_resume_roundtrip() {
+        let path = tmppath("roundtrip");
+        let mut j = SweepJournal::create(&path, "fp", 3).unwrap();
+        assert_eq!(j.pending(), vec![0, 1, 2]);
+        j.append(2, &record(2)).unwrap();
+        j.append(0, &record(0)).unwrap();
+        drop(j);
+        let j = SweepJournal::resume(&path, "fp", 3).unwrap();
+        assert_eq!(j.completed(), 2);
+        assert_eq!(j.pending(), vec![1]);
+        assert_eq!(j.record(0).unwrap().seed, 0);
+        assert_eq!(j.record(2).unwrap().seed, 2);
+        // Canonical form: wall columns masked on disk.
+        assert_eq!(j.record(2).unwrap().epochs[0].wall_s, 0.0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn bytes_are_completion_order_invariant() {
+        let path_a = tmppath("order-a");
+        let path_b = tmppath("order-b");
+        let mut a = SweepJournal::create(&path_a, "fp", 3).unwrap();
+        let mut b = SweepJournal::create(&path_b, "fp", 3).unwrap();
+        for i in [0usize, 1, 2] {
+            a.append(i, &record(i as u64)).unwrap();
+        }
+        for i in [2usize, 0, 1] {
+            b.append(i, &record(i as u64)).unwrap();
+        }
+        assert_eq!(
+            std::fs::read(&path_a).unwrap(),
+            std::fs::read(&path_b).unwrap(),
+            "journal bytes must not depend on completion order"
+        );
+        let _ = std::fs::remove_dir_all(path_a.parent().unwrap());
+        let _ = std::fs::remove_dir_all(path_b.parent().unwrap());
+    }
+
+    #[test]
+    fn resume_validates_fingerprint_total_and_shape() {
+        let path = tmppath("validate");
+        let mut j = SweepJournal::create(&path, "fp", 2).unwrap();
+        j.append(0, &record(0)).unwrap();
+        drop(j);
+        let e = SweepJournal::resume(&path, "other", 2).unwrap_err();
+        assert!(e.to_string().contains("fingerprint"), "{e}");
+        let e = SweepJournal::resume(&path, "fp", 5).unwrap_err();
+        assert!(e.to_string().contains("trials"), "{e}");
+        // Garbage file: typed error, not a panic.
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(SweepJournal::resume(&path, "fp", 2).is_err());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn resume_of_missing_file_starts_fresh() {
+        let path = tmppath("fresh");
+        let j = SweepJournal::resume(&path, "fp", 2).unwrap();
+        assert_eq!(j.completed(), 0);
+        assert!(path.exists(), "header persisted immediately");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn sweep_fingerprint_is_order_and_content_sensitive() {
+        use crate::config::DatasetSpec;
+        use crate::coordinator::{LrSchedule, PolicyRegistry, TrainConfig};
+        use crate::data::SyntheticSpec;
+        let spec = |seed: u64| {
+            let policy = PolicyRegistry::builtin().parse("sgd:m=4").unwrap();
+            let cfg = TrainConfig::new(
+                "m",
+                policy,
+                LrSchedule {
+                    base: 0.1,
+                    decay: 0.75,
+                    every: 20,
+                    rescale_with_batch: false,
+                },
+                2,
+            );
+            TrialSpec {
+                cfg,
+                dataset: DatasetSpec::Synthetic(SyntheticSpec {
+                    n: 40,
+                    d: 8,
+                    noise: 0.1,
+                    seed: 1000,
+                }),
+                flops_per_sample: 1.0,
+                trial: seed,
+            }
+        };
+        let a = sweep_fingerprint(&[spec(0), spec(1)]);
+        assert_eq!(a, sweep_fingerprint(&[spec(0), spec(1)]));
+        assert_ne!(a, sweep_fingerprint(&[spec(1), spec(0)]));
+        assert_ne!(a, sweep_fingerprint(&[spec(0)]));
+    }
+}

@@ -30,21 +30,37 @@
 //!   trials — never 8 x 8 threads.  An explicit `TrainConfig::step_jobs`
 //!   or `DIVEBATCH_STEP_JOBS` overrides the allowance
 //!   ([`crate::pool::resolve_step_jobs`]).
-//! * **Isolation** — each trial runs under `catch_unwind`: a panicking
-//!   trial reports [`TrialError::Panicked`] and the rest of the sweep
-//!   completes (the runtime's locks are poison-tolerant for the same
-//!   reason).  Trial errors are captured as [`TrialError::Failed`].
+//! * **Isolation + retry** — each trial attempt runs under
+//!   `catch_unwind`: a failing trial never aborts the sweep (the
+//!   runtime's locks are poison-tolerant for the same reason).  The
+//!   runner's [`RetryPolicy`] classifies each failure: **injected /
+//!   transient** failures (a [`crate::fault::FaultError`] anywhere in
+//!   the chain, or a panic carrying [`crate::fault::PANIC_PREFIX`]) are
+//!   retried up to `max_attempts` with capped exponential backoff on
+//!   the runner's [`Clock`]; a **non-injected panic** is presumed a
+//!   deterministic compute failure and fails fast after one retry; a
+//!   **plain error** is never retried.  A single failed attempt
+//!   surfaces as [`TrialError::Failed`] / [`TrialError::Panicked`]
+//!   exactly as before; multiple attempts surface as
+//!   [`TrialError::Exhausted`] carrying the full attempt history.
 //!
 //! `RunSpec::run_jobs`, the figure/table bench harness, the sweep
-//! examples, and the `divebatch train/sweep` CLI all route through here.
+//! examples, and the `divebatch train/sweep` CLI all route through
+//! here.  The crash-safe sweep journal lives in [`journal`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use anyhow::Result;
 
 use crate::config::{DatasetSpec, RunSpec};
 use crate::coordinator::{TrainConfig, Trainer};
+use crate::fault::{self, Clock, FaultPoint, RetryPolicy};
 use crate::metrics::RunRecord;
 use crate::runtime::Runtime;
 use crate::util::timer::Profiler;
+
+pub mod journal;
+pub use journal::{sweep_fingerprint, SweepJournal};
 
 pub use crate::pool::JobError as TrialError;
 pub use crate::pool::{
@@ -111,6 +127,10 @@ impl TrialSpec {
         rt: &Runtime,
         step_allowance: usize,
     ) -> Result<(RunRecord, Profiler)> {
+        // Trial-boundary injection scope: a `trial-error` rule lands
+        // here as a typed transient failure, a `trial-panic` rule
+        // panics — both are caught and classified by the retry loop.
+        fault::check(FaultPoint::Trial { trial: self.trial }).map_err(anyhow::Error::new)?;
         let (train, val) = self.dataset.build(self.trial);
         let info = rt.model(&self.cfg.model)?;
         let cluster = self
@@ -138,16 +158,37 @@ impl TrialSpec {
     }
 }
 
-/// Fans [`TrialSpec`]s across a worker pool sharing one [`Runtime`].
-#[derive(Clone, Copy, Debug)]
+/// Fans [`TrialSpec`]s across a worker pool sharing one [`Runtime`],
+/// retrying transient failures per its [`RetryPolicy`].
+#[derive(Clone, Debug)]
 pub struct TrialRunner {
     jobs: usize,
+    retry: RetryPolicy,
+    clock: Clock,
 }
 
 impl TrialRunner {
-    /// `jobs = 0` uses every available core.
+    /// `jobs = 0` uses every available core.  Retries default to
+    /// [`RetryPolicy::default`] on the real clock.
     pub fn new(jobs: usize) -> TrialRunner {
-        TrialRunner { jobs }
+        TrialRunner {
+            jobs,
+            retry: RetryPolicy::default(),
+            clock: Clock::Real,
+        }
+    }
+
+    /// Replace the retry policy ([`RetryPolicy::none`] disables retry).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> TrialRunner {
+        self.retry = retry;
+        self
+    }
+
+    /// Replace the backoff clock (tests use [`crate::fault::SimClock`]
+    /// so retry schedules are asserted, not slept).
+    pub fn with_clock(mut self, clock: Clock) -> TrialRunner {
+        self.clock = clock;
+        self
     }
 
     /// Resolved worker count for `n` trials.
@@ -188,9 +229,86 @@ impl TrialRunner {
         run_indexed_with(
             specs,
             self.jobs,
-            |_, spec| Ok(spec.execute_profiled_with(rt, allowance)?.0),
+            |_, spec| self.run_one(rt, spec, allowance),
             |i, res| on_done(&specs[i], res),
         )
+    }
+
+    /// Like [`TrialRunner::run_with`], but over `(original index,
+    /// spec)` pairs — the resume path runs only a sweep's pending
+    /// trials while reporting and journaling under their original
+    /// indices.
+    pub fn run_indexed_with<C>(
+        &self,
+        rt: &Runtime,
+        specs: &[(usize, TrialSpec)],
+        on_done: C,
+    ) -> Vec<std::result::Result<RunRecord, TrialError>>
+    where
+        C: Fn(usize, &TrialSpec, &std::result::Result<RunRecord, TrialError>) + Sync,
+    {
+        let allowance = self.step_allowance(specs.len());
+        run_indexed_with(
+            specs,
+            self.jobs,
+            |_, (_, spec)| self.run_one(rt, spec, allowance),
+            |i, res| on_done(specs[i].0, &specs[i].1, res),
+        )
+    }
+
+    /// One trial through the retry loop.  Returns the record, or an
+    /// `anyhow` error that *is* a [`TrialError`] (the pool's downcast
+    /// passthrough surfaces it unwrapped): the raw failure for a
+    /// single attempt, [`TrialError::Exhausted`] with the oldest-first
+    /// attempt history otherwise.
+    fn run_one(&self, rt: &Runtime, spec: &TrialSpec, allowance: usize) -> Result<RunRecord> {
+        let mut history: Vec<TrialError> = Vec::new();
+        loop {
+            let attempt = history.len() as u32 + 1;
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                spec.execute_profiled_with(rt, allowance)
+            }));
+            let (err, allowed) = match out {
+                Ok(Ok((record, _))) => return Ok(record),
+                Ok(Err(e)) => {
+                    // Transient (injected / cache I/O) errors get the
+                    // full budget; plain errors are deterministic and
+                    // get exactly one attempt.  An injected step-block
+                    // panic reaches here as a block-annotated *error*
+                    // (the pool caught it), so the prefix check applies
+                    // to the message too.
+                    let msg = format!("{e:#}");
+                    let allowed = if fault::is_injected(&e) || msg.contains(fault::PANIC_PREFIX) {
+                        self.retry.max_attempts
+                    } else {
+                        1
+                    };
+                    (TrialError::Failed(msg), allowed)
+                }
+                Err(payload) => {
+                    let msg = crate::pool::panic_message(payload.as_ref());
+                    // An injected panic is transient; a real compute
+                    // panic is presumed deterministic — fail fast after
+                    // one retry.
+                    let allowed = if msg.contains(fault::PANIC_PREFIX) {
+                        self.retry.max_attempts
+                    } else {
+                        self.retry.max_attempts.min(2)
+                    };
+                    (TrialError::Panicked(msg), allowed)
+                }
+            };
+            history.push(err);
+            if attempt >= allowed {
+                let err = if history.len() == 1 {
+                    history.pop().expect("one attempt recorded")
+                } else {
+                    TrialError::Exhausted(history)
+                };
+                return Err(anyhow::Error::new(err));
+            }
+            self.clock.sleep(self.retry.backoff(attempt));
+        }
     }
 }
 

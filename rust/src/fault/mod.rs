@@ -1,0 +1,216 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is a seeded schedule of injected failures, parsed
+//! from the CLI (`--inject`, `--inject-seed`) or the environment
+//! (`DIVEBATCH_FAULTS`, `DIVEBATCH_FAULT_SEED`).  Production code calls
+//! [`check`] at four injection scopes:
+//!
+//! | scope              | point                    | call site                    |
+//! |--------------------|--------------------------|------------------------------|
+//! | trial boundary     | [`FaultPoint::Trial`]    | `TrialSpec::execute_*`       |
+//! | step-block dispatch| [`FaultPoint::StepBlock`]| `StepExecutor::run_blocks`   |
+//! | worker lane claim  | [`FaultPoint::Lane`]     | `pool::worker_loop`          |
+//! | cache I/O          | [`FaultPoint::Io`]       | `ResultsCache::{store,load}` |
+//! | server connection  | [`FaultPoint::Conn`]     | `serve::handle_connection`   |
+//!
+//! With no plan installed, [`check`] is a single relaxed atomic load —
+//! the hooks cost nothing in normal operation.  Panics raised by a plan
+//! carry [`PANIC_PREFIX`] so the retry layer can classify them as
+//! injected (transient) rather than deterministic compute failures;
+//! error-kind faults return a typed [`FaultError`] that
+//! [`is_injected`] recognizes through an `anyhow` chain.
+//!
+//! Determinism: every firing decision is a pure function of the plan
+//! seed and the point identity (trial id, block index, lane, connection
+//! index), plus per-rule atomic budgets.  The same plan + seed produces
+//! the same failure schedule on every run — chaos tests assert exact
+//! attempt counts, not "it failed somewhere".
+
+pub mod plan;
+pub mod retry;
+
+pub use plan::{FaultKind, FaultPlan, FaultRule, Selector};
+pub use retry::{Clock, RetryPolicy, SimClock};
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Marker prefix carried by every injected panic payload.  The retry
+/// layer treats a panic whose message contains this prefix as
+/// transient (retry up to the policy budget) rather than a
+/// deterministic compute failure (fail fast after one retry).
+pub const PANIC_PREFIX: &str = "divebatch-fault: ";
+
+/// A results-cache I/O operation, as seen by the injection hooks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoOp {
+    Store,
+    Load,
+}
+
+impl fmt::Display for IoOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IoOp::Store => write!(f, "store"),
+            IoOp::Load => write!(f, "load"),
+        }
+    }
+}
+
+/// One place the fault layer can inject a failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// About to execute trial `trial` (one attempt).
+    Trial { trial: u64 },
+    /// About to run step block `block` of trial `trial`.
+    StepBlock { trial: u64, block: u64 },
+    /// About to perform a results-cache I/O operation.
+    Io { op: IoOp },
+    /// A worker lane claimed an item from a scatter job.
+    Lane { lane: u64 },
+    /// The server accepted connection number `index`.
+    Conn { index: u64 },
+}
+
+impl fmt::Display for FaultPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultPoint::Trial { trial } => write!(f, "trial {trial}"),
+            FaultPoint::StepBlock { trial, block } => {
+                write!(f, "trial {trial} step block {block}")
+            }
+            FaultPoint::Io { op } => write!(f, "cache {op}"),
+            FaultPoint::Lane { lane } => write!(f, "worker lane {lane}"),
+            FaultPoint::Conn { index } => write!(f, "connection {index}"),
+        }
+    }
+}
+
+/// A typed injected failure.  Always transient by definition: the
+/// retry layer retries anything whose error chain contains one.
+#[derive(Debug, Clone)]
+pub struct FaultError {
+    desc: String,
+}
+
+impl FaultError {
+    pub fn new(desc: impl Into<String>) -> FaultError {
+        FaultError { desc: desc.into() }
+    }
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.desc)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Does `err`'s chain contain an injected [`FaultError`]?
+pub fn is_injected(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.downcast_ref::<FaultError>().is_some())
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Consult the installed plan at an injection point.  With no plan
+/// installed this is one relaxed load.  May panic (panic-kind rules) or
+/// sleep (stall rules) by design.
+pub fn check(point: FaultPoint) -> Result<(), FaultError> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let plan = PLAN
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .clone();
+    match plan {
+        Some(p) => p.check(point),
+        None => Ok(()),
+    }
+}
+
+/// Install (or clear, with `None`) the process-wide plan.
+pub fn install(plan: Option<Arc<FaultPlan>>) {
+    let mut slot = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    ACTIVE.store(plan.is_some(), Ordering::SeqCst);
+    *slot = plan;
+}
+
+/// Parse and install a plan from `DIVEBATCH_FAULTS` /
+/// `DIVEBATCH_FAULT_SEED`, if set.  Called once from `main`.
+pub fn init_from_env() -> Result<(), String> {
+    let Ok(spec) = std::env::var("DIVEBATCH_FAULTS") else {
+        return Ok(());
+    };
+    if spec.trim().is_empty() {
+        return Ok(());
+    }
+    let seed = match std::env::var("DIVEBATCH_FAULT_SEED") {
+        Ok(s) => s
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("DIVEBATCH_FAULT_SEED {s:?} is not a u64"))?,
+        Err(_) => 0,
+    };
+    let plan = FaultPlan::parse(&spec, seed).map_err(|e| format!("DIVEBATCH_FAULTS: {e}"))?;
+    install(Some(Arc::new(plan)));
+    Ok(())
+}
+
+static TEST_GATE: Mutex<()> = Mutex::new(());
+
+/// RAII guard for tests: installs `plan`, serializes every guarded test
+/// in the process (the plan is global state), and clears it on drop.
+/// All in-process fault-injection tests must go through this.
+pub struct FaultGuard {
+    _gate: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    pub fn install(plan: FaultPlan) -> FaultGuard {
+        let gate = TEST_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        install(Some(Arc::new(plan)));
+        FaultGuard { _gate: gate }
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        install(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_plan_means_no_faults() {
+        // Other tests in this binary never install a global plan, so
+        // the fast path must be clean here.
+        assert!(check(FaultPoint::Trial { trial: 0 }).is_ok());
+        assert!(check(FaultPoint::Io { op: IoOp::Store }).is_ok());
+    }
+
+    #[test]
+    fn injected_errors_are_recognized_through_anyhow_chains() {
+        let inner = FaultError::new("injected io-error at cache store");
+        let wrapped = anyhow::Error::new(inner).context("storing trial 3");
+        assert!(is_injected(&wrapped));
+        assert!(!is_injected(&anyhow::anyhow!("ordinary failure")));
+    }
+
+    #[test]
+    fn guard_installs_and_clears_the_global_plan() {
+        {
+            let _g = FaultGuard::install(FaultPlan::parse("trial-error@t9", 0).unwrap());
+            assert!(check(FaultPoint::Trial { trial: 9 }).is_err());
+            assert!(check(FaultPoint::Trial { trial: 1 }).is_ok());
+        }
+        assert!(check(FaultPoint::Trial { trial: 9 }).is_ok(), "cleared on drop");
+    }
+}

@@ -1,0 +1,450 @@
+//! The `FaultPlan` grammar: a comma-separated list of injection rules.
+//!
+//! ```text
+//! plan     := rule ("," rule)*
+//! rule     := kind "@" selector (":" extra)*
+//! kind     := trial-panic | trial-error | step-panic | io-error
+//!           | stall | lane-panic | conn-drop
+//! selector := "t" N            trial N            (trial / step-block points)
+//!           | "w" N            worker lane N      (lane points)
+//!           | "c" N            connection N       (server connection points)
+//!           | "store" | "load" cache I/O op       (io points)
+//!           | "*"              every point the kind applies to
+//! extra    := "b" N            only step block N  (step-panic)
+//!           | N "ms" | N "s"   stall duration     (stall; default 10ms)
+//!           | "p" FLOAT        fire with probability FLOAT, seeded draw
+//!           | N                budget: fire at most N times total
+//! ```
+//!
+//! Examples: `trial-panic@t3` (trial 3 always panics),
+//! `step-panic@t5:b2` (trial 5's step block 2 panics),
+//! `io-error@store:2` (the first two cache stores fail),
+//! `stall@w1:50ms` (worker lane 1 stalls 50ms per claimed block),
+//! `trial-panic@*:p0.5:3` (each trial panics with probability 0.5,
+//! at most 3 times across the run).
+//!
+//! Probability draws are a pure hash of `(plan seed, rule index, point
+//! identity)` — the same trial under the same seed always draws the
+//! same verdict, no matter how many times it is retried or in what
+//! order trials run.  I/O points have no stable natural identity, so a
+//! probabilistic I/O rule draws from the rule's own atomic sequence
+//! counter instead (deterministic for a fixed call sequence).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::splitmix64;
+
+use super::{FaultError, FaultPoint, IoOp, PANIC_PREFIX};
+
+/// What a rule does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic at the trial boundary (caught per-trial by the pool).
+    TrialPanic,
+    /// Return a transient [`FaultError`] at the trial boundary.
+    TrialError,
+    /// Panic inside a step-block dispatch (caught per-block).
+    StepPanic,
+    /// Fail a results-cache I/O operation with a [`FaultError`].
+    IoError,
+    /// Sleep for the rule's duration, then let the point proceed.
+    Stall,
+    /// Panic inside a worker lane's claim loop (outside the per-item
+    /// catch — exercises the pool's dead-lane recovery).
+    LanePanic,
+    /// Drop a server connection before it is served.
+    ConnDrop,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::TrialPanic => "trial-panic",
+            FaultKind::TrialError => "trial-error",
+            FaultKind::StepPanic => "step-panic",
+            FaultKind::IoError => "io-error",
+            FaultKind::Stall => "stall",
+            FaultKind::LanePanic => "lane-panic",
+            FaultKind::ConnDrop => "conn-drop",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "trial-panic" => FaultKind::TrialPanic,
+            "trial-error" => FaultKind::TrialError,
+            "step-panic" => FaultKind::StepPanic,
+            "io-error" => FaultKind::IoError,
+            "stall" => FaultKind::Stall,
+            "lane-panic" => FaultKind::LanePanic,
+            "conn-drop" => FaultKind::ConnDrop,
+            _ => return None,
+        })
+    }
+}
+
+/// Where a rule applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selector {
+    /// `tN` — a specific trial id.
+    Trial(u64),
+    /// `wN` — a specific worker lane.
+    Lane(u64),
+    /// `cN` — a specific server connection index.
+    Conn(u64),
+    /// `store` | `load` — a cache I/O operation.
+    Io(IoOp),
+    /// `*` — every point the kind applies to.
+    Any,
+}
+
+impl fmt::Display for Selector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Selector::Trial(n) => write!(f, "t{n}"),
+            Selector::Lane(n) => write!(f, "w{n}"),
+            Selector::Conn(n) => write!(f, "c{n}"),
+            Selector::Io(IoOp::Store) => write!(f, "store"),
+            Selector::Io(IoOp::Load) => write!(f, "load"),
+            Selector::Any => write!(f, "*"),
+        }
+    }
+}
+
+/// One parsed injection rule.  The atomics make a rule's budget and
+/// I/O-draw sequence shared across every thread consulting the plan.
+#[derive(Debug)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    pub selector: Selector,
+    /// `bN`: restrict a step-panic to one block index.
+    pub block: Option<u64>,
+    /// Stall duration (`50ms` / `1s`); only meaningful for `stall`.
+    pub duration: Duration,
+    /// `pF`: fire with seeded probability F instead of always.
+    pub prob: Option<f64>,
+    /// How many more times this rule may fire (`u64::MAX` = unlimited).
+    remaining: AtomicU64,
+    /// Draw sequence for points with no stable identity (I/O).
+    draws: AtomicU64,
+}
+
+impl FaultRule {
+    /// Does this rule's (kind, selector, block) cover `point`?
+    fn covers(&self, point: FaultPoint) -> bool {
+        let kind_ok = match (self.kind, point) {
+            (FaultKind::TrialPanic | FaultKind::TrialError, FaultPoint::Trial { .. }) => true,
+            (FaultKind::StepPanic, FaultPoint::StepBlock { .. }) => true,
+            (FaultKind::IoError, FaultPoint::Io { .. }) => true,
+            (FaultKind::LanePanic, FaultPoint::Lane { .. }) => true,
+            (FaultKind::ConnDrop, FaultPoint::Conn { .. }) => true,
+            (FaultKind::Stall, _) => true,
+            _ => false,
+        };
+        if !kind_ok {
+            return false;
+        }
+        let sel_ok = match (self.selector, point) {
+            (Selector::Any, _) => true,
+            (Selector::Trial(t), FaultPoint::Trial { trial }) => t == trial,
+            (Selector::Trial(t), FaultPoint::StepBlock { trial, .. }) => t == trial,
+            (Selector::Lane(w), FaultPoint::Lane { lane }) => w == lane,
+            (Selector::Conn(c), FaultPoint::Conn { index }) => c == index,
+            (Selector::Io(op), FaultPoint::Io { op: at }) => op == at,
+            _ => false,
+        };
+        if !sel_ok {
+            return false;
+        }
+        match (self.block, point) {
+            (Some(b), FaultPoint::StepBlock { block, .. }) => b == block,
+            (Some(_), _) => false,
+            (None, _) => true,
+        }
+    }
+
+    /// Claim one unit of budget; `false` when exhausted.
+    fn take_budget(&self) -> bool {
+        self.remaining
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |r| {
+                if r == 0 {
+                    None
+                } else if r == u64::MAX {
+                    Some(u64::MAX)
+                } else {
+                    Some(r - 1)
+                }
+            })
+            .is_ok()
+    }
+}
+
+/// A parsed, seeded injection schedule.  Consulted lock-free after
+/// installation; every decision is a pure function of the seed and the
+/// point identity (plus per-rule atomics for budgets and I/O draws).
+#[derive(Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse the grammar above; `seed` drives every probabilistic draw.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for raw in spec.split(',') {
+            let raw = raw.trim();
+            if raw.is_empty() {
+                continue;
+            }
+            rules.push(parse_rule(raw)?);
+        }
+        if rules.is_empty() {
+            return Err("empty fault plan (expected kind@selector[:extra]*)".to_string());
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Evaluate every rule against `point`, in rule order.  A firing
+    /// panic rule panics with [`PANIC_PREFIX`]; an error rule returns a
+    /// transient [`FaultError`]; a stall sleeps and keeps evaluating.
+    pub fn check(&self, point: FaultPoint) -> Result<(), FaultError> {
+        for (i, rule) in self.rules.iter().enumerate() {
+            if !rule.covers(point) {
+                continue;
+            }
+            if let Some(p) = rule.prob {
+                let id = point_identity(point)
+                    .unwrap_or_else(|| rule.draws.fetch_add(1, Ordering::SeqCst));
+                if draw(self.seed, i as u64, id) >= p {
+                    continue;
+                }
+            }
+            if !rule.take_budget() {
+                continue;
+            }
+            let desc = format!(
+                "injected {} at {} (rule {} `{}@{}`)",
+                rule.kind.name(),
+                point,
+                i,
+                rule.kind.name(),
+                rule.selector
+            );
+            match rule.kind {
+                FaultKind::Stall => std::thread::sleep(rule.duration),
+                FaultKind::TrialPanic | FaultKind::StepPanic | FaultKind::LanePanic => {
+                    panic!("{PANIC_PREFIX}{desc}")
+                }
+                FaultKind::TrialError | FaultKind::IoError | FaultKind::ConnDrop => {
+                    return Err(FaultError::new(desc))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Natural identity of a point for probability draws, when it has one.
+fn point_identity(point: FaultPoint) -> Option<u64> {
+    match point {
+        FaultPoint::Trial { trial } => Some(trial),
+        FaultPoint::StepBlock { trial, block } => {
+            Some(trial.wrapping_mul(0x9E3779B97F4A7C15) ^ block)
+        }
+        FaultPoint::Lane { lane } => Some(lane),
+        FaultPoint::Conn { index } => Some(index),
+        FaultPoint::Io { .. } => None,
+    }
+}
+
+/// Uniform in `[0, 1)` from a pure hash of (seed, rule, identity).
+fn draw(seed: u64, rule: u64, id: u64) -> f64 {
+    let mut s = seed ^ rule.wrapping_mul(0xA24BAED4963EE407) ^ id.wrapping_mul(0xD6E8FEB86659FD93);
+    let h = splitmix64(&mut s);
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+fn parse_rule(raw: &str) -> Result<FaultRule, String> {
+    let (kind_s, rest) = raw
+        .split_once('@')
+        .ok_or_else(|| format!("rule {raw:?}: expected kind@selector"))?;
+    let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+        format!(
+            "rule {raw:?}: unknown kind {kind_s:?} (trial-panic | trial-error | \
+             step-panic | io-error | stall | lane-panic | conn-drop)"
+        )
+    })?;
+    let mut parts = rest.split(':');
+    let sel_s = parts.next().unwrap_or("");
+    let selector = parse_selector(sel_s)
+        .ok_or_else(|| format!("rule {raw:?}: bad selector {sel_s:?} (tN | wN | cN | store | load | *)"))?;
+    let mut rule = FaultRule {
+        kind,
+        selector,
+        block: None,
+        duration: Duration::from_millis(10),
+        prob: None,
+        remaining: AtomicU64::new(u64::MAX),
+        draws: AtomicU64::new(0),
+    };
+    for extra in parts {
+        parse_extra(&mut rule, extra).map_err(|e| format!("rule {raw:?}: {e}"))?;
+    }
+    if let Some(p) = rule.prob {
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("rule {raw:?}: probability {p} out of [0, 1]"));
+        }
+    }
+    Ok(rule)
+}
+
+fn parse_selector(s: &str) -> Option<Selector> {
+    match s {
+        "*" => return Some(Selector::Any),
+        "store" => return Some(Selector::Io(IoOp::Store)),
+        "load" => return Some(Selector::Io(IoOp::Load)),
+        _ => {}
+    }
+    let (head, num) = s.split_at(1.min(s.len()));
+    let n: u64 = num.parse().ok()?;
+    match head {
+        "t" => Some(Selector::Trial(n)),
+        "w" => Some(Selector::Lane(n)),
+        "c" => Some(Selector::Conn(n)),
+        _ => None,
+    }
+}
+
+fn parse_extra(rule: &mut FaultRule, extra: &str) -> Result<(), String> {
+    if extra.is_empty() {
+        return Err("empty extra".to_string());
+    }
+    if let Some(num) = extra.strip_prefix('b') {
+        if let Ok(b) = num.parse::<u64>() {
+            rule.block = Some(b);
+            return Ok(());
+        }
+    }
+    if let Some(num) = extra.strip_prefix('p') {
+        if let Ok(p) = num.parse::<f64>() {
+            rule.prob = Some(p);
+            return Ok(());
+        }
+    }
+    if let Some(num) = extra.strip_suffix("ms") {
+        if let Ok(ms) = num.parse::<u64>() {
+            rule.duration = Duration::from_millis(ms);
+            return Ok(());
+        }
+    }
+    if let Some(num) = extra.strip_suffix('s') {
+        if let Ok(secs) = num.parse::<u64>() {
+            rule.duration = Duration::from_secs(secs);
+            return Ok(());
+        }
+    }
+    if let Ok(n) = extra.parse::<u64>() {
+        rule.remaining = AtomicU64::new(n);
+        return Ok(());
+    }
+    Err(format!(
+        "bad extra {extra:?} (bN | Nms | Ns | pFLOAT | N)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips_the_issue_example() {
+        let plan = FaultPlan::parse(
+            "trial-panic@t3,step-panic@t5:b2,io-error@store:2,stall@w1:50ms",
+            0,
+        )
+        .expect("issue example parses");
+        assert_eq!(plan.rules.len(), 4);
+        assert_eq!(plan.rules[0].kind, FaultKind::TrialPanic);
+        assert_eq!(plan.rules[0].selector, Selector::Trial(3));
+        assert_eq!(plan.rules[1].block, Some(2));
+        assert_eq!(plan.rules[2].remaining.load(Ordering::SeqCst), 2);
+        assert_eq!(plan.rules[3].duration, Duration::from_millis(50));
+        assert_eq!(plan.rules[3].selector, Selector::Lane(1));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in [
+            "",
+            "trial-panic",
+            "bogus@t1",
+            "trial-panic@x9",
+            "trial-panic@t1:zz",
+            "trial-panic@t1:p1.5",
+        ] {
+            let err = FaultPlan::parse(bad, 0).unwrap_err();
+            assert!(!err.is_empty(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn count_budget_is_shared_and_exhausts() {
+        let plan = FaultPlan::parse("io-error@store:2", 0).unwrap();
+        let p = FaultPoint::Io { op: IoOp::Store };
+        assert!(plan.check(p).is_err());
+        assert!(plan.check(p).is_err());
+        assert!(plan.check(p).is_ok(), "budget of 2 is spent");
+        // Loads were never covered.
+        assert!(plan.check(FaultPoint::Io { op: IoOp::Load }).is_ok());
+    }
+
+    #[test]
+    fn trial_selector_only_hits_its_trial() {
+        let plan = FaultPlan::parse("trial-error@t3", 0).unwrap();
+        assert!(plan.check(FaultPoint::Trial { trial: 2 }).is_ok());
+        assert!(plan.check(FaultPoint::Trial { trial: 3 }).is_err());
+        // And hits it every time (no budget).
+        assert!(plan.check(FaultPoint::Trial { trial: 3 }).is_err());
+    }
+
+    #[test]
+    fn step_block_filter_pins_one_block() {
+        let plan = FaultPlan::parse("trial-error@t1:b2", 0);
+        // trial-error does not cover step blocks; use a coverable shape.
+        assert!(plan.is_ok());
+        let plan = FaultPlan::parse("io-error@*:1", 0).unwrap();
+        assert!(plan.check(FaultPoint::Io { op: IoOp::Load }).is_err());
+        assert!(plan.check(FaultPoint::Io { op: IoOp::Store }).is_ok());
+    }
+
+    #[test]
+    fn probability_draws_are_seed_deterministic() {
+        let verdicts = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::parse("trial-error@*:p0.5", seed).unwrap();
+            (0..64)
+                .map(|t| plan.check(FaultPoint::Trial { trial: t }).is_err())
+                .collect()
+        };
+        let a = verdicts(7);
+        assert_eq!(a, verdicts(7), "same seed, same schedule");
+        assert_ne!(a, verdicts(8), "different seed, different schedule");
+        let fired = a.iter().filter(|&&b| b).count();
+        assert!((10..=54).contains(&fired), "p=0.5 over 64 trials: {fired}");
+        // Re-checking the same trial re-draws identically (retry safety).
+        let plan = FaultPlan::parse("trial-error@*:p0.5", 7).unwrap();
+        let first = plan.check(FaultPoint::Trial { trial: 5 }).is_err();
+        for _ in 0..4 {
+            assert_eq!(plan.check(FaultPoint::Trial { trial: 5 }).is_err(), first);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divebatch-fault:")]
+    fn panic_kinds_carry_the_prefix() {
+        let plan = FaultPlan::parse("trial-panic@t0", 0).unwrap();
+        let _ = plan.check(FaultPoint::Trial { trial: 0 });
+    }
+}

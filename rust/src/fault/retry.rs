@@ -1,0 +1,145 @@
+//! Retry policy + backoff clock for the resilient trial engine.
+//!
+//! [`RetryPolicy`] bounds attempts and spaces them with capped
+//! exponential backoff.  Sleeps go through a [`Clock`] so tests can
+//! substitute a [`SimClock`] that *records* requested sleeps instead of
+//! performing them — chaos tests assert the exact backoff schedule
+//! (`[50ms, 100ms]` for two retries at the defaults) without ever
+//! sleeping.
+//!
+//! Classification lives with the engine (`TrialRunner`), not here: an
+//! injected fault ([`super::is_injected`] or a [`super::PANIC_PREFIX`]
+//! panic) is transient and retried up to `max_attempts`; a
+//! non-injected panic is presumed deterministic and fails fast after
+//! one retry; a plain error is not retried at all.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Bounded retry with capped exponential backoff.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts for transient failures (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per retry after.
+    pub base_backoff: Duration,
+    /// Hard cap on any single backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all — the pre-fault-tolerance behaviour.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// Backoff to sleep after failed attempt number `attempt` (1-based):
+    /// `base * 2^(attempt-1)`, capped at `max_backoff`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(32);
+        let factor = 1u64 << shift;
+        self.base_backoff
+            .saturating_mul(factor.min(u32::MAX as u64) as u32)
+            .min(self.max_backoff)
+    }
+}
+
+/// Where backoff sleeps go: the real thread clock, or a recording sim
+/// clock for tests.
+#[derive(Debug, Clone)]
+pub enum Clock {
+    Real,
+    Sim(Arc<SimClock>),
+}
+
+impl Clock {
+    pub fn sleep(&self, d: Duration) {
+        match self {
+            Clock::Real => std::thread::sleep(d),
+            Clock::Sim(c) => c.record(d),
+        }
+    }
+}
+
+/// Records every requested sleep instead of performing it.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    slept: Mutex<Vec<Duration>>,
+}
+
+impl SimClock {
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock::default())
+    }
+
+    fn record(&self, d: Duration) {
+        self.slept
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(d);
+    }
+
+    /// Every sleep requested so far, in order.
+    pub fn slept(&self) -> Vec<Duration> {
+        self.slept
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    /// Total simulated time slept.
+    pub fn total(&self) -> Duration {
+        self.slept().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.backoff(1), Duration::from_millis(50));
+        assert_eq!(p.backoff(2), Duration::from_millis(100));
+        assert_eq!(p.backoff(3), Duration::from_millis(200));
+        // Far past the cap: 50ms * 2^20 >> 2s.
+        assert_eq!(p.backoff(21), Duration::from_secs(2));
+        // Degenerate attempt numbers never panic.
+        assert_eq!(p.backoff(0), Duration::from_millis(50));
+        assert_eq!(p.backoff(u32::MAX), Duration::from_secs(2));
+    }
+
+    #[test]
+    fn sim_clock_records_without_sleeping() {
+        let clock = SimClock::new();
+        let c = Clock::Sim(clock.clone());
+        let started = std::time::Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        c.sleep(Duration::from_secs(1800));
+        assert!(started.elapsed() < Duration::from_secs(5), "did not sleep");
+        assert_eq!(
+            clock.slept(),
+            vec![Duration::from_secs(3600), Duration::from_secs(1800)]
+        );
+        assert_eq!(clock.total(), Duration::from_secs(5400));
+    }
+
+    #[test]
+    fn none_policy_is_single_attempt() {
+        assert_eq!(RetryPolicy::none().max_attempts, 1);
+    }
+}

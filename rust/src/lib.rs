@@ -184,6 +184,33 @@
 //! out-of-range values come back as structured 400s with "did you
 //! mean" suggestions, never 500s.  SIGTERM drains gracefully.
 //!
+//! ## Fault tolerance & chaos testing
+//!
+//! The [`fault`] subsystem makes failure a first-class, *deterministic*
+//! input.  A seeded [`FaultPlan`] (CLI `--inject`, env
+//! `DIVEBATCH_FAULTS`) injects panics, typed errors, stalls and
+//! connection drops at four audited hook points — trial boundary,
+//! step-block dispatch, results-cache I/O, server connection handling —
+//! with per-rule budgets and seed-stable probabilities, so every chaos
+//! run is reproducible.  On top of that:
+//!
+//! * [`engine::TrialRunner`] retries transient (injected / cache-I/O)
+//!   failures under a [`fault::RetryPolicy`] — bounded exponential
+//!   backoff on a real or simulated clock — while deterministic compute
+//!   panics fail fast, with the full attempt history attached to the
+//!   [`TrialError`].
+//! * `sweep --journal` writes each completed trial's canonical record
+//!   to a crash-safe journal (atomic tmp+rename under the shared
+//!   directory lock); `sweep --resume` validates the journal's spec
+//!   fingerprint and runs only the missing trials, producing
+//!   byte-identical output to an uninterrupted run — even after
+//!   SIGKILL (tests/chaos.rs gates this).
+//! * [`ClusterSpec`] models imperfect clusters: per-worker speed
+//!   heterogeneity, seeded stragglers and preemptions, all folded into
+//!   the simulated timing columns deterministically.
+//! * The server bounds `/trial` waits (`--trial-timeout` → 504) and
+//!   attaches `Retry-After` to every backpressure 503.
+//!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
@@ -193,6 +220,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod pool;
 pub mod runtime;
@@ -201,7 +229,8 @@ pub mod util;
 
 pub use cluster::{ClusterModel, ClusterSpec};
 pub use config::{presets, DatasetSpec, RunSpec};
-pub use engine::{TrialError, TrialRunner, TrialSpec};
+pub use engine::{sweep_fingerprint, SweepJournal, TrialError, TrialRunner, TrialSpec};
+pub use fault::{FaultPlan, RetryPolicy};
 pub use coordinator::{
     AdaptContext, BatchPolicy, Decision, DiversityAccum, DiversityNeed, DiversityStats,
     HistoryPoint, LrSchedule, MicroPlan, Policy, PolicyError, PolicyHandle, PolicyRegistry,

@@ -37,13 +37,16 @@
 //! divebatch preset fig1-convex --scale quick --out runs/fig1
 //! ```
 
+use std::path::Path;
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 use divebatch::config::presets::{preset, preset_ids, Scale};
 use divebatch::config::{flops_per_sample, DatasetSpec, RunSpec};
 use divebatch::coordinator::{LrSchedule, PolicyHandle, PolicyRegistry, TrainConfig};
 use divebatch::data::{ImageSpec, SyntheticSpec};
-use divebatch::engine::{TrialRunner, TrialSpec};
+use divebatch::engine::{sweep_fingerprint, SweepJournal, TrialRunner, TrialSpec};
 use divebatch::util::args::{ArgSpec, Args};
 use divebatch::util::plot::{render, Series};
 use divebatch::util::stats;
@@ -51,6 +54,14 @@ use divebatch::util::table::{pm, Table};
 use divebatch::{ClusterSpec, Runtime};
 
 fn main() {
+    // `DIVEBATCH_FAULTS` installs a process-wide fault-injection plan
+    // before any subsystem runs (the chaos harness uses this to reach
+    // scopes the `--inject` flag is parsed too late for, e.g. the
+    // server accept loop).  A malformed plan is a usage error.
+    if let Err(e) = divebatch::fault::init_from_env() {
+        eprintln!("error: DIVEBATCH_FAULTS: {e}");
+        std::process::exit(2);
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("list") => cmd_list(),
@@ -130,8 +141,20 @@ fn run_opts(s: ArgSpec) -> ArgSpec {
             Some("0"),
             "step-executor lanes per trial (0 = auto: split the --jobs budget; DIVEBATCH_STEP_JOBS overrides auto)",
         )
+        .opt("dim", Some("512"), "synthetic dataset feature dimension")
         .opt("sim-workers", Some("4"), "simulated cluster: data-parallel workers")
         .opt("sim-div-overhead", Some("0.9"), "simulated cluster: per-sample diversity surcharge")
+        .opt("sim-heterogeneity", Some("0"), "simulated cluster: per-worker speed spread in [0, 1)")
+        .opt("sim-straggler-factor", Some("1"), "simulated cluster: straggler compute multiplier (>= 1)")
+        .opt("sim-straggler-prob", Some("0"), "simulated cluster: per-(step,worker) straggler probability")
+        .opt("sim-preempt-prob", Some("0"), "simulated cluster: per-(step,worker) preemption probability")
+        .opt("sim-fault-seed", Some("0"), "simulated cluster: seed for the deterministic regime draws")
+        .opt(
+            "inject",
+            Some(""),
+            "fault-injection plan, e.g. \"trial-panic@t1,io-error@store:2,stall@t0:50ms\" (see the src/fault grammar)",
+        )
+        .opt("inject-seed", Some("0"), "seed for probabilistic (pN) fault rules")
         .opt("out", Some(""), "write per-trial CSVs under this directory")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .opt("sgld-sigma", Some("0"), "SGLD per-sample grad-noise std (0 = off; boosts diversity)")
@@ -163,18 +186,34 @@ fn sweep_spec() -> ArgSpec {
             "';'-separated policy specs, e.g. \"sgd:m=128;adabatch:m0=128,mmax=4096;divebatch:m0=128,mmax=4096\"",
         )
         .opt("seeds", Some("3"), "trials per policy (seeds 0..N-1)")
-        .opt("jsonl", Some(""), "append one summary line per trial to this JSONL file"),
+        .opt("jsonl", Some(""), "append one summary line per trial to this JSONL file")
+        .opt(
+            "journal",
+            Some(""),
+            "record completed trials to this crash-safe journal (canonical JSONL; resumable)",
+        )
+        .opt(
+            "resume",
+            Some(""),
+            "resume an interrupted sweep from this journal: validates the spec fingerprint, skips recorded trials, keeps journaling",
+        ),
     )
 }
 
 fn dataset_from_args(a: &Args) -> Result<DatasetSpec> {
     Ok(match a.str("dataset") {
-        "synthetic" => DatasetSpec::Synthetic(SyntheticSpec {
-            n: a.usize("n"),
-            d: 512,
-            noise: 0.1,
-            seed: 1000,
-        }),
+        "synthetic" => {
+            let d = a.usize("dim");
+            if d == 0 {
+                bail!("--dim must be >= 1");
+            }
+            DatasetSpec::Synthetic(SyntheticSpec {
+                n: a.usize("n"),
+                d,
+                noise: 0.1,
+                seed: 1000,
+            })
+        }
         "cifar10" => DatasetSpec::Images(ImageSpec::cifar10_like(a.usize("per-class"), 2000)),
         "cifar100" => DatasetSpec::Images(ImageSpec::cifar100_like(a.usize("per-class"), 3000)),
         "tin" => DatasetSpec::Images(ImageSpec::tiny_imagenet_like(a.usize("per-class"), 4000)),
@@ -209,13 +248,51 @@ fn cfg_from_args(a: &Args, model: &str, policy: PolicyHandle) -> Result<TrainCon
     if !div_overhead.is_finite() || div_overhead < 0.0 {
         bail!("--sim-div-overhead must be a finite value >= 0 (0 = free instrumentation)");
     }
+    let heterogeneity = a.f64("sim-heterogeneity");
+    if !heterogeneity.is_finite() || !(0.0..1.0).contains(&heterogeneity) {
+        bail!("--sim-heterogeneity must be in [0, 1)");
+    }
+    let straggler_factor = a.f64("sim-straggler-factor");
+    if !straggler_factor.is_finite() || straggler_factor < 1.0 {
+        bail!("--sim-straggler-factor must be >= 1");
+    }
+    let straggler_prob = a.f64("sim-straggler-prob");
+    let preempt_prob = a.f64("sim-preempt-prob");
+    for (flag, v) in [
+        ("--sim-straggler-prob", straggler_prob),
+        ("--sim-preempt-prob", preempt_prob),
+    ] {
+        if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+            bail!("{flag} must be a probability in [0, 1]");
+        }
+    }
     cfg.cluster = ClusterSpec {
         workers,
         div_overhead,
+        heterogeneity,
+        straggler_factor,
+        straggler_prob,
+        preempt_prob,
+        fault_seed: a.usize("sim-fault-seed") as u64,
     };
     cfg.step_jobs = a.usize("step-jobs");
     cfg.verbose = !a.flag("quiet");
     Ok(cfg)
+}
+
+/// Install the `--inject` fault plan for this process, if given.  The
+/// env-var plan (`DIVEBATCH_FAULTS`) was installed in `main`; an
+/// explicit CLI plan replaces it.
+fn install_inject(a: &Args) -> Result<()> {
+    let spec = a.str("inject");
+    if spec.is_empty() {
+        return Ok(());
+    }
+    let seed = a.usize("inject-seed") as u64;
+    let plan = divebatch::fault::FaultPlan::parse(spec, seed)
+        .map_err(|e| anyhow::anyhow!("--inject: {e}"))?;
+    divebatch::fault::install(Some(std::sync::Arc::new(plan)));
+    Ok(())
 }
 
 fn cmd_train(tokens: &[String]) -> Result<()> {
@@ -226,6 +303,7 @@ fn cmd_train(tokens: &[String]) -> Result<()> {
             std::process::exit(2);
         }
     };
+    install_inject(&a)?;
     let model = a.positional(0).to_string();
     let Some(policy_spec) = a.get("policy") else {
         bail!("--policy is required (see `divebatch policies` for the grammar)");
@@ -266,6 +344,7 @@ fn cmd_sweep(tokens: &[String]) -> Result<()> {
             std::process::exit(2);
         }
     };
+    install_inject(&a)?;
     let model = a.positional(0).to_string();
     let Some(raw_policies) = a.get("policies") else {
         bail!("--policies is required: ';'-separated specs (see `divebatch policies`)");
@@ -303,30 +382,98 @@ fn cmd_sweep(tokens: &[String]) -> Result<()> {
         runs.push(run);
     }
 
+    // Crash-safe journaling: `--journal` records each completed trial's
+    // canonical line as it finishes; `--resume` validates the journal
+    // against this invocation's spec fingerprint and runs only the
+    // trials it is missing.  An uninterrupted `--journal` run and a
+    // killed-then-resumed one produce byte-identical journals.
+    let fp = sweep_fingerprint(&trial_specs);
+    let resume_path = a.str("resume").to_string();
+    let journal_path = a.str("journal").to_string();
+    if !resume_path.is_empty() && !journal_path.is_empty() && resume_path != journal_path {
+        bail!("--journal and --resume name different files; pass just --resume");
+    }
+    let journal = if !resume_path.is_empty() {
+        Some(SweepJournal::resume(Path::new(&resume_path), &fp, trial_specs.len())?)
+    } else if !journal_path.is_empty() {
+        Some(SweepJournal::create(Path::new(&journal_path), &fp, trial_specs.len())?)
+    } else {
+        None
+    };
+    let pending: Vec<(usize, TrialSpec)> = match &journal {
+        Some(j) => {
+            let done = j.completed();
+            if done > 0 {
+                eprintln!("resume: {done} of {} trials already journaled", trial_specs.len());
+            }
+            j.pending()
+                .into_iter()
+                .map(|i| (i, trial_specs[i].clone()))
+                .collect()
+        }
+        None => trial_specs.iter().cloned().enumerate().collect(),
+    };
+    let journal = journal.map(Mutex::new);
+
     let rt = Runtime::load(a.str("artifacts"))?;
     let runner = TrialRunner::new(a.usize("jobs"));
     eprintln!(
-        "sweep: {} policies x {} seeds = {} trials on {} workers",
+        "sweep: {} policies x {} seeds = {} trials ({} pending) on {} workers",
         policy_specs.len(),
         seeds,
         trial_specs.len(),
-        runner.jobs_for(trial_specs.len())
+        pending.len(),
+        runner.jobs_for(pending.len())
     );
     let t = divebatch::util::timer::Timer::start();
-    let results = runner.run_with(&rt, &trial_specs, |spec, res| match res {
-        Ok(_) => eprintln!("  trial done: {}", spec.label()),
+    let pending_results = runner.run_indexed_with(&rt, &pending, |i, spec, res| match res {
+        Ok(rec) => {
+            eprintln!("  trial done: {}", spec.label());
+            if let Some(j) = &journal {
+                let mut j = j.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                if let Err(e) = j.append(i, rec) {
+                    eprintln!("  journal write failed for {}: {e:#}", spec.label());
+                }
+            }
+        }
         Err(e) => eprintln!("  trial FAILED: {}: {e}", spec.label()),
     });
     eprintln!("sweep finished in {:.1}s", t.seconds());
+    let journal = journal.map(|m| m.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner));
+
+    // Merge journaled records with this invocation's results into the
+    // canonical trial order (policy-major, seed-minor).
+    let mut slots: Vec<Option<std::result::Result<divebatch::RunRecord, divebatch::TrialError>>> =
+        (0..trial_specs.len()).map(|_| None).collect();
+    for ((i, _), res) in pending.iter().zip(pending_results) {
+        slots[*i] = Some(res);
+    }
+    if let Some(j) = &journal {
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.is_none() {
+                if let Some(rec) = j.record(i) {
+                    *slot = Some(Ok(rec.clone()));
+                }
+            }
+        }
+    }
 
     let mut arms: Vec<Vec<divebatch::RunRecord>> = Vec::new();
     arms.resize_with(runs.len(), Vec::new);
     let mut failures = Vec::new();
-    for ((res, spec), &ai) in results.into_iter().zip(&trial_specs).zip(&arm_of) {
-        match res {
+    for ((slot, spec), &ai) in slots.into_iter().zip(&trial_specs).zip(&arm_of) {
+        match slot.expect("every trial is either journaled or pending") {
             Ok(rec) => arms[ai].push(rec),
             Err(e) => failures.push(format!("{}: {e}", spec.label())),
         }
+    }
+    if let Some(j) = &journal {
+        eprintln!(
+            "journal: {} of {} trials recorded at {}",
+            j.completed(),
+            trial_specs.len(),
+            j.path().display()
+        );
     }
 
     let out = a.str("out");
@@ -410,6 +557,11 @@ fn serve_spec() -> ArgSpec {
     .opt("results-dir", Some(""), "results-cache directory (empty = no trial memoization)")
     .opt("results-max-entries", Some("256"), "results-cache entry cap (0 = unbounded)")
     .opt("results-max-bytes", Some("0"), "results-cache byte cap (0 = unbounded)")
+    .opt(
+        "trial-timeout",
+        Some("0"),
+        "per-trial wall-clock budget on /trial in seconds; overruns get 504 (0 = wait forever)",
+    )
     .opt("artifacts", Some("artifacts"), "artifacts directory")
 }
 
@@ -439,6 +591,12 @@ fn cmd_serve(tokens: &[String]) -> Result<()> {
     };
     cfg.results_max_entries = a.usize("results-max-entries");
     cfg.results_max_bytes = a.usize("results-max-bytes") as u64;
+    let trial_timeout = a.usize("trial-timeout");
+    cfg.trial_timeout = if trial_timeout > 0 {
+        Some(std::time::Duration::from_secs(trial_timeout as u64))
+    } else {
+        None
+    };
 
     divebatch::server::install_signal_handlers();
     let server = divebatch::Server::bind(cfg)?;

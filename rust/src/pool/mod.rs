@@ -52,6 +52,9 @@ pub enum JobError {
     Failed(String),
     /// The item panicked; the payload is the panic message.
     Panicked(String),
+    /// Every retry attempt failed; the history holds each attempt's
+    /// failure, oldest first (produced by the engine's `RetryPolicy`).
+    Exhausted(Vec<JobError>),
 }
 
 impl std::fmt::Display for JobError {
@@ -59,6 +62,13 @@ impl std::fmt::Display for JobError {
         match self {
             JobError::Failed(m) => write!(f, "trial failed: {m}"),
             JobError::Panicked(m) => write!(f, "trial panicked: {m}"),
+            JobError::Exhausted(attempts) => {
+                write!(f, "trial failed after {} attempts", attempts.len())?;
+                for (i, a) in attempts.iter().enumerate() {
+                    write!(f, "; attempt {}: {a}", i + 1)?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -125,7 +135,7 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&'static str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -176,7 +186,13 @@ where
                 let out = catch_unwind(AssertUnwindSafe(|| f(i, &items[i])));
                 let res = match out {
                     Ok(Ok(r)) => Ok(r),
-                    Ok(Err(e)) => Err(JobError::Failed(format!("{e:#}"))),
+                    // A closure that already classified its failure as a
+                    // JobError (the engine's retry loop returning an
+                    // Exhausted history) passes through unwrapped.
+                    Ok(Err(e)) => Err(match e.downcast::<JobError>() {
+                        Ok(je) => je,
+                        Err(e) => JobError::Failed(format!("{e:#}")),
+                    }),
                     Err(payload) => Err(JobError::Panicked(panic_message(payload.as_ref()))),
                 };
                 on_done(i, &res);
@@ -218,6 +234,13 @@ struct ScatterJob {
     /// Monomorphized trampoline: runs item `i` on lane `lane`, storing
     /// the result into the caller's slot.  Only called for `i < n`.
     run: unsafe fn(*const (), usize, usize),
+    /// Abort trampoline: stores a `Panicked` result into slot `i`
+    /// without running the closure — fired by [`ItemGuard`] when a
+    /// worker thread dies between claiming an item and completing it
+    /// (only possible via the lane fault-injection hook), so the
+    /// scattering caller gets a typed failure instead of hanging on a
+    /// `pending` count that would never reach zero.
+    abort: unsafe fn(*const (), usize),
     ctx: *const (),
     next: AtomicUsize,
     n: usize,
@@ -264,10 +287,72 @@ where
     let out = catch_unwind(AssertUnwindSafe(|| f(lane, i)));
     let res = match out {
         Ok(Ok(r)) => Ok(r),
-        Ok(Err(e)) => Err(JobError::Failed(format!("{e:#}"))),
+        Ok(Err(e)) => Err(match e.downcast::<JobError>() {
+            Ok(je) => je,
+            Err(e) => JobError::Failed(format!("{e:#}")),
+        }),
         Err(payload) => Err(JobError::Panicked(panic_message(payload.as_ref()))),
     };
     *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
+}
+
+/// Abort trampoline for [`ScatterJob::abort`]: mark item `i` failed
+/// without running the closure.
+///
+/// # Safety
+/// Same contract as [`scatter_run_one`]: `ctx` alive, `i` in-bounds and
+/// claimed exactly once.
+unsafe fn scatter_abort_one<R, F>(ctx: *const (), i: usize)
+where
+    R: Send,
+    F: Fn(usize, usize) -> Result<R> + Sync,
+{
+    type Slots<R> = [Mutex<Option<std::result::Result<R, JobError>>>];
+    let (_f, slots) = unsafe { &*(ctx as *const (&F, &Slots<R>)) };
+    *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(Err(JobError::Panicked(
+        "worker lane died before completing this item".to_string(),
+    )));
+}
+
+/// Tracks one claimed scatter item on a worker thread.  Whatever
+/// happens — normal completion, or a panic unwinding the whole worker
+/// thread (the lane fault hook fires *outside* the per-item
+/// `catch_unwind`) — the item's slot gets a result and `pending` is
+/// decremented exactly once, so the scattering caller never hangs and
+/// never reads an empty slot.
+struct ItemGuard<'a> {
+    shared: &'a Arc<PoolShared>,
+    job: &'a Arc<ScatterJob>,
+    i: usize,
+    done: bool,
+}
+
+impl ItemGuard<'_> {
+    fn finish(&mut self, aborted: bool) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        if aborted {
+            // Safety: the caller is still parked on `pending` (we have
+            // not decremented yet), so ctx is alive; `i` was claimed
+            // exactly once and `run` never stored a result for it.
+            unsafe { (self.job.abort)(self.job.ctx, self.i) };
+        }
+        if self.job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last item: wake the caller.  Lock the state mutex so the
+            // notify cannot slip between the caller's pending check and
+            // its wait.
+            let _st = lock_unpoisoned(&self.shared.state);
+            self.shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ItemGuard<'_> {
+    fn drop(&mut self) {
+        self.finish(true);
+    }
 }
 
 fn worker_loop(shared: Arc<PoolShared>, lane: usize) {
@@ -294,16 +379,22 @@ fn worker_loop(shared: Arc<PoolShared>, lane: usize) {
             if i >= job.n {
                 break;
             }
+            let mut guard = ItemGuard {
+                shared: &shared,
+                job: &job,
+                i,
+                done: false,
+            };
+            // Lane fault hook, deliberately OUTSIDE the per-item
+            // catch_unwind: a `lane-panic@wN` rule kills this whole
+            // worker thread (the chaos scenario), and the guard above
+            // converts the claimed item into a typed failure on the way
+            // down.  The pool respawns the lane on its next scatter.
+            let _ = crate::fault::check(crate::fault::FaultPoint::Lane { lane: lane as u64 });
             // Safety: i was claimed exactly once and is < n; the caller
             // blocks until `pending` hits 0, keeping ctx alive.
             unsafe { (job.run)(job.ctx, lane, i) };
-            if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                // Last item: wake the caller.  Lock the state mutex so
-                // the notify cannot slip between the caller's pending
-                // check and its wait.
-                let _st = lock_unpoisoned(&shared.state);
-                shared.done.notify_all();
-            }
+            guard.finish(false);
         }
     }
 }
@@ -319,12 +410,24 @@ fn worker_loop(shared: Arc<PoolShared>, lane: usize) {
 /// worker.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    handles: Vec<JoinHandle<()>>,
+    /// `(lane id, handle)` per spawned worker.  Behind a mutex because
+    /// [`WorkerPool::respawn_dead`] replaces handles of dead lanes —
+    /// a worker thread can die mid-scatter via the lane fault hook, and
+    /// the pool must not permanently shrink.
+    handles: Mutex<Vec<(usize, JoinHandle<()>)>>,
     lanes: usize,
     /// Serializes scatters from different threads sharing one pool (the
     /// trainer never does this, but the type stays safe if a caller
     /// does).
     dispatch: Mutex<()>,
+}
+
+fn spawn_worker(shared: &Arc<PoolShared>, lane: usize) -> JoinHandle<()> {
+    let sh = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("divebatch-step-{lane}"))
+        .spawn(move || worker_loop(sh, lane))
+        .expect("spawning step-pool worker")
 }
 
 impl WorkerPool {
@@ -342,17 +445,11 @@ impl WorkerPool {
             done: Condvar::new(),
         });
         let handles = (1..lanes)
-            .map(|lane| {
-                let sh = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("divebatch-step-{lane}"))
-                    .spawn(move || worker_loop(sh, lane))
-                    .expect("spawning step-pool worker")
-            })
+            .map(|lane| (lane, spawn_worker(&shared, lane)))
             .collect();
         WorkerPool {
             shared,
-            handles,
+            handles: Mutex::new(handles),
             lanes,
             dispatch: Mutex::new(()),
         }
@@ -361,6 +458,33 @@ impl WorkerPool {
     /// Total parallel lanes including the scattering caller.
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Lanes currently able to run work: the caller plus every spawned
+    /// worker whose thread is alive.
+    pub fn live_lanes(&self) -> usize {
+        1 + lock_unpoisoned(&self.handles)
+            .iter()
+            .filter(|(_, h)| !h.is_finished())
+            .count()
+    }
+
+    /// Replace any worker whose thread has died (a lane fault-injection
+    /// panic escapes the per-item catch by design).  Called at scatter
+    /// start — under the dispatch lock, with no job published — so a
+    /// fresh worker can never race an in-flight scatter.
+    fn respawn_dead(&self) {
+        let mut handles = lock_unpoisoned(&self.handles);
+        for slot in handles.iter_mut() {
+            if !slot.1.is_finished() {
+                continue;
+            }
+            let fresh = spawn_worker(&self.shared, slot.0);
+            let dead = std::mem::replace(&mut slot.1, fresh);
+            // Reap immediately; join on a finished thread cannot block,
+            // and a panicked payload is expected here.
+            let _ = dead.join();
+        }
     }
 
     /// Run `f(lane, i)` for every `i in 0..n` across the pool (the
@@ -384,11 +508,15 @@ impl WorkerPool {
             return Vec::new();
         }
         let _serialize = lock_unpoisoned(&self.dispatch);
+        if self.lanes > 1 {
+            self.respawn_dead();
+        }
         let slots: Vec<Mutex<Option<std::result::Result<R, JobError>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         let ctx: (&F, &[Mutex<Option<std::result::Result<R, JobError>>>]) = (&f, &slots);
         let job = Arc::new(ScatterJob {
             run: scatter_run_one::<R, F>,
+            abort: scatter_abort_one::<R, F>,
             ctx: &ctx as *const _ as *const (),
             next: AtomicUsize::new(0),
             n,
@@ -538,7 +666,8 @@ impl Drop for WorkerPool {
             st.shutdown = true;
         }
         self.shared.work.notify_all();
-        for h in self.handles.drain(..) {
+        let mut handles = lock_unpoisoned(&self.handles);
+        for (_, h) in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -641,6 +770,33 @@ mod tests {
     }
 
     #[test]
+    fn exhausted_display_lists_the_attempt_history() {
+        let e = JobError::Exhausted(vec![
+            JobError::Failed("io".into()),
+            JobError::Panicked("boom".into()),
+        ]);
+        assert_eq!(
+            e.to_string(),
+            "trial failed after 2 attempts; attempt 1: trial failed: io; \
+             attempt 2: trial panicked: boom"
+        );
+    }
+
+    #[test]
+    fn preclassified_job_errors_pass_through_unwrapped() {
+        // A closure returning an anyhow error that *is* a JobError (the
+        // engine's retry loop does this with Exhausted) must come back
+        // as that JobError, not re-wrapped as Failed("trial failed ...").
+        let items = [0u8];
+        let history = JobError::Exhausted(vec![JobError::Failed("x".into())]);
+        let h = history.clone();
+        let out = run_indexed(&items, 1, move |_, _| -> Result<()> {
+            Err(anyhow::Error::new(h.clone()))
+        });
+        assert_eq!(out, vec![Err(history)]);
+    }
+
+    #[test]
     fn step_jobs_resolution_precedence() {
         // Explicit beats everything (env is not set in-process here;
         // the env branch is covered by the CI DIVEBATCH_STEP_JOBS pass).
@@ -723,6 +879,35 @@ mod tests {
         // The pool survives the panic and keeps dispatching.
         let again = pool.scatter(4, |_, i| Ok(i + 1));
         assert!(again.into_iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn repeated_item_panics_never_shrink_the_pool() {
+        // Satellite audit pin: per-item panics are caught inside the
+        // worker loop, so lane count and bookkeeping must survive any
+        // number of them — capacity loss would silently serialize every
+        // later step.
+        let pool = WorkerPool::new(4);
+        for round in 0..10 {
+            let out = pool.scatter(16, |_, i| -> Result<usize> {
+                if i % 3 == 0 {
+                    panic!("round {round} item {i}");
+                }
+                Ok(i)
+            });
+            assert_eq!(out.len(), 16);
+            for (i, r) in out.into_iter().enumerate() {
+                if i % 3 == 0 {
+                    assert!(matches!(r, Err(JobError::Panicked(_))), "item {i}");
+                } else {
+                    assert_eq!(r, Ok(i));
+                }
+            }
+            assert_eq!(pool.live_lanes(), 4, "after round {round}");
+        }
+        // And the pool still does clean work afterwards.
+        let ok = pool.scatter(8, |_, i| Ok(i));
+        assert!(ok.into_iter().all(|r| r.is_ok()));
     }
 
     #[test]

@@ -76,6 +76,10 @@ pub struct ApiError {
     pub field: String,
     pub message: String,
     pub did_you_mean: Option<String>,
+    /// Seconds the client should wait before retrying; rendered as a
+    /// `Retry-After` response header (not in the body) on every
+    /// backpressure 503 (connection cap, queue full, draining).
+    pub retry_after: Option<u64>,
 }
 
 impl ApiError {
@@ -86,11 +90,17 @@ impl ApiError {
             field: field.to_string(),
             message: message.into(),
             did_you_mean: None,
+            retry_after: None,
         }
     }
 
     pub fn with_status(mut self, status: u16) -> ApiError {
         self.status = status;
+        self
+    }
+
+    pub fn with_retry_after(mut self, secs: u64) -> ApiError {
+        self.retry_after = Some(secs);
         self
     }
 
@@ -258,6 +268,7 @@ fn cfg_from_obj(obj: &Json, model: &str, policy: PolicyHandle) -> Result<TrainCo
     cfg.cluster = ClusterSpec {
         workers: in_range(get_usize(obj, "sim_workers", 4)?, 1, MAX_SIM_WORKERS, "sim_workers")?,
         div_overhead: nonneg_f64(obj, "sim_div_overhead", 0.9)?,
+        ..ClusterSpec::default()
     };
     cfg.step_jobs = in_range(get_usize(obj, "step_jobs", 0)?, 0, MAX_STEP_JOBS, "step_jobs")?;
     // A service must not write per-epoch progress to its own stderr.

@@ -40,6 +40,12 @@
 //! Shutdown is graceful: SIGTERM/SIGINT (or [`ServerHandle::stop`])
 //! stops the accept loop, new submissions are refused with 503 while
 //! every admitted trial runs to completion, then the process exits 0.
+//!
+//! Robustness: every backpressure 503 (connection cap, queue full,
+//! draining) carries a `Retry-After` header; `--trial-timeout` bounds
+//! the `/trial` wait with a 504; and the connection handler hosts the
+//! `conn-drop@cN` fault-injection scope (see [`crate::fault`]) so chaos
+//! tests can drop exact connections deterministically.
 
 pub mod admission;
 pub mod api;
@@ -47,7 +53,7 @@ pub mod http;
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -55,6 +61,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::config::rescache::ResultsCache;
+use crate::fault::{self, FaultPoint};
 use crate::pool::Semaphore;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -92,6 +99,11 @@ pub struct ServeConfig {
     pub results_max_entries: usize,
     /// Results-cache byte cap (0 = unbounded).
     pub results_max_bytes: u64,
+    /// Per-trial wall-clock budget on `/trial`; a trial still running
+    /// when it elapses is answered 504 (the dispatcher finishes it in
+    /// the background — results-cache clients see it memoized).
+    /// `None` = wait forever (the historical behaviour).
+    pub trial_timeout: Option<Duration>,
 }
 
 impl ServeConfig {
@@ -109,6 +121,7 @@ impl ServeConfig {
             results_dir: None,
             results_max_entries: 256,
             results_max_bytes: 0,
+            trial_timeout: None,
         }
     }
 }
@@ -118,6 +131,10 @@ struct Ctx {
     rt: Arc<Runtime>,
     admission: Admission,
     clients: Arc<Semaphore>,
+    trial_timeout: Option<Duration>,
+    /// Monotone accepted-connection counter — the identity the
+    /// `conn-drop@cN` fault-injection scope selects on.
+    conns: AtomicU64,
 }
 
 /// A bound-but-not-yet-running server.
@@ -172,6 +189,8 @@ impl Server {
                 rt,
                 admission,
                 clients: Arc::new(Semaphore::new(cfg.max_clients)),
+                trial_timeout: cfg.trial_timeout,
+                conns: AtomicU64::new(0),
             }),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -211,18 +230,15 @@ impl Server {
                         }
                         None => {
                             let mut stream = stream;
-                            let body = ApiError::new(
-                                "too_many_clients",
-                                "(server)",
-                                "connection limit reached; retry",
-                            )
-                            .to_json()
-                            .to_string();
-                            let _ = http::write_response(
+                            respond_error(
                                 &mut stream,
-                                503,
-                                "application/json",
-                                body.as_bytes(),
+                                &ApiError::new(
+                                    "too_many_clients",
+                                    "(server)",
+                                    "connection limit reached; retry",
+                                )
+                                .with_status(503)
+                                .with_retry_after(1),
                             );
                         }
                     }
@@ -287,6 +303,14 @@ pub fn install_signal_handlers() {}
 // ------------------------------------------------------------ routing
 
 fn handle_connection(stream: &mut TcpStream, ctx: &Ctx) {
+    // `conn-drop@cN` injection scope: the selected connection is
+    // dropped before any byte is read or written — clients see a reset,
+    // exactly like a crashed connection handler — and the permit is
+    // still released by the caller (no slot leak).
+    let index = ctx.conns.fetch_add(1, Ordering::Relaxed);
+    if fault::check(FaultPoint::Conn { index }).is_err() {
+        return;
+    }
     let req = match http::read_request(stream) {
         Ok(req) => req,
         Err(e) => {
@@ -330,7 +354,18 @@ fn handle_connection(stream: &mut TcpStream, ctx: &Ctx) {
 fn respond_error(stream: &mut TcpStream, err: &ApiError) {
     let mut body = err.to_json().to_string();
     body.push('\n');
-    let _ = http::write_response(stream, err.status, "application/json", body.as_bytes());
+    let retry_after = err.retry_after.map(|s| s.to_string());
+    let extra: Vec<(&str, &str)> = match &retry_after {
+        Some(s) => vec![("Retry-After", s.as_str())],
+        None => Vec::new(),
+    };
+    let _ = http::write_response_with(
+        stream,
+        err.status,
+        "application/json",
+        &extra,
+        body.as_bytes(),
+    );
 }
 
 fn submit_error(kind: SubmitError) -> ApiError {
@@ -338,10 +373,11 @@ fn submit_error(kind: SubmitError) -> ApiError {
         SubmitError::QueueFull => {
             ApiError::new("queue_full", "(server)", "admission queue full; retry")
                 .with_status(503)
+                .with_retry_after(1)
         }
-        SubmitError::Draining => {
-            ApiError::new("draining", "(server)", "server is shutting down").with_status(503)
-        }
+        SubmitError::Draining => ApiError::new("draining", "(server)", "server is shutting down")
+            .with_status(503)
+            .with_retry_after(1),
     }
 }
 
@@ -354,7 +390,29 @@ fn handle_trial(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
         Ok(rx) => rx,
         Err(kind) => return respond_error(stream, &submit_error(kind)),
     };
-    match rx.recv() {
+    // Bounded wait when `--trial-timeout` is set: a trial that overruns
+    // its budget is answered 504 (the dispatcher still finishes it, so
+    // a retried request with a results cache lands a hit).
+    let received = match ctx.trial_timeout {
+        Some(budget) => match rx.recv_timeout(budget) {
+            Ok(r) => Ok(r),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                return respond_error(
+                    stream,
+                    &ApiError::new(
+                        "trial_timeout",
+                        "(trial)",
+                        format!("trial exceeded the {:.1}s budget", budget.as_secs_f64()),
+                    )
+                    .with_status(504)
+                    .with_retry_after(budget.as_secs().max(1)),
+                )
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
+        },
+        None => rx.recv().map_err(|_| ()),
+    };
+    match received {
         Ok(Ok(rec)) => {
             let mut line = rec.to_canonical_json().to_string();
             line.push('\n');
@@ -364,7 +422,7 @@ fn handle_trial(stream: &mut TcpStream, ctx: &Ctx, body: &[u8]) {
             stream,
             &ApiError::new("trial_failed", "(trial)", msg).with_status(500),
         ),
-        Err(_) => respond_error(
+        Err(()) => respond_error(
             stream,
             &ApiError::new("internal", "(server)", "dispatcher unavailable").with_status(500),
         ),

@@ -1,0 +1,148 @@
+//! Single-writer directory lock, shared by the results cache and the
+//! sweep journal.
+//!
+//! A writer holds an exclusive advisory lock on a directory for the
+//! duration of one mutation pass (store+evict, or a journal append).
+//! `create_new` is atomic on every platform we care about; the lock
+//! file is removed on drop.
+//!
+//! **Stale reclaim** — a lock older than [`STALE_LOCK`] is presumed
+//! left behind by a crashed owner (live writers hold it for
+//! milliseconds).  Reclaim uses a *tomb rename* rather than a bare
+//! `remove_file`: `rename(.lock, .lock.reclaim.<pid>.<n>)` is atomic,
+//! so when several blocked writers notice staleness at once exactly one
+//! wins the rename (the losers' renames fail with `NotFound` and they
+//! go back to waiting).  With plain `remove_file`, two reclaimers could
+//! each "succeed" — the second deleting the *fresh* lock the first had
+//! just created, silently admitting a third writer.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+use anyhow::{bail, Context, Result};
+
+/// A lock older than this is treated as left behind by a crashed writer
+/// and reclaimed (writers hold it for milliseconds).
+pub const STALE_LOCK: Duration = Duration::from_secs(10);
+
+/// How long a writer waits for the lock before giving up.
+pub const LOCK_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Distinguishes concurrent tomb names within one process.
+static TOMB_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Exclusive advisory lock on a directory (file `.lock` inside it).
+pub struct DirLock {
+    path: PathBuf,
+}
+
+impl DirLock {
+    /// Block until the lock is held, reclaiming stale locks, failing
+    /// after [`LOCK_TIMEOUT`].
+    pub fn acquire(dir: &Path) -> Result<DirLock> {
+        let path = dir.join(".lock");
+        let deadline = SystemTime::now() + LOCK_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(_) => return Ok(DirLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .map(|m| m.elapsed().map(|d| d > STALE_LOCK).unwrap_or(false))
+                        .unwrap_or(false);
+                    if stale {
+                        let tomb = dir.join(format!(
+                            ".lock.reclaim.{}.{}",
+                            std::process::id(),
+                            TOMB_SEQ.fetch_add(1, Ordering::Relaxed)
+                        ));
+                        // Single-winner: only one reclaimer's rename can
+                        // succeed; everyone else loops back to waiting.
+                        if std::fs::rename(&path, &tomb).is_ok() {
+                            let _ = std::fs::remove_file(&tomb);
+                        }
+                        continue;
+                    }
+                    if SystemTime::now() > deadline {
+                        bail!("directory lock busy: {}", path.display());
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("locking {}", path.display()));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("divebatch-fslock-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lock_excludes_and_releases() {
+        let dir = tmpdir("basic");
+        {
+            let _l = DirLock::acquire(&dir).unwrap();
+            assert!(dir.join(".lock").exists());
+            // A second acquire would block; prove the file exists instead
+            // of burning LOCK_TIMEOUT here.
+        }
+        assert!(!dir.join(".lock").exists(), "released on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_stale_reclaim_has_one_winner() {
+        let dir = tmpdir("stale-race");
+        let lock = dir.join(".lock");
+        std::fs::write(&lock, "").unwrap();
+        let old = SystemTime::now() - (STALE_LOCK + Duration::from_secs(5));
+        std::fs::OpenOptions::new()
+            .append(true)
+            .open(&lock)
+            .unwrap()
+            .set_modified(old)
+            .unwrap();
+        // Many threads race to reclaim + acquire; the lock must
+        // serialize them all and end up released.
+        let counter = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let dir = &dir;
+                let counter = &counter;
+                s.spawn(move || {
+                    let _l = DirLock::acquire(dir).unwrap();
+                    let inside = counter.fetch_add(1, Ordering::SeqCst);
+                    assert_eq!(inside, counter.load(Ordering::SeqCst) - 1);
+                    std::thread::sleep(Duration::from_millis(2));
+                    counter.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert!(!lock.exists());
+        // No tomb files left behind either.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().flatten().collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -4,16 +4,19 @@
 //! dependency closure, so the framework-grade utilities a project like
 //! this would normally pull from crates.io are implemented in-tree:
 //!
-//! * [`rng`]   — xoshiro256++ / SplitMix64 PRNG (replaces `rand`)
-//! * [`json`]  — full JSON parser + writer (replaces `serde_json`)
-//! * [`args`]  — declarative CLI parsing (replaces `clap`)
-//! * [`prop`]  — property-based testing with shrinking (replaces `proptest`)
-//! * [`stats`] — running moments, stderr, percentiles, curve averaging
-//! * [`table`] — paper-style ASCII tables
-//! * [`plot`]  — ASCII line plots for the figures
-//! * [`timer`] — stopwatch + scoped section profiler for the §Perf pass
+//! * [`rng`]    — xoshiro256++ / SplitMix64 PRNG (replaces `rand`)
+//! * [`json`]   — full JSON parser + writer (replaces `serde_json`)
+//! * [`args`]   — declarative CLI parsing (replaces `clap`)
+//! * [`prop`]   — property-based testing with shrinking (replaces `proptest`)
+//! * [`stats`]  — running moments, stderr, percentiles, curve averaging
+//! * [`table`]  — paper-style ASCII tables
+//! * [`plot`]   — ASCII line plots for the figures
+//! * [`timer`]  — stopwatch + scoped section profiler for the §Perf pass
+//! * [`fslock`] — shared tmp+rename directory lock with stale-lock
+//!   reclaim (the results cache's and sweep journal's write discipline)
 
 pub mod args;
+pub mod fslock;
 pub mod json;
 pub mod plot;
 pub mod prop;

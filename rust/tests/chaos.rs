@@ -1,0 +1,547 @@
+//! Chaos suite (the fault-tolerance layer's acceptance gate): every
+//! fault-injection scope produces a *typed* failure — never a hang, an
+//! escaped panic, or a corrupted artifact — retry/backoff attempt
+//! counts are deterministic under a fixed fault seed, and a sweep
+//! SIGKILLed mid-flight resumes to a byte-identical journal.
+//!
+//! In-process tests install their plan through
+//! [`divebatch::fault::FaultGuard`], which serializes them on a
+//! process-wide gate (the plan is global state).  The subprocess tests
+//! drive the shipped binary through `--inject` / `DIVEBATCH_FAULTS`
+//! instead and need no gate.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use divebatch::config::rescache::ResultsCache;
+use divebatch::config::{flops_per_sample, DatasetSpec};
+use divebatch::coordinator::{LrSchedule, PolicyRegistry, TrainConfig};
+use divebatch::data::SyntheticSpec;
+use divebatch::fault::{self, Clock, FaultGuard, FaultPlan, SimClock};
+use divebatch::metrics::EpochRecord;
+use divebatch::pool::{JobError, WorkerPool};
+use divebatch::{
+    ClusterSpec, RetryPolicy, RunRecord, ServeConfig, Server, TrialError, TrialRunner, TrialSpec,
+};
+
+// ------------------------------------------------------------ helpers
+
+fn plan(spec: &str, seed: u64) -> FaultPlan {
+    FaultPlan::parse(spec, seed).expect("chaos plan parses")
+}
+
+/// Fresh scratch directory under the system tmpdir.
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("divebatch-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// The same tiny trial the server equivalence suite uses: tinylogreg8
+/// on a 40x8 synthetic draw, one epoch — fast enough to retry thrice.
+fn trial(seed: u64) -> TrialSpec {
+    let policy = PolicyRegistry::builtin().parse("sgd:m=4").expect("policy");
+    let schedule = LrSchedule {
+        base: 0.1,
+        decay: 0.75,
+        every: 20,
+        rescale_with_batch: false,
+    };
+    let mut cfg = TrainConfig::new("tinylogreg8", policy, schedule, 1);
+    cfg.cluster = ClusterSpec {
+        workers: 4,
+        div_overhead: 0.9,
+        ..ClusterSpec::default()
+    };
+    cfg.verbose = false;
+    TrialSpec {
+        cfg,
+        dataset: DatasetSpec::Synthetic(SyntheticSpec {
+            n: 40,
+            d: 8,
+            noise: 0.1,
+            seed: 1000,
+        }),
+        flops_per_sample: flops_per_sample("tinylogreg8"),
+        trial: seed,
+    }
+}
+
+/// A synthetic cache payload (the cache never inspects records).
+fn record(seed: u64) -> RunRecord {
+    let mut r = RunRecord::new("chaos", "m", "sgd", "d", seed);
+    r.epochs.push(EpochRecord {
+        epoch: 0,
+        batch_size: 8,
+        lr: 0.1,
+        steps: 4,
+        train_loss: 1.0,
+        train_acc: 0.5,
+        val_loss: 1.0,
+        val_acc: 0.5,
+        delta_hat: None,
+        n_delta: None,
+        exact_delta: None,
+        wall_s: 7.0,
+        sim_s: 0.1,
+        cum_wall_s: 7.0,
+        cum_sim_s: 0.1,
+        mem_mb: 1.0,
+        dispatches: 1,
+        pad_waste: 0.0,
+        par_util: 1.0,
+    });
+    r
+}
+
+/// Every surviving file in a cache/journal scratch dir must be a
+/// published entry — no half-written tmp files, no abandoned locks.
+fn assert_no_debris(dir: &Path) {
+    for e in std::fs::read_dir(dir).expect("scan scratch dir").flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        assert!(
+            name.ends_with(".json") || name.ends_with(".journal"),
+            "debris left behind: {name}"
+        );
+    }
+}
+
+// ------------------------------------ trial boundary: panic and error
+
+#[test]
+fn injected_trial_panic_exhausts_with_deterministic_attempts() {
+    let _g = FaultGuard::install(plan("trial-panic@t0", 0));
+    let rt = common::runtime();
+    let sim = SimClock::new();
+    let runner = TrialRunner::new(1).with_clock(Clock::Sim(sim.clone()));
+    let res = runner.run(&rt, &[trial(0), trial(1)]);
+    match &res[0] {
+        Err(TrialError::Exhausted(attempts)) => {
+            assert_eq!(attempts.len(), 3, "default policy: exactly 3 attempts");
+            for a in attempts {
+                match a {
+                    TrialError::Panicked(m) => {
+                        assert!(m.contains("divebatch-fault"), "attempt not injected: {m}")
+                    }
+                    other => panic!("expected a captured panic, got {other}"),
+                }
+            }
+        }
+        Err(other) => panic!("expected exhausted attempt history, got {other}"),
+        Ok(_) => panic!("trial 0 must fail under trial-panic@t0"),
+    }
+    assert!(res[1].is_ok(), "the fault is scoped to trial 0");
+    assert_eq!(
+        sim.slept(),
+        vec![Duration::from_millis(50), Duration::from_millis(100)],
+        "backoff schedule is deterministic on the sim clock"
+    );
+}
+
+#[test]
+fn transient_trial_error_recovers_within_the_retry_budget() {
+    let _g = FaultGuard::install(plan("trial-error@t0:2", 0));
+    let rt = common::runtime();
+    let sim = SimClock::new();
+    let runner = TrialRunner::new(1).with_clock(Clock::Sim(sim.clone()));
+    let res = runner.run(&rt, &[trial(0)]);
+    assert!(
+        res[0].is_ok(),
+        "two injected failures fit inside the 3-attempt budget"
+    );
+    assert_eq!(
+        sim.slept(),
+        vec![Duration::from_millis(50), Duration::from_millis(100)]
+    );
+}
+
+#[test]
+fn retry_disabled_fails_fast_with_a_typed_error() {
+    let _g = FaultGuard::install(plan("trial-error@t0", 0));
+    let rt = common::runtime();
+    let sim = SimClock::new();
+    let runner = TrialRunner::new(1)
+        .with_retry(RetryPolicy::none())
+        .with_clock(Clock::Sim(sim.clone()));
+    let res = runner.run(&rt, &[trial(0)]);
+    match &res[0] {
+        Err(TrialError::Failed(m)) => {
+            assert!(m.contains("injected trial-error"), "untyped failure: {m}")
+        }
+        Err(other) => panic!("expected the raw injected failure, got {other}"),
+        Ok(_) => panic!("trial 0 must fail under trial-error@t0"),
+    }
+    assert!(sim.slept().is_empty(), "no backoff without retries");
+}
+
+// ----------------------------------------------- step-block dispatch
+
+#[test]
+fn injected_step_block_panic_is_a_typed_block_failure() {
+    let _g = FaultGuard::install(plan("step-panic@t0:b0", 0));
+    let rt = common::runtime();
+    let runner = TrialRunner::new(1).with_retry(RetryPolicy::none());
+    let res = runner.run(&rt, &[trial(0)]);
+    match &res[0] {
+        Err(TrialError::Failed(m)) => {
+            assert!(m.contains("step block 0"), "block not annotated: {m}");
+            assert!(m.contains("divebatch-fault"), "injection not tagged: {m}");
+        }
+        Err(other) => panic!("expected a typed block failure, got {other}"),
+        Ok(_) => panic!("trial 0 must fail under step-panic@t0:b0"),
+    }
+}
+
+// ------------------------------------------------------------- stall
+
+#[test]
+fn stall_injection_delays_but_the_trial_still_succeeds() {
+    let _g = FaultGuard::install(plan("stall@t0:40ms:2", 0));
+    let rt = common::runtime();
+    let runner = TrialRunner::new(1).with_retry(RetryPolicy::none());
+    let t0 = Instant::now();
+    let res = runner.run(&rt, &[trial(0)]);
+    assert!(res[0].is_ok(), "a stall is a delay, not a failure");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(70),
+        "two 40ms stalls must be observable: {:?}",
+        t0.elapsed()
+    );
+}
+
+// ------------------------------------------------- results-cache I/O
+
+#[test]
+fn injected_store_errors_are_retried_inside_the_cache() {
+    let dir = tmp("cache-retry");
+    let cache = ResultsCache::new(&dir);
+    let _g = FaultGuard::install(plan("io-error@store:2", 0));
+    cache
+        .store("k", &[record(1)])
+        .expect("2 injected failures fit inside the cache's 3 store attempts");
+    assert_eq!(cache.load("k", 1).map(|r| r.len()), Some(1));
+    assert_no_debris(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_exhaustion_is_typed_and_leaves_no_debris() {
+    let dir = tmp("cache-exhaust");
+    let cache = ResultsCache::new(&dir);
+    // Budget 9 = exactly three failing store calls (3 attempts each),
+    // then the next call goes through — deterministic accounting.
+    let _g = FaultGuard::install(plan("io-error@store:9", 0));
+    for call in 0..3 {
+        let err = cache
+            .store("k", &[record(1)])
+            .expect_err("budget covers all 3 attempts of this call");
+        assert!(fault::is_injected(&err), "call {call} not typed: {err:#}");
+        assert_no_debris(&dir);
+    }
+    cache.store("k", &[record(1)]).expect("budget is spent");
+    assert_eq!(cache.load("k", 1).map(|r| r.len()), Some(1));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_load_errors_degrade_to_a_counted_miss() {
+    let dir = tmp("cache-load");
+    let cache = ResultsCache::new(&dir);
+    let _g = FaultGuard::install(plan("io-error@load:1", 0));
+    cache.store("k", &[record(1)]).expect("stores are unaffected");
+    assert!(
+        cache.load("k", 1).is_none(),
+        "an injected load fault is a miss, not a panic"
+    );
+    assert_eq!(
+        cache.load("k", 1).map(|r| r.len()),
+        Some(1),
+        "the entry itself is intact once the budget is spent"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: concurrent store/load/evict under probabilistic injected
+/// I/O errors never panics, never corrupts an entry, and never leaks a
+/// tmp file or lock (two seeded rounds, each 4 threads x 10 ops on a
+/// 4-entry cache, so eviction and the dir lock are contended).
+#[test]
+fn concurrent_cache_chaos_preserves_invariants() {
+    for seed in [3u64, 17] {
+        let dir = tmp(&format!("cache-chaos-{seed}"));
+        let cache = ResultsCache::with_limits(&dir, 4, 0);
+        let g = FaultGuard::install(plan(
+            "io-error@store:p0.5:12,io-error@load:p0.5:12",
+            seed,
+        ));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = &cache;
+                s.spawn(move || {
+                    for i in 0..10u64 {
+                        let key = format!("k{}", (t * 7 + i) % 6);
+                        // Both outcomes are legal under injection; the
+                        // invariants below are what must hold.
+                        let _ = cache.store(&key, &[record(t * 100 + i)]);
+                        let _ = cache.load(&key, 1);
+                    }
+                });
+            }
+        });
+        // Each rule fires at most 12 times, so a bounded number of
+        // further calls must drain any remaining budget and succeed.
+        let stored = (0..8).any(|_| cache.store("final", &[record(9)]).is_ok());
+        assert!(stored, "store must succeed once the fire budget drains");
+        let loaded = (0..16).find_map(|_| cache.load("final", 1));
+        assert_eq!(loaded.map(|r| r.len()), Some(1));
+        assert_no_debris(&dir);
+        let entries: Vec<_> = std::fs::read_dir(&dir)
+            .expect("scan")
+            .flatten()
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .collect();
+        assert!(entries.len() <= 4, "eviction cap held: {}", entries.len());
+        for e in &entries {
+            let text = std::fs::read_to_string(e.path()).expect("entry readable");
+            let json = divebatch::util::json::parse(&text)
+                .unwrap_or_else(|err| panic!("corrupt entry {:?}: {err}", e.path()));
+            assert!(json.as_arr().is_some(), "entry is not a record array");
+        }
+        drop(g);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// --------------------------------------------------- worker-pool lane
+
+#[test]
+fn lane_panic_is_contained_and_the_pool_respawns() {
+    let _g = FaultGuard::install(plan("lane-panic@w1:1", 0));
+    let pool = WorkerPool::new(3);
+    let out = pool.scatter(64, |_lane, i| {
+        std::thread::sleep(Duration::from_millis(1));
+        Ok(i * 2)
+    });
+    assert_eq!(out.len(), 64, "every claimed item is accounted for");
+    let dead: Vec<&JobError> = out.iter().filter_map(|r| r.as_ref().err()).collect();
+    assert_eq!(dead.len(), 1, "exactly one item dies with its lane");
+    assert!(
+        matches!(dead[0], JobError::Panicked(_)),
+        "the lost item is a typed panic: {}",
+        dead[0]
+    );
+    // The worker thread finishes unwinding shortly after the scatter.
+    let t0 = Instant::now();
+    while pool.live_lanes() != 2 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(pool.live_lanes(), 2, "lane 1's thread died by injection");
+    let again = pool.scatter(64, |_lane, i| Ok(i));
+    assert!(again.iter().all(|r| r.is_ok()), "post-respawn scatter is clean");
+    assert_eq!(pool.live_lanes(), 3, "the next scatter respawned the lane");
+}
+
+// ----------------------------------------------- server connection
+
+#[test]
+fn dropped_connection_is_scoped_and_the_server_recovers() {
+    let _g = FaultGuard::install(plan("conn-drop@c0", 0));
+    let handle =
+        Server::spawn(ServeConfig::new("127.0.0.1:0", common::fixtures_dir())).expect("spawn");
+    let addr = handle.addr();
+
+    // Connection 0: accepted, then dropped before a single byte.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let mut raw = String::new();
+    let dropped = match s.read_to_string(&mut raw) {
+        Ok(_) => raw.is_empty(),
+        Err(_) => true, // reset by peer is also a drop
+    };
+    assert!(dropped, "connection 0 must be dropped, got: {raw:?}");
+
+    // Connection 1: unaffected.
+    let mut s = TcpStream::connect(addr).expect("reconnect");
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n")
+        .expect("write");
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("read");
+    assert!(
+        raw.starts_with("HTTP/1.1 200"),
+        "the drop is scoped to connection 0: {raw:?}"
+    );
+    handle.stop().expect("graceful stop");
+}
+
+// ------------------------------------------- subprocess: CLI --inject
+
+fn divebatch_cmd() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_divebatch"));
+    // Never inherit ambient chaos into a controlled subprocess.
+    c.env_remove("DIVEBATCH_FAULTS").env_remove("DIVEBATCH_FAULT_SEED");
+    c.stdout(Stdio::piped()).stderr(Stdio::piped());
+    c
+}
+
+fn sweep_args(extra: &[&str]) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "sweep",
+        "tinylogreg8",
+        "--dataset",
+        "synthetic",
+        "--n",
+        "40",
+        "--dim",
+        "8",
+        "--epochs",
+        "1",
+        "--policies",
+        "sgd:m=4;sgd:m=8",
+        "--seeds",
+        "3",
+        "--jobs",
+        "1",
+        "--quiet",
+        "--artifacts",
+        common::fixtures_dir(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.extend(extra.iter().map(|s| s.to_string()));
+    v
+}
+
+#[test]
+fn cli_inject_fails_the_targeted_trial_and_exits_nonzero() {
+    let out = divebatch_cmd()
+        .args(sweep_args(&["--inject", "trial-panic@t1", "--seeds", "2"]))
+        .output()
+        .expect("run divebatch sweep");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "a failed trial must fail the sweep: {stderr}"
+    );
+    assert!(stderr.contains("trial FAILED"), "no typed report: {stderr}");
+    assert!(
+        stderr.contains("trials failed"),
+        "no failure summary: {stderr}"
+    );
+    assert!(
+        stderr.contains("trial done"),
+        "unfaulted trials still complete: {stderr}"
+    );
+}
+
+// ------------------------------- subprocess: SIGKILL, resume, verify
+
+/// The tentpole's acceptance gate: SIGKILL a journaling sweep
+/// mid-flight, resume it, and require the journal to be byte-identical
+/// to an uninterrupted run's.
+#[test]
+fn sigkill_mid_sweep_then_resume_is_byte_identical() {
+    let dir = tmp("sigkill");
+    let base = dir.join("base.journal");
+    let killed = dir.join("killed.journal");
+
+    // Uninterrupted reference run.
+    let out = divebatch_cmd()
+        .args(sweep_args(&["--journal", base.to_str().unwrap()]))
+        .output()
+        .expect("baseline sweep");
+    assert!(
+        out.status.success(),
+        "baseline sweep failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let base_bytes = std::fs::read(&base).expect("baseline journal exists");
+
+    // Interrupted run: stalls slow every injection point enough to
+    // land a SIGKILL after the first completed trial.
+    let mut child = divebatch_cmd()
+        .args(sweep_args(&["--journal", killed.to_str().unwrap()]))
+        .env("DIVEBATCH_FAULTS", "stall@*:40ms")
+        .spawn()
+        .expect("spawn sweep to kill");
+    let t0 = Instant::now();
+    loop {
+        let recorded = std::fs::read_to_string(&killed)
+            .map(|s| s.lines().filter(|l| !l.trim().is_empty()).count())
+            .unwrap_or(0);
+        if recorded >= 2 {
+            // Header plus at least one trial: kill mid-sweep.
+            let _ = child.kill(); // SIGKILL on unix
+            break;
+        }
+        if child.try_wait().expect("poll child").is_some() {
+            break; // finished before we could kill it; resume is a no-op
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(120),
+            "sweep never journaled a trial"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let _ = child.wait();
+
+    // Resume from the truncated journal, no faults this time.
+    let out = divebatch_cmd()
+        .args(sweep_args(&["--resume", killed.to_str().unwrap()]))
+        .output()
+        .expect("resume sweep");
+    assert!(
+        out.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let killed_bytes = std::fs::read(&killed).expect("resumed journal exists");
+    assert_eq!(
+        killed_bytes.len(),
+        base_bytes.len(),
+        "resumed journal length differs from the uninterrupted run"
+    );
+    assert!(
+        killed_bytes == base_bytes,
+        "resumed journal is not byte-identical to the uninterrupted run"
+    );
+    // 1 header + 2 policies x 3 seeds.
+    let lines = String::from_utf8(base_bytes).expect("journal is utf-8");
+    assert_eq!(lines.lines().count(), 7, "journal records every trial");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A resume against a *different* sweep spec must be refused — the
+/// journal's fingerprint pins the exact trial set.
+#[test]
+fn resume_refuses_a_mismatched_sweep_spec() {
+    let dir = tmp("fingerprint");
+    let journal = dir.join("sweep.journal");
+    let out = divebatch_cmd()
+        .args(sweep_args(&["--journal", journal.to_str().unwrap()]))
+        .output()
+        .expect("journaled sweep");
+    assert!(out.status.success());
+    // Same journal, different seed count => different fingerprint.
+    let out = divebatch_cmd()
+        .args(sweep_args(&["--seeds", "2", "--resume", journal.to_str().unwrap()]))
+        .output()
+        .expect("mismatched resume");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        !out.status.success(),
+        "mismatched resume must be refused: {stderr}"
+    );
+    assert!(
+        stderr.contains("fingerprint"),
+        "refusal names the fingerprint: {stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

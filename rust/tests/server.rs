@@ -21,9 +21,8 @@ use divebatch::{ClusterSpec, ServeConfig, Server};
 
 // ------------------------------------------------------------ helpers
 
-/// One-shot HTTP client: send a request, read to EOF (the server is
-/// `Connection: close`), return (status, body).
-fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+/// One-shot HTTP client returning the raw response (head + body).
+fn request_raw(addr: SocketAddr, method: &str, path: &str, body: &str) -> String {
     let mut s = TcpStream::connect(addr).expect("connect");
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
@@ -34,6 +33,13 @@ fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Stri
     s.flush().expect("flush");
     let mut raw = String::new();
     s.read_to_string(&mut raw).expect("read response");
+    raw
+}
+
+/// One-shot HTTP client: send a request, read to EOF (the server is
+/// `Connection: close`), return (status, body).
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let raw = request_raw(addr, method, path, body);
     let status: u16 = raw
         .split_whitespace()
         .nth(1)
@@ -99,6 +105,7 @@ fn offline_spec(seed: u64, epochs: usize) -> TrialSpec {
     cfg.cluster = ClusterSpec {
         workers: 4,
         div_overhead: 0.9,
+        ..ClusterSpec::default()
     };
     cfg.verbose = false;
     TrialSpec {
@@ -339,6 +346,40 @@ fn sweep_streams_offline_identical_lines_in_order() {
         }
     }
     assert_eq!(lines, expected, "sweep stream != offline expansion");
+    handle.stop().expect("graceful stop");
+}
+
+/// Every backpressure 503 must carry a `Retry-After` header so clients
+/// can pace their retries.  The connection-cap path is driven here by
+/// pinning `max_clients = 1` with an idle connection holding the slot
+/// (the handler blocks reading its request); queue-full and draining
+/// share the same `respond_error` rendering.
+#[test]
+fn backpressure_503_carries_retry_after() {
+    let mut cfg = serve_cfg();
+    cfg.max_clients = 1;
+    let handle = Server::spawn(cfg).expect("spawn");
+    let addr = handle.addr();
+
+    // Occupy the single permit with a connection that never sends its
+    // request; the handler thread blocks in read_request.
+    let idle = TcpStream::connect(addr).expect("idle connect");
+    // Give the accept loop time to take the permit for `idle` before
+    // the probe arrives (accepts are processed in order).
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let raw = request_raw(addr, "GET", "/healthz", "");
+    let status: u16 = raw.split_whitespace().nth(1).and_then(|t| t.parse().ok()).unwrap_or(0);
+    assert_eq!(status, 503, "second connection must be capped: {raw:?}");
+    let head = raw.split("\r\n\r\n").next().unwrap_or("");
+    assert!(
+        head.lines().any(|l| l.to_ascii_lowercase().starts_with("retry-after:")),
+        "503 must carry Retry-After: {head:?}"
+    );
+    let err = error_of(raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or(""));
+    assert_eq!(err.get("code").and_then(|c| c.as_str()), Some("too_many_clients"));
+
+    drop(idle);
     handle.stop().expect("graceful stop");
 }
 

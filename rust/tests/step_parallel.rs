@@ -281,11 +281,22 @@ fn poisoned_trial_is_isolated_with_step_pool_active() {
     ];
     let results = TrialRunner::new(2).run(&rt, &specs);
     assert_eq!(results.len(), 2);
+    // A non-injected panic is presumed deterministic: the runner gives
+    // it exactly one retry (2 attempts total), then reports the full
+    // attempt history.
     match &results[0] {
-        Err(divebatch::TrialError::Panicked(m)) => {
-            assert!(m.contains("policy poisoned"), "{m}")
+        Err(divebatch::TrialError::Exhausted(attempts)) => {
+            assert_eq!(attempts.len(), 2, "one retry for a compute panic");
+            for a in attempts {
+                match a {
+                    divebatch::TrialError::Panicked(m) => {
+                        assert!(m.contains("policy poisoned"), "{m}")
+                    }
+                    other => panic!("expected panic attempts, got {other:?}"),
+                }
+            }
         }
-        other => panic!("expected a captured panic, got {other:?}"),
+        other => panic!("expected an exhausted panic history, got {other:?}"),
     }
     assert!(results[1].is_ok(), "sibling trial must complete");
     // Runtime survives for subsequent work.
