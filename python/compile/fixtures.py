@@ -7,15 +7,19 @@ model (``tinylogreg8``).  This script generates those artifacts once, at
 authoring time; the files it writes are checked in, so `cargo test` never
 needs Python.
 
-Four fixture models are emitted — the interpreter's "model zoo ladder":
+Five fixture models are emitted — the interpreter's "model zoo ladder":
 ``tinylogreg8`` (the (4, 8) ladder the trainer/golden-record suites pin),
 ``steplogreg8`` (a (8, 64) ladder whose 64-row rung feeds the sharded step
 executor's speedup bench and ``--step-jobs`` equivalence tests with
 multi-block plans), ``tinymlp8`` (the paper's nonconvex MLP with the
-closed-form dense-trick sqnorm path), and ``tinyresnet4`` (the CIFAR-like
+closed-form dense-trick sqnorm path), ``tinyresnet4`` (the CIFAR-like
 conv net: its HLO exercises ``convolution`` forward/filter/input-grad
 forms, the chunked vmap(grad) ``while`` loop with dynamic slices, and
-``call``/``reverse`` — the ops the interpreter grew to run the real zoo).
+``call``/``reverse`` — the ops the interpreter grew to run the real zoo),
+and ``tinyresnet8`` (the mid-tier conv-dominated resnet — two stages,
+16x16 images, (8, 16) channels — whose forward convs are big enough that
+the interpreter's conv cost model picks the fused blocked kernel; the
+``perf_conv`` bench and the CIFAR-like presets run on it).
 
 Two outputs:
 
@@ -67,7 +71,7 @@ from compile import aot  # noqa: E402  (must import after the patch)
 from compile import model as step_builders  # noqa: E402
 from compile.models import REGISTRY  # noqa: E402
 
-FIXTURE_MODELS = ("tinylogreg8", "steplogreg8", "tinymlp8", "tinyresnet4")
+FIXTURE_MODELS = ("tinylogreg8", "steplogreg8", "tinymlp8", "tinyresnet4", "tinyresnet8")
 
 
 def golden_inputs(model, m: int) -> tuple[np.ndarray, ...]:

@@ -60,6 +60,18 @@ REGISTRY: dict[str, ModelEntry] = {
         n_init_seeds=3,
         tags=("tiny",),
     ),
+    # Mid-tier conv-dominated fixture (ISSUE 10): two stages, 16x16
+    # images, enough channels that the interpreter's conv cost model sees
+    # forward convs worth blocking (the weight-gradient convs keep the
+    # im2col arm hot).  Drives the fig3/4-style CIFAR-like presets and
+    # the perf_conv / BENCH_7.json blocked-vs-im2col gate.
+    "tinyresnet8": ModelEntry(
+        lambda: make_resnet_tiny(8, image_size=16, channels=(8, 16), blocks_per_stage=1, name="tinyresnet8"),
+        (4, 8),
+        4,
+        n_init_seeds=1,
+        tags=("tiny",),
+    ),
 }
 
 

@@ -7,9 +7,11 @@ Usage:
 Works for any bench emitting the ``{"entries": {key: {"speedup": x}}}``
 schema — today ``perf_interp`` (BENCH_4.json: compiled interpreter vs
 the reference evaluator), ``perf_step`` (BENCH_5.json: sharded step
-executor vs the serial loop), and ``perf_interp_simd`` (BENCH_6.json:
+executor vs the serial loop), ``perf_interp_simd`` (BENCH_6.json:
 SIMD tier vs scalar tier of the compiled interpreter, both bit-identical
-by the pinned-lanes contract).  Fails (exit 1) if any baseline entry's
+by the pinned-lanes contract), and ``perf_conv`` (BENCH_7.json: fused
+blocked conv kernel vs forced im2col on the tinyresnet8 fixtures, also
+bit-identical by the same contract).  Fails (exit 1) if any baseline entry's
 speedup regressed more than 2x.  The comparison uses **speedup** (two
 paths measured in the same process) rather than raw ns/step: the ratio
 is machine-invariant, so a baseline blessed on faster or slower hardware

@@ -694,13 +694,23 @@ def _clamp_start(v, dim: int, size: int) -> int:
 
 
 def _convolution(a, b, attrs):
-    """Mirror of the compiled im2col convolution (program.rs lower_conv +
-    the Conv step in exec.rs): per feature group, gather the input patch
+    """Mirror of the compiled convolution (program.rs lower_conv + the
+    Conv step in exec.rs): per feature group, gather the input patch
     matrix (M, K) with K ordered kernel-spatial-outer / group-local input
     feature fastest (zero fill outside the padded extent), gather the
     kernel matrix (K, Ng), multiply under the pinned-lanes contract, and
-    scatter into the declared output layout.  Bit-identical to both Rust
-    tiers because the lane assignment depends only on the shared K order."""
+    scatter into the declared output layout.
+
+    The Rust side now has two strategies — the materialized im2col path
+    (pad + gather + dot + scatter through shared scratch) and the fused
+    blocked kernel (kernels.rs conv_blocked, selected by
+    cost::select_conv_algo or DIVEBATCH_CONV_ALGO) — but both consume the
+    same precomputed patch/weight gather maps in the same K-contraction
+    order, so the pinned 8-lane contract (contribution kk in lane kk % 8,
+    ascending kk, mul then add, hfold8 fold; halo entries still multiply
+    0.0) fully determines every output element's bits.  This one mirror is
+    therefore bit-identical to BOTH Rust strategies on BOTH tiers; the
+    lane assignment depends only on the shared K order."""
     in_seg, rest = attrs["dim_labels"].split("_", 1)
     ker_seg, out_seg = rest.split("->", 1)
     ib, if_, isp = _dim_order(in_seg, "b", "f")
@@ -718,9 +728,12 @@ def _convolution(a, b, attrs):
     out_sp = []
     for d in range(s):
         w = window[d]
-        assert w["base_dilation"] == 1, "lhs_dilate unsupported (as in Rust)"
         extent = (w["size"] - 1) * w["window_dilation"] + 1
-        out_sp.append((in_sp[d] + w["pad_lo"] + w["pad_hi"] - extent) // w["stride"] + 1)
+        # lhs_dilate (transposed conv): the input is virtually interior-
+        # dilated to (n-1)*base + 1 taps; positions between real taps are
+        # halo (zero) entries in the gather below, exactly as in Rust.
+        dil_in = 0 if in_sp[d] == 0 else (in_sp[d] - 1) * w["base_dilation"] + 1
+        out_sp.append((dil_in + w["pad_lo"] + w["pad_hi"] - extent) // w["stride"] + 1)
     # Canonical layouts: input (B, CI, spatial-flat), kernel (KI, KO,
     # kernel-spatial-flat).
     lt = np.transpose(a, [ib, if_] + isp).reshape(batch, ci, -1)
@@ -734,9 +747,13 @@ def _convolution(a, b, attrs):
     inside = np.ones((osp_elems, ksp_elems), dtype=bool)
     for d in range(s):
         w = window[d]
+        base = w["base_dilation"]
+        # Window position in the lhs-dilated coordinate system; only
+        # multiples of base_dilation hit a real input tap.
         iy = oc[d][:, None] * w["stride"] - w["pad_lo"] + kc[d][None, :] * w["window_dilation"]
-        inside &= (iy >= 0) & (iy < in_sp[d])
-        flat += np.clip(iy, 0, in_sp[d] - 1) * in_st[d]
+        qy = iy // base
+        inside &= (iy >= 0) & (iy % base == 0) & (qy < in_sp[d])
+        flat += np.clip(qy, 0, in_sp[d] - 1) * in_st[d]
     out = np.zeros((batch, ko, osp_elems), dtype=np.float32)
     for gx in range(groups):
         # patch[r, c]: r = b*osp + ospi, c = kspi*ki + fi — kernels::pad

@@ -11,7 +11,9 @@
 //! | `fig3-cifar10`  | Figures 3/4 + Table 1 |
 //! | `fig3-cifar100` | Figures 3/4 + Table 1 |
 //! | `fig3-tin`      | Figures 3/4 + Table 1 |
+//! | `fig3-interp8`  | Figures 3/4 structure on the committed `tinyresnet8` fixture (runs anywhere, no AOT) |
 //! | `fig5-*`        | Appendix E (LR rescaling on) |
+//! | `fig5-interp8`  | Appendix E structure on the `tinyresnet8` fixture |
 
 use super::{flops_per_sample, DatasetSpec, RunSpec};
 use crate::coordinator::{LrSchedule, Policy, TrainConfig};
@@ -282,6 +284,71 @@ pub fn realworld(dataset: &str, scale: Scale, rescale_lr: bool) -> Option<Experi
     })
 }
 
+/// Figures 3/4-style CIFAR-like arms on the committed interpreter fixture
+/// model (`tinyresnet8`: 8 classes, 16x16 images, two conv stages with a
+/// stride-2 transition).  Same 4-arm structure as [`realworld`] — Fixed
+/// small, Fixed large, AdaBatch, DiveBatch — shrunk onto the fixture's
+/// (4, 8) micro-batch ladder so the full adaptive-batch conv pipeline
+/// (fused blocked conv kernel included: the forward convs clear the cost
+/// model's footprint/reuse bar, the weight-gradient convs stay im2col)
+/// runs anywhere from `tests/fixtures/artifacts` with no jax/AOT step.
+pub fn interp_cifar(scale: Scale, rescale_lr: bool) -> Experiment {
+    let images = ImageSpec {
+        num_classes: 8,
+        per_class: scale.per_class.max(8),
+        size: 16,
+        noise: 0.45,
+        max_shift: 2,
+        seed: 5000,
+    };
+    let scale = Scale {
+        epochs: scale.image_epochs,
+        trials: scale.image_trials,
+        ..scale
+    };
+    // The fixture ladder is (4, 8): the smallest real adaptive range.
+    let (m0, m_max) = (4usize, 8usize);
+    let (lr, delta) = (0.05, 0.1);
+    let ds = || DatasetSpec::Images(images.clone());
+    let (mu, wd) = (0.9, 5e-4);
+    let sched = |base: f64, rescale: bool| LrSchedule::step_075_20(base, rescale);
+    let lr_large = if rescale_lr { lr * m_max as f64 / m0 as f64 } else { lr };
+    let runs = vec![
+        spec("tinyresnet8", Policy::Fixed { m: m0 }, sched(lr, false), ds(), scale, mu, wd),
+        spec("tinyresnet8", Policy::Fixed { m: m_max }, sched(lr_large, false), ds(), scale, mu, wd),
+        spec(
+            "tinyresnet8",
+            Policy::AdaBatch { m0, factor: 2, every: 20, m_max },
+            sched(lr, rescale_lr),
+            ds(),
+            scale,
+            mu,
+            wd,
+        ),
+        spec(
+            "tinyresnet8",
+            Policy::DiveBatch { m0, delta, m_max },
+            sched(lr, rescale_lr),
+            ds(),
+            scale,
+            mu,
+            wd,
+        ),
+    ];
+    let (id, variant) = if rescale_lr {
+        ("fig5-interp8", " (lr rescaled, appendix E)")
+    } else {
+        ("fig3-interp8", "")
+    };
+    Experiment {
+        id: id.into(),
+        title: format!(
+            "Figures 3/4 structure on the tinyresnet8 interpreter fixture{variant}"
+        ),
+        runs,
+    }
+}
+
 /// Look up a preset by id.
 pub fn preset(id: &str, scale: Scale) -> Option<Experiment> {
     match id {
@@ -300,9 +367,11 @@ pub fn preset(id: &str, scale: Scale) -> Option<Experiment> {
         "fig3-cifar10" => realworld("cifar10", scale, false),
         "fig3-cifar100" => realworld("cifar100", scale, false),
         "fig3-tin" => realworld("tin", scale, false),
+        "fig3-interp8" => Some(interp_cifar(scale, false)),
         "fig5-cifar10" => realworld("cifar10", scale, true),
         "fig5-cifar100" => realworld("cifar100", scale, true),
         "fig5-tin" => realworld("tin", scale, true),
+        "fig5-interp8" => Some(interp_cifar(scale, true)),
         _ => None,
     }
 }
@@ -317,9 +386,11 @@ pub fn preset_ids() -> Vec<&'static str> {
         "fig3-cifar10",
         "fig3-cifar100",
         "fig3-tin",
+        "fig3-interp8",
         "fig5-cifar10",
         "fig5-cifar100",
         "fig5-tin",
+        "fig5-interp8",
     ]
 }
 
@@ -392,6 +463,32 @@ mod tests {
         let t = realworld("tin", Scale::paper(), false).unwrap();
         assert_eq!(t.runs[0].cfg.policy, Policy::Fixed { m: 256 });
         assert_eq!(t.runs[0].cfg.schedule.base, 0.02);
+    }
+
+    #[test]
+    fn interp_preset_runs_the_fixture_conv_model() {
+        let e = preset("fig3-interp8", Scale::quick()).unwrap();
+        assert_eq!(e.runs.len(), 4);
+        for r in &e.runs {
+            assert_eq!(r.cfg.model, "tinyresnet8");
+            // 8-class 16x16 images, matching the fixture model's input.
+            match &r.dataset {
+                DatasetSpec::Images(s) => {
+                    assert_eq!((s.num_classes, s.size), (8, 16));
+                }
+                other => panic!("expected an image dataset, got {other:?}"),
+            }
+        }
+        // The adaptive arms live on the fixture's (4, 8) ladder.
+        assert_eq!(
+            e.runs[3].cfg.policy,
+            Policy::DiveBatch { m0: 4, delta: 0.1, m_max: 8 }
+        );
+        assert_eq!(e.runs[0].cfg.policy, Policy::Fixed { m: 4 });
+        // Appendix-E variant rescales the large-batch lr by m_max/m0.
+        let f = preset("fig5-interp8", Scale::quick()).unwrap();
+        assert!((f.runs[1].cfg.schedule.base - 0.05 * 2.0).abs() < 1e-12);
+        assert!(f.runs[3].cfg.schedule.rescale_with_batch);
     }
 
     #[test]

@@ -196,6 +196,10 @@ fn compiled_matches_reference_on_randomized_inputs() {
         ("steplogreg8", 16),
         ("tinymlp8", 16),
         ("tinyresnet4", 4),
+        // The conv-dominated mid-tier model: 2 draws keep the slow
+        // reference-evaluator leg affordable while still covering every
+        // blocked-conv site.
+        ("tinyresnet8", 2),
     ] {
         let model = manifest.model(model_name).unwrap();
         for (key, info) in &model.entries {
@@ -258,6 +262,102 @@ ENTRY main.14 {
         ];
         assert_three_way(&exe, &inputs, RANDOM_TOL, &format!("odd#{trial}"));
     }
+}
+
+/// Odd convolution geometries — grouped + strided + asymmetric padding,
+/// 1x1, K not divisible by 8, and an lhs-dilated (transposed) conv like
+/// the input-gradient of a strided forward conv — compiled under both
+/// forced conv strategies (`DIVEBATCH_CONV_ALGO=blocked|im2col`).  The two lowerings
+/// must agree **bit for bit** on both tiers (the pinned lanes contract
+/// over the shared patch K order), and each must pass the three-way gate
+/// against the reference evaluator, which convolves by a deliberately
+/// different direct algorithm.
+#[test]
+fn three_way_agreement_on_odd_conv_geometries() {
+    let text = r#"
+HloModule oddconv
+
+ENTRY main.14 {
+  Arg_0.1 = f32[2,9,9,6]{3,2,1,0} parameter(0)
+  Arg_1.2 = f32[3,3,2,6]{3,2,1,0} parameter(1)
+  Arg_2.3 = f32[2,5,5,7]{3,2,1,0} parameter(2)
+  Arg_3.4 = f32[1,1,7,9]{3,2,1,0} parameter(3)
+  Arg_4.5 = f32[1,6,6,3]{3,2,1,0} parameter(4)
+  Arg_5.6 = f32[3,3,3,5]{3,2,1,0} parameter(5)
+  Arg_6.7 = f32[1,4,4,2]{3,2,1,0} parameter(6)
+  Arg_7.8 = f32[3,3,2,3]{3,2,1,0} parameter(7)
+  convolution.9 = f32[2,4,5,6]{3,2,1,0} convolution(Arg_0.1, Arg_1.2), window={size=3x3 stride=2x2 pad=0_1x2_0}, dim_labels=b01f_01io->b01f, feature_group_count=3
+  convolution.10 = f32[2,5,5,9]{3,2,1,0} convolution(Arg_2.3, Arg_3.4), window={size=1x1 pad=0_0x0_0}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  convolution.11 = f32[1,6,6,5]{3,2,1,0} convolution(Arg_4.5, Arg_5.6), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  convolution.12 = f32[1,8,8,3]{3,2,1,0} convolution(Arg_6.7, Arg_7.8), window={size=3x3 pad=2_1x1_2 lhs_dilate=2x2}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  ROOT tuple.13 = (f32[2,4,5,6]{3,2,1,0}, f32[2,5,5,9]{3,2,1,0}, f32[1,6,6,5]{3,2,1,0}, f32[1,8,8,3]{3,2,1,0}) tuple(convolution.9, convolution.10, convolution.11, convolution.12)
+}
+"#;
+    let spec = |shape: &[usize]| TensorSpec {
+        name: String::new(),
+        dtype: Dtype::F32,
+        shape: shape.to_vec(),
+    };
+    let compile_forced = |force: &str| {
+        // Strategy-only knob, read at compile time: concurrent tests that
+        // compile convs while it is set merely get the forced strategy,
+        // which by the contract cannot change their bits.
+        std::env::set_var("DIVEBATCH_CONV_ALGO", force);
+        let proto = xla::HloModuleProto::from_text(text);
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = xla::PjRtClient::interp().compile(&comp).unwrap();
+        std::env::remove_var("DIVEBATCH_CONV_ALGO");
+        exe
+    };
+    let blocked = compile_forced("blocked");
+    let im2col = compile_forced("im2col");
+    let shapes: [&[usize]; 8] = [
+        &[2, 9, 9, 6],
+        &[3, 3, 2, 6],
+        &[2, 5, 5, 7],
+        &[1, 1, 7, 9],
+        &[1, 6, 6, 3],
+        &[3, 3, 3, 5],
+        &[1, 4, 4, 2],
+        &[3, 3, 2, 3],
+    ];
+    let mut rng = Rng::new(0xC0DD);
+    for trial in 0..4 {
+        let inputs: Vec<xla::Literal> = shapes
+            .iter()
+            .map(|s| random_input(&spec(s), &mut rng))
+            .collect();
+        assert_three_way(&blocked, &inputs, RANDOM_TOL, &format!("oddconv-blocked#{trial}"));
+        assert_three_way(&im2col, &inputs, RANDOM_TOL, &format!("oddconv-im2col#{trial}"));
+        for tier in [xla::InterpTier::Simd, xla::InterpTier::Scalar] {
+            let a = decompose(blocked.execute_with_tier(&inputs, tier).unwrap());
+            let b = decompose(im2col.execute_with_tier(&inputs, tier).unwrap());
+            assert_bitwise(&a, &b, &format!("oddconv blocked-vs-im2col#{trial}"));
+        }
+    }
+}
+
+/// Conv programs stay allocation-flat in steady state too — whether
+/// every conv picked the blocked kernel (no conv scratch reserved at
+/// all) or some still take im2col through the shared scratch slots.
+#[test]
+fn arena_stays_flat_on_conv_model() {
+    let manifest = fixtures_manifest();
+    let model = manifest.model("tinyresnet4").unwrap();
+    let info = model.entry("train_div_b8").unwrap();
+    let exe = compile(&manifest, &info.file);
+    let mut rng = Rng::new(11);
+    let inputs: Vec<xla::Literal> = info
+        .inputs
+        .iter()
+        .map(|spec| random_input(spec, &mut rng))
+        .collect();
+    for _ in 0..20 {
+        exe.execute(&inputs).unwrap();
+    }
+    let (created, grown) = exe.interp_arena_stats().unwrap();
+    assert_eq!(created, 1, "serial steady state must reuse one arena");
+    assert_eq!(grown, 0, "slots (incl. conv scratch) are sized at compile time");
 }
 
 /// Steady-state execution reuses one arena and never regrows buffers —

@@ -70,6 +70,57 @@ pub(crate) fn select_dot_algo(
     }
 }
 
+/// Convolution execution strategies.  Both produce bit-identical output:
+/// the blocked kernel walks the exact same patch-column contraction order
+/// under the pinned lanes contract, it just never materializes the patch
+/// matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ConvAlgo {
+    /// Fused blocked-direct kernel: register block of
+    /// [`super::kernels::NR`] output channels (mirroring `LanesTiled`),
+    /// patch tiles gathered straight from the lhs buffer through the
+    /// precomputed map into 8-lane registers, weights pre-gathered into a
+    /// stack tile per column block.  No `[m, k]` patch materialization,
+    /// no shared conv scratch.
+    Blocked,
+    /// Materialize the full im2col patch matrix into the shared scratch
+    /// and replay the cost-model-picked dot plan (the original path; the
+    /// fallback arm).
+    Im2col,
+}
+
+/// Patch-matrix footprint (in f32 elements, `groups * m * k`) above which
+/// the im2col materialization stops being a cache-resident copy and
+/// becomes a real memory-traffic pass worth eliminating.  16 Ki floats =
+/// 64 KiB — twice a typical L1d, so the patch write + dot re-read both
+/// stream.
+pub(crate) const CONV_BLOCKED_MIN_FOOTPRINT: usize = 16 * 1024;
+
+/// Pick the convolution strategy from compile-time geometry.
+///
+/// The blocked kernel earns its keep through two reuse terms:
+///
+/// * **column reuse** — each gathered 8-lane patch chunk feeds
+///   [`super::kernels::NR`] output channels, so it needs `ng >= NR` per
+///   group to refill the register block (weight-gradient convs lowered as
+///   `convolution` have tiny `ng` per group and stay on im2col);
+/// * **arithmetic intensity / patch reuse** — overlapping windows make
+///   the im2col patch matrix (`groups * m * k` floats) larger than the
+///   lhs it was gathered from; once that footprint exceeds
+///   [`CONV_BLOCKED_MIN_FOOTPRINT`] the materialize-then-stream pass is
+///   the dominant traffic and blocked-direct wins.  Below it everything
+///   is L1-resident and the shared dot plans are already tight.
+///
+/// Strategy only — the pinned lanes contract means the choice never
+/// affects bits.
+pub(crate) fn select_conv_algo(m: usize, k: usize, ng: usize, groups: usize) -> ConvAlgo {
+    if ng >= super::kernels::NR && groups * m * k >= CONV_BLOCKED_MIN_FOOTPRINT {
+        ConvAlgo::Blocked
+    } else {
+        ConvAlgo::Im2col
+    }
+}
+
 /// Reduce execution strategies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub(crate) enum ReduceAlgo {
@@ -148,6 +199,23 @@ mod tests {
         );
         // Single strided column: axpy has nothing to vectorize over.
         assert_eq!(select_dot_algo(8, 1, 16, 1, 4, true), DotAlgo::LanesGather);
+    }
+
+    #[test]
+    fn conv_selection_needs_column_reuse_and_footprint() {
+        // tinyresnet8-class forward conv: b8, 16x16 output, k=3*3*8=72,
+        // 16 output channels — big footprint, wide channels: blocked.
+        assert_eq!(select_conv_algo(2048, 72, 16, 1), ConvAlgo::Blocked);
+        // Weight-gradient conv lowered as convolution: ng per group is 1
+        // regardless of footprint — stays on im2col.
+        assert_eq!(select_conv_algo(72, 2048, 1, 8), ConvAlgo::Im2col);
+        // Narrow channel count (< NR) can't refill the register block.
+        assert_eq!(select_conv_algo(4096, 64, 3, 1), ConvAlgo::Im2col);
+        // Small cache-resident conv: the im2col copy is free enough.
+        assert_eq!(select_conv_algo(64, 27, 8, 1), ConvAlgo::Im2col);
+        // Grouped conv: footprint counts every group's patch pass.
+        assert_eq!(select_conv_algo(512, 18, 4, 2), ConvAlgo::Blocked);
+        assert_eq!(select_conv_algo(512, 18, 4, 1), ConvAlgo::Im2col);
     }
 
     #[test]

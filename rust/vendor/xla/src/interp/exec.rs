@@ -16,6 +16,7 @@
 
 use std::sync::atomic::Ordering;
 
+use super::cost;
 use super::kernels;
 use super::parse::{elements, err, DType};
 use super::program::{ParamSpec, Program, Ref, SlotSpec, Step};
@@ -780,45 +781,79 @@ impl Program {
                 arena.bufs[p.out as usize] = ArenaBuf::F32(o);
                 res
             }
-            Step::Conv(p) => {
+            Step::Conv(p) => match (p.conv_algo, p.scratch) {
+                // Blocked-direct: the fused kernel gathers patch tiles
+                // straight from the lhs and writes folds through `place`
+                // — no scratch, no materialization.  Same patch K order
+                // under the pinned lanes contract, so bits match the
+                // im2col arm exactly.
+                (cost::ConvAlgo::Blocked, _) => {
+                    let mut o = self.take_f32(arena, p.out)?;
+                    let res = (|| {
+                        let l = self.f32_src(p.lhs, args, arena)?;
+                        let r = self.f32_src(p.rhs, args, arena)?;
+                        for g in &p.groups {
+                            kernels::conv_blocked(
+                                tier,
+                                l,
+                                r,
+                                &g.patch_map,
+                                &g.w_map,
+                                &g.place,
+                                p.m,
+                                p.k,
+                                p.ng,
+                                &mut o[..],
+                            );
+                        }
+                        Ok(())
+                    })();
+                    arena.bufs[p.out as usize] = ArenaBuf::F32(o);
+                    res
+                }
                 // im2col per feature group: pad builds the [m, k] patch
                 // matrix (u32::MAX map entries fill the halo with zeros),
                 // gather builds the [k, ng] group weight matrix, then the
                 // cost-model-picked dot runs under the pinned lanes
                 // contract and scatter_part places the [m, ng] group
                 // result into the output layout.
-                let mut patch = self.take_f32(arena, p.scratch[0])?;
-                let mut w = self.take_f32(arena, p.scratch[1])?;
-                let mut acc = self.take_f32(arena, p.scratch[2])?;
-                let mut o = self.take_f32(arena, p.out)?;
-                let res = (|| {
-                    let l = self.f32_src(p.lhs, args, arena)?;
-                    let r = self.f32_src(p.rhs, args, arena)?;
-                    for g in &p.groups {
-                        kernels::pad(l, 0.0, &g.patch_map, &mut patch[..p.m * p.k]);
-                        kernels::gather(r, &g.w_map, &mut w[..p.k * p.ng]);
-                        kernels::dot(
-                            tier,
-                            p.algo,
-                            &patch[..p.m * p.k],
-                            &w[..p.k * p.ng],
-                            &p.l_base,
-                            &p.r_base,
-                            1,
-                            p.ng,
-                            p.k,
-                            &mut acc[..p.m * p.ng],
-                        );
-                        kernels::scatter_part(&acc[..p.m * p.ng], &g.place, &mut o[..]);
-                    }
-                    Ok(())
-                })();
-                arena.bufs[p.scratch[0] as usize] = ArenaBuf::F32(patch);
-                arena.bufs[p.scratch[1] as usize] = ArenaBuf::F32(w);
-                arena.bufs[p.scratch[2] as usize] = ArenaBuf::F32(acc);
-                arena.bufs[p.out as usize] = ArenaBuf::F32(o);
-                res
-            }
+                (cost::ConvAlgo::Im2col, Some(scratch)) => {
+                    let mut patch = self.take_f32(arena, scratch[0])?;
+                    let mut w = self.take_f32(arena, scratch[1])?;
+                    let mut acc = self.take_f32(arena, scratch[2])?;
+                    let mut o = self.take_f32(arena, p.out)?;
+                    let res = (|| {
+                        let l = self.f32_src(p.lhs, args, arena)?;
+                        let r = self.f32_src(p.rhs, args, arena)?;
+                        for g in &p.groups {
+                            kernels::pad(l, 0.0, &g.patch_map, &mut patch[..p.m * p.k]);
+                            kernels::gather(r, &g.w_map, &mut w[..p.k * p.ng]);
+                            kernels::dot(
+                                tier,
+                                p.algo,
+                                &patch[..p.m * p.k],
+                                &w[..p.k * p.ng],
+                                &p.l_base,
+                                &p.r_base,
+                                1,
+                                p.ng,
+                                p.k,
+                                &mut acc[..p.m * p.ng],
+                            );
+                            kernels::scatter_part(&acc[..p.m * p.ng], &g.place, &mut o[..]);
+                        }
+                        Ok(())
+                    })();
+                    arena.bufs[scratch[0] as usize] = ArenaBuf::F32(patch);
+                    arena.bufs[scratch[1] as usize] = ArenaBuf::F32(w);
+                    arena.bufs[scratch[2] as usize] = ArenaBuf::F32(acc);
+                    arena.bufs[p.out as usize] = ArenaBuf::F32(o);
+                    res
+                }
+                (cost::ConvAlgo::Im2col, None) => {
+                    Err(err("im2col conv plan without reserved scratch".into()))
+                }
+            },
             Step::DynSlice {
                 dtype,
                 src,

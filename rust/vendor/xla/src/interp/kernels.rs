@@ -670,6 +670,143 @@ unsafe fn lanes_accum_contig_avx(ls: &[f32], rs: &[f32], k: usize) -> f32 {
     hfold8(lanes)
 }
 
+// ----------------------------------------------------------------- conv
+
+/// k-extent of the stack weight tile of the blocked conv kernel
+/// (`NR * CONV_KC` f32s = 32 KiB).  Convolutions with `k` beyond it run
+/// the generic gather loop instead — same bits, no tile.
+pub(crate) const CONV_KC: usize = 2048;
+
+/// Fused blocked-direct convolution, one feature group per call.
+///
+/// Computes exactly what the im2col path computes — for output element
+/// `(i, j)`: `lanes[kk % 8] += patch(i, kk) * w(kk, j)` ascending `kk`,
+/// then [`hfold8`] — but gathers `patch(i, kk) = lhs[patch_map[i*k+kk]]`
+/// (0.0 where the map says halo) straight into registers instead of
+/// materializing the `[m, k]` patch matrix, and pre-gathers the `[k, w]`
+/// weight tile of each [`NR`]-wide output-channel block once into stack
+/// scratch.  Halo entries still contribute `0.0 * w` products (never
+/// skipped): `0.0 * w` can be `-0.0`, and the contract is mul-then-add.
+///
+/// Results are written through `place` directly — no dot-accumulator
+/// scratch either.  Bit-identical to `pad` + `gather` + [`dot`] +
+/// [`scatter_part`] on both tiers by the pinned lanes contract.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_blocked(
+    tier: InterpTier,
+    l: &[f32],
+    r: &[f32],
+    patch_map: &[u32],
+    w_map: &[u32],
+    place: &[u32],
+    m: usize,
+    k: usize,
+    ng: usize,
+    out: &mut [f32],
+) {
+    if tier == InterpTier::Scalar {
+        conv_blocked_scalar(l, r, patch_map, w_map, place, m, k, ng, out);
+    } else {
+        conv_blocked_simd(l, r, patch_map, w_map, place, m, k, ng, out);
+    }
+}
+
+#[inline]
+fn lhs_at(l: &[f32], ix: u32) -> f32 {
+    if ix == u32::MAX {
+        0.0
+    } else {
+        l[ix as usize]
+    }
+}
+
+/// SIMD-tier blocked conv: the loop nest of [`dot_lanes_tiled`] with the
+/// operand loads replaced by map gathers.  Column blocks outer (each
+/// pre-gathers its `[k, w]` weight tile into stack scratch once), rows
+/// inner (each 8-lane patch chunk is gathered once and shared by all
+/// [`NR`] columns of the block).  `k` beyond [`CONV_KC`] (no realistic
+/// conv) falls back to the generic loop — identical bits either way.
+#[allow(clippy::too_many_arguments)]
+fn conv_blocked_simd(
+    l: &[f32],
+    r: &[f32],
+    patch_map: &[u32],
+    w_map: &[u32],
+    place: &[u32],
+    m: usize,
+    k: usize,
+    ng: usize,
+    out: &mut [f32],
+) {
+    if k > CONV_KC {
+        return conv_blocked_scalar(l, r, patch_map, w_map, place, m, k, ng, out);
+    }
+    let mut wt = [[0f32; CONV_KC]; NR];
+    let nc = k / LANES;
+    let mut j0 = 0usize;
+    while j0 < ng {
+        let w = NR.min(ng - j0);
+        for (jj, wtj) in wt.iter_mut().enumerate().take(w) {
+            for (c, o) in wtj.iter_mut().enumerate().take(k) {
+                *o = r[w_map[c * ng + j0 + jj] as usize];
+            }
+        }
+        for i in 0..m {
+            let pm = &patch_map[i * k..(i + 1) * k];
+            let mut acc = [[0f32; LANES]; NR];
+            for c in 0..nc {
+                let mut la = [0f32; LANES];
+                for (t, o) in la.iter_mut().enumerate() {
+                    *o = lhs_at(l, pm[c * LANES + t]);
+                }
+                for (jj, accj) in acc.iter_mut().enumerate().take(w) {
+                    let ws = &wt[jj][c * LANES..c * LANES + LANES];
+                    for t in 0..LANES {
+                        accj[t] += la[t] * ws[t];
+                    }
+                }
+            }
+            for t in 0..k - nc * LANES {
+                let a = lhs_at(l, pm[nc * LANES + t]);
+                for (jj, accj) in acc.iter_mut().enumerate().take(w) {
+                    accj[t] += a * wt[jj][nc * LANES + t];
+                }
+            }
+            for (jj, accj) in acc.iter().enumerate().take(w) {
+                out[place[i * ng + j0 + jj] as usize] = hfold8(*accj);
+            }
+        }
+        j0 += w;
+    }
+}
+
+/// Scalar-tier twin of [`conv_blocked_simd`]: the contract written as the
+/// plain per-output-element loop (exactly [`dot_lanes_gather`] with map
+/// gathers) — identical bits by construction.
+#[allow(clippy::too_many_arguments)]
+fn conv_blocked_scalar(
+    l: &[f32],
+    r: &[f32],
+    patch_map: &[u32],
+    w_map: &[u32],
+    place: &[u32],
+    m: usize,
+    k: usize,
+    ng: usize,
+    out: &mut [f32],
+) {
+    for i in 0..m {
+        let pm = &patch_map[i * k..(i + 1) * k];
+        for j in 0..ng {
+            let mut lanes = [0f32; LANES];
+            for (kk, &ix) in pm.iter().enumerate() {
+                lanes[kk % LANES] += lhs_at(l, ix) * r[w_map[kk * ng + j] as usize];
+            }
+            out[place[i * ng + j] as usize] = hfold8(lanes);
+        }
+    }
+}
+
 // --------------------------------------------------------------- reduce
 
 /// Apply a compiled scalar region program to `(acc, x)`.  The register
@@ -847,6 +984,77 @@ mod tests {
                     got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                     want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                     "{algo:?} {tier:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_blocked_matches_im2col_composition_bitwise() {
+        use super::super::cost::select_dot_algo;
+        // Pseudo-random but deterministic maps: halo entries (u32::MAX)
+        // sprinkled in, scattered weight/output placement, odd k and every
+        // ng shape the register block can see (< NR, == NR, % NR != 0,
+        // multiple blocks).
+        for (m, k, ng) in [
+            (1usize, 1usize, 1usize),
+            (7, 11, 1),
+            (5, 8, 3),
+            (9, 27, 4),
+            (6, 13, 5),
+            (17, 72, 16),
+            (3, 9, 21),
+        ] {
+            let ll = 2 * m * k + 3;
+            let rl = 2 * k * ng + 5;
+            let l: Vec<f32> = (0..ll).map(|i| (i as f32 * 0.37).sin() + 0.01).collect();
+            let r: Vec<f32> = (0..rl).map(|i| (i as f32 * 0.21).cos() - 0.02).collect();
+            let patch_map: Vec<u32> = (0..m * k)
+                .map(|i| {
+                    if i % 7 == 3 {
+                        u32::MAX // halo: must still contribute 0.0 * w
+                    } else {
+                        ((i * 131) % ll) as u32
+                    }
+                })
+                .collect();
+            let w_map: Vec<u32> = (0..k * ng).map(|i| ((i * 37) % rl) as u32).collect();
+            // An arbitrary permutation of the output positions.
+            let mut place: Vec<u32> = (0..(m * ng) as u32).collect();
+            place.reverse();
+            place.rotate_left((m * ng) / 3);
+
+            // The im2col composition exactly as exec.rs runs it.
+            let mut patch = vec![0f32; m * k];
+            let mut w = vec![0f32; k * ng];
+            let mut acc = vec![0f32; m * ng];
+            let mut want = vec![0f32; m * ng];
+            pad(&l, 0.0, &patch_map, &mut patch);
+            gather(&r, &w_map, &mut w);
+            let l_base: Vec<u32> = (0..m).map(|i| (i * k) as u32).collect();
+            let r_base: Vec<u32> = (0..ng as u32).collect();
+            let algo = select_dot_algo(m, ng, k, 1, ng, true);
+            dot(
+                InterpTier::Simd,
+                algo,
+                &patch,
+                &w,
+                &l_base,
+                &r_base,
+                1,
+                ng,
+                k,
+                &mut acc,
+            );
+            scatter_part(&acc, &place, &mut want);
+
+            for tier in [InterpTier::Simd, InterpTier::Scalar] {
+                let mut got = vec![0f32; m * ng];
+                conv_blocked(tier, &l, &r, &patch_map, &w_map, &place, m, k, ng, &mut got);
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "m={m} k={k} ng={ng} {tier:?}"
                 );
             }
         }

@@ -17,18 +17,22 @@
 //!   are fused into single-pass loops, and a last-use liveness analysis
 //!   assigns every materialized value a reusable buffer slot.
 //! * [`cost`] — the compile-time cost model: picks each dot plan's
-//!   execution variant, the grouped-reduce strategy, and the fusion caps
-//!   from FLOPs / bytes-moved / stride-contiguity facts.  Strategy only:
-//!   every variant implements the same pinned numeric contract, so the
-//!   selection never changes bits.
+//!   execution variant, each convolution's strategy (fused blocked-direct
+//!   vs im2col-onto-dot; `DIVEBATCH_CONV_ALGO` overrides it), the
+//!   grouped-reduce strategy, and the fusion caps from FLOPs /
+//!   bytes-moved / stride-contiguity facts.  Strategy only: every variant
+//!   implements the same pinned numeric contract, so the selection never
+//!   changes bits.
 //! * [`kernels`] — the typed execution kernels, in two tiers
 //!   (`DIVEBATCH_INTERP_TIER`, default `simd`): 8-lane blocked f32 loops
 //!   with scalar tails (AVX where the CPU has it), register-blocked /
-//!   k-outer-axpy dot variants, grouped-lanes reduce, and gather-map data
-//!   movement for broadcast/transpose/slice/pad/concatenate.  Both tiers
-//!   and all dot variants follow one pinned 8-lane accumulation contract
-//!   (see the kernels module docs), so tier and plan choice are
-//!   bit-invisible.
+//!   k-outer-axpy dot variants, a fused blocked convolution kernel that
+//!   gathers patch tiles straight through the precomputed im2col map (no
+//!   patch-matrix materialization), grouped-lanes reduce, and gather-map
+//!   data movement for broadcast/transpose/slice/pad/concatenate.  Both
+//!   tiers and all dot/conv variants follow one pinned 8-lane
+//!   accumulation contract (see the kernels module docs), so tier and
+//!   plan choice are bit-invisible.
 //! * [`exec`] — the executor: runs a [`program::Program`] over a reusable
 //!   per-call buffer arena (slot-indexed, sized once at first call, f32
 //!   slots 32-byte aligned for straddle-free lane loads), so steady-state
@@ -493,7 +497,7 @@ ENTRY main.4 {
                 Step::Dot(p) => vec![p.out],
                 Step::Reduce(p) => vec![p.out],
                 Step::Conv(p) => {
-                    let mut v = p.scratch.to_vec();
+                    let mut v: Vec<u32> = p.scratch.map(|s| s.to_vec()).unwrap_or_default();
                     v.push(p.out);
                     v
                 }
@@ -974,7 +978,7 @@ ENTRY main.4 {
                 .steps
                 .iter()
                 .any(|s| matches!(s, Step::Conv(_))),
-            "convolution must lower to an im2col conv step"
+            "convolution must lower to a conv step"
         );
         assert_alias_free(&compiled.program);
         let x = Literal::vec1(
@@ -1061,6 +1065,94 @@ ENTRY main.4 {
         .unwrap();
         eval(text, &[&a, &g]);
         assert_tiers_bitwise(text, &[&a, &g]);
+    }
+
+    #[test]
+    fn conv_forced_blocked_and_im2col_agree_bitwise() {
+        // `DIVEBATCH_CONV_ALGO` forces the conv strategy at compile time.
+        // Both lowerings of the same module (covering plain, strided +
+        // asymmetric-pad, and grouped convs) must execute to identical
+        // bits on both tiers — the pinned lanes contract over the shared
+        // patch K order — and the blocked lowering must reserve no conv
+        // scratch slots at all.
+        let text = r#"
+HloModule t
+
+ENTRY main.8 {
+  Arg_0.1 = f32[1,5,5,3]{3,2,1,0} parameter(0)
+  Arg_1.2 = f32[3,3,3,4]{3,2,1,0} parameter(1)
+  Arg_2.3 = f32[1,4,4,4]{3,2,1,0} parameter(2)
+  Arg_3.4 = f32[3,3,2,6]{3,2,1,0} parameter(3)
+  convolution.5 = f32[1,2,2,4]{3,2,1,0} convolution(Arg_0.1, Arg_1.2), window={size=3x3 stride=2x2 pad=0_1x1_0}, dim_labels=b01f_01io->b01f, feature_group_count=1
+  reverse.6 = f32[3,3,2,6]{3,2,1,0} reverse(Arg_3.4), dimensions={0,1}
+  convolution.7 = f32[1,4,4,6]{3,2,1,0} convolution(Arg_2.3, reverse.6), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=2
+  ROOT tuple.8 = (f32[1,2,2,4]{3,2,1,0}, f32[1,4,4,6]{3,2,1,0}) tuple(convolution.5, convolution.7)
+}
+"#;
+        let mk = |n: usize, mul: usize, md: usize, scale: f32, off: f32| {
+            Literal::vec1(
+                &(0..n)
+                    .map(|i| ((i * mul % md) as f32) * scale - off)
+                    .collect::<Vec<f32>>(),
+            )
+        };
+        let a = mk(75, 41, 31, 0.11, 1.6).reshape(&[1, 5, 5, 3]).unwrap();
+        let b = mk(108, 23, 19, 0.15, 1.1).reshape(&[3, 3, 3, 4]).unwrap();
+        let c = mk(64, 13, 37, 0.07, 1.3).reshape(&[1, 4, 4, 4]).unwrap();
+        let d = mk(108, 29, 17, 0.12, 0.9).reshape(&[3, 3, 2, 6]).unwrap();
+
+        let compile_forced = |force: &str| {
+            std::env::set_var("DIVEBATCH_CONV_ALGO", force);
+            let compiled = Compiled::compile(text);
+            std::env::remove_var("DIVEBATCH_CONV_ALGO");
+            let compiled = compiled.unwrap();
+            let want = if force == "blocked" {
+                cost::ConvAlgo::Blocked
+            } else {
+                cost::ConvAlgo::Im2col
+            };
+            let mut convs = 0;
+            for s in &compiled.program.steps {
+                if let Step::Conv(p) = s {
+                    convs += 1;
+                    assert_eq!(p.conv_algo, want, "forced {force}");
+                    assert_eq!(p.scratch.is_none(), force == "blocked");
+                }
+            }
+            assert_eq!(convs, 2);
+            assert_alias_free(&compiled.program);
+            compiled
+        };
+        let blocked = compile_forced("blocked");
+        let im2col = compile_forced("im2col");
+        // Satellite: every conv blocked -> the three shared scratch slots
+        // are not reserved at all.
+        assert_eq!(blocked.program.slots.len() + 3, im2col.program.slots.len());
+
+        let mut outs: Vec<Vec<Vec<u32>>> = Vec::new();
+        for compiled in [&blocked, &im2col] {
+            for tier in [crate::InterpTier::Simd, crate::InterpTier::Scalar] {
+                let mut root = compiled
+                    .execute_with_tier(&[&a, &b, &c, &d], tier)
+                    .unwrap();
+                let parts = root.decompose_tuple().unwrap();
+                outs.push(
+                    parts
+                        .iter()
+                        .map(|p| {
+                            p.to_vec::<f32>()
+                                .unwrap()
+                                .iter()
+                                .map(|v| v.to_bits())
+                                .collect()
+                        })
+                        .collect(),
+                );
+            }
+        }
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "all (conv algo, tier) pairs must agree bitwise");
+        }
     }
 
     #[test]

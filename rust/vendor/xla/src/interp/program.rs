@@ -275,11 +275,20 @@ pub(crate) struct ConvGroup {
     pub(crate) place: Vec<u32>,
 }
 
-/// Precompiled `convolution`: im2col onto the existing dot machinery, one
-/// [`ConvGroup`] per feature group.  Three shared scratch slots hold the
-/// patch matrix `[m, k]`, the gathered weights `[k, ng]` and the dot
-/// result `[m, ng]`; the dot itself runs the pinned 8-lane accumulation
-/// contract, so both tiers stay bit-identical by construction.
+/// Precompiled `convolution`, one [`ConvGroup`] per feature group.  The
+/// conv-aware cost model picks one of two strategies per conv:
+///
+/// * **blocked-direct** ([`cost::ConvAlgo::Blocked`]): the fused kernel
+///   gathers patch tiles straight from the lhs through `patch_map` into
+///   8-lane registers and writes folds through `place` — no scratch at
+///   all;
+/// * **im2col** ([`cost::ConvAlgo::Im2col`]): three shared scratch slots
+///   hold the patch matrix `[m, k]`, the gathered weights `[k, ng]` and
+///   the dot result `[m, ng]`, replaying the cost-model-picked dot plan.
+///
+/// Both run the pinned 8-lane accumulation contract over the same patch
+/// K order, so the choice (and both tiers) stay bit-identical by
+/// construction.
 #[derive(Clone, Debug)]
 pub(crate) struct ConvPlan {
     pub(crate) lhs: Ref,
@@ -290,16 +299,20 @@ pub(crate) struct ConvPlan {
     /// Output features per group (the `n` of the per-group dot).
     pub(crate) ng: usize,
     pub(crate) groups: Vec<ConvGroup>,
-    /// `[patch, weights, acc]` scratch slots (shared by every conv in the
-    /// program; reserved outside the free lists).
-    pub(crate) scratch: [u32; 3],
+    /// `[patch, weights, acc]` scratch slots (shared by every im2col conv
+    /// in the program; reserved outside the free lists).  `None` for
+    /// blocked plans — the fused kernel materializes nothing.
+    pub(crate) scratch: Option<[u32; 3]>,
     /// Row bases `0, k, 2k, ...` of the row-major patch matrix.
     pub(crate) l_base: Vec<u32>,
     /// Column bases `0..ng` of the row-major weight matrix.
     pub(crate) r_base: Vec<u32>,
-    /// Dot strategy from the compile-time cost model (strategy only — the
-    /// lanes contract means it never affects bits).
+    /// Dot strategy of the im2col arm (strategy only — the lanes contract
+    /// means it never affects bits).
     pub(crate) algo: cost::DotAlgo,
+    /// Conv strategy from the compile-time cost model (or the
+    /// `DIVEBATCH_CONV_ALGO` override); strategy only, never bits.
+    pub(crate) conv_algo: cost::ConvAlgo,
 }
 
 /// One execution step of the register program.
@@ -1050,21 +1063,27 @@ impl<'m> Lowering<'m> {
         let mut steps: Vec<Step> = Vec::with_capacity(emit_list.len());
 
         // Shared conv scratch: three f32 slots (patch, weights, dot acc)
-        // sized to the largest convolution in the program.  Reserved up
-        // front and never entered into the free lists, so they can't
-        // alias any value slot.
+        // sized to the largest convolution that actually selects the
+        // im2col strategy — blocked-direct convs materialize nothing, so
+        // a program whose every conv goes blocked reserves no conv
+        // scratch at all.  Reserved up front and never entered into the
+        // free lists, so they can't alias any value slot.
         let mut conv_scratch: Option<[u32; 3]> = None;
         {
+            let mut any_im2col = false;
             let (mut mk, mut kn, mut mn) = (0usize, 0usize, 0usize);
             for &i in &emit_list {
                 if self.comp.instrs[i].op == "convolution" {
                     let g = self.conv_geometry(i)?;
-                    mk = mk.max(g.m * g.k);
-                    kn = kn.max(g.k * g.ng);
-                    mn = mn.max(g.m * g.ng);
+                    if conv_algo_for(&g) == cost::ConvAlgo::Im2col {
+                        any_im2col = true;
+                        mk = mk.max(g.m * g.k);
+                        kn = kn.max(g.k * g.ng);
+                        mn = mn.max(g.m * g.ng);
+                    }
                 }
             }
-            if mk > 0 {
+            if any_im2col {
                 let base = slots.len() as u32;
                 for elems in [mk, kn, mn] {
                     slots.push(SlotSpec {
@@ -2173,15 +2192,10 @@ impl<'m> Lowering<'m> {
         let mut out_spatial = Vec::with_capacity(s);
         for d in 0..s {
             let w = &attrs.window[d];
-            if w.base_dilation != 1 {
-                return Err(err(format!(
-                    "{name}: lhs_dilate (transposed convolution) is not supported"
-                )));
-            }
             if w.stride == 0 {
                 return Err(err(format!("{name}: window stride 0")));
             }
-            if w.size == 0 || w.window_dilation == 0 {
+            if w.size == 0 || w.window_dilation == 0 || w.base_dilation == 0 {
                 return Err(err(format!(
                     "{name}: window size/dilation 0 in spatial dim {d}"
                 )));
@@ -2193,7 +2207,16 @@ impl<'m> Lowering<'m> {
                 )));
             }
             let extent = ((w.size - 1) * w.window_dilation + 1) as i64;
-            let padded = in_spatial[d] as i64 + w.pad_lo + w.pad_hi;
+            // lhs_dilate (transposed convolution, e.g. the input-gradient
+            // conv of a strided forward conv): the input is virtually
+            // interior-dilated to (n-1)*base + 1 taps; positions landing
+            // between real taps become u32::MAX halo entries in the patch
+            // map below, zero-filled exactly like padding.
+            let dilated = match in_spatial[d] {
+                0 => 0,
+                n => (n - 1) * w.base_dilation + 1,
+            };
+            let padded = dilated as i64 + w.pad_lo + w.pad_hi;
             if padded < extent {
                 return Err(err(format!(
                     "{name}: window does not fit padded spatial dim {d} \
@@ -2241,7 +2264,14 @@ impl<'m> Lowering<'m> {
             )));
         }
         let g = self.conv_geometry(i)?;
-        let scratch = scratch.expect("conv scratch reserved for convolution programs");
+        let conv_algo = conv_algo_for(&g);
+        let scratch = match conv_algo {
+            // The fused blocked kernel materializes nothing.
+            cost::ConvAlgo::Blocked => None,
+            cost::ConvAlgo::Im2col => {
+                Some(scratch.expect("conv scratch reserved for im2col convolution programs"))
+            }
+        };
         let in_st = strides(self.odims(i, 0));
         let ker_st = strides(self.odims(i, 1));
         let out_st = strides(&self.dims[i]);
@@ -2267,13 +2297,19 @@ impl<'m> Lowering<'m> {
                     let mut inside = true;
                     for d in 0..s {
                         let w = &window[d];
+                        // Window position in the (virtually) lhs-dilated
+                        // coordinate system; real input taps sit at
+                        // multiples of base_dilation, everything else is
+                        // an interior zero -> halo entry.
                         let iy = oc[d] as i64 * w.stride as i64 - w.pad_lo
                             + kc[d] as i64 * w.window_dilation as i64;
-                        if iy < 0 || iy as usize >= g.in_spatial[d] {
+                        let base = w.base_dilation as i64;
+                        if iy < 0 || iy % base != 0 || (iy / base) as usize >= g.in_spatial[d]
+                        {
                             inside = false;
                             break;
                         }
-                        flat += iy as usize * in_st[g.in_ord.sp[d]];
+                        flat += (iy / base) as usize * in_st[g.in_ord.sp[d]];
                     }
                     if inside {
                         patch_map[r * k + c] = flat as u32;
@@ -2329,7 +2365,22 @@ impl<'m> Lowering<'m> {
             l_base,
             r_base,
             algo,
+            conv_algo,
         }))
+    }
+}
+
+/// Resolved conv strategy for one conv: the `DIVEBATCH_CONV_ALGO`
+/// override (`blocked` / `im2col`) when set, else the cost model.  Read
+/// fresh at every compile, never cached — the perf bench compiles the
+/// same module under both values.  Strategy only (the pinned lanes
+/// contract keeps both arms bit-identical), so unknown values simply
+/// fall through to the cost model.
+fn conv_algo_for(g: &ConvGeom) -> cost::ConvAlgo {
+    match std::env::var("DIVEBATCH_CONV_ALGO").as_deref() {
+        Ok("blocked") => cost::ConvAlgo::Blocked,
+        Ok("im2col") => cost::ConvAlgo::Im2col,
+        _ => cost::select_conv_algo(g.m, g.k, g.ng, g.groups),
     }
 }
 

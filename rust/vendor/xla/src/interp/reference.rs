@@ -1101,9 +1101,11 @@ fn conv_order(seg: &str, bc: char, fc: char) -> Result<(usize, usize, Vec<usize>
     Ok((b, f, spatial))
 }
 
-/// Direct (non-im2col) convolution — deliberately a different algorithm
-/// from the compiled path so the differential suite cross-checks the
-/// im2col lowering rather than replaying it.
+/// Direct convolution in plain accumulation order — deliberately a
+/// different algorithm from both compiled strategies (the im2col-onto-dot
+/// path and the fused blocked kernel, which share the pinned-lanes patch
+/// K order), so the differential suite cross-checks the lowerings rather
+/// than replaying them.
 fn convolution(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
     let labels = attrs
         .dim_labels
@@ -1150,10 +1152,8 @@ fn convolution(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
     out_dims[out_f] = ko;
     for d in 0..srank {
         let w = &window[d];
-        if w.base_dilation != 1 {
-            return Err(err(
-                "convolution lhs_dilate (transposed convolution) is not supported".into(),
-            ));
+        if w.base_dilation == 0 {
+            return Err(err("convolution base_dilation 0".into()));
         }
         if w.size != rd[ker_sp[d]] {
             return Err(err(format!(
@@ -1162,7 +1162,13 @@ fn convolution(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
                 rd[ker_sp[d]]
             )));
         }
-        let padded = ld[in_sp[d]] as i64 + w.pad_lo + w.pad_hi;
+        // lhs_dilate (transposed convolution): spatial extent of the
+        // virtually interior-dilated input.
+        let dilated = match ld[in_sp[d]] {
+            0 => 0,
+            n => (n - 1) * w.base_dilation + 1,
+        };
+        let padded = dilated as i64 + w.pad_lo + w.pad_hi;
         let extent = (w.window_dilation * (w.size - 1) + 1) as i64;
         if w.stride == 0 || padded < extent {
             return Err(err(format!(
@@ -1192,13 +1198,16 @@ fn convolution(a: &Value, b: &Value, attrs: &Attrs) -> Result<Value> {
             let mut in_range = true;
             for d in 0..srank {
                 let w = &window[d];
+                // Position in the lhs-dilated coordinate system; only
+                // multiples of base_dilation hit a real input tap.
                 let iy = c[out_sp[d]] as i64 * w.stride as i64 - w.pad_lo
                     + kc[d] as i64 * w.window_dilation as i64;
-                if iy < 0 || iy as usize >= ld[in_sp[d]] {
+                let base = w.base_dilation as i64;
+                if iy < 0 || iy % base != 0 || (iy / base) as usize >= ld[in_sp[d]] {
                     in_range = false;
                     break;
                 }
-                lbase += iy as usize * l_st[in_sp[d]];
+                lbase += (iy / base) as usize * l_st[in_sp[d]];
             }
             if !in_range {
                 continue;

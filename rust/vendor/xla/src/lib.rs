@@ -25,7 +25,14 @@
 //!   `DIVEBATCH_INTERP_TIER=scalar`.  Both tiers implement the same
 //!   pinned 8-lane accumulation contract, so they are bit-identical —
 //!   the tier is a pure speed knob (`perf_interp_simd` / BENCH_6.json
-//!   gates the win).  The pre-PR tree-walk evaluator is retained as
+//!   gates the win).  Convolutions execute through a per-conv cost-model
+//!   choice between a fused blocked-direct kernel (patch tiles gathered
+//!   straight through the precomputed im2col map — no patch-matrix
+//!   materialization, no conv scratch) and the materializing
+//!   im2col-onto-dot fallback; both strategies follow the same contract
+//!   and are bit-identical, `DIVEBATCH_CONV_ALGO=blocked|im2col`
+//!   overrides the choice, and `perf_conv` / BENCH_7.json gates the
+//!   blocked win.  The pre-PR tree-walk evaluator is retained as
 //!   [`PjRtLoadedExecutable::execute_reference`] for differential tests
 //!   and the `perf_interp` bench baseline (see BENCH_4.json at the repo
 //!   root).  This is the backend the numeric test suite runs on
